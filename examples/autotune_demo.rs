@@ -1,0 +1,79 @@
+//! The LIBCUSMM-analog autotuning workflow (§II): enumerate the kernel
+//! parameter space per block size, measure a training subset, fit the
+//! regression-tree performance model, and dispatch the predicted winners.
+//!
+//! Run: `cargo run --release --offline --example autotune_demo`
+
+use dbcsr::backend::autotune::{features, measure, param_space, Autotuner, RegressionTree};
+use dbcsr::bench::table::Table;
+use dbcsr::perfmodel::PerfModel;
+
+fn main() {
+    let perf = PerfModel::default();
+
+    // 1. the parameter space (the paper's ~30k-150k combos per (m,n,k);
+    //    our TPU-rethought space is smaller but same structure)
+    let space22 = param_space(22, 22, 22);
+    println!(
+        "parameter space for 22x22x22: {} candidates (grouping x unroll x padding)\n",
+        space22.len()
+    );
+
+    // 2. exhaustive measurement on training sizes
+    let mut tuner = Autotuner::new(perf.clone());
+    let train: Vec<(usize, usize, usize)> =
+        [4usize, 8, 16, 32, 48, 80].iter().map(|&s| (s, s, s)).collect();
+    tuner.fit(&train);
+    println!("fitted regression tree on {} training sizes", train.len());
+
+    // 3. model quality: predicted winners vs exhaustive winners on
+    //    held-out sizes (the paper's sizes 22 and 64 are NOT in training)
+    let mut t = Table::new(
+        "predicted vs exhaustive winners (held-out block sizes)",
+        &["size", "predicted params", "achieved GF/s", "best GF/s", "quality"],
+    );
+    for &s in &[22usize, 64] {
+        let predicted = tuner.tune_predicted(s, s, s);
+        let truth = tuner.tune_exhaustive(s, s, s);
+        let achieved = measure(&perf, s, s, s, &predicted.params);
+        t.row(vec![
+            format!("{s}"),
+            format!(
+                "g={} unroll={} pad={}",
+                predicted.params.grouping, predicted.params.unroll, predicted.params.pad_m
+            ),
+            format!("{achieved:.0}"),
+            format!("{:.0}", truth.gflops),
+            format!("{:.0}%", 100.0 * achieved / truth.gflops),
+        ]);
+    }
+    t.print();
+
+    // 4. the full tuned table (what aot.py bakes into the artifacts)
+    let sizes: Vec<(usize, usize, usize)> =
+        [4usize, 8, 16, 22, 32, 48, 64, 80].iter().map(|&s| (s, s, s)).collect();
+    let tuned = tuner.tune(&sizes, 2);
+    let mut t = Table::new(
+        "tuned SMM kernel table (→ python/compile/aot.py SMM_PARAMS)",
+        &["size", "grouping", "unroll", "est GF/s", "source"],
+    );
+    for tu in &tuned {
+        t.row(vec![
+            tu.m.to_string(),
+            tu.params.grouping.to_string(),
+            tu.params.unroll.to_string(),
+            format!("{:.0}", tu.gflops),
+            if tu.measured { "measured" } else { "model" }.to_string(),
+        ]);
+    }
+    t.print();
+
+    // 5. peek inside the tree
+    let model: &RegressionTree = tuner.model.as_ref().unwrap();
+    println!(
+        "regression tree: {} nodes, depth {}; example features for (22³, winner): {:?}",
+        model.node_count(),
+        model.depth(),
+        features(22, 22, 22, &tuned[3].params).0
+    );
+}

@@ -1,0 +1,76 @@
+//! Dense square multiplication — the paper's §IV-A/§IV-B workload at
+//! reduced scale, sweeping grid configurations and both engine paths.
+//!
+//! Run: `cargo run --release --offline --example dense_square [-- --scale 40]`
+//!
+//! Model mode at a scaled-down version of the paper's square workload
+//! (M = N = K = 63 360 / scale, blocks 22 and 64): regenerates miniature
+//! Fig. 2 (grid configs) and Fig. 3(a) (blocked vs densified) rows on one
+//! node's worth of ranks, printing virtual times from the P100/Aries
+//! model.
+
+use dbcsr::bench::harness::{run_spec, Engine, RunSpec, Shape};
+use dbcsr::bench::table::{fmt_secs, Table};
+use dbcsr::config::Args;
+use dbcsr::matrix::Mode;
+
+fn main() {
+    let args = Args::parse(std::env::args());
+    let scale = args.usize_flag("scale", 40);
+    let shape = Shape::paper_square().scaled(scale);
+    let (m, _, _) = shape.dims();
+    println!("dense square workload: M = N = K = {m} (paper / {scale})\n");
+
+    // miniature Fig. 2: grid configurations on 4 nodes
+    let mut t = Table::new(
+        "grid configurations (densified, block 22, 4 nodes)",
+        &["ranks x threads", "virtual time", "stacks", "GPU peak GiB"],
+    );
+    for (rpn, threads) in [(4, 3), (1, 12), (12, 1), (6, 2)] {
+        let r = run_spec(RunSpec {
+            nodes: 4,
+            rpn,
+            threads,
+            block: 22,
+            shape,
+            engine: Engine::DbcsrDensified,
+            mode: Mode::Model,
+        });
+        t.row(vec![
+            format!("{rpn} x {threads}"),
+            fmt_secs(r.seconds),
+            r.stats.stacks.to_string(),
+            format!("{:.2}", r.stats.dev_mem_peak as f64 / (1 << 30) as f64),
+        ]);
+    }
+    t.print();
+
+    // miniature Fig. 3(a): blocked vs densified per block size
+    let mut t = Table::new(
+        "blocked vs densified (4 x 3 on 4 nodes)",
+        &["block", "blocked", "densified", "ratio"],
+    );
+    for block in [22usize, 64] {
+        let mut pair = Vec::new();
+        for engine in [Engine::DbcsrBlocked, Engine::DbcsrDensified] {
+            let r = run_spec(RunSpec {
+                nodes: 4,
+                rpn: 4,
+                threads: 3,
+                block,
+                shape,
+                engine,
+                mode: Mode::Model,
+            });
+            pair.push(r.seconds);
+        }
+        t.row(vec![
+            block.to_string(),
+            fmt_secs(pair[0]),
+            fmt_secs(pair[1]),
+            format!("{:.2}x", pair[0] / pair[1]),
+        ]);
+    }
+    t.print();
+    println!("(full-scale figures: `dbcsr fig2` / `dbcsr fig3`, see EXPERIMENTS.md)");
+}

@@ -1,0 +1,139 @@
+//! END-TO-END driver: the full three-layer stack on a real workload.
+//!
+//! Run: `make artifacts && cargo run --release --offline --example e2e_dense`
+//!
+//! Proves all layers compose (DESIGN.md §7):
+//!   L1/L2 — the AOT Pallas GEMM/SMM artifacts are loaded from
+//!           `artifacts/` and executed through PJRT (the cuBLAS /
+//!           LIBCUSMM analogs); Python is never invoked;
+//!   L3   — 4 rank-threads form a 2×2 grid; real block-cyclic matrices
+//!           are multiplied with **blocked DBCSR**, **densified DBCSR**
+//!           (§III) and the **PDGEMM baseline** on the same inputs;
+//! every result is verified against a dense reference, and the headline
+//! metric (densified-DBCSR vs PDGEMM, plus blocked-vs-densified) is
+//! reported in modeled P100 time alongside testbed wallclock.
+//! Results are recorded in EXPERIMENTS.md §E2E.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use dbcsr::backend::smm_cpu;
+use dbcsr::bench::table::{fmt_secs, Table};
+use dbcsr::dist::{run_ranks, Grid2D, NetModel};
+use dbcsr::matrix::matrix::{dense_reference, Fill};
+use dbcsr::matrix::{BlockLayout, DistMatrix, Distribution, Mode};
+use dbcsr::multiply::{multiply, EngineOpts, MultiplyConfig};
+use dbcsr::runtime::{artifacts_dir, Runtime};
+use dbcsr::scalapack::pdgemm;
+
+const N: usize = 704; // 32 blocks of 22
+const BLOCK: usize = 22;
+
+fn main() {
+    // verify artifacts exist before spawning ranks
+    let dir = artifacts_dir();
+    let probe = Runtime::load(&dir).expect("run `make artifacts` first");
+    println!(
+        "e2e: {} AOT artifacts loaded from {} (PJRT CPU client)",
+        probe.manifest.variants.len(),
+        dir.display()
+    );
+    drop(probe);
+    println!("workload: C = A·B, {N}x{N}x{N}, block {BLOCK}, 2x2 grid, 3 threads/rank\n");
+
+    let mut table = Table::new(
+        "e2e results (real numerics through PJRT artifacts)",
+        &["engine", "wallclock", "modeled P100 time", "stacks", "max |err|"],
+    );
+    let mut modeled = Vec::new();
+    for (name, which) in [
+        ("DBCSR blocked", 0usize),
+        ("DBCSR densified", 1),
+        ("PDGEMM baseline", 2),
+    ] {
+        let wall0 = Instant::now();
+        let parts = run_ranks(4, NetModel::aries(4), move |world| {
+            // one PJRT runtime per rank (as one cuBLAS context per rank)
+            let runtime = Rc::new(Runtime::load(&artifacts_dir()).expect("artifacts"));
+            let grid = Grid2D::new(world, 2, 2);
+            let coords = grid.coords();
+            let mk_mat = |rows, cols, seed| {
+                DistMatrix::dense(
+                    BlockLayout::new(rows, BLOCK),
+                    BlockLayout::new(cols, BLOCK),
+                    Distribution::cyclic(2),
+                    Distribution::cyclic(2),
+                    coords,
+                    Mode::Real,
+                    Fill::Random { seed },
+                )
+            };
+            let a = mk_mat(N, N, 81);
+            let b = mk_mat(N, N, 82);
+            let cfg = MultiplyConfig {
+                engine: EngineOpts {
+                    threads: 3,
+                    densify: which == 1,
+                    ..Default::default()
+                },
+                gpu_share: 4,
+                runtime: Some(runtime),
+                ..Default::default()
+            };
+            let out = if which == 2 {
+                pdgemm(&grid, &a, &b, &cfg).unwrap()
+            } else {
+                multiply(&grid, &a, &b, &cfg).unwrap()
+            };
+            let mut dense = vec![0.0f32; N * N];
+            out.c.add_into_dense(&mut dense);
+            (dense, out.virtual_seconds, out.stats.stacks)
+        });
+        let wall = wall0.elapsed().as_secs_f64();
+
+        // gather + verify
+        let mut got = vec![0.0f32; N * N];
+        let mut vt = 0.0f64;
+        let mut stacks = 0u64;
+        for (part, t, s) in &parts {
+            for (g, x) in got.iter_mut().zip(part.iter()) {
+                *g += x;
+            }
+            vt = vt.max(*t);
+            stacks += s;
+        }
+        let layout = BlockLayout::new(N, BLOCK);
+        let ar = dense_reference(&layout, &layout, 81);
+        let br = dense_reference(&layout, &layout, 82);
+        let mut want = vec![0.0f32; N * N];
+        smm_cpu::gemm_blocked(N, N, N, &ar, &br, &mut want);
+        let max_err = got
+            .iter()
+            .zip(want.iter())
+            .map(|(g, w)| (g - w).abs() / w.abs().max(1.0))
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-2, "{name}: verification failed ({max_err})");
+
+        modeled.push(vt);
+        table.row(vec![
+            name.to_string(),
+            format!("{wall:.2}s"),
+            fmt_secs(vt),
+            stacks.to_string(),
+            format!("{max_err:.1e}"),
+        ]);
+    }
+    table.print();
+
+    println!("headline (modeled P100 node, this workload):");
+    println!(
+        "  densified DBCSR vs PDGEMM:  {:.2}x",
+        modeled[2] / modeled[1]
+    );
+    println!(
+        "  densified vs blocked DBCSR: {:.2}x",
+        modeled[0] / modeled[1]
+    );
+    println!("  (paper at full scale: 1.1-2.5x and up to 1.8x — see EXPERIMENTS.md)");
+    println!("e2e OK — all three engines verified against the dense reference");
+}

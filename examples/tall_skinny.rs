@@ -1,0 +1,97 @@
+//! Tall-and-skinny multiplication — the paper's rectangular workload
+//! (§IV: M = N = 1 408, K = 1 982 464) at reduced scale, comparing the
+//! O(1)-communication algorithm against Cannon and PDGEMM on the same
+//! operands.
+//!
+//! Run: `cargo run --release --offline --example tall_skinny [-- --scale 16]`
+
+use dbcsr::bench::harness::{run_spec, Engine, RunSpec, Shape};
+use dbcsr::bench::table::{fmt_secs, Table};
+use dbcsr::config::Args;
+use dbcsr::dist::{run_ranks, Grid2D, NetModel};
+use dbcsr::matrix::{DistMatrix, Mode};
+use dbcsr::matrix::matrix::Fill;
+use dbcsr::multiply::{multiply, tall_skinny, Algorithm, EngineOpts, MultiplyConfig};
+
+fn main() {
+    let args = Args::parse(std::env::args());
+    let scale = args.usize_flag("scale", 16);
+    let shape = Shape::paper_rect().scaled(scale);
+    let (m, _, k) = shape.dims();
+    println!("tall-and-skinny workload: M = N = {m}, K = {k} (paper / {scale})\n");
+
+    // --- communication scaling: TS is O(1) in K and P ---------------------
+    let mut t = Table::new(
+        "per-rank communication, tall-skinny vs Cannon (block 22, model)",
+        &["ranks", "TS bytes/rank", "Cannon bytes/rank", "TS advantage"],
+    );
+    for p in [4usize, 16] {
+        let ts_bytes = comm_bytes(p, m, k, Algorithm::TallSkinny);
+        let cn_bytes = comm_bytes(p, m, k, Algorithm::Cannon);
+        t.row(vec![
+            p.to_string(),
+            format!("{:.2} MiB", ts_bytes / (1 << 20) as f64),
+            format!("{:.2} MiB", cn_bytes / (1 << 20) as f64),
+            format!("{:.1}x", cn_bytes / ts_bytes),
+        ]);
+    }
+    t.print();
+
+    // --- end-to-end timing vs PDGEMM (miniature Fig. 4b) ------------------
+    let mut t = Table::new(
+        "virtual time on 4 nodes (4 x 3), block 22",
+        &["engine", "virtual time"],
+    );
+    for (name, engine) in [
+        ("DBCSR tall-skinny densified", Engine::DbcsrDensified),
+        ("DBCSR tall-skinny blocked", Engine::DbcsrBlocked),
+        ("PDGEMM (SUMMA baseline)", Engine::Pdgemm),
+    ] {
+        let r = run_spec(RunSpec {
+            nodes: 4,
+            rpn: 4,
+            threads: 3,
+            block: 22,
+            shape,
+            engine,
+            mode: Mode::Model,
+        });
+        t.row(vec![name.to_string(), fmt_secs(r.seconds)]);
+    }
+    t.print();
+    println!("(full-scale series: `dbcsr fig4`, see EXPERIMENTS.md E5)");
+}
+
+/// Total per-rank comm bytes for the rect workload under an algorithm.
+fn comm_bytes(p: usize, m: usize, k: usize, algorithm: Algorithm) -> f64 {
+    let parts = run_ranks(p, NetModel::aries(4), move |world| {
+        let cfg = MultiplyConfig {
+            engine: EngineOpts {
+                threads: 3,
+                densify: true,
+                ..Default::default()
+            },
+            algorithm,
+            gpu_share: 4,
+            runtime: None,
+            ..Default::default()
+        };
+        let out = match algorithm {
+            Algorithm::TallSkinny => {
+                let (a, b) = tall_skinny::ts_operands(m, m, k, 22, &world, Mode::Model, 1, 2);
+                let grid = Grid2D::new(world, 1, p);
+                multiply(&grid, &a, &b, &cfg).unwrap()
+            }
+            _ => {
+                let (pr, pc) = dbcsr::bench::harness::grid_shape(p);
+                let grid = Grid2D::new(world, pr, pc);
+                let coords = grid.coords();
+                let a = DistMatrix::dense_cyclic(m, k, 22, (pr, pc), coords, Mode::Model, Fill::Zero);
+                let b = DistMatrix::dense_cyclic(k, m, 22, (pr, pc), coords, Mode::Model, Fill::Zero);
+                multiply(&grid, &a, &b, &cfg).unwrap()
+            }
+        };
+        out.stats.comm_bytes
+    });
+    parts.iter().sum::<u64>() as f64 / p as f64
+}

@@ -1,0 +1,150 @@
+"""AOT pipeline: lower every L2 variant to HLO **text** + manifest.json.
+
+Run once at build time (``make artifacts``); the rust runtime loads the
+text with ``HloModuleProto::from_text_file``, compiles on the PJRT CPU
+client, and caches the executable.  Python never runs on the multiply
+path.
+
+HLO *text* — not ``lowered.compile()`` or a serialized HloModuleProto —
+is the interchange format: jax ≥ 0.5 emits protos with 64-bit instruction
+ids that the crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly.
+Lowering goes through stablehlo → XlaComputation with
+``return_tuple=True`` (the rust side unwraps with ``to_tuple1``).
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import gemm as gemm_kernel
+from .kernels import smm as smm_kernel
+from .kernels.smm import SmmParams
+
+# ----------------------------------------------------------------------------
+# Variant table.
+#
+# gemm tiles: the densified path pads large panels to multiples of these.
+#   256 is the workhorse; 128 reduces pad waste for small panels; 512 cuts
+#   per-call overhead for big ones.
+# smm (m,n,k): the paper's block sizes (4, 22, 64) plus the LIBCUSMM sweep
+#   sizes used by E7 (§II: speedup for {m,n,k} < 32, saturation by 80).
+#   One chunk = SMM_CHUNK stack entries; rust splits/pads stacks to chunks.
+# ----------------------------------------------------------------------------
+
+GEMM_TILES = (128, 256, 512)
+SMM_SIZES = (4, 8, 16, 22, 32, 48, 64, 80)
+# Chunk size tuned on the CPU-PJRT testbed (EXPERIMENTS.md §Perf): 128
+# balances per-execution overhead against tail-padding waste (zero slots
+# still cost compute in the folded kernel). A real TPU would amortize
+# launches better and prefer larger chunks.
+SMM_CHUNK = 128
+
+# Autotuned parameters per block size (selected by `dbcsr autotune`, see
+# backend/autotune; re-run `dbcsr autotune --emit` to regenerate).  The
+# folded form wins for small blocks (launch amortization), the looped form
+# for large ones (VMEM pressure) — mirroring LIBCUSMM's small-vs-large
+# strategy split.
+SMM_PARAMS = {
+    4: SmmParams(grouping=64, unroll=1),
+    8: SmmParams(grouping=64, unroll=1),
+    16: SmmParams(grouping=32, unroll=1),
+    22: SmmParams(grouping=32, unroll=1),
+    32: SmmParams(grouping=16, unroll=1),
+    48: SmmParams(grouping=16, unroll=1),
+    64: SmmParams(grouping=8, unroll=0),
+    80: SmmParams(grouping=8, unroll=0),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation (tupled) → HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(fn, example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    return to_hlo_text(lowered)
+
+
+def build_variants():
+    """Yield (name, fn, example_args, meta) for every artifact."""
+    for tile in GEMM_TILES:
+        fn, args = model.make_gemm_acc(tile)
+        sub = min(tile, 128)
+        meta = {
+            "kind": "gemm_acc",
+            "tile": tile,
+            "flops": model.gemm_flops(tile),
+            "vmem_bytes": gemm_kernel.vmem_bytes((sub, sub, sub)),
+            "mxu_efficiency": round(gemm_kernel.mxu_efficiency((sub, sub, sub)), 4),
+            "inputs": [[tile, tile]] * 3,
+        }
+        yield f"gemm_{tile}", fn, args, meta
+    for size in SMM_SIZES:
+        p = SMM_PARAMS[size]
+        fn, args = model.make_smm(size, size, size, SMM_CHUNK, p)
+        mp, np_, kp = p.padded(size, size, size)
+        meta = {
+            "kind": "smm",
+            "m": size,
+            "n": size,
+            "k": size,
+            "mp": mp,
+            "np": np_,
+            "kp": kp,
+            "s": SMM_CHUNK,
+            "grouping": p.grouping,
+            "unroll": p.unroll,
+            "flops": model.smm_flops(size, size, size, SMM_CHUNK),
+            "vmem_bytes": smm_kernel.vmem_bytes(size, size, size, p),
+            "mxu_efficiency": round(smm_kernel.mxu_efficiency(size, size, size, p), 4),
+            "inputs": [
+                [SMM_CHUNK, mp, kp],
+                [SMM_CHUNK, kp, np_],
+                [SMM_CHUNK, mp, np_],
+            ],
+        }
+        yield f"smm_{size}", fn, args, meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated variant names")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"format": 1, "dtype": "f32", "variants": []}
+    t0 = time.time()
+    for name, fn, example_args, meta in build_variants():
+        if only is not None and name not in only:
+            continue
+        t1 = time.time()
+        text = lower_variant(fn, example_args)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, path), "w") as f:
+            f.write(text)
+        manifest["variants"].append({"name": name, "path": path, **meta})
+        print(f"  {name}: {len(text)} chars in {time.time() - t1:.1f}s")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['variants'])} artifacts in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""Tiled dense GEMM Pallas kernel — the ``cublasDgemm`` analog.
+
+Densified DBCSR execution multiplies a handful of *large* dense panels per
+rank (sizes ``M/(t·P̃) × K/P̃`` by ``K/P̃ × N/P̃``).  On the paper's hardware
+those go to cuBLAS; here they go to this kernel, AOT-lowered once per tile
+shape and executed from rust through PJRT.
+
+TPU adaptation of the CUDA scheme (see DESIGN.md §Hardware-Adaptation):
+
+* CUDA threadblock staging through shared memory  →  BlockSpec-driven
+  HBM↔VMEM panel schedule: grid step ``(i, j, kk)`` holds an
+  ``(bm × bk)`` A-panel and ``(bk × bn)`` B-panel resident in VMEM.
+* warp/WMMA tiles  →  one MXU-shaped ``jnp.dot`` over the whole VMEM tile
+  (f32 accumulation; tiles are multiples of (8, 128) where shape allows).
+* the k-loop with register accumulators  →  VMEM scratch accumulator,
+  initialized at ``kk == 0`` and flushed to the output block at the last
+  ``kk`` step ("revisiting" output schedule: k is the innermost grid dim).
+
+The kernel is compiled with ``interpret=True``: the CPU PJRT client cannot
+execute Mosaic custom-calls, and correctness — not CPU wallclock — is what
+the interpret path certifies.  MXU utilization / VMEM footprint are
+estimated analytically (`vmem_bytes`, `mxu_efficiency` below) and reported
+in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gemm_kernel(a_ref, b_ref, c_in_ref, o_ref, acc_ref, *, n_k: int):
+    """One grid step: acc += A-panel @ B-panel, flushed on the last k step.
+
+    ``c_in_ref`` carries the existing C tile so the artifact implements the
+    accumulate form ``C += A @ B`` that DBCSR issues (beta = 1).
+    """
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU-shaped tile contraction, f32 accumulation.
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(kk == n_k - 1)
+    def _flush():
+        o_ref[...] = c_in_ref[...] + acc_ref[...]
+
+
+def _pick_tile(dim: int, want: int, align: int) -> int:
+    """Largest divisor tile <= want, preferring multiples of ``align``."""
+    best = 1
+    for t in range(1, min(dim, want) + 1):
+        if dim % t == 0:
+            if t % align == 0 or best % align != 0 or t > best:
+                if (t % align == 0) >= (best % align == 0):
+                    best = t
+    return best
+
+
+def default_tiles(m: int, n: int, k: int) -> Tuple[int, int, int]:
+    """Default VMEM tile shape for an (m, k) x (k, n) GEMM.
+
+    Targets MXU-friendly 2nd-minor/minor multiples of (8, 128) and a VMEM
+    budget of ~4 MiB for A+B+C+acc tiles.
+    """
+    bm = _pick_tile(m, 256, 8)
+    bn = _pick_tile(n, 256, 128)
+    bk = _pick_tile(k, 256, 128)
+    return bm, bn, bk
+
+
+def gemm_acc(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+    *,
+    tiles: Tuple[int, int, int] | None = None,
+) -> jnp.ndarray:
+    """C + A @ B with an explicit HBM↔VMEM tile schedule.
+
+    a: (M, K), b: (K, N), c: (M, N) — all f32.  Tile sizes must divide the
+    problem dims (the rust side pads panels to the artifact shape).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert c.shape == (m, n), f"C shape {c.shape} != {(m, n)}"
+    bm, bn, bk = tiles if tiles is not None else default_tiles(m, n, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"tiles {(bm, bn, bk)} must divide problem {(m, n, k)}"
+    )
+    n_k = k // bk
+
+    grid = (m // bm, n // bn, n_k)
+    kernel = functools.partial(_gemm_kernel, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),  # A panel
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),  # B panel
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),  # C in
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        # VMEM accumulator scratch; interpret mode honours the same
+        # MemoryRef shape on the CPU backend.
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(a, b, c)
+
+
+def vmem_bytes(tiles: Tuple[int, int, int]) -> int:
+    """Analytic VMEM footprint for one grid step (A+B+Cin+Cout+acc), bytes."""
+    bm, bn, bk = tiles
+    return 4 * (bm * bk + bk * bn + 3 * bm * bn)
+
+
+def mxu_efficiency(tiles: Tuple[int, int, int]) -> float:
+    """Estimated MXU utilization for the tile contraction.
+
+    The 128x128 systolic array is fed (8, 128)-aligned operands; efficiency
+    is the fraction of the padded-to-(128,128) systolic volume that carries
+    real data, discounted by the pipeline fill when bk < 128.
+    """
+    bm, bn, bk = tiles
+
+    def pad(x: int, q: int) -> int:
+        return ((x + q - 1) // q) * q
+
+    real = bm * bn * bk
+    padded = pad(bm, 128) * pad(bn, 128) * pad(bk, 128)
+    fill = bk / (bk + 128)  # systolic fill/drain amortization
+    return min(1.0, (real / padded) * (0.5 + 0.5 * fill) * 2.0)

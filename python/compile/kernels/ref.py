@@ -1,0 +1,55 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth for:
+  * ``gemm.py``  — tiled dense GEMM (the cuBLAS/``cublasDgemm`` analog used
+    by densified execution),
+  * ``smm.py``   — batched small-block matmul (the LIBCUSMM analog used by
+    blocked execution).
+
+The rust side additionally cross-checks the PJRT-executed artifacts against
+its own CPU microkernels, so numerical agreement here transitively validates
+the whole multiply path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gemm_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """C = A @ B for 2-D inputs, f32 accumulation."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def gemm_acc_ref(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """C += A @ B — the accumulate form DBCSR actually issues."""
+    return c + jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def smm_batched_ref(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Batched C[i] += A[i] @ B[i] over leading stack dimension.
+
+    Shapes: a (S, m, k), b (S, k, n), c (S, m, n). This mirrors one
+    DBCSR "stack": S small multiplications processed as a unit.
+    """
+    return c + jnp.einsum(
+        "smk,skn->smn", a, b, preferred_element_type=jnp.float32
+    )
+
+
+def smm_gather_ref(
+    a_buf: jnp.ndarray,
+    b_buf: jnp.ndarray,
+    c: jnp.ndarray,
+    a_idx: jnp.ndarray,
+    b_idx: jnp.ndarray,
+) -> jnp.ndarray:
+    """Indexed-stack form: C[i] += A_buf[a_idx[i]] @ B_buf[b_idx[i]].
+
+    DBCSR stacks reference blocks by offset into the local block buffers;
+    different stack entries may reuse the same A or B block. ``a_idx`` and
+    ``b_idx`` are (S,) int32 indices into the leading dims of the buffers.
+    """
+    a = a_buf[a_idx]
+    b = b_buf[b_idx]
+    return c + jnp.einsum("smk,skn->smn", a, b, preferred_element_type=jnp.float32)

@@ -1,0 +1,157 @@
+"""Batched small-matrix-multiply Pallas kernel — the LIBCUSMM analog.
+
+Blocked (non-densified) DBCSR execution processes *stacks*: batches of up
+to 30 000 multiplications of small dense blocks, ``C[i] += A[i] @ B[i]``
+with block dims (m × k) · (k × n) for m, n, k typically in 4..80.  The
+paper's LIBCUSMM generates JIT CUDA kernels parametrized over 7 knobs
+(read/write strategy, threads/block, work per thread, tilings) and picks
+the winner per (m, n, k) with a regression-tree performance model.
+
+TPU rethink (DESIGN.md §Hardware-Adaptation): there are no threadblocks to
+tune; the analogous resource decisions are
+
+* ``grouping`` G — how many stack entries ride in VMEM per grid step
+  (CUDA: "number of stack entries processed per threadblock").  The
+  leading batch axis is blocked by G via BlockSpec.
+* padded sublane/lane shape — small (m, k) blocks are zero-padded by the
+  *host* to (mp, kp) multiples of the packing the MXU wants; the kernel
+  contracts the padded tiles (zeros contribute nothing).  CUDA's
+  read-strategy knob becomes "which padding/packing".
+* ``unroll`` — whether the G entries are contracted with one reshaped
+  MXU call (batch folded into the sublane axis) or a fori-loop of G
+  small dots.  This mirrors CUDA's work-per-thread knob.
+
+These three knobs form the autotuning space searched by the rust
+``backend::autotune`` module (the performance-model training data comes
+from the analytic VMEM/MXU estimators plus host-side microbenchmarks of
+the padded shapes).
+
+Artifacts are AOT-lowered per (m, n, k, S) with the *winning* parameters
+and executed from rust; ``interpret=True`` as everywhere (CPU PJRT).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+class SmmParams(NamedTuple):
+    """Tunable parameters of one SMM kernel instantiation.
+
+    grouping: stack entries held in VMEM per grid step (G).
+    pad_m/pad_n/pad_k: host-side zero-padding targets for the block dims
+      (0 means "no padding beyond the natural dim").
+    unroll: 1 → single folded contraction per grid step;
+            0 → fori-loop over the G entries.
+    """
+
+    grouping: int = 16
+    pad_m: int = 0
+    pad_n: int = 0
+    pad_k: int = 0
+    unroll: int = 1
+
+    def padded(self, m: int, n: int, k: int) -> tuple[int, int, int]:
+        return (max(m, self.pad_m), max(n, self.pad_n), max(k, self.pad_k))
+
+
+def _smm_kernel_folded(a_ref, b_ref, c_ref, o_ref):
+    """One grid step, folded form: G entries contracted in one einsum.
+
+    a_ref: (G, mp, kp), b_ref: (G, kp, np_), c_ref/o_ref: (G, mp, np_).
+    The batched dot lowers to one dot_general with a batch dimension —
+    on TPU this feeds the MXU back-to-back without per-entry launch cost.
+    """
+    o_ref[...] = c_ref[...] + jax.lax.dot_general(
+        a_ref[...],
+        b_ref[...],
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _smm_kernel_looped(a_ref, b_ref, c_ref, o_ref, *, grouping: int):
+    """One grid step, looped form: fori over the G entries.
+
+    Lower VMEM pressure per dot; mirrors CUDA's "one multiplication per
+    warp-group" strategy for large blocks.
+    """
+
+    def body(i, _):
+        o_ref[i, :, :] = c_ref[i, :, :] + jnp.dot(
+            a_ref[i, :, :], b_ref[i, :, :], preferred_element_type=jnp.float32
+        )
+        return ()
+
+    jax.lax.fori_loop(0, grouping, body, ())
+
+
+def smm_batched(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+    *,
+    params: SmmParams | None = None,
+) -> jnp.ndarray:
+    """Stack execution: C[i] += A[i] @ B[i] for i in 0..S.
+
+    a: (S, mp, kp), b: (S, kp, np_), c: (S, mp, np_) — already host-padded
+    to the artifact's padded dims; S must be a multiple of grouping (the
+    rust side pads the tail of the stack with zero entries).
+    """
+    p = params or SmmParams()
+    s, mp, kp = a.shape
+    s2, kp2, np_ = b.shape
+    assert (s, kp) == (s2, kp2), f"A/B stack mismatch: {a.shape} {b.shape}"
+    assert c.shape == (s, mp, np_), f"C shape {c.shape}"
+    g = min(p.grouping, s)
+    assert s % g == 0, f"stack size {s} not a multiple of grouping {g}"
+
+    if p.unroll:
+        kernel = _smm_kernel_folded
+    else:
+        kernel = functools.partial(_smm_kernel_looped, grouping=g)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(s // g,),
+        in_specs=[
+            pl.BlockSpec((g, mp, kp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((g, kp, np_), lambda i: (i, 0, 0)),
+            pl.BlockSpec((g, mp, np_), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((g, mp, np_), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, mp, np_), jnp.float32),
+        interpret=True,
+    )(a, b, c)
+
+
+def vmem_bytes(m: int, n: int, k: int, params: SmmParams) -> int:
+    """Analytic VMEM footprint of one grid step (A+B+Cin+Cout), bytes."""
+    mp, np_, kp = params.padded(m, n, k)
+    g = params.grouping
+    return 4 * g * (mp * kp + kp * np_ + 2 * mp * np_)
+
+
+def mxu_efficiency(m: int, n: int, k: int, params: SmmParams) -> float:
+    """Estimated MXU utilization for one stack entry's contraction.
+
+    Small blocks waste most of the 128x128 array; padding to sublane/lane
+    multiples changes packing but not the real-data fraction, while the
+    folded form amortizes pipeline fill across G entries.
+    """
+    mp, np_, kp = params.padded(m, n, k)
+
+    def pad(x: int, q: int) -> int:
+        return ((x + q - 1) // q) * q
+
+    real = m * n * k
+    padded = pad(mp, 8) * pad(np_, 128) * pad(kp, 128)
+    fill = (params.grouping * kp) / (params.grouping * kp + 128) if params.unroll else kp / (kp + 128)
+    return min(1.0, (real / padded) * fill * 4.0)

@@ -1,0 +1,75 @@
+"""L2 — the JAX compute graphs AOT-lowered into ``artifacts/``.
+
+DBCSR's request-path compute is block multiply-accumulate; the rust
+coordinator (L3) issues it in two forms, each backed by one jitted JAX
+function calling the L1 Pallas kernels:
+
+* ``make_gemm_acc(tile)``  — densified path: one large-panel
+  ``C += A @ B`` per (padded) tile shape.  The rust side decomposes an
+  arbitrary densified panel into these fixed tiles, so a small set of
+  artifacts covers every runtime shape (this mirrors how cuBLAS covers
+  arbitrary shapes with fixed internal tilings).
+* ``make_smm(m, n, k, s, params)`` — blocked path: one stack chunk of S
+  small-block multiplications ``C[i] += A[i] @ B[i]`` with the
+  autotuner-selected kernel parameters baked in.
+
+Every function is shape-monomorphic by construction (AOT requires static
+shapes); the set of variants to emit lives in ``aot.VARIANTS``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gemm as gemm_kernel
+from .kernels import smm as smm_kernel
+from .kernels.smm import SmmParams
+
+
+def make_gemm_acc(tile: int) -> Tuple[Callable, Tuple[jax.ShapeDtypeStruct, ...]]:
+    """C += A @ B over one (tile × tile) panel pair.
+
+    Returns (fn, example_args) ready for ``jax.jit(fn).lower(*args)``.
+    The Pallas kernel subdivides the panel into VMEM-sized sub-tiles
+    internally, so ``tile`` here is the *artifact* granularity (what rust
+    pads panels to), not the VMEM granularity.
+    """
+    sub = min(tile, 128)
+
+    def gemm_acc(a, b, c):
+        return (gemm_kernel.gemm_acc(a, b, c, tiles=(sub, sub, sub)),)
+
+    spec = jax.ShapeDtypeStruct((tile, tile), jnp.float32)
+    return gemm_acc, (spec, spec, spec)
+
+
+def make_smm(
+    m: int, n: int, k: int, s: int, params: SmmParams
+) -> Tuple[Callable, Tuple[jax.ShapeDtypeStruct, ...]]:
+    """One stack chunk: C[i] += A[i] @ B[i], i in 0..s, blocks (m×k)·(k×n).
+
+    Block dims are host-padded to ``params.padded`` before the call; the
+    artifact's shapes are the padded ones.
+    """
+    mp, np_, kp = params.padded(m, n, k)
+
+    def smm(a, b, c):
+        return (smm_kernel.smm_batched(a, b, c, params=params),)
+
+    a_spec = jax.ShapeDtypeStruct((s, mp, kp), jnp.float32)
+    b_spec = jax.ShapeDtypeStruct((s, kp, np_), jnp.float32)
+    c_spec = jax.ShapeDtypeStruct((s, mp, np_), jnp.float32)
+    return smm, (a_spec, b_spec, c_spec)
+
+
+def gemm_flops(tile: int) -> int:
+    """FLOPs of one gemm_acc artifact execution (mul+add)."""
+    return 2 * tile * tile * tile
+
+
+def smm_flops(m: int, n: int, k: int, s: int) -> int:
+    """Real (unpadded) FLOPs of one smm artifact execution."""
+    return 2 * m * n * k * s

@@ -1,0 +1,94 @@
+"""AOT pipeline sanity: every variant lowers to parseable HLO text with the
+expected entry signature, and the manifest describes it faithfully."""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+from compile import aot, model
+from compile.kernels.smm import SmmParams
+
+
+class TestVariantTable:
+    def test_all_paper_block_sizes_present(self):
+        assert {4, 22, 64} <= set(aot.SMM_SIZES)
+
+    def test_params_cover_all_sizes(self):
+        assert set(aot.SMM_PARAMS) == set(aot.SMM_SIZES)
+
+    def test_chunk_divisible_by_groupings(self):
+        for size, p in aot.SMM_PARAMS.items():
+            assert aot.SMM_CHUNK % p.grouping == 0, (size, p)
+
+    def test_variant_names_unique(self):
+        names = [name for name, *_ in aot.build_variants()]
+        assert len(names) == len(set(names))
+        assert len(names) == len(aot.GEMM_TILES) + len(aot.SMM_SIZES)
+
+
+class TestLowering:
+    def test_gemm_lowers_to_hlo_text(self):
+        fn, args = model.make_gemm_acc(128)
+        text = aot.lower_variant(fn, args)
+        assert text.startswith("HloModule")
+        # tupled return (rust unwraps with to_tuple1)
+        assert "tuple" in text
+        # entry takes three f32[128,128] parameters
+        assert len(re.findall(r"f32\[128,128\]", text)) >= 3
+
+    def test_smm_lowers_to_hlo_text(self):
+        p = SmmParams(grouping=8, unroll=1)
+        fn, args = model.make_smm(22, 22, 22, 64, p)
+        text = aot.lower_variant(fn, args)
+        assert text.startswith("HloModule")
+        assert "f32[64,22,22]" in text
+
+    def test_smm_looped_variant_lowers(self):
+        p = SmmParams(grouping=8, unroll=0)
+        fn, args = model.make_smm(64, 64, 64, 16, p)
+        text = aot.lower_variant(fn, args)
+        assert text.startswith("HloModule")
+
+    def test_flops_accounting(self):
+        assert model.gemm_flops(128) == 2 * 128**3
+        assert model.smm_flops(22, 22, 22, 512) == 2 * 22**3 * 512
+
+
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def built(self, tmp_path_factory):
+        out = tmp_path_factory.mktemp("artifacts")
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", str(out),
+             "--only", "gemm_128,smm_4"],
+            check=True,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        )
+        return out
+
+    def test_manifest_lists_files_that_exist(self, built):
+        man = json.loads((built / "manifest.json").read_text())
+        assert man["format"] == 1 and man["dtype"] == "f32"
+        assert {v["name"] for v in man["variants"]} == {"gemm_128", "smm_4"}
+        for v in man["variants"]:
+            assert (built / v["path"]).exists()
+            assert (built / v["path"]).read_text().startswith("HloModule")
+
+    def test_manifest_meta_consistent(self, built):
+        man = json.loads((built / "manifest.json").read_text())
+        by_name = {v["name"]: v for v in man["variants"]}
+        g = by_name["gemm_128"]
+        assert g["kind"] == "gemm_acc" and g["tile"] == 128
+        assert g["inputs"] == [[128, 128]] * 3
+        s = by_name["smm_4"]
+        assert s["kind"] == "smm" and (s["m"], s["n"], s["k"]) == (4, 4, 4)
+        assert s["s"] == aot.SMM_CHUNK
+        assert s["inputs"][0] == [aot.SMM_CHUNK, s["mp"], s["kp"]]
+        assert 0 < s["mxu_efficiency"] <= 1

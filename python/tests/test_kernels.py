@@ -1,0 +1,197 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the CORE correctness signal for the compute layer — everything the
+rust coordinator executes through PJRT was lowered from these kernels.
+hypothesis sweeps shapes and parameters; fixed cases pin the paper's block
+sizes (4, 22, 64) and the artifact tile shapes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.gemm import default_tiles, gemm_acc, mxu_efficiency, vmem_bytes
+from compile.kernels.smm import SmmParams, smm_batched
+from compile.kernels import smm as smm_mod
+
+# f32 with re-associated accumulation: tolerance scales with sqrt(K).
+RTOL = 5e-4
+ATOL = 5e-4
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# GEMM kernel
+# ---------------------------------------------------------------------------
+
+
+class TestGemm:
+    @pytest.mark.parametrize("shape", [(64, 64, 64), (128, 64, 96), (32, 128, 64)])
+    def test_matches_ref(self, shape):
+        m, n, k = shape
+        a, b, c = rand(0, (m, k)), rand(1, (k, n)), rand(2, (m, n))
+        out = gemm_acc(a, b, c, tiles=(32, 32, 32))
+        np.testing.assert_allclose(out, ref.gemm_acc_ref(a, b, c), rtol=RTOL, atol=ATOL)
+
+    @pytest.mark.parametrize("tile", [128, 256])
+    def test_artifact_tiles(self, tile):
+        """The exact shapes the AOT artifacts are lowered with."""
+        sub = min(tile, 128)
+        a, b, c = rand(3, (tile, tile)), rand(4, (tile, tile)), rand(5, (tile, tile))
+        out = gemm_acc(a, b, c, tiles=(sub, sub, sub))
+        np.testing.assert_allclose(out, ref.gemm_acc_ref(a, b, c), rtol=RTOL, atol=ATOL)
+
+    def test_zero_c_is_plain_gemm(self):
+        a, b = rand(6, (64, 32)), rand(7, (32, 64))
+        out = gemm_acc(a, b, jnp.zeros((64, 64), jnp.float32), tiles=(32, 32, 32))
+        np.testing.assert_allclose(out, ref.gemm_ref(a, b), rtol=RTOL, atol=ATOL)
+
+    def test_single_tile(self):
+        """Degenerate grid (1,1,1): flush on the first and only step."""
+        a, b, c = rand(8, (16, 16)), rand(9, (16, 16)), rand(10, (16, 16))
+        out = gemm_acc(a, b, c, tiles=(16, 16, 16))
+        np.testing.assert_allclose(out, ref.gemm_acc_ref(a, b, c), rtol=RTOL, atol=ATOL)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        mi=st.integers(1, 4),
+        ni=st.integers(1, 4),
+        ki=st.integers(1, 6),
+        tile=st.sampled_from([8, 16, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, mi, ni, ki, tile, seed):
+        """Any (tile-divisible) shape agrees with the oracle."""
+        m, n, k = mi * tile, ni * tile, ki * tile
+        a, b, c = rand(seed, (m, k)), rand(seed + 1, (k, n)), rand(seed + 2, (m, n))
+        out = gemm_acc(a, b, c, tiles=(tile, tile, tile))
+        np.testing.assert_allclose(out, ref.gemm_acc_ref(a, b, c), rtol=RTOL, atol=ATOL)
+
+    def test_rejects_nondividing_tiles(self):
+        a, b, c = rand(0, (30, 30)), rand(1, (30, 30)), rand(2, (30, 30))
+        with pytest.raises(AssertionError, match="divide"):
+            gemm_acc(a, b, c, tiles=(16, 16, 16))
+
+    def test_rejects_mismatched_inner(self):
+        with pytest.raises(AssertionError, match="inner dims"):
+            gemm_acc(rand(0, (32, 16)), rand(1, (32, 32)), rand(2, (32, 32)))
+
+    def test_default_tiles_divide(self):
+        for m, n, k in [(256, 256, 256), (352, 352, 352), (704, 128, 704)]:
+            bm, bn, bk = default_tiles(m, n, k)
+            assert m % bm == 0 and n % bn == 0 and k % bk == 0
+
+    def test_estimators_positive(self):
+        assert vmem_bytes((128, 128, 128)) == 4 * (128 * 128 * 5)
+        assert 0.0 < mxu_efficiency((128, 128, 128)) <= 1.0
+        # bigger aligned tiles are never less efficient
+        assert mxu_efficiency((128, 128, 128)) >= mxu_efficiency((8, 128, 128))
+
+
+# ---------------------------------------------------------------------------
+# SMM kernel
+# ---------------------------------------------------------------------------
+
+
+class TestSmm:
+    @pytest.mark.parametrize("size", [4, 22, 64])  # the paper's block sizes
+    @pytest.mark.parametrize("unroll", [0, 1])
+    def test_matches_ref_paper_blocks(self, size, unroll):
+        S = 32
+        a, b, c = rand(0, (S, size, size)), rand(1, (S, size, size)), rand(2, (S, size, size))
+        out = smm_batched(a, b, c, params=SmmParams(grouping=8, unroll=unroll))
+        np.testing.assert_allclose(
+            out, ref.smm_batched_ref(a, b, c), rtol=RTOL, atol=ATOL
+        )
+
+    def test_rectangular_blocks(self):
+        S, m, n, k = 16, 22, 10, 34
+        a, b, c = rand(3, (S, m, k)), rand(4, (S, k, n)), rand(5, (S, m, n))
+        out = smm_batched(a, b, c, params=SmmParams(grouping=4, unroll=1))
+        np.testing.assert_allclose(
+            out, ref.smm_batched_ref(a, b, c), rtol=RTOL, atol=ATOL
+        )
+
+    def test_grouping_larger_than_stack_clamps(self):
+        S = 4
+        a, b, c = rand(6, (S, 8, 8)), rand(7, (S, 8, 8)), rand(8, (S, 8, 8))
+        out = smm_batched(a, b, c, params=SmmParams(grouping=64, unroll=1))
+        np.testing.assert_allclose(
+            out, ref.smm_batched_ref(a, b, c), rtol=RTOL, atol=ATOL
+        )
+
+    def test_zero_padded_tail_entries_are_noops(self):
+        """Rust pads stack tails with zero blocks; C tail must be unchanged."""
+        S, size = 16, 22
+        a, b = np.zeros((S, size, size), np.float32), np.zeros((S, size, size), np.float32)
+        a[:10] = np.asarray(rand(9, (10, size, size)))
+        b[:10] = np.asarray(rand(10, (10, size, size)))
+        c = rand(11, (S, size, size))
+        out = smm_batched(jnp.asarray(a), jnp.asarray(b), c, params=SmmParams(grouping=8))
+        np.testing.assert_allclose(out[10:], c[10:], rtol=0, atol=0)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        size=st.sampled_from([4, 8, 16, 22, 32]),
+        g_exp=st.integers(0, 4),
+        unroll=st.integers(0, 1),
+        chunks=st.integers(1, 4),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_params(self, size, g_exp, unroll, chunks, seed):
+        """Every (block size, grouping, unroll) combination is numerically
+        identical to the oracle — the autotuner may pick any of them."""
+        g = 2**g_exp
+        S = g * chunks
+        a, b, c = (
+            rand(seed, (S, size, size)),
+            rand(seed + 1, (S, size, size)),
+            rand(seed + 2, (S, size, size)),
+        )
+        out = smm_batched(a, b, c, params=SmmParams(grouping=g, unroll=unroll))
+        np.testing.assert_allclose(
+            out, ref.smm_batched_ref(a, b, c), rtol=RTOL, atol=ATOL
+        )
+
+    def test_padded_params(self):
+        """Host-side padding targets: kernel sees padded dims, zeros inert."""
+        p = SmmParams(grouping=4, pad_m=24, pad_n=24, pad_k=24)
+        assert p.padded(22, 22, 22) == (24, 24, 24)
+        S, mp = 8, 24
+        a = np.zeros((S, mp, mp), np.float32)
+        b = np.zeros((S, mp, mp), np.float32)
+        c = np.zeros((S, mp, mp), np.float32)
+        a[:, :22, :22] = np.asarray(rand(12, (S, 22, 22)))
+        b[:, :22, :22] = np.asarray(rand(13, (S, 22, 22)))
+        out = smm_batched(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), params=p)
+        expect = ref.smm_batched_ref(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c))
+        np.testing.assert_allclose(out, expect, rtol=RTOL, atol=ATOL)
+        # padded rows/cols stay zero
+        np.testing.assert_allclose(out[:, 22:, :], 0.0, atol=ATOL)
+
+    def test_gather_ref_consistency(self):
+        """The indexed-stack oracle agrees with explicit gathering."""
+        nblk, S, size = 6, 12, 8
+        a_buf, b_buf = rand(14, (nblk, size, size)), rand(15, (nblk, size, size))
+        c = rand(16, (S, size, size))
+        ai = jnp.asarray(np.arange(S) % nblk, jnp.int32)
+        bi = jnp.asarray((np.arange(S) * 5) % nblk, jnp.int32)
+        out = ref.smm_gather_ref(a_buf, b_buf, c, ai, bi)
+        expect = ref.smm_batched_ref(a_buf[ai], b_buf[bi], c)
+        np.testing.assert_allclose(out, expect, rtol=RTOL, atol=ATOL)
+
+    def test_estimators(self):
+        p = SmmParams(grouping=16)
+        assert smm_mod.vmem_bytes(22, 22, 22, p) == 4 * 16 * (22 * 22 * 4)
+        e = smm_mod.mxu_efficiency(22, 22, 22, p)
+        assert 0.0 < e <= 1.0
+        # bigger blocks waste less of the MXU
+        assert smm_mod.mxu_efficiency(64, 64, 64, p) > smm_mod.mxu_efficiency(4, 4, 4, p)

@@ -1,0 +1,73 @@
+"""L2 correctness: the jitted model functions (what the artifacts are
+lowered from) against the oracle, executed through jax.jit — i.e. the
+exact computation the rust runtime will run, before AOT."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.smm import SmmParams
+
+RTOL = 5e-4
+ATOL = 5e-4
+
+
+def rand(seed, shape):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+class TestGemmModel:
+    @pytest.mark.parametrize("tile", [128, 256])
+    def test_jitted_matches_oracle(self, tile):
+        fn, specs = model.make_gemm_acc(tile)
+        a, b, c = (rand(i, s.shape) for i, s in enumerate(specs))
+        (out,) = jax.jit(fn)(a, b, c)
+        np.testing.assert_allclose(
+            out, ref.gemm_acc_ref(a, b, c), rtol=RTOL, atol=ATOL
+        )
+
+    def test_example_args_match_tile(self):
+        _, specs = model.make_gemm_acc(512)
+        assert all(s.shape == (512, 512) for s in specs)
+        assert all(s.dtype == jnp.float32 for s in specs)
+
+
+class TestSmmModel:
+    @pytest.mark.parametrize("size,chunk", [(4, 32), (22, 16), (64, 8)])
+    def test_jitted_matches_oracle(self, size, chunk):
+        p = SmmParams(grouping=8, unroll=1 if size < 64 else 0)
+        fn, specs = model.make_smm(size, size, size, chunk, p)
+        a, b, c = (rand(i + 10, s.shape) for i, s in enumerate(specs))
+        (out,) = jax.jit(fn)(a, b, c)
+        np.testing.assert_allclose(
+            out, ref.smm_batched_ref(a, b, c), rtol=RTOL, atol=ATOL
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        size=st.sampled_from([4, 8, 22]),
+        g_exp=st.integers(0, 3),
+        chunks=st.integers(1, 3),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_grouping_sweep(self, size, g_exp, chunks, seed):
+        g = 2**g_exp
+        p = SmmParams(grouping=g, unroll=1)
+        fn, specs = model.make_smm(size, size, size, g * chunks, p)
+        a, b, c = (rand(seed + i, s.shape) for i, s in enumerate(specs))
+        (out,) = jax.jit(fn)(a, b, c)
+        np.testing.assert_allclose(
+            out, ref.smm_batched_ref(a, b, c), rtol=RTOL, atol=ATOL
+        )
+
+    def test_flops_accounting_consistency(self):
+        # manifest flops drive the rust perf counters — they must be the
+        # true real-data flops of the artifact
+        assert model.smm_flops(22, 22, 22, 128) == 2 * 22**3 * 128
+        assert model.gemm_flops(256) == 2 * 256**3

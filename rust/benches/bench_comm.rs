@@ -1,0 +1,108 @@
+//! Bench — the comm substrate: p2p wallclock overhead of the
+//! threads-as-ranks channel layer, modeled collective costs, and the
+//! communication-volume scaling laws the two algorithms rest on
+//! (Cannon O(1/√P), tall-skinny O(1)).
+
+use std::time::Instant;
+
+use dbcsr::bench::table::Table;
+use dbcsr::dist::{run_ranks, Grid2D, NetModel, Payload};
+use dbcsr::matrix::matrix::Fill;
+use dbcsr::matrix::{DistMatrix, Mode};
+use dbcsr::multiply::{multiply, tall_skinny, Algorithm, EngineOpts, MultiplyConfig};
+
+fn main() {
+    println!("=== bench_comm ===\n");
+
+    // --- substrate p2p microbench -------------------------------------------
+    let mut t = Table::new(
+        "p2p ping-pong (2 rank-threads, testbed wallclock + virtual time)",
+        &["payload", "msgs/s (wall)", "virtual per msg"],
+    );
+    for &elems in &[0usize, 1 << 10, 1 << 16, 1 << 20] {
+        let reps = if elems >= 1 << 20 { 200 } else { 2000 };
+        let out = run_ranks(2, NetModel::aries(1), move |c| {
+            let t0 = Instant::now();
+            for i in 0..reps {
+                if c.rank() == 0 {
+                    c.send(1, i as u64 & 0xff, Payload::F32(vec![0.0; elems]));
+                    let _ = c.recv(1, i as u64 & 0xff);
+                } else {
+                    let _ = c.recv(0, i as u64 & 0xff);
+                    c.send(0, i as u64 & 0xff, Payload::F32(vec![0.0; elems]));
+                }
+            }
+            (t0.elapsed().as_secs_f64(), c.now())
+        });
+        let (wall, virt) = out[0];
+        t.row(vec![
+            format!("{} KiB", elems * 4 / 1024),
+            format!("{:.0}", 2.0 * reps as f64 / wall),
+            format!("{:.2} µs", virt / (2.0 * reps as f64) * 1e6),
+        ]);
+    }
+    t.print();
+
+    // --- collective cost scaling (virtual) -----------------------------------
+    let mut t = Table::new(
+        "allreduce 1 MiB, virtual time vs ranks (modeled Aries)",
+        &["ranks", "virtual"],
+    );
+    for &p in &[4usize, 16, 64] {
+        let out = run_ranks(p, NetModel::aries(4), move |c| {
+            let t0 = c.now();
+            let _ = c.allreduce_sum_f32(Payload::F32(vec![0.0; 1 << 18]));
+            c.now() - t0
+        });
+        let worst = out.iter().cloned().fold(0.0f64, f64::max);
+        t.row(vec![p.to_string(), format!("{:.2} ms", worst * 1e3)]);
+    }
+    t.print();
+
+    // --- algorithm comm-volume laws ------------------------------------------
+    let mut t = Table::new(
+        "per-rank comm volume per multiply (model, square 8448, block 22)",
+        &["ranks", "Cannon MiB/rank", "x vs P/4", "TS MiB/rank (rect 704/90112)"],
+    );
+    let mut prev_cannon = None;
+    for &p in &[4usize, 16, 64] {
+        let side = (p as f64).sqrt() as usize;
+        let cannon = run_ranks(p, NetModel::aries(4), move |world| {
+            let grid = Grid2D::new(world, side, side);
+            let coords = grid.coords();
+            let a = DistMatrix::dense_cyclic(8448, 8448, 22, (side, side), coords, Mode::Model, Fill::Zero);
+            let b = a.clone();
+            let cfg = MultiplyConfig {
+                engine: EngineOpts { threads: 3, densify: true, ..Default::default() },
+                ..Default::default()
+            };
+            multiply(&grid, &a, &b, &cfg).unwrap().stats.comm_bytes
+        })
+        .iter()
+        .sum::<u64>() as f64
+            / p as f64;
+        let ts = run_ranks(p, NetModel::aries(4), move |world| {
+            let (a, b) = tall_skinny::ts_operands(704, 704, 90112, 22, &world, Mode::Model, 1, 2);
+            let grid = Grid2D::new(world, 1, p);
+            let cfg = MultiplyConfig {
+                engine: EngineOpts { threads: 3, densify: true, ..Default::default() },
+                algorithm: Algorithm::TallSkinny,
+                ..Default::default()
+            };
+            multiply(&grid, &a, &b, &cfg).unwrap().stats.comm_bytes
+        })
+        .iter()
+        .sum::<u64>() as f64
+            / p as f64;
+        let factor = prev_cannon.map(|prev: f64| format!("{:.2}", prev / cannon)).unwrap_or_else(|| "-".into());
+        prev_cannon = Some(cannon);
+        t.row(vec![
+            p.to_string(),
+            format!("{:.1}", cannon / (1 << 20) as f64),
+            factor,
+            format!("{:.2}", ts / (1 << 20) as f64),
+        ]);
+    }
+    t.print();
+    println!("expected: Cannon per-rank volume halves per 4x ranks (O(1/√P)); TS constant (O(1))");
+}

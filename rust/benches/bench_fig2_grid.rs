@@ -1,0 +1,53 @@
+//! Bench E1/E8 — regenerates Fig. 2: average execution time of the
+//! densified square multiplication across grid configurations
+//! (ranks × threads ∈ {4×3, 1×12, 12×1, 6×2}) and node counts, at paper
+//! scale (model mode) plus one reduced-scale real-mode anchor.
+//!
+//! Paper expectations: 4×3 optimal on average, ~23% degradation for the
+//! worst grid, 1×12 @ 16 nodes OOMs on the GPU, block 22 vs 64 within 5%.
+
+use dbcsr::bench::figures;
+use dbcsr::bench::harness::{run_spec, Engine, RunSpec, Shape};
+use dbcsr::bench::table::{fmt_secs, Table};
+use dbcsr::matrix::Mode;
+
+fn main() {
+    println!("=== bench_fig2_grid: paper scale (model mode) ===\n");
+    let mut degradations = Vec::new();
+    for t in figures::fig2(1, Mode::Model) {
+        t.print();
+        for row in &t.rows {
+            if let Some(x) = row.last().and_then(|c| c.trim_end_matches('x').parse::<f64>().ok()) {
+                degradations.push(x);
+            }
+        }
+    }
+    let avg = degradations.iter().sum::<f64>() / degradations.len().max(1) as f64;
+    println!(
+        "average worst/best degradation: {:.0}% (paper: 23%)\n",
+        (avg - 1.0) * 100.0
+    );
+
+    println!("=== reduced-scale real-mode anchor (wallclock, 1/40 scale) ===\n");
+    let mut t = Table::new(
+        "real mode, square /40, block 22, 1 node",
+        &["config", "virtual", "sim wallclock"],
+    );
+    for (rpn, threads) in [(4usize, 3usize), (1, 12)] {
+        let r = run_spec(RunSpec {
+            nodes: 1,
+            rpn,
+            threads,
+            block: 22,
+            shape: Shape::paper_square().scaled(40),
+            engine: Engine::DbcsrDensified,
+            mode: Mode::Real,
+        });
+        t.row(vec![
+            format!("{rpn}x{threads}"),
+            fmt_secs(r.seconds),
+            format!("{:.2}s", r.wall),
+        ]);
+    }
+    t.print();
+}

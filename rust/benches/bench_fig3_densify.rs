@@ -1,0 +1,49 @@
+//! Bench E2/E3 — regenerates Fig. 3: T_blocked / T_densified for square
+//! and rectangular workloads at paper scale (model mode), plus a
+//! reduced-scale real-mode ablation of the densification knob.
+//!
+//! Paper expectations: square b22 ratio up to ~1.8 decreasing with node
+//! count (stack handling + LIBCUSMM-vs-cuBLAS effects); b64 smaller
+//! gains; rectangular gains limited by densify/undensify overhead.
+
+use dbcsr::bench::figures;
+use dbcsr::bench::harness::{run_spec, Engine, RunSpec, Shape};
+use dbcsr::bench::table::{fmt_secs, Table};
+use dbcsr::matrix::Mode;
+
+fn main() {
+    println!("=== bench_fig3_densify: paper scale (model mode) ===\n");
+    for t in figures::fig3(1, Mode::Model) {
+        t.print();
+    }
+
+    println!("=== densification ablation, real mode (square /40, 2x2 ranks) ===\n");
+    let mut t = Table::new(
+        "real numerics, virtual P100 time + stack counts",
+        &["engine", "block", "virtual", "stacks", "densify MiB"],
+    );
+    for block in [22usize, 64] {
+        for (name, engine) in [
+            ("blocked", Engine::DbcsrBlocked),
+            ("densified", Engine::DbcsrDensified),
+        ] {
+            let r = run_spec(RunSpec {
+                nodes: 1,
+                rpn: 4,
+                threads: 3,
+                block,
+                shape: Shape::paper_square().scaled(40),
+                engine,
+                mode: Mode::Real,
+            });
+            t.row(vec![
+                name.to_string(),
+                block.to_string(),
+                fmt_secs(r.seconds),
+                r.stats.stacks.to_string(),
+                format!("{:.1}", r.stats.densify_bytes as f64 / (1 << 20) as f64),
+            ]);
+        }
+    }
+    t.print();
+}

@@ -1,0 +1,86 @@
+//! Bench E7 — the small-matmul engines:
+//! * the §II LIBCUSMM-vs-batched-cuBLAS modeled speedup curve (2–4x
+//!   below 32, saturating by 80);
+//! * real wallclock of the CPU microkernels (LIBXSMM analog):
+//!   specialized fixed-size kernels vs the generic loop;
+//! * real wallclock of the AOT Pallas SMM artifacts through PJRT
+//!   (the LIBCUSMM analog's actual execution path), when available.
+
+use std::time::Instant;
+
+use dbcsr::backend::smm_cpu;
+use dbcsr::bench::figures;
+use dbcsr::bench::table::Table;
+use dbcsr::runtime::{artifacts_dir, Runtime, VariantKind};
+use dbcsr::util::rng::Rng;
+use dbcsr::util::timer::black_box;
+
+fn main() {
+    println!("=== bench_smm ===\n");
+    figures::smm_speedup().print();
+
+    // --- CPU microkernels: specialized vs generic -------------------------
+    let mut t = Table::new(
+        "CPU microkernels (LIBXSMM analog), wallclock GF/s",
+        &["block", "specialized", "generic", "speedup"],
+    );
+    for &b in &[4usize, 8, 16, 22, 32, 48, 64, 80] {
+        let mut rng = Rng::new(b as u64);
+        let a: Vec<f32> = (0..b * b).map(|_| rng.next_f32_sym()).collect();
+        let bb: Vec<f32> = (0..b * b).map(|_| rng.next_f32_sym()).collect();
+        let mut c = vec![0.0f32; b * b];
+        let flops = 2.0 * (b * b * b) as f64;
+        let reps = (2e8 / flops).max(8.0) as usize;
+        let mut gf = |f: &mut dyn FnMut(&mut Vec<f32>)| {
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                f(&mut c);
+            }
+            black_box(&c);
+            reps as f64 * flops / t0.elapsed().as_secs_f64() / 1e9
+        };
+        let spec = gf(&mut |c| smm_cpu::smm(b, b, b, &a, &bb, c));
+        let gene = gf(&mut |c| smm_cpu::smm_generic(b, b, b, &a, &bb, c));
+        t.row(vec![
+            b.to_string(),
+            format!("{spec:.2}"),
+            format!("{gene:.2}"),
+            format!("{:.2}x", spec / gene),
+        ]);
+    }
+    t.print();
+
+    // --- PJRT-executed Pallas SMM artifacts --------------------------------
+    match Runtime::load(&artifacts_dir()) {
+        Ok(rt) => {
+            let mut t = Table::new(
+                "AOT Pallas SMM artifacts via PJRT (testbed CPU wallclock)",
+                &["artifact", "chunk", "ms/exec", "GF/s"],
+            );
+            for size in [4usize, 22, 64] {
+                let name = format!("smm_{size}");
+                let Some(v) = rt.manifest.find(&name).cloned() else { continue };
+                let VariantKind::Smm { s, mp, np, kp, .. } = v.kind else { continue };
+                let mut rng = Rng::new(1);
+                let a: Vec<f32> = (0..s * mp * kp).map(|_| rng.next_f32_sym()).collect();
+                let b: Vec<f32> = (0..s * kp * np).map(|_| rng.next_f32_sym()).collect();
+                let c = vec![0.0f32; s * mp * np];
+                let _ = rt.execute(&name, &[&a, &b, &c]).expect("warmup");
+                let reps = 5;
+                let t0 = Instant::now();
+                for _ in 0..reps {
+                    black_box(rt.execute(&name, &[&a, &b, &c]).unwrap());
+                }
+                let secs = t0.elapsed().as_secs_f64() / reps as f64;
+                t.row(vec![
+                    name,
+                    s.to_string(),
+                    format!("{:.2}", secs * 1e3),
+                    format!("{:.2}", v.flops as f64 / secs / 1e9),
+                ]);
+            }
+            t.print();
+        }
+        Err(e) => println!("(artifacts not built, skipping PJRT bench: {e})"),
+    }
+}

@@ -1,0 +1,92 @@
+//! Bench — Generation/Scheduler overhead: the "stack handling" effect the
+//! paper blames for the blocked path's losses (§IV-B: ~8M stacks for the
+//! square block-22 workload vs ~0.3M for block 64).
+//!
+//! Measures real-mode stack generation wallclock across caps and thread
+//! counts, and reports the paper-scale stack censuses from model mode.
+
+use std::time::Instant;
+
+use dbcsr::backend::stack::STACK_CAP;
+use dbcsr::bench::harness::{run_spec, Engine, RunSpec, Shape};
+use dbcsr::bench::table::Table;
+use dbcsr::matrix::LocalCsr;
+use dbcsr::matrix::Mode;
+use dbcsr::multiply::generation;
+use dbcsr::util::timer::black_box;
+
+fn dense_panel(nb: usize, block: usize) -> LocalCsr {
+    LocalCsr::dense(
+        (0..nb).collect(),
+        (0..nb).collect(),
+        vec![block; nb],
+        vec![block; nb],
+    )
+}
+
+fn main() {
+    println!("=== bench_stack ===\n");
+
+    // --- real generation wallclock ----------------------------------------
+    let mut t = Table::new(
+        "real-mode stack generation (64x64 block panel)",
+        &["cap", "threads", "stacks", "entries", "ms", "M entries/s"],
+    );
+    let nb = 64;
+    let a = dense_panel(nb, 22);
+    let b = dense_panel(nb, 22);
+    let c = dense_panel(nb, 22);
+    for cap in [512usize, 30_000] {
+        for threads in [1usize, 3, 12] {
+            let t0 = Instant::now();
+            let stacks = generation::generate_real(&a, &b, &c, threads, cap);
+            let secs = t0.elapsed().as_secs_f64();
+            let entries = generation::total_entries(&stacks);
+            black_box(&stacks);
+            t.row(vec![
+                cap.to_string(),
+                threads.to_string(),
+                stacks.len().to_string(),
+                entries.to_string(),
+                format!("{:.2}", secs * 1e3),
+                format!("{:.1}", entries as f64 / secs / 1e6),
+            ]);
+        }
+    }
+    t.print();
+
+    // --- paper-scale stack census (model mode) ------------------------------
+    let mut t = Table::new(
+        "paper-scale stack census per multiplication (model, 4x3 config)",
+        &["shape", "block", "nodes", "stacks", "block mults"],
+    );
+    for (label, square) in [("square", true), ("rect", false)] {
+        for block in [22usize, 64] {
+            for nodes in [16usize, 64] {
+                let r = run_spec(RunSpec {
+                    nodes,
+                    rpn: 4,
+                    threads: 3,
+                    block,
+                    shape: if square {
+                        Shape::paper_square()
+                    } else {
+                        Shape::paper_rect()
+                    },
+                    engine: Engine::DbcsrBlocked,
+                    mode: Mode::Model,
+                });
+                t.row(vec![
+                    label.to_string(),
+                    block.to_string(),
+                    nodes.to_string(),
+                    r.stats.stacks.to_string(),
+                    r.stats.block_mults.to_string(),
+                ]);
+            }
+        }
+    }
+    t.print();
+    println!("paper §IV-B: ~8M / ~0.3M stacks (square b22 / b64), ~250k / ~12k (rect)");
+    let _ = STACK_CAP;
+}

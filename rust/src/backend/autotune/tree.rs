@@ -1,0 +1,220 @@
+//! CART regression tree — the performance-model learner.
+//!
+//! Greedy variance-reduction splits over the [`super::Features`] vector,
+//! depth- and leaf-size-limited. Small, deterministic, no dependencies —
+//! the role LIBCUSMM fills with scikit-learn regression trees.
+
+use super::Features;
+
+/// A fitted regression tree.
+#[derive(Clone, Debug)]
+pub struct RegressionTree {
+    nodes: Vec<Node>,
+}
+
+#[derive(Clone, Debug)]
+enum Node {
+    Leaf {
+        value: f64,
+    },
+    Split {
+        feature: usize,
+        threshold: f64,
+        /// Index of the left child; right child is `left + 1 ... ` no —
+        /// children are stored at explicit indices.
+        left: usize,
+        right: usize,
+    },
+}
+
+impl RegressionTree {
+    /// Fit on (features, target) pairs.
+    pub fn fit(xs: &[Features], ys: &[f64], max_depth: usize, min_leaf: usize) -> RegressionTree {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty(), "empty training set");
+        let mut nodes = Vec::new();
+        let idx: Vec<usize> = (0..xs.len()).collect();
+        build(&mut nodes, xs, ys, idx, max_depth, min_leaf);
+        RegressionTree { nodes }
+    }
+
+    /// Predict the target for one feature vector.
+    pub fn predict(&self, x: &Features) -> f64 {
+        let mut i = 0;
+        loop {
+            match &self.nodes[i] {
+                Node::Leaf { value } => return *value,
+                Node::Split {
+                    feature,
+                    threshold,
+                    left,
+                    right,
+                } => {
+                    i = if x.0[*feature] <= *threshold {
+                        *left
+                    } else {
+                        *right
+                    };
+                }
+            }
+        }
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Maximum depth of the fitted tree (root = 0).
+    pub fn depth(&self) -> usize {
+        fn d(nodes: &[Node], i: usize) -> usize {
+            match &nodes[i] {
+                Node::Leaf { .. } => 0,
+                Node::Split { left, right, .. } => 1 + d(nodes, *left).max(d(nodes, *right)),
+            }
+        }
+        d(&self.nodes, 0)
+    }
+}
+
+fn mean(ys: &[f64], idx: &[usize]) -> f64 {
+    idx.iter().map(|&i| ys[i]).sum::<f64>() / idx.len() as f64
+}
+
+fn sse(ys: &[f64], idx: &[usize]) -> f64 {
+    let m = mean(ys, idx);
+    idx.iter().map(|&i| (ys[i] - m).powi(2)).sum()
+}
+
+/// Recursively build the subtree over `idx`, returning its node index.
+fn build(
+    nodes: &mut Vec<Node>,
+    xs: &[Features],
+    ys: &[f64],
+    idx: Vec<usize>,
+    depth_left: usize,
+    min_leaf: usize,
+) -> usize {
+    let here = nodes.len();
+    nodes.push(Node::Leaf { value: 0.0 }); // placeholder
+
+    let leaf = |nodes: &mut Vec<Node>, idx: &[usize]| {
+        nodes[here] = Node::Leaf {
+            value: mean(ys, idx),
+        };
+        here
+    };
+
+    if depth_left == 0 || idx.len() < 2 * min_leaf {
+        return leaf(nodes, &idx);
+    }
+
+    // best (feature, threshold) by SSE reduction
+    let parent_sse = sse(ys, &idx);
+    let nfeat = xs[0].0.len();
+    let mut best: Option<(usize, f64, f64)> = None; // (feature, threshold, child_sse)
+    for f in 0..nfeat {
+        let mut vals: Vec<f64> = idx.iter().map(|&i| xs[i].0[f]).collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        vals.dedup();
+        if vals.len() < 2 {
+            continue;
+        }
+        // candidate thresholds: midpoints (subsampled for speed)
+        let step = (vals.len() / 16).max(1);
+        for w in vals.windows(2).step_by(step) {
+            let thr = 0.5 * (w[0] + w[1]);
+            let (l, r): (Vec<usize>, Vec<usize>) =
+                idx.iter().partition(|&&i| xs[i].0[f] <= thr);
+            if l.len() < min_leaf || r.len() < min_leaf {
+                continue;
+            }
+            let child = sse(ys, &l) + sse(ys, &r);
+            if best.map_or(true, |(_, _, b)| child < b) {
+                best = Some((f, thr, child));
+            }
+        }
+    }
+
+    match best {
+        Some((f, thr, child_sse)) if child_sse < parent_sse * 0.999 => {
+            let (l, r): (Vec<usize>, Vec<usize>) = idx.iter().partition(|&&i| xs[i].0[f] <= thr);
+            let left = build(nodes, xs, ys, l, depth_left - 1, min_leaf);
+            let right = build(nodes, xs, ys, r, depth_left - 1, min_leaf);
+            nodes[here] = Node::Split {
+                feature: f,
+                threshold: thr,
+                left,
+                right,
+            };
+            here
+        }
+        _ => leaf(nodes, &idx),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f1(x: f64) -> Features {
+        Features([x, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0])
+    }
+
+    #[test]
+    fn fits_step_function() {
+        let xs: Vec<Features> = (0..100).map(|i| f1(i as f64)).collect();
+        let ys: Vec<f64> = (0..100).map(|i| if i < 50 { 1.0 } else { 5.0 }).collect();
+        let t = RegressionTree::fit(&xs, &ys, 4, 2);
+        assert!((t.predict(&f1(10.0)) - 1.0).abs() < 0.2);
+        assert!((t.predict(&f1(90.0)) - 5.0).abs() < 0.2);
+    }
+
+    #[test]
+    fn fits_multifeature_interaction() {
+        // y = x0 if x1 <= 0.5 else 10 - x0
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..20 {
+            for j in 0..2 {
+                let x0 = i as f64 / 2.0;
+                let x1 = j as f64;
+                xs.push(Features([x0, x1, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]));
+                ys.push(if x1 <= 0.5 { x0 } else { 10.0 - x0 });
+            }
+        }
+        let t = RegressionTree::fit(&xs, &ys, 8, 1);
+        let err: f64 = xs
+            .iter()
+            .zip(&ys)
+            .map(|(x, y)| (t.predict(x) - y).abs())
+            .sum::<f64>()
+            / xs.len() as f64;
+        assert!(err < 1.0, "mean abs err {err}");
+    }
+
+    #[test]
+    fn constant_target_single_leaf() {
+        let xs: Vec<Features> = (0..10).map(|i| f1(i as f64)).collect();
+        let ys = vec![3.0; 10];
+        let t = RegressionTree::fit(&xs, &ys, 5, 1);
+        assert_eq!(t.node_count(), 1);
+        assert_eq!(t.predict(&f1(4.0)), 3.0);
+    }
+
+    #[test]
+    fn depth_limit_respected() {
+        let xs: Vec<Features> = (0..64).map(|i| f1(i as f64)).collect();
+        let ys: Vec<f64> = (0..64).map(|i| i as f64).collect();
+        let t = RegressionTree::fit(&xs, &ys, 3, 1);
+        assert!(t.depth() <= 3);
+    }
+
+    #[test]
+    fn min_leaf_respected() {
+        let xs: Vec<Features> = (0..10).map(|i| f1(i as f64)).collect();
+        let ys: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let t = RegressionTree::fit(&xs, &ys, 10, 5);
+        // with min_leaf 5, at most one split of 10 points
+        assert!(t.node_count() <= 3);
+    }
+}

@@ -1,0 +1,24 @@
+//! Local-multiplication backends.
+//!
+//! The paper's local compute lands on three engines: LIBCUSMM (autotuned
+//! GPU small-matmul), cuBLAS (large GEMM on GPU), and LIBXSMM (CPU
+//! small-matmul fallback). Here:
+//!
+//! * [`smm_cpu`] — specialized CPU microkernels (LIBXSMM analog); also the
+//!   real-mode fallback for block shapes with no AOT artifact.
+//! * [`gpu_sim`] — the simulated GPU device: memory pool, pinned staging,
+//!   two streams with double buffering; numerics via the PJRT-executed
+//!   Pallas artifacts (cuBLAS / LIBCUSMM analogs), timing via
+//!   [`crate::perfmodel`].
+//! * [`autotune`] — the LIBCUSMM parameter-tuning framework with a
+//!   regression-tree performance model.
+//! * [`stack`] — the stack (batch) types shared by Generation, Scheduler
+//!   and the executors.
+
+pub mod autotune;
+pub mod gpu_sim;
+pub mod smm_cpu;
+pub mod stack;
+
+pub use gpu_sim::GpuSim;
+pub use stack::{Stack, StackEntries, StackEntry};

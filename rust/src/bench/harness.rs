@@ -1,0 +1,282 @@
+//! Experiment runner: one `RunSpec` = one bar/point of a paper figure.
+
+use crate::dist::{run_ranks, NetModel};
+use crate::matrix::matrix::Fill;
+use crate::matrix::{DistMatrix, Mode};
+use crate::multiply::{multiply, tall_skinny, Algorithm, EngineOpts, MultiplyConfig};
+use crate::perfmodel::PerfModel;
+use crate::scalapack::pdgemm;
+use crate::util::stats::MultiplyStats;
+
+/// Matrix shape of the workload (§IV): square or tall-and-skinny.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Shape {
+    /// M = N = K = n ("square matrix", paper: 63 360).
+    Square { n: usize },
+    /// M = N = mn, K = k ("rectangular", paper: 1 408 / 1 982 464).
+    Rect { mn: usize, k: usize },
+}
+
+impl Shape {
+    /// The paper's square workload.
+    pub fn paper_square() -> Shape {
+        Shape::Square { n: 63_360 }
+    }
+    /// The paper's rectangular workload.
+    pub fn paper_rect() -> Shape {
+        Shape::Rect {
+            mn: 1_408,
+            k: 1_982_464,
+        }
+    }
+    /// Scaled-down versions for real-mode runs / fast sweeps.
+    pub fn scaled(self, factor: usize) -> Shape {
+        match self {
+            Shape::Square { n } => Shape::Square { n: n / factor },
+            Shape::Rect { mn, k } => Shape::Rect {
+                mn: mn / factor,
+                k: k / factor,
+            },
+        }
+    }
+    pub fn dims(self) -> (usize, usize, usize) {
+        match self {
+            Shape::Square { n } => (n, n, n),
+            Shape::Rect { mn, k } => (mn, mn, k),
+        }
+    }
+}
+
+/// Which multiplication runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// DBCSR with densification (§III).
+    DbcsrDensified,
+    /// DBCSR blocked.
+    DbcsrBlocked,
+    /// The ScaLAPACK-style PDGEMM baseline.
+    Pdgemm,
+}
+
+/// One experiment point.
+#[derive(Clone, Copy, Debug)]
+pub struct RunSpec {
+    pub nodes: usize,
+    /// MPI ranks per node (grid config first factor).
+    pub rpn: usize,
+    /// OpenMP-analog threads per rank (second factor).
+    pub threads: usize,
+    pub block: usize,
+    pub shape: Shape,
+    pub engine: Engine,
+    pub mode: Mode,
+}
+
+/// Result of one experiment point (aggregated over ranks).
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    /// Virtual completion time: max over ranks (negative ⇒ OOM).
+    pub seconds: f64,
+    /// Wallclock of the whole simulation (testbed time, not the metric).
+    pub wall: f64,
+    pub stats: MultiplyStats,
+    pub oom: bool,
+}
+
+/// Most-square factorization pr × pc = p with pr ≤ pc.
+pub fn grid_shape(p: usize) -> (usize, usize) {
+    let mut pr = (p as f64).sqrt() as usize;
+    while pr > 1 && p % pr != 0 {
+        pr -= 1;
+    }
+    (pr.max(1), p / pr.max(1))
+}
+
+/// Execute one experiment point.
+pub fn run_spec(spec: RunSpec) -> RunResult {
+    let p = spec.nodes * spec.rpn;
+    let (pr, pc) = grid_shape(p);
+    let (m, n, k) = spec.shape.dims();
+    let net = NetModel::aries(spec.rpn);
+    let is_rect = matches!(spec.shape, Shape::Rect { .. });
+    let wall0 = std::time::Instant::now();
+
+    let per_rank = run_ranks(p, net, move |world| {
+        let cfg = MultiplyConfig {
+            engine: EngineOpts {
+                threads: spec.threads,
+                densify: spec.engine == Engine::DbcsrDensified,
+                ..Default::default()
+            },
+            perf: PerfModel::default(),
+            algorithm: if is_rect && spec.engine != Engine::Pdgemm {
+                Algorithm::TallSkinny
+            } else {
+                Algorithm::Cannon
+            },
+            gpu_share: spec.rpn,
+            runtime: None,
+        };
+        let outcome = if is_rect && spec.engine != Engine::Pdgemm {
+            // tall-skinny operand layout (K 1-D over all ranks)
+            let (a, b) =
+                tall_skinny::ts_operands(m, n, k, spec.block, &world, spec.mode, 101, 102);
+            let grid = crate::dist::Grid2D::new(world, 1, p);
+            multiply(&grid, &a, &b, &cfg)
+        } else {
+            let grid = crate::dist::Grid2D::new(world, pr, pc);
+            let coords = grid.coords();
+            let a = DistMatrix::dense_cyclic(
+                m,
+                k,
+                spec.block,
+                (pr, pc),
+                coords,
+                spec.mode,
+                fill_for(spec.mode, 101),
+            );
+            let b = DistMatrix::dense_cyclic(
+                k,
+                n,
+                spec.block,
+                (pr, pc),
+                coords,
+                spec.mode,
+                fill_for(spec.mode, 102),
+            );
+            if spec.engine == Engine::Pdgemm {
+                pdgemm(&grid, &a, &b, &cfg)
+            } else {
+                multiply(&grid, &a, &b, &cfg)
+            }
+        };
+        match outcome {
+            Ok(o) => (o.virtual_seconds, o.stats, false),
+            Err(_) => (0.0, MultiplyStats::default(), true),
+        }
+    });
+
+    let mut stats = MultiplyStats::default();
+    let mut seconds = 0.0f64;
+    let mut oom = false;
+    for (t, s, rank_oom) in per_rank {
+        seconds = seconds.max(t);
+        stats.merge(&s);
+        oom |= rank_oom;
+    }
+    RunResult {
+        seconds: if oom { -1.0 } else { seconds },
+        wall: wall0.elapsed().as_secs_f64(),
+        stats,
+        oom,
+    }
+}
+
+fn fill_for(mode: Mode, seed: u64) -> Fill {
+    match mode {
+        Mode::Real => Fill::Random { seed },
+        Mode::Model => Fill::Zero,
+    }
+}
+
+/// Overload for tall-skinny operand construction: (m, k) with N = m.
+pub mod tshelp {
+    use super::*;
+    use crate::dist::CommView;
+
+    pub fn operands(
+        m: usize,
+        k: usize,
+        block: usize,
+        world: &CommView,
+        mode: Mode,
+        sa: u64,
+        sb: u64,
+    ) -> (DistMatrix, DistMatrix) {
+        tall_skinny::ts_operands(m, m, k, block, world, mode, sa, sb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_shape_most_square() {
+        assert_eq!(grid_shape(16), (4, 4));
+        assert_eq!(grid_shape(24), (4, 6));
+        assert_eq!(grid_shape(192), (12, 16));
+        assert_eq!(grid_shape(1), (1, 1));
+        assert_eq!(grid_shape(7), (1, 7));
+    }
+
+    #[test]
+    fn shapes() {
+        assert_eq!(Shape::paper_square().dims(), (63_360, 63_360, 63_360));
+        let (m, n, k) = Shape::paper_rect().dims();
+        assert_eq!((m, n), (1_408, 1_408));
+        assert_eq!(k, 1_982_464);
+        assert_eq!(Shape::Square { n: 64 }.scaled(2).dims().0, 32);
+    }
+
+    #[test]
+    fn model_point_square_densified() {
+        let r = run_spec(RunSpec {
+            nodes: 1,
+            rpn: 4,
+            threads: 3,
+            block: 22,
+            shape: Shape::Square { n: 2816 },
+            engine: Engine::DbcsrDensified,
+            mode: Mode::Model,
+        });
+        assert!(!r.oom);
+        assert!(r.seconds > 0.0);
+        assert!(r.stats.flops > 0);
+    }
+
+    #[test]
+    fn model_point_rect_ts() {
+        let r = run_spec(RunSpec {
+            nodes: 1,
+            rpn: 4,
+            threads: 3,
+            block: 22,
+            shape: Shape::Rect { mn: 352, k: 22528 },
+            engine: Engine::DbcsrDensified,
+            mode: Mode::Model,
+        });
+        assert!(!r.oom && r.seconds > 0.0);
+    }
+
+    #[test]
+    fn model_point_pdgemm() {
+        let r = run_spec(RunSpec {
+            nodes: 1,
+            rpn: 4,
+            threads: 3,
+            block: 22,
+            shape: Shape::Square { n: 2816 },
+            engine: Engine::Pdgemm,
+            mode: Mode::Model,
+        });
+        assert!(!r.oom && r.seconds > 0.0);
+    }
+
+    #[test]
+    fn real_point_matches_model_counters() {
+        let spec = |mode| RunSpec {
+            nodes: 1,
+            rpn: 4,
+            threads: 2,
+            block: 8,
+            shape: Shape::Square { n: 64 },
+            engine: Engine::DbcsrBlocked,
+            mode,
+        };
+        let r = run_spec(spec(Mode::Real));
+        let m = run_spec(spec(Mode::Model));
+        assert_eq!(r.stats.block_mults, m.stats.block_mults);
+        assert_eq!(r.stats.stacks, m.stats.stacks);
+    }
+}

@@ -1,0 +1,15 @@
+//! Benchmark harness: workload generation and regeneration of every table
+//! and figure in the paper's evaluation (§IV).
+//!
+//! * [`harness`] — `RunSpec` (one experiment point: nodes × grid config ×
+//!   shape × block size × engine options) and the runner that executes it
+//!   over the threads-as-ranks substrate, in model mode at paper scale or
+//!   real mode at reduced scale.
+//! * [`figures`] — the per-figure sweeps: Fig. 2 (grid configuration),
+//!   Fig. 3 (blocked vs densified), Fig. 4 (PDGEMM vs DBCSR), and the
+//!   §II LIBCUSMM-vs-batched-cuBLAS curve (E7).
+//! * [`table`] — plain-text/JSON table output.
+
+pub mod figures;
+pub mod harness;
+pub mod table;

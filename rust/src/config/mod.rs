@@ -1,0 +1,151 @@
+//! Configuration: CLI argument parsing and experiment configuration files
+//! (clap/serde are not in the offline crate set — DESIGN.md §3).
+//!
+//! `Args` is a small `--flag value` / `--switch` parser; `ConfigFile`
+//! reads a `key = value` file (a TOML subset: comments, sections ignored)
+//! so experiment sweeps can be captured in version-controlled configs.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, positionals, flags.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()`-style iterator (program name first).
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut it = argv.into_iter().skip(1).peekable();
+        let mut out = Args {
+            command: it.next().unwrap_or_default(),
+            ..Default::default()
+        };
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // --flag value | --flag=value | --switch
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn usize_flag(&self, name: &str, default: usize) -> usize {
+        self.flag(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn str_flag<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flag(name).unwrap_or(default)
+    }
+}
+
+/// `key = value` config file (TOML subset; `#` comments; sections `[x]`
+/// flatten into `x.key`).
+#[derive(Clone, Debug, Default)]
+pub struct ConfigFile {
+    pub values: BTreeMap<String, String>,
+}
+
+impl ConfigFile {
+    pub fn parse(text: &str) -> ConfigFile {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for line in text.lines() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            if let Some((k, v)) = line.split_once('=') {
+                let key = if section.is_empty() {
+                    k.trim().to_string()
+                } else {
+                    format!("{section}.{}", k.trim())
+                };
+                values.insert(key, v.trim().trim_matches('"').to_string());
+            }
+        }
+        ConfigFile { values }
+    }
+
+    pub fn load(path: &str) -> std::io::Result<ConfigFile> {
+        Ok(ConfigFile::parse(&std::fs::read_to_string(path)?))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = Args::parse(argv("dbcsr fig2 --scale 4 --real --block=22 extra"));
+        assert_eq!(a.command, "fig2");
+        assert_eq!(a.usize_flag("scale", 1), 4);
+        assert!(a.switch("real"));
+        assert_eq!(a.flag("block"), Some("22"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn missing_flags_default() {
+        let a = Args::parse(argv("dbcsr run"));
+        assert_eq!(a.usize_flag("nodes", 7), 7);
+        assert!(!a.switch("real"));
+        assert_eq!(a.str_flag("engine", "dbcsr"), "dbcsr");
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = Args::parse(argv("dbcsr fig4 --real"));
+        assert!(a.switch("real"));
+    }
+
+    #[test]
+    fn config_file_sections() {
+        let c = ConfigFile::parse("# comment\nscale = 2\n[perf]\ngpu_peak = 4.7e12\nname = \"x\"\n");
+        assert_eq!(c.usize_or("scale", 1), 2);
+        assert_eq!(c.f64_or("perf.gpu_peak", 0.0), 4.7e12);
+        assert_eq!(c.get("perf.name"), Some("x"));
+        assert_eq!(c.usize_or("missing", 9), 9);
+    }
+}

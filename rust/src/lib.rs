@@ -1,0 +1,31 @@
+//! # DBCSR reproduction — distributed dense matrix multiplication
+//!
+//! A rust + JAX + Pallas reproduction of *"DBCSR: A Library for Dense
+//! Matrix Multiplications on Distributed GPU-Accelerated Systems"*
+//! (Sivkov, Lazzaro, Hutter — 2019).
+//!
+//! The crate implements the full DBCSR multiplication pipeline — blocked-CSR
+//! matrices on a 2-D rank grid, Cannon and tall-and-skinny data exchange,
+//! the Traversal/Generation/Scheduler local engine, and the paper's
+//! **densification** optimization — together with every substrate the paper
+//! runs on (an MPI-like comm layer, a GPU device model, a cuBLAS-analog AOT
+//! Pallas GEMM executed through PJRT, a LIBCUSMM-analog autotuner) and the
+//! ScaLAPACK-style PDGEMM baseline it compares against.
+//!
+//! See `DESIGN.md` for the architecture and the paper→testbed substitution
+//! table, and `EXPERIMENTS.md` for the regenerated figures.
+
+pub mod backend;
+pub mod bench;
+pub mod config;
+pub mod dist;
+pub mod linalg;
+pub mod matrix;
+pub mod multiply;
+pub mod perfmodel;
+pub mod runtime;
+pub mod scalapack;
+pub mod util;
+
+/// Crate version string (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

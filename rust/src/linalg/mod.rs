@@ -1,0 +1,394 @@
+//! Linear-algebra methods built on the multiplication kernel (§II: "the
+//! library includes some linear algebra methods: the Arnoldi eigensolver,
+//! the matrix sign, the matrix inverse, p-root and exponential
+//! algorithms" — the CP2K linear-scaling-SCF toolbox of paper ref.\[1\]).
+//!
+//! Every method here is a *consumer* of the public multiply API — the way
+//! CP2K consumes DBCSR — which makes this module both a deliverable and a
+//! continuous integration test of the multiplication semantics:
+//!
+//! * [`matrix_sign`] — Newton–Schulz iteration `Xₖ₊₁ = ½Xₖ(3I − Xₖ²)`;
+//! * [`matrix_inverse`] — Newton–Hotelling `Xₖ₊₁ = Xₖ(2I − A·Xₖ)`;
+//! * [`matrix_exp`] — scaling-and-squaring with a Taylor core;
+//! * [`matvec`] / [`arnoldi_extremal_eigs`] — distributed matrix-vector
+//!   products and an Arnoldi/Lanczos-style extremal-eigenvalue estimator
+//!   (used by the sign/inverse methods to bound spectra for scaling).
+
+use crate::backend::gpu_sim::DeviceOom;
+use crate::dist::{CommView, Grid2D, Payload};
+use crate::matrix::matrix::Fill;
+use crate::matrix::{DistMatrix, Mode};
+use crate::multiply::{multiply, MultiplyConfig};
+
+/// `C = A·B` through the configured pipeline (thin wrapper used below).
+fn mm(grid: &Grid2D, a: &DistMatrix, b: &DistMatrix, cfg: &MultiplyConfig) -> Result<DistMatrix, DeviceOom> {
+    Ok(multiply(grid, a, b, cfg)?.c)
+}
+
+/// Distributed identity with the same layout/distribution as `like`.
+pub fn identity_like(like: &DistMatrix) -> DistMatrix {
+    assert_eq!(like.rows.dim, like.cols.dim, "identity needs square");
+    let mut m = DistMatrix::dense(
+        like.rows.clone(),
+        like.cols.clone(),
+        like.row_dist.clone(),
+        like.col_dist.clone(),
+        like.coords,
+        like.mode,
+        Fill::Zero,
+    );
+    if m.mode == Mode::Real {
+        let blocks: Vec<(usize, usize, usize, usize)> = m
+            .local
+            .iter_nnz()
+            .map(|(b, r, c)| (b, r, c, m.local.area_of(r, c)))
+            .collect();
+        for (b, r, c, area) in blocks {
+            let (gi, gj) = (m.local.row_ids[r], m.local.col_ids[c]);
+            if gi != gj {
+                continue;
+            }
+            let cs = m.local.col_sizes[c];
+            let rs = m.local.row_sizes[r];
+            let blk = m.local.store.block_mut(b, area);
+            for i in 0..rs.min(cs) {
+                blk[i * cs + i] = 1.0;
+            }
+        }
+    }
+    m
+}
+
+/// Matrix sign function via Newton–Schulz: `Xₖ₊₁ = ½ Xₖ (3I − Xₖ²)`.
+///
+/// Converges quadratically for matrices with `‖I − A²‖ < 1`; callers
+/// pre-scale by the spectral bound (see [`arnoldi_extremal_eigs`]).
+/// Returns (sign(A), iterations used).
+pub fn matrix_sign(
+    grid: &Grid2D,
+    a: &DistMatrix,
+    cfg: &MultiplyConfig,
+    max_iter: usize,
+    tol: f32,
+) -> Result<(DistMatrix, usize), DeviceOom> {
+    let id = identity_like(a);
+    let mut x = a.clone();
+    for it in 0..max_iter {
+        // X² ; then Y = 3I − X²; then X ← ½ X Y
+        let x2 = mm(grid, &x, &x, cfg)?;
+        let mut y = id.clone();
+        y.scale(3.0);
+        y.add_scaled(&x2, -1.0);
+        let mut next = mm(grid, &x, &y, cfg)?;
+        next.scale(0.5);
+        // convergence: ‖X² − I‖_F (reuse x2)
+        let mut resid = x2.clone();
+        resid.add_scaled(&id, -1.0);
+        let err = resid.frobenius_sq(&grid.world).sqrt();
+        x = next;
+        if err < tol {
+            return Ok((x, it + 1));
+        }
+    }
+    Ok((x, max_iter))
+}
+
+/// Newton–Hotelling inverse: `Xₖ₊₁ = Xₖ (2I − A Xₖ)`, seeded with
+/// `X₀ = αAᵀ ≈ A⁻¹` (α = 1/‖A‖² estimate from `‖A‖_F`).
+pub fn matrix_inverse(
+    grid: &Grid2D,
+    a: &DistMatrix,
+    cfg: &MultiplyConfig,
+    max_iter: usize,
+    tol: f32,
+) -> Result<(DistMatrix, usize), DeviceOom> {
+    let id = identity_like(a);
+    // X0 = A^T / ||A||_F^2 — convergent for any nonsingular A when the
+    // condition number is moderate (our tests use diagonally-dominant A)
+    let fro2 = a.frobenius_sq(&grid.world);
+    let mut x = crate::matrix::ops::transpose(a, &grid.world, (grid.rows, grid.cols));
+    x.scale(1.0 / fro2);
+    for it in 0..max_iter {
+        let ax = mm(grid, a, &x, cfg)?;
+        let mut y = id.clone();
+        y.scale(2.0);
+        y.add_scaled(&ax, -1.0);
+        let next = mm(grid, &x, &y, cfg)?;
+        // residual ‖A·X − I‖
+        let mut resid = ax;
+        resid.add_scaled(&id, -1.0);
+        let err = resid.frobenius_sq(&grid.world).sqrt();
+        x = next;
+        if err < tol {
+            return Ok((x, it + 1));
+        }
+    }
+    Ok((x, max_iter))
+}
+
+/// Matrix exponential by scaling-and-squaring: `exp(A) = (exp(A/2ˢ))^(2ˢ)`
+/// with an order-`taylor` Taylor core.
+pub fn matrix_exp(
+    grid: &Grid2D,
+    a: &DistMatrix,
+    cfg: &MultiplyConfig,
+    taylor: usize,
+) -> Result<DistMatrix, DeviceOom> {
+    // pick s so ‖A/2^s‖_F ≲ 0.5
+    let norm = a.frobenius_sq(&grid.world).sqrt();
+    let s = norm.max(1e-30).log2().ceil().max(0.0) as u32 + 1;
+    let mut small = a.clone();
+    small.scale(1.0 / (1u64 << s) as f32);
+
+    // Taylor: E = I + X (I/1! + X/2! (I + ...)) — Horner form
+    let id = identity_like(a);
+    let mut e = id.clone();
+    for j in (1..=taylor).rev() {
+        // e ← I + (X · e) / j
+        let xe = mm(grid, &small, &e, cfg)?;
+        e = id.clone();
+        e.add_scaled(&xe, 1.0 / j as f32);
+    }
+    // square s times
+    for _ in 0..s {
+        e = mm(grid, &e, &e, cfg)?;
+    }
+    Ok(e)
+}
+
+/// Distributed matrix-vector product `y = A·x` with `x` replicated on
+/// every rank (length = global cols). Collective.
+pub fn matvec(a: &DistMatrix, x: &[f32], world: &CommView) -> Vec<f32> {
+    assert_eq!(a.mode, Mode::Real);
+    let (m, n) = a.global_dims();
+    assert_eq!(x.len(), n);
+    let mut local = vec![0.0f32; m];
+    for (b, r, c) in a.local.iter_nnz() {
+        let (gi, gj) = (a.local.row_ids[r], a.local.col_ids[c]);
+        let (rs, cs) = (a.local.row_sizes[r], a.local.col_sizes[c]);
+        let (r0, c0) = (a.rows.block_start(gi), a.cols.block_start(gj));
+        let blk = a.local.store.block(b, rs * cs);
+        for i in 0..rs {
+            let mut acc = 0.0f32;
+            for j in 0..cs {
+                acc += blk[i * cs + j] * x[c0 + j];
+            }
+            local[r0 + i] += acc;
+        }
+    }
+    world.allreduce_sum_f32(Payload::F32(local)).into_f32()
+}
+
+/// Arnoldi (symmetric: Lanczos-like) extremal-eigenvalue estimate via
+/// power-type iteration with Rayleigh quotients over `iters` steps.
+/// Returns (λ_max estimate, final Rayleigh residual).
+pub fn arnoldi_extremal_eigs(
+    a: &DistMatrix,
+    world: &CommView,
+    iters: usize,
+    seed: u64,
+) -> (f32, f32) {
+    let (_, n) = a.global_dims();
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let mut v: Vec<f32> = (0..n).map(|_| rng.next_f32_sym()).collect();
+    normalize(&mut v);
+    let mut lambda = 0.0f32;
+    let mut resid = f32::INFINITY;
+    for _ in 0..iters {
+        let w = matvec(a, &v, world);
+        lambda = dot(&v, &w); // Rayleigh quotient (v normalized)
+        // residual ‖Av − λv‖
+        resid = w
+            .iter()
+            .zip(v.iter())
+            .map(|(wi, vi)| (wi - lambda * vi).powi(2))
+            .sum::<f32>()
+            .sqrt();
+        v = w;
+        normalize(&mut v);
+    }
+    (lambda, resid)
+}
+
+fn normalize(v: &mut [f32]) {
+    let n = dot(v, v).sqrt().max(1e-30);
+    for x in v.iter_mut() {
+        *x /= n;
+    }
+}
+
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b.iter()).map(|(x, y)| x * y).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{run_ranks, NetModel};
+    use crate::matrix::{BlockLayout, Distribution};
+
+    /// Well-conditioned symmetric test matrix: D + εR with dominant
+    /// diagonal, distributed on a 2×2 grid.
+    fn test_matrix(coords: (usize, usize), n: usize, block: usize, eps: f32) -> DistMatrix {
+        let mut a = DistMatrix::dense(
+            BlockLayout::new(n, block),
+            BlockLayout::new(n, block),
+            Distribution::cyclic(2),
+            Distribution::cyclic(2),
+            coords,
+            Mode::Real,
+            Fill::Random { seed: 300 },
+        );
+        // symmetrize-ish + diagonal dominance: A = εR + 2I-ish diag
+        a.scale(eps);
+        let blocks: Vec<(usize, usize, usize, usize)> = a
+            .local
+            .iter_nnz()
+            .map(|(b, r, c)| (b, r, c, a.local.area_of(r, c)))
+            .collect();
+        for (b, r, c, area) in blocks {
+            let (gi, gj) = (a.local.row_ids[r], a.local.col_ids[c]);
+            if gi != gj {
+                continue;
+            }
+            let cs = a.local.col_sizes[c];
+            let rs = a.local.row_sizes[r];
+            let blk = a.local.store.block_mut(b, area);
+            for i in 0..rs.min(cs) {
+                blk[i * cs + i] += 1.0;
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn identity_like_is_identity() {
+        let out = run_ranks(4, NetModel::ideal(), |world| {
+            let grid = Grid2D::new(world, 2, 2);
+            let a = test_matrix(grid.coords(), 24, 6, 0.0);
+            let id = identity_like(&a);
+            id.trace(&grid.world)
+        });
+        assert!((out[0] - 24.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn sign_of_spd_matrix_is_identity() {
+        // A ≈ I + εR has positive spectrum → sign(A) = I
+        let out = run_ranks(4, NetModel::ideal(), |world| {
+            let grid = Grid2D::new(world, 2, 2);
+            let a = test_matrix(grid.coords(), 24, 6, 0.05);
+            let cfg = MultiplyConfig::default();
+            let (s, iters) = matrix_sign(&grid, &a, &cfg, 30, 1e-4).unwrap();
+            let mut diff = s.clone();
+            diff.add_scaled(&identity_like(&s), -1.0);
+            (diff.frobenius_sq(&grid.world).sqrt(), iters)
+        });
+        let (err, iters) = out[0];
+        assert!(err < 1e-2, "‖sign(A) − I‖ = {err} after {iters} iters");
+        assert!(iters < 30, "should converge");
+    }
+
+    #[test]
+    fn inverse_times_a_is_identity() {
+        let out = run_ranks(4, NetModel::ideal(), |world| {
+            let grid = Grid2D::new(world, 2, 2);
+            let a = test_matrix(grid.coords(), 24, 6, 0.05);
+            let cfg = MultiplyConfig::default();
+            let (inv, iters) = matrix_inverse(&grid, &a, &cfg, 50, 1e-4).unwrap();
+            let ax = multiply(&grid, &a, &inv, &cfg).unwrap().c;
+            let mut diff = ax;
+            diff.add_scaled(&identity_like(&a), -1.0);
+            (diff.frobenius_sq(&grid.world).sqrt(), iters)
+        });
+        let (err, iters) = out[0];
+        assert!(err < 1e-2, "‖A·A⁻¹ − I‖ = {err} after {iters} iters");
+    }
+
+    #[test]
+    fn exp_of_zero_is_identity() {
+        let out = run_ranks(4, NetModel::ideal(), |world| {
+            let grid = Grid2D::new(world, 2, 2);
+            let a = test_matrix(grid.coords(), 16, 4, 0.0);
+            let mut z = a.clone();
+            z.scale(0.0);
+            // zero out diagonal too: build from Fill::Zero directly
+            let z = DistMatrix::dense(
+                z.rows.clone(),
+                z.cols.clone(),
+                z.row_dist.clone(),
+                z.col_dist.clone(),
+                z.coords,
+                Mode::Real,
+                Fill::Zero,
+            );
+            let cfg = MultiplyConfig::default();
+            let e = matrix_exp(&grid, &z, &cfg, 8).unwrap();
+            let mut diff = e;
+            diff.add_scaled(&identity_like(&a), -1.0);
+            diff.frobenius_sq(&grid.world).sqrt()
+        });
+        assert!(out[0] < 1e-4, "exp(0) ≠ I: {}", out[0]);
+    }
+
+    #[test]
+    fn exp_trace_matches_scalar_exp_for_diagonal() {
+        // A = c·I → exp(A) = e^c·I, trace = n·e^c
+        let out = run_ranks(4, NetModel::ideal(), |world| {
+            let grid = Grid2D::new(world, 2, 2);
+            let base = test_matrix(grid.coords(), 16, 4, 0.0); // I
+            let mut a = base.clone();
+            a.scale(0.5); // A = 0.5 I
+            let cfg = MultiplyConfig::default();
+            let e = matrix_exp(&grid, &a, &cfg, 10).unwrap();
+            e.trace(&grid.world)
+        });
+        let want = 16.0 * 0.5f32.exp();
+        assert!((out[0] - want).abs() / want < 1e-3, "{} vs {want}", out[0]);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let out = run_ranks(4, NetModel::ideal(), |world| {
+            let grid = Grid2D::new(world, 2, 2);
+            let a = test_matrix(grid.coords(), 20, 5, 0.3);
+            let x: Vec<f32> = (0..20).map(|i| (i as f32 * 0.37).sin()).collect();
+            let y = matvec(&a, &x, &grid.world);
+            let mut dense = vec![0.0f32; 20 * 20];
+            a.add_into_dense(&mut dense);
+            (y, dense)
+        });
+        // reconstruct global dense from all ranks
+        let mut full = vec![0.0f32; 400];
+        for (_, d) in &out {
+            for (f, x) in full.iter_mut().zip(d.iter()) {
+                *f += x;
+            }
+        }
+        let x: Vec<f32> = (0..20).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut want = vec![0.0f32; 20];
+        for i in 0..20 {
+            for j in 0..20 {
+                want[i] += full[i * 20 + j] * x[j];
+            }
+        }
+        // ranks each computed a PARTIAL dense view but matvec allreduced:
+        // y should equal full matvec on every rank
+        for (yi, wi) in out[0].0.iter().zip(want.iter()) {
+            assert!((yi - wi).abs() < 1e-3, "{yi} vs {wi}");
+        }
+    }
+
+    #[test]
+    fn arnoldi_finds_dominant_eigenvalue() {
+        // A = I + 0.05 R: spectrum clustered near 1; λ_max slightly above
+        let out = run_ranks(4, NetModel::ideal(), |world| {
+            let grid = Grid2D::new(world, 2, 2);
+            let a = test_matrix(grid.coords(), 24, 6, 0.05);
+            arnoldi_extremal_eigs(&a, &grid.world, 40, 5)
+        });
+        let (lambda, resid) = out[0];
+        assert!((0.8..1.6).contains(&lambda), "λ={lambda}");
+        assert!(resid < 0.2, "residual {resid}");
+    }
+}

@@ -1,0 +1,222 @@
+//! `dbcsr` — launcher CLI for the DBCSR reproduction.
+//!
+//! Subcommands:
+//!   info                      library, artifact and model summary
+//!   fig2 [--scale N] [--real] regenerate Fig. 2 (grid configuration)
+//!   fig3 [--scale N] [--real] regenerate Fig. 3 (blocked vs densified)
+//!   fig4 [--scale N] [--block 4] regenerate Fig. 4 (PDGEMM vs DBCSR)
+//!   smm                       regenerate the §II LIBCUSMM speedup curve
+//!   autotune [--emit]         run the LIBCUSMM-analog tuner
+//!   run --nodes N --rpn R --threads T --block B --shape square|rect
+//!       --engine dbcsr|dbcsr-blocked|pdgemm [--scale N] [--real]
+//!                             one experiment point
+
+use dbcsr::bench::figures;
+use dbcsr::bench::harness::{run_spec, Engine, RunSpec, Shape};
+use dbcsr::bench::table::fmt_secs;
+use dbcsr::backend::autotune::{tuned_to_json, Autotuner};
+use dbcsr::config::Args;
+use dbcsr::matrix::Mode;
+use dbcsr::perfmodel::PerfModel;
+use dbcsr::runtime::{artifacts_dir, Manifest};
+
+fn main() {
+    let args = Args::parse(std::env::args());
+    let scale = args.usize_flag("scale", 1);
+    let mode = if args.switch("real") {
+        Mode::Real
+    } else {
+        Mode::Model
+    };
+    match args.command.as_str() {
+        "info" => info(&args),
+        "fig2" => {
+            for t in figures::fig2(scale, mode) {
+                t.print();
+            }
+        }
+        "fig3" => {
+            for t in figures::fig3(scale, mode) {
+                t.print();
+            }
+        }
+        "fig4" => {
+            let blocks: Vec<usize> = match args.flag("block") {
+                Some(b) => vec![b.parse().expect("--block integer")],
+                None => vec![22, 64],
+            };
+            for t in figures::fig4(scale, mode, &blocks, args.switch("square-only")) {
+                t.print();
+            }
+        }
+        "smm" => figures::smm_speedup().print(),
+        "autotune" => autotune(&args),
+        "run" => run_one(&args, scale, mode),
+        "runfile" => run_file(&args),
+        other => {
+            eprintln!("unknown subcommand {other:?}; see `dbcsr` source header for usage");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn info(args: &Args) {
+    println!("dbcsr reproduction v{} — DESIGN.md has the architecture", dbcsr::VERSION);
+    let perf = PerfModel::default();
+    println!(
+        "device model: P100 {:.1} TF/s peak, PCIe {:.1} GB/s, Aries α=1.5µs",
+        perf.gpu_peak / 1e12,
+        perf.pcie_bw / 1e9
+    );
+    match Manifest::load(&artifacts_dir()) {
+        Ok(m) => {
+            println!("artifacts ({}):", m.variants.len());
+            for v in &m.variants {
+                print!(
+                    "  {:<10} kind={:?} flops={}",
+                    v.name,
+                    v.kind,
+                    v.flops
+                );
+                if args.switch("kernels") {
+                    print!(
+                        "  vmem={}KiB mxu_eff={:.3}",
+                        v.vmem_bytes / 1024,
+                        v.mxu_efficiency
+                    );
+                }
+                println!();
+            }
+        }
+        Err(e) => println!("artifacts: not built ({e}) — run `make artifacts`"),
+    }
+}
+
+fn autotune(args: &Args) {
+    let mut tuner = Autotuner::new(PerfModel::default());
+    let sizes: Vec<(usize, usize, usize)> = [4usize, 8, 16, 22, 32, 48, 64, 80]
+        .iter()
+        .map(|&s| (s, s, s))
+        .collect();
+    let tuned = tuner.tune(&sizes, 2);
+    if args.switch("emit") {
+        println!("{}", tuned_to_json(&tuned).to_string());
+        return;
+    }
+    println!("{:<8} {:>9} {:>7} {:>7} {:>10} {:>9}", "size", "grouping", "unroll", "pad", "GF/s(est)", "source");
+    for t in &tuned {
+        println!(
+            "{:<8} {:>9} {:>7} {:>7} {:>10.0} {:>9}",
+            format!("{}x{}x{}", t.m, t.n, t.k),
+            t.params.grouping,
+            t.params.unroll,
+            t.params.pad_m,
+            t.gflops,
+            if t.measured { "measured" } else { "model" }
+        );
+    }
+}
+
+/// `dbcsr runfile experiment.conf` — run every experiment point listed
+/// in a config file (see configs/*.conf). Sections define points; global
+/// keys set defaults; perf.* keys override the device model.
+fn run_file(args: &Args) {
+    use dbcsr::config::ConfigFile;
+    let path = args
+        .positional
+        .first()
+        .expect("usage: dbcsr runfile <config file>");
+    let cf = ConfigFile::load(path).expect("readable config file");
+    // collect section names (keys of the form "<section>.<field>")
+    let mut sections: Vec<String> = cf
+        .values
+        .keys()
+        .filter_map(|k| k.split_once('.').map(|(s, _)| s.to_string()))
+        .filter(|s| s != "perf" && s != "defaults")
+        .collect();
+    sections.dedup();
+    let get = |section: &str, key: &str, def: usize| -> usize {
+        cf.usize_or(&format!("{section}.{key}"), cf.usize_or(&format!("defaults.{key}"), def))
+    };
+    let get_s = |section: &str, key: &str, def: &str| -> String {
+        cf.get(&format!("{section}.{key}"))
+            .or_else(|| cf.get(&format!("defaults.{key}")))
+            .unwrap_or(def)
+            .to_string()
+    };
+    println!("runfile {path}: {} experiment points\n", sections.len());
+    for section in &sections {
+        let shape = match get_s(section, "shape", "square").as_str() {
+            "rect" => Shape::paper_rect(),
+            _ => Shape::paper_square(),
+        }
+        .scaled(get(section, "scale", 1));
+        let engine = match get_s(section, "engine", "dbcsr").as_str() {
+            "dbcsr-blocked" => Engine::DbcsrBlocked,
+            "pdgemm" => Engine::Pdgemm,
+            _ => Engine::DbcsrDensified,
+        };
+        let spec = RunSpec {
+            nodes: get(section, "nodes", 1),
+            rpn: get(section, "rpn", 4),
+            threads: get(section, "threads", 3),
+            block: get(section, "block", 22),
+            shape,
+            engine,
+            mode: if get_s(section, "mode", "model") == "real" {
+                Mode::Real
+            } else {
+                Mode::Model
+            },
+        };
+        let r = run_spec(spec);
+        println!(
+            "[{section}] {} (stacks {}, comm {:.1} MiB{})",
+            fmt_secs(r.seconds),
+            r.stats.stacks,
+            r.stats.comm_bytes as f64 / (1 << 20) as f64,
+            if r.oom { ", OOM" } else { "" }
+        );
+    }
+}
+
+fn run_one(args: &Args, scale: usize, mode: Mode) {
+    let shape = match args.str_flag("shape", "square") {
+        "square" => Shape::paper_square().scaled(scale),
+        "rect" => Shape::paper_rect().scaled(scale),
+        other => panic!("--shape square|rect, got {other:?}"),
+    };
+    let engine = match args.str_flag("engine", "dbcsr") {
+        "dbcsr" => Engine::DbcsrDensified,
+        "dbcsr-blocked" => Engine::DbcsrBlocked,
+        "pdgemm" => Engine::Pdgemm,
+        other => panic!("--engine dbcsr|dbcsr-blocked|pdgemm, got {other:?}"),
+    };
+    let spec = RunSpec {
+        nodes: args.usize_flag("nodes", 1),
+        rpn: args.usize_flag("rpn", 4),
+        threads: args.usize_flag("threads", 3),
+        block: args.usize_flag("block", 22),
+        shape,
+        engine,
+        mode,
+    };
+    println!("spec: {spec:?}");
+    let r = run_spec(spec);
+    println!(
+        "virtual time {}   (sim wallclock {:.2}s)",
+        fmt_secs(r.seconds),
+        r.wall
+    );
+    println!(
+        "stacks {}  block_mults {}  flops {:.3e}  comm {:.1} MiB in {} msgs  densify {:.1} MiB  dev peak {:.2} GiB{}",
+        r.stats.stacks,
+        r.stats.block_mults,
+        r.stats.flops as f64,
+        r.stats.comm_bytes as f64 / (1 << 20) as f64,
+        r.stats.comm_msgs,
+        r.stats.densify_bytes as f64 / (1 << 20) as f64,
+        r.stats.dev_mem_peak as f64 / (1 << 30) as f64,
+        if r.oom { "  ** OOM **" } else { "" }
+    );
+}

@@ -1,0 +1,246 @@
+//! Per-rank blocked-CSR index over the locally owned blocks.
+
+use super::store::BlockStore;
+
+/// The blocks one rank owns, indexed CSR-style.
+///
+/// Global block-row ids `row_ids` and block-col ids `col_ids` (both
+/// sorted) define the *local* row/col index spaces; `row_ptr`/`col_idx`
+/// form a standard CSR over those local indices. `row_sizes`/`col_sizes`
+/// cache the element dimensions of each local block row/col.
+#[derive(Clone, Debug)]
+pub struct LocalCsr {
+    pub row_ids: Vec<usize>,
+    pub col_ids: Vec<usize>,
+    pub row_sizes: Vec<usize>,
+    pub col_sizes: Vec<usize>,
+    /// CSR row pointer, `len == row_ids.len() + 1`.
+    pub row_ptr: Vec<usize>,
+    /// Local column index of each nonzero block.
+    pub col_idx: Vec<usize>,
+    pub store: BlockStore,
+}
+
+impl LocalCsr {
+    /// Fully dense local pattern: every (local row, local col) present,
+    /// zero-filled real storage.
+    pub fn dense(
+        row_ids: Vec<usize>,
+        col_ids: Vec<usize>,
+        row_sizes: Vec<usize>,
+        col_sizes: Vec<usize>,
+    ) -> LocalCsr {
+        assert_eq!(row_ids.len(), row_sizes.len());
+        assert_eq!(col_ids.len(), col_sizes.len());
+        let (nr, nc) = (row_ids.len(), col_ids.len());
+        let row_ptr: Vec<usize> = (0..=nr).map(|r| r * nc).collect();
+        let col_idx: Vec<usize> = (0..nr).flat_map(|_| 0..nc).collect();
+        let areas = (0..nr).flat_map(|r| {
+            let rs = row_sizes[r];
+            col_sizes.iter().map(move |&cs| rs * cs).collect::<Vec<_>>()
+        });
+        let store = BlockStore::zeros(areas);
+        LocalCsr {
+            row_ids,
+            col_ids,
+            row_sizes,
+            col_sizes,
+            row_ptr,
+            col_idx,
+            store,
+        }
+    }
+
+    /// Same dense pattern, phantom storage (model mode).
+    pub fn dense_phantom(
+        row_ids: Vec<usize>,
+        col_ids: Vec<usize>,
+        row_sizes: Vec<usize>,
+        col_sizes: Vec<usize>,
+    ) -> LocalCsr {
+        assert_eq!(row_ids.len(), row_sizes.len());
+        assert_eq!(col_ids.len(), col_sizes.len());
+        let (nr, nc) = (row_ids.len(), col_ids.len());
+        let row_ptr: Vec<usize> = (0..=nr).map(|r| r * nc).collect();
+        let col_idx: Vec<usize> = (0..nr).flat_map(|_| 0..nc).collect();
+        let elems: u64 = row_sizes
+            .iter()
+            .map(|&rs| rs as u64 * col_sizes.iter().map(|&c| c as u64).sum::<u64>())
+            .sum();
+        LocalCsr {
+            row_ids,
+            col_ids,
+            row_sizes,
+            col_sizes,
+            row_ptr,
+            col_idx,
+            store: BlockStore::phantom(elems),
+        }
+    }
+
+    /// Sparse pattern from an explicit nonzero list of (local row, local
+    /// col), zero-filled real storage. The list must be sorted row-major
+    /// and duplicate-free.
+    pub fn from_pattern(
+        row_ids: Vec<usize>,
+        col_ids: Vec<usize>,
+        row_sizes: Vec<usize>,
+        col_sizes: Vec<usize>,
+        nonzeros: &[(usize, usize)],
+    ) -> LocalCsr {
+        let nr = row_ids.len();
+        debug_assert!(
+            nonzeros.windows(2).all(|w| w[0] < w[1]),
+            "nonzeros must be sorted row-major and unique"
+        );
+        let mut row_ptr = vec![0usize; nr + 1];
+        for &(r, c) in nonzeros {
+            assert!(r < nr && c < col_ids.len(), "nonzero out of range");
+            row_ptr[r + 1] += 1;
+        }
+        for r in 0..nr {
+            row_ptr[r + 1] += row_ptr[r];
+        }
+        let col_idx: Vec<usize> = nonzeros.iter().map(|&(_, c)| c).collect();
+        let areas = nonzeros
+            .iter()
+            .map(|&(r, c)| row_sizes[r] * col_sizes[c]);
+        let store = BlockStore::zeros(areas);
+        LocalCsr {
+            row_ids,
+            col_ids,
+            row_sizes,
+            col_sizes,
+            row_ptr,
+            col_idx,
+            store,
+        }
+    }
+
+    /// Number of nonzero blocks.
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Local rows / cols.
+    pub fn nrows(&self) -> usize {
+        self.row_ids.len()
+    }
+    pub fn ncols(&self) -> usize {
+        self.col_ids.len()
+    }
+
+    /// Nonzero index of local (row, col) if present (binary search within
+    /// the row segment — col_idx is sorted per row for dense patterns).
+    pub fn find(&self, r: usize, c: usize) -> Option<usize> {
+        let seg = &self.col_idx[self.row_ptr[r]..self.row_ptr[r + 1]];
+        seg.binary_search(&c).ok().map(|i| self.row_ptr[r] + i)
+    }
+
+    /// Element area of nonzero `b` given its local (row, col).
+    pub fn area_of(&self, r: usize, c: usize) -> usize {
+        self.row_sizes[r] * self.col_sizes[c]
+    }
+
+    /// Iterate nonzeros as (nnz index, local row, local col).
+    pub fn iter_nnz(&self) -> impl Iterator<Item = (usize, usize, usize)> + '_ {
+        (0..self.nrows()).flat_map(move |r| {
+            (self.row_ptr[r]..self.row_ptr[r + 1]).map(move |b| (b, r, self.col_idx[b]))
+        })
+    }
+
+    /// Total elements.
+    pub fn elems(&self) -> u64 {
+        self.store.elems()
+    }
+
+    /// Structural invariants (debug/test helper).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if self.row_ptr.len() != self.nrows() + 1 {
+            return Err("row_ptr length".into());
+        }
+        if *self.row_ptr.last().unwrap() != self.nnz() {
+            return Err("row_ptr tail != nnz".into());
+        }
+        if self.row_ptr.windows(2).any(|w| w[0] > w[1]) {
+            return Err("row_ptr not monotone".into());
+        }
+        if self.col_idx.iter().any(|&c| c >= self.ncols()) {
+            return Err("col_idx out of range".into());
+        }
+        for r in 0..self.nrows() {
+            let seg = &self.col_idx[self.row_ptr[r]..self.row_ptr[r + 1]];
+            if seg.windows(2).any(|w| w[0] >= w[1]) {
+                return Err(format!("row {r} cols not strictly increasing"));
+            }
+        }
+        if !self.store.is_phantom() {
+            let want: usize = self
+                .iter_nnz()
+                .map(|(_, r, c)| self.area_of(r, c))
+                .sum();
+            if want as u64 != self.elems() {
+                return Err(format!("store elems {} != pattern {}", self.elems(), want));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dense2x3() -> LocalCsr {
+        LocalCsr::dense(vec![0, 2], vec![1, 3, 5], vec![2, 2], vec![3, 3, 3])
+    }
+
+    #[test]
+    fn dense_pattern() {
+        let c = dense2x3();
+        assert_eq!(c.nnz(), 6);
+        assert_eq!(c.elems(), 36);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn find_hits_all_dense() {
+        let c = dense2x3();
+        for r in 0..2 {
+            for col in 0..3 {
+                assert_eq!(c.find(r, col), Some(r * 3 + col));
+            }
+        }
+    }
+
+    #[test]
+    fn phantom_dense_counts() {
+        let c = LocalCsr::dense_phantom(vec![0], vec![0, 1], vec![22], vec![22, 10]);
+        assert_eq!(c.elems(), 22 * 22 + 22 * 10);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sparse_pattern() {
+        let c = LocalCsr::from_pattern(
+            vec![0, 1],
+            vec![0, 1],
+            vec![2, 3],
+            vec![2, 3],
+            &[(0, 0), (0, 1), (1, 1)],
+        );
+        assert_eq!(c.nnz(), 3);
+        assert_eq!(c.find(0, 1), Some(1));
+        assert_eq!(c.find(1, 0), None);
+        assert_eq!(c.elems(), (4 + 6 + 9) as u64);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn iter_nnz_order() {
+        let c = dense2x3();
+        let v: Vec<_> = c.iter_nnz().collect();
+        assert_eq!(v[0], (0, 0, 0));
+        assert_eq!(v[5], (5, 1, 2));
+    }
+}

@@ -1,0 +1,114 @@
+//! Block → grid-coordinate distribution maps.
+//!
+//! One `Distribution` maps the block indices of one matrix dimension onto
+//! the `nproc` coordinates of one grid dimension. The benchmarks use
+//! block-cyclic maps ("block-cyclic distributed à la ScaLAPACK", §IV);
+//! `Custom` supports DBCSR's arbitrary user distributions.
+
+/// Distribution of block indices over `nproc` grid coordinates.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Distribution {
+    /// Block i lives at coordinate `i % nproc`.
+    Cyclic { nproc: usize },
+    /// Explicit per-block coordinates (values < nproc).
+    Custom { map: Vec<usize>, nproc: usize },
+}
+
+impl Distribution {
+    pub fn cyclic(nproc: usize) -> Distribution {
+        assert!(nproc > 0);
+        Distribution::Cyclic { nproc }
+    }
+
+    pub fn custom(map: Vec<usize>, nproc: usize) -> Distribution {
+        assert!(nproc > 0);
+        assert!(map.iter().all(|&p| p < nproc), "coordinate out of range");
+        Distribution::Custom { map, nproc }
+    }
+
+    pub fn nproc(&self) -> usize {
+        match self {
+            Distribution::Cyclic { nproc } => *nproc,
+            Distribution::Custom { nproc, .. } => *nproc,
+        }
+    }
+
+    /// Grid coordinate owning block `blk`.
+    #[inline]
+    pub fn owner(&self, blk: usize) -> usize {
+        match self {
+            Distribution::Cyclic { nproc } => blk % nproc,
+            Distribution::Custom { map, .. } => map[blk],
+        }
+    }
+
+    /// Blocks (in increasing order) owned by coordinate `p`, out of
+    /// `nblocks` total.
+    pub fn owned_blocks(&self, p: usize, nblocks: usize) -> Vec<usize> {
+        debug_assert!(p < self.nproc());
+        match self {
+            Distribution::Cyclic { nproc } => (p..nblocks).step_by(*nproc).collect(),
+            Distribution::Custom { map, .. } => (0..nblocks)
+                .filter(|&b| map[b] == p)
+                .collect(),
+        }
+    }
+
+    /// Number of blocks owned by coordinate `p`.
+    pub fn owned_count(&self, p: usize, nblocks: usize) -> usize {
+        match self {
+            Distribution::Cyclic { nproc } => {
+                if p < nblocks % nproc {
+                    nblocks / nproc + 1
+                } else {
+                    nblocks / nproc
+                }
+            }
+            Distribution::Custom { .. } => self.owned_blocks(p, nblocks).len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cyclic_owner() {
+        let d = Distribution::cyclic(4);
+        assert_eq!(d.owner(0), 0);
+        assert_eq!(d.owner(5), 1);
+        assert_eq!(d.owner(7), 3);
+    }
+
+    #[test]
+    fn cyclic_owned_blocks_partition() {
+        let d = Distribution::cyclic(3);
+        let mut all: Vec<usize> = (0..3).flat_map(|p| d.owned_blocks(p, 10)).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+        assert_eq!(d.owned_blocks(1, 10), vec![1, 4, 7]);
+    }
+
+    #[test]
+    fn cyclic_owned_count_matches() {
+        let d = Distribution::cyclic(4);
+        for p in 0..4 {
+            assert_eq!(d.owned_count(p, 11), d.owned_blocks(p, 11).len());
+        }
+    }
+
+    #[test]
+    fn custom_map() {
+        let d = Distribution::custom(vec![2, 0, 2, 1], 3);
+        assert_eq!(d.owner(2), 2);
+        assert_eq!(d.owned_blocks(2, 4), vec![0, 2]);
+        assert_eq!(d.owned_count(0, 4), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "coordinate out of range")]
+    fn custom_rejects_bad_coord() {
+        let _ = Distribution::custom(vec![0, 5], 3);
+    }
+}

@@ -1,0 +1,89 @@
+//! Blocking of one matrix dimension into (nearly) uniform blocks.
+
+/// Partition of `dim` elements into `nblocks` blocks of nominal size
+/// `block`; the last block may be smaller (ragged tail).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BlockLayout {
+    pub dim: usize,
+    pub block: usize,
+    pub nblocks: usize,
+}
+
+impl BlockLayout {
+    pub fn new(dim: usize, block: usize) -> BlockLayout {
+        assert!(dim > 0 && block > 0, "dim={dim} block={block}");
+        BlockLayout {
+            dim,
+            block,
+            nblocks: dim.div_ceil(block),
+        }
+    }
+
+    /// Size of block `i` (full except possibly the last).
+    #[inline]
+    pub fn block_size(&self, i: usize) -> usize {
+        debug_assert!(i < self.nblocks);
+        if i + 1 == self.nblocks {
+            self.dim - i * self.block
+        } else {
+            self.block
+        }
+    }
+
+    /// First element index of block `i`.
+    #[inline]
+    pub fn block_start(&self, i: usize) -> usize {
+        i * self.block
+    }
+
+    /// Block containing element `e`.
+    #[inline]
+    pub fn block_of(&self, e: usize) -> usize {
+        debug_assert!(e < self.dim);
+        e / self.block
+    }
+
+    /// True when every block has the full nominal size.
+    pub fn is_uniform(&self) -> bool {
+        self.dim % self.block == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_layout() {
+        let l = BlockLayout::new(64, 16);
+        assert_eq!(l.nblocks, 4);
+        assert!(l.is_uniform());
+        assert_eq!((0..4).map(|i| l.block_size(i)).sum::<usize>(), 64);
+    }
+
+    #[test]
+    fn ragged_tail() {
+        let l = BlockLayout::new(70, 22);
+        assert_eq!(l.nblocks, 4);
+        assert!(!l.is_uniform());
+        assert_eq!(l.block_size(3), 70 - 3 * 22);
+        assert_eq!((0..4).map(|i| l.block_size(i)).sum::<usize>(), 70);
+    }
+
+    #[test]
+    fn starts_and_block_of_agree() {
+        let l = BlockLayout::new(100, 7);
+        for e in 0..100 {
+            let b = l.block_of(e);
+            assert!(l.block_start(b) <= e);
+            assert!(e < l.block_start(b) + l.block_size(b));
+        }
+    }
+
+    #[test]
+    fn single_block() {
+        let l = BlockLayout::new(5, 22);
+        assert_eq!(l.nblocks, 1);
+        assert_eq!(l.block_size(0), 5);
+    }
+}

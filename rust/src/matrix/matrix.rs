@@ -1,0 +1,275 @@
+//! The distributed matrix handle (one per rank).
+
+use crate::util::rng::Rng;
+
+use super::csr::LocalCsr;
+use super::dist_map::Distribution;
+use super::layout::BlockLayout;
+
+/// Data-plane mode (DESIGN.md §3): `Real` moves and multiplies actual f32
+/// data; `Model` runs the same control flow over phantom storage and
+/// virtual clocks only.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    Real,
+    Model,
+}
+
+/// How to initialize block elements.
+#[derive(Clone, Copy, Debug)]
+pub enum Fill {
+    Zero,
+    /// Deterministic per-(block row, block col) random data: any rank
+    /// layout of the same (seed, layout) produces the same global matrix.
+    Random { seed: u64 },
+    Value(f32),
+}
+
+/// One rank's handle on a distributed blocked matrix.
+#[derive(Clone, Debug)]
+pub struct DistMatrix {
+    pub rows: BlockLayout,
+    pub cols: BlockLayout,
+    /// Block row → grid row.
+    pub row_dist: Distribution,
+    /// Block col → grid col.
+    pub col_dist: Distribution,
+    /// This rank's (grid row, grid col).
+    pub coords: (usize, usize),
+    pub local: LocalCsr,
+    pub mode: Mode,
+}
+
+impl DistMatrix {
+    /// Create this rank's share of a fully dense matrix.
+    pub fn dense(
+        rows: BlockLayout,
+        cols: BlockLayout,
+        row_dist: Distribution,
+        col_dist: Distribution,
+        coords: (usize, usize),
+        mode: Mode,
+        fill: Fill,
+    ) -> DistMatrix {
+        let row_ids = row_dist.owned_blocks(coords.0, rows.nblocks);
+        let col_ids = col_dist.owned_blocks(coords.1, cols.nblocks);
+        let row_sizes: Vec<usize> = row_ids.iter().map(|&i| rows.block_size(i)).collect();
+        let col_sizes: Vec<usize> = col_ids.iter().map(|&j| cols.block_size(j)).collect();
+        let local = match mode {
+            Mode::Real => LocalCsr::dense(row_ids, col_ids, row_sizes, col_sizes),
+            Mode::Model => LocalCsr::dense_phantom(row_ids, col_ids, row_sizes, col_sizes),
+        };
+        let mut m = DistMatrix {
+            rows,
+            cols,
+            row_dist,
+            col_dist,
+            coords,
+            local,
+            mode,
+        };
+        m.fill(fill);
+        m
+    }
+
+    /// Square-block convenience constructor used by benches/examples.
+    pub fn dense_cyclic(
+        m: usize,
+        n: usize,
+        block: usize,
+        grid: (usize, usize),
+        coords: (usize, usize),
+        mode: Mode,
+        fill: Fill,
+    ) -> DistMatrix {
+        DistMatrix::dense(
+            BlockLayout::new(m, block),
+            BlockLayout::new(n, block),
+            Distribution::cyclic(grid.0),
+            Distribution::cyclic(grid.1),
+            coords,
+            mode,
+            fill,
+        )
+    }
+
+    pub fn global_dims(&self) -> (usize, usize) {
+        (self.rows.dim, self.cols.dim)
+    }
+
+    /// (Re-)initialize owned block data.
+    pub fn fill(&mut self, fill: Fill) {
+        if self.mode == Mode::Model {
+            return; // phantom data has no elements
+        }
+        match fill {
+            Fill::Zero => self.local.store.data_mut().fill(0.0),
+            Fill::Value(v) => self.local.store.data_mut().fill(v),
+            Fill::Random { seed } => {
+                // iterate pattern first (immutable), then write via offsets
+                let blocks: Vec<(usize, usize, usize, usize)> = self
+                    .local
+                    .iter_nnz()
+                    .map(|(b, r, c)| {
+                        (
+                            b,
+                            self.local.row_ids[r],
+                            self.local.col_ids[c],
+                            self.local.area_of(r, c),
+                        )
+                    })
+                    .collect();
+                for (b, gi, gj, area) in blocks {
+                    let mut rng = block_rng(seed, gi, gj);
+                    for x in self.local.store.block_mut(b, area) {
+                        *x = rng.next_f32_sym();
+                    }
+                }
+            }
+        }
+    }
+
+    /// Scatter this rank's blocks into a dense (M × N) buffer (row-major);
+    /// summing these over all ranks reconstructs the global matrix.
+    pub fn add_into_dense(&self, out: &mut [f32]) {
+        assert_eq!(self.mode, Mode::Real, "no dense view of a phantom matrix");
+        let (_, n) = self.global_dims();
+        assert_eq!(out.len(), self.rows.dim * n);
+        for (b, r, c) in self.local.iter_nnz() {
+            let (gi, gj) = (self.local.row_ids[r], self.local.col_ids[c]);
+            let (rs, cs) = (self.local.row_sizes[r], self.local.col_sizes[c]);
+            let (r0, c0) = (self.rows.block_start(gi), self.cols.block_start(gj));
+            let blk = self.local.store.block(b, rs * cs);
+            for i in 0..rs {
+                let dst = &mut out[(r0 + i) * n + c0..(r0 + i) * n + c0 + cs];
+                dst.copy_from_slice(&blk[i * cs..(i + 1) * cs]);
+            }
+        }
+    }
+
+    /// Owned element count.
+    pub fn local_elems(&self) -> u64 {
+        self.local.elems()
+    }
+}
+
+/// Deterministic RNG stream for global block (i, j).
+pub fn block_rng(seed: u64, i: usize, j: usize) -> Rng {
+    Rng::new(
+        seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15)
+            ^ (j as u64).wrapping_mul(0xC2B2AE3D27D4EB4F),
+    )
+}
+
+/// Build the full dense matrix a `Fill::Random{seed}` distributed matrix
+/// represents — the single-source reference for correctness tests.
+pub fn dense_reference(rows: &BlockLayout, cols: &BlockLayout, seed: u64) -> Vec<f32> {
+    let (m, n) = (rows.dim, cols.dim);
+    let mut out = vec![0.0f32; m * n];
+    for gi in 0..rows.nblocks {
+        for gj in 0..cols.nblocks {
+            let (rs, cs) = (rows.block_size(gi), cols.block_size(gj));
+            let (r0, c0) = (rows.block_start(gi), cols.block_start(gj));
+            let mut rng = block_rng(seed, gi, gj);
+            for i in 0..rs {
+                for j in 0..cs {
+                    out[(r0 + i) * n + c0 + j] = rng.next_f32_sym();
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cyc(n: usize) -> Distribution {
+        Distribution::cyclic(n)
+    }
+
+    #[test]
+    fn ranks_partition_global_matrix() {
+        // 2x2 grid over a 6x6 blocked matrix: sum of per-rank dense views
+        // equals the single-rank reference.
+        let rows = BlockLayout::new(60, 10);
+        let cols = BlockLayout::new(60, 10);
+        let mut sum = vec![0.0f32; 60 * 60];
+        for r in 0..2 {
+            for c in 0..2 {
+                let m = DistMatrix::dense(
+                    rows.clone(),
+                    cols.clone(),
+                    cyc(2),
+                    cyc(2),
+                    (r, c),
+                    Mode::Real,
+                    Fill::Random { seed: 7 },
+                );
+                m.add_into_dense(&mut sum);
+            }
+        }
+        let reference = dense_reference(&rows, &cols, 7);
+        assert_eq!(sum, reference);
+    }
+
+    #[test]
+    fn fill_is_layout_independent() {
+        // the same global block is identical whether owned by a 1x1 or 2x2
+        // grid rank
+        let rows = BlockLayout::new(44, 22);
+        let cols = BlockLayout::new(44, 22);
+        let single = DistMatrix::dense(
+            rows.clone(),
+            cols.clone(),
+            cyc(1),
+            cyc(1),
+            (0, 0),
+            Mode::Real,
+            Fill::Random { seed: 3 },
+        );
+        let quad = DistMatrix::dense(
+            rows,
+            cols,
+            cyc(2),
+            cyc(2),
+            (1, 1),
+            Mode::Real,
+            Fill::Random { seed: 3 },
+        );
+        // quad (1,1) owns global block (1,1); single owns all four
+        let b_single = single.local.find(1, 1).unwrap();
+        let b_quad = quad.local.find(0, 0).unwrap();
+        assert_eq!(
+            single.local.store.block(b_single, 22 * 22),
+            quad.local.store.block(b_quad, 22 * 22)
+        );
+    }
+
+    #[test]
+    fn model_mode_has_no_data() {
+        let m = DistMatrix::dense_cyclic(100, 100, 22, (2, 2), (0, 1), Mode::Model, Fill::Zero);
+        assert!(m.local.store.is_phantom());
+        assert!(m.local_elems() > 0);
+    }
+
+    #[test]
+    fn ragged_dims_covered() {
+        // 50 = 2*22 + 6 ragged tail
+        let mut total = 0u64;
+        for r in 0..2 {
+            for c in 0..2 {
+                let m = DistMatrix::dense_cyclic(50, 50, 22, (2, 2), (r, c), Mode::Model, Fill::Zero);
+                total += m.local_elems();
+            }
+        }
+        assert_eq!(total, 50 * 50);
+    }
+
+    #[test]
+    fn value_fill() {
+        let m = DistMatrix::dense_cyclic(8, 8, 4, (1, 1), (0, 0), Mode::Real, Fill::Value(2.5));
+        assert!(m.local.store.data().iter().all(|&x| x == 2.5));
+    }
+}

@@ -1,0 +1,32 @@
+//! Distributed blocked-CSR matrices (the D, B, CSR of DBCSR).
+//!
+//! A matrix is a grid of dense blocks (uniform nominal block size, ragged
+//! tail) whose block rows/columns are mapped onto the rows/columns of a
+//! 2-D rank grid by a [`Distribution`] (block-cyclic à la ScaLAPACK, or
+//! custom). Each rank stores its owned blocks in CSR-of-blocks form.
+//!
+//! Storage is dual-mode ([`BlockStore`]): `Real` holds f32 element data
+//! (row-major per block, one flat buffer); `Phantom` holds only byte
+//! counts so model-mode simulations run paper-scale problems without the
+//! memory (DESIGN.md §3). Phantom accounting uses 8 B/element — the
+//! paper's double precision — while real numerics are f32 (the MXU
+//! adaptation, DESIGN.md §4).
+
+pub mod csr;
+pub mod dist_map;
+pub mod layout;
+pub mod matrix;
+pub mod ops;
+pub mod sparse;
+pub mod store;
+
+pub use csr::LocalCsr;
+pub use dist_map::Distribution;
+pub use layout::BlockLayout;
+pub use matrix::{DistMatrix, Mode};
+pub use store::BlockStore;
+
+/// Bytes per element in phantom (model-mode) accounting: f64, as the paper.
+pub const MODEL_ELEM_BYTES: u64 = 8;
+/// Bytes per element of real storage: f32 (MXU adaptation).
+pub const REAL_ELEM_BYTES: u64 = 4;

@@ -1,0 +1,418 @@
+//! Single- and two-matrix operations (the paper's §II API surface):
+//! scale, add, trace, Frobenius norm, dot product, transpose, and
+//! redistribution (the "ScaLAPACK interface" — DBCSR ⇄ block-cyclic).
+//!
+//! Reductions run over the comm substrate so model mode gets the right
+//! virtual-time cost; transpose/redistribute are real-mode data movers
+//! used by tests and the ScaLAPACK conversion path.
+
+use crate::dist::{CommView, Payload};
+
+use super::dist_map::Distribution;
+use super::layout::BlockLayout;
+use super::matrix::{DistMatrix, Fill, Mode};
+
+impl DistMatrix {
+    /// In-place scalar multiply.
+    pub fn scale(&mut self, alpha: f32) {
+        if self.mode == Mode::Real {
+            for x in self.local.store.data_mut() {
+                *x *= alpha;
+            }
+        }
+    }
+
+    /// `self += alpha * other` — requires identical layout, distribution
+    /// and (dense) pattern.
+    pub fn add_scaled(&mut self, other: &DistMatrix, alpha: f32) {
+        assert_eq!(self.rows, other.rows, "row layout mismatch");
+        assert_eq!(self.cols, other.cols, "col layout mismatch");
+        assert_eq!(self.local.nnz(), other.local.nnz(), "pattern mismatch");
+        if self.mode == Mode::Real {
+            let dst = self.local.store.data_mut();
+            let src = other.local.store.data();
+            assert_eq!(dst.len(), src.len());
+            for (d, s) in dst.iter_mut().zip(src.iter()) {
+                *d += alpha * s;
+            }
+        }
+    }
+
+    /// Distributed trace (square matrices). Collective over `world`.
+    pub fn trace(&self, world: &CommView) -> f32 {
+        assert_eq!(self.rows.dim, self.cols.dim, "trace needs a square matrix");
+        let mut local = 0.0f64;
+        if self.mode == Mode::Real {
+            for (b, r, c) in self.local.iter_nnz() {
+                let (gi, gj) = (self.local.row_ids[r], self.local.col_ids[c]);
+                if gi != gj {
+                    continue;
+                }
+                let (rs, cs) = (self.local.row_sizes[r], self.local.col_sizes[c]);
+                let blk = self.local.store.block(b, rs * cs);
+                for i in 0..rs.min(cs) {
+                    local += blk[i * cs + i] as f64;
+                }
+            }
+        }
+        world
+            .allreduce_sum_f32(Payload::F32(vec![local as f32]))
+            .into_f32()[0]
+    }
+
+    /// Distributed squared Frobenius norm. Collective over `world`.
+    pub fn frobenius_sq(&self, world: &CommView) -> f32 {
+        let local: f64 = if self.mode == Mode::Real {
+            self.local
+                .store
+                .data()
+                .iter()
+                .map(|&x| (x as f64) * (x as f64))
+                .sum()
+        } else {
+            0.0
+        };
+        world
+            .allreduce_sum_f32(Payload::F32(vec![local as f32]))
+            .into_f32()[0]
+    }
+
+    /// Distributed elementwise dot product ⟨self, other⟩. Collective.
+    pub fn dot(&self, other: &DistMatrix, world: &CommView) -> f32 {
+        assert_eq!(self.local.nnz(), other.local.nnz(), "pattern mismatch");
+        let local: f64 = if self.mode == Mode::Real {
+            self.local
+                .store
+                .data()
+                .iter()
+                .zip(other.local.store.data())
+                .map(|(&x, &y)| x as f64 * y as f64)
+                .sum()
+        } else {
+            0.0
+        };
+        world
+            .allreduce_sum_f32(Payload::F32(vec![local as f32]))
+            .into_f32()[0]
+    }
+}
+
+/// Where a rank sits in the 2-D grid implied by (row_dist, col_dist):
+/// `rank = grid_row * cols + grid_col` (the Grid2D convention).
+fn coords_of(rank: usize, grid: (usize, usize)) -> (usize, usize) {
+    (rank / grid.1, rank % grid.1)
+}
+
+/// All-to-all block exchange: every rank sends one (possibly empty)
+/// message to every rank of `world`, then drains one from each.
+///
+/// `outgoing[d]` = blocks for rank d as `(global_row, global_col, data)`.
+/// Returns all received blocks.
+fn alltoall_blocks(
+    world: &CommView,
+    outgoing: Vec<Vec<(usize, usize, Vec<f32>)>>,
+    tag: u64,
+) -> Vec<(usize, usize, Vec<f32>)> {
+    let p = world.size();
+    assert_eq!(outgoing.len(), p);
+    for (d, blocks) in outgoing.into_iter().enumerate() {
+        let mut index = Vec::with_capacity(3 * blocks.len());
+        let mut data = Vec::new();
+        for (gi, gj, blk) in blocks {
+            index.push(gi as i64);
+            index.push(gj as i64);
+            index.push(blk.len() as i64);
+            data.extend_from_slice(&blk);
+        }
+        world.send(d, tag, Payload::Blocks { index, data });
+    }
+    let mut received = Vec::new();
+    for s in 0..p {
+        let (index, data) = world.recv(s, tag).into_blocks();
+        let mut off = 0usize;
+        for meta in index.chunks_exact(3) {
+            let (gi, gj, len) = (meta[0] as usize, meta[1] as usize, meta[2] as usize);
+            received.push((gi, gj, data[off..off + len].to_vec()));
+            off += len;
+        }
+    }
+    received
+}
+
+/// Transpose a dense real-mode matrix: `B = Aᵀ`, with B block-cyclic over
+/// the same grid. Collective over `world`.
+pub fn transpose(a: &DistMatrix, world: &CommView, grid: (usize, usize)) -> DistMatrix {
+    assert_eq!(a.mode, Mode::Real, "transpose moves real data");
+    assert_eq!(grid.0 * grid.1, world.size());
+    let b_row_dist = Distribution::cyclic(grid.0);
+    let b_col_dist = Distribution::cyclic(grid.1);
+
+    // pack each local block, transposed, for the owner of B(gj, gi)
+    let mut outgoing: Vec<Vec<(usize, usize, Vec<f32>)>> = vec![Vec::new(); world.size()];
+    for (bidx, r, c) in a.local.iter_nnz() {
+        let (gi, gj) = (a.local.row_ids[r], a.local.col_ids[c]);
+        let (rs, cs) = (a.local.row_sizes[r], a.local.col_sizes[c]);
+        let blk = a.local.store.block(bidx, rs * cs);
+        let mut t = vec![0.0f32; rs * cs];
+        for i in 0..rs {
+            for j in 0..cs {
+                t[j * rs + i] = blk[i * cs + j];
+            }
+        }
+        let dest = b_row_dist.owner(gj) * grid.1 + b_col_dist.owner(gi);
+        outgoing[dest].push((gj, gi, t));
+    }
+
+    let mut b = DistMatrix::dense(
+        a.cols.clone(),
+        a.rows.clone(),
+        b_row_dist,
+        b_col_dist,
+        coords_of(world.rank(), grid),
+        Mode::Real,
+        Fill::Zero,
+    );
+    for (gi, gj, data) in alltoall_blocks(world, outgoing, 40) {
+        let r = b.local.row_ids.binary_search(&gi).expect("not my row block");
+        let c = b.local.col_ids.binary_search(&gj).expect("not my col block");
+        let bi = b.local.find(r, c).expect("dense pattern");
+        let area = b.local.area_of(r, c);
+        b.local.store.block_mut(bi, area).copy_from_slice(&data);
+    }
+    b
+}
+
+/// Redistribute a dense real-mode matrix onto new distributions/grid —
+/// the DBCSR ⇄ ScaLAPACK conversion. Collective over `world`.
+pub fn redistribute(
+    a: &DistMatrix,
+    world: &CommView,
+    new_grid: (usize, usize),
+    new_row_dist: Distribution,
+    new_col_dist: Distribution,
+) -> DistMatrix {
+    assert_eq!(a.mode, Mode::Real, "redistribute moves real data");
+    assert_eq!(new_grid.0 * new_grid.1, world.size());
+    assert_eq!(new_row_dist.nproc(), new_grid.0);
+    assert_eq!(new_col_dist.nproc(), new_grid.1);
+
+    let mut outgoing: Vec<Vec<(usize, usize, Vec<f32>)>> = vec![Vec::new(); world.size()];
+    for (bidx, r, c) in a.local.iter_nnz() {
+        let (gi, gj) = (a.local.row_ids[r], a.local.col_ids[c]);
+        let area = a.local.area_of(r, c);
+        let dest = new_row_dist.owner(gi) * new_grid.1 + new_col_dist.owner(gj);
+        outgoing[dest].push((gi, gj, a.local.store.block(bidx, area).to_vec()));
+    }
+
+    let mut b = DistMatrix::dense(
+        a.rows.clone(),
+        a.cols.clone(),
+        new_row_dist,
+        new_col_dist,
+        coords_of(world.rank(), new_grid),
+        Mode::Real,
+        Fill::Zero,
+    );
+    for (gi, gj, data) in alltoall_blocks(world, outgoing, 41) {
+        let r = b.local.row_ids.binary_search(&gi).expect("not my row block");
+        let c = b.local.col_ids.binary_search(&gj).expect("not my col block");
+        let bi = b.local.find(r, c).expect("dense pattern");
+        let area = b.local.area_of(r, c);
+        b.local.store.block_mut(bi, area).copy_from_slice(&data);
+    }
+    b
+}
+
+/// Identity matrix builder (square, real mode) — handy for tests.
+pub fn identity(
+    layout: BlockLayout,
+    row_dist: Distribution,
+    col_dist: Distribution,
+    coords: (usize, usize),
+) -> DistMatrix {
+    let mut m = DistMatrix::dense(
+        layout.clone(),
+        layout,
+        row_dist,
+        col_dist,
+        coords,
+        Mode::Real,
+        Fill::Zero,
+    );
+    let blocks: Vec<(usize, usize, usize, usize)> = m
+        .local
+        .iter_nnz()
+        .map(|(b, r, c)| (b, r, c, m.local.area_of(r, c)))
+        .collect();
+    for (b, r, c, area) in blocks {
+        let (gi, gj) = (m.local.row_ids[r], m.local.col_ids[c]);
+        if gi != gj {
+            continue;
+        }
+        let cs = m.local.col_sizes[c];
+        let rs = m.local.row_sizes[r];
+        let blk = m.local.store.block_mut(b, area);
+        for i in 0..rs.min(cs) {
+            blk[i * cs + i] = 1.0;
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{run_ranks, NetModel};
+    use crate::matrix::matrix::dense_reference;
+
+    #[test]
+    fn trace_matches_reference() {
+        let out = run_ranks(4, NetModel::aries(2), |w| {
+            let m = DistMatrix::dense_cyclic(
+                50,
+                50,
+                22,
+                (2, 2),
+                (w.rank() / 2, w.rank() % 2),
+                Mode::Real,
+                Fill::Random { seed: 5 },
+            );
+            m.trace(&w)
+        });
+        let d = dense_reference(&BlockLayout::new(50, 22), &BlockLayout::new(50, 22), 5);
+        let want: f32 = (0..50).map(|i| d[i * 50 + i]).sum();
+        for t in out {
+            assert!((t - want).abs() < 1e-3, "{t} vs {want}");
+        }
+    }
+
+    #[test]
+    fn frobenius_matches_reference() {
+        let out = run_ranks(4, NetModel::aries(2), |w| {
+            let m = DistMatrix::dense_cyclic(
+                40,
+                30,
+                16,
+                (2, 2),
+                (w.rank() / 2, w.rank() % 2),
+                Mode::Real,
+                Fill::Random { seed: 9 },
+            );
+            m.frobenius_sq(&w)
+        });
+        let d = dense_reference(&BlockLayout::new(40, 16), &BlockLayout::new(30, 16), 9);
+        let want: f32 = d.iter().map(|x| x * x).sum();
+        for f in out {
+            assert!((f - want).abs() / want < 1e-4, "{f} vs {want}");
+        }
+    }
+
+    #[test]
+    fn dot_of_self_is_frobenius() {
+        let out = run_ranks(2, NetModel::aries(2), |w| {
+            let m = DistMatrix::dense_cyclic(
+                24,
+                24,
+                8,
+                (1, 2),
+                (0, w.rank()),
+                Mode::Real,
+                Fill::Random { seed: 1 },
+            );
+            (m.dot(&m, &w), m.frobenius_sq(&w))
+        });
+        for (d, f) in out {
+            assert!((d - f).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn scale_and_add() {
+        let mut m = DistMatrix::dense_cyclic(8, 8, 4, (1, 1), (0, 0), Mode::Real, Fill::Value(1.0));
+        let other = m.clone();
+        m.scale(2.0);
+        m.add_scaled(&other, 0.5);
+        assert!(m.local.store.data().iter().all(|&x| (x - 2.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn transpose_matches_reference() {
+        let out = run_ranks(4, NetModel::aries(2), |w| {
+            let a = DistMatrix::dense_cyclic(
+                36,
+                28,
+                10,
+                (2, 2),
+                (w.rank() / 2, w.rank() % 2),
+                Mode::Real,
+                Fill::Random { seed: 11 },
+            );
+            let b = transpose(&a, &w, (2, 2));
+            let mut dense = vec![0.0f32; 28 * 36];
+            b.add_into_dense(&mut dense);
+            dense
+        });
+        let mut got = vec![0.0f32; 28 * 36];
+        for part in out {
+            for (g, p) in got.iter_mut().zip(part.iter()) {
+                *g += p;
+            }
+        }
+        let a_ref = dense_reference(&BlockLayout::new(36, 10), &BlockLayout::new(28, 10), 11);
+        for i in 0..36 {
+            for j in 0..28 {
+                assert_eq!(got[j * 36 + i], a_ref[i * 28 + j], "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn redistribute_preserves_matrix() {
+        let out = run_ranks(4, NetModel::aries(2), |w| {
+            let a = DistMatrix::dense_cyclic(
+                44,
+                44,
+                22,
+                (2, 2),
+                (w.rank() / 2, w.rank() % 2),
+                Mode::Real,
+                Fill::Random { seed: 13 },
+            );
+            // move to a 4x1 grid with a custom row distribution
+            let b = redistribute(
+                &a,
+                &w,
+                (4, 1),
+                Distribution::custom(vec![3, 1], 4),
+                Distribution::cyclic(1),
+            );
+            let mut dense = vec![0.0f32; 44 * 44];
+            b.add_into_dense(&mut dense);
+            dense
+        });
+        let mut got = vec![0.0f32; 44 * 44];
+        for part in out {
+            for (g, p) in got.iter_mut().zip(part.iter()) {
+                *g += p;
+            }
+        }
+        let want = dense_reference(&BlockLayout::new(44, 22), &BlockLayout::new(44, 22), 13);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn identity_traces_to_dim() {
+        let out = run_ranks(4, NetModel::aries(2), |w| {
+            let m = identity(
+                BlockLayout::new(30, 8),
+                Distribution::cyclic(2),
+                Distribution::cyclic(2),
+                (w.rank() / 2, w.rank() % 2),
+            );
+            m.trace(&w)
+        });
+        for t in out {
+            assert!((t - 30.0).abs() < 1e-5);
+        }
+    }
+}

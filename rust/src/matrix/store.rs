@@ -1,0 +1,141 @@
+//! Block element storage — real f32 data or phantom byte accounting.
+
+use super::MODEL_ELEM_BYTES;
+
+/// Element storage for a set of blocks.
+///
+/// `Real` keeps all blocks in one flat buffer (row-major within a block,
+/// blocks in CSR nonzero order) with per-block offsets — one allocation,
+/// cache-friendly traversal, cheap to serialize into a message.
+/// `Phantom` tracks only the element count (model mode).
+#[derive(Clone, Debug, PartialEq)]
+pub enum BlockStore {
+    Real {
+        data: Vec<f32>,
+        /// Start offset of each block in `data`; `offsets.len() == nnz`.
+        /// Block b occupies `offsets[b] .. offsets[b] + area(b)`.
+        offsets: Vec<usize>,
+    },
+    Phantom {
+        /// Total elements across all blocks.
+        elems: u64,
+    },
+}
+
+impl BlockStore {
+    /// Build real storage for blocks with the given areas, zero-filled.
+    pub fn zeros(areas: impl IntoIterator<Item = usize>) -> BlockStore {
+        let mut offsets = Vec::new();
+        let mut total = 0usize;
+        for a in areas {
+            offsets.push(total);
+            total += a;
+        }
+        BlockStore::Real {
+            data: vec![0.0; total],
+            offsets,
+        }
+    }
+
+    /// Build phantom storage covering `elems` total elements.
+    pub fn phantom(elems: u64) -> BlockStore {
+        BlockStore::Phantom { elems }
+    }
+
+    pub fn is_phantom(&self) -> bool {
+        matches!(self, BlockStore::Phantom { .. })
+    }
+
+    /// Total element count.
+    pub fn elems(&self) -> u64 {
+        match self {
+            BlockStore::Real { data, .. } => data.len() as u64,
+            BlockStore::Phantom { elems } => *elems,
+        }
+    }
+
+    /// Bytes this store represents *on the paper's hardware* (f64 for
+    /// phantom accounting, f32 for real data).
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            BlockStore::Real { data, .. } => 4 * data.len() as u64,
+            BlockStore::Phantom { elems } => MODEL_ELEM_BYTES * elems,
+        }
+    }
+
+    /// Borrow block `b` (real mode only; `area` elements from its offset).
+    pub fn block(&self, b: usize, area: usize) -> &[f32] {
+        match self {
+            BlockStore::Real { data, offsets } => &data[offsets[b]..offsets[b] + area],
+            BlockStore::Phantom { .. } => panic!("block access on phantom store"),
+        }
+    }
+
+    /// Mutable borrow of block `b`.
+    pub fn block_mut(&mut self, b: usize, area: usize) -> &mut [f32] {
+        match self {
+            BlockStore::Real { data, offsets } => {
+                &mut data[offsets[b]..offsets[b] + area]
+            }
+            BlockStore::Phantom { .. } => panic!("block access on phantom store"),
+        }
+    }
+
+    /// The whole flat buffer (real mode).
+    pub fn data(&self) -> &[f32] {
+        match self {
+            BlockStore::Real { data, .. } => data,
+            BlockStore::Phantom { .. } => panic!("data access on phantom store"),
+        }
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        match self {
+            BlockStore::Real { data, .. } => data,
+            BlockStore::Phantom { .. } => panic!("data access on phantom store"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_layout() {
+        let s = BlockStore::zeros([4, 6, 2]);
+        assert_eq!(s.elems(), 12);
+        match &s {
+            BlockStore::Real { offsets, .. } => assert_eq!(offsets, &vec![0, 4, 10]),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn block_views_disjoint() {
+        let mut s = BlockStore::zeros([2, 3]);
+        s.block_mut(0, 2).copy_from_slice(&[1.0, 2.0]);
+        s.block_mut(1, 3).copy_from_slice(&[3.0, 4.0, 5.0]);
+        assert_eq!(s.block(0, 2), &[1.0, 2.0]);
+        assert_eq!(s.block(1, 3), &[3.0, 4.0, 5.0]);
+        assert_eq!(s.data(), &[1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn phantom_bytes_are_f64() {
+        let s = BlockStore::phantom(100);
+        assert_eq!(s.wire_bytes(), 800);
+        assert!(s.is_phantom());
+    }
+
+    #[test]
+    fn real_bytes_are_f32() {
+        assert_eq!(BlockStore::zeros([10]).wire_bytes(), 40);
+    }
+
+    #[test]
+    #[should_panic(expected = "phantom")]
+    fn phantom_block_access_panics() {
+        BlockStore::phantom(10).block(0, 4);
+    }
+}

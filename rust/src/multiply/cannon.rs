@@ -1,0 +1,594 @@
+//! Cannon's algorithm (generalized to rectangular grids) — the paper's
+//! data-exchange scheme for general matrix shapes, O(1/√P) communicated
+//! data per rank on square grids.
+//!
+//! Control flow per rank (see [`super::vgrid`] for the topology):
+//! 1. extract the initial A/B virtual panels from the matrices,
+//! 2. **skew**: A panels shift along grid rows, B panels along grid
+//!    columns, to their Cannon start positions,
+//! 3. `L` **ticks**: each hosted slot multiplies its current
+//!    A(i,g)·B(g,j) into C(i,j) through the [`LocalEngine`] (blocked or
+//!    densified), then all A panels shift one column left and all B
+//!    panels one row up (`MPI_Sendrecv_replace` analog, asynchronous
+//!    under the virtual clock so compute overlaps the shift),
+//! 4. the engine finalizes (undensify, device drain) and the C panels
+//!    assemble into the result matrix — whose blocks are exactly this
+//!    rank's cyclic share, so no final communication is needed.
+
+use std::collections::BTreeMap;
+
+use crate::backend::gpu_sim::DeviceOom;
+use crate::dist::{Grid2D, Payload};
+use crate::matrix::{DistMatrix, Distribution, LocalCsr, Mode};
+
+use super::engine::LocalEngine;
+use super::vgrid::VGrid;
+
+/// Panel key: (virtual row, group) for A; (group, virtual col) for B.
+type Key = (usize, usize);
+
+/// Multiply `C = A · B` with generalized Cannon. Collective over the
+/// grid; returns this rank's C.
+pub fn multiply_cannon(
+    grid: &Grid2D,
+    a: &DistMatrix,
+    b: &DistMatrix,
+    engine: &mut LocalEngine,
+) -> Result<DistMatrix, DeviceOom> {
+    assert_eq!(
+        a.cols.nblocks, b.rows.nblocks,
+        "inner block dimensions must match"
+    );
+    assert_eq!(a.mode, b.mode);
+    check_cyclic(a, grid);
+    check_cyclic(b, grid);
+    let (r, c) = grid.coords();
+    let vg = VGrid::new(grid.rows, grid.cols, r, c);
+    let mode = a.mode;
+
+    // ---- initial panels + skew ------------------------------------------
+    let mut a_panels: BTreeMap<Key, LocalCsr> = vg
+        .a_initial()
+        .into_iter()
+        .map(|(i, g)| ((i, g), extract_panel(a, &vg, i, g, true)))
+        .collect();
+    let mut b_panels: BTreeMap<Key, LocalCsr> = vg
+        .b_initial()
+        .into_iter()
+        .map(|(g, j)| ((g, j), extract_panel(b, &vg, g, j, false)))
+        .collect();
+
+    // skew A along the grid row
+    {
+        let sends: Vec<(usize, Key)> = a_panels
+            .keys()
+            .map(|&(i, g)| (vg.a_skew_col(i, g), (i, g)))
+            .collect();
+        let mut recvs: Vec<(usize, Key)> = Vec::new();
+        for i in vg.vrows() {
+            for g in 0..vg.l {
+                if vg.a_skew_col(i, g) == c {
+                    recvs.push((g % vg.pc, (i, g)));
+                }
+            }
+        }
+        a_panels = exchange(
+            &grid.row,
+            a_panels,
+            &sends,
+            &recvs,
+            |key| panel_meta(a, &vg, key.0, key.1, true),
+            10,
+            mode,
+        );
+    }
+    // skew B along the grid col
+    {
+        let sends: Vec<(usize, Key)> = b_panels
+            .keys()
+            .map(|&(g, j)| (vg.b_skew_row(g, j), (g, j)))
+            .collect();
+        let mut recvs: Vec<(usize, Key)> = Vec::new();
+        for j in vg.vcols() {
+            for g in 0..vg.l {
+                if vg.b_skew_row(g, j) == r {
+                    recvs.push((g % vg.pr, (g, j)));
+                }
+            }
+        }
+        b_panels = exchange(
+            &grid.col,
+            b_panels,
+            &sends,
+            &recvs,
+            |key| panel_meta(b, &vg, key.0, key.1, false),
+            11,
+            mode,
+        );
+    }
+
+    // ---- C slots ----------------------------------------------------------
+    let slots = vg.slots();
+    let c_panels: Vec<LocalCsr> = slots
+        .iter()
+        .map(|&(i, j)| {
+            let rows = vg.blocks_of(i, a.rows.nblocks);
+            let cols = vg.blocks_of(j, b.cols.nblocks);
+            let rs: Vec<usize> = rows.iter().map(|&x| a.rows.block_size(x)).collect();
+            let cs: Vec<usize> = cols.iter().map(|&x| b.cols.block_size(x)).collect();
+            match mode {
+                Mode::Real => LocalCsr::dense(rows, cols, rs, cs),
+                Mode::Model => LocalCsr::dense_phantom(rows, cols, rs, cs),
+            }
+        })
+        .collect();
+    engine.begin(&grid.world, c_panels)?;
+
+    // ---- ticks -------------------------------------------------------------
+    for s in 0..vg.l {
+        for (idx, &(i, j)) in slots.iter().enumerate() {
+            let g = vg.group_at(i, j, s);
+            let ap = &a_panels[&(i, g)];
+            let bp = &b_panels[&(g, j)];
+            engine.tick(&grid.world, idx, ap, bp)?;
+        }
+        if s + 1 < vg.l {
+            // shift all A panels one column left, B panels one row up
+            if vg.pc > 1 {
+                let next_keys: Vec<Key> = {
+                    let mut v: Vec<Key> = slots
+                        .iter()
+                        .map(|&(i, j)| (i, vg.group_at(i, j, s + 1)))
+                        .collect();
+                    v.sort_unstable();
+                    v
+                };
+                a_panels = shift(
+                    &grid.world,
+                    grid.left(),
+                    grid.right(),
+                    a_panels,
+                    &next_keys,
+                    |key| panel_meta(a, &vg, key.0, key.1, true),
+                    12,
+                    mode,
+                );
+            }
+            if vg.pr > 1 {
+                let next_keys: Vec<Key> = {
+                    let mut v: Vec<Key> = slots
+                        .iter()
+                        .map(|&(i, j)| (vg.group_at(i, j, s + 1), j))
+                        .collect();
+                    v.sort_unstable();
+                    v
+                };
+                b_panels = shift(
+                    &grid.world,
+                    grid.up(),
+                    grid.down(),
+                    b_panels,
+                    &next_keys,
+                    |key| panel_meta(b, &vg, key.0, key.1, false),
+                    13,
+                    mode,
+                );
+            }
+        }
+    }
+
+    // ---- assemble C ---------------------------------------------------------
+    let out_panels = engine.finish(&grid.world);
+    let mut cmat = DistMatrix::dense(
+        a.rows.clone(),
+        b.cols.clone(),
+        Distribution::cyclic(grid.rows),
+        Distribution::cyclic(grid.cols),
+        (r, c),
+        mode,
+        crate::matrix::matrix::Fill::Zero,
+    );
+    if mode == Mode::Real {
+        for panel in &out_panels {
+            for (pb, pr_, pc_) in panel.iter_nnz() {
+                let (gi, gj) = (panel.row_ids[pr_], panel.col_ids[pc_]);
+                let area = panel.area_of(pr_, pc_);
+                let lr = cmat.local.row_ids.binary_search(&gi).expect("C row");
+                let lc = cmat.local.col_ids.binary_search(&gj).expect("C col");
+                let bi = cmat.local.find(lr, lc).expect("dense C");
+                cmat.local
+                    .store
+                    .block_mut(bi, area)
+                    .copy_from_slice(panel.store.block(pb, area));
+            }
+        }
+    }
+    Ok(cmat)
+}
+
+fn check_cyclic(m: &DistMatrix, grid: &Grid2D) {
+    assert!(
+        matches!(m.row_dist, Distribution::Cyclic { nproc } if nproc == grid.rows),
+        "Cannon needs cyclic row distribution over the grid"
+    );
+    assert!(
+        matches!(m.col_dist, Distribution::Cyclic { nproc } if nproc == grid.cols),
+        "Cannon needs cyclic col distribution over the grid"
+    );
+}
+
+/// Block-id metadata of panel (x, y): A panels are (vrow, group), B
+/// panels (group, vcol); `is_a` selects which dims come from which layout.
+fn panel_meta(
+    m: &DistMatrix,
+    vg: &VGrid,
+    x: usize,
+    y: usize,
+    _is_a: bool,
+) -> (Vec<usize>, Vec<usize>, Vec<usize>, Vec<usize>) {
+    let rows = vg.blocks_of(x, m.rows.nblocks);
+    let cols = vg.blocks_of(y, m.cols.nblocks);
+    let rs: Vec<usize> = rows.iter().map(|&b| m.rows.block_size(b)).collect();
+    let cs: Vec<usize> = cols.iter().map(|&b| m.cols.block_size(b)).collect();
+    (rows, cols, rs, cs)
+}
+
+/// Extract panel (x, y) from the matrix's local blocks (they are local by
+/// construction of the initial panel sets). The panel inherits the
+/// matrix's sparsity pattern — absent blocks stay absent, so the blocked
+/// engine skips them and the densified copies zero-fill them.
+fn extract_panel(m: &DistMatrix, vg: &VGrid, x: usize, y: usize, is_a: bool) -> LocalCsr {
+    let (rows, cols, rs, cs) = panel_meta(m, vg, x, y, is_a);
+    match m.mode {
+        Mode::Model => LocalCsr::dense_phantom(rows, cols, rs, cs),
+        Mode::Real => {
+            // restrict the matrix's local pattern to this panel
+            let mut nonzeros = Vec::new();
+            for (pr_, &gi) in rows.iter().enumerate() {
+                let lr = m.local.row_ids.binary_search(&gi).expect("panel row local");
+                for (pc_, &gj) in cols.iter().enumerate() {
+                    let lc = m.local.col_ids.binary_search(&gj).expect("panel col local");
+                    if m.local.find(lr, lc).is_some() {
+                        nonzeros.push((pr_, pc_));
+                    }
+                }
+            }
+            let mut p = LocalCsr::from_pattern(rows, cols, rs, cs, &nonzeros);
+            // copy blocks directly (no intermediate allocation — this is
+            // a per-tick hot path at large panel counts)
+            for (pb, pr_, pc_) in p.iter_nnz().collect::<Vec<_>>() {
+                let (gi, gj) = (p.row_ids[pr_], p.col_ids[pc_]);
+                let lr = m.local.row_ids.binary_search(&gi).unwrap();
+                let lc = m.local.col_ids.binary_search(&gj).unwrap();
+                let mb = m.local.find(lr, lc).unwrap();
+                let area = p.area_of(pr_, pc_);
+                let src = m.local.store.block(mb, area);
+                p.store.block_mut(pb, area).copy_from_slice(src);
+            }
+            p
+        }
+    }
+}
+
+/// Generic skew exchange over a 1-D communicator: `sends` = (dest local
+/// rank, key) for every held panel; `recvs` = (src local rank, key) for
+/// every expected panel. Panels travel concatenated per (src, dst) pair,
+/// ordered by key.
+fn exchange<F>(
+    comm: &crate::dist::CommView,
+    mut held: BTreeMap<Key, LocalCsr>,
+    sends: &[(usize, Key)],
+    recvs: &[(usize, Key)],
+    meta: F,
+    tag: u64,
+    mode: Mode,
+) -> BTreeMap<Key, LocalCsr>
+where
+    F: Fn(&Key) -> (Vec<usize>, Vec<usize>, Vec<usize>, Vec<usize>),
+{
+    let me = comm.rank();
+    let mut out: BTreeMap<Key, LocalCsr> = BTreeMap::new();
+
+    // group sends by destination (sorted keys within each)
+    let mut by_dst: BTreeMap<usize, Vec<Key>> = BTreeMap::new();
+    for &(d, k) in sends {
+        by_dst.entry(d).or_default().push(k);
+    }
+    for keys in by_dst.values_mut() {
+        keys.sort_unstable();
+    }
+    // group recvs by source
+    let mut by_src: BTreeMap<usize, Vec<Key>> = BTreeMap::new();
+    for &(s, k) in recvs {
+        by_src.entry(s).or_default().push(k);
+    }
+    for keys in by_src.values_mut() {
+        keys.sort_unstable();
+    }
+
+    // local keep
+    if let Some(keys) = by_dst.remove(&me) {
+        for k in keys {
+            let p = held.remove(&k).expect("held panel");
+            out.insert(k, p);
+        }
+        by_src.remove(&me);
+    }
+    // sends first (non-blocking), then receives
+    for (&dst, keys) in &by_dst {
+        comm.send(dst, tag, pack(&mut held, keys, mode));
+    }
+    for (&src, keys) in &by_src {
+        let payload = comm.recv(src, tag);
+        unpack(payload, keys, &meta, mode, &mut out);
+    }
+    out
+}
+
+/// One-tick shift: send everything to `dst`, receive the next panel set
+/// from `src` (world-rank addressed).
+#[allow(clippy::too_many_arguments)]
+fn shift<F>(
+    world: &crate::dist::CommView,
+    dst: usize,
+    src: usize,
+    held: BTreeMap<Key, LocalCsr>,
+    next_keys: &[Key],
+    meta: F,
+    tag: u64,
+    mode: Mode,
+) -> BTreeMap<Key, LocalCsr>
+where
+    F: Fn(&Key) -> (Vec<usize>, Vec<usize>, Vec<usize>, Vec<usize>),
+{
+    let keys: Vec<Key> = held.keys().copied().collect();
+    let mut held = held;
+    let payload = pack(&mut held, &keys, mode);
+    let received = world.sendrecv(dst, src, tag, payload);
+    let mut out = BTreeMap::new();
+    unpack(received, next_keys, &meta, mode, &mut out);
+    out
+}
+
+fn pack(held: &mut BTreeMap<Key, LocalCsr>, keys: &[Key], mode: Mode) -> Payload {
+    match mode {
+        Mode::Model => {
+            let bytes: u64 = keys
+                .iter()
+                .map(|k| held.remove(k).expect("held panel").store.wire_bytes())
+                .sum();
+            Payload::Phantom { bytes }
+        }
+        Mode::Real => {
+            // wire format per panel: [nnz, (local row, local col)*nnz] in
+            // the index stream, block data concatenated in CSR order —
+            // sparse panels travel with their pattern
+            let mut index = Vec::new();
+            let mut data = Vec::new();
+            for k in keys {
+                let p = held.remove(k).expect("held panel");
+                index.push(p.nnz() as i64);
+                for (_, r, c) in p.iter_nnz() {
+                    index.push(r as i64);
+                    index.push(c as i64);
+                }
+                data.extend_from_slice(p.store.data());
+            }
+            Payload::Blocks { index, data }
+        }
+    }
+}
+
+fn unpack<F>(
+    payload: Payload,
+    keys: &[Key],
+    meta: &F,
+    mode: Mode,
+    out: &mut BTreeMap<Key, LocalCsr>,
+) where
+    F: Fn(&Key) -> (Vec<usize>, Vec<usize>, Vec<usize>, Vec<usize>),
+{
+    match mode {
+        Mode::Model => {
+            debug_assert!(payload.is_phantom() || payload == Payload::Empty);
+            for k in keys {
+                let (rows, cols, rs, cs) = meta(k);
+                out.insert(*k, LocalCsr::dense_phantom(rows, cols, rs, cs));
+            }
+        }
+        Mode::Real => {
+            let (index, data) = payload.into_blocks();
+            let mut ix = 0usize;
+            let mut off = 0usize;
+            for k in keys {
+                let (rows, cols, rs, cs) = meta(k);
+                let nnz = index[ix] as usize;
+                ix += 1;
+                let mut nonzeros = Vec::with_capacity(nnz);
+                for _ in 0..nnz {
+                    nonzeros.push((index[ix] as usize, index[ix + 1] as usize));
+                    ix += 2;
+                }
+                let mut p = LocalCsr::from_pattern(rows, cols, rs, cs, &nonzeros);
+                let elems: usize = p
+                    .iter_nnz()
+                    .map(|(_, r, c)| p.area_of(r, c))
+                    .sum();
+                p.store
+                    .data_mut()
+                    .copy_from_slice(&data[off..off + elems]);
+                off += elems;
+                out.insert(*k, p);
+            }
+            debug_assert_eq!(off, data.len(), "panel split must consume message");
+            debug_assert_eq!(ix, index.len(), "index split must consume message");
+        }
+    }
+}
+
+/// Serialize helper for tests: total elements a panel set holds.
+pub fn panels_elems(panels: &BTreeMap<Key, LocalCsr>) -> u64 {
+    panels.values().map(|p| p.elems()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{run_ranks, NetModel};
+    use crate::matrix::matrix::{dense_reference, Fill};
+    use crate::matrix::BlockLayout;
+    use crate::multiply::engine::EngineOpts;
+    use crate::perfmodel::PerfModel;
+    use crate::util::prop::assert_allclose;
+
+    /// Full pipeline on (pr × pc) ranks; checks C against the dense
+    /// reference product.
+    fn cannon_case(
+        pr: usize,
+        pc: usize,
+        m: usize,
+        n: usize,
+        k: usize,
+        block: usize,
+        threads: usize,
+        densify: bool,
+    ) {
+        let p = pr * pc;
+        let out = run_ranks(p, NetModel::aries(2), move |world| {
+            let grid = Grid2D::new(world, pr, pc);
+            let coords = grid.coords();
+            let a = DistMatrix::dense(
+                BlockLayout::new(m, block),
+                BlockLayout::new(k, block),
+                Distribution::cyclic(pr),
+                Distribution::cyclic(pc),
+                coords,
+                Mode::Real,
+                Fill::Random { seed: 21 },
+            );
+            let b = DistMatrix::dense(
+                BlockLayout::new(k, block),
+                BlockLayout::new(n, block),
+                Distribution::cyclic(pr),
+                Distribution::cyclic(pc),
+                coords,
+                Mode::Real,
+                Fill::Random { seed: 22 },
+            );
+            let mut engine = LocalEngine::new(
+                EngineOpts {
+                    threads,
+                    densify,
+                    stack_cap: 64,
+                    cpu_coexec: true,
+                },
+                Mode::Real,
+                PerfModel::default(),
+                None,
+                1,
+            );
+            let c = multiply_cannon(&grid, &a, &b, &mut engine).unwrap();
+            let mut dense = vec![0.0f32; m * n];
+            c.add_into_dense(&mut dense);
+            dense
+        });
+        let mut got = vec![0.0f32; m * n];
+        for part in out {
+            for (g, x) in got.iter_mut().zip(part.iter()) {
+                *g += x;
+            }
+        }
+        // reference
+        let ar = dense_reference(&BlockLayout::new(m, block), &BlockLayout::new(k, block), 21);
+        let br = dense_reference(&BlockLayout::new(k, block), &BlockLayout::new(n, block), 22);
+        let mut want = vec![0.0f32; m * n];
+        crate::backend::smm_cpu::gemm_blocked(m, n, k, &ar, &br, &mut want);
+        assert_allclose(&got, &want, 2e-3, 2e-3).unwrap_or_else(|e| {
+            panic!("cannon {pr}x{pc} m{m} n{n} k{k} b{block} t{threads} densify={densify}: {e}")
+        });
+    }
+
+    #[test]
+    fn square_grid_blocked() {
+        cannon_case(2, 2, 24, 24, 24, 4, 1, false);
+    }
+
+    #[test]
+    fn square_grid_densified() {
+        cannon_case(2, 2, 24, 24, 24, 4, 2, true);
+    }
+
+    #[test]
+    fn rectangular_grid_blocked() {
+        cannon_case(2, 3, 36, 24, 30, 5, 1, false);
+    }
+
+    #[test]
+    fn rectangular_grid_densified() {
+        cannon_case(3, 2, 30, 36, 24, 4, 2, true);
+    }
+
+    #[test]
+    fn single_rank() {
+        cannon_case(1, 1, 16, 16, 16, 4, 2, true);
+    }
+
+    #[test]
+    fn single_row_grid() {
+        cannon_case(1, 3, 18, 18, 18, 3, 1, false);
+    }
+
+    #[test]
+    fn ragged_blocks() {
+        // 26 = 2*8 + 10? no: blocks of 8 → 8,8,8,2 ragged tail
+        cannon_case(2, 2, 26, 22, 18, 8, 2, false);
+        cannon_case(2, 2, 26, 22, 18, 8, 2, true);
+    }
+
+    #[test]
+    fn rectangular_shapes() {
+        // tall-skinny-ish shape through Cannon (correctness, not perf)
+        cannon_case(2, 2, 8, 8, 64, 4, 1, false);
+    }
+
+    #[test]
+    fn model_mode_runs_at_scale_and_counts() {
+        // paper-scale-ish in model mode: no data, sane counters
+        let out = run_ranks(4, NetModel::aries(4), |world| {
+            let grid = Grid2D::new(world, 2, 2);
+            let coords = grid.coords();
+            let mk = |mdim, ndim| {
+                DistMatrix::dense(
+                    BlockLayout::new(mdim, 22),
+                    BlockLayout::new(ndim, 22),
+                    Distribution::cyclic(2),
+                    Distribution::cyclic(2),
+                    coords,
+                    Mode::Model,
+                    Fill::Zero,
+                )
+            };
+            let a = mk(2816, 2816);
+            let b = mk(2816, 2816);
+            let mut engine = LocalEngine::new(
+                EngineOpts {
+                    threads: 3,
+                    densify: false,
+                    ..Default::default()
+                },
+                Mode::Model,
+                PerfModel::default(),
+                None,
+                4,
+            );
+            let _c = multiply_cannon(&grid, &a, &b, &mut engine).unwrap();
+            (engine.stats.clone(), grid.world.now())
+        });
+        let nb = 2816usize / 22; // 128 blocks per dim
+        let total_mults: u64 = out.iter().map(|(s, _)| s.block_mults).sum();
+        assert_eq!(total_mults, (nb * nb * nb) as u64);
+        for (_, t) in &out {
+            assert!(*t > 0.0);
+        }
+    }
+}

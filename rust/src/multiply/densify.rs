@@ -1,0 +1,195 @@
+//! Densification (§III — the paper's contribution).
+//!
+//! When inputs are dense, the small blocks each thread owns are coalesced
+//! into one large dense block: for an (M × K)·(K × N) multiply on a
+//! square grid of P̃² ranks with t threads, the densified blocks are
+//! `M/(t·P̃) × K/P̃` (A, per thread) and `K/P̃ × N/P̃` (B, per rank); C is
+//! densified too and undensified once at the end of the multiplication.
+//! Batches collapse to one GEMM per thread, executed through the cuBLAS
+//! analog.
+//!
+//! This module implements the copies: panel (blocked CSR) → dense
+//! row-major buffer and back, with per-thread contiguous block-row
+//! partitions, plus the byte accounting model mode charges for them.
+
+use crate::matrix::LocalCsr;
+use crate::util::even_chunk;
+
+/// Contiguous block-row ranges per thread (the static thread partition).
+pub fn thread_row_ranges(nrows: usize, threads: usize) -> Vec<(usize, usize)> {
+    (0..threads).map(|t| even_chunk(nrows, threads, t)).collect()
+}
+
+/// Element dimensions of the densified block of rows `[r0, r0+len)`.
+pub fn dense_dims(panel: &LocalCsr, r0: usize, len: usize) -> (usize, usize) {
+    let rows: usize = panel.row_sizes[r0..r0 + len].iter().sum();
+    let cols: usize = panel.col_sizes.iter().sum();
+    (rows, cols)
+}
+
+/// Densify block rows `[r0, r0+len)` of a dense panel into `out`
+/// (row-major, dims from [`dense_dims`]). Returns bytes copied.
+pub fn densify_rows(panel: &LocalCsr, r0: usize, len: usize, out: &mut Vec<f32>) -> u64 {
+    let (rows, cols) = dense_dims(panel, r0, len);
+    out.clear();
+    out.resize(rows * cols, 0.0);
+    // element offsets of each local block row / col
+    let mut col_off = vec![0usize; panel.col_sizes.len()];
+    for c in 1..panel.col_sizes.len() {
+        col_off[c] = col_off[c - 1] + panel.col_sizes[c - 1];
+    }
+    let mut row_base = 0usize;
+    let mut bytes = 0u64;
+    for r in r0..r0 + len {
+        let rs = panel.row_sizes[r];
+        for b in panel.row_ptr[r]..panel.row_ptr[r + 1] {
+            let c = panel.col_idx[b];
+            let cs = panel.col_sizes[c];
+            let blk = panel.store.block(b, rs * cs);
+            let c0 = col_off[c];
+            for i in 0..rs {
+                let dst = (row_base + i) * cols + c0;
+                out[dst..dst + cs].copy_from_slice(&blk[i * cs..(i + 1) * cs]);
+            }
+            bytes += (rs * cs) as u64 * 4;
+        }
+        row_base += rs;
+    }
+    bytes
+}
+
+/// Densify the whole panel (all block rows) — the per-rank B block.
+pub fn densify_all(panel: &LocalCsr, out: &mut Vec<f32>) -> u64 {
+    densify_rows(panel, 0, panel.nrows(), out)
+}
+
+/// Undensify: scatter a dense buffer for block rows `[r0, r0+len)` back
+/// into the panel's blocks. Returns bytes copied.
+pub fn undensify_rows(panel: &mut LocalCsr, r0: usize, len: usize, dense: &[f32]) -> u64 {
+    let (rows, cols) = dense_dims(panel, r0, len);
+    assert_eq!(dense.len(), rows * cols, "dense buffer dims");
+    let mut col_off = vec![0usize; panel.col_sizes.len()];
+    for c in 1..panel.col_sizes.len() {
+        col_off[c] = col_off[c - 1] + panel.col_sizes[c - 1];
+    }
+    let mut row_base = 0usize;
+    let mut bytes = 0u64;
+    for r in r0..r0 + len {
+        let rs = panel.row_sizes[r];
+        for b in panel.row_ptr[r]..panel.row_ptr[r + 1] {
+            let c = panel.col_idx[b];
+            let cs = panel.col_sizes[c];
+            let c0 = col_off[c];
+            let blk = panel.store.block_mut(b, rs * cs);
+            for i in 0..rs {
+                let src = (row_base + i) * cols + c0;
+                blk[i * cs..(i + 1) * cs].copy_from_slice(&dense[src..src + cs]);
+            }
+            bytes += (rs * cs) as u64 * 4;
+        }
+        row_base += rs;
+    }
+    bytes
+}
+
+/// Model-mode byte accounting for densifying rows `[r0, r0+len)` (f64
+/// elements, as the paper's precision).
+pub fn densify_bytes_model(panel: &LocalCsr, r0: usize, len: usize) -> u64 {
+    let (rows, cols) = dense_dims(panel, r0, len);
+    (rows * cols) as u64 * crate::matrix::MODEL_ELEM_BYTES
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::matrix::block_rng;
+    use crate::util::prop::check;
+
+    /// A dense panel with random data, ragged tails included.
+    fn panel(rows: &[usize], cols: &[usize], seed: u64) -> LocalCsr {
+        let mut p = LocalCsr::dense(
+            (0..rows.len()).collect(),
+            (0..cols.len()).collect(),
+            rows.to_vec(),
+            cols.to_vec(),
+        );
+        let blocks: Vec<(usize, usize, usize, usize)> = p
+            .iter_nnz()
+            .map(|(b, r, c)| (b, r, c, p.area_of(r, c)))
+            .collect();
+        for (b, r, c, area) in blocks {
+            let mut rng = block_rng(seed, r, c);
+            for x in p.store.block_mut(b, area) {
+                *x = rng.next_f32_sym();
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn densify_undensify_roundtrip() {
+        let mut p = panel(&[22, 22, 6], &[22, 10], 1);
+        let orig = p.store.data().to_vec();
+        let mut dense = Vec::new();
+        let bytes = densify_all(&p, &mut dense);
+        assert_eq!(bytes, orig.len() as u64 * 4);
+        // wipe and restore
+        p.store.data_mut().fill(0.0);
+        undensify_rows(&mut p, 0, 3, &dense);
+        assert_eq!(p.store.data(), &orig[..]);
+    }
+
+    #[test]
+    fn dense_layout_matches_elementwise() {
+        // densified (i,j) element == block element it came from
+        let p = panel(&[2, 3], &[2, 2], 2);
+        let mut dense = Vec::new();
+        densify_all(&p, &mut dense);
+        // block (1,1) element (2,1) lives at dense (2+2, 2+1)
+        let b = p.find(1, 1).unwrap();
+        let blk = p.store.block(b, 6);
+        assert_eq!(dense[4 * 4 + 3], blk[2 * 2 + 1]);
+    }
+
+    #[test]
+    fn per_thread_ranges_cover() {
+        let ranges = thread_row_ranges(7, 3);
+        assert_eq!(ranges, vec![(0, 3), (3, 2), (5, 2)]);
+        let ranges = thread_row_ranges(2, 4);
+        assert_eq!(ranges.iter().map(|r| r.1).sum::<usize>(), 2);
+    }
+
+    #[test]
+    fn threaded_densify_roundtrip_property() {
+        check("densify/undensify per thread", 20, |rng, size| {
+            let nr = rng.range(1, size.0.max(2));
+            let nc = rng.range(1, size.0.max(2));
+            let rows: Vec<usize> = (0..nr).map(|_| rng.range(1, 9)).collect();
+            let cols: Vec<usize> = (0..nc).map(|_| rng.range(1, 9)).collect();
+            let mut p = panel(&rows, &cols, rng.next_u64());
+            let orig = p.store.data().to_vec();
+            let threads = rng.range(1, 4);
+            let ranges = thread_row_ranges(nr, threads);
+            let mut buffers = Vec::new();
+            for &(r0, len) in &ranges {
+                let mut d = Vec::new();
+                densify_rows(&p, r0, len, &mut d);
+                buffers.push(d);
+            }
+            p.store.data_mut().fill(0.0);
+            for (&(r0, len), d) in ranges.iter().zip(&buffers) {
+                undensify_rows(&mut p, r0, len, d);
+            }
+            if p.store.data() != &orig[..] {
+                return Err("roundtrip mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn model_bytes_use_f64() {
+        let p = LocalCsr::dense_phantom(vec![0], vec![0], vec![10], vec![10]);
+        assert_eq!(densify_bytes_model(&p, 0, 1), 800);
+    }
+}

@@ -1,0 +1,624 @@
+//! The local multiplication engine (Generation → Scheduler → execution).
+//!
+//! One [`LocalEngine`] lives per rank per multiplication and processes the
+//! per-tick (A panel, B panel) pairs the data-exchange drivers (Cannon /
+//! tall-and-skinny) deliver, accumulating into per-slot C panels.
+//!
+//! Two execution paths, selected by [`EngineOpts::densify`]:
+//!
+//! * **blocked** — Generation emits ≤30 000-entry stacks in traversal
+//!   order; the Scheduler walks them in static thread assignment, sending
+//!   each to the GPU unless the GPU pipeline is projected to finish later
+//!   than the thread's own CPU lane would (the paper's "GPU fully loaded →
+//!   compute on CPU too" rule);
+//! * **densified** (§III) — per-thread A row-ranges and the whole B panel
+//!   are coalesced into dense buffers (copies charged to the thread
+//!   lanes), one GEMM per thread goes to the cuBLAS-analog, C stays
+//!   densified on the device across ticks and is undensified once at
+//!   [`LocalEngine::finish`].
+//!
+//! Time lives on three interacting virtual clocks: the rank's comm clock
+//! (advanced by waits), per-thread CPU lanes, and the GPU pipeline; the
+//! final sync takes the max. Real mode executes actual numerics through
+//! the same calls.
+
+use std::rc::Rc;
+
+use crate::backend::gpu_sim::{DeviceOom, GpuSim};
+use crate::backend::stack::StackEntries;
+use crate::backend::smm_cpu;
+use crate::dist::CommView;
+use crate::matrix::{BlockStore, LocalCsr, Mode, MODEL_ELEM_BYTES, REAL_ELEM_BYTES};
+use crate::perfmodel::PerfModel;
+use crate::runtime::Runtime;
+use crate::util::stats::MultiplyStats;
+
+use super::densify;
+use super::generation;
+
+/// Engine configuration (per multiplication).
+#[derive(Clone, Debug)]
+pub struct EngineOpts {
+    /// OpenMP-analog threads per rank (the grid config's second factor).
+    pub threads: usize,
+    /// §III densification on/off.
+    pub densify: bool,
+    /// Stack capacity (30 000 in the paper).
+    pub stack_cap: usize,
+    /// Allow CPU co-execution of stacks when the GPU is backlogged.
+    pub cpu_coexec: bool,
+}
+
+impl Default for EngineOpts {
+    fn default() -> Self {
+        EngineOpts {
+            threads: 1,
+            densify: true,
+            stack_cap: crate::backend::stack::STACK_CAP,
+            cpu_coexec: true,
+        }
+    }
+}
+
+/// Per-slot C accumulation state.
+struct CSlot {
+    /// Blocked C panel (the final output form).
+    panel: LocalCsr,
+    /// Densified per-thread C buffers (real mode, densify on).
+    dense_c: Vec<Vec<f32>>,
+    /// Thread partition of the slot's block rows.
+    ranges: Vec<(usize, usize)>,
+    /// Device bytes reserved for resident C.
+    c_bytes: u64,
+}
+
+/// The per-rank local engine.
+pub struct LocalEngine {
+    pub opts: EngineOpts,
+    pub mode: Mode,
+    pub gpu: GpuSim,
+    /// Per-thread CPU lane clocks (absolute virtual seconds).
+    pub lane_free: Vec<f64>,
+    pub stats: MultiplyStats,
+    slots: Vec<CSlot>,
+    // scratch (pinned-host analogs, reused across ticks)
+    dense_a: Vec<f32>,
+    dense_b: Vec<f32>,
+}
+
+impl LocalEngine {
+    pub fn new(
+        opts: EngineOpts,
+        mode: Mode,
+        perf: PerfModel,
+        runtime: Option<Rc<Runtime>>,
+        gpu_share: usize,
+    ) -> LocalEngine {
+        let threads = opts.threads.max(1);
+        LocalEngine {
+            opts,
+            mode,
+            gpu: GpuSim::new(perf, gpu_share, runtime),
+            lane_free: vec![0.0; threads],
+            stats: MultiplyStats::default(),
+            slots: Vec::new(),
+            dense_a: Vec::new(),
+            dense_b: Vec::new(),
+        }
+    }
+
+    fn elem_bytes(&self) -> u64 {
+        match self.mode {
+            Mode::Real => REAL_ELEM_BYTES,
+            Mode::Model => MODEL_ELEM_BYTES,
+        }
+    }
+
+    fn byte_scale(&self) -> f64 {
+        self.elem_bytes() as f64 / REAL_ELEM_BYTES as f64
+    }
+
+    /// Install the C panels (zeroed) and, when densifying, set up the
+    /// device-resident densified C state.
+    pub fn begin(&mut self, comm: &CommView, c_panels: Vec<LocalCsr>) -> Result<(), DeviceOom> {
+        let threads = self.opts.threads.max(1);
+        self.lane_free = vec![comm.now(); threads];
+        self.slots.clear();
+        for panel in c_panels {
+            let ranges = densify::thread_row_ranges(panel.nrows(), threads);
+            let mut dense_c = Vec::new();
+            // C accumulates device-resident in both paths (DBCSR pools)
+            let c_bytes = panel.elems() * self.elem_bytes();
+            self.gpu.reserve(c_bytes)?;
+            if self.opts.densify {
+                // densify C once (initial upload); zero C → zero buffers
+                if self.mode == Mode::Real {
+                    for &(r0, len) in &ranges {
+                        let (rows, cols) = densify::dense_dims(&panel, r0, len);
+                        dense_c.push(vec![0.0f32; rows * cols]);
+                    }
+                }
+                // charge the upload
+                self.gpu.run_transfer(comm.now(), c_bytes, 0);
+            }
+            self.slots.push(CSlot {
+                panel,
+                dense_c,
+                ranges,
+                c_bytes,
+            });
+        }
+        Ok(())
+    }
+
+    /// Process one tick's (A panel, B panel) pair into slot `slot`.
+    pub fn tick(
+        &mut self,
+        comm: &CommView,
+        slot: usize,
+        a: &LocalCsr,
+        b: &LocalCsr,
+    ) -> Result<(), DeviceOom> {
+        if self.opts.densify {
+            self.tick_densified(comm, slot, a, b)
+        } else {
+            self.tick_blocked(comm, slot, a, b)
+        }
+    }
+
+    // ----- densified path (§III) ------------------------------------------
+
+    fn tick_densified(
+        &mut self,
+        comm: &CommView,
+        slot: usize,
+        a: &LocalCsr,
+        b: &LocalCsr,
+    ) -> Result<(), DeviceOom> {
+        let threads = self.opts.threads.max(1);
+        let eb = self.elem_bytes();
+        let a_ranges = densify::thread_row_ranges(a.nrows(), threads);
+        let (kb_total, n_total) = densify::dense_dims(b, 0, b.nrows());
+
+        // model-mode transient device buffers: A + B, double-buffered
+        let a_bytes = a.elems() * eb;
+        let b_bytes = b.elems() * eb;
+        self.gpu.reserve(2 * (a_bytes + b_bytes))?;
+
+        // densify B (threads cooperate on the copy)
+        let b_copy_bytes = b.elems() * eb;
+        let per_thread_b = self.perf().memcpy_seconds(b_copy_bytes / threads as u64);
+        if self.mode == Mode::Real {
+            densify::densify_all(b, &mut self.dense_b);
+        }
+        self.stats.densify_bytes += b_copy_bytes;
+
+        // per-thread: densify A rows, then one GEMM
+        let t_base = comm.now();
+        for (t, &(r0, len)) in a_ranges.iter().enumerate() {
+            if len == 0 {
+                continue;
+            }
+            let (m_t, k_t) = densify::dense_dims(a, r0, len);
+            debug_assert_eq!(k_t, kb_total, "A cols must match B rows");
+            let a_bytes_t = (m_t * k_t) as u64 * eb;
+            self.stats.densify_bytes += a_bytes_t;
+            let lane_start = self.lane_free[t].max(t_base);
+            let densify_s = per_thread_b + self.perf().memcpy_seconds(a_bytes_t);
+            let host_now = lane_start + densify_s;
+            self.lane_free[t] = host_now;
+
+            // h2d: this thread's A panel, plus B once (t == first active)
+            let h2d = a_bytes_t + if t == 0 { b_bytes } else { 0 };
+            let real_exec = self.mode == Mode::Real;
+            if real_exec {
+                densify::densify_rows(a, r0, len, &mut self.dense_a);
+            }
+            let (m, n, k) = (m_t, n_total, k_t);
+            if real_exec {
+                // split borrows: move dense_c out of the slot during the call
+                let mut c_buf = std::mem::take(&mut self.slots[slot].dense_c[t]);
+                let (da, db) = (&self.dense_a, &self.dense_b);
+                self.gpu
+                    .run_gemm(host_now, m, n, k, Some((da, db, &mut c_buf)), h2d, 0);
+                self.slots[slot].dense_c[t] = c_buf;
+            } else {
+                self.gpu.run_gemm(host_now, m, n, k, None, h2d, 0);
+            }
+            self.stats.flops += 2 * (m * n * k) as u64;
+            self.stats.gpu_stacks += 1;
+            self.stats.stacks += 1;
+            self.stats.block_mults += 1;
+        }
+        self.gpu.release(2 * (a_bytes + b_bytes));
+        self.stats.h2d_bytes = self.gpu.h2d_bytes;
+        self.stats.d2h_bytes = self.gpu.d2h_bytes;
+        self.stats.dev_mem_peak = self.gpu.mem_peak;
+        Ok(())
+    }
+
+    // ----- blocked path ------------------------------------------------------
+
+    fn tick_blocked(
+        &mut self,
+        comm: &CommView,
+        slot: usize,
+        a: &LocalCsr,
+        b: &LocalCsr,
+    ) -> Result<(), DeviceOom> {
+        let threads = self.opts.threads.max(1);
+        let stacks = match self.mode {
+            Mode::Real => {
+                generation::generate_real(a, b, &self.slots[slot].panel, threads, self.opts.stack_cap)
+            }
+            Mode::Model => generation::generate_model(a, b, threads, self.opts.stack_cap),
+        };
+
+        // upload this tick's A/B panels once; stacks reference on-device
+        // blocks by offset (DBCSR's transfer-minimizing batching, §II)
+        let eb = self.elem_bytes();
+        let panel_bytes = (a.elems() + b.elems()) * eb;
+        self.gpu.reserve(2 * panel_bytes)?; // double-buffered panels
+        self.gpu.run_transfer(comm.now(), panel_bytes, 0);
+
+        let t_base = comm.now();
+        let byte_scale = self.byte_scale();
+        for stack in &stacks {
+            let t = stack.thread.min(threads - 1);
+            let entries = stack.entries.len();
+            // generation + issue cost on the owning lane
+            let gen_s = self.perf().entry_gen_cost * entries as f64
+                + self.perf().stack_host_overhead;
+            let host_now = self.lane_free[t].max(t_base) + gen_s;
+            self.lane_free[t] = host_now;
+
+            self.stats.stacks += 1;
+            self.stats.block_mults += entries as u64;
+            self.stats.flops += stack.flops();
+
+            // GPU-vs-CPU decision (the co-execution rule)
+            let gpu_finish = self.gpu.projected_stack_finish(host_now, stack);
+            let cpu_s = self.perf().cpu_stack_seconds(entries, stack.m, stack.n, stack.k);
+            if self.opts.cpu_coexec && host_now + cpu_s < gpu_finish {
+                // CPU lane executes
+                self.lane_free[t] = host_now + cpu_s;
+                self.stats.cpu_stacks += 1;
+                if let StackEntries::Real(es) = &stack.entries {
+                    let c_panel = &mut self.slots[slot].panel;
+                    exec_stack_cpu(stack.m, stack.n, stack.k, es, a, b, c_panel);
+                }
+            } else {
+                self.stats.gpu_stacks += 1;
+                match (&stack.entries, self.mode) {
+                    (StackEntries::Real(_), Mode::Real) => {
+                        let c_panel = &mut self.slots[slot].panel;
+                        let (a_data, b_data) = (a.store.data(), b.store.data());
+                        let c_data = c_panel.store.data_mut();
+                        self.gpu
+                            .run_stack(host_now, stack, a_data, b_data, c_data, byte_scale);
+                    }
+                    _ => {
+                        let mut empty: Vec<f32> = Vec::new();
+                        self.gpu
+                            .run_stack(host_now, stack, &[], &[], &mut empty, byte_scale);
+                    }
+                }
+            }
+        }
+        self.gpu.release(2 * panel_bytes);
+        self.stats.h2d_bytes = self.gpu.h2d_bytes;
+        self.stats.d2h_bytes = self.gpu.d2h_bytes;
+        self.stats.dev_mem_peak = self.gpu.mem_peak;
+        Ok(())
+    }
+
+    fn perf(&self) -> &PerfModel {
+        &self.gpu.perf
+    }
+
+    /// Finish the multiplication: fetch + undensify C, sync all clocks
+    /// (comm clock advances to the device/lane completion), and return
+    /// the C panels in slot order.
+    pub fn finish(&mut self, comm: &CommView) -> Vec<LocalCsr> {
+        let mut out = Vec::new();
+        let threads = self.opts.threads.max(1);
+        let slots = std::mem::take(&mut self.slots);
+        for mut slot in slots {
+            // fetch device-resident C (both paths)
+            let done = self.gpu.run_transfer(self.gpu.sync(), 0, slot.c_bytes);
+            comm.advance_to(done);
+            if self.opts.densify {
+                // per-thread undensify copies back into blocks
+                let per_thread = slot.c_bytes / threads as u64;
+                for t in 0..threads {
+                    self.lane_free[t] = self.lane_free[t].max(comm.now())
+                        + self.perf().memcpy_seconds(per_thread);
+                }
+                self.stats.densify_bytes += slot.c_bytes;
+                if self.mode == Mode::Real {
+                    let ranges = slot.ranges.clone();
+                    for (&(r0, len), dense) in ranges.iter().zip(&slot.dense_c) {
+                        if len > 0 {
+                            densify::undensify_rows(&mut slot.panel, r0, len, dense);
+                        }
+                    }
+                }
+            }
+            self.gpu.release(slot.c_bytes);
+            out.push(slot.panel);
+        }
+        // final sync: lanes and device drain
+        let device_done = self.gpu.sync();
+        let lanes_done = self.lane_free.iter().copied().fold(0.0f64, f64::max);
+        comm.advance_to(device_done.max(lanes_done));
+        out
+    }
+}
+
+/// Execute a real stack on the CPU (LIBXSMM-analog lane execution).
+fn exec_stack_cpu(
+    m: usize,
+    n: usize,
+    k: usize,
+    entries: &[crate::backend::stack::StackEntry],
+    a: &LocalCsr,
+    b: &LocalCsr,
+    c: &mut LocalCsr,
+) {
+    let (a_data, b_data) = (a.store.data(), b.store.data());
+    let c_data = match &mut c.store {
+        BlockStore::Real { data, .. } => data,
+        _ => panic!("phantom C in real execution"),
+    };
+    for e in entries {
+        smm_cpu::smm(
+            m,
+            n,
+            k,
+            &a_data[e.a_off..e.a_off + m * k],
+            &b_data[e.b_off..e.b_off + k * n],
+            &mut c_data[e.c_off..e.c_off + m * n],
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{run_ranks, NetModel};
+    use crate::util::prop::assert_allclose;
+    use crate::util::rng::Rng;
+
+    fn rand_panel(rows: &[usize], cols: &[usize], seed: u64) -> LocalCsr {
+        let mut p = LocalCsr::dense(
+            (0..rows.len()).collect(),
+            (0..cols.len()).collect(),
+            rows.to_vec(),
+            cols.to_vec(),
+        );
+        let mut rng = Rng::new(seed);
+        for x in p.store.data_mut() {
+            *x = rng.next_f32_sym();
+        }
+        p
+    }
+
+    /// Dense reference of a panel product.
+    fn panel_ref(a: &LocalCsr, b: &LocalCsr) -> Vec<f32> {
+        let mut da = Vec::new();
+        let mut db = Vec::new();
+        densify::densify_all(a, &mut da);
+        densify::densify_all(b, &mut db);
+        let (m, k) = densify::dense_dims(a, 0, a.nrows());
+        let (_, n) = densify::dense_dims(b, 0, b.nrows());
+        let mut c = vec![0.0f32; m * n];
+        smm_cpu::gemm_blocked(m, n, k, &da, &db, &mut c);
+        c
+    }
+
+    fn engine(densify_on: bool, threads: usize, mode: Mode) -> LocalEngine {
+        LocalEngine::new(
+            EngineOpts {
+                threads,
+                densify: densify_on,
+                stack_cap: 7, // small cap → many stacks in tests
+                cpu_coexec: true,
+            },
+            mode,
+            PerfModel::default(),
+            None,
+            1,
+        )
+    }
+
+    fn run_one(densify_on: bool, threads: usize) -> (Vec<f32>, MultiplyStats) {
+        let rows = [8usize, 8, 8, 5];
+        let ks = [8usize, 8, 3];
+        let cols = [8usize, 6];
+        let a = rand_panel(&rows, &ks, 1);
+        let b = rand_panel(&ks, &cols, 2);
+        let c = LocalCsr::dense(
+            (0..rows.len()).collect(),
+            (0..cols.len()).collect(),
+            rows.to_vec(),
+            cols.to_vec(),
+        );
+        let want = panel_ref(&a, &b);
+        let out = run_ranks(1, NetModel::ideal(), move |comm| {
+            let mut eng = engine(densify_on, threads, Mode::Real);
+            eng.begin(&comm, vec![c.clone()]).unwrap();
+            eng.tick(&comm, 0, &a, &b).unwrap();
+            let mut got = eng.finish(&comm);
+            let mut dense = Vec::new();
+            densify::densify_all(&got.remove(0), &mut dense);
+            (dense, eng.stats.clone())
+        });
+        let (dense, stats) = out.into_iter().next().unwrap();
+        assert_allclose(&dense, &want, 1e-3, 1e-3).unwrap();
+        (dense, stats)
+    }
+
+    #[test]
+    fn blocked_matches_reference() {
+        let (_, stats) = run_one(false, 1);
+        assert!(stats.stacks > 1, "cap 7 must split stacks");
+        assert_eq!(stats.block_mults, 4 * 3 * 2);
+    }
+
+    #[test]
+    fn blocked_multithreaded_matches() {
+        let (_, stats) = run_one(false, 3);
+        assert_eq!(stats.block_mults, 24);
+    }
+
+    #[test]
+    fn densified_matches_reference() {
+        let (_, stats) = run_one(true, 1);
+        assert!(stats.densify_bytes > 0);
+        assert_eq!(stats.stacks, 1, "densified: one GEMM per thread");
+    }
+
+    #[test]
+    fn densified_multithreaded_matches() {
+        let (_, stats) = run_one(true, 2);
+        assert_eq!(stats.stacks, 2);
+    }
+
+    #[test]
+    fn blocked_and_densified_agree() {
+        let (d1, _) = run_one(false, 2);
+        let (d2, _) = run_one(true, 2);
+        assert_allclose(&d1, &d2, 1e-3, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn multi_tick_accumulates() {
+        // two ticks over different K panels == one product over their union
+        let rows = [6usize, 6];
+        let cols = [6usize, 6];
+        let k1 = [6usize];
+        let k2 = [6usize, 4];
+        let a1 = rand_panel(&rows, &k1, 3);
+        let b1 = rand_panel(&k1, &cols, 4);
+        let a2 = rand_panel(&rows, &k2, 5);
+        let b2 = rand_panel(&k2, &cols, 6);
+        let mut want = panel_ref(&a1, &b1);
+        let w2 = panel_ref(&a2, &b2);
+        for (x, y) in want.iter_mut().zip(w2.iter()) {
+            *x += y;
+        }
+        for densify_on in [false, true] {
+            let (a1, b1, a2, b2) = (a1.clone(), b1.clone(), a2.clone(), b2.clone());
+            let c = LocalCsr::dense(vec![0, 1], vec![0, 1], rows.to_vec(), cols.to_vec());
+            let out = run_ranks(1, NetModel::ideal(), move |comm| {
+                let mut eng = engine(densify_on, 2, Mode::Real);
+                eng.begin(&comm, vec![c.clone()]).unwrap();
+                eng.tick(&comm, 0, &a1, &b1).unwrap();
+                eng.tick(&comm, 0, &a2, &b2).unwrap();
+                let mut got = eng.finish(&comm);
+                let mut dense = Vec::new();
+                densify::densify_all(&got.remove(0), &mut dense);
+                dense
+            });
+            assert_allclose(&out[0], &want, 1e-3, 1e-3)
+                .unwrap_or_else(|e| panic!("densify={densify_on}: {e}"));
+        }
+    }
+
+    #[test]
+    fn model_mode_counts_match_real() {
+        let rows = vec![8usize; 6];
+        let ks = vec![8usize; 5];
+        let cols = vec![8usize; 4];
+        let (rows2, ks2, cols2) = (rows.clone(), ks.clone(), cols.clone());
+        let out = run_ranks(1, NetModel::ideal(), move |comm| {
+            // real
+            let a = rand_panel(&rows2, &ks2, 1);
+            let b = rand_panel(&ks2, &cols2, 2);
+            let c = LocalCsr::dense(
+                (0..rows2.len()).collect(),
+                (0..cols2.len()).collect(),
+                rows2.clone(),
+                cols2.clone(),
+            );
+            let mut er = engine(false, 2, Mode::Real);
+            er.begin(&comm, vec![c]).unwrap();
+            er.tick(&comm, 0, &a, &b).unwrap();
+            let _ = er.finish(&comm);
+            // model
+            let am = LocalCsr::dense_phantom(
+                (0..rows2.len()).collect(),
+                (0..ks2.len()).collect(),
+                rows2.clone(),
+                ks2.clone(),
+            );
+            let bm = LocalCsr::dense_phantom(
+                (0..ks2.len()).collect(),
+                (0..cols2.len()).collect(),
+                ks2.clone(),
+                cols2.clone(),
+            );
+            let cm = LocalCsr::dense_phantom(
+                (0..rows2.len()).collect(),
+                (0..cols2.len()).collect(),
+                rows2.clone(),
+                cols2.clone(),
+            );
+            let mut em = engine(false, 2, Mode::Model);
+            em.begin(&comm, vec![cm]).unwrap();
+            em.tick(&comm, 0, &am, &bm).unwrap();
+            let _ = em.finish(&comm);
+            (er.stats.clone(), em.stats.clone())
+        });
+        let (r, m) = &out[0];
+        assert_eq!(r.stacks, m.stacks);
+        assert_eq!(r.block_mults, m.block_mults);
+        assert_eq!(r.flops, m.flops);
+        // model bytes are f64 (2x f32)
+        assert_eq!(m.h2d_bytes, 2 * r.h2d_bytes);
+    }
+
+    #[test]
+    fn oom_propagates() {
+        let rows = vec![8usize; 4];
+        let out = run_ranks(1, NetModel::ideal(), move |comm| {
+            let mut perf = PerfModel::default();
+            perf.gpu_mem_bytes = 1024; // tiny device
+            let mut eng = LocalEngine::new(
+                EngineOpts {
+                    threads: 1,
+                    densify: true,
+                    ..Default::default()
+                },
+                Mode::Model,
+                perf,
+                None,
+                1,
+            );
+            let c = LocalCsr::dense_phantom(
+                (0..4).collect(),
+                (0..4).collect(),
+                rows.clone(),
+                rows.clone(),
+            );
+            eng.begin(&comm, vec![c]).is_err()
+        });
+        assert!(out[0], "tiny device must OOM");
+    }
+
+    #[test]
+    fn virtual_time_advances() {
+        let out = run_ranks(1, NetModel::ideal(), |comm| {
+            let rows = vec![22usize; 4];
+            let a = rand_panel(&rows, &rows, 1);
+            let b = rand_panel(&rows, &rows, 2);
+            let c = LocalCsr::dense((0..4).collect(), (0..4).collect(), rows.clone(), rows.clone());
+            let mut eng = engine(true, 2, Mode::Real);
+            eng.begin(&comm, vec![c]).unwrap();
+            eng.tick(&comm, 0, &a, &b).unwrap();
+            let _ = eng.finish(&comm);
+            comm.now()
+        });
+        assert!(out[0] > 0.0, "virtual clock must move");
+    }
+}

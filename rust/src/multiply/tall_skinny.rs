@@ -1,0 +1,237 @@
+//! The tall-and-skinny algorithm (§II, paper ref.\[13\]) — O(1) communicated data
+//! per rank when one dimension dominates (the paper's rectangular case:
+//! M = N = 1 408, K = 1 982 464).
+//!
+//! The huge K dimension is distributed 1-D across *all* P ranks (A
+//! column-cyclic, B row-cyclic); each rank multiplies its local
+//! (M × K_p)·(K_p × N) slice into a full M × N candidate C through the
+//! [`LocalEngine`] (blocked or densified §III applies unchanged), and one
+//! sum-allreduce of C — whose size is independent of K and P — combines
+//! the partial products. Communication per rank is O(|C|) = O(1) in the
+//! paper's scaling sense, versus Cannon's O(|A|+|B|)/√P.
+
+use crate::backend::gpu_sim::DeviceOom;
+use crate::dist::{CommView, Payload};
+use crate::matrix::{DistMatrix, Distribution, LocalCsr, Mode};
+
+use super::engine::LocalEngine;
+
+/// Build this rank's share of a tall-skinny operand pair: A is
+/// column-cyclic over all P ranks, B row-cyclic (the layout the
+/// algorithm needs). Returns (A, B).
+pub fn ts_operands(
+    m: usize,
+    n: usize,
+    k: usize,
+    block: usize,
+    world: &CommView,
+    mode: Mode,
+    seed_a: u64,
+    seed_b: u64,
+) -> (DistMatrix, DistMatrix) {
+    use crate::matrix::matrix::Fill;
+    use crate::matrix::BlockLayout;
+    let p = world.size();
+    let rank = world.rank();
+    let a = DistMatrix::dense(
+        BlockLayout::new(m, block),
+        BlockLayout::new(k, block),
+        Distribution::cyclic(1),
+        Distribution::cyclic(p),
+        (0, rank),
+        mode,
+        Fill::Random { seed: seed_a },
+    );
+    let b = DistMatrix::dense(
+        BlockLayout::new(k, block),
+        BlockLayout::new(n, block),
+        Distribution::cyclic(p),
+        Distribution::cyclic(1),
+        (rank, 0),
+        mode,
+        Fill::Random { seed: seed_b },
+    );
+    (a, b)
+}
+
+/// Multiply `C = A · B` with the tall-and-skinny algorithm. `a` must be
+/// column-cyclic over P, `b` row-cyclic over P (see [`ts_operands`]).
+/// Returns this rank's (replicated) C.
+pub fn multiply_tall_skinny(
+    world: &CommView,
+    a: &DistMatrix,
+    b: &DistMatrix,
+    engine: &mut LocalEngine,
+) -> Result<DistMatrix, DeviceOom> {
+    let p = world.size();
+    assert_eq!(a.mode, b.mode);
+    assert!(
+        matches!(a.col_dist, Distribution::Cyclic { nproc } if nproc == p),
+        "A must be column-cyclic over all ranks"
+    );
+    assert!(
+        matches!(b.row_dist, Distribution::Cyclic { nproc } if nproc == p),
+        "B must be row-cyclic over all ranks"
+    );
+    assert_eq!(a.cols.nblocks, b.rows.nblocks, "inner blocks must match");
+    let mode = a.mode;
+
+    // local panels are simply the owned blocks (A rows = all, K = mine)
+    let a_panel = a.local.clone();
+    let b_panel = b.local.clone();
+    assert_eq!(a_panel.col_ids, b_panel.row_ids, "K shares must align");
+
+    // full C candidate panel on every rank
+    let rows: Vec<usize> = (0..a.rows.nblocks).collect();
+    let cols: Vec<usize> = (0..b.cols.nblocks).collect();
+    let rs: Vec<usize> = rows.iter().map(|&x| a.rows.block_size(x)).collect();
+    let cs: Vec<usize> = cols.iter().map(|&x| b.cols.block_size(x)).collect();
+    let c_panel = match mode {
+        Mode::Real => LocalCsr::dense(rows, cols, rs, cs),
+        Mode::Model => LocalCsr::dense_phantom(rows, cols, rs, cs),
+    };
+
+    engine.begin(world, vec![c_panel])?;
+    engine.tick(world, 0, &a_panel, &b_panel)?;
+    let mut out = engine.finish(world);
+    let mut c_local = out.remove(0);
+
+    // the O(1) exchange: one allreduce of C
+    match mode {
+        Mode::Real => {
+            let data = c_local.store.data().to_vec();
+            let summed = world.allreduce_sum_f32(Payload::F32(data)).into_f32();
+            c_local.store.data_mut().copy_from_slice(&summed);
+        }
+        Mode::Model => {
+            let bytes = c_local.store.wire_bytes();
+            let _ = world.allreduce_sum_f32(Payload::Phantom { bytes });
+        }
+    }
+
+    // wrap as a replicated matrix (every rank holds all of C)
+    Ok(DistMatrix {
+        rows: a.rows.clone(),
+        cols: b.cols.clone(),
+        row_dist: Distribution::cyclic(1),
+        col_dist: Distribution::cyclic(1),
+        coords: (0, 0),
+        local: c_local,
+        mode,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{run_ranks, NetModel};
+    use crate::matrix::matrix::dense_reference;
+    use crate::matrix::BlockLayout;
+    use crate::multiply::engine::EngineOpts;
+    use crate::perfmodel::PerfModel;
+    use crate::util::prop::assert_allclose;
+
+    fn ts_case(p: usize, m: usize, n: usize, k: usize, block: usize, densify: bool, threads: usize) {
+        let out = run_ranks(p, NetModel::aries(2), move |world| {
+            let (a, b) = ts_operands(m, n, k, block, &world, Mode::Real, 31, 32);
+            let mut engine = LocalEngine::new(
+                EngineOpts {
+                    threads,
+                    densify,
+                    stack_cap: 64,
+                    cpu_coexec: true,
+                },
+                Mode::Real,
+                PerfModel::default(),
+                None,
+                1,
+            );
+            let c = multiply_tall_skinny(&world, &a, &b, &mut engine).unwrap();
+            c.local.store.data().to_vec()
+        });
+        let ar = dense_reference(&BlockLayout::new(m, block), &BlockLayout::new(k, block), 31);
+        let br = dense_reference(&BlockLayout::new(k, block), &BlockLayout::new(n, block), 32);
+        let mut want_dense = vec![0.0f32; m * n];
+        crate::backend::smm_cpu::gemm_blocked(m, n, k, &ar, &br, &mut want_dense);
+        // C panel data is block-ordered; compare via a panel densify
+        for c_data in &out {
+            // reconstruct block-ordered reference: build a panel and fill
+            let mut panel = LocalCsr::dense(
+                (0..m.div_ceil(block)).collect(),
+                (0..n.div_ceil(block)).collect(),
+                (0..m.div_ceil(block))
+                    .map(|i| BlockLayout::new(m, block).block_size(i))
+                    .collect(),
+                (0..n.div_ceil(block))
+                    .map(|j| BlockLayout::new(n, block).block_size(j))
+                    .collect(),
+            );
+            // scatter want_dense into block layout
+            let blocks: Vec<(usize, usize, usize)> = panel
+                .iter_nnz()
+                .map(|(bi, r, c)| (bi, r, c))
+                .collect();
+            for (bi, r, c) in blocks {
+                let rl = BlockLayout::new(m, block);
+                let cl = BlockLayout::new(n, block);
+                let (rs, cs) = (rl.block_size(r), cl.block_size(c));
+                let (r0, c0) = (rl.block_start(r), cl.block_start(c));
+                let mut blk = vec![0.0f32; rs * cs];
+                for i in 0..rs {
+                    blk[i * cs..(i + 1) * cs]
+                        .copy_from_slice(&want_dense[(r0 + i) * n + c0..(r0 + i) * n + c0 + cs]);
+                }
+                panel.store.block_mut(bi, rs * cs).copy_from_slice(&blk);
+            }
+            assert_allclose(c_data, panel.store.data(), 2e-3, 2e-3)
+                .unwrap_or_else(|e| panic!("ts p={p} densify={densify}: {e}"));
+        }
+    }
+
+    #[test]
+    fn ts_blocked_two_ranks() {
+        ts_case(2, 8, 8, 64, 4, false, 1);
+    }
+
+    #[test]
+    fn ts_densified_two_ranks() {
+        ts_case(2, 8, 8, 64, 4, true, 2);
+    }
+
+    #[test]
+    fn ts_four_ranks_ragged() {
+        ts_case(4, 10, 10, 50, 4, true, 2);
+    }
+
+    #[test]
+    fn ts_single_rank() {
+        ts_case(1, 8, 8, 32, 4, false, 1);
+    }
+
+    #[test]
+    fn ts_comm_is_o1_in_k() {
+        // comm bytes must not grow with K (the algorithm's whole point)
+        let bytes_for = |k: usize| {
+            let out = run_ranks(4, NetModel::aries(2), move |world| {
+                let (a, b) = ts_operands(64, 64, k, 16, &world, Mode::Model, 1, 2);
+                let mut engine = LocalEngine::new(
+                    EngineOpts {
+                        threads: 1,
+                        densify: true,
+                        ..Default::default()
+                    },
+                    Mode::Model,
+                    PerfModel::default(),
+                    None,
+                    1,
+                );
+                let _ = multiply_tall_skinny(&world, &a, &b, &mut engine).unwrap();
+                world.stats().bytes_sent
+            });
+            out.iter().sum::<u64>()
+        };
+        let b1 = bytes_for(256);
+        let b2 = bytes_for(4096);
+        assert_eq!(b1, b2, "TS comm must be independent of K");
+    }
+}

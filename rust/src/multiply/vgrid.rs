@@ -1,0 +1,250 @@
+//! Virtual-grid algebra for generalized Cannon on rectangular rank grids.
+//!
+//! Classic Cannon requires a square P̃ × P̃ grid. DBCSR runs on arbitrary
+//! `pr × pc` grids (the paper's per-node rank counts produce e.g. 12 × 16);
+//! the standard generalization folds a virtual `L × L` Cannon grid
+//! (`L = lcm(pr, pc)`) onto the physical grid: virtual rank (i, j) lives at
+//! physical (i mod pr, j mod pc), and each physical rank hosts
+//! `(L/pr) · (L/pc)` virtual ranks ("slots"). Matrix block rows/cols are
+//! cyclically assigned to the L virtual rows/cols — which nests exactly
+//! inside the physical cyclic distribution, so no data conversion is
+//! needed. For a square grid this reduces to textbook Cannon (one slot,
+//! L = P̃).
+//!
+//! Per tick `s`, slot (i, j) multiplies A(i, g)·B(g, j) with
+//! `g = (i + j + s) mod L`; A panels shift one physical column left and B
+//! panels one row up between ticks. The **skew** phase moves A(i, g) from
+//! its natural column (g mod pc) to ((g − i) mod L) mod pc, and B(g, j)
+//! from row (g mod pr) to ((g − j) mod L) mod pr, both along one grid
+//! dimension — exactly MPI_Cart-shifted Cannon pre-skewing.
+
+/// Least common multiple.
+pub fn lcm(a: usize, b: usize) -> usize {
+    a / gcd(a, b) * b
+}
+
+pub fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+/// The virtual topology seen from one physical rank.
+#[derive(Clone, Debug)]
+pub struct VGrid {
+    pub pr: usize,
+    pub pc: usize,
+    pub l: usize,
+    /// This rank's physical coordinates.
+    pub r: usize,
+    pub c: usize,
+}
+
+impl VGrid {
+    pub fn new(pr: usize, pc: usize, r: usize, c: usize) -> VGrid {
+        assert!(r < pr && c < pc);
+        VGrid {
+            pr,
+            pc,
+            l: lcm(pr, pc),
+            r,
+            c,
+        }
+    }
+
+    /// Virtual rows hosted here (ascending).
+    pub fn vrows(&self) -> Vec<usize> {
+        (self.r..self.l).step_by(self.pr).collect()
+    }
+
+    /// Virtual cols hosted here (ascending).
+    pub fn vcols(&self) -> Vec<usize> {
+        (self.c..self.l).step_by(self.pc).collect()
+    }
+
+    /// Hosted slots (i, j), row-major over (vrows × vcols).
+    pub fn slots(&self) -> Vec<(usize, usize)> {
+        let vcols = self.vcols();
+        self.vrows()
+            .into_iter()
+            .flat_map(|i| vcols.iter().map(move |&j| (i, j)))
+            .collect()
+    }
+
+    /// K-group multiplied by slot (i, j) at tick `s`.
+    pub fn group_at(&self, i: usize, j: usize, s: usize) -> usize {
+        (i + j + s) % self.l
+    }
+
+    /// Physical column where A(i, g) starts after the skew.
+    pub fn a_skew_col(&self, i: usize, g: usize) -> usize {
+        ((g + self.l - i % self.l) % self.l) % self.pc
+    }
+
+    /// Physical row where B(g, j) starts after the skew.
+    pub fn b_skew_row(&self, g: usize, j: usize) -> usize {
+        ((g + self.l - j % self.l) % self.l) % self.pr
+    }
+
+    /// Initial (natural-distribution) A panels held here: (vrow, group).
+    pub fn a_initial(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for i in self.vrows() {
+            for g in (self.c..self.l).step_by(self.pc) {
+                out.push((i, g));
+            }
+        }
+        out
+    }
+
+    /// Initial B panels held here: (group, vcol).
+    pub fn b_initial(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for g in (self.r..self.l).step_by(self.pr) {
+            for j in self.vcols() {
+                out.push((g, j));
+            }
+        }
+        out
+    }
+
+    /// A panels this rank holds *after* the skew, sorted by (i, g):
+    /// exactly one per slot, with g = group_at(i, j, 0).
+    pub fn a_after_skew(&self) -> Vec<(usize, usize)> {
+        let mut v: Vec<(usize, usize)> = self
+            .slots()
+            .into_iter()
+            .map(|(i, j)| (i, self.group_at(i, j, 0)))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// B panels after the skew, sorted by (g, j).
+    pub fn b_after_skew(&self) -> Vec<(usize, usize)> {
+        let mut v: Vec<(usize, usize)> = self
+            .slots()
+            .into_iter()
+            .map(|(i, j)| (self.group_at(i, j, 0), j))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Global block ids of virtual row/col/group `x` out of `nblocks`.
+    pub fn blocks_of(&self, x: usize, nblocks: usize) -> Vec<usize> {
+        (x..nblocks).step_by(self.l).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lcm_gcd() {
+        assert_eq!(gcd(12, 16), 4);
+        assert_eq!(lcm(12, 16), 48);
+        assert_eq!(lcm(4, 4), 4);
+        assert_eq!(lcm(1, 5), 5);
+    }
+
+    #[test]
+    fn square_grid_reduces_to_cannon() {
+        let v = VGrid::new(3, 3, 1, 2);
+        assert_eq!(v.l, 3);
+        assert_eq!(v.slots(), vec![(1, 2)]);
+        // tick s uses group (1+2+s) mod 3 — the textbook skew
+        assert_eq!(v.group_at(1, 2, 0), 0);
+        assert_eq!(v.group_at(1, 2, 1), 1);
+    }
+
+    #[test]
+    fn slots_partition_virtual_grid() {
+        let (pr, pc) = (2, 3);
+        let l = lcm(pr, pc);
+        let mut seen = vec![false; l * l];
+        for r in 0..pr {
+            for c in 0..pc {
+                for (i, j) in VGrid::new(pr, pc, r, c).slots() {
+                    assert!(!seen[i * l + j], "slot ({i},{j}) hosted twice");
+                    seen[i * l + j] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every virtual rank hosted");
+    }
+
+    #[test]
+    fn every_slot_sees_every_group_exactly_once() {
+        let v = VGrid::new(2, 3, 1, 2);
+        for (i, j) in v.slots() {
+            let mut groups: Vec<usize> = (0..v.l).map(|s| v.group_at(i, j, s)).collect();
+            groups.sort_unstable();
+            assert_eq!(groups, (0..v.l).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn skew_targets_are_where_ticks_expect() {
+        // after skew, slot (i,j) must hold A(i, (i+j) mod L) — i.e. the
+        // skew destination col of A(i, g) must host a slot (i, j) with
+        // (i + j) ≡ g (mod L)
+        for (pr, pc) in [(2usize, 2usize), (2, 3), (3, 2), (4, 6), (1, 4)] {
+            let l = lcm(pr, pc);
+            for i in 0..l {
+                for g in 0..l {
+                    let j = (g + l - i) % l; // the slot's vcol
+                    let dest_col = j % pc;
+                    let v = VGrid::new(pr, pc, i % pr, dest_col);
+                    assert_eq!(v.a_skew_col(i, g), dest_col, "pr={pr} pc={pc} i={i} g={g}");
+                    assert!(v.slots().contains(&(i, j)));
+                    assert_eq!(v.group_at(i, j, 0), g);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn initial_panels_cover_all() {
+        // union over ranks of a_initial == all (i, g) pairs
+        let (pr, pc) = (2, 3);
+        let l = lcm(pr, pc);
+        let mut seen = vec![false; l * l];
+        for r in 0..pr {
+            for c in 0..pc {
+                for (i, g) in VGrid::new(pr, pc, r, c).a_initial() {
+                    assert!(!seen[i * l + g]);
+                    seen[i * l + g] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn after_skew_multiset_is_consistent() {
+        // globally, the post-skew panels are exactly {(i, g) : all pairs}
+        let (pr, pc) = (4, 6);
+        let l = lcm(pr, pc);
+        let mut count = vec![0usize; l * l];
+        for r in 0..pr {
+            for c in 0..pc {
+                for (i, g) in VGrid::new(pr, pc, r, c).a_after_skew() {
+                    count[i * l + g] += 1;
+                }
+            }
+        }
+        assert!(count.iter().all(|&n| n == 1), "each A(i,g) exactly once");
+    }
+
+    #[test]
+    fn blocks_of_partitions() {
+        let v = VGrid::new(2, 2, 0, 0);
+        let mut all: Vec<usize> = (0..v.l).flat_map(|x| v.blocks_of(x, 10)).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,357 @@
+//! PJRT runtime: load AOT Pallas/JAX artifacts and execute them.
+//!
+//! This is the request-path bridge to the compute layer: HLO *text*
+//! emitted once by `python/compile/aot.py` is parsed
+//! (`HloModuleProto::from_text_file` — the text parser reassigns the
+//! 64-bit instruction ids jax ≥ 0.5 emits, which xla_extension 0.5.1
+//! would reject in proto form), compiled on the PJRT CPU client, and the
+//! executable is cached per variant. Python never runs here.
+//!
+//! One `Runtime` per rank thread: the `xla` crate's handles are raw
+//! C-pointer wrappers without `Send`/`Sync`, and per-thread clients also
+//! mirror how each MPI rank owns its own cuBLAS context in the paper.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One AOT artifact described by `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Variant {
+    pub name: String,
+    pub path: PathBuf,
+    pub kind: VariantKind,
+    /// Input shapes, in argument order.
+    pub inputs: Vec<Vec<usize>>,
+    /// Real FLOPs per execution.
+    pub flops: u64,
+    /// Analytic VMEM footprint of the kernel (bytes) — L1 perf estimate.
+    pub vmem_bytes: u64,
+    /// Analytic MXU utilization estimate — L1 perf estimate.
+    pub mxu_efficiency: f64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum VariantKind {
+    /// `C += A·B` over a (tile × tile) panel.
+    GemmAcc { tile: usize },
+    /// Stack chunk: `C[i] += A[i]·B[i]`, blocks padded (mp, np, kp).
+    Smm {
+        m: usize,
+        n: usize,
+        k: usize,
+        mp: usize,
+        np: usize,
+        kp: usize,
+        s: usize,
+    },
+}
+
+/// Parsed manifest (no PJRT needed — usable by planning/tests).
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub variants: Vec<Variant>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        if j.get("format").as_usize() != Some(1) {
+            bail!("unsupported manifest format");
+        }
+        let mut variants = Vec::new();
+        for v in j.get("variants").as_arr().unwrap_or(&[]) {
+            let name = v.get("name").as_str().context("variant name")?.to_string();
+            let path = dir.join(v.get("path").as_str().context("variant path")?);
+            let kind = match v.get("kind").as_str() {
+                Some("gemm_acc") => VariantKind::GemmAcc {
+                    tile: v.get("tile").as_usize().context("tile")?,
+                },
+                Some("smm") => VariantKind::Smm {
+                    m: v.get("m").as_usize().context("m")?,
+                    n: v.get("n").as_usize().context("n")?,
+                    k: v.get("k").as_usize().context("k")?,
+                    mp: v.get("mp").as_usize().context("mp")?,
+                    np: v.get("np").as_usize().context("np")?,
+                    kp: v.get("kp").as_usize().context("kp")?,
+                    s: v.get("s").as_usize().context("s")?,
+                },
+                other => bail!("unknown variant kind {other:?}"),
+            };
+            let inputs = v
+                .get("inputs")
+                .as_arr()
+                .context("inputs")?
+                .iter()
+                .map(|dims| {
+                    dims.as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect()
+                })
+                .collect();
+            variants.push(Variant {
+                name,
+                path,
+                kind,
+                inputs,
+                flops: v.get("flops").as_f64().unwrap_or(0.0) as u64,
+                vmem_bytes: v.get("vmem_bytes").as_f64().unwrap_or(0.0) as u64,
+                mxu_efficiency: v.get("mxu_efficiency").as_f64().unwrap_or(0.0),
+            });
+        }
+        Ok(Manifest { variants })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&Variant> {
+        self.variants.iter().find(|v| v.name == name)
+    }
+
+    /// Available gemm tiles, ascending.
+    pub fn gemm_tiles(&self) -> Vec<usize> {
+        let mut t: Vec<usize> = self
+            .variants
+            .iter()
+            .filter_map(|v| match v.kind {
+                VariantKind::GemmAcc { tile } => Some(tile),
+                _ => None,
+            })
+            .collect();
+        t.sort_unstable();
+        t
+    }
+
+    /// Available SMM block sizes (uniform m=n=k), ascending.
+    pub fn smm_sizes(&self) -> Vec<usize> {
+        let mut t: Vec<usize> = self
+            .variants
+            .iter()
+            .filter_map(|v| match v.kind {
+                VariantKind::Smm { m, n, k, .. } if m == n && n == k => Some(m),
+                _ => None,
+            })
+            .collect();
+        t.sort_unstable();
+        t
+    }
+}
+
+/// Default artifacts directory: `$DBCSR_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("DBCSR_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// A per-thread PJRT execution context with an executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Cumulative executions (perf accounting).
+    pub calls: RefCell<HashMap<String, u64>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the manifest.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            exes: RefCell::new(HashMap::new()),
+            calls: RefCell::new(HashMap::new()),
+        })
+    }
+
+    fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let var = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("unknown variant {name}"))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            var.path.to_str().context("artifact path utf8")?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", var.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let exe = Rc::new(exe);
+        self.exes.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a variant on raw f32 buffers (shapes per the manifest).
+    /// Returns the (single, tupled) output buffer.
+    pub fn execute(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        let var = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("unknown variant {name}"))?
+            .clone();
+        if inputs.len() != var.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                var.inputs.len(),
+                inputs.len()
+            );
+        }
+        let exe = self.executable(name)?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, dims) in inputs.iter().zip(var.inputs.iter()) {
+            let want: usize = dims.iter().product();
+            if buf.len() != want {
+                bail!("{name}: input length {} != shape {:?}", buf.len(), dims);
+            }
+            let idims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(buf)
+                .reshape(&idims)
+                .map_err(|e| anyhow!("reshape: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        *self.calls.borrow_mut().entry(name.to_string()).or_insert(0) += 1;
+        Ok(out)
+    }
+
+    /// Pick the best gemm tile for a (rows × cols) panel: the largest tile
+    /// not wasting more than ~35% padding, else the smallest.
+    pub fn pick_gemm_tile(&self, rows: usize, cols: usize, inner: usize) -> Option<usize> {
+        let tiles = self.manifest.gemm_tiles();
+        let waste = |t: usize| {
+            let pad = |x: usize| x.div_ceil(t) * t;
+            let padded = pad(rows) as f64 * pad(cols) as f64 * pad(inner) as f64;
+            padded / (rows.max(1) as f64 * cols.max(1) as f64 * inner.max(1) as f64)
+        };
+        tiles
+            .iter()
+            .rev()
+            .find(|&&t| waste(t) < 1.35)
+            .or_else(|| tiles.first())
+            .copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dir() -> PathBuf {
+        // tests run from the crate root
+        artifacts_dir()
+    }
+
+    #[test]
+    fn manifest_loads() {
+        let m = Manifest::load(&dir()).expect("run `make artifacts` first");
+        assert!(m.gemm_tiles().contains(&128));
+        assert!(m.smm_sizes().contains(&22));
+        let v = m.find("gemm_128").unwrap();
+        assert_eq!(v.inputs.len(), 3);
+        assert!(v.flops > 0);
+    }
+
+    #[test]
+    fn gemm_artifact_executes_correctly() {
+        let rt = Runtime::load(&dir()).unwrap();
+        let t = 128usize;
+        // C += A*B with A = I, B = ramp, C = 1 → out = ramp + 1
+        let mut a = vec![0.0f32; t * t];
+        for i in 0..t {
+            a[i * t + i] = 1.0;
+        }
+        let b: Vec<f32> = (0..t * t).map(|i| (i % 100) as f32 * 0.01).collect();
+        let c = vec![1.0f32; t * t];
+        let out = rt.execute("gemm_128", &[&a, &b, &c]).unwrap();
+        for i in 0..t * t {
+            assert!(
+                (out[i] - (b[i] + 1.0)).abs() < 1e-4,
+                "i={i}: {} vs {}",
+                out[i],
+                b[i] + 1.0
+            );
+        }
+    }
+
+    #[test]
+    fn smm_artifact_executes_correctly() {
+        let rt = Runtime::load(&dir()).unwrap();
+        let v = rt.manifest.find("smm_4").unwrap().clone();
+        let (s, m4) = match v.kind {
+            VariantKind::Smm { s, m, .. } => (s, m),
+            _ => panic!(),
+        };
+        assert_eq!(m4, 4);
+        // A[i] = i * I, B[i] = ones, C = 0 → out[i] = i * ones
+        let mut a = vec![0.0f32; s * 16];
+        for i in 0..s {
+            for d in 0..4 {
+                a[i * 16 + d * 4 + d] = i as f32;
+            }
+        }
+        let b = vec![1.0f32; s * 16];
+        let c = vec![0.0f32; s * 16];
+        let out = rt.execute("smm_4", &[&a, &b, &c]).unwrap();
+        for i in 0..s {
+            for e in 0..16 {
+                assert!(
+                    (out[i * 16 + e] - i as f32).abs() < 1e-4,
+                    "entry {i} elem {e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn execute_rejects_bad_shapes() {
+        let rt = Runtime::load(&dir()).unwrap();
+        let small = vec![0.0f32; 4];
+        assert!(rt.execute("gemm_128", &[&small, &small, &small]).is_err());
+        assert!(rt.execute("nonexistent", &[]).is_err());
+    }
+
+    #[test]
+    fn executable_cache_reuses() {
+        let rt = Runtime::load(&dir()).unwrap();
+        let t = 128 * 128;
+        let z = vec![0.0f32; t];
+        let _ = rt.execute("gemm_128", &[&z, &z, &z]).unwrap();
+        let _ = rt.execute("gemm_128", &[&z, &z, &z]).unwrap();
+        assert_eq!(rt.calls.borrow()["gemm_128"], 2);
+        assert_eq!(rt.exes.borrow().len(), 1);
+    }
+
+    #[test]
+    fn tile_picker_prefers_low_waste() {
+        let rt = Runtime::load(&dir()).unwrap();
+        // a 700x700x700 panel: 512 pads to 1024³ (3.1x waste) → pick 256
+        // wait: 700/256→768³ (1.32x) ok
+        let t = rt.pick_gemm_tile(700, 700, 700).unwrap();
+        assert!(t == 256 || t == 128, "picked {t}");
+        // a big clean panel picks the big tile
+        assert_eq!(rt.pick_gemm_tile(2048, 2048, 2048), Some(512));
+    }
+}

@@ -1,0 +1,83 @@
+//! Small self-contained utilities.
+//!
+//! The offline crate set has no `rand`, `serde`, `criterion` or `proptest`;
+//! these modules provide the slices of each that the library needs
+//! (documented as substitutions in DESIGN.md §3).
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+/// Round `x` up to the next multiple of `q` (q > 0).
+#[inline]
+pub fn round_up(x: usize, q: usize) -> usize {
+    debug_assert!(q > 0);
+    x.div_ceil(q) * q
+}
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(x: usize, q: usize) -> usize {
+    debug_assert!(q > 0);
+    x.div_ceil(q)
+}
+
+/// Split `n` items into `parts` contiguous chunks as evenly as possible;
+/// returns the (start, len) of chunk `idx`. The first `n % parts` chunks
+/// get one extra item (the MPI_Scatterv convention).
+#[inline]
+pub fn even_chunk(n: usize, parts: usize, idx: usize) -> (usize, usize) {
+    debug_assert!(idx < parts);
+    let base = n / parts;
+    let extra = n % parts;
+    let len = base + usize::from(idx < extra);
+    let start = idx * base + idx.min(extra);
+    (start, len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn even_chunk_partitions() {
+        for n in [0usize, 1, 7, 12, 100] {
+            for parts in [1usize, 2, 3, 5, 12] {
+                let mut covered = 0;
+                let mut next = 0;
+                for i in 0..parts {
+                    let (s, l) = even_chunk(n, parts, i);
+                    assert_eq!(s, next, "chunks must be contiguous");
+                    next = s + l;
+                    covered += l;
+                }
+                assert_eq!(covered, n, "chunks must cover 0..n");
+            }
+        }
+    }
+
+    #[test]
+    fn even_chunk_balance() {
+        // max-min difference never exceeds 1
+        let lens: Vec<usize> = (0..5).map(|i| even_chunk(13, 5, i).1).collect();
+        assert_eq!(lens.iter().max().unwrap() - lens.iter().min().unwrap(), 1);
+    }
+}

@@ -1,0 +1,124 @@
+//! Property-test driver (proptest substitute).
+//!
+//! Runs a property over N random cases drawn from a seeded [`Rng`]; on
+//! failure it reports the iteration's seed so the case replays exactly
+//! (re-run with `PROP_SEED=<seed>`), and performs "shrink-lite": it
+//! re-runs the generator with progressively smaller size hints to find a
+//! smaller failing case.
+
+use super::rng::Rng;
+
+/// Size hint passed to generators; shrinks on failure.
+#[derive(Clone, Copy, Debug)]
+pub struct Size(pub usize);
+
+/// Run `prop(rng, size)` over `cases` random cases.
+///
+/// `prop` returns `Err(msg)` to fail the property. Panics (with seed and
+/// shrink info) on the first failure.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng, Size) -> Result<(), String>,
+{
+    let base_seed = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xD1CE_5EED);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        // size ramps up over the run, like proptest
+        let size = Size(4 + (case * 28 / cases.max(1)));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // shrink-lite: same seed, smaller sizes
+            let mut smallest: Option<(usize, String)> = None;
+            for s in (1..size.0).rev() {
+                let mut r2 = Rng::new(seed);
+                if let Err(m) = prop(&mut r2, Size(s)) {
+                    smallest = Some((s, m));
+                }
+            }
+            match smallest {
+                Some((s, m)) => panic!(
+                    "property '{name}' failed (case {case}, seed {seed}):\n  at size {}: {msg}\n  shrunk to size {s}: {m}\n  replay: PROP_SEED={base_seed}",
+                    size.0
+                ),
+                None => panic!(
+                    "property '{name}' failed (case {case}, seed {seed}, size {}):\n  {msg}\n  replay: PROP_SEED={base_seed}",
+                    size.0
+                ),
+            }
+        }
+    }
+}
+
+/// Assert helper for properties: `prop_assert!(cond, "msg {}", x)?`-style.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Assert two f32 slices match within tolerance; reports first mismatch.
+pub fn assert_allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol {
+            return Err(format!(
+                "mismatch at {i}: {x} vs {y} (|diff|={} > tol={tol}); {} elements total",
+                (x - y).abs(),
+                a.len()
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 50, |_rng, _size| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 10, |rng, _| {
+            if rng.next_u64() % 2 == 0 {
+                Err("even".into())
+            } else {
+                Err("odd".into())
+            }
+        });
+    }
+
+    #[test]
+    fn allclose_accepts_equal() {
+        assert!(assert_allclose(&[1.0, 2.0], &[1.0, 2.0], 1e-6, 1e-6).is_ok());
+    }
+
+    #[test]
+    fn allclose_rejects_different() {
+        let e = assert_allclose(&[1.0], &[1.1], 1e-6, 1e-6).unwrap_err();
+        assert!(e.contains("mismatch at 0"));
+    }
+
+    #[test]
+    fn allclose_rejects_length() {
+        assert!(assert_allclose(&[1.0], &[1.0, 2.0], 1e-6, 1e-6).is_err());
+    }
+}

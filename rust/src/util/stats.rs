@@ -1,0 +1,137 @@
+//! Descriptive statistics + the counters the multiply engine reports.
+
+/// Summary statistics over a sample of measurements.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary::default();
+        }
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = if n % 2 == 1 {
+            sorted[n / 2]
+        } else {
+            0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+        };
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            median,
+        }
+    }
+
+    /// Relative fluctuation (std/mean) — the paper reports < 5%.
+    pub fn rel_fluctuation(&self) -> f64 {
+        if self.mean == 0.0 {
+            0.0
+        } else {
+            self.std / self.mean
+        }
+    }
+}
+
+/// Counters accumulated by one distributed multiplication, aggregated over
+/// ranks. These drive both the virtual-clock model and the bench reports.
+#[derive(Clone, Debug, Default)]
+pub struct MultiplyStats {
+    /// Number of stacks processed (Generation output).
+    pub stacks: u64,
+    /// Total small-block multiplications across all stacks.
+    pub block_mults: u64,
+    /// FLOPs actually computed (2*m*n*k per block mult).
+    pub flops: u64,
+    /// Bytes moved rank-to-rank (Cannon shifts / TS reductions).
+    pub comm_bytes: u64,
+    /// Number of point-to-point messages.
+    pub comm_msgs: u64,
+    /// Bytes staged host→device.
+    pub h2d_bytes: u64,
+    /// Bytes staged device→host.
+    pub d2h_bytes: u64,
+    /// Bytes copied by densification/undensification.
+    pub densify_bytes: u64,
+    /// Stacks executed on the (simulated) GPU vs host CPU.
+    pub gpu_stacks: u64,
+    pub cpu_stacks: u64,
+    /// Peak simulated device-memory occupancy, bytes.
+    pub dev_mem_peak: u64,
+}
+
+impl MultiplyStats {
+    pub fn merge(&mut self, o: &MultiplyStats) {
+        self.stacks += o.stacks;
+        self.block_mults += o.block_mults;
+        self.flops += o.flops;
+        self.comm_bytes += o.comm_bytes;
+        self.comm_msgs += o.comm_msgs;
+        self.h2d_bytes += o.h2d_bytes;
+        self.d2h_bytes += o.d2h_bytes;
+        self.densify_bytes += o.densify_bytes;
+        self.gpu_stacks += o.gpu_stacks;
+        self.cpu_stacks += o.cpu_stacks;
+        self.dev_mem_peak = self.dev_mem_peak.max(o.dev_mem_peak);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.median - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_odd_median() {
+        assert_eq!(Summary::of(&[5.0, 1.0, 3.0]).median, 3.0);
+    }
+
+    #[test]
+    fn summary_empty() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn merge_adds_and_maxes() {
+        let mut a = MultiplyStats {
+            stacks: 1,
+            flops: 100,
+            dev_mem_peak: 50,
+            ..Default::default()
+        };
+        let b = MultiplyStats {
+            stacks: 2,
+            flops: 200,
+            dev_mem_peak: 30,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.stacks, 3);
+        assert_eq!(a.flops, 300);
+        assert_eq!(a.dev_mem_peak, 50);
+    }
+}

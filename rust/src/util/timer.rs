@@ -1,0 +1,50 @@
+//! Wallclock timing helpers for the bench harness (criterion substitute).
+
+use std::time::Instant;
+
+/// Measure `f`, returning (result, seconds).
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Repeat `f` `reps` times after `warmup` runs; returns per-rep seconds.
+pub fn bench(warmup: usize, reps: usize, mut f: impl FnMut()) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+/// Black-box: prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_returns_value() {
+        let (v, dt) = time(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(dt >= 0.0);
+    }
+
+    #[test]
+    fn bench_counts_reps() {
+        let mut calls = 0;
+        let samples = bench(2, 5, || calls += 1);
+        assert_eq!(samples.len(), 5);
+        assert_eq!(calls, 7);
+    }
+}

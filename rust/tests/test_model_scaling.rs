@@ -1,0 +1,122 @@
+//! Integration: the virtual-clock model's scaling laws — the properties
+//! the paper's figures rest on must hold structurally, independent of
+//! calibration constants.
+
+use dbcsr::bench::harness::{grid_shape, run_spec, Engine, RunSpec, Shape};
+use dbcsr::matrix::Mode;
+
+fn model_point(nodes: usize, rpn: usize, threads: usize, block: usize, sq: bool, engine: Engine) -> f64 {
+    let r = run_spec(RunSpec {
+        nodes,
+        rpn,
+        threads,
+        block,
+        shape: if sq {
+            Shape::Square { n: 8448 }
+        } else {
+            Shape::Rect { mn: 704, k: 90112 }
+        },
+        engine,
+        mode: Mode::Model,
+    });
+    assert!(!r.oom, "unexpected OOM");
+    r.seconds
+}
+
+#[test]
+fn strong_scaling_square() {
+    // 4x the nodes → meaningfully faster (at least 2.4x on this size)
+    let t1 = model_point(1, 4, 3, 22, true, Engine::DbcsrDensified);
+    let t4 = model_point(4, 4, 3, 22, true, Engine::DbcsrDensified);
+    assert!(t4 < t1 / 2.4, "t1={t1} t4={t4}");
+}
+
+#[test]
+fn densified_beats_blocked_on_square_b22() {
+    let tb = model_point(4, 4, 3, 22, true, Engine::DbcsrBlocked);
+    let td = model_point(4, 4, 3, 22, true, Engine::DbcsrDensified);
+    assert!(
+        td < tb,
+        "densification must win for square b22 (blocked {tb} vs densified {td})"
+    );
+    let ratio = tb / td;
+    assert!((1.2..2.6).contains(&ratio), "ratio {ratio} out of paper band");
+}
+
+#[test]
+fn densified_advantage_shrinks_for_b64() {
+    let r22 = model_point(4, 4, 3, 22, true, Engine::DbcsrBlocked)
+        / model_point(4, 4, 3, 22, true, Engine::DbcsrDensified);
+    let r64 = model_point(4, 4, 3, 64, true, Engine::DbcsrBlocked)
+        / model_point(4, 4, 3, 64, true, Engine::DbcsrDensified);
+    assert!(r64 < r22, "b64 gain {r64} must be below b22 gain {r22}");
+}
+
+#[test]
+fn dbcsr_beats_pdgemm_and_gap_grows_for_small_blocks() {
+    // run closer to paper scale (the claim is a full-scale one; at the
+    // reduced sizes used elsewhere PDGEMM's panel GEMMs are relatively
+    // bigger and the gap closes)
+    let point = |block: usize, engine: Engine| {
+        let r = run_spec(RunSpec {
+            nodes: 16,
+            rpn: 4,
+            threads: 3,
+            block,
+            shape: Shape::Square { n: 21_120 },
+            engine,
+            mode: Mode::Model,
+        });
+        assert!(!r.oom);
+        r.seconds
+    };
+    let r22 = point(22, Engine::Pdgemm) / point(22, Engine::DbcsrDensified);
+    let r4 = point(4, Engine::Pdgemm) / point(4, Engine::DbcsrDensified);
+    assert!(r22 > 1.0, "DBCSR must beat PDGEMM at b22 (ratio {r22})");
+    assert!(r4 > r22, "the win must grow as blocks shrink ({r4} vs {r22})");
+}
+
+#[test]
+fn rectangular_win_exceeds_square_win() {
+    let sq = model_point(4, 4, 3, 22, true, Engine::Pdgemm)
+        / model_point(4, 4, 3, 22, true, Engine::DbcsrDensified);
+    let rect = model_point(4, 4, 3, 22, false, Engine::Pdgemm)
+        / model_point(4, 4, 3, 22, false, Engine::DbcsrDensified);
+    assert!(
+        rect > sq,
+        "tall-skinny advantage ({rect}) must exceed square ({sq})"
+    );
+}
+
+#[test]
+fn densified_insensitive_to_block_size() {
+    // paper §IV-B: densified performance within ~5% across block sizes
+    let t22 = model_point(4, 4, 3, 22, true, Engine::DbcsrDensified);
+    let t64 = model_point(4, 4, 3, 64, true, Engine::DbcsrDensified);
+    let rel = (t22 - t64).abs() / t22.min(t64);
+    assert!(rel < 0.07, "densified b22 vs b64 differ by {:.1}%", rel * 100.0);
+}
+
+#[test]
+fn grid_shape_sanity_for_paper_configs() {
+    // the factorizations used across the figures
+    for (p, want) in [
+        (16usize, (4usize, 4usize)),
+        (64, (8, 8)),
+        (100, (10, 10)),
+        (144, (12, 12)),
+        (256, (16, 16)),
+        (96, (8, 12)),
+        (192, (12, 16)),
+    ] {
+        assert_eq!(grid_shape(p), want, "P={p}");
+    }
+}
+
+#[test]
+fn virtual_time_deterministic() {
+    // same spec → bit-identical virtual time (reproducible experiments)
+    let a = model_point(4, 4, 3, 22, true, Engine::DbcsrDensified);
+    let b = model_point(4, 4, 3, 22, true, Engine::DbcsrDensified);
+    assert_eq!(a, b);
+}

@@ -1,0 +1,142 @@
+//! Integration: the PJRT runtime inside the distributed multiply — real
+//! numerics flowing through the AOT Pallas artifacts (requires
+//! `make artifacts`).
+
+use std::rc::Rc;
+
+use dbcsr::backend::smm_cpu;
+use dbcsr::dist::{run_ranks, Grid2D, NetModel};
+use dbcsr::matrix::matrix::{dense_reference, Fill};
+use dbcsr::matrix::{BlockLayout, DistMatrix, Distribution, Mode};
+use dbcsr::multiply::{multiply, EngineOpts, MultiplyConfig};
+use dbcsr::runtime::{artifacts_dir, Runtime};
+use dbcsr::scalapack::pdgemm;
+use dbcsr::util::prop::assert_allclose;
+
+fn reference(m: usize, n: usize, k: usize, block: usize, sa: u64, sb: u64) -> Vec<f32> {
+    let ar = dense_reference(&BlockLayout::new(m, block), &BlockLayout::new(k, block), sa);
+    let br = dense_reference(&BlockLayout::new(k, block), &BlockLayout::new(n, block), sb);
+    let mut want = vec![0.0f32; m * n];
+    smm_cpu::gemm_blocked(m, n, k, &ar, &br, &mut want);
+    want
+}
+
+fn run_with_runtime(densify: bool, use_pdgemm: bool, n: usize, block: usize) -> Vec<f32> {
+    let parts = run_ranks(4, NetModel::aries(4), move |world| {
+        let runtime = Rc::new(Runtime::load(&artifacts_dir()).expect("make artifacts first"));
+        let grid = Grid2D::new(world, 2, 2);
+        let coords = grid.coords();
+        let mk_mat = |seed| {
+            DistMatrix::dense(
+                BlockLayout::new(n, block),
+                BlockLayout::new(n, block),
+                Distribution::cyclic(2),
+                Distribution::cyclic(2),
+                coords,
+                Mode::Real,
+                Fill::Random { seed },
+            )
+        };
+        let a = mk_mat(91);
+        let b = mk_mat(92);
+        let cfg = MultiplyConfig {
+            engine: EngineOpts {
+                threads: 2,
+                densify,
+                // force every stack through the (simulated) GPU so the
+                // PJRT artifacts are the execution path under test
+                cpu_coexec: false,
+                ..Default::default()
+            },
+            runtime: Some(runtime.clone()),
+            ..Default::default()
+        };
+        let out = if use_pdgemm {
+            pdgemm(&grid, &a, &b, &cfg).unwrap()
+        } else {
+            multiply(&grid, &a, &b, &cfg).unwrap()
+        };
+        // the runtime must actually have been used (not the CPU fallback)
+        let calls: u64 = runtime.calls.borrow().values().sum();
+        assert!(calls > 0, "PJRT runtime was never invoked");
+        let mut dense = vec![0.0f32; n * n];
+        out.c.add_into_dense(&mut dense);
+        dense
+    });
+    let mut got = vec![0.0f32; n * n];
+    for part in parts {
+        for (g, x) in got.iter_mut().zip(part.iter()) {
+            *g += x;
+        }
+    }
+    got
+}
+
+#[test]
+fn densified_cannon_through_pjrt_gemm_artifacts() {
+    // block 22 panels → padded to the 128-tile gemm artifact
+    let n = 176; // 8 blocks of 22
+    let got = run_with_runtime(true, false, n, 22);
+    let want = reference(n, n, n, 22, 91, 92);
+    assert_allclose(&got, &want, 3e-3, 3e-3).unwrap();
+}
+
+#[test]
+fn blocked_cannon_through_pjrt_smm_artifacts() {
+    let n = 176;
+    let got = run_with_runtime(false, false, n, 22);
+    let want = reference(n, n, n, 22, 91, 92);
+    assert_allclose(&got, &want, 3e-3, 3e-3).unwrap();
+}
+
+#[test]
+fn pdgemm_through_pjrt() {
+    let n = 128; // 2 blocks of 64
+    let got = run_with_runtime(true, true, n, 64);
+    let want = reference(n, n, n, 64, 91, 92);
+    assert_allclose(&got, &want, 3e-3, 3e-3).unwrap();
+}
+
+#[test]
+fn pjrt_and_cpu_paths_agree() {
+    // the same multiply with and without the runtime gives the same C —
+    // kernels vs microkernels cross-validation at the system level
+    let n = 132; // 6 blocks of 22
+    let with_rt = run_with_runtime(false, false, n, 22);
+    let parts = run_ranks(4, NetModel::aries(4), move |world| {
+        let grid = Grid2D::new(world, 2, 2);
+        let coords = grid.coords();
+        let mk_mat = |seed| {
+            DistMatrix::dense(
+                BlockLayout::new(n, 22),
+                BlockLayout::new(n, 22),
+                Distribution::cyclic(2),
+                Distribution::cyclic(2),
+                coords,
+                Mode::Real,
+                Fill::Random { seed },
+            )
+        };
+        let (a, b) = (mk_mat(91), mk_mat(92));
+        let cfg = MultiplyConfig {
+            engine: EngineOpts {
+                threads: 2,
+                densify: false,
+                ..Default::default()
+            },
+            runtime: None,
+            ..Default::default()
+        };
+        let out = multiply(&grid, &a, &b, &cfg).unwrap();
+        let mut dense = vec![0.0f32; n * n];
+        out.c.add_into_dense(&mut dense);
+        dense
+    });
+    let mut without_rt = vec![0.0f32; n * n];
+    for part in parts {
+        for (g, x) in without_rt.iter_mut().zip(part.iter()) {
+            *g += x;
+        }
+    }
+    assert_allclose(&with_rt, &without_rt, 1e-3, 1e-3).unwrap();
+}

@@ -1,0 +1,170 @@
+//! Integration: block-sparse multiplication — the library's original
+//! regime (§I: occupancies 0.01% up to dense) — through the same Cannon
+//! pipeline, blocked and densified, against dense references.
+
+use dbcsr::backend::smm_cpu;
+use dbcsr::dist::{run_ranks, Grid2D, NetModel};
+use dbcsr::matrix::sparse::{sparse_random, sparse_reference};
+use dbcsr::matrix::{BlockLayout, Distribution};
+use dbcsr::multiply::{multiply, Algorithm, EngineOpts, MultiplyConfig};
+use dbcsr::util::prop::{assert_allclose, check};
+
+#[allow(clippy::too_many_arguments)]
+fn sparse_case(
+    pr: usize,
+    pc: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    block: usize,
+    occ_a: f64,
+    occ_b: f64,
+    threads: usize,
+    densify: bool,
+) {
+    let parts = run_ranks(pr * pc, NetModel::aries(2), move |world| {
+        let grid = Grid2D::new(world, pr, pc);
+        let coords = grid.coords();
+        let a = sparse_random(
+            BlockLayout::new(m, block),
+            BlockLayout::new(k, block),
+            Distribution::cyclic(pr),
+            Distribution::cyclic(pc),
+            coords,
+            occ_a,
+            111,
+        );
+        let b = sparse_random(
+            BlockLayout::new(k, block),
+            BlockLayout::new(n, block),
+            Distribution::cyclic(pr),
+            Distribution::cyclic(pc),
+            coords,
+            occ_b,
+            112,
+        );
+        let cfg = MultiplyConfig {
+            engine: EngineOpts {
+                threads,
+                densify,
+                stack_cap: 32,
+                cpu_coexec: true,
+            },
+            algorithm: Algorithm::Cannon,
+            ..Default::default()
+        };
+        let out = multiply(&grid, &a, &b, &cfg).unwrap();
+        let mut dense = vec![0.0f32; m * n];
+        out.c.add_into_dense(&mut dense);
+        (dense, out.stats.block_mults)
+    });
+    let mut got = vec![0.0f32; m * n];
+    let mut mults = 0u64;
+    for (part, bm) in parts {
+        for (g, x) in got.iter_mut().zip(part.iter()) {
+            *g += x;
+        }
+        mults += bm;
+    }
+    let ar = sparse_reference(&BlockLayout::new(m, block), &BlockLayout::new(k, block), occ_a, 111);
+    let br = sparse_reference(&BlockLayout::new(k, block), &BlockLayout::new(n, block), occ_b, 112);
+    let mut want = vec![0.0f32; m * n];
+    smm_cpu::gemm_blocked(m, n, k, &ar, &br, &mut want);
+    assert_allclose(&got, &want, 3e-3, 3e-3).unwrap_or_else(|e| {
+        panic!("sparse {pr}x{pc} occ {occ_a}/{occ_b} densify={densify}: {e}")
+    });
+    // sparsity must actually reduce work: fewer mults than the dense count
+    let dense_mults =
+        (m.div_ceil(block) * n.div_ceil(block) * k.div_ceil(block)) as u64;
+    if occ_a < 0.8 && occ_b < 0.8 {
+        assert!(
+            mults < dense_mults,
+            "sparse multiply did dense work: {mults} vs {dense_mults}"
+        );
+    }
+}
+
+#[test]
+fn sparse_blocked_half_occupancy() {
+    sparse_case(2, 2, 48, 48, 48, 6, 0.5, 0.5, 1, false);
+}
+
+#[test]
+fn sparse_blocked_low_occupancy() {
+    sparse_case(2, 2, 60, 60, 60, 6, 0.1, 0.15, 2, false);
+}
+
+#[test]
+fn sparse_densified() {
+    // densification zero-fills absent blocks — result identical
+    sparse_case(2, 2, 48, 48, 48, 6, 0.5, 0.5, 2, true);
+}
+
+#[test]
+fn sparse_times_dense() {
+    sparse_case(2, 2, 44, 44, 44, 11, 0.3, 1.0, 1, false);
+}
+
+#[test]
+fn sparse_rect_grid() {
+    sparse_case(2, 3, 36, 30, 42, 6, 0.4, 0.6, 2, false);
+}
+
+#[test]
+fn sparse_property_random_occupancies() {
+    check("sparse cannon vs dense reference", 6, |rng, _size| {
+        let occ_a = rng.next_f64();
+        let occ_b = rng.next_f64();
+        let block = rng.range(3, 7);
+        let nb = rng.range(3, 6);
+        let dim = block * nb;
+        let parts_seed = rng.next_u64() & 0xFFFF;
+        let parts = run_ranks(4, NetModel::aries(2), move |world| {
+            let grid = Grid2D::new(world, 2, 2);
+            let coords = grid.coords();
+            let a = sparse_random(
+                BlockLayout::new(dim, block),
+                BlockLayout::new(dim, block),
+                Distribution::cyclic(2),
+                Distribution::cyclic(2),
+                coords,
+                occ_a,
+                parts_seed,
+            );
+            let b = sparse_random(
+                BlockLayout::new(dim, block),
+                BlockLayout::new(dim, block),
+                Distribution::cyclic(2),
+                Distribution::cyclic(2),
+                coords,
+                occ_b,
+                parts_seed + 1,
+            );
+            let cfg = MultiplyConfig {
+                engine: EngineOpts {
+                    threads: 2,
+                    densify: false,
+                    ..Default::default()
+                },
+                algorithm: Algorithm::Cannon,
+                ..Default::default()
+            };
+            let out = multiply(&grid, &a, &b, &cfg).unwrap();
+            let mut dense = vec![0.0f32; dim * dim];
+            out.c.add_into_dense(&mut dense);
+            dense
+        });
+        let mut got = vec![0.0f32; dim * dim];
+        for part in parts {
+            for (g, x) in got.iter_mut().zip(part.iter()) {
+                *g += x;
+            }
+        }
+        let l = BlockLayout::new(dim, block);
+        let ar = sparse_reference(&l, &l, occ_a, parts_seed);
+        let br = sparse_reference(&l, &l, occ_b, parts_seed + 1);
+        let mut want = vec![0.0f32; dim * dim];
+        smm_cpu::gemm_blocked(dim, dim, dim, &ar, &br, &mut want);
+        assert_allclose(&got, &want, 3e-3, 3e-3)
+    });
+}
