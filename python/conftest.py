@@ -1,0 +1,75 @@
+"""Pytest bootstrap for the python/ tree.
+
+Two environment gaps are bridged here so the unit tests run out of the
+box (the container has jax but no `hypothesis`, and `compile/` is a
+plain directory package, not installed):
+
+* put `python/` on sys.path so `from compile import ...` resolves when
+  pytest is invoked from the repository root;
+* if the real `hypothesis` package is unavailable, install a minimal
+  deterministic stand-in that supports the subset these tests use
+  (`@settings(max_examples=..., deadline=None)`, `@given(**kwargs)` with
+  `st.integers(lo, hi)` / `st.sampled_from(seq)`). The stand-in draws
+  seeded pseudo-random examples, so failures replay exactly.
+"""
+
+from __future__ import annotations
+
+import os
+import random
+import sys
+import types
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+try:  # pragma: no cover - prefer the real package when present
+    import hypothesis  # noqa: F401
+except ImportError:  # build the stand-in
+    _mod = types.ModuleType("hypothesis")
+    _strategies = types.ModuleType("hypothesis.strategies")
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+    def _sampled_from(seq):
+        items = list(seq)
+        return _Strategy(lambda rnd: rnd.choice(items))
+
+    _strategies.integers = _integers
+    _strategies.sampled_from = _sampled_from
+
+    def _given(**strategy_kwargs):
+        def decorate(fn):
+            def wrapper(self):
+                examples = getattr(wrapper, "_max_examples", 10)
+                rnd = random.Random(0xDBC5)
+                for _ in range(examples):
+                    kwargs = {
+                        name: strat.sample(rnd)
+                        for name, strat in strategy_kwargs.items()
+                    }
+                    fn(self, **kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper._max_examples = 10
+            return wrapper
+
+        return decorate
+
+    def _settings(**config):
+        def decorate(fn):
+            fn._max_examples = config.get("max_examples", 10)
+            return fn
+
+        return decorate
+
+    _mod.given = _given
+    _mod.settings = _settings
+    _mod.strategies = _strategies
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _strategies

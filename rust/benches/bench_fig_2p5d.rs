@@ -1,0 +1,141 @@
+//! Bench — the 2.5D communication-avoiding multiply (arXiv:1705.10218)
+//! against plain Cannon: per-rank communication volume and virtual time
+//! across replication factors c ∈ {1, 2, 4} on 16 model-mode ranks, plus
+//! the one-time replication cost the steady state amortizes.
+
+use dbcsr::bench::table::{fmt_secs, Table};
+use dbcsr::dist::{run_ranks, Grid2D, Grid3D, NetModel};
+use dbcsr::matrix::matrix::Fill;
+use dbcsr::matrix::{DistMatrix, Mode};
+use dbcsr::multiply::twofive::{replicate_to_layers, twofive_operands};
+use dbcsr::multiply::{multiply, Algorithm, EngineOpts, MultiplyConfig};
+
+const DIM: usize = 2816;
+const BLOCK: usize = 22;
+const P: usize = 16;
+
+fn cfg(algorithm: Algorithm) -> MultiplyConfig {
+    MultiplyConfig {
+        engine: EngineOpts {
+            threads: 3,
+            densify: true,
+            ..Default::default()
+        },
+        algorithm,
+        ..Default::default()
+    }
+}
+
+/// (mean per-rank comm MiB, max virtual seconds) of one multiply.
+fn cannon_point() -> (f64, f64) {
+    let parts = run_ranks(P, NetModel::aries(4), move |world| {
+        let grid = Grid2D::new(world, 4, 4);
+        let coords = grid.coords();
+        let a = DistMatrix::dense_cyclic(DIM, DIM, BLOCK, (4, 4), coords, Mode::Model, Fill::Zero);
+        let b = a.clone();
+        let out = multiply(&grid, &a, &b, &cfg(Algorithm::Cannon)).unwrap();
+        (out.stats.comm_bytes, out.virtual_seconds)
+    });
+    summarize(parts)
+}
+
+fn twofive_point(layers: usize) -> (f64, f64) {
+    let (rows, cols) = match layers {
+        1 => (4, 4),
+        2 => (2, 4),
+        4 => (2, 2),
+        other => panic!("no factorization for c={other}"),
+    };
+    let parts = run_ranks(P, NetModel::aries(4), move |world| {
+        let g3 = Grid3D::new(world, rows, cols, layers);
+        let (a, b) = twofive_operands(&g3, DIM, DIM, DIM, BLOCK, Mode::Model, 1, 2);
+        let grid = Grid2D::new(g3.world.clone(), 4, 4);
+        let out = multiply(&grid, &a, &b, &cfg(Algorithm::TwoFiveD { layers })).unwrap();
+        (out.stats.comm_bytes, out.virtual_seconds)
+    });
+    summarize(parts)
+}
+
+/// Mean per-rank bytes the one-time layer replication broadcasts
+/// (canonical layout, charged to the traffic counters).
+fn replication_cost(layers: usize) -> f64 {
+    if layers == 1 {
+        return 0.0;
+    }
+    let (rows, cols) = if layers == 2 { (2, 4) } else { (2, 2) };
+    let parts = run_ranks(P, NetModel::aries(4), move |world| {
+        let g3 = Grid3D::new(world, rows, cols, layers);
+        let coords = g3.grid.coords();
+        let before = g3.world.stats().bytes_sent;
+        let mut a = DistMatrix::dense_cyclic(
+            DIM,
+            DIM,
+            BLOCK,
+            (rows, cols),
+            coords,
+            Mode::Model,
+            Fill::Zero,
+        );
+        let mut b = a.clone();
+        replicate_to_layers(&g3, &mut a);
+        replicate_to_layers(&g3, &mut b);
+        g3.world.stats().bytes_sent - before
+    });
+    parts.iter().sum::<u64>() as f64 / P as f64 / (1 << 20) as f64
+}
+
+fn summarize(parts: Vec<(u64, f64)>) -> (f64, f64) {
+    let bytes = parts.iter().map(|(b, _)| *b).sum::<u64>() as f64 / parts.len() as f64;
+    let secs = parts.iter().map(|(_, t)| *t).fold(0.0f64, f64::max);
+    (bytes / (1 << 20) as f64, secs)
+}
+
+fn main() {
+    println!("=== bench_fig_2p5d ===\n");
+    println!(
+        "2.5D vs Cannon, {DIM}² dense, block {BLOCK}, {P} model ranks (Aries, 4 ranks/node)\n"
+    );
+
+    let (cannon_mib, cannon_t) = cannon_point();
+    let mut t = Table::new(
+        "per-rank comm volume and virtual time per multiply",
+        &[
+            "algorithm",
+            "grid",
+            "MiB/rank",
+            "vs Cannon",
+            "virtual time",
+            "replication MiB/rank (one-time)",
+        ],
+    );
+    t.row(vec![
+        "Cannon".into(),
+        "4x4".into(),
+        format!("{cannon_mib:.1}"),
+        "1.00x".into(),
+        fmt_secs(cannon_t),
+        "-".into(),
+    ]);
+    for layers in [1usize, 2, 4] {
+        let (mib, secs) = twofive_point(layers);
+        let grid = match layers {
+            1 => "4x4x1",
+            2 => "2x4x2",
+            _ => "2x2x4",
+        };
+        t.row(vec![
+            format!("2.5D c={layers}"),
+            grid.into(),
+            format!("{mib:.1}"),
+            format!("{:.2}x", cannon_mib / mib),
+            fmt_secs(secs),
+            format!("{:.1}", replication_cost(layers)),
+        ]);
+    }
+    t.print();
+    println!(
+        "expected: comm drops ~√c vs the c=1 sweep (and ≥1.8x vs Cannon at c=4, which\n\
+         also skips the skew in the steady-state native layout); the replication\n\
+         broadcast is the one-time cost a repeated-multiply workload amortizes"
+    );
+}

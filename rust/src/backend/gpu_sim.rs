@@ -23,13 +23,24 @@ use crate::perfmodel::PerfModel;
 use crate::runtime::{Runtime, VariantKind};
 
 /// Device out-of-memory (the Fig. 2 annotation).
-#[derive(Debug, thiserror::Error)]
-#[error("simulated GPU out of memory: need {need} B, capacity {cap} B (pool high-water {peak} B)")]
+#[derive(Debug)]
 pub struct DeviceOom {
     pub need: u64,
     pub cap: u64,
     pub peak: u64,
 }
+
+impl std::fmt::Display for DeviceOom {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "simulated GPU out of memory: need {} B, capacity {} B (pool high-water {} B)",
+            self.need, self.cap, self.peak
+        )
+    }
+}
+
+impl std::error::Error for DeviceOom {}
 
 #[derive(Clone, Copy, Debug, Default)]
 struct Stream {

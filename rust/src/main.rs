@@ -100,7 +100,7 @@ fn autotune(args: &Args) {
         .collect();
     let tuned = tuner.tune(&sizes, 2);
     if args.switch("emit") {
-        println!("{}", tuned_to_json(&tuned).to_string());
+        println!("{}", tuned_to_json(&tuned));
         return;
     }
     println!("{:<8} {:>9} {:>7} {:>7} {:>10} {:>9}", "size", "grouping", "unroll", "pad", "GF/s(est)", "source");

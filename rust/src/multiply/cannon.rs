@@ -25,7 +25,7 @@ use super::engine::LocalEngine;
 use super::vgrid::VGrid;
 
 /// Panel key: (virtual row, group) for A; (group, virtual col) for B.
-type Key = (usize, usize);
+pub(super) type Key = (usize, usize);
 
 /// Multiply `C = A · B` with generalized Cannon. Collective over the
 /// grid; returns this rank's C.
@@ -50,12 +50,12 @@ pub fn multiply_cannon(
     let mut a_panels: BTreeMap<Key, LocalCsr> = vg
         .a_initial()
         .into_iter()
-        .map(|(i, g)| ((i, g), extract_panel(a, &vg, i, g, true)))
+        .map(|(i, g)| ((i, g), extract_panel(a, &vg, i, g)))
         .collect();
     let mut b_panels: BTreeMap<Key, LocalCsr> = vg
         .b_initial()
         .into_iter()
-        .map(|(g, j)| ((g, j), extract_panel(b, &vg, g, j, false)))
+        .map(|(g, j)| ((g, j), extract_panel(b, &vg, g, j)))
         .collect();
 
     // skew A along the grid row
@@ -77,7 +77,7 @@ pub fn multiply_cannon(
             a_panels,
             &sends,
             &recvs,
-            |key| panel_meta(a, &vg, key.0, key.1, true),
+            |key| panel_meta(a, &vg, key.0, key.1),
             10,
             mode,
         );
@@ -101,7 +101,7 @@ pub fn multiply_cannon(
             b_panels,
             &sends,
             &recvs,
-            |key| panel_meta(b, &vg, key.0, key.1, false),
+            |key| panel_meta(b, &vg, key.0, key.1),
             11,
             mode,
         );
@@ -109,20 +109,7 @@ pub fn multiply_cannon(
 
     // ---- C slots ----------------------------------------------------------
     let slots = vg.slots();
-    let c_panels: Vec<LocalCsr> = slots
-        .iter()
-        .map(|&(i, j)| {
-            let rows = vg.blocks_of(i, a.rows.nblocks);
-            let cols = vg.blocks_of(j, b.cols.nblocks);
-            let rs: Vec<usize> = rows.iter().map(|&x| a.rows.block_size(x)).collect();
-            let cs: Vec<usize> = cols.iter().map(|&x| b.cols.block_size(x)).collect();
-            match mode {
-                Mode::Real => LocalCsr::dense(rows, cols, rs, cs),
-                Mode::Model => LocalCsr::dense_phantom(rows, cols, rs, cs),
-            }
-        })
-        .collect();
-    engine.begin(&grid.world, c_panels)?;
+    engine.begin(&grid.world, build_c_slots(&vg, &slots, a, b))?;
 
     // ---- ticks -------------------------------------------------------------
     for s in 0..vg.l {
@@ -149,7 +136,7 @@ pub fn multiply_cannon(
                     grid.right(),
                     a_panels,
                     &next_keys,
-                    |key| panel_meta(a, &vg, key.0, key.1, true),
+                    |key| panel_meta(a, &vg, key.0, key.1),
                     12,
                     mode,
                 );
@@ -169,7 +156,7 @@ pub fn multiply_cannon(
                     grid.down(),
                     b_panels,
                     &next_keys,
-                    |key| panel_meta(b, &vg, key.0, key.1, false),
+                    |key| panel_meta(b, &vg, key.0, key.1),
                     13,
                     mode,
                 );
@@ -179,17 +166,64 @@ pub fn multiply_cannon(
 
     // ---- assemble C ---------------------------------------------------------
     let out_panels = engine.finish(&grid.world);
+    Ok(assemble_c(
+        a,
+        b,
+        (grid.rows, grid.cols),
+        (r, c),
+        mode,
+        &out_panels,
+        true,
+    ))
+}
+
+/// The per-slot C accumulation panels: dense (rows of `i`) × (cols of
+/// `j`) per slot, real or phantom per `mode`.
+pub(super) fn build_c_slots(
+    vg: &VGrid,
+    slots: &[(usize, usize)],
+    a: &DistMatrix,
+    b: &DistMatrix,
+) -> Vec<LocalCsr> {
+    slots
+        .iter()
+        .map(|&(i, j)| {
+            let rows = vg.blocks_of(i, a.rows.nblocks);
+            let cols = vg.blocks_of(j, b.cols.nblocks);
+            let rs: Vec<usize> = rows.iter().map(|&x| a.rows.block_size(x)).collect();
+            let cs: Vec<usize> = cols.iter().map(|&x| b.cols.block_size(x)).collect();
+            match a.mode {
+                Mode::Real => LocalCsr::dense(rows, cols, rs, cs),
+                Mode::Model => LocalCsr::dense_phantom(rows, cols, rs, cs),
+            }
+        })
+        .collect()
+}
+
+/// Assemble the output C matrix (cyclic over `grid_dims`) from finished
+/// slot panels; `copy_data` selects whether this rank's panels hold the
+/// result (real mode) or the share stays zero (model mode, or non-root
+/// 2.5D layers whose partial C was reduced away).
+pub(super) fn assemble_c(
+    a: &DistMatrix,
+    b: &DistMatrix,
+    grid_dims: (usize, usize),
+    coords: (usize, usize),
+    mode: Mode,
+    out_panels: &[LocalCsr],
+    copy_data: bool,
+) -> DistMatrix {
     let mut cmat = DistMatrix::dense(
         a.rows.clone(),
         b.cols.clone(),
-        Distribution::cyclic(grid.rows),
-        Distribution::cyclic(grid.cols),
-        (r, c),
+        Distribution::cyclic(grid_dims.0),
+        Distribution::cyclic(grid_dims.1),
+        coords,
         mode,
         crate::matrix::matrix::Fill::Zero,
     );
-    if mode == Mode::Real {
-        for panel in &out_panels {
+    if mode == Mode::Real && copy_data {
+        for panel in out_panels {
             for (pb, pr_, pc_) in panel.iter_nnz() {
                 let (gi, gj) = (panel.row_ids[pr_], panel.col_ids[pc_]);
                 let area = panel.area_of(pr_, pc_);
@@ -203,7 +237,7 @@ pub fn multiply_cannon(
             }
         }
     }
-    Ok(cmat)
+    cmat
 }
 
 fn check_cyclic(m: &DistMatrix, grid: &Grid2D) {
@@ -218,13 +252,13 @@ fn check_cyclic(m: &DistMatrix, grid: &Grid2D) {
 }
 
 /// Block-id metadata of panel (x, y): A panels are (vrow, group), B
-/// panels (group, vcol); `is_a` selects which dims come from which layout.
-fn panel_meta(
+/// panels (group, vcol) — either way rows come from the matrix's row
+/// layout and cols from its column layout.
+pub(super) fn panel_meta(
     m: &DistMatrix,
     vg: &VGrid,
     x: usize,
     y: usize,
-    _is_a: bool,
 ) -> (Vec<usize>, Vec<usize>, Vec<usize>, Vec<usize>) {
     let rows = vg.blocks_of(x, m.rows.nblocks);
     let cols = vg.blocks_of(y, m.cols.nblocks);
@@ -237,8 +271,8 @@ fn panel_meta(
 /// construction of the initial panel sets). The panel inherits the
 /// matrix's sparsity pattern — absent blocks stay absent, so the blocked
 /// engine skips them and the densified copies zero-fill them.
-fn extract_panel(m: &DistMatrix, vg: &VGrid, x: usize, y: usize, is_a: bool) -> LocalCsr {
-    let (rows, cols, rs, cs) = panel_meta(m, vg, x, y, is_a);
+pub(super) fn extract_panel(m: &DistMatrix, vg: &VGrid, x: usize, y: usize) -> LocalCsr {
+    let (rows, cols, rs, cs) = panel_meta(m, vg, x, y);
     match m.mode {
         Mode::Model => LocalCsr::dense_phantom(rows, cols, rs, cs),
         Mode::Real => {
@@ -274,7 +308,7 @@ fn extract_panel(m: &DistMatrix, vg: &VGrid, x: usize, y: usize, is_a: bool) -> 
 /// rank, key) for every held panel; `recvs` = (src local rank, key) for
 /// every expected panel. Panels travel concatenated per (src, dst) pair,
 /// ordered by key.
-fn exchange<F>(
+pub(super) fn exchange<F>(
     comm: &crate::dist::CommView,
     mut held: BTreeMap<Key, LocalCsr>,
     sends: &[(usize, Key)],
@@ -306,13 +340,21 @@ where
         keys.sort_unstable();
     }
 
-    // local keep
-    if let Some(keys) = by_dst.remove(&me) {
+    // local keep: what we address to ourselves must be exactly what we
+    // expect from ourselves — a mismatch would silently drop panels (the
+    // kept set would shadow the expected one)
+    let kept = by_dst.remove(&me);
+    let expected = by_src.remove(&me);
+    debug_assert_eq!(
+        kept.as_deref().unwrap_or(&[]),
+        expected.as_deref().unwrap_or(&[]),
+        "self-keep panels must match the panels expected from self"
+    );
+    if let Some(keys) = kept {
         for k in keys {
             let p = held.remove(&k).expect("held panel");
             out.insert(k, p);
         }
-        by_src.remove(&me);
     }
     // sends first (non-blocking), then receives
     for (&dst, keys) in &by_dst {
@@ -328,7 +370,7 @@ where
 /// One-tick shift: send everything to `dst`, receive the next panel set
 /// from `src` (world-rank addressed).
 #[allow(clippy::too_many_arguments)]
-fn shift<F>(
+pub(super) fn shift<F>(
     world: &crate::dist::CommView,
     dst: usize,
     src: usize,

@@ -177,6 +177,15 @@ impl LocalEngine {
     ) -> Result<(), DeviceOom> {
         let threads = self.opts.threads.max(1);
         let eb = self.elem_bytes();
+        // degenerate panels (virtual rows/cols can exceed the block count
+        // on small problems): nothing to copy, upload or multiply — skip
+        // before charging any densify/transfer costs
+        if a.nrows() == 0 || a.ncols() == 0 || b.nrows() == 0 || b.ncols() == 0 {
+            self.stats.h2d_bytes = self.gpu.h2d_bytes;
+            self.stats.d2h_bytes = self.gpu.d2h_bytes;
+            self.stats.dev_mem_peak = self.gpu.mem_peak;
+            return Ok(());
+        }
         let a_ranges = densify::thread_row_ranges(a.nrows(), threads);
         let (kb_total, n_total) = densify::dense_dims(b, 0, b.nrows());
 
@@ -193,6 +202,12 @@ impl LocalEngine {
         }
         self.stats.densify_bytes += b_copy_bytes;
 
+        // B uploads once per tick, charged to the first thread that
+        // actually issues a GEMM (threads with empty row ranges are
+        // skipped, so charging "thread 0" would drop B's transfer
+        // whenever thread 0 owns no rows)
+        let first_active = a_ranges.iter().position(|&(_, len)| len > 0);
+
         // per-thread: densify A rows, then one GEMM
         let t_base = comm.now();
         for (t, &(r0, len)) in a_ranges.iter().enumerate() {
@@ -208,8 +223,8 @@ impl LocalEngine {
             let host_now = lane_start + densify_s;
             self.lane_free[t] = host_now;
 
-            // h2d: this thread's A panel, plus B once (t == first active)
-            let h2d = a_bytes_t + if t == 0 { b_bytes } else { 0 };
+            // h2d: this thread's A panel, plus B once (first active thread)
+            let h2d = a_bytes_t + if Some(t) == first_active { b_bytes } else { 0 };
             let real_exec = self.mode == Mode::Real;
             if real_exec {
                 densify::densify_rows(a, r0, len, &mut self.dense_a);
@@ -247,6 +262,14 @@ impl LocalEngine {
         b: &LocalCsr,
     ) -> Result<(), DeviceOom> {
         let threads = self.opts.threads.max(1);
+        // degenerate panels: no stacks will be generated, so the panel
+        // upload must not be charged either (mirrors tick_densified)
+        if a.nrows() == 0 || a.ncols() == 0 || b.nrows() == 0 || b.ncols() == 0 {
+            self.stats.h2d_bytes = self.gpu.h2d_bytes;
+            self.stats.d2h_bytes = self.gpu.d2h_bytes;
+            self.stats.dev_mem_peak = self.gpu.mem_peak;
+            return Ok(());
+        }
         let stacks = match self.mode {
             Mode::Real => {
                 generation::generate_real(a, b, &self.slots[slot].panel, threads, self.opts.stack_cap)
@@ -328,12 +351,25 @@ impl LocalEngine {
             let done = self.gpu.run_transfer(self.gpu.sync(), 0, slot.c_bytes);
             comm.advance_to(done);
             if self.opts.densify {
-                // per-thread undensify copies back into blocks
-                let per_thread = slot.c_bytes / threads as u64;
-                for t in 0..threads {
+                // per-thread undensify copies back into blocks, charged by
+                // each thread's actual share of the panel (integer-dividing
+                // c_bytes would drop remainder bytes, and threads with
+                // empty row ranges would be charged for copies they never
+                // perform); the charges sum exactly to c_bytes
+                let eb = self.elem_bytes();
+                debug_assert_eq!(slot.ranges.len(), threads);
+                let mut charged = 0u64;
+                for (t, &(r0, len)) in slot.ranges.iter().enumerate() {
+                    if len == 0 {
+                        continue;
+                    }
+                    let (rows, cols) = densify::dense_dims(&slot.panel, r0, len);
+                    let bytes = (rows * cols) as u64 * eb;
+                    charged += bytes;
                     self.lane_free[t] = self.lane_free[t].max(comm.now())
-                        + self.perf().memcpy_seconds(per_thread);
+                        + self.perf().memcpy_seconds(bytes);
                 }
+                debug_assert_eq!(charged, slot.c_bytes, "undensify split must cover C");
                 self.stats.densify_bytes += slot.c_bytes;
                 if self.mode == Mode::Real {
                     let ranges = slot.ranges.clone();
@@ -576,6 +612,113 @@ mod tests {
         assert_eq!(r.flops, m.flops);
         // model bytes are f64 (2x f32)
         assert_eq!(m.h2d_bytes, 2 * r.h2d_bytes);
+    }
+
+    #[test]
+    fn densified_empty_a_panel_charges_nothing() {
+        // regression: threads > A block-rows, degenerate at zero rows —
+        // no thread issues a GEMM, so neither B's densify copy nor its
+        // H2D upload may be charged (the upload used to be keyed to
+        // "thread 0", which never runs here, and the copy was charged
+        // unconditionally)
+        let out = run_ranks(1, NetModel::ideal(), |comm| {
+            let mut eng = engine(true, 4, Mode::Model);
+            // C with zero block rows; A has zero rows over 2 K-blocks;
+            // B is a real 2x1 block panel
+            let c = LocalCsr::dense_phantom(vec![], vec![0], vec![], vec![6]);
+            let a = LocalCsr::dense_phantom(vec![], vec![0, 1], vec![], vec![8, 8]);
+            let b = LocalCsr::dense_phantom(vec![0, 1], vec![0], vec![8, 8], vec![6]);
+            eng.begin(&comm, vec![c]).unwrap();
+            eng.tick(&comm, 0, &a, &b).unwrap();
+            let _ = eng.finish(&comm);
+            eng.stats.clone()
+        });
+        assert_eq!(out[0].densify_bytes, 0, "no densify work without rows");
+        assert_eq!(out[0].h2d_bytes, 0, "B upload must not be charged");
+        assert_eq!(out[0].block_mults, 0);
+    }
+
+    #[test]
+    fn densified_b_upload_charged_exactly_once() {
+        // with more threads than A block-rows, only the active threads
+        // run — B's upload must still be charged exactly once
+        let out = run_ranks(1, NetModel::ideal(), |comm| {
+            let mut eng = engine(true, 3, Mode::Model);
+            let rows = vec![4usize, 4];
+            let ks = vec![4usize];
+            let cols = vec![4usize];
+            let c = LocalCsr::dense_phantom(vec![0, 1], vec![0], rows.clone(), cols.clone());
+            let a = LocalCsr::dense_phantom(vec![0, 1], vec![0], rows.clone(), ks.clone());
+            let b = LocalCsr::dense_phantom(vec![0], vec![0], ks.clone(), cols.clone());
+            eng.begin(&comm, vec![c]).unwrap();
+            eng.tick(&comm, 0, &a, &b).unwrap();
+            eng.stats.clone()
+        });
+        // model elem = 8 B: C upload (32 elems, from begin) + A panels
+        // (2*4*4 elems) + B (4*4 elems) exactly once
+        assert_eq!(out[0].h2d_bytes, (32 + 32 + 16) * 8);
+        assert_eq!(out[0].stacks, 2, "one GEMM per active thread");
+    }
+
+    #[test]
+    fn undensify_split_skips_idle_lanes() {
+        // regression: one block row, two threads — all undensify work
+        // belongs to thread 0, so finish-time must equal the
+        // single-thread run (c_bytes/threads used to charge half the
+        // copy to the idle lane, shortening the critical path)
+        let now_for = |threads: usize| {
+            run_ranks(1, NetModel::ideal(), move |comm| {
+                let c = LocalCsr::dense_phantom(vec![0], vec![0], vec![7], vec![6]);
+                let mut eng = engine(true, threads, Mode::Model);
+                eng.begin(&comm, vec![c]).unwrap();
+                let _ = eng.finish(&comm);
+                comm.now()
+            })[0]
+        };
+        assert_eq!(
+            now_for(1),
+            now_for(2),
+            "idle lanes must not absorb undensify bytes"
+        );
+    }
+
+    #[test]
+    fn undensify_split_covers_remainder_bytes() {
+        // regression: c_bytes = 896 does not divide by 3 threads; the
+        // integer split charged 3x298 = 894 B and dropped the remainder.
+        // With memcpy as the dominant cost, the finish clock must reflect
+        // the largest *actual* per-thread share (336 B on thread 2).
+        let out = run_ranks(1, NetModel::ideal(), |comm| {
+            let mut perf = PerfModel::default();
+            perf.memcpy_bw = 1.0; // 1 B/s: clock ≈ bytes copied
+            let mut eng = LocalEngine::new(
+                EngineOpts {
+                    threads: 3,
+                    densify: true,
+                    ..Default::default()
+                },
+                Mode::Model,
+                perf,
+                None,
+                1,
+            );
+            // rows 5,5,6 x cols 7 → 112 elems → 896 model bytes
+            let c = LocalCsr::dense_phantom(
+                vec![0, 1, 2],
+                vec![0],
+                vec![5, 5, 6],
+                vec![7],
+            );
+            eng.begin(&comm, vec![c]).unwrap();
+            let _ = eng.finish(&comm);
+            comm.now()
+        });
+        // thread 2 undensifies the 6-row range: 6*7*8 = 336 bytes
+        assert!(
+            (out[0] - 336.0).abs() < 1.0,
+            "finish clock {} should track the 336 B lane",
+            out[0]
+        );
     }
 
     #[test]

@@ -16,12 +16,13 @@ pub mod engine;
 pub mod generation;
 pub mod tall_skinny;
 pub mod traversal;
+pub mod twofive;
 pub mod vgrid;
 
 use std::rc::Rc;
 
 use crate::backend::gpu_sim::DeviceOom;
-use crate::dist::Grid2D;
+use crate::dist::{Grid2D, Grid3D};
 use crate::matrix::{DistMatrix, Distribution};
 use crate::perfmodel::PerfModel;
 use crate::runtime::Runtime;
@@ -33,10 +34,17 @@ pub use engine::{EngineOpts, LocalEngine};
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Algorithm {
     /// Pick by operand layout: tall-skinny layouts (A column-cyclic over
-    /// all ranks) use the O(1) algorithm, everything else Cannon.
+    /// all ranks) use the O(1) algorithm; operands distributed over a
+    /// strict sub-grid of the world (each layer holding a replica) use
+    /// the 2.5D algorithm with `world / sub-grid` layers; everything
+    /// else Cannon.
     Auto,
     Cannon,
     TallSkinny,
+    /// 2.5D communication-avoiding multiply over `layers` stacked grids
+    /// (arXiv:1705.10218); operands must be in a layer-replicated layout
+    /// (see [`twofive`]).
+    TwoFiveD { layers: usize },
 }
 
 /// Per-multiplication configuration.
@@ -72,6 +80,40 @@ pub struct MultiplyOutcome {
     pub virtual_seconds: f64,
 }
 
+/// Resolve `Auto` from the operand layouts: tall-skinny 1-D layouts use
+/// the O(1) algorithm; operands distributed over a sub-grid covering
+/// `1/layers` of the world (the 2.5D replicated layout) use 2.5D with
+/// `layers = P / sub-grid`; everything else runs Cannon.
+fn resolve_algorithm(requested: Algorithm, p: usize, a: &DistMatrix, b: &DistMatrix) -> Algorithm {
+    match requested {
+        Algorithm::Auto => {
+            let ts = matches!(a.col_dist, Distribution::Cyclic { nproc } if nproc == p)
+                && matches!(a.row_dist, Distribution::Cyclic { nproc: 1 })
+                && matches!(b.row_dist, Distribution::Cyclic { nproc } if nproc == p)
+                && matches!(b.col_dist, Distribution::Cyclic { nproc: 1 });
+            if ts {
+                return Algorithm::TallSkinny;
+            }
+            let (gr, gc) = (a.row_dist.nproc(), a.col_dist.nproc());
+            let sub = gr * gc;
+            let cyc = |d: &Distribution| matches!(d, Distribution::Cyclic { .. });
+            let all_cyclic =
+                cyc(&a.row_dist) && cyc(&a.col_dist) && cyc(&b.row_dist) && cyc(&b.col_dist);
+            let layered = all_cyclic
+                && sub < p
+                && p % sub == 0
+                && b.row_dist.nproc() == gr
+                && b.col_dist.nproc() == gc;
+            if layered {
+                Algorithm::TwoFiveD { layers: p / sub }
+            } else {
+                Algorithm::Cannon
+            }
+        }
+        other => other,
+    }
+}
+
 /// Multiply `C = A·B` over the grid. Collective; every rank passes its
 /// local matrix handles and receives its share of C.
 pub fn multiply(
@@ -81,16 +123,7 @@ pub fn multiply(
     cfg: &MultiplyConfig,
 ) -> Result<MultiplyOutcome, DeviceOom> {
     let world = &grid.world;
-    let use_ts = match cfg.algorithm {
-        Algorithm::Cannon => false,
-        Algorithm::TallSkinny => true,
-        Algorithm::Auto => {
-            matches!(a.col_dist, Distribution::Cyclic { nproc } if nproc == world.size())
-                && matches!(a.row_dist, Distribution::Cyclic { nproc: 1 })
-                && matches!(b.row_dist, Distribution::Cyclic { nproc } if nproc == world.size())
-                && matches!(b.col_dist, Distribution::Cyclic { nproc: 1 })
-        }
-    };
+    let alg = resolve_algorithm(cfg.algorithm, world.size(), a, b);
     let mut engine = LocalEngine::new(
         cfg.engine.clone(),
         a.mode,
@@ -100,10 +133,18 @@ pub fn multiply(
     );
     let t0 = world.now();
     let comm0 = world.stats();
-    let c = if use_ts {
-        tall_skinny::multiply_tall_skinny(world, a, b, &mut engine)?
-    } else {
-        cannon::multiply_cannon(grid, a, b, &mut engine)?
+    let c = match alg {
+        Algorithm::TallSkinny => tall_skinny::multiply_tall_skinny(world, a, b, &mut engine)?,
+        Algorithm::TwoFiveD { layers } => {
+            let g3 = Grid3D::new(
+                world.clone(),
+                a.row_dist.nproc(),
+                a.col_dist.nproc(),
+                layers,
+            );
+            twofive::multiply_twofive(&g3, a, b, &mut engine)?
+        }
+        _ => cannon::multiply_cannon(grid, a, b, &mut engine)?,
     };
     let comm1 = world.stats();
     let mut stats = engine.stats.clone();
@@ -135,6 +176,51 @@ mod tests {
         });
         assert_eq!(out[0].0, 2); // all 8/4 = 2 block rows present
         assert!(out[0].1);
+    }
+
+    #[test]
+    fn auto_picks_twofive_for_layered_layout() {
+        use crate::dist::Grid3D;
+        // operands over a 2x2 sub-grid of an 8-rank world → 2 layers
+        let out = run_ranks(8, NetModel::aries(2), |world| {
+            let g3 = Grid3D::new(world, 2, 2, 2);
+            let (a, b) = twofive::twofive_operands(&g3, 16, 16, 16, 4, Mode::Model, 1, 2);
+            let grid = Grid2D::new(g3.world.clone(), 2, 4);
+            let cfg = MultiplyConfig {
+                engine: EngineOpts {
+                    threads: 1,
+                    densify: false,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let out = multiply(&grid, &a, &b, &cfg).unwrap();
+            out.stats.block_mults
+        });
+        // the full product ran exactly once across layers: nb³ = 4³
+        let total: u64 = out.iter().sum();
+        assert_eq!(total, 64);
+    }
+
+    #[test]
+    fn explicit_twofive_matches_request() {
+        use crate::dist::Grid3D;
+        let out = run_ranks(4, NetModel::aries(2), |world| {
+            let g3 = Grid3D::new(world, 1, 2, 2);
+            let (a, b) = twofive::twofive_operands(&g3, 12, 12, 12, 4, Mode::Model, 3, 4);
+            let grid = Grid2D::new(g3.world.clone(), 2, 2);
+            let cfg = MultiplyConfig {
+                engine: EngineOpts {
+                    threads: 1,
+                    densify: false,
+                    ..Default::default()
+                },
+                algorithm: Algorithm::TwoFiveD { layers: 2 },
+                ..Default::default()
+            };
+            multiply(&grid, &a, &b, &cfg).unwrap().stats.block_mults
+        });
+        assert_eq!(out.iter().sum::<u64>(), 27);
     }
 
     #[test]

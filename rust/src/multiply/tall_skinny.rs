@@ -19,6 +19,7 @@ use super::engine::LocalEngine;
 /// Build this rank's share of a tall-skinny operand pair: A is
 /// column-cyclic over all P ranks, B row-cyclic (the layout the
 /// algorithm needs). Returns (A, B).
+#[allow(clippy::too_many_arguments)]
 pub fn ts_operands(
     m: usize,
     n: usize,

@@ -1,0 +1,737 @@
+//! 2.5D communication-avoiding multiplication (Lazzaro, VandeVondele,
+//! Hutter, Schulthess — arXiv:1705.10218, the DBCSR lineage paper).
+//!
+//! The P ranks factor into a [`Grid3D`]: `c` stacked `pr × pc` layer
+//! grids. A and B are **replicated** across the `c` layers; each layer
+//! runs a *shortened* generalized-Cannon sweep — `L/c` of the `L` virtual
+//! ticks, starting at the layer's own offset `s0 = layer · L/c` — through
+//! the unmodified [`LocalEngine`], and the partial C panels are
+//! sum-reduced across the layer communicator at the end. Per rank, the
+//! shift traffic drops from `L · |A+B|/P` to `L/c · c·|A+B|/P / …` —
+//! net O(1/√(P/c)·1/c) = the √c reduction over Cannon — at the price of
+//! `c`-fold operand memory and one |C|-sized reduction.
+//!
+//! Two operand layouts are accepted, detected per matrix:
+//! * **native** (built by [`twofive_operands`], or any matrix whose
+//!   blocks already sit at this layer's tick-`s0` skewed positions):
+//!   panels extract locally, no skew traffic — the steady-state layout a
+//!   repeated-multiply workload (CP2K SCF) keeps between calls;
+//! * **canonical** (each layer holds the plain cyclic share over its
+//!   `pr × pc` grid, e.g. after [`replicate_to_layers`]): the driver
+//!   runs an offset-parameterized skew exchange along grid rows/columns
+//!   first, exactly like Cannon's pre-skew.
+//!
+//! The sweep period is `L = lcm(lcm(pr, pc), c)` (see
+//! [`VGrid::with_period`]): a multiple of the classic lcm fold so the
+//! virtual-grid algebra holds, and divisible by `c` so every layer owns
+//! an equal tick range.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::backend::gpu_sim::DeviceOom;
+use crate::dist::{Grid3D, Payload};
+use crate::matrix::matrix::block_rng;
+use crate::matrix::{BlockLayout, BlockStore, DistMatrix, Distribution, LocalCsr, Mode};
+use crate::util::even_chunk;
+
+use super::cannon::{assemble_c, build_c_slots, exchange, extract_panel, panel_meta, shift, Key};
+use super::engine::LocalEngine;
+use super::vgrid::{lcm, VGrid};
+
+/// Message tags of this driver (cannon uses 10–13).
+const TAG_SKEW_A: u64 = 14;
+const TAG_SKEW_B: u64 = 15;
+const TAG_SHIFT_A: u64 = 16;
+const TAG_SHIFT_B: u64 = 17;
+
+/// Sweep period for a (rows × cols × layers) topology: a multiple of
+/// lcm(rows, cols) divisible by `layers`, so each layer owns exactly
+/// `period / layers` ticks.
+pub fn sweep_period(rows: usize, cols: usize, layers: usize) -> usize {
+    lcm(lcm(rows, cols), layers.max(1))
+}
+
+/// Tick range `[s0, s0 + len)` owned by `layer`.
+pub fn layer_ticks(period: usize, layers: usize, layer: usize) -> (usize, usize) {
+    even_chunk(period, layers, layer)
+}
+
+/// Multiply `C = A · B` with the 2.5D algorithm. Collective over the 3-D
+/// topology; every rank passes its layer-local operand handles (native or
+/// canonical layout, see module docs) and receives its share of C: layer
+/// 0 holds the reduced result in the layer grid's cyclic distribution,
+/// layers > 0 return a zero share of the same layout (so summing
+/// per-rank dense views still reconstructs C exactly once).
+pub fn multiply_twofive(
+    g3: &Grid3D,
+    a: &DistMatrix,
+    b: &DistMatrix,
+    engine: &mut LocalEngine,
+) -> Result<DistMatrix, DeviceOom> {
+    assert_eq!(
+        a.cols.nblocks, b.rows.nblocks,
+        "inner block dimensions must match"
+    );
+    assert_eq!(a.mode, b.mode);
+    let mode = a.mode;
+    let grid = &g3.grid;
+    let (r, c) = grid.coords();
+    let lv = sweep_period(g3.rows, g3.cols, g3.layers);
+    let vg = VGrid::with_period(g3.rows, g3.cols, lv, r, c);
+    let (s0, nticks) = layer_ticks(lv, g3.layers, g3.layer);
+    debug_assert!(nticks > 0, "period is divisible by layers");
+
+    let slots = vg.slots();
+    // one A and one B panel per slot at the layer's start tick
+    let mut a_keys: Vec<Key> = slots
+        .iter()
+        .map(|&(i, j)| (i, vg.group_at(i, j, s0)))
+        .collect();
+    a_keys.sort_unstable();
+    a_keys.dedup();
+    let mut b_keys: Vec<Key> = slots
+        .iter()
+        .map(|&(i, j)| (vg.group_at(i, j, s0), j))
+        .collect();
+    b_keys.sort_unstable();
+    b_keys.dedup();
+
+    // ---- acquire start-position panels (local or skew exchange) ----------
+    // layout agreement: the exchange is pairwise within a row/column
+    // communicator, so all of its members must take the same branch. A
+    // few bytes of agreement traffic per multiply — noise next to the
+    // panel volume.
+    let a_native = all_agree(&grid.row, panels_located_here(a, &vg, &a_keys));
+    let b_native = all_agree(&grid.col, panels_located_here(b, &vg, &b_keys));
+    // canonical shares must be *replicas* across layers — a silently
+    // unreplicated operand would reduce to a wrong C, so fail loudly.
+    // Native shares differ per layer by design and are not checkable;
+    // whether to check must itself be agreed across the layer comm
+    // (a canonical matrix can look "native" to layers whose offset skew
+    // happens to be the identity, and the fingerprint broadcast is a
+    // collective every layer peer must join).
+    if g3.layers > 1 {
+        if !all_agree(&g3.layer_comm, a_native) {
+            check_layer_replicas(g3, a, "A");
+        }
+        if !all_agree(&g3.layer_comm, b_native) {
+            check_layer_replicas(g3, b, "B");
+        }
+    }
+    let mut a_panels = if a_native {
+        a_keys
+            .iter()
+            .map(|&(x, y)| ((x, y), extract_panel(a, &vg, x, y)))
+            .collect()
+    } else {
+        let held: BTreeMap<Key, LocalCsr> = vg
+            .a_initial()
+            .into_iter()
+            .map(|(i, g)| ((i, g), extract_panel(a, &vg, i, g)))
+            .collect();
+        let sends: Vec<(usize, Key)> = held
+            .keys()
+            .map(|&(i, g)| (vg.a_skew_col_at(i, g, s0), (i, g)))
+            .collect();
+        let recvs: Vec<(usize, Key)> = a_keys.iter().map(|&(i, g)| (g % vg.pc, (i, g))).collect();
+        exchange(
+            &grid.row,
+            held,
+            &sends,
+            &recvs,
+            |key| panel_meta(a, &vg, key.0, key.1),
+            TAG_SKEW_A,
+            mode,
+        )
+    };
+    let mut b_panels = if b_native {
+        b_keys
+            .iter()
+            .map(|&(x, y)| ((x, y), extract_panel(b, &vg, x, y)))
+            .collect()
+    } else {
+        let held: BTreeMap<Key, LocalCsr> = vg
+            .b_initial()
+            .into_iter()
+            .map(|(g, j)| ((g, j), extract_panel(b, &vg, g, j)))
+            .collect();
+        let sends: Vec<(usize, Key)> = held
+            .keys()
+            .map(|&(g, j)| (vg.b_skew_row_at(g, j, s0), (g, j)))
+            .collect();
+        let recvs: Vec<(usize, Key)> = b_keys.iter().map(|&(g, j)| (g % vg.pr, (g, j))).collect();
+        exchange(
+            &grid.col,
+            held,
+            &sends,
+            &recvs,
+            |key| panel_meta(b, &vg, key.0, key.1),
+            TAG_SKEW_B,
+            mode,
+        )
+    };
+
+    // ---- C slots ----------------------------------------------------------
+    engine.begin(&grid.world, build_c_slots(&vg, &slots, a, b))?;
+
+    // ---- the shortened sweep: ticks s0 .. s0 + L/c ------------------------
+    for t in 0..nticks {
+        let s = s0 + t;
+        for (idx, &(i, j)) in slots.iter().enumerate() {
+            let g = vg.group_at(i, j, s);
+            let ap = &a_panels[&(i, g)];
+            let bp = &b_panels[&(g, j)];
+            engine.tick(&grid.world, idx, ap, bp)?;
+        }
+        if t + 1 < nticks {
+            if vg.pc > 1 {
+                let next_keys: Vec<Key> = {
+                    let mut v: Vec<Key> = slots
+                        .iter()
+                        .map(|&(i, j)| (i, vg.group_at(i, j, s + 1)))
+                        .collect();
+                    v.sort_unstable();
+                    v.dedup();
+                    v
+                };
+                a_panels = shift(
+                    &grid.world,
+                    grid.left(),
+                    grid.right(),
+                    a_panels,
+                    &next_keys,
+                    |key| panel_meta(a, &vg, key.0, key.1),
+                    TAG_SHIFT_A,
+                    mode,
+                );
+            }
+            if vg.pr > 1 {
+                let next_keys: Vec<Key> = {
+                    let mut v: Vec<Key> = slots
+                        .iter()
+                        .map(|&(i, j)| (vg.group_at(i, j, s + 1), j))
+                        .collect();
+                    v.sort_unstable();
+                    v.dedup();
+                    v
+                };
+                b_panels = shift(
+                    &grid.world,
+                    grid.up(),
+                    grid.down(),
+                    b_panels,
+                    &next_keys,
+                    |key| panel_meta(b, &vg, key.0, key.1),
+                    TAG_SHIFT_B,
+                    mode,
+                );
+            }
+        }
+    }
+
+    // ---- sum-reduce the partial C panels across layers --------------------
+    let mut out_panels = engine.finish(&grid.world);
+    if g3.layers > 1 {
+        match mode {
+            Mode::Real => {
+                let mut all: Vec<f32> = Vec::new();
+                for p in &out_panels {
+                    all.extend_from_slice(p.store.data());
+                }
+                let reduced = g3.layer_comm.reduce_sum_f32(0, Payload::F32(all));
+                if g3.layer == 0 {
+                    let data = reduced.into_f32();
+                    let mut off = 0usize;
+                    for p in &mut out_panels {
+                        let n = p.store.data().len();
+                        p.store.data_mut().copy_from_slice(&data[off..off + n]);
+                        off += n;
+                    }
+                    debug_assert_eq!(off, data.len());
+                }
+            }
+            Mode::Model => {
+                let bytes: u64 = out_panels.iter().map(|p| p.store.wire_bytes()).sum();
+                let _ = g3
+                    .layer_comm
+                    .reduce_sum_f32(0, Payload::Phantom { bytes });
+            }
+        }
+    }
+
+    // ---- assemble C (layer 0 owns the result; other layers zero) ----------
+    Ok(assemble_c(
+        a,
+        b,
+        (grid.rows, grid.cols),
+        (r, c),
+        mode,
+        &out_panels,
+        g3.layer == 0,
+    ))
+}
+
+/// Panic unless this rank's canonical share is bit-identical to its
+/// layer-0 peer's (pattern shape always; element data in real mode). A
+/// cheap fingerprint broadcast — a few bytes against the panel volume —
+/// that turns "forgot `replicate_to_layers`" from a silently wrong C
+/// into a loud error.
+fn check_layer_replicas(g3: &Grid3D, m: &DistMatrix, name: &str) {
+    let mut fp: Vec<f32> = vec![m.local.nnz() as f32, m.local.elems() as f32];
+    if m.mode == Mode::Real {
+        // deterministic per-rank sum; replicas are bit-identical
+        fp.push(m.local.store.data().iter().sum::<f32>());
+    }
+    let payload = if g3.layer == 0 {
+        Some(Payload::F32(fp.clone()))
+    } else {
+        None
+    };
+    let reference = g3.layer_comm.bcast(0, payload).into_f32();
+    assert_eq!(
+        reference, fp,
+        "2.5D operand {name} is not replicated across layers \
+         (canonical layout requires identical layer shares — see \
+         twofive::replicate_to_layers)"
+    );
+}
+
+/// Collective boolean AND over `comm` (a sum-allreduce of 0/1).
+fn all_agree(comm: &crate::dist::CommView, local: bool) -> bool {
+    let sum = comm
+        .allreduce_sum_f32(Payload::F32(vec![if local { 1.0 } else { 0.0 }]))
+        .into_f32()[0];
+    sum as usize == comm.size()
+}
+
+/// Whether every listed panel's block rows/cols are locally *located*
+/// (present in the matrix's local index sets — sparsity within a panel is
+/// fine). True for native-layout operands; for canonical operands this is
+/// exactly the "skew is the identity for my grid row/column" case, which
+/// is uniform across the communicator the exchange would run on, so the
+/// local decision is globally consistent.
+fn panels_located_here(m: &DistMatrix, vg: &VGrid, keys: &[Key]) -> bool {
+    keys.iter().all(|&(x, y)| {
+        vg.blocks_of(x, m.rows.nblocks)
+            .iter()
+            .all(|gi| m.local.row_ids.binary_search(gi).is_ok())
+            && vg
+                .blocks_of(y, m.cols.nblocks)
+                .iter()
+                .all(|gj| m.local.col_ids.binary_search(gj).is_ok())
+    })
+}
+
+/// Build this rank's share of a dense operand pair in the 2.5D **native**
+/// layout: replicated across layers, with every panel already at its
+/// layer's tick-`s0` position (so [`multiply_twofive`] runs skew-free —
+/// the steady-state layout of a repeated-multiply workload). Block data
+/// matches `Fill::Random { seed }` / [`dense_reference`] semantics.
+///
+/// [`dense_reference`]: crate::matrix::matrix::dense_reference
+#[allow(clippy::too_many_arguments)]
+pub fn twofive_operands(
+    g3: &Grid3D,
+    m: usize,
+    n: usize,
+    k: usize,
+    block: usize,
+    mode: Mode,
+    seed_a: u64,
+    seed_b: u64,
+) -> (DistMatrix, DistMatrix) {
+    let (r, c) = g3.grid.coords();
+    let lv = sweep_period(g3.rows, g3.cols, g3.layers);
+    let vg = VGrid::with_period(g3.rows, g3.cols, lv, r, c);
+    let (s0, _) = layer_ticks(lv, g3.layers, g3.layer);
+    let slots = vg.slots();
+    let a_keys: BTreeSet<Key> = slots
+        .iter()
+        .map(|&(i, j)| (i, vg.group_at(i, j, s0)))
+        .collect();
+    let b_keys: BTreeSet<Key> = slots
+        .iter()
+        .map(|&(i, j)| (vg.group_at(i, j, s0), j))
+        .collect();
+    let a = native_matrix(
+        g3,
+        &vg,
+        BlockLayout::new(m, block),
+        BlockLayout::new(k, block),
+        &a_keys,
+        mode,
+        seed_a,
+    );
+    let b = native_matrix(
+        g3,
+        &vg,
+        BlockLayout::new(k, block),
+        BlockLayout::new(n, block),
+        &b_keys,
+        mode,
+        seed_b,
+    );
+    (a, b)
+}
+
+/// One dense operand in the native layout: the union of the given panels'
+/// blocks, filled deterministically per global block id.
+fn native_matrix(
+    g3: &Grid3D,
+    vg: &VGrid,
+    rows: BlockLayout,
+    cols: BlockLayout,
+    keys: &BTreeSet<Key>,
+    mode: Mode,
+    seed: u64,
+) -> DistMatrix {
+    let mut row_set: BTreeSet<usize> = BTreeSet::new();
+    let mut col_set: BTreeSet<usize> = BTreeSet::new();
+    for &(x, y) in keys {
+        row_set.extend(vg.blocks_of(x, rows.nblocks));
+        col_set.extend(vg.blocks_of(y, cols.nblocks));
+    }
+    let row_ids: Vec<usize> = row_set.into_iter().collect();
+    let col_ids: Vec<usize> = col_set.into_iter().collect();
+    let row_sizes: Vec<usize> = row_ids.iter().map(|&i| rows.block_size(i)).collect();
+    let col_sizes: Vec<usize> = col_ids.iter().map(|&j| cols.block_size(j)).collect();
+
+    // pattern = the blocks of each panel, in local row-major order
+    let mut pat: BTreeSet<(usize, usize)> = BTreeSet::new();
+    for &(x, y) in keys {
+        for gi in vg.blocks_of(x, rows.nblocks) {
+            let lr = row_ids.binary_search(&gi).unwrap();
+            for gj in vg.blocks_of(y, cols.nblocks) {
+                let lc = col_ids.binary_search(&gj).unwrap();
+                pat.insert((lr, lc));
+            }
+        }
+    }
+    let pattern: Vec<(usize, usize)> = pat.into_iter().collect();
+    // build the CSR index directly: phantom storage must never allocate
+    // elements, and paper-scale model runs hold c·|A|/P of them per rank
+    let nr = row_ids.len();
+    let mut row_ptr = vec![0usize; nr + 1];
+    for &(lr, _) in &pattern {
+        row_ptr[lr + 1] += 1;
+    }
+    for lr in 0..nr {
+        row_ptr[lr + 1] += row_ptr[lr];
+    }
+    let col_idx: Vec<usize> = pattern.iter().map(|&(_, lc)| lc).collect();
+    let store = match mode {
+        Mode::Model => BlockStore::phantom(
+            pattern
+                .iter()
+                .map(|&(lr, lc)| (row_sizes[lr] * col_sizes[lc]) as u64)
+                .sum(),
+        ),
+        Mode::Real => BlockStore::zeros(
+            pattern
+                .iter()
+                .map(|&(lr, lc)| row_sizes[lr] * col_sizes[lc]),
+        ),
+    };
+    let mut local = LocalCsr {
+        row_ids,
+        col_ids,
+        row_sizes,
+        col_sizes,
+        row_ptr,
+        col_idx,
+        store,
+    };
+    debug_assert!(local.check_invariants().is_ok());
+    match mode {
+        Mode::Model => {}
+        Mode::Real => {
+            let blocks: Vec<(usize, usize, usize, usize)> = local
+                .iter_nnz()
+                .map(|(bi, lr, lc)| {
+                    (
+                        bi,
+                        local.row_ids[lr],
+                        local.col_ids[lc],
+                        local.area_of(lr, lc),
+                    )
+                })
+                .collect();
+            for (bi, gi, gj, area) in blocks {
+                let mut rng = block_rng(seed, gi, gj);
+                for x in local.store.block_mut(bi, area) {
+                    *x = rng.next_f32_sym();
+                }
+            }
+        }
+    }
+    let (r, c) = g3.grid.coords();
+    DistMatrix {
+        rows,
+        cols,
+        row_dist: Distribution::cyclic(g3.rows),
+        col_dist: Distribution::cyclic(g3.cols),
+        coords: (r, c),
+        local,
+        mode,
+    }
+}
+
+/// Broadcast a *canonical* layer-cyclic operand from layer 0 to every
+/// layer (the 2.5D setup replication, charged to the virtual clocks and
+/// traffic counters). Every rank must hold a matrix with the same local
+/// pattern as its layer-0 peer (e.g. built with the same constructor
+/// arguments); layers > 0 receive the element data. Returns the wire
+/// bytes of the local share (what layer 0 pushed per peer).
+pub fn replicate_to_layers(g3: &Grid3D, m: &mut DistMatrix) -> u64 {
+    if g3.layers == 1 {
+        return 0;
+    }
+    let bytes = m.local.store.wire_bytes();
+    match m.mode {
+        Mode::Real => {
+            let payload = if g3.layer == 0 {
+                Some(Payload::F32(m.local.store.data().to_vec()))
+            } else {
+                None
+            };
+            let data = g3.layer_comm.bcast(0, payload).into_f32();
+            if g3.layer != 0 {
+                assert_eq!(
+                    data.len(),
+                    m.local.store.data().len(),
+                    "layer replicas must share the local pattern"
+                );
+                m.local.store.data_mut().copy_from_slice(&data);
+            }
+        }
+        Mode::Model => {
+            let payload = if g3.layer == 0 {
+                Some(Payload::Phantom { bytes })
+            } else {
+                None
+            };
+            let _ = g3.layer_comm.bcast(0, payload);
+        }
+    }
+    bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{run_ranks, NetModel};
+    use crate::matrix::matrix::{dense_reference, Fill};
+    use crate::multiply::engine::EngineOpts;
+    use crate::perfmodel::PerfModel;
+    use crate::util::prop::assert_allclose;
+
+    fn engine(threads: usize, densify: bool, mode: Mode) -> LocalEngine {
+        LocalEngine::new(
+            EngineOpts {
+                threads,
+                densify,
+                stack_cap: 48,
+                cpu_coexec: true,
+            },
+            mode,
+            PerfModel::default(),
+            None,
+            1,
+        )
+    }
+
+    /// Full 2.5D pipeline in native layout against the dense reference.
+    #[allow(clippy::too_many_arguments)]
+    fn twofive_case(
+        rows: usize,
+        cols: usize,
+        layers: usize,
+        m: usize,
+        n: usize,
+        k: usize,
+        block: usize,
+        threads: usize,
+        densify: bool,
+    ) {
+        let p = rows * cols * layers;
+        let out = run_ranks(p, NetModel::aries(2), move |world| {
+            let g3 = Grid3D::new(world, rows, cols, layers);
+            let (a, b) = twofive_operands(&g3, m, n, k, block, Mode::Real, 81, 82);
+            let mut eng = engine(threads, densify, Mode::Real);
+            let cm = multiply_twofive(&g3, &a, &b, &mut eng).unwrap();
+            let mut dense = vec![0.0f32; m * n];
+            cm.add_into_dense(&mut dense);
+            dense
+        });
+        let mut got = vec![0.0f32; m * n];
+        for part in out {
+            for (g, x) in got.iter_mut().zip(part.iter()) {
+                *g += x;
+            }
+        }
+        let ar = dense_reference(&BlockLayout::new(m, block), &BlockLayout::new(k, block), 81);
+        let br = dense_reference(&BlockLayout::new(k, block), &BlockLayout::new(n, block), 82);
+        let mut want = vec![0.0f32; m * n];
+        crate::backend::smm_cpu::gemm_blocked(m, n, k, &ar, &br, &mut want);
+        assert_allclose(&got, &want, 2e-3, 2e-3).unwrap_or_else(|e| {
+            panic!(
+                "2.5D {rows}x{cols}x{layers} m{m} n{n} k{k} b{block} t{threads} densify={densify}: {e}"
+            )
+        });
+    }
+
+    #[test]
+    fn two_layers_square_blocked() {
+        twofive_case(2, 2, 2, 24, 24, 24, 4, 1, false);
+    }
+
+    #[test]
+    fn two_layers_square_densified() {
+        twofive_case(2, 2, 2, 24, 24, 24, 4, 2, true);
+    }
+
+    #[test]
+    fn four_layers_blocked() {
+        twofive_case(2, 2, 4, 32, 32, 32, 4, 1, false);
+    }
+
+    #[test]
+    fn four_layers_densified() {
+        twofive_case(2, 2, 4, 32, 32, 32, 4, 2, true);
+    }
+
+    #[test]
+    fn rect_grid_and_matrix() {
+        twofive_case(1, 2, 2, 18, 12, 24, 3, 2, false);
+        twofive_case(2, 1, 2, 12, 18, 24, 3, 2, true);
+    }
+
+    #[test]
+    fn ragged_blocks() {
+        // 26 = 3*8 + 2 ragged tail
+        twofive_case(2, 2, 2, 26, 22, 18, 8, 2, false);
+        twofive_case(2, 2, 2, 26, 22, 18, 8, 2, true);
+    }
+
+    #[test]
+    fn single_layer_reduces_to_cannon_semantics() {
+        twofive_case(2, 2, 1, 24, 24, 24, 4, 2, true);
+    }
+
+    #[test]
+    fn canonical_layout_goes_through_skew_exchange() {
+        // every layer holds the plain cyclic share (replicas built
+        // in place); the driver must skew to each layer's offset
+        let (rows, cols, layers, m, k, n, block) = (2usize, 2usize, 2usize, 24, 24, 24, 4);
+        let p = rows * cols * layers;
+        let out = run_ranks(p, NetModel::aries(2), move |world| {
+            let g3 = Grid3D::new(world, rows, cols, layers);
+            let coords = g3.grid.coords();
+            let a = DistMatrix::dense_cyclic(m, k, block, (rows, cols), coords, Mode::Real, Fill::Random { seed: 81 });
+            let b = DistMatrix::dense_cyclic(k, n, block, (rows, cols), coords, Mode::Real, Fill::Random { seed: 82 });
+            let mut eng = engine(2, true, Mode::Real);
+            let cm = multiply_twofive(&g3, &a, &b, &mut eng).unwrap();
+            let mut dense = vec![0.0f32; m * n];
+            cm.add_into_dense(&mut dense);
+            dense
+        });
+        let mut got = vec![0.0f32; m * n];
+        for part in out {
+            for (g, x) in got.iter_mut().zip(part.iter()) {
+                *g += x;
+            }
+        }
+        let ar = dense_reference(&BlockLayout::new(m, block), &BlockLayout::new(k, block), 81);
+        let br = dense_reference(&BlockLayout::new(k, block), &BlockLayout::new(n, block), 82);
+        let mut want = vec![0.0f32; m * n];
+        crate::backend::smm_cpu::gemm_blocked(m, n, k, &ar, &br, &mut want);
+        assert_allclose(&got, &want, 2e-3, 2e-3).unwrap();
+    }
+
+    #[test]
+    fn replicate_then_multiply_from_layer_zero_data() {
+        // layers > 0 start with wrong (zero) data; replication must
+        // deliver layer 0's elements before the multiply
+        let (rows, cols, layers, m, block) = (2usize, 1usize, 2usize, 16usize, 4);
+        let p = rows * cols * layers;
+        let out = run_ranks(p, NetModel::aries(2), move |world| {
+            let g3 = Grid3D::new(world, rows, cols, layers);
+            let coords = g3.grid.coords();
+            let fill = |seed| {
+                if g3.layer == 0 {
+                    Fill::Random { seed }
+                } else {
+                    Fill::Zero
+                }
+            };
+            let mut a =
+                DistMatrix::dense_cyclic(m, m, block, (rows, cols), coords, Mode::Real, fill(81));
+            let mut b =
+                DistMatrix::dense_cyclic(m, m, block, (rows, cols), coords, Mode::Real, fill(82));
+            let sent_a = replicate_to_layers(&g3, &mut a);
+            let sent_b = replicate_to_layers(&g3, &mut b);
+            assert!(sent_a > 0 && sent_b > 0);
+            let mut eng = engine(1, false, Mode::Real);
+            let cm = multiply_twofive(&g3, &a, &b, &mut eng).unwrap();
+            let mut dense = vec![0.0f32; m * m];
+            cm.add_into_dense(&mut dense);
+            (dense, world_stats_bytes(&g3))
+        });
+        let mut got = vec![0.0f32; m * m];
+        for (part, _) in &out {
+            for (g, x) in got.iter_mut().zip(part.iter()) {
+                *g += x;
+            }
+        }
+        let ar = dense_reference(&BlockLayout::new(m, block), &BlockLayout::new(m, block), 81);
+        let br = dense_reference(&BlockLayout::new(m, block), &BlockLayout::new(m, block), 82);
+        let mut want = vec![0.0f32; m * m];
+        crate::backend::smm_cpu::gemm_blocked(m, m, m, &ar, &br, &mut want);
+        assert_allclose(&got, &want, 2e-3, 2e-3).unwrap();
+        // the replication bcast was charged to layer-0 senders
+        let layer0_sent: u64 = out[..rows * cols].iter().map(|(_, b)| *b).sum();
+        assert!(layer0_sent > 0);
+    }
+
+    fn world_stats_bytes(g3: &Grid3D) -> u64 {
+        g3.world.stats().bytes_sent
+    }
+
+    #[test]
+    fn model_mode_total_mults_match_dense_cube() {
+        // blocked engine: Σ block_mults over all ranks and layers == nb³
+        let (rows, cols, layers) = (2usize, 2usize, 2usize);
+        let nb = 8usize;
+        let dim = nb * 4;
+        let out = run_ranks(rows * cols * layers, NetModel::aries(2), move |world| {
+            let g3 = Grid3D::new(world, rows, cols, layers);
+            let (a, b) = twofive_operands(&g3, dim, dim, dim, 4, Mode::Model, 1, 2);
+            let mut eng = engine(2, false, Mode::Model);
+            let _ = multiply_twofive(&g3, &a, &b, &mut eng).unwrap();
+            eng.stats.block_mults
+        });
+        let total: u64 = out.iter().sum();
+        assert_eq!(total, (nb * nb * nb) as u64);
+    }
+
+    #[test]
+    fn native_operands_cover_each_matrix_once_per_layer() {
+        // per layer, the union of native A shares == |A| (c-fold
+        // replication across layers, no overlap within one)
+        let (rows, cols, layers) = (2usize, 2usize, 4usize);
+        let dim = 32usize;
+        let out = run_ranks(rows * cols * layers, NetModel::ideal(), move |world| {
+            let g3 = Grid3D::new(world, rows, cols, layers);
+            let (a, _) = twofive_operands(&g3, dim, dim, dim, 4, Mode::Model, 1, 2);
+            (g3.layer, a.local_elems())
+        });
+        for layer in 0..layers {
+            let per_layer: u64 = out
+                .iter()
+                .filter(|(l, _)| *l == layer)
+                .map(|(_, e)| *e)
+                .sum();
+            assert_eq!(per_layer, (dim * dim) as u64, "layer {layer}");
+        }
+    }
+}

@@ -44,11 +44,24 @@ pub struct VGrid {
 
 impl VGrid {
     pub fn new(pr: usize, pc: usize, r: usize, c: usize) -> VGrid {
+        VGrid::with_period(pr, pc, lcm(pr, pc), r, c)
+    }
+
+    /// A virtual grid with an explicit period `L` (any multiple of
+    /// lcm(pr, pc) folds consistently onto the physical grid). The 2.5D
+    /// driver uses periods divisible by the layer count so the `L`-tick
+    /// sweep splits evenly into per-layer chunks.
+    pub fn with_period(pr: usize, pc: usize, period: usize, r: usize, c: usize) -> VGrid {
         assert!(r < pr && c < pc);
+        let base = lcm(pr, pc);
+        assert!(
+            period >= base && period % base == 0,
+            "period {period} must be a positive multiple of lcm({pr}, {pc}) = {base}"
+        );
         VGrid {
             pr,
             pc,
-            l: lcm(pr, pc),
+            l: period,
             r,
             c,
         }
@@ -80,12 +93,26 @@ impl VGrid {
 
     /// Physical column where A(i, g) starts after the skew.
     pub fn a_skew_col(&self, i: usize, g: usize) -> usize {
-        ((g + self.l - i % self.l) % self.l) % self.pc
+        self.a_skew_col_at(i, g, 0)
     }
 
     /// Physical row where B(g, j) starts after the skew.
     pub fn b_skew_row(&self, g: usize, j: usize) -> usize {
-        ((g + self.l - j % self.l) % self.l) % self.pr
+        self.b_skew_row_at(g, j, 0)
+    }
+
+    /// Physical column where A(i, g) must sit for the sweep to *start at
+    /// tick `s0`* (the 2.5D per-layer offset): the slot (i, j) with
+    /// (i + j + s0) ≡ g (mod L) lives in column ((g − i − s0) mod L) mod pc.
+    pub fn a_skew_col_at(&self, i: usize, g: usize, s0: usize) -> usize {
+        let l = self.l;
+        ((g % l + 2 * l - i % l - s0 % l) % l) % self.pc
+    }
+
+    /// Physical row where B(g, j) must sit for a sweep starting at `s0`.
+    pub fn b_skew_row_at(&self, g: usize, j: usize, s0: usize) -> usize {
+        let l = self.l;
+        ((g % l + 2 * l - j % l - s0 % l) % l) % self.pr
     }
 
     /// Initial (natural-distribution) A panels held here: (vrow, group).
@@ -238,6 +265,82 @@ mod tests {
             }
         }
         assert!(count.iter().all(|&n| n == 1), "each A(i,g) exactly once");
+    }
+
+    #[test]
+    fn with_period_slots_partition() {
+        // a 2x2 grid folded at period 4 (the 2.5D c=4 case): every
+        // virtual (i, j) hosted exactly once, 4 slots per rank
+        let l = 4;
+        let mut seen = vec![false; l * l];
+        for r in 0..2 {
+            for c in 0..2 {
+                let v = VGrid::with_period(2, 2, l, r, c);
+                assert_eq!(v.slots().len(), 4);
+                for (i, j) in v.slots() {
+                    assert!(!seen[i * l + j]);
+                    seen[i * l + j] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn with_period_groups_cover() {
+        let v = VGrid::with_period(2, 2, 4, 1, 0);
+        for (i, j) in v.slots() {
+            let mut groups: Vec<usize> = (0..v.l).map(|s| v.group_at(i, j, s)).collect();
+            groups.sort_unstable();
+            assert_eq!(groups, (0..v.l).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of lcm")]
+    fn with_period_rejects_bad_period() {
+        let _ = VGrid::with_period(2, 3, 8, 0, 0);
+    }
+
+    #[test]
+    fn offset_skew_targets_are_where_offset_ticks_expect() {
+        // the layer-offset generalization of skew_targets_are_where_ticks
+        // _expect: after an s0-offset skew, the slot (i, j) with
+        // (i + j + s0) ≡ g must host A(i, g)
+        for (pr, pc, period) in [(2usize, 2usize, 4usize), (2, 3, 6), (1, 4, 4), (2, 4, 8)] {
+            let l = period;
+            for s0 in 0..l {
+                for i in 0..l {
+                    for g in 0..l {
+                        let j = (g + 2 * l - i - s0) % l;
+                        let dest_col = j % pc;
+                        let v = VGrid::with_period(pr, pc, period, i % pr, dest_col);
+                        assert_eq!(
+                            v.a_skew_col_at(i, g, s0),
+                            dest_col,
+                            "pr={pr} pc={pc} L={l} s0={s0} i={i} g={g}"
+                        );
+                        assert!(v.slots().contains(&(i, j)));
+                        assert_eq!(v.group_at(i, j, s0), g);
+                        // B mirror: slot (i, j) needs B(g, j) in row
+                        // position b_skew_row_at(g, j, s0)
+                        let vb = VGrid::with_period(pr, pc, period, (i) % pr, dest_col);
+                        assert_eq!(vb.b_skew_row_at(g, j, s0), i % pr);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_offset_matches_legacy_skew() {
+        let v = VGrid::new(3, 4, 2, 1);
+        for i in 0..v.l {
+            for g in 0..v.l {
+                assert_eq!(v.a_skew_col(i, g), v.a_skew_col_at(i, g, 0));
+                assert_eq!(v.b_skew_row(g, i), v.b_skew_row_at(g, i, 0));
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,92 @@
+//! Minimal error type + context helpers (anyhow is not in the offline
+//! crate set).
+//!
+//! `Error` is a single-message error; [`Context`] mirrors the
+//! `anyhow::Context` extension trait for `Result` and `Option` so
+//! fallible loaders can annotate failures as they bubble up.
+
+use std::fmt;
+
+/// A string-message error.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error(m.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error(s.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// `anyhow::Context` analog: attach a message to the error path.
+pub trait Context<T> {
+    fn context(self, msg: &str) -> Result<T>;
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: &str) -> Result<T> {
+        self.map_err(|e| Error(format!("{msg}: {e}")))
+    }
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: &str) -> Result<T> {
+        self.ok_or_else(|| Error(format!("{msg}: value missing")))
+    }
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error(format!("{}: value missing", f())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_annotates_result() {
+        let r: std::result::Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "gone",
+        ));
+        let e = r.context("loading file").unwrap_err();
+        assert!(e.to_string().contains("loading file"));
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_annotates_option() {
+        let o: Option<u32> = None;
+        let e = o.with_context(|| "field x".to_string()).unwrap_err();
+        assert!(e.to_string().contains("field x"));
+    }
+
+    #[test]
+    fn some_passes_through() {
+        assert_eq!(Some(3).context("nope").unwrap(), 3);
+    }
+}

@@ -4,6 +4,7 @@
 //! these modules provide the slices of each that the library needs
 //! (documented as substitutions in DESIGN.md §3).
 
+pub mod error;
 pub mod json;
 pub mod prop;
 pub mod rng;

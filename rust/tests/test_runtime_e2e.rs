@@ -73,6 +73,7 @@ fn run_with_runtime(densify: bool, use_pdgemm: bool, n: usize, block: usize) -> 
 }
 
 #[test]
+#[ignore = "requires `make artifacts` and --features pjrt"]
 fn densified_cannon_through_pjrt_gemm_artifacts() {
     // block 22 panels → padded to the 128-tile gemm artifact
     let n = 176; // 8 blocks of 22
@@ -82,6 +83,7 @@ fn densified_cannon_through_pjrt_gemm_artifacts() {
 }
 
 #[test]
+#[ignore = "requires `make artifacts` and --features pjrt"]
 fn blocked_cannon_through_pjrt_smm_artifacts() {
     let n = 176;
     let got = run_with_runtime(false, false, n, 22);
@@ -90,6 +92,7 @@ fn blocked_cannon_through_pjrt_smm_artifacts() {
 }
 
 #[test]
+#[ignore = "requires `make artifacts` and --features pjrt"]
 fn pdgemm_through_pjrt() {
     let n = 128; // 2 blocks of 64
     let got = run_with_runtime(true, true, n, 64);
@@ -98,6 +101,7 @@ fn pdgemm_through_pjrt() {
 }
 
 #[test]
+#[ignore = "requires `make artifacts` and --features pjrt"]
 fn pjrt_and_cpu_paths_agree() {
     // the same multiply with and without the runtime gives the same C —
     // kernels vs microkernels cross-validation at the system level

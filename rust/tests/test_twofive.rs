@@ -1,0 +1,431 @@
+//! Integration: the 2.5D communication-avoiding driver — real-mode
+//! correctness against the dense reference across shapes/engine paths,
+//! the √c communication reduction the algorithm exists for, and the
+//! model-mode stats invariants shared by all three data-exchange drivers.
+
+use dbcsr::backend::smm_cpu;
+use dbcsr::dist::{run_ranks, Grid2D, Grid3D, NetModel};
+use dbcsr::matrix::matrix::{dense_reference, Fill};
+use dbcsr::matrix::{BlockLayout, DistMatrix, Mode};
+use dbcsr::multiply::twofive::{replicate_to_layers, twofive_operands};
+use dbcsr::multiply::{multiply, tall_skinny, Algorithm, EngineOpts, MultiplyConfig};
+use dbcsr::util::prop::assert_allclose;
+
+fn reference(m: usize, n: usize, k: usize, block: usize, sa: u64, sb: u64) -> Vec<f32> {
+    let ar = dense_reference(&BlockLayout::new(m, block), &BlockLayout::new(k, block), sa);
+    let br = dense_reference(&BlockLayout::new(k, block), &BlockLayout::new(n, block), sb);
+    let mut want = vec![0.0f32; m * n];
+    smm_cpu::gemm_blocked(m, n, k, &ar, &br, &mut want);
+    want
+}
+
+fn gather_dense(parts: Vec<Vec<f32>>, len: usize) -> Vec<f32> {
+    let mut got = vec![0.0f32; len];
+    for part in parts {
+        for (g, x) in got.iter_mut().zip(part.iter()) {
+            *g += x;
+        }
+    }
+    got
+}
+
+/// End-to-end through `multiply()` with `Algorithm::TwoFiveD`, native
+/// operands, checked against the dense reference.
+#[allow(clippy::too_many_arguments)]
+fn twofive_case(
+    rows: usize,
+    cols: usize,
+    layers: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    block: usize,
+    threads: usize,
+    densify: bool,
+) {
+    let p = rows * cols * layers;
+    let parts = run_ranks(p, NetModel::aries(2), move |world| {
+        let g3 = Grid3D::new(world, rows, cols, layers);
+        let (a, b) = twofive_operands(&g3, m, n, k, block, Mode::Real, 91, 92);
+        let grid = Grid2D::new(g3.world.clone(), 1, p);
+        let cfg = MultiplyConfig {
+            engine: EngineOpts {
+                threads,
+                densify,
+                stack_cap: 48,
+                cpu_coexec: true,
+            },
+            algorithm: Algorithm::TwoFiveD { layers },
+            ..Default::default()
+        };
+        let out = multiply(&grid, &a, &b, &cfg).unwrap();
+        let mut dense = vec![0.0f32; m * n];
+        out.c.add_into_dense(&mut dense);
+        dense
+    });
+    let got = gather_dense(parts, m * n);
+    let want = reference(m, n, k, block, 91, 92);
+    assert_allclose(&got, &want, 2e-3, 2e-3).unwrap_or_else(|e| {
+        panic!("2.5D {rows}x{cols}x{layers} {m}x{n}x{k} b{block} t{threads} densify={densify}: {e}")
+    });
+}
+
+#[test]
+fn square_two_layers_both_paths() {
+    twofive_case(2, 2, 2, 32, 32, 32, 4, 1, false);
+    twofive_case(2, 2, 2, 32, 32, 32, 4, 2, true);
+}
+
+#[test]
+fn square_four_layers_both_paths() {
+    twofive_case(2, 2, 4, 32, 32, 32, 4, 1, false);
+    twofive_case(2, 2, 4, 32, 32, 32, 4, 3, true);
+}
+
+#[test]
+fn rectangular_shapes_both_paths() {
+    twofive_case(2, 2, 2, 24, 40, 32, 4, 2, false);
+    twofive_case(2, 2, 2, 40, 24, 32, 4, 2, true);
+    twofive_case(1, 2, 2, 18, 12, 24, 3, 2, true);
+}
+
+#[test]
+fn ragged_blocks_both_paths() {
+    // 26 = 3*8 + 2, 22 = 2*8 + 6, 18 = 2*8 + 2 — ragged tails everywhere
+    twofive_case(2, 2, 2, 26, 22, 18, 8, 2, false);
+    twofive_case(2, 2, 2, 26, 22, 18, 8, 2, true);
+}
+
+#[test]
+fn paper_block_22_ragged_four_layers() {
+    twofive_case(2, 2, 4, 90, 90, 90, 22, 3, true);
+    twofive_case(2, 2, 4, 90, 90, 90, 22, 3, false);
+}
+
+#[test]
+fn canonical_replicated_operands_match_reference() {
+    // each layer holds a replica in plain cyclic layout (as after
+    // replicate_to_layers); the driver must skew per layer offset
+    let (rows, cols, layers, m, block) = (2usize, 2usize, 4usize, 32usize, 4usize);
+    let p = rows * cols * layers;
+    let parts = run_ranks(p, NetModel::aries(2), move |world| {
+        let g3 = Grid3D::new(world, rows, cols, layers);
+        let coords = g3.grid.coords();
+        let fill = |seed| {
+            if g3.layer == 0 {
+                Fill::Random { seed }
+            } else {
+                Fill::Zero // must be overwritten by the replication bcast
+            }
+        };
+        let mut a =
+            DistMatrix::dense_cyclic(m, m, block, (rows, cols), coords, Mode::Real, fill(91));
+        let mut b =
+            DistMatrix::dense_cyclic(m, m, block, (rows, cols), coords, Mode::Real, fill(92));
+        replicate_to_layers(&g3, &mut a);
+        replicate_to_layers(&g3, &mut b);
+        let grid = Grid2D::new(g3.world.clone(), 1, p);
+        let cfg = MultiplyConfig {
+            algorithm: Algorithm::TwoFiveD { layers },
+            ..Default::default()
+        };
+        let out = multiply(&grid, &a, &b, &cfg).unwrap();
+        let mut dense = vec![0.0f32; m * m];
+        out.c.add_into_dense(&mut dense);
+        dense
+    });
+    let got = gather_dense(parts, m * m);
+    let want = reference(m, m, m, block, 91, 92);
+    assert_allclose(&got, &want, 2e-3, 2e-3).unwrap();
+}
+
+/// Per-rank comm bytes of the acceptance configuration: 16 model-mode
+/// ranks, 2816² dense, block 22.
+fn bytes_2816(algorithm: Algorithm) -> Vec<u64> {
+    const DIM: usize = 2816;
+    const BLOCK: usize = 22;
+    run_ranks(16, NetModel::aries(4), move |world| {
+        let cfg = MultiplyConfig {
+            engine: EngineOpts {
+                threads: 3,
+                densify: true,
+                ..Default::default()
+            },
+            algorithm,
+            ..Default::default()
+        };
+        match algorithm {
+            Algorithm::TwoFiveD { layers } => {
+                let (rows, cols) = match layers {
+                    1 => (4, 4),
+                    2 => (2, 4),
+                    4 => (2, 2),
+                    _ => panic!("unexpected layer count"),
+                };
+                let g3 = Grid3D::new(world, rows, cols, layers);
+                let (a, b) = twofive_operands(&g3, DIM, DIM, DIM, BLOCK, Mode::Model, 1, 2);
+                let grid = Grid2D::new(g3.world.clone(), 4, 4);
+                multiply(&grid, &a, &b, &cfg).unwrap().stats.comm_bytes
+            }
+            _ => {
+                let grid = Grid2D::new(world, 4, 4);
+                let coords = grid.coords();
+                let a = DistMatrix::dense_cyclic(
+                    DIM,
+                    DIM,
+                    BLOCK,
+                    (4, 4),
+                    coords,
+                    Mode::Model,
+                    Fill::Zero,
+                );
+                let b = a.clone();
+                multiply(&grid, &a, &b, &cfg).unwrap().stats.comm_bytes
+            }
+        }
+    })
+}
+
+#[test]
+fn twofive_c4_cuts_cannon_comm_by_sqrt_c() {
+    // acceptance: TwoFiveD{layers: 4} on 16 ranks vs Cannon, 2816² dense,
+    // per-rank bytes_sent reduced by at least 1.8x (√c = 2 at c = 4)
+    let cannon: u64 = bytes_2816(Algorithm::Cannon).iter().sum();
+    let twofive: u64 = bytes_2816(Algorithm::TwoFiveD { layers: 4 }).iter().sum();
+    let ratio = cannon as f64 / twofive as f64;
+    assert!(
+        ratio >= 1.8,
+        "2.5D c=4 must cut per-rank comm ≥1.8x vs Cannon, got {ratio:.2} ({cannon} vs {twofive})"
+    );
+    assert!(
+        ratio <= 4.0,
+        "ratio {ratio:.2} implausibly high — accounting bug?"
+    );
+}
+
+#[test]
+fn twofive_comm_decreases_with_layers() {
+    // the √c law across c ∈ {1, 2, 4}: strictly less traffic per extra
+    // replication factor
+    let b1: u64 = bytes_2816(Algorithm::TwoFiveD { layers: 1 }).iter().sum();
+    let b2: u64 = bytes_2816(Algorithm::TwoFiveD { layers: 2 }).iter().sum();
+    let b4: u64 = bytes_2816(Algorithm::TwoFiveD { layers: 4 }).iter().sum();
+    assert!(b2 < b1, "c=2 ({b2}) must beat c=1 ({b1})");
+    assert!(b4 < b2, "c=4 ({b4}) must beat c=2 ({b2})");
+    let r = b1 as f64 / b4 as f64;
+    assert!(
+        (1.5..=3.0).contains(&r),
+        "c=1 → c=4 reduction {r:.2} out of the √c band"
+    );
+}
+
+#[test]
+fn model_mode_total_mults_equal_cube_across_drivers() {
+    // blocked engine invariant: Σ block_mults over ranks == nb³ for all
+    // three data-exchange drivers
+    let nb = 16usize;
+    let dim = nb * 22;
+
+    // Cannon, 4 ranks
+    let cannon: u64 = run_ranks(4, NetModel::aries(2), move |world| {
+        let grid = Grid2D::new(world, 2, 2);
+        let coords = grid.coords();
+        let a = DistMatrix::dense_cyclic(dim, dim, 22, (2, 2), coords, Mode::Model, Fill::Zero);
+        let b = a.clone();
+        let cfg = MultiplyConfig {
+            engine: EngineOpts {
+                threads: 3,
+                densify: false,
+                ..Default::default()
+            },
+            algorithm: Algorithm::Cannon,
+            ..Default::default()
+        };
+        multiply(&grid, &a, &b, &cfg).unwrap().stats.block_mults
+    })
+    .iter()
+    .sum();
+    assert_eq!(cannon, (nb * nb * nb) as u64, "cannon");
+
+    // tall-skinny, 4 ranks
+    let ts: u64 = run_ranks(4, NetModel::aries(2), move |world| {
+        let (a, b) = tall_skinny::ts_operands(dim, dim, dim, 22, &world, Mode::Model, 1, 2);
+        let grid = Grid2D::new(world, 1, 4);
+        let cfg = MultiplyConfig {
+            engine: EngineOpts {
+                threads: 3,
+                densify: false,
+                ..Default::default()
+            },
+            algorithm: Algorithm::TallSkinny,
+            ..Default::default()
+        };
+        multiply(&grid, &a, &b, &cfg).unwrap().stats.block_mults
+    })
+    .iter()
+    .sum();
+    assert_eq!(ts, (nb * nb * nb) as u64, "tall-skinny");
+
+    // 2.5D, 8 ranks in 2x2x2
+    let twofive: u64 = run_ranks(8, NetModel::aries(2), move |world| {
+        let g3 = Grid3D::new(world, 2, 2, 2);
+        let (a, b) = twofive_operands(&g3, dim, dim, dim, 22, Mode::Model, 1, 2);
+        let grid = Grid2D::new(g3.world.clone(), 2, 4);
+        let cfg = MultiplyConfig {
+            engine: EngineOpts {
+                threads: 3,
+                densify: false,
+                ..Default::default()
+            },
+            algorithm: Algorithm::TwoFiveD { layers: 2 },
+            ..Default::default()
+        };
+        multiply(&grid, &a, &b, &cfg).unwrap().stats.block_mults
+    })
+    .iter()
+    .sum();
+    assert_eq!(twofive, (nb * nb * nb) as u64, "2.5D");
+}
+
+#[test]
+fn transfer_bytes_monotone_in_problem_size_across_drivers() {
+    // h2d/d2h totals must grow with the problem on every driver
+    let h2d_d2h = |alg: Algorithm, dim: usize| -> (u64, u64) {
+        let p = 8usize;
+        let parts = run_ranks(p, NetModel::aries(2), move |world| {
+            let cfg = MultiplyConfig {
+                engine: EngineOpts {
+                    threads: 2,
+                    densify: true,
+                    ..Default::default()
+                },
+                algorithm: alg,
+                ..Default::default()
+            };
+            let out = match alg {
+                Algorithm::TwoFiveD { layers } => {
+                    let g3 = Grid3D::new(world, 2, 2, layers);
+                    let (a, b) = twofive_operands(&g3, dim, dim, dim, 22, Mode::Model, 1, 2);
+                    let grid = Grid2D::new(g3.world.clone(), 2, 4);
+                    multiply(&grid, &a, &b, &cfg).unwrap()
+                }
+                Algorithm::TallSkinny => {
+                    let (a, b) =
+                        tall_skinny::ts_operands(dim, dim, dim * 4, 22, &world, Mode::Model, 1, 2);
+                    let grid = Grid2D::new(world, 1, p);
+                    multiply(&grid, &a, &b, &cfg).unwrap()
+                }
+                _ => {
+                    let grid = Grid2D::new(world, 2, 4);
+                    let coords = grid.coords();
+                    let a = DistMatrix::dense_cyclic(
+                        dim,
+                        dim,
+                        22,
+                        (2, 4),
+                        coords,
+                        Mode::Model,
+                        Fill::Zero,
+                    );
+                    let b = a.clone();
+                    multiply(&grid, &a, &b, &cfg).unwrap()
+                }
+            };
+            (out.stats.h2d_bytes, out.stats.d2h_bytes)
+        });
+        parts
+            .iter()
+            .fold((0, 0), |(h, d), (ph, pd)| (h + ph, d + pd))
+    };
+    for alg in [
+        Algorithm::Cannon,
+        Algorithm::TallSkinny,
+        Algorithm::TwoFiveD { layers: 2 },
+    ] {
+        let small = h2d_d2h(alg, 352);
+        let big = h2d_d2h(alg, 704);
+        assert!(
+            big.0 > small.0,
+            "{alg:?}: h2d must grow with size ({} vs {})",
+            big.0,
+            small.0
+        );
+        assert!(
+            big.1 >= small.1,
+            "{alg:?}: d2h must not shrink with size ({} vs {})",
+            big.1,
+            small.1
+        );
+    }
+}
+
+#[test]
+fn twofive_flop_conservation() {
+    // total modeled flops == 2·M·N·K through the 2.5D path
+    let (m, n, k, block) = (352usize, 352usize, 352usize, 22usize);
+    for (rows, cols, layers, densify) in [(2usize, 2usize, 2usize, false), (2, 2, 2, true)] {
+        let parts = run_ranks(rows * cols * layers, NetModel::aries(2), move |world| {
+            let g3 = Grid3D::new(world, rows, cols, layers);
+            let (a, b) = twofive_operands(&g3, m, n, k, block, Mode::Model, 1, 2);
+            let grid = Grid2D::new(g3.world.clone(), rows, cols * layers);
+            let cfg = MultiplyConfig {
+                engine: EngineOpts {
+                    threads: 3,
+                    densify,
+                    ..Default::default()
+                },
+                algorithm: Algorithm::TwoFiveD { layers },
+                ..Default::default()
+            };
+            multiply(&grid, &a, &b, &cfg).unwrap().stats.flops
+        });
+        let total: u64 = parts.iter().sum();
+        assert_eq!(total, 2 * (m * n * k) as u64, "densify={densify}");
+    }
+}
+
+#[test]
+fn auto_heuristic_dispatches_twofive() {
+    // operands on a 2x2 sub-grid of 8 ranks → Auto must run the layered
+    // algorithm (observable: comm strictly below the Cannon run of the
+    // same problem on the full grid)
+    let dim = 704usize;
+    let auto_bytes: u64 = run_ranks(8, NetModel::aries(2), move |world| {
+        let g3 = Grid3D::new(world, 2, 2, 2);
+        let (a, b) = twofive_operands(&g3, dim, dim, dim, 22, Mode::Model, 1, 2);
+        let grid = Grid2D::new(g3.world.clone(), 2, 4);
+        let cfg = MultiplyConfig {
+            engine: EngineOpts {
+                threads: 2,
+                densify: true,
+                ..Default::default()
+            },
+            ..Default::default() // Algorithm::Auto
+        };
+        multiply(&grid, &a, &b, &cfg).unwrap().stats.comm_bytes
+    })
+    .iter()
+    .sum();
+    let cannon_bytes: u64 = run_ranks(8, NetModel::aries(2), move |world| {
+        let grid = Grid2D::new(world, 2, 4);
+        let coords = grid.coords();
+        let a = DistMatrix::dense_cyclic(dim, dim, 22, (2, 4), coords, Mode::Model, Fill::Zero);
+        let b = a.clone();
+        let cfg = MultiplyConfig {
+            engine: EngineOpts {
+                threads: 2,
+                densify: true,
+                ..Default::default()
+            },
+            algorithm: Algorithm::Cannon,
+            ..Default::default()
+        };
+        multiply(&grid, &a, &b, &cfg).unwrap().stats.comm_bytes
+    })
+    .iter()
+    .sum();
+    assert!(
+        auto_bytes < cannon_bytes,
+        "Auto must dispatch 2.5D for the layered layout ({auto_bytes} vs {cannon_bytes})"
+    );
+}
