@@ -12,6 +12,7 @@
 use dbcsr::bench::harness::{run_spec, Engine, RunSpec, Shape};
 use dbcsr::bench::table::{fmt_secs, Table};
 use dbcsr::config::Args;
+use dbcsr::dist::{NetModel, Transport};
 use dbcsr::matrix::Mode;
 
 fn main() {
@@ -35,6 +36,8 @@ fn main() {
             shape,
             engine: Engine::DbcsrDensified,
             mode: Mode::Model,
+            net: NetModel::aries(rpn),
+            transport: Transport::TwoSided,
         });
         t.row(vec![
             format!("{rpn} x {threads}"),
@@ -61,6 +64,8 @@ fn main() {
                 shape,
                 engine,
                 mode: Mode::Model,
+                net: NetModel::aries(4),
+                transport: Transport::TwoSided,
             });
             pair.push(r.seconds);
         }

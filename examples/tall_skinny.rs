@@ -8,7 +8,7 @@
 use dbcsr::bench::harness::{run_spec, Engine, RunSpec, Shape};
 use dbcsr::bench::table::{fmt_secs, Table};
 use dbcsr::config::Args;
-use dbcsr::dist::{run_ranks, Grid2D, NetModel};
+use dbcsr::dist::{run_ranks, Grid2D, NetModel, Transport};
 use dbcsr::matrix::{DistMatrix, Mode};
 use dbcsr::matrix::matrix::Fill;
 use dbcsr::multiply::{multiply, tall_skinny, Algorithm, EngineOpts, MultiplyConfig};
@@ -55,6 +55,8 @@ fn main() {
             shape,
             engine,
             mode: Mode::Model,
+            net: NetModel::aries(4),
+            transport: Transport::TwoSided,
         });
         t.row(vec![name.to_string(), fmt_secs(r.seconds)]);
     }

@@ -8,6 +8,7 @@
 
 use dbcsr::bench::figures;
 use dbcsr::bench::harness::{run_spec, Engine, RunSpec, Shape};
+use dbcsr::dist::{NetModel, Transport};
 use dbcsr::bench::table::{fmt_secs, Table};
 use dbcsr::matrix::Mode;
 
@@ -35,6 +36,8 @@ fn main() {
                 shape: Shape::paper_square().scaled(40),
                 engine,
                 mode: Mode::Real,
+                net: NetModel::aries(4),
+                transport: Transport::TwoSided,
             });
             t.row(vec![
                 name.to_string(),

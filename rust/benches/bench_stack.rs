@@ -9,6 +9,7 @@ use std::time::Instant;
 
 use dbcsr::backend::stack::STACK_CAP;
 use dbcsr::bench::harness::{run_spec, Engine, RunSpec, Shape};
+use dbcsr::dist::{NetModel, Transport};
 use dbcsr::bench::table::Table;
 use dbcsr::matrix::LocalCsr;
 use dbcsr::matrix::Mode;
@@ -75,6 +76,8 @@ fn main() {
                     },
                     engine: Engine::DbcsrBlocked,
                     mode: Mode::Model,
+                    net: NetModel::aries(4),
+                    transport: Transport::TwoSided,
                 });
                 t.row(vec![
                     label.to_string(),

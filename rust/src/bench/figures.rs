@@ -5,6 +5,7 @@
 //! target. `scale` divides the paper's matrix dimensions (1 = paper
 //! scale in model mode; benches also run reduced real-mode points).
 
+use crate::dist::{NetModel, Transport};
 use crate::matrix::Mode;
 use crate::perfmodel::PerfModel;
 
@@ -49,6 +50,8 @@ pub fn fig2(scale: usize, mode: Mode) -> Vec<Table> {
                     shape: shape_for(true, scale),
                     engine: Engine::DbcsrDensified,
                     mode,
+                    net: NetModel::aries(rpn),
+                    transport: Transport::TwoSided,
                 });
                 cells.push(fmt_secs(r.seconds));
                 if !r.oom {
@@ -88,6 +91,8 @@ pub fn fig3(scale: usize, mode: Mode) -> Vec<Table> {
                         shape: shape_for(square, scale),
                         engine,
                         mode,
+                        net: NetModel::aries(4),
+                        transport: Transport::TwoSided,
                     });
                     pair.push(r.seconds);
                 }
@@ -135,6 +140,8 @@ pub fn fig4(scale: usize, mode: Mode, blocks: &[usize], square_only: bool) -> Ve
                         shape: shape_for(square, scale),
                         engine,
                         mode,
+                        net: NetModel::aries(4),
+                        transport: Transport::TwoSided,
                     });
                     pair.push(r.seconds);
                 }

@@ -1,6 +1,6 @@
 //! Experiment runner: one `RunSpec` = one bar/point of a paper figure.
 
-use crate::dist::{run_ranks, NetModel};
+use crate::dist::{run_ranks, NetModel, Transport};
 use crate::matrix::matrix::Fill;
 use crate::matrix::{DistMatrix, Mode};
 use crate::multiply::{multiply, tall_skinny, Algorithm, EngineOpts, MultiplyConfig};
@@ -70,6 +70,11 @@ pub struct RunSpec {
     pub shape: Shape,
     pub engine: Engine,
     pub mode: Mode,
+    /// Fabric model driving the virtual clocks (sweeps can compare
+    /// `NetModel::ideal()` against `NetModel::aries(rpn)`).
+    pub net: NetModel,
+    /// Point-to-point transport (two-sided sendrecv vs one-sided RMA).
+    pub transport: Transport,
 }
 
 /// Result of one experiment point (aggregated over ranks).
@@ -97,7 +102,7 @@ pub fn run_spec(spec: RunSpec) -> RunResult {
     let p = spec.nodes * spec.rpn;
     let (pr, pc) = grid_shape(p);
     let (m, n, k) = spec.shape.dims();
-    let net = NetModel::aries(spec.rpn);
+    let net = spec.net;
     let is_rect = matches!(spec.shape, Shape::Rect { .. });
     let wall0 = std::time::Instant::now();
 
@@ -114,6 +119,7 @@ pub fn run_spec(spec: RunSpec) -> RunResult {
             } else {
                 Algorithm::Cannon
             },
+            transport: spec.transport,
             gpu_share: spec.rpn,
             runtime: None,
         };
@@ -229,6 +235,8 @@ mod tests {
             shape: Shape::Square { n: 2816 },
             engine: Engine::DbcsrDensified,
             mode: Mode::Model,
+            net: NetModel::aries(4),
+            transport: Transport::TwoSided,
         });
         assert!(!r.oom);
         assert!(r.seconds > 0.0);
@@ -245,6 +253,8 @@ mod tests {
             shape: Shape::Rect { mn: 352, k: 22528 },
             engine: Engine::DbcsrDensified,
             mode: Mode::Model,
+            net: NetModel::aries(4),
+            transport: Transport::TwoSided,
         });
         assert!(!r.oom && r.seconds > 0.0);
     }
@@ -259,8 +269,61 @@ mod tests {
             shape: Shape::Square { n: 2816 },
             engine: Engine::Pdgemm,
             mode: Mode::Model,
+            net: NetModel::aries(4),
+            transport: Transport::TwoSided,
         });
         assert!(!r.oom && r.seconds > 0.0);
+    }
+
+    #[test]
+    fn net_model_comes_from_the_spec() {
+        // regression: the harness used to hardcode NetModel::aries(rpn);
+        // an ideal-fabric sweep must show zero comm wait and run faster
+        let point = |net: NetModel| {
+            run_spec(RunSpec {
+                nodes: 1,
+                rpn: 4,
+                threads: 3,
+                block: 22,
+                shape: Shape::Square { n: 1408 },
+                engine: Engine::DbcsrDensified,
+                mode: Mode::Model,
+                net,
+                transport: Transport::TwoSided,
+            })
+        };
+        let aries = point(NetModel::aries(4));
+        let ideal = point(NetModel::ideal());
+        assert!(ideal.stats.comm_wait_s == 0.0, "{}", ideal.stats.comm_wait_s);
+        assert!(aries.stats.comm_wait_s > 0.0);
+        assert!(ideal.seconds < aries.seconds);
+        assert_eq!(ideal.stats.comm_bytes, aries.stats.comm_bytes);
+    }
+
+    #[test]
+    fn one_sided_transport_sweeps_through_the_harness() {
+        let point = |transport: Transport| {
+            run_spec(RunSpec {
+                nodes: 4,
+                rpn: 4,
+                threads: 3,
+                block: 22,
+                shape: Shape::Square { n: 1408 },
+                engine: Engine::DbcsrDensified,
+                mode: Mode::Model,
+                net: NetModel::aries(4),
+                transport,
+            })
+        };
+        let two = point(Transport::TwoSided);
+        let one = point(Transport::OneSided);
+        assert_eq!(two.stats.comm_bytes, one.stats.comm_bytes);
+        assert!(
+            one.stats.comm_wait_s < two.stats.comm_wait_s,
+            "one-sided must lower comm wait ({} vs {})",
+            one.stats.comm_wait_s,
+            two.stats.comm_wait_s
+        );
     }
 
     #[test]
@@ -273,6 +336,8 @@ mod tests {
             shape: Shape::Square { n: 64 },
             engine: Engine::DbcsrBlocked,
             mode,
+            net: NetModel::aries(4),
+            transport: Transport::TwoSided,
         };
         let r = run_spec(spec(Mode::Real));
         let m = run_spec(spec(Mode::Model));

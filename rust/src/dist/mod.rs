@@ -23,6 +23,14 @@
 //! `pr × pc` layer grids plus a cross-layer communicator per grid
 //! position, used to replicate A/B and sum-reduce C — Lazzaro et al.,
 //! arXiv:1705.10218).
+//!
+//! Two point-to-point transports ride on this substrate (selected by
+//! [`Transport`]): the blocking two-sided sendrecv modeled here, and the
+//! one-sided RMA windows of [`rma`] (origin-charged put/get, epoch-based
+//! passive-target sync) that the 2.5D lineage paper pairs with the
+//! algorithm. [`CommStats::wait_seconds`] attributes each rank's
+//! clock-advances-while-blocked to communication, so the two transports'
+//! modeled receiver stalls can be compared directly.
 
 use std::cell::Cell;
 use std::collections::{HashMap, VecDeque};
@@ -30,6 +38,10 @@ use std::panic::AssertUnwindSafe;
 use std::rc::Rc;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+
+pub mod rma;
+
+pub use rma::{RmaWindow, Transport};
 
 /// What travels in a message: real data, or phantom byte counts (model
 /// mode — same control flow, no element storage).
@@ -118,6 +130,12 @@ impl NetModel {
 pub struct CommStats {
     pub bytes_sent: u64,
     pub msgs_sent: u64,
+    /// Virtual seconds this rank's clock advanced *while blocked on
+    /// communication* (two-sided receives and RMA epoch closes) — the
+    /// modeled receiver-side stall the one-sided transport exists to
+    /// shrink. Clock advances from compute sync ([`CommView::advance_to`])
+    /// are not counted.
+    pub wait_seconds: f64,
 }
 
 /// One in-flight message.
@@ -130,11 +148,26 @@ struct Msg {
 
 type QueueKey = (usize, usize, u64); // (src world rank, dst world rank, tag)
 
+/// A buffer a rank exposed in an RMA window (see [`rma`]): readable by
+/// any origin's `get` from virtual time `at` (the exposer's clock at the
+/// expose call — data cannot be read before it was written).
+struct Exposed {
+    payload: Payload,
+    at: f64,
+}
+
 /// Process-shared substrate state (one per [`run_ranks`] call).
 struct Shared {
     net: NetModel,
     queues: Mutex<HashMap<QueueKey, VecDeque<Msg>>>,
     cv: Condvar,
+    /// RMA exposure slots, keyed (exposer world rank, window epoch tag).
+    /// `Some` = live exposure; `None` = the epoch was closed (tombstone,
+    /// so a late `get` panics loudly instead of blocking forever).
+    /// Guarded by its own condvar: std `Condvar` must not be used with
+    /// two different mutexes.
+    exposed: Mutex<HashMap<(usize, u64), Option<Exposed>>>,
+    exposed_cv: Condvar,
     /// Set when any rank thread panics, so blocked receivers abort
     /// instead of deadlocking.
     dead: AtomicBool,
@@ -172,6 +205,7 @@ impl Shared {
     fn mark_dead(&self) {
         self.dead.store(true, Ordering::SeqCst);
         self.cv.notify_all();
+        self.exposed_cv.notify_all();
     }
 }
 
@@ -181,6 +215,9 @@ struct RankState {
     now: Cell<f64>,
     bytes_sent: Cell<u64>,
     msgs_sent: Cell<u64>,
+    /// Accumulated comm-attributed clock advances (see
+    /// [`CommStats::wait_seconds`]).
+    wait_s: Cell<f64>,
 }
 
 // Reserved tag space for collectives (user code uses small tags).
@@ -260,6 +297,17 @@ impl CommView {
         CommStats {
             bytes_sent: self.state.bytes_sent.get(),
             msgs_sent: self.state.msgs_sent.get(),
+            wait_seconds: self.state.wait_s.get(),
+        }
+    }
+
+    /// Advance the clock to at least `t` and book the advance as a
+    /// communication wait (receives, RMA epoch closes).
+    fn wait_to(&self, t: f64) {
+        let now = self.state.now.get();
+        if t > now {
+            self.state.wait_s.set(self.state.wait_s.get() + (t - now));
+            self.state.now.set(t);
         }
     }
 
@@ -282,7 +330,7 @@ impl CommView {
         let msg = self
             .shared
             .pop_blocking((self.members[src], self.my_world(), tag));
-        self.advance_to(msg.ready);
+        self.wait_to(msg.ready);
         msg.payload
     }
 
@@ -357,7 +405,11 @@ impl CommView {
     }
 }
 
-fn sum_payloads(a: Payload, b: Payload) -> Payload {
+/// The reduction operator of the sum collectives (also used by the RMA
+/// reduce path so both transports sum in the same order → bit-identical
+/// results): elementwise f32 add; phantom payloads keep the max wire
+/// size; `Empty` is the identity.
+pub fn sum_payloads(a: Payload, b: Payload) -> Payload {
     match (a, b) {
         (Payload::Empty, x) | (x, Payload::Empty) => x,
         (Payload::F32(mut x), Payload::F32(y)) => {
@@ -503,6 +555,8 @@ where
         net,
         queues: Mutex::new(HashMap::new()),
         cv: Condvar::new(),
+        exposed: Mutex::new(HashMap::new()),
+        exposed_cv: Condvar::new(),
         dead: AtomicBool::new(false),
     });
     let mut out: Vec<Option<T>> = (0..p).map(|_| None).collect();

@@ -1,0 +1,399 @@
+//! One-sided RMA transport: per-rank exposure windows, origin-charged
+//! `put`/`get`, and epoch-based passive-target synchronization — the
+//! communication scheme Lazzaro, VandeVondele, Hutter & Schulthess pair
+//! with the 2.5D algorithm (arXiv:1705.10218, §3: `MPI_Rput`/`MPI_Rget`
+//! under passive-target `lock`–`flush`–`unlock` epochs).
+//!
+//! ## Cost model
+//!
+//! The two-sided transport ([`CommView::sendrecv`]) is a *blocking*
+//! `MPI_Sendrecv_replace` analog: each exchange advances the caller's
+//! clock to `sender_clock + α + bytes/β` before the next exchange may
+//! even be issued, so a Cannon tick that shifts A and then B pays
+//! `t_A + t_B` on the comm chain. The RMA transport decouples issue from
+//! completion:
+//!
+//! * [`RmaWindow::put`] is nonblocking and **origin-charged**: the wire
+//!   bytes and message count land on the origin's traffic counters, the
+//!   transfer is in flight from the origin's *issue-time* clock, and the
+//!   target does nothing (passive target) — no matching, no per-message
+//!   latency at the target.
+//! * [`RmaWindow::close_epoch`] is the epoch boundary (`flush` + `unlock`
+//!   or a `win_fence`): the target's clock advances **once**, to the
+//!   latest arrival among the epoch's puts plus a single sync latency α,
+//!   instead of once per message.
+//! * [`RmaWindow::get`] reads a buffer the target [`RmaWindow::expose`]d,
+//!   charging the full transfer (α + bytes/β, counters included) to the
+//!   origin that initiated it; the exposer stays passive.
+//!
+//! Because a driver can issue *all* of an epoch's puts before closing
+//! *any* window, transfers that a blocking two-sided driver serializes
+//! (the A shift, then the B shift) overlap: the per-tick comm-chain
+//! growth drops from `t_A + t_B` to `max(t_A, t_B)` — the modeled
+//! two-sided vs one-sided gap reported by `bench_fig_2p5d` and asserted
+//! by `tests/test_transport.rs`. Payloads and byte counts are identical
+//! across transports, so numerics are bit-identical and volume-based
+//! figures are unaffected.
+//!
+//! ## Epochs and determinism
+//!
+//! A window is created collectively with a caller-chosen `win_id`; every
+//! epoch maps to a reserved message tag, so put/close pairs of different
+//! epochs (and different windows) of one window *instance* can never be
+//! confused even though the rank threads run asynchronously. Drivers put
+//! **at most one message per (origin, target) pair per epoch** — the
+//! invariant the tag scheme relies on. When a window with the same
+//! `win_id` is recreated (epochs restart at 0, e.g. back-to-back
+//! collective calls or repeated multiplies), pairing additionally rests
+//! on the substrate's per-(src, dst, tag) FIFO queues: every rank must
+//! issue its puts/closes in the same global call order, which all
+//! drivers do by construction. That reuse guarantee covers **put/close
+//! only**: exposure slots are keyed by tag, so an `expose`/`get` round
+//! must use a fresh `win_id` (or keep one long-lived window and let its
+//! epochs advance) — a closed slot left by a previous same-id instance
+//! is indistinguishable from a late access and panics the getter. All
+//! virtual timings stay deterministic regardless of OS scheduling,
+//! exactly like the two-sided queues.
+
+use super::{CommView, Exposed, Payload};
+
+/// Which point-to-point transport the multiplication's panel traffic
+/// uses (threaded through `MultiplyConfig`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transport {
+    /// Blocking two-sided `MPI_Sendrecv_replace` analog: each shift
+    /// completes (receiver inherits `sender_clock + α + bytes/β`) before
+    /// the next is issued.
+    TwoSided,
+    /// One-sided RMA: nonblocking origin-charged puts into exposure
+    /// windows, synchronized per epoch (passive target) — shifts issued
+    /// back-to-back overlap on the wire.
+    OneSided,
+}
+
+impl Transport {
+    /// Stable lowercase label for bench tables / JSON series.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Transport::TwoSided => "two-sided",
+            Transport::OneSided => "one-sided",
+        }
+    }
+}
+
+impl std::fmt::Display for Transport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+// Reserved tag space: below the collectives' 1 << 60 block, above user
+// tags. Each window owns EPOCH_SPAN consecutive tags, one per epoch.
+const TAG_RMA_BASE: u64 = 1 << 59;
+const EPOCH_SPAN: u64 = 1 << 32;
+
+/// One rank's handle on a collectively-created RMA window over a
+/// communicator view. Local ranks address peers exactly as in the
+/// underlying [`CommView`].
+pub struct RmaWindow {
+    comm: CommView,
+    base_tag: u64,
+    epoch: u64,
+}
+
+impl RmaWindow {
+    /// Create a window over `comm` (collective: every member must create
+    /// the same `win_id` at the same logical point, like `MPI_Win_create`).
+    pub fn new(comm: &CommView, win_id: u64) -> RmaWindow {
+        assert!(win_id < (1 << 26), "window id outside the RMA tag space");
+        RmaWindow {
+            comm: comm.clone(),
+            base_tag: TAG_RMA_BASE + win_id * EPOCH_SPAN,
+            epoch: 0,
+        }
+    }
+
+    fn tag(&self) -> u64 {
+        self.base_tag + self.epoch
+    }
+
+    /// Current epoch index (bumped by [`RmaWindow::close_epoch`]).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Nonblocking one-sided put into `dst`'s window, current epoch.
+    /// Origin-charged: bytes and message count land on this rank's
+    /// counters; the transfer is in flight from the current clock and
+    /// arrives at `now + α + bytes/β`. The target's clock is untouched
+    /// until it closes the epoch. At most one put per (origin, target)
+    /// pair per epoch.
+    pub fn put(&self, dst: usize, payload: Payload) {
+        self.comm.send(dst, self.tag(), payload);
+    }
+
+    /// Expose a buffer in this rank's window for the current epoch, so
+    /// peers can [`RmaWindow::get`] it. Local bookkeeping only — no
+    /// traffic, no clock movement (the exposer is passive). The exposure
+    /// lives until this rank's [`RmaWindow::close_epoch`]; every `get`
+    /// must land within that epoch (a get after the close panics, like
+    /// MPI's "access outside an exposure epoch" error).
+    pub fn expose(&self, payload: Payload) {
+        let key = (self.comm.my_world(), self.tag());
+        let at = self.comm.now();
+        let mut w = self
+            .comm
+            .shared
+            .exposed
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        w.insert(key, Some(Exposed { payload, at }));
+        self.comm.shared.exposed_cv.notify_all();
+    }
+
+    /// One-sided get of the buffer `src` exposed this epoch.
+    /// Origin-charged: the full transfer (α + bytes/β, from the later of
+    /// the origin's clock and the exposure time) and the traffic
+    /// counters land on this calling rank; the exposer stays passive.
+    /// Panics if `src` already closed the epoch (erroneous access
+    /// outside the exposure epoch — loud instead of a silent hang).
+    pub fn get(&self, src: usize) -> Payload {
+        let key = (self.comm.members[src], self.tag());
+        let (payload, at) = {
+            let mut w = self
+                .comm
+                .shared
+                .exposed
+                .lock()
+                .unwrap_or_else(|e| e.into_inner());
+            loop {
+                match w.get(&key) {
+                    Some(Some(e)) => break (e.payload.clone(), e.at),
+                    Some(None) => panic!(
+                        "RMA get from rank {} after it closed exposure epoch {}",
+                        key.0, self.epoch
+                    ),
+                    None => {}
+                }
+                if self.comm.shared.dead.load(std::sync::atomic::Ordering::SeqCst) {
+                    panic!(
+                        "peer rank died while waiting for exposure (src {}, epoch {})",
+                        key.0, self.epoch
+                    );
+                }
+                w = self
+                    .comm
+                    .shared
+                    .exposed_cv
+                    .wait(w)
+                    .unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        let bytes = payload.wire_bytes();
+        let st = &self.comm.state;
+        st.bytes_sent.set(st.bytes_sent.get() + bytes);
+        st.msgs_sent.set(st.msgs_sent.get() + 1);
+        let start = self.comm.now().max(at);
+        self.comm
+            .wait_to(start + self.comm.shared.net.transit_seconds(bytes));
+        payload
+    }
+
+    /// Close the exposure epoch (passive-target `flush` + `unlock`, or
+    /// one side of a `win_fence`): drain the put of each rank in
+    /// `sources` (local ranks, in the given order — the order defines
+    /// reduction order for callers that sum), advance this rank's clock
+    /// **once** to the latest arrival plus a single sync latency α, drop
+    /// this rank's own exposure, and open the next epoch. With no
+    /// sources this is free: the epoch index still advances, the clock
+    /// does not.
+    pub fn close_epoch(&mut self, sources: &[usize]) -> Vec<Payload> {
+        let tag = self.tag();
+        {
+            // tombstone this rank's exposure slot (only if one is live —
+            // put-only windows never touch the map): a get that races
+            // past the close panics instead of blocking forever
+            let mut w = self
+                .comm
+                .shared
+                .exposed
+                .lock()
+                .unwrap_or_else(|e| e.into_inner());
+            if let Some(slot) = w.get_mut(&(self.comm.my_world(), tag)) {
+                *slot = None;
+                self.comm.shared.exposed_cv.notify_all();
+            }
+        }
+        self.epoch += 1;
+        if sources.is_empty() {
+            return Vec::new();
+        }
+        let mut payloads = Vec::with_capacity(sources.len());
+        let mut latest = f64::NEG_INFINITY;
+        for &src in sources {
+            let msg = self
+                .comm
+                .shared
+                .pop_blocking((self.comm.members[src], self.comm.my_world(), tag));
+            latest = latest.max(msg.ready);
+            payloads.push(msg.payload);
+        }
+        let sync = self.comm.now().max(latest) + self.comm.shared.net.latency;
+        self.comm.wait_to(sync);
+        payloads
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{run_ranks, NetModel};
+
+    #[test]
+    fn transport_names() {
+        assert_eq!(Transport::TwoSided.name(), "two-sided");
+        assert_eq!(format!("{}", Transport::OneSided), "one-sided");
+    }
+
+    #[test]
+    fn put_close_charges_arrival_plus_one_sync_latency() {
+        let net = NetModel {
+            latency: 1e-6,
+            bw: 1e9,
+        };
+        let out = run_ranks(2, net, move |c| {
+            let mut win = RmaWindow::new(&c, 0);
+            if c.rank() == 0 {
+                win.put(1, Payload::F32(vec![0.0; 250])); // 1000 B
+                c.now()
+            } else {
+                let got = win.close_epoch(&[0]);
+                assert_eq!(got.len(), 1);
+                c.now()
+            }
+        });
+        assert_eq!(out[0], 0.0, "put is nonblocking at the origin");
+        // arrival α + B/β, plus the epoch-close sync α
+        let want = (1e-6 + 1000.0 / 1e9) + 1e-6;
+        assert!((out[1] - want).abs() < 1e-15, "{} vs {want}", out[1]);
+    }
+
+    #[test]
+    fn concurrent_epochs_overlap_on_the_wire() {
+        // two windows, both puts issued before either close: the waits
+        // overlap (max), unlike back-to-back blocking sendrecvs (sum)
+        let net = NetModel {
+            latency: 0.0,
+            bw: 1e9,
+        };
+        let out = run_ranks(2, net, move |c| {
+            let mut wa = RmaWindow::new(&c, 1);
+            let mut wb = RmaWindow::new(&c, 2);
+            if c.rank() == 0 {
+                wa.put(1, Payload::Phantom { bytes: 1000 });
+                wb.put(1, Payload::Phantom { bytes: 4000 });
+                c.now()
+            } else {
+                let _ = wa.close_epoch(&[0]);
+                let _ = wb.close_epoch(&[0]);
+                c.now()
+            }
+        });
+        let want = 4000.0 / 1e9; // max, not 5000/1e9
+        assert!((out[1] - want).abs() < 1e-15, "{} vs {want}", out[1]);
+    }
+
+    #[test]
+    fn epoch_tags_separate_rounds() {
+        // one put per epoch from the same origin: closes must pop them
+        // round by round, never mixing epochs
+        let out = run_ranks(2, NetModel::ideal(), |c| {
+            let mut win = RmaWindow::new(&c, 0);
+            if c.rank() == 0 {
+                win.put(1, Payload::F32(vec![1.0]));
+                win.close_epoch(&[]);
+                win.put(1, Payload::F32(vec![2.0]));
+                vec![]
+            } else {
+                let a = win.close_epoch(&[0]).remove(0).into_f32();
+                let b = win.close_epoch(&[0]).remove(0).into_f32();
+                vec![a[0], b[0]]
+            }
+        });
+        assert_eq!(out[1], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn get_is_origin_charged_and_waits_for_exposure() {
+        let net = NetModel {
+            latency: 1e-6,
+            bw: 1e9,
+        };
+        let out = run_ranks(2, net, move |c| {
+            let win = RmaWindow::new(&c, 3);
+            if c.rank() == 0 {
+                c.advance_to(5e-6); // exposure happens at t = 5 µs
+                win.expose(Payload::F32(vec![7.0; 250])); // 1000 B
+                (c.now(), c.stats().bytes_sent, 0.0)
+            } else {
+                let got = win.get(0).into_f32();
+                (c.now(), c.stats().bytes_sent, got[0] as f64)
+            }
+        });
+        // exposer: passive — clock and counters untouched by the get
+        assert_eq!(out[0].0, 5e-6);
+        assert_eq!(out[0].1, 0);
+        // origin: transfer starts at the exposure time, pays α + B/β and
+        // the wire bytes
+        let want = 5e-6 + 1e-6 + 1000.0 / 1e9;
+        assert!((out[1].0 - want).abs() < 1e-15, "{} vs {want}", out[1].0);
+        assert_eq!(out[1].1, 1000);
+        assert_eq!(out[1].2, 7.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "rank thread panicked")]
+    fn get_after_close_panics_loudly() {
+        let _ = run_ranks(2, NetModel::ideal(), |c| {
+            let mut win = RmaWindow::new(&c, 6);
+            if c.rank() == 0 {
+                win.expose(Payload::F32(vec![1.0]));
+                win.close_epoch(&[]);
+                // rendezvous: rank 1's get provably follows the close
+                c.send(1, 1, Payload::Empty);
+            } else {
+                let _ = c.recv(0, 1);
+                let _ = win.get(0); // access outside the exposure epoch
+            }
+        });
+    }
+
+    #[test]
+    fn close_epoch_books_wait_seconds() {
+        let net = NetModel {
+            latency: 0.0,
+            bw: 1e6,
+        };
+        let out = run_ranks(2, net, move |c| {
+            let mut win = RmaWindow::new(&c, 4);
+            if c.rank() == 0 {
+                win.put(1, Payload::Phantom { bytes: 1000 });
+            } else {
+                let _ = win.close_epoch(&[0]);
+            }
+            c.stats().wait_seconds
+        });
+        assert_eq!(out[0], 0.0);
+        assert!((out[1] - 1e-3).abs() < 1e-12, "{}", out[1]);
+    }
+
+    #[test]
+    fn empty_close_is_free_but_advances_the_epoch() {
+        let out = run_ranks(1, NetModel::aries(1), |c| {
+            let mut win = RmaWindow::new(&c, 5);
+            win.close_epoch(&[]);
+            (win.epoch(), c.now(), c.stats().wait_seconds)
+        });
+        assert_eq!(out[0], (1, 0.0, 0.0));
+    }
+}

@@ -14,6 +14,7 @@
 use dbcsr::bench::figures;
 use dbcsr::bench::harness::{run_spec, Engine, RunSpec, Shape};
 use dbcsr::bench::table::fmt_secs;
+use dbcsr::dist::{NetModel, Transport};
 use dbcsr::backend::autotune::{tuned_to_json, Autotuner};
 use dbcsr::config::Args;
 use dbcsr::matrix::Mode;
@@ -156,9 +157,10 @@ fn run_file(args: &Args) {
             "pdgemm" => Engine::Pdgemm,
             _ => Engine::DbcsrDensified,
         };
+        let rpn = get(section, "rpn", 4);
         let spec = RunSpec {
             nodes: get(section, "nodes", 1),
-            rpn: get(section, "rpn", 4),
+            rpn,
             threads: get(section, "threads", 3),
             block: get(section, "block", 22),
             shape,
@@ -167,6 +169,16 @@ fn run_file(args: &Args) {
                 Mode::Real
             } else {
                 Mode::Model
+            },
+            net: match get_s(section, "net", "aries").as_str() {
+                "aries" => NetModel::aries(rpn),
+                "ideal" => NetModel::ideal(),
+                other => panic!("net = aries|ideal, got {other:?}"),
+            },
+            transport: match get_s(section, "transport", "two-sided").as_str() {
+                "two-sided" => Transport::TwoSided,
+                "one-sided" => Transport::OneSided,
+                other => panic!("transport = two-sided|one-sided, got {other:?}"),
             },
         };
         let r = run_spec(spec);
@@ -192,14 +204,27 @@ fn run_one(args: &Args, scale: usize, mode: Mode) {
         "pdgemm" => Engine::Pdgemm,
         other => panic!("--engine dbcsr|dbcsr-blocked|pdgemm, got {other:?}"),
     };
+    let rpn = args.usize_flag("rpn", 4);
+    let net = match args.str_flag("net", "aries") {
+        "aries" => NetModel::aries(rpn),
+        "ideal" => NetModel::ideal(),
+        other => panic!("--net aries|ideal, got {other:?}"),
+    };
+    let transport = match args.str_flag("transport", "two-sided") {
+        "two-sided" => Transport::TwoSided,
+        "one-sided" => Transport::OneSided,
+        other => panic!("--transport two-sided|one-sided, got {other:?}"),
+    };
     let spec = RunSpec {
         nodes: args.usize_flag("nodes", 1),
-        rpn: args.usize_flag("rpn", 4),
+        rpn,
         threads: args.usize_flag("threads", 3),
         block: args.usize_flag("block", 22),
         shape,
         engine,
         mode,
+        net,
+        transport,
     };
     println!("spec: {spec:?}");
     let r = run_spec(spec);
@@ -209,12 +234,13 @@ fn run_one(args: &Args, scale: usize, mode: Mode) {
         r.wall
     );
     println!(
-        "stacks {}  block_mults {}  flops {:.3e}  comm {:.1} MiB in {} msgs  densify {:.1} MiB  dev peak {:.2} GiB{}",
+        "stacks {}  block_mults {}  flops {:.3e}  comm {:.1} MiB in {} msgs (wait {:.3}s)  densify {:.1} MiB  dev peak {:.2} GiB{}",
         r.stats.stacks,
         r.stats.block_mults,
         r.stats.flops as f64,
         r.stats.comm_bytes as f64 / (1 << 20) as f64,
         r.stats.comm_msgs,
+        r.stats.comm_wait_s,
         r.stats.densify_bytes as f64 / (1 << 20) as f64,
         r.stats.dev_mem_peak as f64 / (1 << 30) as f64,
         if r.oom { "  ** OOM **" } else { "" }

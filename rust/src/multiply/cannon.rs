@@ -14,11 +14,18 @@
 //! 4. the engine finalizes (undensify, device drain) and the C panels
 //!    assemble into the result matrix — whose blocks are exactly this
 //!    rank's cyclic share, so no final communication is needed.
+//!
+//! Step 2/3's wire traffic dispatches on [`Transport`]: two-sided runs
+//! the blocking sendrecv exchanges above (the A shift completes before
+//! the B shift is issued), one-sided issues RMA puts for A *and* B into
+//! exposure windows before closing either epoch, so the two transfers
+//! overlap on the virtual wire (see [`crate::dist::rma`]). Both paths
+//! move the same payloads in the same order — C is bit-identical.
 
 use std::collections::BTreeMap;
 
 use crate::backend::gpu_sim::DeviceOom;
-use crate::dist::{Grid2D, Payload};
+use crate::dist::{CommView, Grid2D, Payload, RmaWindow, Transport};
 use crate::matrix::{DistMatrix, Distribution, LocalCsr, Mode};
 
 use super::engine::LocalEngine;
@@ -27,6 +34,15 @@ use super::vgrid::VGrid;
 /// Panel key: (virtual row, group) for A; (group, virtual col) for B.
 pub(super) type Key = (usize, usize);
 
+/// Panel block metadata: (row ids, col ids, row sizes, col sizes).
+pub(super) type PanelMeta = (Vec<usize>, Vec<usize>, Vec<usize>, Vec<usize>);
+
+/// RMA window ids of this driver (twofive uses 5–10).
+const WIN_SKEW_A: u64 = 1;
+const WIN_SKEW_B: u64 = 2;
+const WIN_SHIFT_A: u64 = 3;
+const WIN_SHIFT_B: u64 = 4;
+
 /// Multiply `C = A · B` with generalized Cannon. Collective over the
 /// grid; returns this rank's C.
 pub fn multiply_cannon(
@@ -34,6 +50,7 @@ pub fn multiply_cannon(
     a: &DistMatrix,
     b: &DistMatrix,
     engine: &mut LocalEngine,
+    transport: Transport,
 ) -> Result<DistMatrix, DeviceOom> {
     assert_eq!(
         a.cols.nblocks, b.rows.nblocks,
@@ -58,58 +75,76 @@ pub fn multiply_cannon(
         .map(|(g, j)| ((g, j), extract_panel(b, &vg, g, j)))
         .collect();
 
-    // skew A along the grid row
-    {
-        let sends: Vec<(usize, Key)> = a_panels
-            .keys()
-            .map(|&(i, g)| (vg.a_skew_col(i, g), (i, g)))
-            .collect();
-        let mut recvs: Vec<(usize, Key)> = Vec::new();
-        for i in vg.vrows() {
-            for g in 0..vg.l {
-                if vg.a_skew_col(i, g) == c {
-                    recvs.push((g % vg.pc, (i, g)));
-                }
+    // skew A along the grid row, B along the grid col
+    let a_sends: Vec<(usize, Key)> = a_panels
+        .keys()
+        .map(|&(i, g)| (vg.a_skew_col(i, g), (i, g)))
+        .collect();
+    let mut a_recvs: Vec<(usize, Key)> = Vec::new();
+    for i in vg.vrows() {
+        for g in 0..vg.l {
+            if vg.a_skew_col(i, g) == c {
+                a_recvs.push((g % vg.pc, (i, g)));
             }
         }
-        a_panels = exchange(
-            &grid.row,
-            a_panels,
-            &sends,
-            &recvs,
-            |key| panel_meta(a, &vg, key.0, key.1),
-            10,
-            mode,
-        );
     }
-    // skew B along the grid col
-    {
-        let sends: Vec<(usize, Key)> = b_panels
-            .keys()
-            .map(|&(g, j)| (vg.b_skew_row(g, j), (g, j)))
-            .collect();
-        let mut recvs: Vec<(usize, Key)> = Vec::new();
-        for j in vg.vcols() {
-            for g in 0..vg.l {
-                if vg.b_skew_row(g, j) == r {
-                    recvs.push((g % vg.pr, (g, j)));
-                }
+    let b_sends: Vec<(usize, Key)> = b_panels
+        .keys()
+        .map(|&(g, j)| (vg.b_skew_row(g, j), (g, j)))
+        .collect();
+    let mut b_recvs: Vec<(usize, Key)> = Vec::new();
+    for j in vg.vcols() {
+        for g in 0..vg.l {
+            if vg.b_skew_row(g, j) == r {
+                b_recvs.push((g % vg.pr, (g, j)));
             }
         }
-        b_panels = exchange(
-            &grid.col,
-            b_panels,
-            &sends,
-            &recvs,
-            |key| panel_meta(b, &vg, key.0, key.1),
-            11,
-            mode,
-        );
+    }
+    match transport {
+        Transport::TwoSided => {
+            a_panels = exchange(
+                &grid.row,
+                a_panels,
+                &a_sends,
+                &a_recvs,
+                |key| panel_meta(a, &vg, key.0, key.1),
+                10,
+                mode,
+            );
+            b_panels = exchange(
+                &grid.col,
+                b_panels,
+                &b_sends,
+                &b_recvs,
+                |key| panel_meta(b, &vg, key.0, key.1),
+                11,
+                mode,
+            );
+        }
+        Transport::OneSided => {
+            // both skews' puts issue before either epoch closes, so the
+            // A and B transfers overlap on the wire
+            let ex_a =
+                rma_exchange_start(&grid.row, WIN_SKEW_A, a_panels, &a_sends, &a_recvs, mode);
+            let ex_b =
+                rma_exchange_start(&grid.col, WIN_SKEW_B, b_panels, &b_sends, &b_recvs, mode);
+            a_panels = rma_exchange_finish(ex_a, |key| panel_meta(a, &vg, key.0, key.1), mode);
+            b_panels = rma_exchange_finish(ex_b, |key| panel_meta(b, &vg, key.0, key.1), mode);
+        }
     }
 
     // ---- C slots ----------------------------------------------------------
     let slots = vg.slots();
     engine.begin(&grid.world, build_c_slots(&vg, &slots, a, b))?;
+
+    // per-tick shift windows (one epoch per tick) — one-sided only
+    let (mut win_a, mut win_b) = match transport {
+        Transport::OneSided => (
+            Some(RmaWindow::new(&grid.world, WIN_SHIFT_A)),
+            Some(RmaWindow::new(&grid.world, WIN_SHIFT_B)),
+        ),
+        Transport::TwoSided => (None, None),
+    };
 
     // ---- ticks -------------------------------------------------------------
     for s in 0..vg.l {
@@ -121,46 +156,35 @@ pub fn multiply_cannon(
         }
         if s + 1 < vg.l {
             // shift all A panels one column left, B panels one row up
-            if vg.pc > 1 {
-                let next_keys: Vec<Key> = {
-                    let mut v: Vec<Key> = slots
-                        .iter()
-                        .map(|&(i, j)| (i, vg.group_at(i, j, s + 1)))
-                        .collect();
-                    v.sort_unstable();
-                    v
-                };
-                a_panels = shift(
-                    &grid.world,
-                    grid.left(),
-                    grid.right(),
-                    a_panels,
-                    &next_keys,
-                    |key| panel_meta(a, &vg, key.0, key.1),
-                    12,
-                    mode,
-                );
-            }
-            if vg.pr > 1 {
-                let next_keys: Vec<Key> = {
-                    let mut v: Vec<Key> = slots
-                        .iter()
-                        .map(|&(i, j)| (vg.group_at(i, j, s + 1), j))
-                        .collect();
-                    v.sort_unstable();
-                    v
-                };
-                b_panels = shift(
-                    &grid.world,
-                    grid.up(),
-                    grid.down(),
-                    b_panels,
-                    &next_keys,
-                    |key| panel_meta(b, &vg, key.0, key.1),
-                    13,
-                    mode,
-                );
-            }
+            let next_a: Option<Vec<Key>> = (vg.pc > 1).then(|| {
+                let mut v: Vec<Key> = slots
+                    .iter()
+                    .map(|&(i, j)| (i, vg.group_at(i, j, s + 1)))
+                    .collect();
+                v.sort_unstable();
+                v
+            });
+            let next_b: Option<Vec<Key>> = (vg.pr > 1).then(|| {
+                let mut v: Vec<Key> = slots
+                    .iter()
+                    .map(|&(i, j)| (vg.group_at(i, j, s + 1), j))
+                    .collect();
+                v.sort_unstable();
+                v
+            });
+            shift_pair(
+                grid,
+                transport,
+                (&mut win_a, &mut win_b),
+                &mut a_panels,
+                &mut b_panels,
+                next_a.as_deref(),
+                next_b.as_deref(),
+                |key| panel_meta(a, &vg, key.0, key.1),
+                |key| panel_meta(b, &vg, key.0, key.1),
+                (12, 13),
+                mode,
+            );
         }
     }
 
@@ -259,7 +283,7 @@ pub(super) fn panel_meta(
     vg: &VGrid,
     x: usize,
     y: usize,
-) -> (Vec<usize>, Vec<usize>, Vec<usize>, Vec<usize>) {
+) -> PanelMeta {
     let rows = vg.blocks_of(x, m.rows.nblocks);
     let cols = vg.blocks_of(y, m.cols.nblocks);
     let rs: Vec<usize> = rows.iter().map(|&b| m.rows.block_size(b)).collect();
@@ -304,6 +328,49 @@ pub(super) fn extract_panel(m: &DistMatrix, vg: &VGrid, x: usize, y: usize) -> L
     }
 }
 
+/// Shared routing step of the skew exchanges (both transports): group
+/// `sends` by destination and `recvs` by source (keys sorted within
+/// each), and move the self-keep panels from `held` into `out` — what we
+/// address to ourselves must be exactly what we expect from ourselves; a
+/// mismatch would silently drop panels (the kept set would shadow the
+/// expected one).
+fn route_exchange(
+    me: usize,
+    held: &mut BTreeMap<Key, LocalCsr>,
+    sends: &[(usize, Key)],
+    recvs: &[(usize, Key)],
+    out: &mut BTreeMap<Key, LocalCsr>,
+) -> (BTreeMap<usize, Vec<Key>>, BTreeMap<usize, Vec<Key>>) {
+    let mut by_dst: BTreeMap<usize, Vec<Key>> = BTreeMap::new();
+    for &(d, k) in sends {
+        by_dst.entry(d).or_default().push(k);
+    }
+    for keys in by_dst.values_mut() {
+        keys.sort_unstable();
+    }
+    let mut by_src: BTreeMap<usize, Vec<Key>> = BTreeMap::new();
+    for &(s, k) in recvs {
+        by_src.entry(s).or_default().push(k);
+    }
+    for keys in by_src.values_mut() {
+        keys.sort_unstable();
+    }
+    let kept = by_dst.remove(&me);
+    let expected = by_src.remove(&me);
+    debug_assert_eq!(
+        kept.as_deref().unwrap_or(&[]),
+        expected.as_deref().unwrap_or(&[]),
+        "self-keep panels must match the panels expected from self"
+    );
+    if let Some(keys) = kept {
+        for k in keys {
+            let p = held.remove(&k).expect("held panel");
+            out.insert(k, p);
+        }
+    }
+    (by_dst, by_src)
+}
+
 /// Generic skew exchange over a 1-D communicator: `sends` = (dest local
 /// rank, key) for every held panel; `recvs` = (src local rank, key) for
 /// every expected panel. Panels travel concatenated per (src, dst) pair,
@@ -318,44 +385,10 @@ pub(super) fn exchange<F>(
     mode: Mode,
 ) -> BTreeMap<Key, LocalCsr>
 where
-    F: Fn(&Key) -> (Vec<usize>, Vec<usize>, Vec<usize>, Vec<usize>),
+    F: Fn(&Key) -> PanelMeta,
 {
-    let me = comm.rank();
     let mut out: BTreeMap<Key, LocalCsr> = BTreeMap::new();
-
-    // group sends by destination (sorted keys within each)
-    let mut by_dst: BTreeMap<usize, Vec<Key>> = BTreeMap::new();
-    for &(d, k) in sends {
-        by_dst.entry(d).or_default().push(k);
-    }
-    for keys in by_dst.values_mut() {
-        keys.sort_unstable();
-    }
-    // group recvs by source
-    let mut by_src: BTreeMap<usize, Vec<Key>> = BTreeMap::new();
-    for &(s, k) in recvs {
-        by_src.entry(s).or_default().push(k);
-    }
-    for keys in by_src.values_mut() {
-        keys.sort_unstable();
-    }
-
-    // local keep: what we address to ourselves must be exactly what we
-    // expect from ourselves — a mismatch would silently drop panels (the
-    // kept set would shadow the expected one)
-    let kept = by_dst.remove(&me);
-    let expected = by_src.remove(&me);
-    debug_assert_eq!(
-        kept.as_deref().unwrap_or(&[]),
-        expected.as_deref().unwrap_or(&[]),
-        "self-keep panels must match the panels expected from self"
-    );
-    if let Some(keys) = kept {
-        for k in keys {
-            let p = held.remove(&k).expect("held panel");
-            out.insert(k, p);
-        }
-    }
+    let (by_dst, by_src) = route_exchange(comm.rank(), &mut held, sends, recvs, &mut out);
     // sends first (non-blocking), then receives
     for (&dst, keys) in &by_dst {
         comm.send(dst, tag, pack(&mut held, keys, mode));
@@ -364,6 +397,163 @@ where
         let payload = comm.recv(src, tag);
         unpack(payload, keys, &meta, mode, &mut out);
     }
+    out
+}
+
+/// One tick's A+B shift pair under either transport — the single place
+/// both drivers (Cannon and 2.5D) dispatch through, so the transport
+/// semantics cannot diverge. Two-sided runs the blocking
+/// sendrecv_replace sequence (the A shift completes before the B shift
+/// is issued, so the comm chain grows `t_A + t_B` per tick); one-sided
+/// issues **both** puts before closing either epoch, so the transfers
+/// overlap on the wire (`max(t_A, t_B)`). `next_a`/`next_b` are `None`
+/// when that operand does not shift (single-column/row grids); `wins`
+/// are the per-multiply shift windows, `Some` only under one-sided.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn shift_pair<FA, FB>(
+    grid: &Grid2D,
+    transport: Transport,
+    wins: (&mut Option<RmaWindow>, &mut Option<RmaWindow>),
+    a_panels: &mut BTreeMap<Key, LocalCsr>,
+    b_panels: &mut BTreeMap<Key, LocalCsr>,
+    next_a: Option<&[Key]>,
+    next_b: Option<&[Key]>,
+    meta_a: FA,
+    meta_b: FB,
+    tags: (u64, u64),
+    mode: Mode,
+) where
+    FA: Fn(&Key) -> PanelMeta,
+    FB: Fn(&Key) -> PanelMeta,
+{
+    match transport {
+        Transport::TwoSided => {
+            if let Some(next_keys) = next_a {
+                let held = std::mem::take(a_panels);
+                *a_panels = shift(
+                    &grid.world,
+                    grid.left(),
+                    grid.right(),
+                    held,
+                    next_keys,
+                    meta_a,
+                    tags.0,
+                    mode,
+                );
+            }
+            if let Some(next_keys) = next_b {
+                let held = std::mem::take(b_panels);
+                *b_panels = shift(
+                    &grid.world,
+                    grid.up(),
+                    grid.down(),
+                    held,
+                    next_keys,
+                    meta_b,
+                    tags.1,
+                    mode,
+                );
+            }
+        }
+        Transport::OneSided => {
+            if next_a.is_some() {
+                let held = std::mem::take(a_panels);
+                rma_shift_put(wins.0.as_ref().unwrap(), grid.left(), held, mode);
+            }
+            if next_b.is_some() {
+                let held = std::mem::take(b_panels);
+                rma_shift_put(wins.1.as_ref().unwrap(), grid.up(), held, mode);
+            }
+            if let Some(next_keys) = next_a {
+                let win = wins.0.as_mut().unwrap();
+                *a_panels = rma_shift_close(win, grid.right(), next_keys, meta_a, mode);
+            }
+            if let Some(next_keys) = next_b {
+                let win = wins.1.as_mut().unwrap();
+                *b_panels = rma_shift_close(win, grid.down(), next_keys, meta_b, mode);
+            }
+        }
+    }
+}
+
+/// One-sided variant of [`exchange`], split in two so a driver can issue
+/// the puts of *several* exchanges (A's and B's skews) before closing
+/// any of their epochs: `rma_exchange_start` performs the self-keep and
+/// issues one put per destination into a fresh window; the returned
+/// pending state is completed by [`rma_exchange_finish`].
+pub(super) struct RmaExchange {
+    win: RmaWindow,
+    by_src: BTreeMap<usize, Vec<Key>>,
+    out: BTreeMap<Key, LocalCsr>,
+}
+
+pub(super) fn rma_exchange_start(
+    comm: &CommView,
+    win_id: u64,
+    mut held: BTreeMap<Key, LocalCsr>,
+    sends: &[(usize, Key)],
+    recvs: &[(usize, Key)],
+    mode: Mode,
+) -> RmaExchange {
+    let mut out: BTreeMap<Key, LocalCsr> = BTreeMap::new();
+    let (by_dst, by_src) = route_exchange(comm.rank(), &mut held, sends, recvs, &mut out);
+    let win = RmaWindow::new(comm, win_id);
+    for (&dst, keys) in &by_dst {
+        win.put(dst, pack(&mut held, keys, mode));
+    }
+    RmaExchange { win, by_src, out }
+}
+
+pub(super) fn rma_exchange_finish<F>(
+    ex: RmaExchange,
+    meta: F,
+    mode: Mode,
+) -> BTreeMap<Key, LocalCsr>
+where
+    F: Fn(&Key) -> PanelMeta,
+{
+    let RmaExchange {
+        mut win,
+        by_src,
+        mut out,
+    } = ex;
+    let sources: Vec<usize> = by_src.keys().copied().collect();
+    let payloads = win.close_epoch(&sources);
+    for (payload, keys) in payloads.into_iter().zip(by_src.values()) {
+        unpack(payload, keys, &meta, mode, &mut out);
+    }
+    out
+}
+
+/// One-sided half-shift: put this rank's whole panel set into `dst`'s
+/// window for the current epoch (nonblocking, origin-charged).
+pub(super) fn rma_shift_put(
+    win: &RmaWindow,
+    dst: usize,
+    held: BTreeMap<Key, LocalCsr>,
+    mode: Mode,
+) {
+    let keys: Vec<Key> = held.keys().copied().collect();
+    let mut held = held;
+    win.put(dst, pack(&mut held, &keys, mode));
+}
+
+/// One-sided half-shift completion: close the epoch (one clock advance),
+/// unpacking the panel set `src` put for us.
+pub(super) fn rma_shift_close<F>(
+    win: &mut RmaWindow,
+    src: usize,
+    next_keys: &[Key],
+    meta: F,
+    mode: Mode,
+) -> BTreeMap<Key, LocalCsr>
+where
+    F: Fn(&Key) -> PanelMeta,
+{
+    let mut payloads = win.close_epoch(&[src]);
+    debug_assert_eq!(payloads.len(), 1);
+    let mut out = BTreeMap::new();
+    unpack(payloads.remove(0), next_keys, &meta, mode, &mut out);
     out
 }
 
@@ -381,7 +571,7 @@ pub(super) fn shift<F>(
     mode: Mode,
 ) -> BTreeMap<Key, LocalCsr>
 where
-    F: Fn(&Key) -> (Vec<usize>, Vec<usize>, Vec<usize>, Vec<usize>),
+    F: Fn(&Key) -> PanelMeta,
 {
     let keys: Vec<Key> = held.keys().copied().collect();
     let mut held = held;
@@ -392,7 +582,7 @@ where
     out
 }
 
-fn pack(held: &mut BTreeMap<Key, LocalCsr>, keys: &[Key], mode: Mode) -> Payload {
+pub(super) fn pack(held: &mut BTreeMap<Key, LocalCsr>, keys: &[Key], mode: Mode) -> Payload {
     match mode {
         Mode::Model => {
             let bytes: u64 = keys
@@ -421,14 +611,14 @@ fn pack(held: &mut BTreeMap<Key, LocalCsr>, keys: &[Key], mode: Mode) -> Payload
     }
 }
 
-fn unpack<F>(
+pub(super) fn unpack<F>(
     payload: Payload,
     keys: &[Key],
     meta: &F,
     mode: Mode,
     out: &mut BTreeMap<Key, LocalCsr>,
 ) where
-    F: Fn(&Key) -> (Vec<usize>, Vec<usize>, Vec<usize>, Vec<usize>),
+    F: Fn(&Key) -> PanelMeta,
 {
     match mode {
         Mode::Model => {
@@ -485,7 +675,8 @@ mod tests {
 
     /// Full pipeline on (pr × pc) ranks; checks C against the dense
     /// reference product.
-    fn cannon_case(
+    #[allow(clippy::too_many_arguments)]
+    fn cannon_case_t(
         pr: usize,
         pc: usize,
         m: usize,
@@ -494,6 +685,7 @@ mod tests {
         block: usize,
         threads: usize,
         densify: bool,
+        transport: Transport,
     ) {
         let p = pr * pc;
         let out = run_ranks(p, NetModel::aries(2), move |world| {
@@ -529,7 +721,7 @@ mod tests {
                 None,
                 1,
             );
-            let c = multiply_cannon(&grid, &a, &b, &mut engine).unwrap();
+            let c = multiply_cannon(&grid, &a, &b, &mut engine, transport).unwrap();
             let mut dense = vec![0.0f32; m * n];
             c.add_into_dense(&mut dense);
             dense
@@ -548,6 +740,20 @@ mod tests {
         assert_allclose(&got, &want, 2e-3, 2e-3).unwrap_or_else(|e| {
             panic!("cannon {pr}x{pc} m{m} n{n} k{k} b{block} t{threads} densify={densify}: {e}")
         });
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn cannon_case(
+        pr: usize,
+        pc: usize,
+        m: usize,
+        n: usize,
+        k: usize,
+        block: usize,
+        threads: usize,
+        densify: bool,
+    ) {
+        cannon_case_t(pr, pc, m, n, k, block, threads, densify, Transport::TwoSided);
     }
 
     #[test]
@@ -594,6 +800,15 @@ mod tests {
     }
 
     #[test]
+    fn one_sided_transport_matches_reference() {
+        // the RMA path across square/rect grids and both engine paths
+        cannon_case_t(2, 2, 24, 24, 24, 4, 2, true, Transport::OneSided);
+        cannon_case_t(2, 3, 36, 24, 30, 5, 1, false, Transport::OneSided);
+        cannon_case_t(1, 3, 18, 18, 18, 3, 1, false, Transport::OneSided);
+        cannon_case_t(1, 1, 16, 16, 16, 4, 2, true, Transport::OneSided);
+    }
+
+    #[test]
     fn model_mode_runs_at_scale_and_counts() {
         // paper-scale-ish in model mode: no data, sane counters
         let out = run_ranks(4, NetModel::aries(4), |world| {
@@ -623,7 +838,7 @@ mod tests {
                 None,
                 4,
             );
-            let _c = multiply_cannon(&grid, &a, &b, &mut engine).unwrap();
+            let _c = multiply_cannon(&grid, &a, &b, &mut engine, Transport::TwoSided).unwrap();
             (engine.stats.clone(), grid.world.now())
         });
         let nb = 2816usize / 22; // 128 blocks per dim

@@ -28,6 +28,7 @@ use crate::perfmodel::PerfModel;
 use crate::runtime::Runtime;
 use crate::util::stats::MultiplyStats;
 
+pub use crate::dist::Transport;
 pub use engine::{EngineOpts, LocalEngine};
 
 /// Which data-exchange algorithm to run.
@@ -53,6 +54,13 @@ pub struct MultiplyConfig {
     pub engine: EngineOpts,
     pub perf: PerfModel,
     pub algorithm: Algorithm,
+    /// Point-to-point transport for panel traffic: blocking two-sided
+    /// sendrecv (the baseline) or one-sided RMA puts with epoch sync
+    /// (arXiv:1705.10218). Numerics are bit-identical across transports;
+    /// only the modeled comm waits differ. Cannon and 2.5D dispatch on
+    /// it; tall-skinny and the PDGEMM baseline are collective-based and
+    /// ignore it.
+    pub transport: Transport,
     /// Ranks sharing each node's GPU (the grid config's rank factor).
     pub gpu_share: usize,
     /// PJRT runtime for real numerics (None → CPU microkernels).
@@ -65,6 +73,7 @@ impl Default for MultiplyConfig {
             engine: EngineOpts::default(),
             perf: PerfModel::default(),
             algorithm: Algorithm::Auto,
+            transport: Transport::TwoSided,
             gpu_share: 1,
             runtime: None,
         }
@@ -142,14 +151,15 @@ pub fn multiply(
                 a.col_dist.nproc(),
                 layers,
             );
-            twofive::multiply_twofive(&g3, a, b, &mut engine)?
+            twofive::multiply_twofive(&g3, a, b, &mut engine, cfg.transport)?
         }
-        _ => cannon::multiply_cannon(grid, a, b, &mut engine)?,
+        _ => cannon::multiply_cannon(grid, a, b, &mut engine, cfg.transport)?,
     };
     let comm1 = world.stats();
     let mut stats = engine.stats.clone();
     stats.comm_bytes = comm1.bytes_sent - comm0.bytes_sent;
     stats.comm_msgs = comm1.msgs_sent - comm0.msgs_sent;
+    stats.comm_wait_s = comm1.wait_seconds - comm0.wait_seconds;
     Ok(MultiplyOutcome {
         c,
         stats,

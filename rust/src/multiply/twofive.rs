@@ -29,12 +29,15 @@
 use std::collections::{BTreeMap, BTreeSet};
 
 use crate::backend::gpu_sim::DeviceOom;
-use crate::dist::{Grid3D, Payload};
+use crate::dist::{sum_payloads, Grid3D, Payload, RmaWindow, Transport};
 use crate::matrix::matrix::block_rng;
 use crate::matrix::{BlockLayout, BlockStore, DistMatrix, Distribution, LocalCsr, Mode};
 use crate::util::even_chunk;
 
-use super::cannon::{assemble_c, build_c_slots, exchange, extract_panel, panel_meta, shift, Key};
+use super::cannon::{
+    assemble_c, build_c_slots, exchange, extract_panel, panel_meta, rma_exchange_finish,
+    rma_exchange_start, shift_pair, Key,
+};
 use super::engine::LocalEngine;
 use super::vgrid::{lcm, VGrid};
 
@@ -43,6 +46,14 @@ const TAG_SKEW_A: u64 = 14;
 const TAG_SKEW_B: u64 = 15;
 const TAG_SHIFT_A: u64 = 16;
 const TAG_SHIFT_B: u64 = 17;
+
+/// RMA window ids of this driver (cannon uses 1–4).
+const WIN_SKEW_A: u64 = 5;
+const WIN_SKEW_B: u64 = 6;
+const WIN_SHIFT_A: u64 = 7;
+const WIN_SHIFT_B: u64 = 8;
+const WIN_REDUCE: u64 = 9;
+const WIN_REPL: u64 = 10;
 
 /// Sweep period for a (rows × cols × layers) topology: a multiple of
 /// lcm(rows, cols) divisible by `layers`, so each layer owns exactly
@@ -67,6 +78,7 @@ pub fn multiply_twofive(
     a: &DistMatrix,
     b: &DistMatrix,
     engine: &mut LocalEngine,
+    transport: Transport,
 ) -> Result<DistMatrix, DeviceOom> {
     assert_eq!(
         a.cols.nblocks, b.rows.nblocks,
@@ -118,11 +130,10 @@ pub fn multiply_twofive(
             check_layer_replicas(g3, b, "B");
         }
     }
-    let mut a_panels = if a_native {
-        a_keys
-            .iter()
-            .map(|&(x, y)| ((x, y), extract_panel(a, &vg, x, y)))
-            .collect()
+    // exchange plans for canonical operands (held panels + routing)
+    type Plan = (BTreeMap<Key, LocalCsr>, Vec<(usize, Key)>, Vec<(usize, Key)>);
+    let a_plan: Option<Plan> = if a_native {
+        None
     } else {
         let held: BTreeMap<Key, LocalCsr> = vg
             .a_initial()
@@ -134,21 +145,10 @@ pub fn multiply_twofive(
             .map(|&(i, g)| (vg.a_skew_col_at(i, g, s0), (i, g)))
             .collect();
         let recvs: Vec<(usize, Key)> = a_keys.iter().map(|&(i, g)| (g % vg.pc, (i, g))).collect();
-        exchange(
-            &grid.row,
-            held,
-            &sends,
-            &recvs,
-            |key| panel_meta(a, &vg, key.0, key.1),
-            TAG_SKEW_A,
-            mode,
-        )
+        Some((held, sends, recvs))
     };
-    let mut b_panels = if b_native {
-        b_keys
-            .iter()
-            .map(|&(x, y)| ((x, y), extract_panel(b, &vg, x, y)))
-            .collect()
+    let b_plan: Option<Plan> = if b_native {
+        None
     } else {
         let held: BTreeMap<Key, LocalCsr> = vg
             .b_initial()
@@ -160,19 +160,80 @@ pub fn multiply_twofive(
             .map(|&(g, j)| (vg.b_skew_row_at(g, j, s0), (g, j)))
             .collect();
         let recvs: Vec<(usize, Key)> = b_keys.iter().map(|&(g, j)| (g % vg.pr, (g, j))).collect();
-        exchange(
-            &grid.col,
-            held,
-            &sends,
-            &recvs,
-            |key| panel_meta(b, &vg, key.0, key.1),
-            TAG_SKEW_B,
-            mode,
-        )
+        Some((held, sends, recvs))
+    };
+    let extract_a = || {
+        a_keys
+            .iter()
+            .map(|&(x, y)| ((x, y), extract_panel(a, &vg, x, y)))
+            .collect::<BTreeMap<Key, LocalCsr>>()
+    };
+    let extract_b = || {
+        b_keys
+            .iter()
+            .map(|&(x, y)| ((x, y), extract_panel(b, &vg, x, y)))
+            .collect::<BTreeMap<Key, LocalCsr>>()
+    };
+    let (mut a_panels, mut b_panels) = match transport {
+        Transport::TwoSided => {
+            // blocking: the A skew completes before the B skew is issued
+            let ap = match a_plan {
+                None => extract_a(),
+                Some((held, sends, recvs)) => exchange(
+                    &grid.row,
+                    held,
+                    &sends,
+                    &recvs,
+                    |key| panel_meta(a, &vg, key.0, key.1),
+                    TAG_SKEW_A,
+                    mode,
+                ),
+            };
+            let bp = match b_plan {
+                None => extract_b(),
+                Some((held, sends, recvs)) => exchange(
+                    &grid.col,
+                    held,
+                    &sends,
+                    &recvs,
+                    |key| panel_meta(b, &vg, key.0, key.1),
+                    TAG_SKEW_B,
+                    mode,
+                ),
+            };
+            (ap, bp)
+        }
+        Transport::OneSided => {
+            // both skews' puts issue before either epoch closes
+            let ex_a = a_plan.map(|(held, sends, recvs)| {
+                rma_exchange_start(&grid.row, WIN_SKEW_A, held, &sends, &recvs, mode)
+            });
+            let ex_b = b_plan.map(|(held, sends, recvs)| {
+                rma_exchange_start(&grid.col, WIN_SKEW_B, held, &sends, &recvs, mode)
+            });
+            let ap = match ex_a {
+                None => extract_a(),
+                Some(ex) => rma_exchange_finish(ex, |key| panel_meta(a, &vg, key.0, key.1), mode),
+            };
+            let bp = match ex_b {
+                None => extract_b(),
+                Some(ex) => rma_exchange_finish(ex, |key| panel_meta(b, &vg, key.0, key.1), mode),
+            };
+            (ap, bp)
+        }
     };
 
     // ---- C slots ----------------------------------------------------------
     engine.begin(&grid.world, build_c_slots(&vg, &slots, a, b))?;
+
+    // per-tick shift windows (one epoch per tick) — one-sided only
+    let (mut win_a, mut win_b) = match transport {
+        Transport::OneSided => (
+            Some(RmaWindow::new(&grid.world, WIN_SHIFT_A)),
+            Some(RmaWindow::new(&grid.world, WIN_SHIFT_B)),
+        ),
+        Transport::TwoSided => (None, None),
+    };
 
     // ---- the shortened sweep: ticks s0 .. s0 + L/c ------------------------
     for t in 0..nticks {
@@ -184,78 +245,83 @@ pub fn multiply_twofive(
             engine.tick(&grid.world, idx, ap, bp)?;
         }
         if t + 1 < nticks {
-            if vg.pc > 1 {
-                let next_keys: Vec<Key> = {
-                    let mut v: Vec<Key> = slots
-                        .iter()
-                        .map(|&(i, j)| (i, vg.group_at(i, j, s + 1)))
-                        .collect();
-                    v.sort_unstable();
-                    v.dedup();
-                    v
-                };
-                a_panels = shift(
-                    &grid.world,
-                    grid.left(),
-                    grid.right(),
-                    a_panels,
-                    &next_keys,
-                    |key| panel_meta(a, &vg, key.0, key.1),
-                    TAG_SHIFT_A,
-                    mode,
-                );
-            }
-            if vg.pr > 1 {
-                let next_keys: Vec<Key> = {
-                    let mut v: Vec<Key> = slots
-                        .iter()
-                        .map(|&(i, j)| (vg.group_at(i, j, s + 1), j))
-                        .collect();
-                    v.sort_unstable();
-                    v.dedup();
-                    v
-                };
-                b_panels = shift(
-                    &grid.world,
-                    grid.up(),
-                    grid.down(),
-                    b_panels,
-                    &next_keys,
-                    |key| panel_meta(b, &vg, key.0, key.1),
-                    TAG_SHIFT_B,
-                    mode,
-                );
-            }
+            let next_a: Option<Vec<Key>> = (vg.pc > 1).then(|| {
+                let mut v: Vec<Key> = slots
+                    .iter()
+                    .map(|&(i, j)| (i, vg.group_at(i, j, s + 1)))
+                    .collect();
+                v.sort_unstable();
+                v.dedup();
+                v
+            });
+            let next_b: Option<Vec<Key>> = (vg.pr > 1).then(|| {
+                let mut v: Vec<Key> = slots
+                    .iter()
+                    .map(|&(i, j)| (vg.group_at(i, j, s + 1), j))
+                    .collect();
+                v.sort_unstable();
+                v.dedup();
+                v
+            });
+            shift_pair(
+                grid,
+                transport,
+                (&mut win_a, &mut win_b),
+                &mut a_panels,
+                &mut b_panels,
+                next_a.as_deref(),
+                next_b.as_deref(),
+                |key| panel_meta(a, &vg, key.0, key.1),
+                |key| panel_meta(b, &vg, key.0, key.1),
+                (TAG_SHIFT_A, TAG_SHIFT_B),
+                mode,
+            );
         }
     }
 
     // ---- sum-reduce the partial C panels across layers --------------------
     let mut out_panels = engine.finish(&grid.world);
     if g3.layers > 1 {
-        match mode {
+        let payload = match mode {
             Mode::Real => {
                 let mut all: Vec<f32> = Vec::new();
                 for p in &out_panels {
                     all.extend_from_slice(p.store.data());
                 }
-                let reduced = g3.layer_comm.reduce_sum_f32(0, Payload::F32(all));
+                Payload::F32(all)
+            }
+            Mode::Model => Payload::Phantom {
+                bytes: out_panels.iter().map(|p| p.store.wire_bytes()).sum(),
+            },
+        };
+        // both transports sum in the same order (own share first, then
+        // layers ascending) so the reduced C is bit-identical
+        let reduced = match transport {
+            Transport::TwoSided => g3.layer_comm.reduce_sum_f32(0, payload),
+            Transport::OneSided => {
+                let mut win = RmaWindow::new(&g3.layer_comm, WIN_REDUCE);
                 if g3.layer == 0 {
-                    let data = reduced.into_f32();
-                    let mut off = 0usize;
-                    for p in &mut out_panels {
-                        let n = p.store.data().len();
-                        p.store.data_mut().copy_from_slice(&data[off..off + n]);
-                        off += n;
+                    let sources: Vec<usize> = (1..g3.layers).collect();
+                    let mut acc = payload;
+                    for p in win.close_epoch(&sources) {
+                        acc = sum_payloads(acc, p);
                     }
-                    debug_assert_eq!(off, data.len());
+                    acc
+                } else {
+                    win.put(0, payload);
+                    Payload::Empty
                 }
             }
-            Mode::Model => {
-                let bytes: u64 = out_panels.iter().map(|p| p.store.wire_bytes()).sum();
-                let _ = g3
-                    .layer_comm
-                    .reduce_sum_f32(0, Payload::Phantom { bytes });
+        };
+        if g3.layer == 0 && mode == Mode::Real {
+            let data = reduced.into_f32();
+            let mut off = 0usize;
+            for p in &mut out_panels {
+                let n = p.store.data().len();
+                p.store.data_mut().copy_from_slice(&data[off..off + n]);
+                off += n;
             }
+            debug_assert_eq!(off, data.len());
         }
     }
 
@@ -482,36 +548,45 @@ fn native_matrix(
 /// pattern as its layer-0 peer (e.g. built with the same constructor
 /// arguments); layers > 0 receive the element data. Returns the wire
 /// bytes of the local share (what layer 0 pushed per peer).
-pub fn replicate_to_layers(g3: &Grid3D, m: &mut DistMatrix) -> u64 {
+///
+/// Under [`Transport::OneSided`] the root puts into each layer peer's
+/// exposure window and the peers sync once at the epoch close; bytes
+/// and element data are identical to the two-sided broadcast.
+pub fn replicate_to_layers(g3: &Grid3D, m: &mut DistMatrix, transport: Transport) -> u64 {
     if g3.layers == 1 {
         return 0;
     }
     let bytes = m.local.store.wire_bytes();
-    match m.mode {
-        Mode::Real => {
-            let payload = if g3.layer == 0 {
-                Some(Payload::F32(m.local.store.data().to_vec()))
-            } else {
+    let outbound = || match m.mode {
+        Mode::Real => Payload::F32(m.local.store.data().to_vec()),
+        Mode::Model => Payload::Phantom { bytes },
+    };
+    let inbound = match transport {
+        Transport::TwoSided => {
+            let payload = if g3.layer == 0 { Some(outbound()) } else { None };
+            Some(g3.layer_comm.bcast(0, payload))
+        }
+        Transport::OneSided => {
+            let mut win = RmaWindow::new(&g3.layer_comm, WIN_REPL);
+            if g3.layer == 0 {
+                let payload = outbound();
+                for l in 1..g3.layers {
+                    win.put(l, payload.clone());
+                }
                 None
-            };
-            let data = g3.layer_comm.bcast(0, payload).into_f32();
-            if g3.layer != 0 {
-                assert_eq!(
-                    data.len(),
-                    m.local.store.data().len(),
-                    "layer replicas must share the local pattern"
-                );
-                m.local.store.data_mut().copy_from_slice(&data);
+            } else {
+                Some(win.close_epoch(&[0]).remove(0))
             }
         }
-        Mode::Model => {
-            let payload = if g3.layer == 0 {
-                Some(Payload::Phantom { bytes })
-            } else {
-                None
-            };
-            let _ = g3.layer_comm.bcast(0, payload);
-        }
+    };
+    if g3.layer != 0 && m.mode == Mode::Real {
+        let data = inbound.expect("non-root layers receive the replica").into_f32();
+        assert_eq!(
+            data.len(),
+            m.local.store.data().len(),
+            "layer replicas must share the local pattern"
+        );
+        m.local.store.data_mut().copy_from_slice(&data);
     }
     bytes
 }
@@ -558,7 +633,7 @@ mod tests {
             let g3 = Grid3D::new(world, rows, cols, layers);
             let (a, b) = twofive_operands(&g3, m, n, k, block, Mode::Real, 81, 82);
             let mut eng = engine(threads, densify, Mode::Real);
-            let cm = multiply_twofive(&g3, &a, &b, &mut eng).unwrap();
+            let cm = multiply_twofive(&g3, &a, &b, &mut eng, Transport::TwoSided).unwrap();
             let mut dense = vec![0.0f32; m * n];
             cm.add_into_dense(&mut dense);
             dense
@@ -619,6 +694,34 @@ mod tests {
     }
 
     #[test]
+    fn one_sided_transport_matches_reference() {
+        // the RMA path end to end: native operands, shifts + cross-layer
+        // reduce through put/close_epoch
+        let (rows, cols, layers, m) = (2usize, 2usize, 2usize, 24usize);
+        let p = rows * cols * layers;
+        let out = run_ranks(p, NetModel::aries(2), move |world| {
+            let g3 = Grid3D::new(world, rows, cols, layers);
+            let (a, b) = twofive_operands(&g3, m, m, m, 4, Mode::Real, 81, 82);
+            let mut eng = engine(2, true, Mode::Real);
+            let cm = multiply_twofive(&g3, &a, &b, &mut eng, Transport::OneSided).unwrap();
+            let mut dense = vec![0.0f32; m * m];
+            cm.add_into_dense(&mut dense);
+            dense
+        });
+        let mut got = vec![0.0f32; m * m];
+        for part in out {
+            for (g, x) in got.iter_mut().zip(part.iter()) {
+                *g += x;
+            }
+        }
+        let ar = dense_reference(&BlockLayout::new(m, 4), &BlockLayout::new(m, 4), 81);
+        let br = dense_reference(&BlockLayout::new(m, 4), &BlockLayout::new(m, 4), 82);
+        let mut want = vec![0.0f32; m * m];
+        crate::backend::smm_cpu::gemm_blocked(m, m, m, &ar, &br, &mut want);
+        assert_allclose(&got, &want, 2e-3, 2e-3).unwrap();
+    }
+
+    #[test]
     fn canonical_layout_goes_through_skew_exchange() {
         // every layer holds the plain cyclic share (replicas built
         // in place); the driver must skew to each layer's offset
@@ -630,7 +733,7 @@ mod tests {
             let a = DistMatrix::dense_cyclic(m, k, block, (rows, cols), coords, Mode::Real, Fill::Random { seed: 81 });
             let b = DistMatrix::dense_cyclic(k, n, block, (rows, cols), coords, Mode::Real, Fill::Random { seed: 82 });
             let mut eng = engine(2, true, Mode::Real);
-            let cm = multiply_twofive(&g3, &a, &b, &mut eng).unwrap();
+            let cm = multiply_twofive(&g3, &a, &b, &mut eng, Transport::TwoSided).unwrap();
             let mut dense = vec![0.0f32; m * n];
             cm.add_into_dense(&mut dense);
             dense
@@ -668,11 +771,11 @@ mod tests {
                 DistMatrix::dense_cyclic(m, m, block, (rows, cols), coords, Mode::Real, fill(81));
             let mut b =
                 DistMatrix::dense_cyclic(m, m, block, (rows, cols), coords, Mode::Real, fill(82));
-            let sent_a = replicate_to_layers(&g3, &mut a);
-            let sent_b = replicate_to_layers(&g3, &mut b);
+            let sent_a = replicate_to_layers(&g3, &mut a, Transport::TwoSided);
+            let sent_b = replicate_to_layers(&g3, &mut b, Transport::TwoSided);
             assert!(sent_a > 0 && sent_b > 0);
             let mut eng = engine(1, false, Mode::Real);
-            let cm = multiply_twofive(&g3, &a, &b, &mut eng).unwrap();
+            let cm = multiply_twofive(&g3, &a, &b, &mut eng, Transport::TwoSided).unwrap();
             let mut dense = vec![0.0f32; m * m];
             cm.add_into_dense(&mut dense);
             (dense, world_stats_bytes(&g3))
@@ -707,7 +810,7 @@ mod tests {
             let g3 = Grid3D::new(world, rows, cols, layers);
             let (a, b) = twofive_operands(&g3, dim, dim, dim, 4, Mode::Model, 1, 2);
             let mut eng = engine(2, false, Mode::Model);
-            let _ = multiply_twofive(&g3, &a, &b, &mut eng).unwrap();
+            let _ = multiply_twofive(&g3, &a, &b, &mut eng, Transport::TwoSided).unwrap();
             eng.stats.block_mults
         });
         let total: u64 = out.iter().sum();

@@ -60,6 +60,10 @@ pub struct MultiplyStats {
     pub comm_bytes: u64,
     /// Number of point-to-point messages.
     pub comm_msgs: u64,
+    /// Virtual seconds the rank's clock advanced while blocked on
+    /// communication (receives / RMA epoch closes) — the transport
+    /// comparison metric of `bench_fig_2p5d`.
+    pub comm_wait_s: f64,
     /// Bytes staged host→device.
     pub h2d_bytes: u64,
     /// Bytes staged device→host.
@@ -80,6 +84,7 @@ impl MultiplyStats {
         self.flops += o.flops;
         self.comm_bytes += o.comm_bytes;
         self.comm_msgs += o.comm_msgs;
+        self.comm_wait_s += o.comm_wait_s;
         self.h2d_bytes += o.h2d_bytes;
         self.d2h_bytes += o.d2h_bytes;
         self.densify_bytes += o.densify_bytes;

@@ -1,0 +1,141 @@
+//! Integration: the comm substrate's cost accounting — the α + bytes/β
+//! link model ([`NetModel::transit_seconds`]) and the byte/time charges
+//! of the collectives (flat gather/spread star topology: allreduce moves
+//! 2(p−1)·B, bcast and reduce (p−1)·B), which the figure sweeps and the
+//! transport comparison both rest on.
+
+use dbcsr::dist::{run_ranks, NetModel, Payload};
+
+const MIB: u64 = 1 << 20;
+
+#[test]
+fn transit_seconds_is_latency_plus_bandwidth() {
+    let aries1 = NetModel::aries(1);
+    let want = 1.5e-6 + MIB as f64 / 10.2e9;
+    assert!((aries1.transit_seconds(MIB) - want).abs() < 1e-15);
+
+    // per-node injection bandwidth is fair-shared by ranks-per-node
+    let aries4 = NetModel::aries(4);
+    let want4 = 1.5e-6 + MIB as f64 / (10.2e9 / 4.0);
+    assert!((aries4.transit_seconds(MIB) - want4).abs() < 1e-15);
+
+    // zero-byte messages still pay the latency
+    assert_eq!(aries1.transit_seconds(0), 1.5e-6);
+
+    // the ideal fabric is free at any size
+    assert_eq!(NetModel::ideal().transit_seconds(u64::MAX), 0.0);
+}
+
+#[test]
+fn bcast_charges_root_p_minus_one_messages() {
+    let p = 5usize;
+    let net = NetModel::aries(1);
+    let out = run_ranks(p, net, move |c| {
+        let pl = if c.rank() == 2 {
+            Some(Payload::Phantom { bytes: MIB })
+        } else {
+            None
+        };
+        let got = c.bcast(2, pl);
+        (got.wire_bytes(), c.stats(), c.now())
+    });
+    let t1 = net.transit_seconds(MIB);
+    for (r, (bytes, stats, now)) in out.iter().enumerate() {
+        assert_eq!(*bytes, MIB, "payload size survives");
+        if r == 2 {
+            // star root: p-1 copies out, no wait
+            assert_eq!(stats.bytes_sent, (p as u64 - 1) * MIB);
+            assert_eq!(stats.msgs_sent, p as u64 - 1);
+            assert_eq!(*now, 0.0);
+        } else {
+            assert_eq!(stats.bytes_sent, 0);
+            // one hop from the root (all clocks started at 0)
+            assert!((now - t1).abs() < 1e-15, "rank {r}: {now} vs {t1}");
+            assert!((stats.wait_seconds - t1).abs() < 1e-15);
+        }
+    }
+}
+
+#[test]
+fn reduce_charges_contributors_and_waits_at_root() {
+    let p = 4usize;
+    let net = NetModel::aries(2);
+    let out = run_ranks(p, net, move |c| {
+        let r = c.reduce_sum_f32(1, Payload::F32(vec![1.0; 256])); // 1 KiB
+        (r, c.stats(), c.now())
+    });
+    let bytes = 1024u64;
+    let t1 = net.transit_seconds(bytes);
+    for (r, (payload, stats, now)) in out.iter().enumerate() {
+        if r == 1 {
+            // root sends nothing; its clock is the max of the p-1
+            // arrivals, which all left rank clocks at 0
+            assert_eq!(stats.bytes_sent, 0);
+            assert_eq!(payload.clone().into_f32(), vec![p as f32; 256]);
+            assert!((now - t1).abs() < 1e-15);
+        } else {
+            assert_eq!(stats.bytes_sent, bytes);
+            assert_eq!(stats.msgs_sent, 1);
+            assert_eq!(*now, 0.0, "contributors never wait");
+            assert_eq!(*payload, Payload::Empty);
+        }
+    }
+}
+
+#[test]
+fn allreduce_moves_two_p_minus_one_shares_and_takes_two_hops() {
+    let p = 4usize;
+    let net = NetModel::aries(2);
+    let out = run_ranks(p, net, move |c| {
+        let r = c.allreduce_sum_f32(Payload::Phantom { bytes: MIB });
+        (r.wire_bytes(), c.stats(), c.now())
+    });
+    let t1 = net.transit_seconds(MIB);
+    // total traffic: p-1 gathers to local rank 0 + p-1 spreads back
+    let total: u64 = out.iter().map(|(_, s, _)| s.bytes_sent).sum();
+    assert_eq!(total, 2 * (p as u64 - 1) * MIB);
+    for (r, (bytes, stats, now)) in out.iter().enumerate() {
+        assert_eq!(*bytes, MIB);
+        if r == 0 {
+            // gather root: waits one hop, then spreads p-1 copies
+            assert_eq!(stats.bytes_sent, (p as u64 - 1) * MIB);
+            assert!((now - t1).abs() < 1e-15);
+        } else {
+            // leaf: gather leaves at t=0, spread arrives after the root
+            // finished gathering — two hops total
+            assert_eq!(stats.bytes_sent, MIB);
+            assert!((now - 2.0 * t1).abs() < 1e-15, "rank {r}: {now}");
+            assert!((stats.wait_seconds - 2.0 * t1).abs() < 1e-15);
+        }
+    }
+}
+
+#[test]
+fn allreduce_sums_elementwise_through_the_star() {
+    let p = 3usize;
+    let out = run_ranks(p, NetModel::aries(1), move |c| {
+        c.allreduce_sum_f32(Payload::F32(vec![c.rank() as f32, 2.0]))
+            .into_f32()
+    });
+    for v in out {
+        assert_eq!(v, vec![3.0, 6.0]);
+    }
+}
+
+#[test]
+fn wait_seconds_counts_only_comm_blocking() {
+    // advance_to (compute sync) must not be booked as comm wait; recv must
+    let out = run_ranks(2, NetModel::aries(1), |c| {
+        if c.rank() == 0 {
+            c.advance_to(1.0); // simulated compute
+            c.send(1, 5, Payload::Phantom { bytes: 1000 });
+            c.stats().wait_seconds
+        } else {
+            let _ = c.recv(0, 5);
+            c.stats().wait_seconds
+        }
+    });
+    assert_eq!(out[0], 0.0, "advance_to is not a comm wait");
+    let want = 1.0 + NetModel::aries(1).transit_seconds(1000);
+    assert!((out[1] - want).abs() < 1e-12, "{} vs {want}", out[1]);
+}

@@ -1,7 +1,7 @@
 //! Integration: failure paths — device OOM propagation (the Fig. 2
 //! annotation), rank-death detection, and misconfiguration guards.
 
-use dbcsr::dist::{run_ranks, Grid2D, NetModel};
+use dbcsr::dist::{run_ranks, Grid2D, NetModel, Transport};
 use dbcsr::matrix::matrix::Fill;
 use dbcsr::matrix::{DistMatrix, Mode};
 use dbcsr::multiply::{multiply, Algorithm, EngineOpts, MultiplyConfig};
@@ -91,6 +91,8 @@ fn fig2_oom_annotation_reproduced() {
             shape: Shape::paper_square(),
             engine: Engine::DbcsrDensified,
             mode: Mode::Model,
+            net: NetModel::aries(rpn),
+            transport: Transport::TwoSided,
         })
     };
     let oom = point(1, 12);

@@ -3,6 +3,7 @@
 //! calibration constants.
 
 use dbcsr::bench::harness::{grid_shape, run_spec, Engine, RunSpec, Shape};
+use dbcsr::dist::{NetModel, Transport};
 use dbcsr::matrix::Mode;
 
 fn model_point(nodes: usize, rpn: usize, threads: usize, block: usize, sq: bool, engine: Engine) -> f64 {
@@ -18,6 +19,8 @@ fn model_point(nodes: usize, rpn: usize, threads: usize, block: usize, sq: bool,
         },
         engine,
         mode: Mode::Model,
+        net: NetModel::aries(rpn),
+        transport: Transport::TwoSided,
     });
     assert!(!r.oom, "unexpected OOM");
     r.seconds
@@ -66,6 +69,8 @@ fn dbcsr_beats_pdgemm_and_gap_grows_for_small_blocks() {
             shape: Shape::Square { n: 21_120 },
             engine,
             mode: Mode::Model,
+            net: NetModel::aries(4),
+            transport: Transport::TwoSided,
         });
         assert!(!r.oom);
         r.seconds

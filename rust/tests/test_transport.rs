@@ -1,0 +1,198 @@
+//! Integration: the one-sided RMA transport (arXiv:1705.10218) against
+//! the two-sided baseline — bit-identical C matrices on the Cannon and
+//! 2.5D paths, identical wire volume, and the modeled comm-wait gap the
+//! lineage paper reports (one-sided removes the receiver-side stalls of
+//! blocking sendrecv, so A/B transfers overlap instead of serializing).
+
+use dbcsr::dist::{run_ranks, Grid2D, Grid3D, NetModel, Transport};
+use dbcsr::matrix::matrix::Fill;
+use dbcsr::matrix::{DistMatrix, Mode};
+use dbcsr::multiply::twofive::{replicate_to_layers, twofive_operands};
+use dbcsr::multiply::{multiply, Algorithm, EngineOpts, MultiplyConfig};
+
+fn cfg(
+    algorithm: Algorithm,
+    transport: Transport,
+    threads: usize,
+    densify: bool,
+) -> MultiplyConfig {
+    MultiplyConfig {
+        engine: EngineOpts {
+            threads,
+            densify,
+            stack_cap: 48,
+            cpu_coexec: true,
+        },
+        algorithm,
+        transport,
+        ..Default::default()
+    }
+}
+
+/// Per-rank dense C view as exact bit patterns.
+fn bits(dense: Vec<f32>) -> Vec<u32> {
+    dense.into_iter().map(f32::to_bits).collect()
+}
+
+fn cannon_c_bits(transport: Transport, densify: bool) -> Vec<Vec<u32>> {
+    let (pr, pc, m, n, k, block) = (2usize, 3usize, 36usize, 24usize, 30usize, 5usize);
+    run_ranks(pr * pc, NetModel::aries(2), move |world| {
+        let grid = Grid2D::new(world, pr, pc);
+        let coords = grid.coords();
+        let fill = |seed| Fill::Random { seed };
+        let a = DistMatrix::dense_cyclic(m, k, block, (pr, pc), coords, Mode::Real, fill(31));
+        let b = DistMatrix::dense_cyclic(k, n, block, (pr, pc), coords, Mode::Real, fill(32));
+        let out = multiply(&grid, &a, &b, &cfg(Algorithm::Cannon, transport, 2, densify)).unwrap();
+        let mut dense = vec![0.0f32; m * n];
+        out.c.add_into_dense(&mut dense);
+        bits(dense)
+    })
+}
+
+#[test]
+fn cannon_transports_bit_identical() {
+    for densify in [false, true] {
+        assert_eq!(
+            cannon_c_bits(Transport::TwoSided, densify),
+            cannon_c_bits(Transport::OneSided, densify),
+            "densify={densify}"
+        );
+    }
+}
+
+fn twofive_native_c_bits(transport: Transport) -> Vec<Vec<u32>> {
+    let (rows, cols, layers, m, block) = (2usize, 2usize, 2usize, 32usize, 4usize);
+    run_ranks(rows * cols * layers, NetModel::aries(2), move |world| {
+        let g3 = Grid3D::new(world, rows, cols, layers);
+        let (a, b) = twofive_operands(&g3, m, m, m, block, Mode::Real, 91, 92);
+        let grid = Grid2D::new(g3.world.clone(), 1, rows * cols * layers);
+        let out = multiply(&grid, &a, &b, &cfg(Algorithm::TwoFiveD { layers }, transport, 2, true))
+            .unwrap();
+        let mut dense = vec![0.0f32; m * m];
+        out.c.add_into_dense(&mut dense);
+        bits(dense)
+    })
+}
+
+#[test]
+fn twofive_native_transports_bit_identical() {
+    assert_eq!(
+        twofive_native_c_bits(Transport::TwoSided),
+        twofive_native_c_bits(Transport::OneSided)
+    );
+}
+
+fn twofive_canonical_c_bits(transport: Transport) -> Vec<Vec<u32>> {
+    // layers > 0 start from zeros; replication + skew + reduce all run
+    // through the selected transport
+    let (rows, cols, layers, m, block) = (2usize, 2usize, 4usize, 32usize, 4usize);
+    run_ranks(rows * cols * layers, NetModel::aries(2), move |world| {
+        let g3 = Grid3D::new(world, rows, cols, layers);
+        let coords = g3.grid.coords();
+        let fill = |seed| {
+            if g3.layer == 0 {
+                Fill::Random { seed }
+            } else {
+                Fill::Zero
+            }
+        };
+        let mut a =
+            DistMatrix::dense_cyclic(m, m, block, (rows, cols), coords, Mode::Real, fill(91));
+        let mut b =
+            DistMatrix::dense_cyclic(m, m, block, (rows, cols), coords, Mode::Real, fill(92));
+        replicate_to_layers(&g3, &mut a, transport);
+        replicate_to_layers(&g3, &mut b, transport);
+        let grid = Grid2D::new(g3.world.clone(), 1, rows * cols * layers);
+        let out = multiply(&grid, &a, &b, &cfg(Algorithm::TwoFiveD { layers }, transport, 2, false))
+            .unwrap();
+        let mut dense = vec![0.0f32; m * m];
+        out.c.add_into_dense(&mut dense);
+        bits(dense)
+    })
+}
+
+#[test]
+fn twofive_canonical_transports_bit_identical() {
+    assert_eq!(
+        twofive_canonical_c_bits(Transport::TwoSided),
+        twofive_canonical_c_bits(Transport::OneSided)
+    );
+}
+
+/// The acceptance sweep, scaled to test time: 16 model ranks, canonical
+/// 2.5D layout (replication + skew + sweep + reduce). Returns summed
+/// per-rank (comm bytes, comm wait, max seconds) of the multiply.
+fn sweep_2p5d(dim: usize, layers: usize, transport: Transport) -> (u64, f64, f64) {
+    let (rows, cols) = match layers {
+        1 => (4, 4),
+        2 => (2, 4),
+        4 => (2, 2),
+        _ => panic!("unexpected layer count"),
+    };
+    let parts = run_ranks(16, NetModel::aries(4), move |world| {
+        let g3 = Grid3D::new(world, rows, cols, layers);
+        let coords = g3.grid.coords();
+        let mut a =
+            DistMatrix::dense_cyclic(dim, dim, 22, (rows, cols), coords, Mode::Model, Fill::Zero);
+        let mut b = a.clone();
+        replicate_to_layers(&g3, &mut a, transport);
+        replicate_to_layers(&g3, &mut b, transport);
+        let grid = Grid2D::new(g3.world.clone(), 4, 4);
+        let out = multiply(
+            &grid,
+            &a,
+            &b,
+            &cfg(Algorithm::TwoFiveD { layers }, transport, 3, true),
+        )
+        .unwrap();
+        (out.stats.comm_bytes, out.stats.comm_wait_s, out.virtual_seconds)
+    });
+    let bytes: u64 = parts.iter().map(|p| p.0).sum();
+    let wait: f64 = parts.iter().map(|p| p.1).sum();
+    let secs: f64 = parts.iter().map(|p| p.2).fold(0.0f64, f64::max);
+    (bytes, wait, secs)
+}
+
+#[test]
+fn one_sided_cuts_comm_wait_at_c2_and_c4() {
+    // the paper's gap: same bytes, measurably lower modeled receiver
+    // wait under RMA at c ∈ {2, 4} on 16 ranks
+    for layers in [2usize, 4] {
+        let (bytes_two, wait_two, secs_two) = sweep_2p5d(1408, layers, Transport::TwoSided);
+        let (bytes_one, wait_one, secs_one) = sweep_2p5d(1408, layers, Transport::OneSided);
+        assert_eq!(bytes_two, bytes_one, "c={layers}: wire volume must match");
+        assert!(
+            wait_one < wait_two * 0.9,
+            "c={layers}: one-sided must cut comm wait measurably ({wait_one} vs {wait_two})"
+        );
+        assert!(
+            secs_one <= secs_two * 1.001,
+            "c={layers}: one-sided must not slow the multiply ({secs_one} vs {secs_two})"
+        );
+    }
+}
+
+#[test]
+fn one_sided_cuts_cannon_comm_wait() {
+    let point = |transport: Transport| {
+        let parts = run_ranks(16, NetModel::aries(4), move |world| {
+            let grid = Grid2D::new(world, 4, 4);
+            let coords = grid.coords();
+            let a =
+                DistMatrix::dense_cyclic(1408, 1408, 22, (4, 4), coords, Mode::Model, Fill::Zero);
+            let b = a.clone();
+            let out = multiply(&grid, &a, &b, &cfg(Algorithm::Cannon, transport, 3, true)).unwrap();
+            (out.stats.comm_bytes, out.stats.comm_wait_s)
+        });
+        let bytes: u64 = parts.iter().map(|p| p.0).sum();
+        let wait: f64 = parts.iter().map(|p| p.1).sum();
+        (bytes, wait)
+    };
+    let (bytes_two, wait_two) = point(Transport::TwoSided);
+    let (bytes_one, wait_one) = point(Transport::OneSided);
+    assert_eq!(bytes_two, bytes_one);
+    assert!(
+        wait_one < wait_two * 0.9,
+        "one-sided Cannon must cut comm wait ({wait_one} vs {wait_two})"
+    );
+}

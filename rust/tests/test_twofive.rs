@@ -4,7 +4,7 @@
 //! model-mode stats invariants shared by all three data-exchange drivers.
 
 use dbcsr::backend::smm_cpu;
-use dbcsr::dist::{run_ranks, Grid2D, Grid3D, NetModel};
+use dbcsr::dist::{run_ranks, Grid2D, Grid3D, NetModel, Transport};
 use dbcsr::matrix::matrix::{dense_reference, Fill};
 use dbcsr::matrix::{BlockLayout, DistMatrix, Mode};
 use dbcsr::multiply::twofive::{replicate_to_layers, twofive_operands};
@@ -122,8 +122,8 @@ fn canonical_replicated_operands_match_reference() {
             DistMatrix::dense_cyclic(m, m, block, (rows, cols), coords, Mode::Real, fill(91));
         let mut b =
             DistMatrix::dense_cyclic(m, m, block, (rows, cols), coords, Mode::Real, fill(92));
-        replicate_to_layers(&g3, &mut a);
-        replicate_to_layers(&g3, &mut b);
+        replicate_to_layers(&g3, &mut a, Transport::TwoSided);
+        replicate_to_layers(&g3, &mut b, Transport::TwoSided);
         let grid = Grid2D::new(g3.world.clone(), 1, p);
         let cfg = MultiplyConfig {
             algorithm: Algorithm::TwoFiveD { layers },
