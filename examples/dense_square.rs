@@ -9,7 +9,7 @@
 //! node's worth of ranks, printing virtual times from the P100/Aries
 //! model.
 
-use dbcsr::bench::harness::{run_spec, Engine, RunSpec, Shape};
+use dbcsr::bench::harness::{run_spec, AlgoSpec, Engine, RunSpec, Shape};
 use dbcsr::bench::table::{fmt_secs, Table};
 use dbcsr::config::Args;
 use dbcsr::dist::{NetModel, Transport};
@@ -38,6 +38,8 @@ fn main() {
             mode: Mode::Model,
             net: NetModel::aries(rpn),
             transport: Transport::TwoSided,
+            algo: AlgoSpec::Layout,
+            plan_verbose: false,
         });
         t.row(vec![
             format!("{rpn} x {threads}"),
@@ -66,6 +68,8 @@ fn main() {
                 mode: Mode::Model,
                 net: NetModel::aries(4),
                 transport: Transport::TwoSided,
+                algo: AlgoSpec::Layout,
+                plan_verbose: false,
             });
             pair.push(r.seconds);
         }

@@ -5,7 +5,7 @@
 //!
 //! Run: `cargo run --release --offline --example tall_skinny [-- --scale 16]`
 
-use dbcsr::bench::harness::{run_spec, Engine, RunSpec, Shape};
+use dbcsr::bench::harness::{run_spec, AlgoSpec, Engine, RunSpec, Shape};
 use dbcsr::bench::table::{fmt_secs, Table};
 use dbcsr::config::Args;
 use dbcsr::dist::{run_ranks, Grid2D, NetModel, Transport};
@@ -57,6 +57,8 @@ fn main() {
             mode: Mode::Model,
             net: NetModel::aries(4),
             transport: Transport::TwoSided,
+            algo: AlgoSpec::Layout,
+            plan_verbose: false,
         });
         t.row(vec![name.to_string(), fmt_secs(r.seconds)]);
     }

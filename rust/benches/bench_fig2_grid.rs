@@ -7,7 +7,7 @@
 //! worst grid, 1×12 @ 16 nodes OOMs on the GPU, block 22 vs 64 within 5%.
 
 use dbcsr::bench::figures;
-use dbcsr::bench::harness::{run_spec, Engine, RunSpec, Shape};
+use dbcsr::bench::harness::{run_spec, AlgoSpec, Engine, RunSpec, Shape};
 use dbcsr::dist::{NetModel, Transport};
 use dbcsr::bench::table::{fmt_secs, Table};
 use dbcsr::matrix::Mode;
@@ -45,6 +45,8 @@ fn main() {
             mode: Mode::Real,
             net: NetModel::aries(rpn),
             transport: Transport::TwoSided,
+            algo: AlgoSpec::Layout,
+            plan_verbose: false,
         });
         t.row(vec![
             format!("{rpn}x{threads}"),

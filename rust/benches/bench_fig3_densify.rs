@@ -7,7 +7,7 @@
 //! gains; rectangular gains limited by densify/undensify overhead.
 
 use dbcsr::bench::figures;
-use dbcsr::bench::harness::{run_spec, Engine, RunSpec, Shape};
+use dbcsr::bench::harness::{run_spec, AlgoSpec, Engine, RunSpec, Shape};
 use dbcsr::dist::{NetModel, Transport};
 use dbcsr::bench::table::{fmt_secs, Table};
 use dbcsr::matrix::Mode;
@@ -38,6 +38,8 @@ fn main() {
                 mode: Mode::Real,
                 net: NetModel::aries(4),
                 transport: Transport::TwoSided,
+                algo: AlgoSpec::Layout,
+                plan_verbose: false,
             });
             t.row(vec![
                 name.to_string(),

@@ -3,10 +3,13 @@
 //! (blocking two-sided sendrecv vs one-sided RMA puts + epoch sync) as a
 //! series: per-rank communication volume, per-rank comm wait, and
 //! virtual time across replication factors c ∈ {1, 2, 4} on 16
-//! model-mode ranks. The 2.5D points run the canonical layout end to
-//! end — in-bench layer replication (reported separately as the one-time
-//! cost the steady state amortizes), skew, shortened sweep, cross-layer
-//! C reduce — so every transport-sensitive phase is exercised.
+//! model-mode ranks, plus an **auto** series where
+//! `multiply::planner::choose_plan` picks c from the cost model (so
+//! figure sweeps can compare the planner against every fixed c). The
+//! 2.5D points run the canonical layout end to end — in-bench layer
+//! replication (reported separately as the one-time cost the steady
+//! state amortizes), skew, shortened sweep, cross-layer C reduce — so
+//! every transport-sensitive phase is exercised.
 //!
 //! Emits `BENCH_fig_2p5d.json` (per-series ranks/c/transport → bytes,
 //! wait, modeled seconds) for the perf trajectory. `--smoke` shrinks the
@@ -17,9 +20,11 @@ use std::fs;
 use dbcsr::bench::table::{fmt_secs, Table};
 use dbcsr::dist::{run_ranks, Grid2D, Grid3D, NetModel, Transport};
 use dbcsr::matrix::matrix::Fill;
-use dbcsr::matrix::{DistMatrix, Mode};
+use dbcsr::matrix::{DistMatrix, Mode, MODEL_ELEM_BYTES};
+use dbcsr::multiply::planner::{self, PlanInput, PlannedAlgorithm};
 use dbcsr::multiply::twofive::replicate_to_layers;
 use dbcsr::multiply::{multiply, Algorithm, EngineOpts, MultiplyConfig};
+use dbcsr::perfmodel::PerfModel;
 use dbcsr::util::json::{obj, Json};
 
 const BLOCK: usize = 22;
@@ -39,9 +44,10 @@ fn cfg(algorithm: Algorithm, transport: Transport) -> MultiplyConfig {
 }
 
 /// One swept point, aggregated over the 16 ranks.
+#[derive(Clone)]
 struct Point {
-    algorithm: &'static str,
-    grid: &'static str,
+    algorithm: String,
+    grid: String,
     c: usize,
     transport: Transport,
     /// Mean per-rank comm volume of the multiply, MiB.
@@ -74,8 +80,8 @@ fn cannon_point(dim: usize, transport: Transport) -> Point {
     });
     let (comm_mib, wait_s, secs, repl_mib) = summarize(parts);
     Point {
-        algorithm: "cannon",
-        grid: "4x4",
+        algorithm: "cannon".into(),
+        grid: "4x4".into(),
         c: 1,
         transport,
         comm_mib,
@@ -86,12 +92,7 @@ fn cannon_point(dim: usize, transport: Transport) -> Point {
 }
 
 fn twofive_point(dim: usize, layers: usize, transport: Transport) -> Point {
-    let (rows, cols, grid_label) = match layers {
-        1 => (4, 4, "4x4x1"),
-        2 => (2, 4, "2x4x2"),
-        4 => (2, 2, "2x2x4"),
-        other => panic!("no factorization for c={other}"),
-    };
+    let (rows, cols) = planner::grid_shape(P / layers);
     let parts = run_ranks(P, NetModel::aries(4), move |world| {
         let g3 = Grid3D::new(world, rows, cols, layers);
         let coords = g3.grid.coords();
@@ -123,8 +124,8 @@ fn twofive_point(dim: usize, layers: usize, transport: Transport) -> Point {
     });
     let (comm_mib, wait_s, secs, repl_mib) = summarize(parts);
     Point {
-        algorithm: "2.5d",
-        grid: grid_label,
+        algorithm: "2.5d".into(),
+        grid: format!("{rows}x{cols}x{layers}"),
         c: layers,
         transport,
         comm_mib,
@@ -134,14 +135,53 @@ fn twofive_point(dim: usize, layers: usize, transport: Transport) -> Point {
     }
 }
 
+/// The planner-resolved point: choose c from the cost model, then reuse
+/// the already-measured fixed point at that c (the runs are bit-identical
+/// — same machinery, deterministic clocks), falling back to a fresh run
+/// only for a c outside the fixed sweep.
+fn auto_point(dim: usize, transport: Transport, fixed: &[Point]) -> (Point, usize) {
+    let input = PlanInput {
+        p: P,
+        m: dim,
+        n: dim,
+        k: dim,
+        block: BLOCK,
+        elem_bytes: MODEL_ELEM_BYTES,
+        net: NetModel::aries(4),
+        perf: PerfModel::default(),
+        transport,
+        // must mirror what the measured points run with: cfg() leaves
+        // MultiplyConfig's gpu_share at its default of 1
+        gpu_share: 1,
+        threads: 3,
+        charge_replication: true,
+    };
+    let plan = planner::choose_plan(&input);
+    let chosen = plan.layers;
+    let want_alg = match plan.algorithm {
+        PlannedAlgorithm::Cannon => "cannon",
+        PlannedAlgorithm::TwoFiveD { .. } => "2.5d",
+    };
+    let mut point = fixed
+        .iter()
+        .find(|p| p.transport == transport && p.algorithm == want_alg && p.c == chosen)
+        .cloned()
+        .unwrap_or_else(|| match plan.algorithm {
+            PlannedAlgorithm::Cannon => cannon_point(dim, transport),
+            PlannedAlgorithm::TwoFiveD { layers } => twofive_point(dim, layers, transport),
+        });
+    point.algorithm = "auto".into();
+    (point, chosen)
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     let dim: usize = if smoke { 352 } else { 2816 };
 
     println!("=== bench_fig_2p5d ===\n");
     println!(
-        "2.5D vs Cannon × transport, {dim}² dense, block {BLOCK}, {P} model ranks \
-         (Aries, 4 ranks/node){}\n",
+        "2.5D vs Cannon × transport (+ planner auto), {dim}² dense, block {BLOCK}, \
+         {P} model ranks (Aries, 4 ranks/node){}\n",
         if smoke { " [smoke]" } else { "" }
     );
 
@@ -152,6 +192,14 @@ fn main() {
             points.push(twofive_point(dim, layers, transport));
         }
     }
+    // the planner's choice as its own series, one point per transport
+    let mut auto_points: Vec<Point> = Vec::new();
+    for transport in [Transport::TwoSided, Transport::OneSided] {
+        let (point, chosen) = auto_point(dim, transport, &points);
+        println!("auto ({transport}): planner chose c = {chosen} ({})", point.grid);
+        auto_points.push(point);
+    }
+    println!();
 
     let baseline = points[0].comm_mib; // Cannon, two-sided
     let mut t = Table::new(
@@ -167,14 +215,14 @@ fn main() {
             "replication MiB/rank (one-time)",
         ],
     );
-    for p in &points {
+    for p in points.iter().chain(auto_points.iter()) {
         t.row(vec![
-            if p.algorithm == "cannon" {
-                "Cannon".into()
-            } else {
-                format!("2.5D c={}", p.c)
+            match p.algorithm.as_str() {
+                "cannon" => "Cannon".to_string(),
+                "auto" => format!("Auto (c={})", p.c),
+                _ => format!("2.5D c={}", p.c),
             },
-            p.grid.into(),
+            p.grid.clone(),
             p.transport.name().into(),
             format!("{:.1}", p.comm_mib),
             format!("{:.2}x", baseline / p.comm_mib),
@@ -189,12 +237,12 @@ fn main() {
     }
     t.print();
 
-    // the two-sided vs one-sided gap, per series
+    // the two-sided vs one-sided gap, per fixed series
     println!("\ntwo-sided vs one-sided (per-rank comm wait):");
     let half = points.len() / 2;
     for i in 0..half {
         let (two, one) = (&points[i], &points[i + half]);
-        assert_eq!((two.algorithm, two.c), (one.algorithm, one.c));
+        assert_eq!((&two.algorithm, two.c), (&one.algorithm, one.c));
         println!(
             "  {:>9} c={}  {:.4}s -> {:.4}s  ({:.2}x lower wait, {:.2}x time)",
             two.algorithm,
@@ -206,19 +254,22 @@ fn main() {
         );
     }
     println!(
-        "\nexpected: comm volume drops ~√c vs Cannon (transport-independent), and the\n\
+        "\nexpected: comm volume drops ~√c vs Cannon (transport-independent), the\n\
          one-sided transport cuts the per-rank comm wait — the A and B transfers of\n\
          each skew/shift overlap on the wire instead of serializing through blocking\n\
-         sendrecv (arXiv:1705.10218's two-sided vs one-sided gap)"
+         sendrecv (arXiv:1705.10218's two-sided vs one-sided gap) — and the auto\n\
+         series tracks the best fixed-c point once the one-time replication is\n\
+         charged (see tests/test_planner.rs for the 10% contract)"
     );
 
     // machine-readable record for the perf trajectory
     let series: Vec<Json> = points
         .iter()
+        .chain(auto_points.iter())
         .map(|p| {
             obj([
-                ("algorithm", p.algorithm.into()),
-                ("grid", p.grid.into()),
+                ("algorithm", p.algorithm.as_str().into()),
+                ("grid", p.grid.as_str().into()),
                 ("c", p.c.into()),
                 ("transport", p.transport.name().into()),
                 ("ranks", P.into()),
@@ -229,6 +280,14 @@ fn main() {
             ])
         })
         .collect();
+    assert!(
+        series
+            .iter()
+            .filter(|s| s.get("algorithm").as_str() == Some("auto"))
+            .count()
+            == 2,
+        "the JSON record must carry one auto point per transport"
+    );
     let doc = obj([
         ("bench", "fig_2p5d".into()),
         ("dim", dim.into()),

@@ -8,7 +8,7 @@
 use std::time::Instant;
 
 use dbcsr::backend::stack::STACK_CAP;
-use dbcsr::bench::harness::{run_spec, Engine, RunSpec, Shape};
+use dbcsr::bench::harness::{run_spec, AlgoSpec, Engine, RunSpec, Shape};
 use dbcsr::dist::{NetModel, Transport};
 use dbcsr::bench::table::Table;
 use dbcsr::matrix::LocalCsr;
@@ -78,6 +78,8 @@ fn main() {
                     mode: Mode::Model,
                     net: NetModel::aries(4),
                     transport: Transport::TwoSided,
+                    algo: AlgoSpec::Layout,
+                    plan_verbose: false,
                 });
                 t.row(vec![
                     label.to_string(),

@@ -9,7 +9,7 @@ use crate::dist::{NetModel, Transport};
 use crate::matrix::Mode;
 use crate::perfmodel::PerfModel;
 
-use super::harness::{run_spec, Engine, RunSpec, Shape};
+use super::harness::{run_spec, AlgoSpec, Engine, RunSpec, Shape};
 use super::table::{fmt_secs, Table};
 
 /// The paper's Fig. 2 node sweep (square rank counts for every grid
@@ -52,6 +52,8 @@ pub fn fig2(scale: usize, mode: Mode) -> Vec<Table> {
                     mode,
                     net: NetModel::aries(rpn),
                     transport: Transport::TwoSided,
+                    algo: AlgoSpec::Layout,
+                    plan_verbose: false,
                 });
                 cells.push(fmt_secs(r.seconds));
                 if !r.oom {
@@ -93,6 +95,8 @@ pub fn fig3(scale: usize, mode: Mode) -> Vec<Table> {
                         mode,
                         net: NetModel::aries(4),
                         transport: Transport::TwoSided,
+                        algo: AlgoSpec::Layout,
+                        plan_verbose: false,
                     });
                     pair.push(r.seconds);
                 }
@@ -142,6 +146,8 @@ pub fn fig4(scale: usize, mode: Mode, blocks: &[usize], square_only: bool) -> Ve
                         mode,
                         net: NetModel::aries(4),
                         transport: Transport::TwoSided,
+                        algo: AlgoSpec::Layout,
+                        plan_verbose: false,
                     });
                     pair.push(r.seconds);
                 }

@@ -1,12 +1,25 @@
 //! Experiment runner: one `RunSpec` = one bar/point of a paper figure.
+//!
+//! [`RunSpec::algo`] selects how the data-exchange algorithm is chosen:
+//! the pre-planner [`AlgoSpec::Layout`] heuristic (what the figure
+//! regenerators pin), a forced Cannon / fixed-`c` 2.5D point (the
+//! fixed-replication series of `bench_fig_2p5d` and the planner test
+//! suite), or [`AlgoSpec::Auto`] — the model-driven path that consults
+//! `multiply::planner::choose_plan` *before* operands are built, lays the
+//! operands out for the chosen layer grid (replicating canonical shares
+//! when `c > 1`, charged to the clocks and reported via
+//! [`RunResult::repl_seconds`]), and surfaces the decision in
+//! [`RunResult::plan`].
 
-use crate::dist::{run_ranks, NetModel, Transport};
+use crate::dist::{run_ranks, Grid2D, Grid3D, NetModel, Transport};
 use crate::matrix::matrix::Fill;
 use crate::matrix::{DistMatrix, Mode};
+use crate::multiply::planner::{self, PlanInput, PlannedAlgorithm};
+use crate::multiply::twofive::replicate_to_layers;
 use crate::multiply::{multiply, tall_skinny, Algorithm, EngineOpts, MultiplyConfig};
 use crate::perfmodel::PerfModel;
 use crate::scalapack::pdgemm;
-use crate::util::stats::MultiplyStats;
+use crate::util::stats::{MultiplyStats, PlanSummary};
 
 /// Matrix shape of the workload (§IV): square or tall-and-skinny.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -58,6 +71,25 @@ pub enum Engine {
     Pdgemm,
 }
 
+/// How the data-exchange algorithm (and the 2.5D replication factor) is
+/// chosen for a run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlgoSpec {
+    /// Pre-planner layout heuristic: rectangular (tall-skinny) workloads
+    /// run the O(1) algorithm, everything else Cannon. The figure
+    /// regenerators pin this so Fig. 2–4 semantics never shift under the
+    /// planner.
+    Layout,
+    /// Model-driven: `planner::choose_plan` picks the replication factor
+    /// from the cost model before operands are built (`c = 1` → Cannon).
+    Auto,
+    /// Force Cannon on the most-square grid.
+    Cannon,
+    /// Force the 2.5D path with a fixed replication factor; `layers = 1`
+    /// degenerates to Cannon so fixed-`c` sweeps share a baseline.
+    TwoFiveD { layers: usize },
+}
+
 /// One experiment point.
 #[derive(Clone, Copy, Debug)]
 pub struct RunSpec {
@@ -75,26 +107,79 @@ pub struct RunSpec {
     pub net: NetModel,
     /// Point-to-point transport (two-sided sendrecv vs one-sided RMA).
     pub transport: Transport,
+    /// Algorithm selection policy (see [`AlgoSpec`]).
+    pub algo: AlgoSpec,
+    /// Thread the CLI's `--plan-verbose` into `MultiplyConfig`: rank 0
+    /// prints the resolved plan + prediction from inside `multiply()`.
+    pub plan_verbose: bool,
+}
+
+impl RunSpec {
+    /// The planner input equivalent to this spec (what `AlgoSpec::Auto`
+    /// resolves through).
+    pub fn plan_input(&self) -> PlanInput {
+        let (m, n, k) = self.shape.dims();
+        PlanInput {
+            p: self.nodes * self.rpn,
+            m,
+            n,
+            k,
+            block: self.block,
+            elem_bytes: planner::elem_bytes_for(self.mode),
+            net: self.net,
+            perf: PerfModel::default(),
+            transport: self.transport,
+            gpu_share: self.rpn,
+            threads: self.threads,
+            // harness runs are cold, single multiplies: the replication
+            // is paid inside the run and must be part of the objective
+            charge_replication: true,
+        }
+    }
 }
 
 /// Result of one experiment point (aggregated over ranks).
 #[derive(Clone, Debug)]
 pub struct RunResult {
-    /// Virtual completion time: max over ranks (negative ⇒ OOM).
+    /// Virtual completion time of the multiply: max over ranks
+    /// (negative ⇒ OOM).
     pub seconds: f64,
+    /// Virtual seconds of the one-time 2.5D layer replication (max over
+    /// ranks; 0 for unreplicated runs).
+    pub repl_seconds: f64,
+    /// Replication + multiply, per rank, max over ranks — the planner's
+    /// objective (negative ⇒ OOM).
+    pub total_seconds: f64,
     /// Wallclock of the whole simulation (testbed time, not the metric).
     pub wall: f64,
     pub stats: MultiplyStats,
+    /// The plan this point ran: the planner's choice under
+    /// [`AlgoSpec::Auto`], otherwise whatever `multiply()` resolved.
+    pub plan: Option<PlanSummary>,
     pub oom: bool,
 }
 
-/// Most-square factorization pr × pc = p with pr ≤ pc.
+/// Most-square factorization pr × pc = p with pr ≤ pc (shared with the
+/// planner so candidate grids and executed grids always agree).
 pub fn grid_shape(p: usize) -> (usize, usize) {
-    let mut pr = (p as f64).sqrt() as usize;
-    while pr > 1 && p % pr != 0 {
-        pr -= 1;
-    }
-    (pr.max(1), p / pr.max(1))
+    planner::grid_shape(p)
+}
+
+/// The execution strategy a spec resolves to (internal).
+#[derive(Clone, Copy)]
+enum Exec {
+    /// Layout heuristic: tall-skinny operands for rect shapes, Cannon
+    /// grid operands otherwise (also the PDGEMM path).
+    Layout,
+    /// Cannon on the most-square grid.
+    Cannon,
+    /// Canonical 2.5D: layer-cyclic shares on `rows × cols`, replicated
+    /// across `layers` in-run, then the 2.5D driver.
+    TwoFive {
+        rows: usize,
+        cols: usize,
+        layers: usize,
+    },
 }
 
 /// Execute one experiment point.
@@ -106,37 +191,65 @@ pub fn run_spec(spec: RunSpec) -> RunResult {
     let is_rect = matches!(spec.shape, Shape::Rect { .. });
     let wall0 = std::time::Instant::now();
 
+    // resolve the algorithm policy (PDGEMM ignores it — the baseline has
+    // exactly one data path)
+    let mut chosen_plan: Option<PlanSummary> = None;
+    let exec = if spec.engine == Engine::Pdgemm {
+        Exec::Layout
+    } else {
+        match spec.algo {
+            AlgoSpec::Layout => Exec::Layout,
+            AlgoSpec::Cannon => Exec::Cannon,
+            AlgoSpec::TwoFiveD { layers } => {
+                assert!(
+                    layers > 0 && p % layers == 0,
+                    "fixed layer count {layers} must divide p = {p}"
+                );
+                if layers == 1 {
+                    Exec::Cannon
+                } else {
+                    let (rows, cols) = grid_shape(p / layers);
+                    Exec::TwoFive { rows, cols, layers }
+                }
+            }
+            AlgoSpec::Auto => {
+                let plan = planner::choose_plan(&spec.plan_input());
+                chosen_plan = Some(plan.summary("model"));
+                match plan.algorithm {
+                    PlannedAlgorithm::Cannon => Exec::Cannon,
+                    PlannedAlgorithm::TwoFiveD { layers } => Exec::TwoFive {
+                        rows: plan.rows,
+                        cols: plan.cols,
+                        layers,
+                    },
+                }
+            }
+        }
+    };
+
     let per_rank = run_ranks(p, net, move |world| {
-        let cfg = MultiplyConfig {
+        let cfg = |algorithm: Algorithm| MultiplyConfig {
             engine: EngineOpts {
                 threads: spec.threads,
                 densify: spec.engine == Engine::DbcsrDensified,
                 ..Default::default()
             },
             perf: PerfModel::default(),
-            algorithm: if is_rect && spec.engine != Engine::Pdgemm {
-                Algorithm::TallSkinny
-            } else {
-                Algorithm::Cannon
-            },
+            algorithm,
             transport: spec.transport,
             gpu_share: spec.rpn,
+            plan_verbose: spec.plan_verbose,
             runtime: None,
         };
-        let outcome = if is_rect && spec.engine != Engine::Pdgemm {
-            // tall-skinny operand layout (K 1-D over all ranks)
-            let (a, b) =
-                tall_skinny::ts_operands(m, n, k, spec.block, &world, spec.mode, 101, 102);
-            let grid = crate::dist::Grid2D::new(world, 1, p);
-            multiply(&grid, &a, &b, &cfg)
-        } else {
-            let grid = crate::dist::Grid2D::new(world, pr, pc);
-            let coords = grid.coords();
+        // cyclic A (m × k) / B (k × n) shares over `grid_dims` — shared
+        // by every grid-based branch so seeding and fill can never
+        // diverge between them
+        let operands = |grid_dims: (usize, usize), coords: (usize, usize)| {
             let a = DistMatrix::dense_cyclic(
                 m,
                 k,
                 spec.block,
-                (pr, pc),
+                grid_dims,
                 coords,
                 spec.mode,
                 fill_for(spec.mode, 101),
@@ -145,35 +258,81 @@ pub fn run_spec(spec: RunSpec) -> RunResult {
                 k,
                 n,
                 spec.block,
-                (pr, pc),
+                grid_dims,
                 coords,
                 spec.mode,
                 fill_for(spec.mode, 102),
             );
-            if spec.engine == Engine::Pdgemm {
-                pdgemm(&grid, &a, &b, &cfg)
-            } else {
-                multiply(&grid, &a, &b, &cfg)
+            (a, b)
+        };
+        let (outcome, repl_s) = match exec {
+            Exec::TwoFive { rows, cols, layers } => {
+                let g3 = Grid3D::new(world, rows, cols, layers);
+                // canonical layer-cyclic shares; `Fill::Random` is
+                // seeded per global block, so every layer constructs the
+                // same share and the replication bcast (still charged to
+                // the clocks/counters) re-delivers identical data
+                let (mut a, mut b) = operands((rows, cols), g3.grid.coords());
+                let t0 = g3.world.now();
+                replicate_to_layers(&g3, &mut a, spec.transport);
+                replicate_to_layers(&g3, &mut b, spec.transport);
+                let repl_s = g3.world.now() - t0;
+                let (gr, gc) = grid_shape(rows * cols * layers);
+                let grid = Grid2D::new(g3.world.clone(), gr, gc);
+                (
+                    multiply(&grid, &a, &b, &cfg(Algorithm::TwoFiveD { layers })),
+                    repl_s,
+                )
+            }
+            Exec::Cannon => {
+                let grid = Grid2D::new(world, pr, pc);
+                let (a, b) = operands((pr, pc), grid.coords());
+                (multiply(&grid, &a, &b, &cfg(Algorithm::Cannon)), 0.0)
+            }
+            Exec::Layout => {
+                if is_rect && spec.engine != Engine::Pdgemm {
+                    // tall-skinny operand layout (K 1-D over all ranks)
+                    let (a, b) =
+                        tall_skinny::ts_operands(m, n, k, spec.block, &world, spec.mode, 101, 102);
+                    let grid = Grid2D::new(world, 1, p);
+                    (multiply(&grid, &a, &b, &cfg(Algorithm::TallSkinny)), 0.0)
+                } else {
+                    let grid = Grid2D::new(world, pr, pc);
+                    let (a, b) = operands((pr, pc), grid.coords());
+                    if spec.engine == Engine::Pdgemm {
+                        (pdgemm(&grid, &a, &b, &cfg(Algorithm::Cannon)), 0.0)
+                    } else {
+                        (multiply(&grid, &a, &b, &cfg(Algorithm::Cannon)), 0.0)
+                    }
+                }
             }
         };
         match outcome {
-            Ok(o) => (o.virtual_seconds, o.stats, false),
-            Err(_) => (0.0, MultiplyStats::default(), true),
+            Ok(o) => (o.virtual_seconds, o.stats, false, repl_s),
+            Err(_) => (0.0, MultiplyStats::default(), true, repl_s),
         }
     });
 
     let mut stats = MultiplyStats::default();
     let mut seconds = 0.0f64;
+    let mut repl_seconds = 0.0f64;
+    let mut total_seconds = 0.0f64;
     let mut oom = false;
-    for (t, s, rank_oom) in per_rank {
+    for (t, s, rank_oom, repl) in per_rank {
         seconds = seconds.max(t);
+        repl_seconds = repl_seconds.max(repl);
+        total_seconds = total_seconds.max(repl + t);
         stats.merge(&s);
         oom |= rank_oom;
     }
+    let plan = chosen_plan.or_else(|| stats.plan.clone());
     RunResult {
         seconds: if oom { -1.0 } else { seconds },
+        repl_seconds,
+        total_seconds: if oom { -1.0 } else { total_seconds },
         wall: wall0.elapsed().as_secs_f64(),
         stats,
+        plan,
         oom,
     }
 }
@@ -207,6 +366,22 @@ pub mod tshelp {
 mod tests {
     use super::*;
 
+    fn base_spec() -> RunSpec {
+        RunSpec {
+            nodes: 1,
+            rpn: 4,
+            threads: 3,
+            block: 22,
+            shape: Shape::Square { n: 1408 },
+            engine: Engine::DbcsrDensified,
+            mode: Mode::Model,
+            net: NetModel::aries(4),
+            transport: Transport::TwoSided,
+            algo: AlgoSpec::Layout,
+            plan_verbose: false,
+        }
+    }
+
     #[test]
     fn grid_shape_most_square() {
         assert_eq!(grid_shape(16), (4, 4));
@@ -228,49 +403,34 @@ mod tests {
     #[test]
     fn model_point_square_densified() {
         let r = run_spec(RunSpec {
-            nodes: 1,
-            rpn: 4,
-            threads: 3,
-            block: 22,
             shape: Shape::Square { n: 2816 },
-            engine: Engine::DbcsrDensified,
-            mode: Mode::Model,
-            net: NetModel::aries(4),
-            transport: Transport::TwoSided,
+            ..base_spec()
         });
         assert!(!r.oom);
         assert!(r.seconds > 0.0);
         assert!(r.stats.flops > 0);
+        // layout points don't replicate, and multiply reports its plan
+        assert_eq!(r.repl_seconds, 0.0);
+        assert_eq!(r.total_seconds, r.seconds);
+        assert_eq!(r.plan.as_ref().unwrap().algorithm, "cannon");
     }
 
     #[test]
     fn model_point_rect_ts() {
         let r = run_spec(RunSpec {
-            nodes: 1,
-            rpn: 4,
-            threads: 3,
-            block: 22,
             shape: Shape::Rect { mn: 352, k: 22528 },
-            engine: Engine::DbcsrDensified,
-            mode: Mode::Model,
-            net: NetModel::aries(4),
-            transport: Transport::TwoSided,
+            ..base_spec()
         });
         assert!(!r.oom && r.seconds > 0.0);
+        assert_eq!(r.plan.as_ref().unwrap().algorithm, "tall-skinny");
     }
 
     #[test]
     fn model_point_pdgemm() {
         let r = run_spec(RunSpec {
-            nodes: 1,
-            rpn: 4,
-            threads: 3,
-            block: 22,
             shape: Shape::Square { n: 2816 },
             engine: Engine::Pdgemm,
-            mode: Mode::Model,
-            net: NetModel::aries(4),
-            transport: Transport::TwoSided,
+            ..base_spec()
         });
         assert!(!r.oom && r.seconds > 0.0);
     }
@@ -281,15 +441,8 @@ mod tests {
         // an ideal-fabric sweep must show zero comm wait and run faster
         let point = |net: NetModel| {
             run_spec(RunSpec {
-                nodes: 1,
-                rpn: 4,
-                threads: 3,
-                block: 22,
-                shape: Shape::Square { n: 1408 },
-                engine: Engine::DbcsrDensified,
-                mode: Mode::Model,
                 net,
-                transport: Transport::TwoSided,
+                ..base_spec()
             })
         };
         let aries = point(NetModel::aries(4));
@@ -305,14 +458,8 @@ mod tests {
         let point = |transport: Transport| {
             run_spec(RunSpec {
                 nodes: 4,
-                rpn: 4,
-                threads: 3,
-                block: 22,
-                shape: Shape::Square { n: 1408 },
-                engine: Engine::DbcsrDensified,
-                mode: Mode::Model,
-                net: NetModel::aries(4),
                 transport,
+                ..base_spec()
             })
         };
         let two = point(Transport::TwoSided);
@@ -329,19 +476,71 @@ mod tests {
     #[test]
     fn real_point_matches_model_counters() {
         let spec = |mode| RunSpec {
-            nodes: 1,
-            rpn: 4,
             threads: 2,
             block: 8,
             shape: Shape::Square { n: 64 },
             engine: Engine::DbcsrBlocked,
             mode,
-            net: NetModel::aries(4),
-            transport: Transport::TwoSided,
+            ..base_spec()
         };
         let r = run_spec(spec(Mode::Real));
         let m = run_spec(spec(Mode::Model));
         assert_eq!(r.stats.block_mults, m.stats.block_mults);
         assert_eq!(r.stats.stacks, m.stats.stacks);
+    }
+
+    #[test]
+    fn fixed_c_point_replicates_and_reports() {
+        let r = run_spec(RunSpec {
+            nodes: 4,
+            algo: AlgoSpec::TwoFiveD { layers: 2 },
+            ..base_spec()
+        });
+        assert!(!r.oom && r.seconds > 0.0);
+        assert!(r.repl_seconds > 0.0, "in-run replication must be charged");
+        // per-rank sums: between the phase maxima and their sum
+        assert!(r.total_seconds >= r.seconds && r.total_seconds >= r.repl_seconds);
+        assert!(r.total_seconds <= r.seconds + r.repl_seconds + 1e-12);
+        let plan = r.plan.as_ref().unwrap();
+        assert_eq!((plan.algorithm.as_str(), plan.layers), ("2.5d", 2));
+        assert_eq!(plan.source, "explicit");
+    }
+
+    #[test]
+    fn fixed_c1_degenerates_to_cannon() {
+        let point = |algo: AlgoSpec| {
+            run_spec(RunSpec {
+                nodes: 4,
+                algo,
+                ..base_spec()
+            })
+        };
+        let cannon = point(AlgoSpec::Cannon);
+        let c1 = point(AlgoSpec::TwoFiveD { layers: 1 });
+        assert_eq!(cannon.stats.comm_bytes, c1.stats.comm_bytes);
+        assert_eq!(cannon.seconds, c1.seconds);
+        assert_eq!(c1.repl_seconds, 0.0);
+    }
+
+    #[test]
+    fn auto_surfaces_a_model_plan_and_matches_its_fixed_point() {
+        let auto = run_spec(RunSpec {
+            nodes: 4,
+            algo: AlgoSpec::Auto,
+            ..base_spec()
+        });
+        let plan = auto.plan.clone().expect("auto must surface a plan");
+        assert_eq!(plan.source, "model");
+        assert!(plan.predicted_seconds > 0.0);
+        // the auto point is bit-identical to the fixed point at the
+        // chosen c (same machinery, deterministic clocks)
+        let fixed = run_spec(RunSpec {
+            nodes: 4,
+            algo: AlgoSpec::TwoFiveD { layers: plan.layers },
+            ..base_spec()
+        });
+        assert_eq!(auto.seconds, fixed.seconds);
+        assert_eq!(auto.total_seconds, fixed.total_seconds);
+        assert_eq!(auto.stats.comm_bytes, fixed.stats.comm_bytes);
     }
 }

@@ -285,6 +285,13 @@ impl CommView {
         self.state.now.get()
     }
 
+    /// The fabric model driving this substrate's virtual clocks (what
+    /// `run_ranks` was given) — lets cost models like `multiply::planner`
+    /// predict with the same α/β the measurement will use.
+    pub fn net(&self) -> NetModel {
+        self.shared.net
+    }
+
     /// Advance the clock to at least `t` (used by the engine to sync the
     /// comm clock with device/lane completion).
     pub fn advance_to(&self, t: f64) {
@@ -602,6 +609,19 @@ mod tests {
     fn results_in_rank_order() {
         let out = run_ranks(4, NetModel::ideal(), |c| c.rank() * 10);
         assert_eq!(out, vec![0, 10, 20, 30]);
+    }
+
+    #[test]
+    fn views_expose_the_substrate_net_model() {
+        let net = NetModel {
+            latency: 2e-6,
+            bw: 5e9,
+        };
+        let out = run_ranks(2, net, |c| (c.net().latency, c.net().bw));
+        for (lat, bw) in out {
+            assert_eq!(lat, 2e-6);
+            assert_eq!(bw, 5e9);
+        }
     }
 
     #[test]

@@ -9,10 +9,15 @@
 //!   autotune [--emit]         run the LIBCUSMM-analog tuner
 //!   run --nodes N --rpn R --threads T --block B --shape square|rect
 //!       --engine dbcsr|dbcsr-blocked|pdgemm [--scale N] [--real]
-//!                             one experiment point
+//!       [--algorithm layout|auto|cannon|2.5d] [--layers C]
+//!       [--plan-verbose]      one experiment point (`auto` picks the
+//!                             2.5D replication factor through the
+//!                             planner; --plan-verbose prints the
+//!                             candidate table)
 
 use dbcsr::bench::figures;
-use dbcsr::bench::harness::{run_spec, Engine, RunSpec, Shape};
+use dbcsr::bench::harness::{run_spec, AlgoSpec, Engine, RunSpec, Shape};
+use dbcsr::multiply::planner;
 use dbcsr::bench::table::fmt_secs;
 use dbcsr::dist::{NetModel, Transport};
 use dbcsr::backend::autotune::{tuned_to_json, Autotuner};
@@ -180,6 +185,16 @@ fn run_file(args: &Args) {
                 "one-sided" => Transport::OneSided,
                 other => panic!("transport = two-sided|one-sided, got {other:?}"),
             },
+            algo: match get_s(section, "algorithm", "layout").as_str() {
+                "layout" => AlgoSpec::Layout,
+                "auto" => AlgoSpec::Auto,
+                "cannon" => AlgoSpec::Cannon,
+                "2.5d" => AlgoSpec::TwoFiveD {
+                    layers: get(section, "layers", 2),
+                },
+                other => panic!("algorithm = layout|auto|cannon|2.5d, got {other:?}"),
+            },
+            plan_verbose: false,
         };
         let r = run_spec(spec);
         println!(
@@ -215,6 +230,18 @@ fn run_one(args: &Args, scale: usize, mode: Mode) {
         "one-sided" => Transport::OneSided,
         other => panic!("--transport two-sided|one-sided, got {other:?}"),
     };
+    // default preserves the pre-planner behavior (rect → tall-skinny,
+    // square → Cannon); `--algorithm auto` opts into the planner, which
+    // prices the Cannon/2.5D family only
+    let algo = match args.str_flag("algorithm", "layout") {
+        "auto" => AlgoSpec::Auto,
+        "layout" => AlgoSpec::Layout,
+        "cannon" => AlgoSpec::Cannon,
+        "2.5d" | "twofive" => AlgoSpec::TwoFiveD {
+            layers: args.usize_flag("layers", 2),
+        },
+        other => panic!("--algorithm auto|layout|cannon|2.5d, got {other:?}"),
+    };
     let spec = RunSpec {
         nodes: args.usize_flag("nodes", 1),
         rpn,
@@ -225,13 +252,45 @@ fn run_one(args: &Args, scale: usize, mode: Mode) {
         mode,
         net,
         transport,
+        algo,
+        plan_verbose: args.switch("plan-verbose"),
     };
     println!("spec: {spec:?}");
+    if spec.plan_verbose && engine != Engine::Pdgemm {
+        let plan = planner::choose_plan(&spec.plan_input());
+        println!(
+            "planner candidates ({} ranks, {:?}, block {}, {} transport):",
+            spec.nodes * spec.rpn,
+            spec.shape.dims(),
+            spec.block,
+            spec.transport,
+        );
+        print!("{}", plan.render());
+        if algo != AlgoSpec::Auto {
+            println!("(informational — --algorithm {algo:?} overrides the planner)");
+        }
+    }
     let r = run_spec(spec);
+    if let Some(plan) = &r.plan {
+        println!(
+            "plan: {} {}x{}x{} (source {}, predicted {})",
+            plan.algorithm,
+            plan.rows,
+            plan.cols,
+            plan.layers,
+            plan.source,
+            fmt_secs(plan.predicted_seconds),
+        );
+    }
     println!(
-        "virtual time {}   (sim wallclock {:.2}s)",
+        "virtual time {}{}   (sim wallclock {:.2}s)",
         fmt_secs(r.seconds),
-        r.wall
+        if r.repl_seconds > 0.0 {
+            format!(" + one-time replication {}", fmt_secs(r.repl_seconds))
+        } else {
+            String::new()
+        },
+        r.wall,
     );
     println!(
         "stacks {}  block_mults {}  flops {:.3e}  comm {:.1} MiB in {} msgs (wait {:.3}s)  densify {:.1} MiB  dev peak {:.2} GiB{}",

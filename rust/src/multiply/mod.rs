@@ -14,6 +14,7 @@ pub mod cannon;
 pub mod densify;
 pub mod engine;
 pub mod generation;
+pub mod planner;
 pub mod tall_skinny;
 pub mod traversal;
 pub mod twofive;
@@ -26,7 +27,7 @@ use crate::dist::{Grid2D, Grid3D};
 use crate::matrix::{DistMatrix, Distribution};
 use crate::perfmodel::PerfModel;
 use crate::runtime::Runtime;
-use crate::util::stats::MultiplyStats;
+use crate::util::stats::{MultiplyStats, PlanSummary};
 
 pub use crate::dist::Transport;
 pub use engine::{EngineOpts, LocalEngine};
@@ -63,6 +64,10 @@ pub struct MultiplyConfig {
     pub transport: Transport,
     /// Ranks sharing each node's GPU (the grid config's rank factor).
     pub gpu_share: usize,
+    /// Print the resolved plan (algorithm, layer grid, planner cost
+    /// prediction) from rank 0 — the CLI's `--plan-verbose`. The same
+    /// record is always attached to [`MultiplyStats::plan`] regardless.
+    pub plan_verbose: bool,
     /// PJRT runtime for real numerics (None → CPU microkernels).
     pub runtime: Option<Rc<Runtime>>,
 }
@@ -75,6 +80,7 @@ impl Default for MultiplyConfig {
             algorithm: Algorithm::Auto,
             transport: Transport::TwoSided,
             gpu_share: 1,
+            plan_verbose: false,
             runtime: None,
         }
     }
@@ -92,8 +98,20 @@ pub struct MultiplyOutcome {
 /// Resolve `Auto` from the operand layouts: tall-skinny 1-D layouts use
 /// the O(1) algorithm; operands distributed over a sub-grid covering
 /// `1/layers` of the world (the 2.5D replicated layout) use 2.5D with
-/// `layers = P / sub-grid`; everything else runs Cannon.
-fn resolve_algorithm(requested: Algorithm, p: usize, a: &DistMatrix, b: &DistMatrix) -> Algorithm {
+/// `layers = P / sub-grid`; operands cyclic over exactly the passed grid
+/// run Cannon. Any other layout **panics here with a diagnosable
+/// message** — the pre-planner code fell through to Cannon for every
+/// non-layered layout, so e.g. operands on a 2×4 sub-grid of 12 ranks
+/// (8 ∤ 12 ⇒ no layer count yields a valid layer grid) died far away
+/// inside Cannon's distribution check. Public so the planner test suite
+/// can pin the resolution rules without spinning up a communicator.
+pub fn resolve_algorithm(
+    requested: Algorithm,
+    grid_dims: (usize, usize),
+    p: usize,
+    a: &DistMatrix,
+    b: &DistMatrix,
+) -> Algorithm {
     match requested {
         Algorithm::Auto => {
             let ts = matches!(a.col_dist, Distribution::Cyclic { nproc } if nproc == p)
@@ -108,18 +126,100 @@ fn resolve_algorithm(requested: Algorithm, p: usize, a: &DistMatrix, b: &DistMat
             let cyc = |d: &Distribution| matches!(d, Distribution::Cyclic { .. });
             let all_cyclic =
                 cyc(&a.row_dist) && cyc(&a.col_dist) && cyc(&b.row_dist) && cyc(&b.col_dist);
-            let layered = all_cyclic
-                && sub < p
-                && p % sub == 0
-                && b.row_dist.nproc() == gr
-                && b.col_dist.nproc() == gc;
-            if layered {
-                Algorithm::TwoFiveD { layers: p / sub }
-            } else {
+            let dims_match = b.row_dist.nproc() == gr && b.col_dist.nproc() == gc;
+            // layer-replicated layout: the sub-grid must factor the
+            // world into whole layers (p = gr · gc · layers)
+            if all_cyclic && dims_match && sub < p && p % sub == 0 {
+                let layers = p / sub;
+                debug_assert_eq!(gr * gc * layers, p);
+                return Algorithm::TwoFiveD { layers };
+            }
+            let cannon_ok = all_cyclic
+                && gr == grid_dims.0
+                && gc == grid_dims.1
+                && b.row_dist.nproc() == grid_dims.0
+                && b.col_dist.nproc() == grid_dims.1;
+            if cannon_ok {
                 Algorithm::Cannon
+            } else {
+                panic!(
+                    "Algorithm::Auto: operand layout (A over {gr}x{gc}, B over {}x{}) \
+                     has no valid 2.5D layer grid on {p} ranks ({sub} must divide {p} \
+                     with matching A/B sub-grids) and is not Cannon-compatible with \
+                     the {}x{} grid; redistribute the operands or request an explicit \
+                     algorithm",
+                    b.row_dist.nproc(),
+                    b.col_dist.nproc(),
+                    grid_dims.0,
+                    grid_dims.1,
+                )
             }
         }
         other => other,
+    }
+}
+
+/// The observable plan record for the algorithm this multiply actually
+/// runs: the executed topology plus the planner's cost prediction for it
+/// (zero for tall-skinny, which has no planner cost model). The planner
+/// predicts with the substrate's own [`NetModel`] (`CommView::net`), so
+/// predicted and measured seconds share the α/β constants.
+fn plan_summary_for(
+    alg: &Algorithm,
+    cfg: &MultiplyConfig,
+    grid: &Grid2D,
+    p: usize,
+    a: &DistMatrix,
+    b: &DistMatrix,
+) -> PlanSummary {
+    let source: &'static str = if matches!(cfg.algorithm, Algorithm::Auto) {
+        "layout"
+    } else {
+        "explicit"
+    };
+    let (rows, cols, layers, label) = match *alg {
+        Algorithm::TallSkinny => (1, p, 1, "tall-skinny"),
+        Algorithm::TwoFiveD { layers } => {
+            (a.row_dist.nproc(), a.col_dist.nproc(), layers, "2.5d")
+        }
+        _ => (grid.rows, grid.cols, 1, "cannon"),
+    };
+    if label == "tall-skinny" {
+        return PlanSummary {
+            algorithm: label.to_string(),
+            rows,
+            cols,
+            layers,
+            source,
+            predicted_seconds: 0.0,
+            predicted_comm_s: 0.0,
+        };
+    }
+    let input = planner::PlanInput {
+        p,
+        m: a.rows.dim,
+        n: b.cols.dim,
+        k: a.cols.dim,
+        block: a.rows.block,
+        elem_bytes: planner::elem_bytes_for(a.mode),
+        net: grid.world.net(),
+        perf: cfg.perf.clone(),
+        transport: cfg.transport,
+        gpu_share: cfg.gpu_share,
+        threads: cfg.engine.threads.max(1),
+        // operands are already resident in their layout here — the
+        // replication (if any) was charged by whoever built them
+        charge_replication: false,
+    };
+    let cand = planner::predict_grid(&input, rows, cols, layers);
+    PlanSummary {
+        algorithm: label.to_string(),
+        rows,
+        cols,
+        layers,
+        source,
+        predicted_seconds: cand.cost.total_s,
+        predicted_comm_s: cand.cost.comm_s(),
     }
 }
 
@@ -132,7 +232,21 @@ pub fn multiply(
     cfg: &MultiplyConfig,
 ) -> Result<MultiplyOutcome, DeviceOom> {
     let world = &grid.world;
-    let alg = resolve_algorithm(cfg.algorithm, world.size(), a, b);
+    let p = world.size();
+    let alg = resolve_algorithm(cfg.algorithm, (grid.rows, grid.cols), p, a, b);
+    let plan = plan_summary_for(&alg, cfg, grid, p, a, b);
+    if cfg.plan_verbose && world.rank() == 0 {
+        println!(
+            "[plan] {} {}x{}x{} (source {}): predicted {:.3}ms total, {:.3}ms comm",
+            plan.algorithm,
+            plan.rows,
+            plan.cols,
+            plan.layers,
+            plan.source,
+            plan.predicted_seconds * 1e3,
+            plan.predicted_comm_s * 1e3,
+        );
+    }
     let mut engine = LocalEngine::new(
         cfg.engine.clone(),
         a.mode,
@@ -160,6 +274,7 @@ pub fn multiply(
     stats.comm_bytes = comm1.bytes_sent - comm0.bytes_sent;
     stats.comm_msgs = comm1.msgs_sent - comm0.msgs_sent;
     stats.comm_wait_s = comm1.wait_seconds - comm0.wait_seconds;
+    stats.plan = Some(plan);
     Ok(MultiplyOutcome {
         c,
         stats,

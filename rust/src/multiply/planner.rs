@@ -1,0 +1,593 @@
+//! Model-driven layer autotuning — the planner behind `Algorithm::Auto`.
+//!
+//! The 2.5D lineage paper (arXiv:1705.10218) makes the replication factor
+//! `c` a tuning knob: every extra layer shortens the Cannon sweep (each
+//! layer owns `L/c` of the `L` virtual ticks) at the price of an A/B
+//! replication broadcast, a cross-layer C sum-reduce, and `c`-fold operand
+//! memory. Which side wins depends on the problem shape, the fabric
+//! ([`NetModel`]) and the transport — so the resolution should *predict
+//! cost* instead of hardcoding `layers = p / sub`.
+//!
+//! [`choose_plan`] enumerates the feasible layer counts (the divisors of
+//! `p`; every quotient factors into a [`grid_shape`] layer grid and the
+//! sweep period is a multiple of `c` by construction, so each divisor
+//! admits a valid `Grid3D`), prices each candidate with [`predict_grid`],
+//! and returns the argmin — Cannon when `c = 1` wins, and `c = 1` again
+//! when no candidate fits the device-memory headroom (the engine then
+//! reports the OOM). The cost model mirrors the substrate's accounting
+//! rather than asymptotic paper formulas:
+//!
+//! * **shift chain** — `L/c − 1` ticks, each moving the rank's whole A
+//!   and/or B panel set. Two-sided pays `t_A + t_B` per tick (blocking
+//!   sendrecv); one-sided pays `max(t_A, t_B)` plus one epoch-sync α —
+//!   exactly the [`Transport`] semantics of `cannon::shift_pair`.
+//! * **skew** — one exchange per operand from the canonical layout to the
+//!   layer's offset positions; on average `(cols − 1)/cols` of the A
+//!   share moves along the grid row (B mirrored along the column).
+//! * **replication / reduce** — star collectives whose sends all issue
+//!   from one clock, so the receiver-side chain is a single hop
+//!   (`α + bytes/β`), not `c` hops (see `CommView::bcast` /
+//!   `reduce_sum_f32` and the accounting tests that pin them).
+//! * **compute** — per slot-tick densified GEMM on the `1/L`-sized panels
+//!   through [`PerfModel`], overlapped with PCIe staging (the engine is
+//!   double-buffered), plus the final C undensify memcpy. Per-rank flops
+//!   are `c`-invariant, so this term mostly cancels between candidates;
+//!   it is included so predicted totals are comparable to measured ones.
+//!
+//! Predictions are consumed three ways: `bench::harness` resolves
+//! `AlgoSpec::Auto` through [`choose_plan`] *before* building operands
+//! (the layout must match the chosen layer grid); `multiply()` attaches a
+//! [`PlanSummary`] for whatever plan actually ran, so benches and tests
+//! observe the choice; and the CLI's `--plan-verbose` prints the full
+//! candidate table via [`Plan::render`]. The planner-vs-measurement
+//! contract — the chosen plan's *measured* total within 10% of the
+//! measured-best fixed `c` — is pinned by `tests/test_planner.rs`.
+
+use crate::dist::{NetModel, Transport};
+use crate::matrix::{Mode, MODEL_ELEM_BYTES, REAL_ELEM_BYTES};
+use crate::perfmodel::PerfModel;
+use crate::util::stats::PlanSummary;
+
+use super::twofive::sweep_period;
+
+/// Everything the cost model needs to price one multiplication.
+#[derive(Clone, Debug)]
+pub struct PlanInput {
+    /// World size (ranks).
+    pub p: usize,
+    /// Problem shape: C (m × n) = A (m × k) · B (k × n).
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    /// Nominal block size.
+    pub block: usize,
+    /// Wire/storage bytes per element (8 in model mode, 4 in real mode —
+    /// see [`elem_bytes_for`]).
+    pub elem_bytes: u64,
+    pub net: NetModel,
+    pub perf: PerfModel,
+    pub transport: Transport,
+    /// Ranks sharing each node's GPU.
+    pub gpu_share: usize,
+    /// Engine threads per rank.
+    pub threads: usize,
+    /// Charge the one-time A/B layer replication to this multiply (true
+    /// for a cold, single multiply). Repeated-multiply consumers that
+    /// keep operands layer-resident amortize it away and pass false —
+    /// the ROADMAP's steady-state-pipeline item.
+    pub charge_replication: bool,
+}
+
+/// Wire bytes per element for a storage mode (phantom storage accounts
+/// the paper's f64; real storage is f32).
+pub fn elem_bytes_for(mode: Mode) -> u64 {
+    match mode {
+        Mode::Model => MODEL_ELEM_BYTES,
+        Mode::Real => REAL_ELEM_BYTES,
+    }
+}
+
+/// Most-square factorization pr × pc = p with pr ≤ pc. Shared with
+/// `bench::harness` so planner candidates and executed grids can never
+/// disagree on the factorization.
+pub fn grid_shape(p: usize) -> (usize, usize) {
+    let mut pr = (p as f64).sqrt() as usize;
+    while pr > 1 && p % pr != 0 {
+        pr -= 1;
+    }
+    (pr.max(1), p / pr.max(1))
+}
+
+/// Replication factors the world can host: the divisors of `p`, ascending
+/// (always starts at 1). Each quotient `p / c` factors into a
+/// [`grid_shape`] layer grid, and `sweep_period` is a multiple of `c` by
+/// construction, so every listed `c` yields a valid `Grid3D` — pinned by
+/// the planner property tests.
+pub fn feasible_layer_counts(p: usize) -> Vec<usize> {
+    assert!(p > 0, "need at least one rank");
+    (1..=p).filter(|c| p % c == 0).collect()
+}
+
+/// Cost prediction for one candidate, broken down by phase. Seconds are
+/// per-rank virtual time; byte counts are mean per-rank wire bytes.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CostBreakdown {
+    /// One-time A/B layer replication (zero when `c = 1` or the input
+    /// does not charge replication).
+    pub repl_s: f64,
+    /// Canonical-layout skew exchanges.
+    pub skew_s: f64,
+    /// The per-tick shift chain over `L/c − 1` rounds.
+    pub shift_s: f64,
+    /// Cross-layer C sum-reduce (zero when `c = 1`).
+    pub reduce_s: f64,
+    /// Engine estimate: densified GEMM + staging + C undensify.
+    pub compute_s: f64,
+    /// Sum of all phases — the planner's objective.
+    pub total_s: f64,
+    /// Mean per-rank wire bytes of the multiply (skew + shifts + reduce).
+    pub comm_bytes_per_rank: u64,
+    /// Mean per-rank wire bytes of the one-time replication.
+    pub repl_bytes_per_rank: u64,
+    /// Modeled per-rank memory footprint: operand + C shares plus the
+    /// double-buffered panel staging.
+    pub mem_bytes_per_rank: u64,
+}
+
+impl CostBreakdown {
+    /// The communication share of the prediction (everything but compute).
+    pub fn comm_s(&self) -> f64 {
+        self.repl_s + self.skew_s + self.shift_s + self.reduce_s
+    }
+}
+
+/// One priced candidate: `layers` stacked `rows × cols` grids.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub layers: usize,
+    pub rows: usize,
+    pub cols: usize,
+    pub cost: CostBreakdown,
+    /// Whether the footprint fits the per-rank device-memory pool
+    /// (`gpu_mem_bytes` with the pool slack applied, exactly as
+    /// `GpuSim::reserve` checks it).
+    pub feasible: bool,
+}
+
+/// The algorithm a plan resolves to (`c = 1` degenerates to Cannon).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlannedAlgorithm {
+    Cannon,
+    TwoFiveD { layers: usize },
+}
+
+/// A chosen plan plus every candidate that was considered.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub algorithm: PlannedAlgorithm,
+    pub rows: usize,
+    pub cols: usize,
+    pub layers: usize,
+    pub cost: CostBreakdown,
+    /// All candidates in ascending `c` (including memory-infeasible
+    /// ones, flagged), for `--plan-verbose` and the test suite.
+    pub candidates: Vec<Candidate>,
+}
+
+impl Plan {
+    /// Stable label for bench tables / JSON series.
+    pub fn algorithm_label(&self) -> &'static str {
+        match self.algorithm {
+            PlannedAlgorithm::Cannon => "cannon",
+            PlannedAlgorithm::TwoFiveD { .. } => "2.5d",
+        }
+    }
+
+    /// The observable record threaded into `MultiplyStats` / `RunResult`.
+    pub fn summary(&self, source: &'static str) -> PlanSummary {
+        PlanSummary {
+            algorithm: self.algorithm_label().to_string(),
+            rows: self.rows,
+            cols: self.cols,
+            layers: self.layers,
+            source,
+            predicted_seconds: self.cost.total_s,
+            predicted_comm_s: self.cost.comm_s(),
+        }
+    }
+
+    /// Human-readable candidate table (the CLI's `--plan-verbose`).
+    pub fn render(&self) -> String {
+        let mut out = String::from(
+            "  c  grid    repl      skew      shift     reduce    compute   total     mem/rank  pick\n",
+        );
+        for cand in &self.candidates {
+            let ms = |s: f64| {
+                if s == 0.0 {
+                    "-".to_string()
+                } else {
+                    format!("{:.3}ms", s * 1e3)
+                }
+            };
+            // chosen wins over the feasibility label: when no candidate
+            // fits, the c = 1 fallback still runs and must be marked
+            let mark = if cand.layers == self.layers {
+                if cand.feasible {
+                    "<- chosen"
+                } else {
+                    "<- chosen (memory-infeasible fallback)"
+                }
+            } else if !cand.feasible {
+                "infeasible"
+            } else {
+                ""
+            };
+            out.push_str(&format!(
+                "{:>3}  {:<6} {:<9} {:<9} {:<9} {:<9} {:<9} {:<9} {:<9} {}\n",
+                cand.layers,
+                format!("{}x{}", cand.rows, cand.cols),
+                ms(cand.cost.repl_s),
+                ms(cand.cost.skew_s),
+                ms(cand.cost.shift_s),
+                ms(cand.cost.reduce_s),
+                ms(cand.cost.compute_s),
+                ms(cand.cost.total_s),
+                format!("{:.1}MiB", cand.cost.mem_bytes_per_rank as f64 / (1 << 20) as f64),
+                mark,
+            ));
+        }
+        out
+    }
+}
+
+/// Price one candidate on an explicit `rows × cols × layers` topology
+/// (must cover the world: `rows · cols · layers == p`). [`predict`] is
+/// the most-square-grid convenience wrapper.
+pub fn predict_grid(input: &PlanInput, rows: usize, cols: usize, layers: usize) -> Candidate {
+    assert!(
+        rows * cols * layers == input.p,
+        "candidate {rows}x{cols}x{layers} must cover the {} ranks",
+        input.p
+    );
+    let net = input.net;
+    let eb = input.elem_bytes as f64;
+    let q = (rows * cols) as f64;
+    // per-rank operand/result shares: each layer replicates the whole
+    // matrix over its rows × cols grid
+    let bytes_a = eb * input.m as f64 * input.k as f64 / q;
+    let bytes_b = eb * input.k as f64 * input.n as f64 / q;
+    let bytes_c = eb * input.m as f64 * input.n as f64 / q;
+    let l = sweep_period(rows, cols, layers);
+    let nticks = l / layers;
+    debug_assert!(nticks > 0);
+
+    let hop = |bytes: f64| {
+        if bytes > 0.0 {
+            net.transit_seconds(bytes.round() as u64)
+        } else {
+            0.0
+        }
+    };
+    // an A and a B transfer issued back to back: blocking two-sided
+    // serializes them; one-sided overlaps them on the wire and pays one
+    // epoch-sync α (the `cannon::shift_pair` semantics)
+    let pair = |ba: f64, bb: f64| -> f64 {
+        let (ta, tb) = (hop(ba), hop(bb));
+        if ta == 0.0 && tb == 0.0 {
+            return 0.0;
+        }
+        match input.transport {
+            Transport::TwoSided => ta + tb,
+            Transport::OneSided => ta.max(tb) + net.latency,
+        }
+    };
+    let sync = match input.transport {
+        Transport::TwoSided => 0.0,
+        Transport::OneSided => net.latency,
+    };
+
+    // skew: on average 1 − 1/cols of the A share relocates along the grid
+    // row (the skew destination column is uniform over the row), B
+    // mirrored along the column; single-row/column dimensions don't move
+    let skew_a = if cols > 1 {
+        bytes_a * (cols - 1) as f64 / cols as f64
+    } else {
+        0.0
+    };
+    let skew_b = if rows > 1 {
+        bytes_b * (rows - 1) as f64 / rows as f64
+    } else {
+        0.0
+    };
+    let skew_s = pair(skew_a, skew_b);
+
+    // shifts: every remaining tick moves the whole held panel set
+    let shift_a = if cols > 1 { bytes_a } else { 0.0 };
+    let shift_b = if rows > 1 { bytes_b } else { 0.0 };
+    let shift_rounds = nticks - 1;
+    let shift_s = shift_rounds as f64 * pair(shift_a, shift_b);
+
+    // cross-layer C reduce: all sends issue from one end-of-sweep clock,
+    // so the root-side chain is one hop (+ epoch sync under RMA)
+    let reduce_s = if layers > 1 { hop(bytes_c) + sync } else { 0.0 };
+
+    // layer replication: A and B broadcast back to back from layer 0's
+    // clock — receivers wait for the larger arrival (one window close
+    // per matrix under RMA)
+    let repl_s = if layers > 1 && input.charge_replication {
+        hop(bytes_a).max(hop(bytes_b)) + 2.0 * sync
+    } else {
+        0.0
+    };
+
+    // engine estimate: per slot-tick densified GEMM on 1/L-sized panels,
+    // overlapped with PCIe staging (double-buffered), plus the host-side
+    // Generation pass over the panel's block triples (how the block size
+    // enters the model: smaller blocks → more triples to enumerate) and
+    // the final C undensify memcpy split across threads
+    let pm = (input.m / l).max(1);
+    let pn = (input.n / l).max(1);
+    let pk = (input.k / l).max(1);
+    let slot_ticks = (l / rows) * (l / cols) * nticks;
+    let panel_bytes = (eb * (pm * pk + pk * pn) as f64).round() as u64;
+    let nb = |d: usize| d.div_ceil(input.block.max(1)).max(1);
+    let gen_s = input.perf.entry_gen_cost * (nb(pm) * nb(pn) * nb(pk)) as f64
+        / input.threads.max(1) as f64;
+    let per_tick = (input
+        .perf
+        .gpu_gemm_seconds(pm, pn, pk, input.gpu_share.max(1))
+        + gen_s)
+        .max(input.perf.transfer_seconds(panel_bytes));
+    let compute_s = slot_ticks as f64 * per_tick
+        + input.perf.memcpy_seconds(bytes_c.round() as u64) / input.threads.max(1) as f64;
+
+    // mean per-rank wire bytes (reduce: c−1 of c layers send their share;
+    // replication: layer 0 sends c−1 copies, averaged over all layers)
+    let reduce_bytes = if layers > 1 {
+        bytes_c * (layers - 1) as f64 / layers as f64
+    } else {
+        0.0
+    };
+    let comm_bytes = skew_a + skew_b + shift_rounds as f64 * (shift_a + shift_b) + reduce_bytes;
+    let repl_bytes = if layers > 1 && input.charge_replication {
+        (bytes_a + bytes_b) * (layers - 1) as f64 / layers as f64
+    } else {
+        0.0
+    };
+
+    // memory headroom: operand + C shares (c-fold replicated) plus the
+    // double-buffered staging panels. Mirrors `GpuSim::reserve`: each
+    // rank's pool is checked against the full `gpu_mem_bytes` with the
+    // pool slack applied (the engine does not divide the pool by the
+    // GPU share — sharing costs time, not capacity).
+    let mem = bytes_a + bytes_b + bytes_c + 2.0 * panel_bytes as f64;
+    let feasible = mem * input.perf.pool_slack <= input.perf.gpu_mem_bytes as f64;
+
+    let total_s = repl_s + skew_s + shift_s + reduce_s + compute_s;
+    Candidate {
+        layers,
+        rows,
+        cols,
+        cost: CostBreakdown {
+            repl_s,
+            skew_s,
+            shift_s,
+            reduce_s,
+            compute_s,
+            total_s,
+            comm_bytes_per_rank: comm_bytes.round() as u64,
+            repl_bytes_per_rank: repl_bytes.round() as u64,
+            mem_bytes_per_rank: mem.round() as u64,
+        },
+        feasible,
+    }
+}
+
+/// Price layer count `layers` on the most-square grid of `p / layers`.
+/// `None` when the candidate exceeds the device-memory headroom —
+/// memory-infeasible replication factors must never be selected.
+pub fn predict(input: &PlanInput, layers: usize) -> Option<Candidate> {
+    assert!(
+        layers > 0 && input.p % layers == 0,
+        "layer count {layers} must divide p = {}",
+        input.p
+    );
+    let (rows, cols) = grid_shape(input.p / layers);
+    let cand = predict_grid(input, rows, cols, layers);
+    cand.feasible.then_some(cand)
+}
+
+/// Pick the cheapest feasible candidate over every feasible layer count.
+/// Ties keep the smaller replication factor (less memory, no replication
+/// to amortize); when no candidate fits the memory headroom the plan
+/// falls back to `c = 1` (Cannon) and the engine reports the OOM.
+pub fn choose_plan(input: &PlanInput) -> Plan {
+    let mut candidates = Vec::new();
+    for c in feasible_layer_counts(input.p) {
+        let (rows, cols) = grid_shape(input.p / c);
+        candidates.push(predict_grid(input, rows, cols, c));
+    }
+    let mut best = 0usize; // c = 1 — the fallback when nothing fits
+    let mut best_total = if candidates[0].feasible {
+        candidates[0].cost.total_s
+    } else {
+        f64::INFINITY
+    };
+    for (i, cand) in candidates.iter().enumerate().skip(1) {
+        if cand.feasible && cand.cost.total_s < best_total {
+            best = i;
+            best_total = cand.cost.total_s;
+        }
+    }
+    let chosen = candidates[best].clone();
+    Plan {
+        algorithm: if chosen.layers == 1 {
+            PlannedAlgorithm::Cannon
+        } else {
+            PlannedAlgorithm::TwoFiveD {
+                layers: chosen.layers,
+            }
+        },
+        rows: chosen.rows,
+        cols: chosen.cols,
+        layers: chosen.layers,
+        cost: chosen.cost,
+        candidates,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn input(p: usize, m: usize, n: usize, k: usize, transport: Transport) -> PlanInput {
+        PlanInput {
+            p,
+            m,
+            n,
+            k,
+            block: 22,
+            elem_bytes: MODEL_ELEM_BYTES,
+            net: NetModel::aries(4),
+            perf: PerfModel::default(),
+            transport,
+            gpu_share: 4,
+            threads: 3,
+            charge_replication: true,
+        }
+    }
+
+    #[test]
+    fn grid_shape_most_square() {
+        assert_eq!(grid_shape(16), (4, 4));
+        assert_eq!(grid_shape(8), (2, 4));
+        assert_eq!(grid_shape(12), (3, 4));
+        assert_eq!(grid_shape(1), (1, 1));
+        assert_eq!(grid_shape(7), (1, 7));
+    }
+
+    #[test]
+    fn feasible_counts_are_divisors() {
+        assert_eq!(feasible_layer_counts(16), vec![1, 2, 4, 8, 16]);
+        assert_eq!(feasible_layer_counts(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(feasible_layer_counts(7), vec![1, 7]);
+        assert_eq!(feasible_layer_counts(1), vec![1]);
+    }
+
+    #[test]
+    fn c1_has_no_replication_or_reduce() {
+        let cand = predict(&input(16, 1408, 1408, 1408, Transport::TwoSided), 1).unwrap();
+        assert_eq!(cand.cost.repl_s, 0.0);
+        assert_eq!(cand.cost.reduce_s, 0.0);
+        assert!(cand.cost.shift_s > 0.0 && cand.cost.skew_s > 0.0);
+    }
+
+    #[test]
+    fn layers_trade_shifts_for_replication() {
+        let inp = input(16, 1408, 1408, 1408, Transport::TwoSided);
+        let c1 = predict_grid(&inp, 4, 4, 1);
+        let c2 = predict_grid(&inp, 2, 4, 2);
+        let c4 = predict_grid(&inp, 2, 2, 4);
+        // shift chains shrink with c (fewer ticks, pricier each — net win)
+        assert!(c2.cost.shift_s < c1.cost.shift_s, "{c2:?} vs {c1:?}");
+        assert!(c4.cost.shift_s < c2.cost.shift_s);
+        assert_eq!(c4.cost.shift_s, 0.0, "c=4 on 16 ranks has a 1-tick sweep");
+        // ...and replication + reduce appear and grow
+        assert!(c2.cost.repl_s > 0.0 && c4.cost.repl_s > c2.cost.repl_s);
+        assert!(c2.cost.reduce_s > 0.0 && c4.cost.reduce_s > c2.cost.reduce_s);
+        // per-rank memory grows with the replication factor
+        assert!(c2.cost.mem_bytes_per_rank > c1.cost.mem_bytes_per_rank);
+        assert!(c4.cost.mem_bytes_per_rank > c2.cost.mem_bytes_per_rank);
+    }
+
+    #[test]
+    fn one_sided_cheaper_where_transfers_overlap() {
+        // c ∈ {1, 2, 4} on 16 ranks: both grid dimensions > 1, so every
+        // tick issues an A and a B transfer that RMA overlaps. (On 1×q
+        // layer grids only one operand moves and one-sided pays its sync
+        // α with nothing to overlap — the substrate behaves the same,
+        // which is why test_transport pins the gap at c ∈ {2, 4} only.)
+        let two = input(16, 1408, 1408, 1408, Transport::TwoSided);
+        let one = input(16, 1408, 1408, 1408, Transport::OneSided);
+        for c in [1usize, 2, 4] {
+            let (rows, cols) = grid_shape(16 / c);
+            assert!(rows > 1 && cols > 1);
+            let t = predict_grid(&two, rows, cols, c).cost;
+            let o = predict_grid(&one, rows, cols, c).cost;
+            assert!(
+                o.total_s < t.total_s,
+                "c={c}: one-sided {o:?} vs two-sided {t:?}"
+            );
+            assert_eq!(o.comm_bytes_per_rank, t.comm_bytes_per_rank);
+        }
+    }
+
+    #[test]
+    fn predictions_monotone_in_problem_size() {
+        let small = input(16, 704, 704, 704, Transport::TwoSided);
+        let big = input(16, 1408, 1408, 1408, Transport::TwoSided);
+        for c in feasible_layer_counts(16) {
+            let (rows, cols) = grid_shape(16 / c);
+            let s = predict_grid(&small, rows, cols, c).cost;
+            let b = predict_grid(&big, rows, cols, c).cost;
+            assert!(b.total_s > s.total_s, "c={c}");
+            assert!(b.comm_bytes_per_rank >= s.comm_bytes_per_rank, "c={c}");
+        }
+    }
+
+    #[test]
+    fn steady_state_amortization_removes_replication() {
+        let mut inp = input(16, 1408, 1408, 1408, Transport::TwoSided);
+        inp.charge_replication = false;
+        let cand = predict_grid(&inp, 2, 2, 4);
+        assert_eq!(cand.cost.repl_s, 0.0);
+        assert_eq!(cand.cost.repl_bytes_per_rank, 0);
+        // the reduce still belongs to every multiply
+        assert!(cand.cost.reduce_s > 0.0);
+    }
+
+    #[test]
+    fn choose_plan_falls_back_to_cannon_when_nothing_fits() {
+        let mut inp = input(16, 2816, 2816, 2816, Transport::TwoSided);
+        inp.perf.gpu_mem_bytes = 1; // nothing fits
+        let plan = choose_plan(&inp);
+        assert_eq!(plan.algorithm, PlannedAlgorithm::Cannon);
+        assert_eq!(plan.layers, 1);
+        assert!(plan.candidates.iter().all(|c| !c.feasible));
+    }
+
+    #[test]
+    fn choose_plan_skips_memory_infeasible_layers() {
+        // headroom sized so c = 1 fits but higher replication does not
+        let mut inp = input(16, 2816, 2816, 2816, Transport::TwoSided);
+        let c1_mem = predict_grid(&inp, 4, 4, 1).cost.mem_bytes_per_rank;
+        inp.perf.gpu_mem_bytes = (c1_mem as f64 * inp.perf.pool_slack * 1.5) as u64;
+        let plan = choose_plan(&inp);
+        assert!(
+            predict(&inp, plan.layers).is_some(),
+            "chosen c = {} must be memory-feasible",
+            plan.layers
+        );
+    }
+
+    #[test]
+    fn plan_summary_and_render_surface_the_choice() {
+        let plan = choose_plan(&input(16, 1408, 1408, 1408, Transport::TwoSided));
+        let s = plan.summary("model");
+        assert_eq!(s.layers, plan.layers);
+        assert_eq!(s.source, "model");
+        assert!(s.predicted_seconds > 0.0);
+        let table = plan.render();
+        assert!(table.contains("<- chosen"));
+        // one row per divisor of 16
+        assert_eq!(table.lines().count(), 1 + 5);
+    }
+
+    #[test]
+    fn all_layer_replication_candidate_is_priced() {
+        // c = p → 1x1 layer grids are valid (full replication, no panel
+        // traffic at all): priced, and feasibility decides selection
+        let cand = predict(&input(16, 352, 352, 352, Transport::TwoSided), 16);
+        assert!(cand.is_none() || cand.unwrap().rows == 1);
+    }
+}

@@ -46,6 +46,27 @@ impl Summary {
     }
 }
 
+/// The algorithm/topology decision one multiplication ran with, plus the
+/// planner's cost prediction for it — surfaced through
+/// [`MultiplyStats::plan`] so benches and the planner test suite can
+/// observe what `Algorithm::Auto` (or an explicit request) resolved to.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanSummary {
+    /// "cannon" | "2.5d" | "tall-skinny".
+    pub algorithm: String,
+    /// Layer-grid factorization (layers = 1 for Cannon / tall-skinny).
+    pub rows: usize,
+    pub cols: usize,
+    pub layers: usize,
+    /// Who decided: "model" (planner argmin), "layout" (operand-layout
+    /// resolution of `Algorithm::Auto`), or "explicit" (caller-fixed).
+    pub source: &'static str,
+    /// Planner prediction for the executed plan (0 when no cost model
+    /// covers the algorithm, e.g. tall-skinny).
+    pub predicted_seconds: f64,
+    pub predicted_comm_s: f64,
+}
+
 /// Counters accumulated by one distributed multiplication, aggregated over
 /// ranks. These drive both the virtual-clock model and the bench reports.
 #[derive(Clone, Debug, Default)]
@@ -75,6 +96,9 @@ pub struct MultiplyStats {
     pub cpu_stacks: u64,
     /// Peak simulated device-memory occupancy, bytes.
     pub dev_mem_peak: u64,
+    /// The plan this multiplication ran with (identical on every rank of
+    /// one collective call; `merge` keeps the first).
+    pub plan: Option<PlanSummary>,
 }
 
 impl MultiplyStats {
@@ -91,6 +115,9 @@ impl MultiplyStats {
         self.gpu_stacks += o.gpu_stacks;
         self.cpu_stacks += o.cpu_stacks;
         self.dev_mem_peak = self.dev_mem_peak.max(o.dev_mem_peak);
+        if self.plan.is_none() {
+            self.plan = o.plan.clone();
+        }
     }
 }
 
@@ -138,5 +165,28 @@ mod tests {
         assert_eq!(a.stacks, 3);
         assert_eq!(a.flops, 300);
         assert_eq!(a.dev_mem_peak, 50);
+    }
+
+    #[test]
+    fn merge_keeps_first_plan() {
+        let plan = |layers: usize| PlanSummary {
+            algorithm: "2.5d".into(),
+            rows: 2,
+            cols: 4,
+            layers,
+            source: "model",
+            predicted_seconds: 1.0,
+            predicted_comm_s: 0.5,
+        };
+        let mut a = MultiplyStats::default();
+        a.merge(&MultiplyStats {
+            plan: Some(plan(2)),
+            ..Default::default()
+        });
+        a.merge(&MultiplyStats {
+            plan: Some(plan(4)),
+            ..Default::default()
+        });
+        assert_eq!(a.plan.as_ref().unwrap().layers, 2);
     }
 }

@@ -81,7 +81,7 @@ fn dimension_mismatch_is_caught() {
 fn fig2_oom_annotation_reproduced() {
     // the paper's only OOM: grid config 1x12 at 16 nodes (square, paper
     // scale) exceeds the 16 GB device; the optimal 4x3 fits everywhere
-    use dbcsr::bench::harness::{run_spec, Engine, RunSpec, Shape};
+    use dbcsr::bench::harness::{run_spec, AlgoSpec, Engine, RunSpec, Shape};
     let point = |rpn: usize, threads: usize| {
         run_spec(RunSpec {
             nodes: 16,
@@ -93,6 +93,8 @@ fn fig2_oom_annotation_reproduced() {
             mode: Mode::Model,
             net: NetModel::aries(rpn),
             transport: Transport::TwoSided,
+            algo: AlgoSpec::Layout,
+            plan_verbose: false,
         })
     };
     let oom = point(1, 12);

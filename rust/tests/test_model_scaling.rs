@@ -2,7 +2,7 @@
 //! the paper's figures rest on must hold structurally, independent of
 //! calibration constants.
 
-use dbcsr::bench::harness::{grid_shape, run_spec, Engine, RunSpec, Shape};
+use dbcsr::bench::harness::{grid_shape, run_spec, AlgoSpec, Engine, RunSpec, Shape};
 use dbcsr::dist::{NetModel, Transport};
 use dbcsr::matrix::Mode;
 
@@ -21,6 +21,8 @@ fn model_point(nodes: usize, rpn: usize, threads: usize, block: usize, sq: bool,
         mode: Mode::Model,
         net: NetModel::aries(rpn),
         transport: Transport::TwoSided,
+        algo: AlgoSpec::Layout,
+        plan_verbose: false,
     });
     assert!(!r.oom, "unexpected OOM");
     r.seconds
@@ -71,6 +73,8 @@ fn dbcsr_beats_pdgemm_and_gap_grows_for_small_blocks() {
             mode: Mode::Model,
             net: NetModel::aries(4),
             transport: Transport::TwoSided,
+            algo: AlgoSpec::Layout,
+            plan_verbose: false,
         });
         assert!(!r.oom);
         r.seconds

@@ -1,0 +1,300 @@
+//! Integration: the model-driven layer autotuner behind `Algorithm::Auto`
+//! (`multiply::planner`) held against **measurement** — the planner's
+//! chosen replication factor must land within 10% of the measured-best
+//! fixed `c` on 16 ranks, for every shape in the grid and under both
+//! transports, and Auto must never regress more than 10% against plain
+//! Cannon. Plus the `p / sub` resolution edge cases (p = 12) and the
+//! planner's property suite (valid factorizations, volume monotonicity,
+//! memory feasibility) via `util::prop`.
+
+use dbcsr::bench::harness::{run_spec, AlgoSpec, Engine, RunSpec, Shape};
+use dbcsr::dist::{run_ranks, Grid2D, Grid3D, NetModel, Transport};
+use dbcsr::matrix::matrix::Fill;
+use dbcsr::matrix::{DistMatrix, Mode, MODEL_ELEM_BYTES};
+use dbcsr::multiply::planner::{
+    choose_plan, feasible_layer_counts, grid_shape, predict, predict_grid, PlanInput,
+    PlannedAlgorithm,
+};
+use dbcsr::multiply::twofive::{sweep_period, twofive_operands};
+use dbcsr::multiply::{
+    multiply, resolve_algorithm, Algorithm, EngineOpts, MultiplyConfig,
+};
+use dbcsr::perfmodel::PerfModel;
+use dbcsr::prop_assert;
+use dbcsr::util::prop::check;
+
+// ---------------------------------------------------------------------------
+// planner vs measurement, 16 ranks
+// ---------------------------------------------------------------------------
+
+/// The shape grid of the acceptance sweep: square, fat-k (the inner
+/// dimension dominates) and small-k (the C panel dominates, punishing the
+/// cross-layer reduce).
+fn shape_grid() -> [Shape; 3] {
+    [
+        Shape::Square { n: 1408 },
+        Shape::Rect { mn: 352, k: 5632 },
+        Shape::Rect { mn: 2816, k: 352 },
+    ]
+}
+
+fn spec16(shape: Shape, transport: Transport, algo: AlgoSpec) -> RunSpec {
+    RunSpec {
+        nodes: 4,
+        rpn: 4,
+        threads: 3,
+        block: 22,
+        shape,
+        engine: Engine::DbcsrDensified,
+        mode: Mode::Model,
+        net: NetModel::aries(4),
+        transport,
+        algo,
+        plan_verbose: false,
+    }
+}
+
+/// Measured objective of one point: one-time replication + multiply,
+/// per-rank, max over ranks (what the planner minimizes).
+fn measured_total(shape: Shape, transport: Transport, algo: AlgoSpec) -> f64 {
+    let r = run_spec(spec16(shape, transport, algo));
+    assert!(!r.oom, "{shape:?} {transport} {algo:?} must not OOM");
+    r.total_seconds
+}
+
+#[test]
+fn auto_within_ten_percent_of_measured_best_c() {
+    for shape in shape_grid() {
+        for transport in [Transport::TwoSided, Transport::OneSided] {
+            let fixed: Vec<(usize, f64)> = [1usize, 2, 4]
+                .iter()
+                .map(|&c| {
+                    (
+                        c,
+                        measured_total(shape, transport, AlgoSpec::TwoFiveD { layers: c }),
+                    )
+                })
+                .collect();
+            let &(best_c, best) = fixed
+                .iter()
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            let auto = run_spec(spec16(shape, transport, AlgoSpec::Auto));
+            assert!(!auto.oom);
+            let plan = auto.plan.clone().expect("auto must surface its plan");
+            assert_eq!(plan.source, "model");
+            assert!(
+                auto.total_seconds <= best * 1.10,
+                "{shape:?} {transport}: auto chose c={} ({:.4}ms) — more than 10% over \
+                 the measured best c={best_c} ({:.4}ms); fixed sweep: {fixed:?}",
+                plan.layers,
+                auto.total_seconds * 1e3,
+                best * 1e3,
+            );
+        }
+    }
+}
+
+#[test]
+fn auto_never_regresses_vs_cannon() {
+    for shape in shape_grid() {
+        for transport in [Transport::TwoSided, Transport::OneSided] {
+            let cannon = measured_total(shape, transport, AlgoSpec::Cannon);
+            let auto = measured_total(shape, transport, AlgoSpec::Auto);
+            assert!(
+                auto <= cannon * 1.10,
+                "{shape:?} {transport}: auto ({auto:.6}s) regresses >10% vs Cannon \
+                 ({cannon:.6}s)"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the `p / sub` resolution edge cases (non-square rank counts, p = 12)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn auto_runs_twofive_on_non_square_rank_count() {
+    // p = 12 = 2·2·3: an odd layer count over a non-square world. Auto
+    // must resolve TwoFiveD{3}, run it, surface the plan, and conserve
+    // the block-mult count.
+    let parts = run_ranks(12, NetModel::aries(2), |world| {
+        let g3 = Grid3D::new(world, 2, 2, 3);
+        let (a, b) = twofive_operands(&g3, 24, 24, 24, 4, Mode::Model, 1, 2);
+        let grid = Grid2D::new(g3.world.clone(), 3, 4);
+        let cfg = MultiplyConfig {
+            engine: EngineOpts {
+                threads: 1,
+                densify: false,
+                ..Default::default()
+            },
+            ..Default::default() // Algorithm::Auto
+        };
+        let out = multiply(&grid, &a, &b, &cfg).unwrap();
+        let plan = out.stats.plan.clone().expect("plan recorded");
+        assert_eq!(plan.algorithm, "2.5d");
+        assert_eq!((plan.rows, plan.cols, plan.layers), (2, 2, 3));
+        assert_eq!(plan.source, "layout");
+        out.stats.block_mults
+    });
+    // nb = 24/4 = 6: the full product runs exactly once across layers
+    let total: u64 = parts.iter().sum();
+    assert_eq!(total, 6 * 6 * 6);
+}
+
+#[test]
+fn resolve_layered_layouts_across_divisors_of_twelve() {
+    // every divisor decomposition of p = 12 resolves to its layer count
+    for (gr, gc, layers) in [(2usize, 2usize, 3usize), (1, 2, 6), (2, 3, 2), (1, 1, 12)] {
+        let a = DistMatrix::dense_cyclic(48, 48, 4, (gr, gc), (0, 0), Mode::Model, Fill::Zero);
+        let b = a.clone();
+        assert_eq!(
+            resolve_algorithm(Algorithm::Auto, (3, 4), 12, &a, &b),
+            Algorithm::TwoFiveD { layers },
+            "{gr}x{gc} sub-grid of 12"
+        );
+    }
+}
+
+#[test]
+fn resolve_falls_back_to_cannon_on_the_full_grid() {
+    // operands cyclic over the full 3×4 grid: sub == p, no layering
+    let a = DistMatrix::dense_cyclic(36, 36, 4, (3, 4), (1, 2), Mode::Model, Fill::Zero);
+    let b = a.clone();
+    assert_eq!(
+        resolve_algorithm(Algorithm::Auto, (3, 4), 12, &a, &b),
+        Algorithm::Cannon
+    );
+}
+
+#[test]
+#[should_panic(expected = "no valid 2.5D layer grid")]
+fn resolve_rejects_sub_grid_without_layer_factorization() {
+    // the regression: operands over a 2×4 sub-grid of 12 ranks (8 ∤ 12 —
+    // no layer count yields a valid layer grid). The pre-planner code
+    // proposed Cannon and died far away inside its distribution check;
+    // now the resolution itself fails with a diagnosable message.
+    let a = DistMatrix::dense_cyclic(32, 32, 4, (2, 4), (0, 0), Mode::Model, Fill::Zero);
+    let b = a.clone();
+    let _ = resolve_algorithm(Algorithm::Auto, (3, 4), 12, &a, &b);
+}
+
+// ---------------------------------------------------------------------------
+// property suite (util::prop)
+// ---------------------------------------------------------------------------
+
+fn plan_input(p: usize, m: usize, n: usize, k: usize, transport: Transport) -> PlanInput {
+    PlanInput {
+        p,
+        m,
+        n,
+        k,
+        block: 22,
+        elem_bytes: MODEL_ELEM_BYTES,
+        net: NetModel::aries(4),
+        perf: PerfModel::default(),
+        transport,
+        gpu_share: 4,
+        threads: 3,
+        charge_replication: true,
+    }
+}
+
+#[test]
+fn prop_feasible_layer_counts_yield_valid_grid3d_factorizations() {
+    check("feasible-c factorizations", 120, |rng, size| {
+        let p = rng.range(1, 8 * size.0 + 8);
+        let counts = feasible_layer_counts(p);
+        prop_assert!(counts.first() == Some(&1), "c = 1 always feasible (p={p})");
+        for c in counts {
+            prop_assert!(p % c == 0, "c={c} must divide p={p}");
+            let (rows, cols) = grid_shape(p / c);
+            prop_assert!(
+                rows * cols * c == p,
+                "grid {rows}x{cols}x{c} must cover p={p}"
+            );
+            prop_assert!(rows <= cols && rows >= 1, "most-square: {rows}x{cols}");
+            let l = sweep_period(rows, cols, c);
+            prop_assert!(
+                l % c == 0 && l / c > 0,
+                "sweep period {l} must split into per-layer tick ranges (c={c})"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_predictions_monotone_in_message_volume() {
+    check("planner volume monotonicity", 60, |rng, size| {
+        let ps = [2usize, 4, 6, 8, 12, 16, 24];
+        let p = ps[rng.range(0, ps.len() - 1)];
+        let base = 44 * rng.range(1, size.0.max(2));
+        let m = base * rng.range(1, 3);
+        let n = base * rng.range(1, 3);
+        let k = base * rng.range(1, 3);
+        let transport = if rng.range(0, 1) == 1 {
+            Transport::OneSided
+        } else {
+            Transport::TwoSided
+        };
+        let input = plan_input(p, m, n, k, transport);
+        let bigger = plan_input(p, 2 * m, 2 * n, 2 * k, transport);
+        let mut slower = input.clone();
+        slower.net = NetModel {
+            latency: input.net.latency,
+            bw: input.net.bw / 4.0,
+        };
+        for c in feasible_layer_counts(p) {
+            let (rows, cols) = grid_shape(p / c);
+            let a = predict_grid(&input, rows, cols, c).cost;
+            let b = predict_grid(&bigger, rows, cols, c).cost;
+            let s = predict_grid(&slower, rows, cols, c).cost;
+            prop_assert!(
+                b.comm_bytes_per_rank >= a.comm_bytes_per_rank,
+                "volume monotone in dims (p={p} c={c})"
+            );
+            prop_assert!(b.total_s >= a.total_s, "time monotone in dims (p={p} c={c})");
+            prop_assert!(
+                s.comm_s() >= a.comm_s(),
+                "comm time monotone in inverse bandwidth (p={p} c={c})"
+            );
+            prop_assert!(
+                s.comm_bytes_per_rank == a.comm_bytes_per_rank,
+                "bandwidth must not change predicted volume (p={p} c={c})"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_memory_infeasible_layers_never_selected() {
+    check("planner memory feasibility", 80, |rng, _size| {
+        let ps = [4usize, 8, 12, 16];
+        let p = ps[rng.range(0, ps.len() - 1)];
+        let dim = 352 * rng.range(1, 8);
+        let mut input = plan_input(p, dim, dim, dim, Transport::TwoSided);
+        // squeeze the device between "nothing fits" and "everything fits"
+        input.perf.gpu_mem_bytes = 1u64 << rng.range(18, 36);
+        let plan = choose_plan(&input);
+        let any_feasible = feasible_layer_counts(p)
+            .iter()
+            .any(|&c| predict(&input, c).is_some());
+        if any_feasible {
+            prop_assert!(
+                predict(&input, plan.layers).is_some(),
+                "chosen c={} must be memory-feasible (p={p}, dim={dim}, mem={})",
+                plan.layers,
+                input.perf.gpu_mem_bytes
+            );
+        } else {
+            prop_assert!(
+                plan.layers == 1 && plan.algorithm == PlannedAlgorithm::Cannon,
+                "with no feasible candidate the plan must fall back to Cannon"
+            );
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,181 @@
+//! Integration: `RmaWindow::get` — the `MPI_Rget` analog that PR 2 added
+//! but nothing drove end to end. Covers the origin-charged timing
+//! contract (α + bytes/β from max(origin clock, exposure time), counters
+//! on the origin, exposer fully passive), multi-origin reads of one
+//! exposure, epoch interaction (expose → close → re-expose), the
+//! epoch-close wait accounting, a get-based ring-shift driver over four
+//! ranks, and the tombstone panic path for accesses outside the exposure
+//! epoch.
+
+use dbcsr::dist::{run_ranks, NetModel, Payload, RmaWindow};
+
+#[test]
+fn get_timing_is_origin_charged_from_exposure_time() {
+    let net = NetModel {
+        latency: 2e-6,
+        bw: 1e9,
+    };
+    let out = run_ranks(2, net, move |c| {
+        let win = RmaWindow::new(&c, 11);
+        if c.rank() == 0 {
+            // exposure happens at t = 10 µs; the getter cannot read
+            // earlier than the data exists
+            c.advance_to(10e-6);
+            win.expose(Payload::F32(vec![3.0; 500])); // 2000 B
+            (c.now(), c.stats().bytes_sent, c.stats().msgs_sent, 0.0)
+        } else {
+            let got = win.get(0).into_f32();
+            (
+                c.now(),
+                c.stats().bytes_sent,
+                c.stats().msgs_sent,
+                got[0] as f64,
+            )
+        }
+    });
+    // exposer: passive — clock parked at the expose time, no traffic
+    assert_eq!(out[0].0, 10e-6);
+    assert_eq!((out[0].1, out[0].2), (0, 0));
+    // origin: transfer starts at the exposure time and pays α + B/β,
+    // with bytes and the message on its own counters
+    let want = 10e-6 + 2e-6 + 2000.0 / 1e9;
+    assert!((out[1].0 - want).abs() < 1e-15, "{} vs {want}", out[1].0);
+    assert_eq!((out[1].1, out[1].2), (2000, 1));
+    assert_eq!(out[1].3, 3.0);
+}
+
+#[test]
+fn get_after_origin_clock_passes_exposure_starts_from_origin() {
+    // symmetric case: the origin is *later* than the exposure — the
+    // transfer starts from the origin's clock, not the exposure time
+    let net = NetModel {
+        latency: 1e-6,
+        bw: 1e9,
+    };
+    let out = run_ranks(2, net, move |c| {
+        let win = RmaWindow::new(&c, 12);
+        if c.rank() == 0 {
+            win.expose(Payload::F32(vec![1.0; 250])); // 1000 B, exposed at t=0
+            0.0
+        } else {
+            c.advance_to(50e-6);
+            let _ = win.get(0);
+            c.now()
+        }
+    });
+    let want = 50e-6 + 1e-6 + 1000.0 / 1e9;
+    assert!((out[1] - want).abs() < 1e-15, "{} vs {want}", out[1]);
+}
+
+#[test]
+fn one_exposure_serves_many_origins() {
+    // passive target: three getters read the same buffer, each charged
+    // independently; the exposer's counters never move
+    let out = run_ranks(4, NetModel::aries(1), |c| {
+        let win = RmaWindow::new(&c, 13);
+        if c.rank() == 0 {
+            win.expose(Payload::F32(vec![7.0, 8.0]));
+            (vec![], c.stats().bytes_sent)
+        } else {
+            (win.get(0).into_f32(), c.stats().bytes_sent)
+        }
+    });
+    assert_eq!(out[0].1, 0, "exposer stays passive");
+    for (vals, bytes) in &out[1..] {
+        assert_eq!(vals, &vec![7.0, 8.0]);
+        assert_eq!(*bytes, 8, "each origin pays its own wire bytes");
+    }
+}
+
+#[test]
+fn exposures_are_per_epoch() {
+    // expose → close → expose the next epoch with different data; a
+    // getter that advances its own epoch view reads the new buffer
+    let out = run_ranks(2, NetModel::ideal(), |c| {
+        let mut win = RmaWindow::new(&c, 14);
+        if c.rank() == 0 {
+            win.expose(Payload::F32(vec![1.0]));
+            // rendezvous: wait for rank 1's epoch-0 read before closing
+            let _ = c.recv(1, 1);
+            win.close_epoch(&[]);
+            win.expose(Payload::F32(vec![2.0]));
+            let _ = c.recv(1, 2);
+            win.close_epoch(&[]);
+            vec![]
+        } else {
+            let a = win.get(0).into_f32();
+            c.send(0, 1, Payload::Empty);
+            win.close_epoch(&[]); // advance this rank's epoch view
+            let b = win.get(0).into_f32();
+            c.send(0, 2, Payload::Empty);
+            vec![a[0], b[0]]
+        }
+    });
+    assert_eq!(out[1], vec![1.0, 2.0]);
+}
+
+#[test]
+fn get_based_ring_shift_driver() {
+    // an MPI_Rget-style shift: every rank exposes its payload and fetches
+    // its right neighbor's — the one-sided pull mirror of the Cannon
+    // sendrecv rotate. The allreduce barriers the gets against the
+    // epoch closes so no rank tombstones an exposure still being read.
+    let p = 4usize;
+    let out = run_ranks(p, NetModel::aries(1), move |c| {
+        let mut win = RmaWindow::new(&c, 15);
+        let right = (c.rank() + 1) % p;
+        win.expose(Payload::F32(vec![c.rank() as f32]));
+        let got = win.get(right).into_f32()[0] as usize;
+        // sample the counters before the barrier (whose star traffic is
+        // root-heavy by design)
+        let get_bytes = c.stats().bytes_sent;
+        let _ = c.allreduce_sum_f32(Payload::F32(vec![1.0]));
+        win.close_epoch(&[]);
+        (got, get_bytes, win.epoch())
+    });
+    for (rank, (got, bytes, epoch)) in out.iter().enumerate() {
+        assert_eq!(*got, (rank + 1) % p, "rank {rank} reads its right neighbor");
+        assert_eq!(*epoch, 1, "the close advanced the epoch");
+        // every rank was the origin of exactly one 4-byte get
+        assert_eq!(*bytes, 4, "rank {rank}");
+    }
+}
+
+#[test]
+fn get_wait_is_comm_attributed() {
+    // the getter's stall shows up in wait_seconds (comm-attributed),
+    // mirroring the two-sided receive accounting
+    let net = NetModel {
+        latency: 0.0,
+        bw: 1e6,
+    };
+    let out = run_ranks(2, net, move |c| {
+        let win = RmaWindow::new(&c, 16);
+        if c.rank() == 0 {
+            win.expose(Payload::Phantom { bytes: 1000 });
+            c.stats().wait_seconds
+        } else {
+            let _ = win.get(0);
+            c.stats().wait_seconds
+        }
+    });
+    assert_eq!(out[0], 0.0, "exposer never waits");
+    assert!((out[1] - 1e-3).abs() < 1e-12, "{}", out[1]);
+}
+
+#[test]
+#[should_panic(expected = "rank thread panicked")]
+fn get_outside_exposure_epoch_panics_via_tombstone() {
+    let _ = run_ranks(2, NetModel::ideal(), |c| {
+        let mut win = RmaWindow::new(&c, 17);
+        if c.rank() == 0 {
+            win.expose(Payload::F32(vec![1.0]));
+            win.close_epoch(&[]);
+            // rendezvous: rank 1's get provably follows the close
+            c.send(1, 1, Payload::Empty);
+        } else {
+            let _ = c.recv(0, 1);
+            let _ = win.get(0); // tombstoned slot → loud panic, no hang
+        }
+    });
+}
