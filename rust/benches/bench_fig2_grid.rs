@@ -47,6 +47,7 @@ fn main() {
             transport: Transport::TwoSided,
             algo: AlgoSpec::Layout,
             plan_verbose: false,
+            iterations: 1,
         });
         t.row(vec![
             format!("{rpn}x{threads}"),

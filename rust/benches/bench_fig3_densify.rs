@@ -40,6 +40,7 @@ fn main() {
                 transport: Transport::TwoSided,
                 algo: AlgoSpec::Layout,
                 plan_verbose: false,
+                iterations: 1,
             });
             t.row(vec![
                 name.to_string(),

@@ -155,6 +155,7 @@ fn auto_point(dim: usize, transport: Transport, fixed: &[Point]) -> (Point, usiz
         gpu_share: 1,
         threads: 3,
         charge_replication: true,
+        horizon: 1,
     };
     let plan = planner::choose_plan(&input);
     let chosen = plan.layers;

@@ -1,0 +1,352 @@
+//! Bench — steady-state 2.5D pipelines (the arXiv:1705.10218 setting
+//! where operands stay layer-resident across the repeated multiplies of
+//! an iterative solve): iterations × replication factor × transport on
+//! 16 model-mode ranks.
+//!
+//! Three series per transport:
+//! * **cannon** — the unamortized baseline: N independent per-call
+//!   Cannon multiplies (measured as a real loop);
+//! * **per-call 2.5d** — N independent cold 2.5D calls at fixed c
+//!   (N × the measured one-shot total: replication + skew + sweep +
+//!   reduce every time);
+//! * **resident** — one `PipelineSession`: operands admitted once
+//!   (replication + pre-skew, reported as `repl_s`), then N resident
+//!   multiplies paying only shifts + the C reduce.
+//!
+//! Plus an **auto-steady** series: `planner::choose_plan_steady` at each
+//! horizon, mapped onto the measured resident point of the chosen c —
+//! the crossover where the planner flips from c = 1 to c > 1.
+//!
+//! Emits `BENCH_fig_steady.json` and asserts the record carries the full
+//! iteration-sweep series and that some c > 1 beats both Cannon and the
+//! per-call 2.5D path at an iteration count ≥ 2 — the acceptance
+//! contract of the steady-state pipeline work. `--smoke` shrinks the
+//! problem for CI.
+
+use std::fs;
+
+use dbcsr::bench::harness::{run_spec, AlgoSpec, Engine, RunSpec, Shape};
+use dbcsr::bench::table::{fmt_secs, Table};
+use dbcsr::dist::{NetModel, Transport};
+use dbcsr::matrix::{Mode, MODEL_ELEM_BYTES};
+use dbcsr::multiply::planner::{self, PlanInput};
+use dbcsr::perfmodel::PerfModel;
+use dbcsr::util::json::{obj, Json};
+
+const BLOCK: usize = 22;
+const P: usize = 16;
+const ITER_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+fn spec(dim: usize, transport: Transport, algo: AlgoSpec, iterations: usize) -> RunSpec {
+    RunSpec {
+        nodes: 4,
+        rpn: 4,
+        threads: 3,
+        block: BLOCK,
+        shape: Shape::Square { n: dim },
+        engine: Engine::DbcsrDensified,
+        mode: Mode::Model,
+        net: NetModel::aries(4),
+        transport,
+        algo,
+        plan_verbose: false,
+        iterations,
+    }
+}
+
+/// The synthesized resident N = 1 total: setup + half a 2-iteration
+/// session's multiply time (slightly understates the first iteration's
+/// sync catch-up — records carrying it are tagged `synthesized`).
+fn synth_n1(r: &dbcsr::bench::harness::RunResult) -> f64 {
+    r.repl_seconds + (r.total_seconds - r.repl_seconds) / 2.0
+}
+
+#[derive(Clone)]
+struct Point {
+    series: &'static str,
+    c: usize,
+    transport: Transport,
+    iterations: usize,
+    total_s: f64,
+    /// One-time residency setup (resident series only).
+    repl_s: f64,
+    /// Derived arithmetically rather than measured end to end: the
+    /// per-call N > 1 points (N x the measured one-shot) and the
+    /// resident N = 1 point (setup + half a 2-iteration session, which
+    /// slightly understates the first iteration's sync catch-up).
+    synthesized: bool,
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let dim: usize = if smoke { 352 } else { 2816 };
+
+    println!("=== bench_fig_steady ===\n");
+    println!(
+        "steady-state 2.5D pipelines: iterations x c x transport, {dim}² dense, \
+         block {BLOCK}, {P} model ranks (Aries, 4 ranks/node){}\n",
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    let mut points: Vec<Point> = Vec::new();
+    for transport in [Transport::TwoSided, Transport::OneSided] {
+        // cannon baseline: a real per-call loop at every horizon
+        for &n in &ITER_SWEEP {
+            let r = run_spec(spec(dim, transport, AlgoSpec::Cannon, n));
+            assert!(!r.oom);
+            points.push(Point {
+                series: "cannon",
+                c: 1,
+                transport,
+                iterations: n,
+                total_s: r.total_seconds,
+                repl_s: 0.0,
+                synthesized: false,
+            });
+        }
+        // per-call 2.5D: N independent cold calls = N x the one-shot
+        // total (replication is re-paid every call — what PR 3 showed
+        // never beats Cannon at this rank count)
+        for c in [2usize, 4] {
+            let one = run_spec(spec(dim, transport, AlgoSpec::TwoFiveD { layers: c }, 1));
+            assert!(!one.oom);
+            for &n in &ITER_SWEEP {
+                points.push(Point {
+                    series: "per-call-2.5d",
+                    c,
+                    transport,
+                    iterations: n,
+                    total_s: n as f64 * one.total_seconds,
+                    repl_s: one.repl_seconds,
+                    synthesized: n > 1,
+                });
+            }
+        }
+        // resident sessions, measured end to end per horizon (one run
+        // per n >= 2; the n = 1 point is synthesized from the n = 2
+        // run as setup + half the multiply time, since a 1-iteration
+        // spec falls back to the per-call path in the harness)
+        for c in [1usize, 2, 4] {
+            let measured: Vec<_> = ITER_SWEEP
+                .iter()
+                .filter(|&&n| n >= 2)
+                .map(|&n| {
+                    let r =
+                        run_spec(spec(dim, transport, AlgoSpec::TwoFiveD { layers: c }, n));
+                    assert!(!r.oom);
+                    (n, r)
+                })
+                .collect();
+            for &n in &ITER_SWEEP {
+                let (total, repl_s) = if n >= 2 {
+                    let (_, r) = measured.iter().find(|(m, _)| *m == n).expect("swept");
+                    (r.total_seconds, r.repl_seconds)
+                } else {
+                    let (_, r) = measured.iter().find(|(m, _)| *m == 2).expect("n=2 swept");
+                    (synth_n1(r), r.repl_seconds)
+                };
+                points.push(Point {
+                    series: "resident",
+                    c,
+                    transport,
+                    iterations: n,
+                    total_s: total,
+                    repl_s,
+                    synthesized: n < 2,
+                });
+            }
+        }
+    }
+
+    // the steady planner's pick per horizon, mapped onto the measured
+    // resident series
+    let mut auto_points: Vec<(Transport, usize, usize, f64, f64)> = Vec::new();
+    for transport in [Transport::TwoSided, Transport::OneSided] {
+        for &n in &ITER_SWEEP {
+            let input = PlanInput {
+                p: P,
+                m: dim,
+                n: dim,
+                k: dim,
+                block: BLOCK,
+                elem_bytes: MODEL_ELEM_BYTES,
+                net: NetModel::aries(4),
+                perf: PerfModel::default(),
+                transport,
+                gpu_share: 4,
+                threads: 3,
+                charge_replication: true,
+                horizon: 1,
+            };
+            let plan = planner::choose_plan_steady(&input, n);
+            let measured = points
+                .iter()
+                .find(|p| {
+                    p.series == "resident"
+                        && p.transport == transport
+                        && p.c == plan.layers
+                        && p.iterations == n
+                })
+                .map(|p| p.total_s)
+                .unwrap_or_else(|| {
+                    // chosen c outside the fixed sweep: measure it (at
+                    // n = 1 synthesize from a 2-iteration session run,
+                    // like the resident series)
+                    let r = run_spec(spec(
+                        dim,
+                        transport,
+                        AlgoSpec::TwoFiveD {
+                            layers: plan.layers,
+                        },
+                        n.max(2),
+                    ));
+                    assert!(!r.oom);
+                    if n >= 2 {
+                        r.total_seconds
+                    } else {
+                        synth_n1(&r)
+                    }
+                });
+            auto_points.push((transport, n, plan.layers, plan.cost.total_s, measured));
+        }
+    }
+
+    let mut t = Table::new(
+        "total virtual time to serve N multiplies (setup + iterations)",
+        &[
+            "series", "c", "transport", "N", "total", "setup (one-time)",
+        ],
+    );
+    for p in &points {
+        t.row(vec![
+            p.series.to_string(),
+            p.c.to_string(),
+            p.transport.name().into(),
+            p.iterations.to_string(),
+            fmt_secs(p.total_s),
+            if p.repl_s > 0.0 {
+                fmt_secs(p.repl_s)
+            } else {
+                "-".into()
+            },
+        ]);
+    }
+    t.print();
+
+    println!("\nauto-steady (planner horizon sweep):");
+    for &(transport, n, c, predicted, measured) in &auto_points {
+        println!(
+            "  {:>9} N={:<2} -> c={} (predicted {}, measured resident {})",
+            transport.name(),
+            n,
+            c,
+            fmt_secs(predicted),
+            fmt_secs(measured),
+        );
+    }
+
+    // crossover table: first swept N where the resident c beats Cannon
+    let lookup = |series: &str, c: usize, transport: Transport, n: usize| -> f64 {
+        points
+            .iter()
+            .find(|p| {
+                p.series == series && p.c == c && p.transport == transport && p.iterations == n
+            })
+            .map(|p| p.total_s)
+            .expect("swept point")
+    };
+    println!("\ncrossover (first swept N where resident c beats the Cannon loop):");
+    for transport in [Transport::TwoSided, Transport::OneSided] {
+        for c in [2usize, 4] {
+            let cross = ITER_SWEEP.iter().copied().find(|&n| {
+                lookup("resident", c, transport, n) < lookup("cannon", 1, transport, n)
+            });
+            println!(
+                "  {:>9} c={}: {}",
+                transport.name(),
+                c,
+                match cross {
+                    Some(n) => format!("N = {n}"),
+                    None => "never within the sweep".to_string(),
+                }
+            );
+        }
+    }
+    // acceptance: some c > 1 beats BOTH baselines at an iteration
+    // count >= 2 — the amortization the steady-state pipeline exists for
+    let acceptance = [Transport::TwoSided, Transport::OneSided]
+        .iter()
+        .any(|&tr| {
+            [2usize, 4].iter().any(|&c| {
+                ITER_SWEEP.iter().any(|&n| {
+                    n >= 2
+                        && lookup("resident", c, tr, n) < lookup("cannon", 1, tr, n)
+                        && lookup("resident", c, tr, n) < lookup("per-call-2.5d", c, tr, n)
+                })
+            })
+        });
+    assert!(
+        acceptance,
+        "steady state must make some c > 1 beat both Cannon and per-call 2.5D at N >= 2"
+    );
+    println!(
+        "\nexpected: per-call 2.5D re-pays replication every multiply and loses to Cannon\n\
+         (the PR 3 finding); keeping operands layer-resident drops the per-iteration cost\n\
+         to shifts + the C reduce, so c > 1 overtakes Cannon once the one-time setup\n\
+         amortizes — and the steady planner's chosen c tracks the measured-best horizon\n\
+         by horizon (tests/test_planner.rs pins the 10% contract)"
+    );
+
+    // machine-readable record for the perf trajectory
+    let mut series: Vec<Json> = points
+        .iter()
+        .map(|p| {
+            obj([
+                ("series", p.series.into()),
+                ("c", p.c.into()),
+                ("transport", p.transport.name().into()),
+                ("ranks", P.into()),
+                ("iterations", p.iterations.into()),
+                ("total_seconds", p.total_s.into()),
+                ("setup_seconds", p.repl_s.into()),
+                ("synthesized", p.synthesized.into()),
+            ])
+        })
+        .collect();
+    for &(transport, n, c, predicted, measured) in &auto_points {
+        series.push(obj([
+            ("series", "auto-steady".into()),
+            ("c", c.into()),
+            ("transport", transport.name().into()),
+            ("ranks", P.into()),
+            ("iterations", n.into()),
+            ("predicted_seconds", predicted.into()),
+            ("total_seconds", measured.into()),
+        ]));
+    }
+    // the record must carry the full iteration sweep for every series
+    // (CI asserts on this artifact)
+    let count = |name: &str| {
+        series
+            .iter()
+            .filter(|s| s.get("series").as_str() == Some(name))
+            .count()
+    };
+    assert_eq!(count("resident"), 2 * 3 * ITER_SWEEP.len());
+    assert_eq!(count("cannon"), 2 * ITER_SWEEP.len());
+    assert_eq!(count("per-call-2.5d"), 2 * 2 * ITER_SWEEP.len());
+    assert_eq!(count("auto-steady"), 2 * ITER_SWEEP.len());
+    let doc = obj([
+        ("bench", "fig_steady".into()),
+        ("dim", dim.into()),
+        ("block", BLOCK.into()),
+        ("ranks", P.into()),
+        ("net", "aries-rpn4".into()),
+        ("smoke", smoke.into()),
+        ("iteration_sweep", ITER_SWEEP.to_vec().into()),
+        ("series", Json::Arr(series)),
+    ]);
+    let path = "BENCH_fig_steady.json";
+    fs::write(path, doc.to_string() + "\n").expect("write bench record");
+    println!("\nwrote {path}");
+}

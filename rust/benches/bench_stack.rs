@@ -80,6 +80,7 @@ fn main() {
                     transport: Transport::TwoSided,
                     algo: AlgoSpec::Layout,
                     plan_verbose: false,
+                    iterations: 1,
                 });
                 t.row(vec![
                     label.to_string(),

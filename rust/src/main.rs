@@ -10,10 +10,15 @@
 //!   run --nodes N --rpn R --threads T --block B --shape square|rect
 //!       --engine dbcsr|dbcsr-blocked|pdgemm [--scale N] [--real]
 //!       [--algorithm layout|auto|cannon|2.5d] [--layers C]
-//!       [--plan-verbose]      one experiment point (`auto` picks the
+//!       [--iterations N] [--plan-verbose]
+//!                             one experiment point (`auto` picks the
 //!                             2.5D replication factor through the
-//!                             planner; --plan-verbose prints the
-//!                             candidate table)
+//!                             planner; --iterations > 1 runs the
+//!                             steady-state pipeline — operands go
+//!                             layer-resident once and every iteration
+//!                             skips replication and skew;
+//!                             --plan-verbose prints the candidate
+//!                             table)
 
 use dbcsr::bench::figures;
 use dbcsr::bench::harness::{run_spec, AlgoSpec, Engine, RunSpec, Shape};
@@ -195,11 +200,17 @@ fn run_file(args: &Args) {
                 other => panic!("algorithm = layout|auto|cannon|2.5d, got {other:?}"),
             },
             plan_verbose: false,
+            iterations: get(section, "iterations", 1),
         };
         let r = run_spec(spec);
         println!(
-            "[{section}] {} (stacks {}, comm {:.1} MiB{})",
+            "[{section}] {}{} (stacks {}, comm {:.1} MiB{})",
             fmt_secs(r.seconds),
+            if r.iterations > 1 {
+                format!(" / {} iters + setup {}", r.iterations, fmt_secs(r.repl_seconds))
+            } else {
+                String::new()
+            },
             r.stats.stacks,
             r.stats.comm_bytes as f64 / (1 << 20) as f64,
             if r.oom { ", OOM" } else { "" }
@@ -254,6 +265,7 @@ fn run_one(args: &Args, scale: usize, mode: Mode) {
         transport,
         algo,
         plan_verbose: args.switch("plan-verbose"),
+        iterations: args.usize_flag("iterations", 1),
     };
     println!("spec: {spec:?}");
     if spec.plan_verbose && engine != Engine::Pdgemm {
@@ -273,20 +285,31 @@ fn run_one(args: &Args, scale: usize, mode: Mode) {
     let r = run_spec(spec);
     if let Some(plan) = &r.plan {
         println!(
-            "plan: {} {}x{}x{} (source {}, predicted {})",
+            "plan: {} {}x{}x{} (source {}, replication {}, horizon {}, predicted {})",
             plan.algorithm,
             plan.rows,
             plan.cols,
             plan.layers,
             plan.source,
+            if plan.charged_replication {
+                "charged"
+            } else {
+                "amortized"
+            },
+            plan.horizon,
             fmt_secs(plan.predicted_seconds),
         );
     }
     println!(
-        "virtual time {}{}   (sim wallclock {:.2}s)",
+        "virtual time {}{}{}   (sim wallclock {:.2}s)",
         fmt_secs(r.seconds),
+        if r.iterations > 1 {
+            format!(" over {} iterations", r.iterations)
+        } else {
+            String::new()
+        },
         if r.repl_seconds > 0.0 {
-            format!(" + one-time replication {}", fmt_secs(r.repl_seconds))
+            format!(" + one-time residency setup {}", fmt_secs(r.repl_seconds))
         } else {
             String::new()
         },

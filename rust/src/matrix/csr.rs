@@ -88,6 +88,23 @@ impl LocalCsr {
         col_sizes: Vec<usize>,
         nonzeros: &[(usize, usize)],
     ) -> LocalCsr {
+        Self::from_pattern_store(row_ids, col_ids, row_sizes, col_sizes, nonzeros, false)
+    }
+
+    /// [`LocalCsr::from_pattern`] with the storage flavor selectable:
+    /// `phantom = true` accounts element counts without allocating
+    /// (model mode). The single index-construction path shared by the
+    /// dense builders' callers (2.5D native layouts are assembled from
+    /// pattern lists in both `multiply::twofive` and
+    /// `multiply::session` — one implementation, no drift).
+    pub fn from_pattern_store(
+        row_ids: Vec<usize>,
+        col_ids: Vec<usize>,
+        row_sizes: Vec<usize>,
+        col_sizes: Vec<usize>,
+        nonzeros: &[(usize, usize)],
+        phantom: bool,
+    ) -> LocalCsr {
         let nr = row_ids.len();
         debug_assert!(
             nonzeros.windows(2).all(|w| w[0] < w[1]),
@@ -102,10 +119,16 @@ impl LocalCsr {
             row_ptr[r + 1] += row_ptr[r];
         }
         let col_idx: Vec<usize> = nonzeros.iter().map(|&(_, c)| c).collect();
-        let areas = nonzeros
-            .iter()
-            .map(|&(r, c)| row_sizes[r] * col_sizes[c]);
-        let store = BlockStore::zeros(areas);
+        let store = if phantom {
+            BlockStore::phantom(
+                nonzeros
+                    .iter()
+                    .map(|&(r, c)| (row_sizes[r] * col_sizes[c]) as u64)
+                    .sum(),
+            )
+        } else {
+            BlockStore::zeros(nonzeros.iter().map(|&(r, c)| row_sizes[r] * col_sizes[c]))
+        };
         LocalCsr {
             row_ids,
             col_ids,

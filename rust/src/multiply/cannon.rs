@@ -37,7 +37,9 @@ pub(super) type Key = (usize, usize);
 /// Panel block metadata: (row ids, col ids, row sizes, col sizes).
 pub(super) type PanelMeta = (Vec<usize>, Vec<usize>, Vec<usize>, Vec<usize>);
 
-/// RMA window ids of this driver (twofive uses 5–10).
+/// RMA window ids of this driver (twofive uses 5–10, the
+/// resident-session pre-skew 11–12, tall-skinny's reduction 13; message
+/// tags: this driver 10–13, twofive 14–17, the session pre-skew 18–19).
 const WIN_SKEW_A: u64 = 1;
 const WIN_SKEW_B: u64 = 2;
 const WIN_SHIFT_A: u64 = 3;

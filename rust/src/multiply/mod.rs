@@ -8,13 +8,18 @@
 //! * [`vgrid`] holds the rectangular-grid Cannon topology.
 //!
 //! [`multiply`] is the user-facing entry: it picks the algorithm, runs
-//! the engine, and reports per-rank stats and virtual time.
+//! the engine, and reports per-rank stats and virtual time. Repeated
+//! same-shape multiplies (iterative solvers, SCF loops) should go
+//! through [`session::PipelineSession`] instead: operands become
+//! layer-resident once and every subsequent call skips the 2.5D
+//! replication and skew — the steady-state fast path.
 
 pub mod cannon;
 pub mod densify;
 pub mod engine;
 pub mod generation;
 pub mod planner;
+pub mod session;
 pub mod tall_skinny;
 pub mod traversal;
 pub mod twofive;
@@ -31,6 +36,7 @@ use crate::util::stats::{MultiplyStats, PlanSummary};
 
 pub use crate::dist::Transport;
 pub use engine::{EngineOpts, LocalEngine};
+pub use session::{PipelineSession, ResidentOperand, Sides};
 
 /// Which data-exchange algorithm to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -58,9 +64,9 @@ pub struct MultiplyConfig {
     /// Point-to-point transport for panel traffic: blocking two-sided
     /// sendrecv (the baseline) or one-sided RMA puts with epoch sync
     /// (arXiv:1705.10218). Numerics are bit-identical across transports;
-    /// only the modeled comm waits differ. Cannon and 2.5D dispatch on
-    /// it; tall-skinny and the PDGEMM baseline are collective-based and
-    /// ignore it.
+    /// only the modeled comm waits differ. Cannon, 2.5D and the
+    /// tall-skinny C reduction dispatch on it; only the PDGEMM baseline
+    /// ignores it.
     pub transport: Transport,
     /// Ranks sharing each node's GPU (the grid config's rank factor).
     pub gpu_share: usize,
@@ -191,6 +197,8 @@ fn plan_summary_for(
             cols,
             layers,
             source,
+            charged_replication: false,
+            horizon: 1,
             predicted_seconds: 0.0,
             predicted_comm_s: 0.0,
         };
@@ -210,6 +218,7 @@ fn plan_summary_for(
         // operands are already resident in their layout here — the
         // replication (if any) was charged by whoever built them
         charge_replication: false,
+        horizon: 1,
     };
     let cand = planner::predict_grid(&input, rows, cols, layers);
     PlanSummary {
@@ -218,6 +227,8 @@ fn plan_summary_for(
         cols,
         layers,
         source,
+        charged_replication: false,
+        horizon: 1,
         predicted_seconds: cand.cost.total_s,
         predicted_comm_s: cand.cost.comm_s(),
     }
@@ -237,12 +248,19 @@ pub fn multiply(
     let plan = plan_summary_for(&alg, cfg, grid, p, a, b);
     if cfg.plan_verbose && world.rank() == 0 {
         println!(
-            "[plan] {} {}x{}x{} (source {}): predicted {:.3}ms total, {:.3}ms comm",
+            "[plan] {} {}x{}x{} (source {}, replication {}, horizon {}): \
+             predicted {:.3}ms total, {:.3}ms comm",
             plan.algorithm,
             plan.rows,
             plan.cols,
             plan.layers,
             plan.source,
+            if plan.charged_replication {
+                "charged"
+            } else {
+                "amortized"
+            },
+            plan.horizon,
             plan.predicted_seconds * 1e3,
             plan.predicted_comm_s * 1e3,
         );
@@ -257,7 +275,9 @@ pub fn multiply(
     let t0 = world.now();
     let comm0 = world.stats();
     let c = match alg {
-        Algorithm::TallSkinny => tall_skinny::multiply_tall_skinny(world, a, b, &mut engine)?,
+        Algorithm::TallSkinny => {
+            tall_skinny::multiply_tall_skinny(world, a, b, &mut engine, cfg.transport)?
+        }
         Algorithm::TwoFiveD { layers } => {
             let g3 = Grid3D::new(
                 world.clone(),

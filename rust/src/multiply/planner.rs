@@ -42,6 +42,16 @@
 //! candidate table via [`Plan::render`]. The planner-vs-measurement
 //! contract — the chosen plan's *measured* total within 10% of the
 //! measured-best fixed `c` — is pinned by `tests/test_planner.rs`.
+//!
+//! **Steady-state mode** ([`PlanInput::horizon`] > 1, or the
+//! [`choose_plan_steady`] wrapper): the objective becomes one residency
+//! setup (layer replication + the pre-skew into the native layout, both
+//! performed once by `multiply::PipelineSession::admit`) plus `horizon`
+//! per-call costs (shift chain, cross-layer C reduce, compute). With the
+//! one-shot setup amortized over the horizon the argmin flips to `c > 1`
+//! — the 2.5D lineage paper's iterative-solve setting, where operands
+//! stay replicated across the many multiplies of a solve and only the
+//! C reduce is paid per step.
 
 use crate::dist::{NetModel, Transport};
 use crate::matrix::{Mode, MODEL_ELEM_BYTES, REAL_ELEM_BYTES};
@@ -76,6 +86,16 @@ pub struct PlanInput {
     /// keep operands layer-resident amortize it away and pass false —
     /// the ROADMAP's steady-state-pipeline item.
     pub charge_replication: bool,
+    /// How many multiplies the plan will serve (≥ 1). `1` prices the
+    /// classic one-shot call (skew in-run, every phase charged once).
+    /// `> 1` prices the **steady-state pipeline**
+    /// (`multiply::PipelineSession`): operand residency — the layer
+    /// replication *and* the skew into the native tick-`s0` layout — is
+    /// one-time setup (charged only when `charge_replication` is true),
+    /// while the per-call phases (shift chain, cross-layer C reduce,
+    /// compute) repeat `horizon` times. This is what flips the argmin
+    /// to `c > 1` once the horizon amortizes the setup.
+    pub horizon: usize,
 }
 
 /// Wire bytes per element for a storage mode (phantom storage accounts
@@ -115,17 +135,23 @@ pub struct CostBreakdown {
     /// One-time A/B layer replication (zero when `c = 1` or the input
     /// does not charge replication).
     pub repl_s: f64,
-    /// Canonical-layout skew exchanges.
+    /// Canonical-layout skew exchanges. At `horizon > 1` this is the
+    /// one-time residency pre-skew (zero when setup is not charged);
+    /// at `horizon = 1` the in-run skew of a one-shot call.
     pub skew_s: f64,
-    /// The per-tick shift chain over `L/c − 1` rounds.
+    /// The per-tick shift chain over `L/c − 1` rounds, summed over the
+    /// horizon.
     pub shift_s: f64,
-    /// Cross-layer C sum-reduce (zero when `c = 1`).
+    /// Cross-layer C sum-reduce (zero when `c = 1`), summed over the
+    /// horizon.
     pub reduce_s: f64,
-    /// Engine estimate: densified GEMM + staging + C undensify.
+    /// Engine estimate: densified GEMM + staging + C undensify, summed
+    /// over the horizon.
     pub compute_s: f64,
     /// Sum of all phases — the planner's objective.
     pub total_s: f64,
-    /// Mean per-rank wire bytes of the multiply (skew + shifts + reduce).
+    /// Mean per-rank wire bytes over the whole horizon (skew + shifts +
+    /// reduce).
     pub comm_bytes_per_rank: u64,
     /// Mean per-rank wire bytes of the one-time replication.
     pub repl_bytes_per_rank: u64,
@@ -169,6 +195,12 @@ pub struct Plan {
     pub cols: usize,
     pub layers: usize,
     pub cost: CostBreakdown,
+    /// Whether the one-time replication/residency setup was part of the
+    /// objective (copied from the input so the summary can't mislabel a
+    /// steady-state candidate as one-shot).
+    pub charged_replication: bool,
+    /// The multiply count the candidates were priced for.
+    pub horizon: usize,
     /// All candidates in ascending `c` (including memory-infeasible
     /// ones, flagged), for `--plan-verbose` and the test suite.
     pub candidates: Vec<Candidate>,
@@ -191,6 +223,8 @@ impl Plan {
             cols: self.cols,
             layers: self.layers,
             source,
+            charged_replication: self.charged_replication,
+            horizon: self.horizon,
             predicted_seconds: self.cost.total_s,
             predicted_comm_s: self.cost.comm_s(),
         }
@@ -198,7 +232,17 @@ impl Plan {
 
     /// Human-readable candidate table (the CLI's `--plan-verbose`).
     pub fn render(&self) -> String {
-        let mut out = String::from(
+        let mut out = format!(
+            "  objective: {} multipl{}, replication/residency setup {}\n",
+            self.horizon,
+            if self.horizon == 1 { "y" } else { "ies (steady state)" },
+            if self.charged_replication {
+                "charged"
+            } else {
+                "amortized (not charged)"
+            },
+        );
+        out.push_str(
             "  c  grid    repl      skew      shift     reduce    compute   total     mem/rank  pick\n",
         );
         for cand in &self.candidates {
@@ -299,17 +343,33 @@ pub fn predict_grid(input: &PlanInput, rows: usize, cols: usize, layers: usize) 
     } else {
         0.0
     };
-    let skew_s = pair(skew_a, skew_b);
+    // one-shot calls run the skew in-run every time; a steady-state
+    // horizon runs it once at residency setup (`PipelineSession::admit`
+    // pre-skews into the native layout), and not at all when the input
+    // says operands are already resident
+    let h = input.horizon.max(1);
+    let skew_once = pair(skew_a, skew_b);
+    let skew_s = if h > 1 && !input.charge_replication {
+        0.0
+    } else {
+        skew_once
+    };
 
-    // shifts: every remaining tick moves the whole held panel set
+    // shifts: every remaining tick moves the whole held panel set —
+    // paid by each of the horizon's multiplies
     let shift_a = if cols > 1 { bytes_a } else { 0.0 };
     let shift_b = if rows > 1 { bytes_b } else { 0.0 };
     let shift_rounds = nticks - 1;
-    let shift_s = shift_rounds as f64 * pair(shift_a, shift_b);
+    let shift_s = h as f64 * shift_rounds as f64 * pair(shift_a, shift_b);
 
     // cross-layer C reduce: all sends issue from one end-of-sweep clock,
-    // so the root-side chain is one hop (+ epoch sync under RMA)
-    let reduce_s = if layers > 1 { hop(bytes_c) + sync } else { 0.0 };
+    // so the root-side chain is one hop (+ epoch sync under RMA); paid
+    // per multiply
+    let reduce_s = if layers > 1 {
+        h as f64 * (hop(bytes_c) + sync)
+    } else {
+        0.0
+    };
 
     // layer replication: A and B broadcast back to back from layer 0's
     // clock — receivers wait for the larger arrival (one window close
@@ -338,8 +398,9 @@ pub fn predict_grid(input: &PlanInput, rows: usize, cols: usize, layers: usize) 
         .gpu_gemm_seconds(pm, pn, pk, input.gpu_share.max(1))
         + gen_s)
         .max(input.perf.transfer_seconds(panel_bytes));
-    let compute_s = slot_ticks as f64 * per_tick
-        + input.perf.memcpy_seconds(bytes_c.round() as u64) / input.threads.max(1) as f64;
+    let compute_s = h as f64
+        * (slot_ticks as f64 * per_tick
+            + input.perf.memcpy_seconds(bytes_c.round() as u64) / input.threads.max(1) as f64);
 
     // mean per-rank wire bytes (reduce: c−1 of c layers send their share;
     // replication: layer 0 sends c−1 copies, averaged over all layers)
@@ -348,7 +409,13 @@ pub fn predict_grid(input: &PlanInput, rows: usize, cols: usize, layers: usize) 
     } else {
         0.0
     };
-    let comm_bytes = skew_a + skew_b + shift_rounds as f64 * (shift_a + shift_b) + reduce_bytes;
+    let skew_bytes = if h > 1 && !input.charge_replication {
+        0.0
+    } else {
+        skew_a + skew_b
+    };
+    let comm_bytes =
+        skew_bytes + h as f64 * (shift_rounds as f64 * (shift_a + shift_b) + reduce_bytes);
     let repl_bytes = if layers > 1 && input.charge_replication {
         (bytes_a + bytes_b) * (layers - 1) as f64 / layers as f64
     } else {
@@ -432,8 +499,22 @@ pub fn choose_plan(input: &PlanInput) -> Plan {
         cols: chosen.cols,
         layers: chosen.layers,
         cost: chosen.cost,
+        charged_replication: input.charge_replication,
+        horizon: input.horizon.max(1),
         candidates,
     }
+}
+
+/// Steady-state convenience wrapper: price `iterations` resident
+/// multiplies (one-time replication + pre-skew setup, per-call shift /
+/// reduce / compute — the `PipelineSession` cost structure) and pick the
+/// cheapest feasible layer count. Equivalent to setting
+/// `input.horizon = iterations` with `charge_replication = true`.
+pub fn choose_plan_steady(input: &PlanInput, iterations: usize) -> Plan {
+    let mut inp = input.clone();
+    inp.horizon = iterations.max(1);
+    inp.charge_replication = true;
+    choose_plan(&inp)
 }
 
 #[cfg(test)]
@@ -454,6 +535,7 @@ mod tests {
             gpu_share: 4,
             threads: 3,
             charge_replication: true,
+            horizon: 1,
         }
     }
 
@@ -579,8 +661,72 @@ mod tests {
         assert!(s.predicted_seconds > 0.0);
         let table = plan.render();
         assert!(table.contains("<- chosen"));
-        // one row per divisor of 16
-        assert_eq!(table.lines().count(), 1 + 5);
+        assert!(table.contains("setup charged"));
+        // objective line + header + one row per divisor of 16
+        assert_eq!(table.lines().count(), 1 + 1 + 5);
+    }
+
+    #[test]
+    fn summary_records_replication_charging_and_horizon() {
+        // satellite: steady-state candidates must never be mislabeled as
+        // one-shot in the observable record
+        let one_shot = choose_plan(&input(16, 1408, 1408, 1408, Transport::TwoSided));
+        let s = one_shot.summary("model");
+        assert!(s.charged_replication);
+        assert_eq!(s.horizon, 1);
+
+        let mut amortized = input(16, 1408, 1408, 1408, Transport::TwoSided);
+        amortized.charge_replication = false;
+        let s = choose_plan(&amortized).summary("resident");
+        assert!(!s.charged_replication);
+        assert_eq!(s.source, "resident");
+
+        let steady = choose_plan_steady(&input(16, 1408, 1408, 1408, Transport::TwoSided), 8);
+        let s = steady.summary("model");
+        assert!(s.charged_replication, "setup is part of a cold horizon");
+        assert_eq!(s.horizon, 8);
+        assert!(steady.render().contains("steady state"));
+    }
+
+    #[test]
+    fn steady_horizon_amortizes_setup_and_flips_to_layers() {
+        let base = input(16, 1408, 1408, 1408, Transport::TwoSided);
+        // one-shot: the replication + skew charge keeps Cannon on top at
+        // this rank count (the PR 3 finding)
+        let cold = choose_plan(&base);
+        assert_eq!(cold.layers, 1, "{cold:?}");
+        // a long horizon amortizes the setup; the shorter per-call shift
+        // chain + reduce of c > 1 wins
+        let steady = choose_plan_steady(&base, 16);
+        assert!(steady.layers > 1, "horizon must flip the argmin: {steady:?}");
+        // per-candidate: total grows affinely with the horizon — setup
+        // once, per-call phases × h
+        let (rows, cols) = grid_shape(16 / 4);
+        let mut h1 = base.clone();
+        h1.horizon = 1;
+        let mut h4 = base.clone();
+        h4.horizon = 4;
+        let c1 = predict_grid(&h1, rows, cols, 4).cost;
+        let c4 = predict_grid(&h4, rows, cols, 4).cost;
+        let setup = c1.repl_s + c1.skew_s;
+        let per_call = c1.shift_s + c1.reduce_s + c1.compute_s;
+        assert!((c4.total_s - (setup + 4.0 * per_call)).abs() < 1e-12, "{c4:?}");
+        assert_eq!(c4.repl_s, c1.repl_s, "setup charged once");
+        assert_eq!(c4.skew_s, c1.skew_s, "pre-skew charged once");
+    }
+
+    #[test]
+    fn steady_uncharged_setup_prices_resident_operands_only() {
+        // horizon > 1 with charge_replication = false: operands already
+        // resident — no replication, no skew, only per-call phases
+        let mut inp = input(16, 1408, 1408, 1408, Transport::TwoSided);
+        inp.horizon = 4;
+        inp.charge_replication = false;
+        let cand = predict_grid(&inp, 2, 2, 4);
+        assert_eq!(cand.cost.repl_s, 0.0);
+        assert_eq!(cand.cost.skew_s, 0.0);
+        assert_eq!(cand.cost.repl_bytes_per_rank, 0);
+        assert!(cand.cost.reduce_s > 0.0);
     }
 
     #[test]

@@ -1,0 +1,753 @@
+//! Steady-state 2.5D pipelines: layer-resident operand handles that
+//! amortize replication (and the pre-skew) across repeated multiplies.
+//!
+//! PR 3's planner quantified the problem this module solves: with the
+//! one-time A/B layer replication charged to every call, `c = 1` always
+//! wins at small rank counts and the 2.5D machinery never pays off end
+//! to end. The 2.5D lineage paper (arXiv:1705.10218) runs the algorithm
+//! inside iterative solvers where operands *stay* replicated across the
+//! many multiplies of a solve and only the C reduce is paid per step —
+//! this module is that steady state:
+//!
+//! * [`PipelineSession::admit`] takes a canonical layer-cyclic
+//!   [`DistMatrix`] onto the session's [`Grid3D`] **once**: one
+//!   [`replicate_to_layers`] broadcast plus one skew exchange per
+//!   requested side, landing the operand in the driver's **native**
+//!   tick-`s0` layout. Both costs are booked in the `repl_` bucket of
+//!   the session's [`MultiplyStats`] — never on a multiply.
+//! * [`PipelineSession::multiply_resident`] then serves unlimited
+//!   multiplies that extract panels locally (no replication, no skew)
+//!   and pay only the shortened shift sweep plus the per-call
+//!   cross-layer C reduce. Its per-call stats carry `repl_bytes = 0` by
+//!   construction — the observable amortization.
+//!
+//! An operand's native layout is **side-specific** (A panels `(i, g)`
+//! skew along grid rows, B panels `(g, j)` along grid columns), so a
+//! handle carries up to two shares ([`Sides`]). Elementwise updates
+//! (scale, axpy) apply to every share identically, which keeps the
+//! layer replicas bit-identical — that is what lets `linalg`'s Newton
+//! iterations derive next-step operands without ever re-entering the
+//! skew path for constant matrices.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::backend::gpu_sim::DeviceOom;
+use crate::dist::{Grid3D, Transport};
+use crate::matrix::{BlockLayout, DistMatrix, Distribution, LocalCsr, Mode};
+use crate::util::stats::{MultiplyStats, PlanSummary};
+
+use super::cannon::{exchange, panel_meta, rma_exchange_finish, rma_exchange_start, Key};
+use super::engine::LocalEngine;
+use super::twofive::{
+    a_skew_plan, a_start_keys, b_skew_plan, b_start_keys, layer_ticks, multiply_twofive,
+    replicate_to_layers, sweep_period,
+};
+use super::vgrid::VGrid;
+use super::{planner, MultiplyConfig, MultiplyOutcome};
+
+/// Message tags of the residency pre-skew (cannon uses 10–13, twofive
+/// 14–17).
+const TAG_RES_SKEW_A: u64 = 18;
+const TAG_RES_SKEW_B: u64 = 19;
+
+/// RMA window ids of the residency pre-skew (cannon uses 1–4, twofive
+/// 5–10, tall-skinny's reduction 13).
+const WIN_RES_SKEW_A: u64 = 11;
+const WIN_RES_SKEW_B: u64 = 12;
+
+/// Which native shares an admitted operand carries. The A and B layouts
+/// differ (module docs), so admit only what the workload multiplies on:
+/// a pure `A·B` pipeline admits `A`/`B`; an iterate that appears on both
+/// sides of a Newton recurrence needs `Both`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sides {
+    A,
+    B,
+    Both,
+}
+
+impl Sides {
+    fn wants_a(self) -> bool {
+        matches!(self, Sides::A | Sides::Both)
+    }
+    fn wants_b(self) -> bool {
+        matches!(self, Sides::B | Sides::Both)
+    }
+}
+
+/// A layer-resident operand: replicated across the session's layers and
+/// pre-skewed into the native tick-`s0` layout, ready to multiply with
+/// zero setup traffic. Obtained from [`PipelineSession::admit`] /
+/// [`PipelineSession::adopt`]; the replication cost was charged there,
+/// once.
+#[derive(Clone)]
+pub struct ResidentOperand {
+    a_share: Option<DistMatrix>,
+    b_share: Option<DistMatrix>,
+}
+
+impl ResidentOperand {
+    pub(crate) fn from_shares(
+        a_share: Option<DistMatrix>,
+        b_share: Option<DistMatrix>,
+    ) -> ResidentOperand {
+        assert!(
+            a_share.is_some() || b_share.is_some(),
+            "a resident operand needs at least one native share"
+        );
+        ResidentOperand { a_share, b_share }
+    }
+
+    pub fn a_share(&self) -> Option<&DistMatrix> {
+        self.a_share.as_ref()
+    }
+
+    pub fn b_share(&self) -> Option<&DistMatrix> {
+        self.b_share.as_ref()
+    }
+
+    /// Any present share (A preferred). Within one layer the share's
+    /// ranks collectively cover the global matrix exactly once, so
+    /// layer-scoped reductions (trace, Frobenius) over it are exact;
+    /// across layers it is replicated `c`-fold.
+    pub fn share(&self) -> &DistMatrix {
+        self.a_share
+            .as_ref()
+            .or(self.b_share.as_ref())
+            .expect("resident operand holds a share")
+    }
+
+    pub fn mode(&self) -> Mode {
+        self.share().mode
+    }
+
+    /// Global block layouts (rows, cols) of the logical matrix.
+    pub fn layouts(&self) -> (BlockLayout, BlockLayout) {
+        let s = self.share();
+        (s.rows.clone(), s.cols.clone())
+    }
+
+    /// In-place scalar multiply, applied to every share. Uniform across
+    /// layers (each layer transforms identical replica data), so
+    /// residency is preserved for free.
+    pub fn scale(&mut self, alpha: f32) {
+        if let Some(m) = self.a_share.as_mut() {
+            m.scale(alpha);
+        }
+        if let Some(m) = self.b_share.as_mut() {
+            m.scale(alpha);
+        }
+    }
+
+    /// `self += alpha · other`, share by share. The two operands must
+    /// have been admitted with the same sides on the same session (their
+    /// native patterns then match exactly).
+    pub fn add_scaled(&mut self, other: &ResidentOperand, alpha: f32) {
+        assert_eq!(
+            self.a_share.is_some(),
+            other.a_share.is_some(),
+            "axpy operands must carry the same shares"
+        );
+        assert_eq!(
+            self.b_share.is_some(),
+            other.b_share.is_some(),
+            "axpy operands must carry the same shares"
+        );
+        if let (Some(d), Some(s)) = (self.a_share.as_mut(), other.a_share.as_ref()) {
+            d.add_scaled(s, alpha);
+        }
+        if let (Some(d), Some(s)) = (self.b_share.as_mut(), other.b_share.as_ref()) {
+            d.add_scaled(s, alpha);
+        }
+    }
+}
+
+/// One rank's handle on a steady-state 2.5D pipeline over a fixed
+/// [`Grid3D`]. Collective: every rank of the topology constructs the
+/// session and calls its methods at the same logical points (they wrap
+/// the collective replicate/skew/multiply primitives).
+pub struct PipelineSession {
+    g3: Grid3D,
+    cfg: MultiplyConfig,
+    stats: MultiplyStats,
+    multiplies: u64,
+}
+
+impl PipelineSession {
+    /// Wrap a topology and a multiply configuration. `cfg.algorithm` is
+    /// ignored — the session always runs the 2.5D driver on its own
+    /// grid (`layers = 1` degenerates to a skew-resident Cannon whose
+    /// pre-skew is still amortized).
+    pub fn new(g3: Grid3D, cfg: MultiplyConfig) -> PipelineSession {
+        PipelineSession {
+            g3,
+            cfg,
+            stats: MultiplyStats::default(),
+            multiplies: 0,
+        }
+    }
+
+    pub fn grid(&self) -> &Grid3D {
+        &self.g3
+    }
+
+    pub fn config(&self) -> &MultiplyConfig {
+        &self.cfg
+    }
+
+    /// Cumulative counters over the session's lifetime: every admit's
+    /// `repl_` bucket plus every resident multiply's per-call stats.
+    pub fn stats(&self) -> &MultiplyStats {
+        &self.stats
+    }
+
+    /// Resident multiplies served so far.
+    pub fn multiplies(&self) -> u64 {
+        self.multiplies
+    }
+
+    /// One-time bytes spent making operands resident (replication
+    /// broadcasts + pre-skew exchanges) — the `repl_` bucket.
+    pub fn repl_bytes(&self) -> u64 {
+        self.stats.repl_bytes
+    }
+
+    /// Virtual seconds of the same one-time setup (max-style per-rank
+    /// accounting happens at the caller; this is this rank's own span).
+    pub fn repl_seconds(&self) -> f64 {
+        self.stats.repl_s
+    }
+
+    /// Take a canonical layer-cyclic matrix resident: replicate across
+    /// layers (a no-op at `layers = 1`) and pre-skew into the native
+    /// layout of the requested `sides`. Charged once, to the `repl_`
+    /// bucket. Layers > 0 may pass a zero-filled share — the broadcast
+    /// delivers layer 0's elements, exactly like [`replicate_to_layers`].
+    pub fn admit(&mut self, m: DistMatrix, sides: Sides) -> ResidentOperand {
+        let t0 = self.g3.world.now();
+        let b0 = self.g3.world.stats().bytes_sent;
+        let mut m = m;
+        replicate_to_layers(&self.g3, &mut m, self.cfg.transport);
+        let (a_share, b_share) = self.build_shares(
+            sides.wants_a().then_some(&m),
+            sides.wants_b().then_some(&m),
+        );
+        self.book_setup(t0, b0);
+        ResidentOperand::from_shares(a_share, b_share)
+    }
+
+    /// Admit an A-side operand and a B-side operand together (the `A·B`
+    /// pipeline shape): both replications issue back to back and, under
+    /// the one-sided transport, the two skew exchanges overlap on the
+    /// wire exactly like the in-driver canonical skew — this is the
+    /// setup the steady-state planner prices.
+    pub fn admit_pair(
+        &mut self,
+        a: DistMatrix,
+        b: DistMatrix,
+    ) -> (ResidentOperand, ResidentOperand) {
+        let t0 = self.g3.world.now();
+        let b0 = self.g3.world.stats().bytes_sent;
+        let (mut a, mut b) = (a, b);
+        replicate_to_layers(&self.g3, &mut a, self.cfg.transport);
+        replicate_to_layers(&self.g3, &mut b, self.cfg.transport);
+        let (a_share, b_share) = self.build_shares(Some(&a), Some(&b));
+        self.book_setup(t0, b0);
+        (
+            ResidentOperand::from_shares(a_share, None),
+            ResidentOperand::from_shares(None, b_share),
+        )
+    }
+
+    /// Make an **already layer-replicated** matrix resident without the
+    /// broadcast — for matrices every layer constructed bit-identically
+    /// in place (identities, elementwise derivations, deterministic
+    /// per-layer collectives like a transpose). Only the pre-skew
+    /// traffic is charged (still to the `repl_` bucket). Passing a
+    /// matrix whose layer shares differ produces a wrong C; the
+    /// driver's replica fingerprint check does not cover native-layout
+    /// shares, so this is the caller's contract.
+    pub fn adopt(&mut self, m: &DistMatrix, sides: Sides) -> ResidentOperand {
+        let t0 = self.g3.world.now();
+        let b0 = self.g3.world.stats().bytes_sent;
+        let (a_share, b_share) = self.build_shares(
+            sides.wants_a().then_some(m),
+            sides.wants_b().then_some(m),
+        );
+        self.book_setup(t0, b0);
+        ResidentOperand::from_shares(a_share, b_share)
+    }
+
+    /// Multiply `C = A · B` on already-resident operands: the shortened
+    /// skew-free sweep plus the per-call cross-layer C reduce — nothing
+    /// else. Returns the same [`MultiplyOutcome`] as `multiply()`; its
+    /// stats carry `repl_bytes = 0` (the amortization this session
+    /// exists for) and a plan record with `source = "resident"` and
+    /// `charged_replication = false`. Layer 0 holds the reduced C in
+    /// the layer grid's cyclic distribution; other layers return a zero
+    /// share (see [`multiply_twofive`]).
+    pub fn multiply_resident(
+        &mut self,
+        a: &ResidentOperand,
+        b: &ResidentOperand,
+    ) -> Result<MultiplyOutcome, DeviceOom> {
+        let am = a
+            .a_share
+            .as_ref()
+            .expect("left operand needs an A-side share (admit with Sides::A or Both)");
+        let bm = b
+            .b_share
+            .as_ref()
+            .expect("right operand needs a B-side share (admit with Sides::B or Both)");
+        let world = self.g3.world.clone();
+        let plan = self.resident_plan(am, bm);
+        if self.cfg.plan_verbose && world.rank() == 0 {
+            println!(
+                "[plan] {} {}x{}x{} (source {}, replication amortized): \
+                 predicted {:.3}ms total, {:.3}ms comm",
+                plan.algorithm,
+                plan.rows,
+                plan.cols,
+                plan.layers,
+                plan.source,
+                plan.predicted_seconds * 1e3,
+                plan.predicted_comm_s * 1e3,
+            );
+        }
+        let mut engine = LocalEngine::new(
+            self.cfg.engine.clone(),
+            am.mode,
+            self.cfg.perf.clone(),
+            self.cfg.runtime.clone(),
+            self.cfg.gpu_share,
+        );
+        let t0 = world.now();
+        let comm0 = world.stats();
+        let c = multiply_twofive(&self.g3, am, bm, &mut engine, self.cfg.transport)?;
+        let comm1 = world.stats();
+        let mut stats = engine.stats.clone();
+        stats.comm_bytes = comm1.bytes_sent - comm0.bytes_sent;
+        stats.comm_msgs = comm1.msgs_sent - comm0.msgs_sent;
+        stats.comm_wait_s = comm1.wait_seconds - comm0.wait_seconds;
+        stats.plan = Some(plan);
+        self.multiplies += 1;
+        self.stats.merge(&stats);
+        Ok(MultiplyOutcome {
+            c,
+            stats,
+            virtual_seconds: world.now() - t0,
+        })
+    }
+
+    /// The executed-plan record of one resident call: the session's
+    /// fixed topology priced with replication amortized away.
+    fn resident_plan(&self, am: &DistMatrix, bm: &DistMatrix) -> PlanSummary {
+        let input = planner::PlanInput {
+            p: self.g3.world.size(),
+            m: am.rows.dim,
+            n: bm.cols.dim,
+            k: am.cols.dim,
+            block: am.rows.block,
+            elem_bytes: planner::elem_bytes_for(am.mode),
+            net: self.g3.world.net(),
+            perf: self.cfg.perf.clone(),
+            transport: self.cfg.transport,
+            gpu_share: self.cfg.gpu_share,
+            threads: self.cfg.engine.threads.max(1),
+            charge_replication: false,
+            horizon: 1,
+        };
+        let cand =
+            planner::predict_grid(&input, self.g3.rows, self.g3.cols, self.g3.layers);
+        // a horizon-1 uncharged prediction still includes the in-run
+        // skew (the planner cannot tell a resident one-shot from a
+        // canonical one); operands here are pre-skewed, so drop that
+        // term explicitly — what remains is shift + reduce + compute,
+        // exactly this call's cost structure
+        PlanSummary {
+            algorithm: "2.5d".to_string(),
+            rows: self.g3.rows,
+            cols: self.g3.cols,
+            layers: self.g3.layers,
+            source: "resident",
+            charged_replication: false,
+            horizon: 1,
+            predicted_seconds: cand.cost.total_s - cand.cost.skew_s,
+            predicted_comm_s: cand.cost.comm_s() - cand.cost.skew_s,
+        }
+    }
+
+    fn book_setup(&mut self, t0: f64, b0: u64) {
+        self.stats.repl_s += self.g3.world.now() - t0;
+        self.stats.repl_bytes += self.g3.world.stats().bytes_sent - b0;
+    }
+
+    /// Run the A-side skew of `a_src` and the B-side skew of `b_src`
+    /// from the canonical layout to this layer's tick-`s0` native
+    /// positions, assembling the received panels into native-layout
+    /// matrices. Under the one-sided transport both exchanges' puts
+    /// issue before either epoch closes (they overlap on the wire);
+    /// two-sided serializes them, mirroring the in-driver skew.
+    fn build_shares(
+        &self,
+        a_src: Option<&DistMatrix>,
+        b_src: Option<&DistMatrix>,
+    ) -> (Option<DistMatrix>, Option<DistMatrix>) {
+        let g3 = &self.g3;
+        let grid = &g3.grid;
+        let (r, c) = grid.coords();
+        let lv = sweep_period(g3.rows, g3.cols, g3.layers);
+        let vg = VGrid::with_period(g3.rows, g3.cols, lv, r, c);
+        let (s0, _) = layer_ticks(lv, g3.layers, g3.layer);
+        let slots = vg.slots();
+
+        // the same routing the driver's canonical skew uses — the
+        // shared helpers guarantee admitted shares land exactly at the
+        // driver's native tick-s0 positions
+        let a_route = a_src.map(|m| {
+            let keys = a_start_keys(&vg, &slots, s0);
+            let (held, sends, recvs) = a_skew_plan(m, &vg, s0, &keys);
+            (m, held, sends, recvs)
+        });
+        let b_route = b_src.map(|m| {
+            let keys = b_start_keys(&vg, &slots, s0);
+            let (held, sends, recvs) = b_skew_plan(m, &vg, s0, &keys);
+            (m, held, sends, recvs)
+        });
+
+        let (a_panels, b_panels) = match self.cfg.transport {
+            Transport::TwoSided => {
+                let ap = a_route.map(|(m, held, sends, recvs)| {
+                    let panels = exchange(
+                        &grid.row,
+                        held,
+                        &sends,
+                        &recvs,
+                        |key| panel_meta(m, &vg, key.0, key.1),
+                        TAG_RES_SKEW_A,
+                        m.mode,
+                    );
+                    (m, panels)
+                });
+                let bp = b_route.map(|(m, held, sends, recvs)| {
+                    let panels = exchange(
+                        &grid.col,
+                        held,
+                        &sends,
+                        &recvs,
+                        |key| panel_meta(m, &vg, key.0, key.1),
+                        TAG_RES_SKEW_B,
+                        m.mode,
+                    );
+                    (m, panels)
+                });
+                (ap, bp)
+            }
+            Transport::OneSided => {
+                let ex_a = a_route.map(|(m, held, sends, recvs)| {
+                    (
+                        m,
+                        rma_exchange_start(&grid.row, WIN_RES_SKEW_A, held, &sends, &recvs, m.mode),
+                    )
+                });
+                let ex_b = b_route.map(|(m, held, sends, recvs)| {
+                    (
+                        m,
+                        rma_exchange_start(&grid.col, WIN_RES_SKEW_B, held, &sends, &recvs, m.mode),
+                    )
+                });
+                let ap = ex_a.map(|(m, ex)| {
+                    (
+                        m,
+                        rma_exchange_finish(ex, |key| panel_meta(m, &vg, key.0, key.1), m.mode),
+                    )
+                });
+                let bp = ex_b.map(|(m, ex)| {
+                    (
+                        m,
+                        rma_exchange_finish(ex, |key| panel_meta(m, &vg, key.0, key.1), m.mode),
+                    )
+                });
+                (ap, bp)
+            }
+        };
+        (
+            a_panels.map(|(m, panels)| assemble_native(g3, &m.rows, &m.cols, &panels, m.mode)),
+            b_panels.map(|(m, panels)| assemble_native(g3, &m.rows, &m.cols, &panels, m.mode)),
+        )
+    }
+}
+
+/// Assemble skewed panels into one native-layout matrix: the union of
+/// the panels' blocks, with the cyclic-distribution metadata the 2.5D
+/// driver expects (nativeness is detected from block presence, exactly
+/// as for `twofive_operands`-built matrices). Distinct panel keys cover
+/// disjoint mod-`L` block classes, so the union has no collisions.
+fn assemble_native(
+    g3: &Grid3D,
+    rows: &BlockLayout,
+    cols: &BlockLayout,
+    panels: &BTreeMap<Key, LocalCsr>,
+    mode: Mode,
+) -> DistMatrix {
+    let mut row_set: BTreeSet<usize> = BTreeSet::new();
+    let mut col_set: BTreeSet<usize> = BTreeSet::new();
+    for p in panels.values() {
+        row_set.extend(p.row_ids.iter().copied());
+        col_set.extend(p.col_ids.iter().copied());
+    }
+    let row_ids: Vec<usize> = row_set.into_iter().collect();
+    let col_ids: Vec<usize> = col_set.into_iter().collect();
+    let row_sizes: Vec<usize> = row_ids.iter().map(|&i| rows.block_size(i)).collect();
+    let col_sizes: Vec<usize> = col_ids.iter().map(|&j| cols.block_size(j)).collect();
+
+    let mut nz: Vec<(usize, usize)> = Vec::new();
+    for p in panels.values() {
+        for (_, plr, plc) in p.iter_nnz() {
+            nz.push((
+                row_ids
+                    .binary_search(&p.row_ids[plr])
+                    .expect("panel row in union"),
+                col_ids
+                    .binary_search(&p.col_ids[plc])
+                    .expect("panel col in union"),
+            ));
+        }
+    }
+    nz.sort_unstable();
+    debug_assert!(nz.windows(2).all(|w| w[0] < w[1]), "panel overlap");
+    // shared index construction with twofive's native_matrix — the two
+    // native-layout builders can't drift apart
+    let mut local = LocalCsr::from_pattern_store(
+        row_ids,
+        col_ids,
+        row_sizes,
+        col_sizes,
+        &nz,
+        mode == Mode::Model,
+    );
+    if mode == Mode::Real {
+        for p in panels.values() {
+            for (pb, plr, plc) in p.iter_nnz().collect::<Vec<_>>() {
+                let lr = local
+                    .row_ids
+                    .binary_search(&p.row_ids[plr])
+                    .expect("assembled row");
+                let lc = local
+                    .col_ids
+                    .binary_search(&p.col_ids[plc])
+                    .expect("assembled col");
+                let bi = local.find(lr, lc).expect("assembled pattern");
+                let area = local.area_of(lr, lc);
+                local
+                    .store
+                    .block_mut(bi, area)
+                    .copy_from_slice(p.store.block(pb, area));
+            }
+        }
+    }
+    debug_assert!(local.check_invariants().is_ok());
+    let (r, c) = g3.grid.coords();
+    DistMatrix {
+        rows: rows.clone(),
+        cols: cols.clone(),
+        row_dist: Distribution::cyclic(g3.rows),
+        col_dist: Distribution::cyclic(g3.cols),
+        coords: (r, c),
+        local,
+        mode,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{run_ranks, NetModel};
+    use crate::matrix::matrix::{dense_reference, Fill};
+    use crate::multiply::engine::EngineOpts;
+    use crate::util::prop::assert_allclose;
+
+    fn cfg(transport: Transport, threads: usize, densify: bool) -> MultiplyConfig {
+        MultiplyConfig {
+            engine: EngineOpts {
+                threads,
+                densify,
+                stack_cap: 48,
+                cpu_coexec: true,
+            },
+            transport,
+            ..Default::default()
+        }
+    }
+
+    fn canonical(
+        g3: &Grid3D,
+        m: usize,
+        n: usize,
+        block: usize,
+        mode: Mode,
+        seed: u64,
+    ) -> DistMatrix {
+        // layers > 0 start from zeros: admit's broadcast must deliver
+        // the elements, like the canonical 2.5D entry path
+        let fill = match mode {
+            Mode::Model => Fill::Zero,
+            Mode::Real if g3.layer == 0 => Fill::Random { seed },
+            Mode::Real => Fill::Zero,
+        };
+        DistMatrix::dense_cyclic(
+            m,
+            n,
+            block,
+            (g3.rows, g3.cols),
+            g3.grid.coords(),
+            mode,
+            fill,
+        )
+    }
+
+    fn resident_case(rows: usize, cols: usize, layers: usize, dim: usize, transport: Transport) {
+        let p = rows * cols * layers;
+        let iters = 3usize;
+        let out = run_ranks(p, NetModel::aries(2), move |world| {
+            let g3 = Grid3D::new(world, rows, cols, layers);
+            let a = canonical(&g3, dim, dim, 4, Mode::Real, 71);
+            let b = canonical(&g3, dim, dim, 4, Mode::Real, 72);
+            let mut sess = PipelineSession::new(g3, cfg(transport, 2, true));
+            let (ra, rb) = sess.admit_pair(a, b);
+            let mut last = Vec::new();
+            for _ in 0..iters {
+                let out = sess.multiply_resident(&ra, &rb).unwrap();
+                assert_eq!(out.stats.repl_bytes, 0, "resident calls never replicate");
+                let plan = out.stats.plan.as_ref().unwrap();
+                assert_eq!(plan.source, "resident");
+                assert!(!plan.charged_replication);
+                let mut dense = vec![0.0f32; dim * dim];
+                out.c.add_into_dense(&mut dense);
+                last = dense;
+            }
+            assert_eq!(sess.multiplies(), iters as u64);
+            (last, sess.repl_bytes())
+        });
+        // some rank pays setup traffic (identity-skew ranks may not)
+        assert!(out.iter().map(|(_, b)| *b).sum::<u64>() > 0);
+        let mut got = vec![0.0f32; dim * dim];
+        for (part, _) in &out {
+            for (g, x) in got.iter_mut().zip(part.iter()) {
+                *g += x;
+            }
+        }
+        let ar = dense_reference(&BlockLayout::new(dim, 4), &BlockLayout::new(dim, 4), 71);
+        let br = dense_reference(&BlockLayout::new(dim, 4), &BlockLayout::new(dim, 4), 72);
+        let mut want = vec![0.0f32; dim * dim];
+        crate::backend::smm_cpu::gemm_blocked(dim, dim, dim, &ar, &br, &mut want);
+        assert_allclose(&got, &want, 2e-3, 2e-3).unwrap_or_else(|e| {
+            panic!("resident {rows}x{cols}x{layers} dim {dim} {transport}: {e}")
+        });
+    }
+
+    #[test]
+    fn resident_multiply_matches_reference_two_layers() {
+        resident_case(2, 2, 2, 24, Transport::TwoSided);
+        resident_case(2, 2, 2, 24, Transport::OneSided);
+    }
+
+    #[test]
+    fn resident_multiply_matches_reference_four_layers() {
+        resident_case(2, 2, 4, 32, Transport::TwoSided);
+        resident_case(2, 2, 4, 32, Transport::OneSided);
+    }
+
+    #[test]
+    fn resident_single_layer_amortizes_the_cannon_skew() {
+        // layers = 1: no replication, but the pre-skew still amortizes
+        resident_case(2, 2, 1, 24, Transport::TwoSided);
+    }
+
+    #[test]
+    fn resident_rect_grid_and_ragged_blocks() {
+        resident_case(1, 2, 2, 18, Transport::TwoSided);
+        // 26 = 3*8 + 2 ragged tail
+        let out = run_ranks(8, NetModel::aries(2), move |world| {
+            let g3 = Grid3D::new(world, 2, 2, 2);
+            let a = canonical(&g3, 26, 26, 8, Mode::Real, 71);
+            let b = canonical(&g3, 26, 26, 8, Mode::Real, 72);
+            let mut sess = PipelineSession::new(g3, cfg(Transport::TwoSided, 2, false));
+            let (ra, rb) = sess.admit_pair(a, b);
+            let out = sess.multiply_resident(&ra, &rb).unwrap();
+            let mut dense = vec![0.0f32; 26 * 26];
+            out.c.add_into_dense(&mut dense);
+            dense
+        });
+        let mut got = vec![0.0f32; 26 * 26];
+        for part in out {
+            for (g, x) in got.iter_mut().zip(part.iter()) {
+                *g += x;
+            }
+        }
+        let ar = dense_reference(&BlockLayout::new(26, 8), &BlockLayout::new(26, 8), 71);
+        let br = dense_reference(&BlockLayout::new(26, 8), &BlockLayout::new(26, 8), 72);
+        let mut want = vec![0.0f32; 26 * 26];
+        crate::backend::smm_cpu::gemm_blocked(26, 26, 26, &ar, &br, &mut want);
+        assert_allclose(&got, &want, 2e-3, 2e-3).unwrap();
+    }
+
+    #[test]
+    fn admitted_shares_match_native_operands() {
+        // the pre-skew must land blocks exactly where twofive_operands
+        // puts them — same ids, same per-layer coverage
+        use crate::multiply::twofive::twofive_operands;
+        let (rows, cols, layers, dim) = (2usize, 2usize, 2usize, 32usize);
+        let out = run_ranks(rows * cols * layers, NetModel::ideal(), move |world| {
+            let g3 = Grid3D::new(world, rows, cols, layers);
+            let (na, nb) = twofive_operands(&g3, dim, dim, dim, 4, Mode::Model, 1, 2);
+            let a = canonical(&g3, dim, dim, 4, Mode::Model, 1);
+            let b = canonical(&g3, dim, dim, 4, Mode::Model, 2);
+            let mut sess = PipelineSession::new(g3, cfg(Transport::TwoSided, 1, false));
+            let (ra, rb) = sess.admit_pair(a, b);
+            let sa = ra.a_share().unwrap();
+            let sb = rb.b_share().unwrap();
+            (
+                sa.local.row_ids == na.local.row_ids && sa.local.col_ids == na.local.col_ids,
+                sb.local.row_ids == nb.local.row_ids && sb.local.col_ids == nb.local.col_ids,
+                sa.local.nnz() == na.local.nnz(),
+            )
+        });
+        for (a_ok, b_ok, nnz_ok) in out {
+            assert!(a_ok && b_ok && nnz_ok);
+        }
+    }
+
+    #[test]
+    fn elementwise_ops_preserve_residency() {
+        // scale/axpy on resident handles stay consistent with the same
+        // ops applied before admission
+        let (rows, cols, layers, dim) = (2usize, 1usize, 2usize, 16usize);
+        let out = run_ranks(rows * cols * layers, NetModel::aries(2), move |world| {
+            let g3 = Grid3D::new(world, rows, cols, layers);
+            let a = canonical(&g3, dim, dim, 4, Mode::Real, 71);
+            let b = canonical(&g3, dim, dim, 4, Mode::Real, 72);
+            let mut sess = PipelineSession::new(g3, cfg(Transport::TwoSided, 1, false));
+            let mut ra = sess.admit(a, Sides::Both);
+            let rb = sess.admit(b, Sides::B);
+            // ra ← 2·ra − rb requires rb on both sides; re-admit instead
+            ra.scale(2.0);
+            let out = sess.multiply_resident(&ra, &rb).unwrap();
+            let mut dense = vec![0.0f32; dim * dim];
+            out.c.add_into_dense(&mut dense);
+            dense
+        });
+        let mut got = vec![0.0f32; dim * dim];
+        for part in out {
+            for (g, x) in got.iter_mut().zip(part.iter()) {
+                *g += x;
+            }
+        }
+        let ar = dense_reference(&BlockLayout::new(dim, 4), &BlockLayout::new(dim, 4), 71);
+        let br = dense_reference(&BlockLayout::new(dim, 4), &BlockLayout::new(dim, 4), 72);
+        let mut want = vec![0.0f32; dim * dim];
+        let scaled: Vec<f32> = ar.iter().map(|x| 2.0 * x).collect();
+        crate::backend::smm_cpu::gemm_blocked(dim, dim, dim, &scaled, &br, &mut want);
+        assert_allclose(&got, &want, 2e-3, 2e-3).unwrap();
+    }
+}

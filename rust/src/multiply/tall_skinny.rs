@@ -9,12 +9,78 @@
 //! sum-allreduce of C — whose size is independent of K and P — combines
 //! the partial products. Communication per rank is O(|C|) = O(1) in the
 //! paper's scaling sense, versus Cannon's O(|A|+|B|)/√P.
+//!
+//! The C reduction dispatches on [`Transport`] like the Cannon/2.5D
+//! shift paths (the PR 2 follow-up): two-sided runs the star
+//! gather-to-root + spread of [`CommView::allreduce_sum_f32`];
+//! one-sided runs both phases through nonblocking RMA **puts** drained
+//! by epoch closes (one clock advance + one sync α per epoch instead of
+//! per-message matching) — the same passive-target pattern as
+//! `replicate_to_layers`. An exposure/`get`-based spread was rejected:
+//! exposure slots are keyed by (rank, epoch tag) and the per-call
+//! window recreation restarts epochs, so a fast peer's `get` in call N
+//! could read call N−1's still-live exposure (put/close pairs through
+//! the substrate's per-(src, dst, tag) FIFO queues instead, which is
+//! reuse-safe by construction). Sum order is root-first then ascending
+//! on both paths, so C stays **bit-identical** across transports, and
+//! per-rank wire volume is identical too. The reduction is one
+//! dependency chain — no A/B pair to overlap — so unlike the shift
+//! paths the one-sided gain is not a wait cut; the modeled difference
+//! is exactly the epoch-sync latencies (α at the root, 2α at each
+//! peer), pinned by `tests/test_transport.rs`.
 
 use crate::backend::gpu_sim::DeviceOom;
-use crate::dist::{CommView, Payload};
+use crate::dist::{sum_payloads, CommView, Payload, RmaWindow, Transport};
 use crate::matrix::{DistMatrix, Distribution, LocalCsr, Mode};
 
 use super::engine::LocalEngine;
+
+/// RMA window id of the C reduction (cannon uses 1–4, twofive 5–10, the
+/// resident-session pre-skew 11–12).
+const WIN_TS_REDUCE: u64 = 13;
+
+/// Transport-dispatched sum-allreduce of the C candidate. Both paths
+/// reduce in identical order (local rank 0's share first, then ranks
+/// ascending) — bit-identical results.
+///
+/// One-sided window reuse across repeated calls (e.g. an `--iterations`
+/// loop) is safe because both phases are put/close pairs, which pair
+/// through the substrate's per-(src, dst, tag) FIFO queues: every rank
+/// issues its puts and closes in the same global call order, so epoch
+/// tags can never cross-match between calls (see the reuse contract in
+/// `dist/rma.rs` — it covers put/close only, which is exactly why the
+/// spread does not use an exposure + `get`).
+fn allreduce_c(world: &CommView, payload: Payload, transport: Transport) -> Payload {
+    let p = world.size();
+    if p == 1 {
+        return payload;
+    }
+    match transport {
+        Transport::TwoSided => world.allreduce_sum_f32(payload),
+        Transport::OneSided => {
+            let mut win = RmaWindow::new(world, WIN_TS_REDUCE);
+            if world.rank() == 0 {
+                // gather epoch: one close drains every peer's share
+                let sources: Vec<usize> = (1..p).collect();
+                let mut acc = payload;
+                for part in win.close_epoch(&sources) {
+                    acc = sum_payloads(acc, part);
+                }
+                // spread epoch: push the sum back (nonblocking)
+                for dst in 1..p {
+                    win.put(dst, acc.clone());
+                }
+                acc
+            } else {
+                win.put(0, payload);
+                // advance past the gather epoch (free), then drain the
+                // root's spread put
+                win.close_epoch(&[]);
+                win.close_epoch(&[0]).remove(0)
+            }
+        }
+    }
+}
 
 /// Build this rank's share of a tall-skinny operand pair: A is
 /// column-cyclic over all P ranks, B row-cyclic (the layout the
@@ -57,12 +123,15 @@ pub fn ts_operands(
 
 /// Multiply `C = A · B` with the tall-and-skinny algorithm. `a` must be
 /// column-cyclic over P, `b` row-cyclic over P (see [`ts_operands`]).
-/// Returns this rank's (replicated) C.
+/// Returns this rank's (replicated) C. The C reduction runs over the
+/// selected [`Transport`] (see [`allreduce_c`]); results are
+/// bit-identical either way.
 pub fn multiply_tall_skinny(
     world: &CommView,
     a: &DistMatrix,
     b: &DistMatrix,
     engine: &mut LocalEngine,
+    transport: Transport,
 ) -> Result<DistMatrix, DeviceOom> {
     let p = world.size();
     assert_eq!(a.mode, b.mode);
@@ -97,16 +166,16 @@ pub fn multiply_tall_skinny(
     let mut out = engine.finish(world);
     let mut c_local = out.remove(0);
 
-    // the O(1) exchange: one allreduce of C
+    // the O(1) exchange: one allreduce of C, over the selected transport
     match mode {
         Mode::Real => {
             let data = c_local.store.data().to_vec();
-            let summed = world.allreduce_sum_f32(Payload::F32(data)).into_f32();
+            let summed = allreduce_c(world, Payload::F32(data), transport).into_f32();
             c_local.store.data_mut().copy_from_slice(&summed);
         }
         Mode::Model => {
             let bytes = c_local.store.wire_bytes();
-            let _ = world.allreduce_sum_f32(Payload::Phantom { bytes });
+            let _ = allreduce_c(world, Payload::Phantom { bytes }, transport);
         }
     }
 
@@ -133,6 +202,20 @@ mod tests {
     use crate::util::prop::assert_allclose;
 
     fn ts_case(p: usize, m: usize, n: usize, k: usize, block: usize, densify: bool, threads: usize) {
+        ts_case_t(p, m, n, k, block, densify, threads, Transport::TwoSided);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn ts_case_t(
+        p: usize,
+        m: usize,
+        n: usize,
+        k: usize,
+        block: usize,
+        densify: bool,
+        threads: usize,
+        transport: Transport,
+    ) {
         let out = run_ranks(p, NetModel::aries(2), move |world| {
             let (a, b) = ts_operands(m, n, k, block, &world, Mode::Real, 31, 32);
             let mut engine = LocalEngine::new(
@@ -147,7 +230,7 @@ mod tests {
                 None,
                 1,
             );
-            let c = multiply_tall_skinny(&world, &a, &b, &mut engine).unwrap();
+            let c = multiply_tall_skinny(&world, &a, &b, &mut engine, transport).unwrap();
             c.local.store.data().to_vec()
         });
         let ar = dense_reference(&BlockLayout::new(m, block), &BlockLayout::new(k, block), 31);
@@ -210,6 +293,15 @@ mod tests {
     }
 
     #[test]
+    fn ts_one_sided_reduction_matches_reference() {
+        // the RMA put/close reduction (gather epoch + spread epoch)
+        // end to end
+        ts_case_t(2, 8, 8, 64, 4, true, 2, Transport::OneSided);
+        ts_case_t(4, 10, 10, 50, 4, true, 2, Transport::OneSided);
+        ts_case_t(1, 8, 8, 32, 4, false, 1, Transport::OneSided);
+    }
+
+    #[test]
     fn ts_comm_is_o1_in_k() {
         // comm bytes must not grow with K (the algorithm's whole point)
         let bytes_for = |k: usize| {
@@ -226,7 +318,8 @@ mod tests {
                     None,
                     1,
                 );
-                let _ = multiply_tall_skinny(&world, &a, &b, &mut engine).unwrap();
+                let _ = multiply_tall_skinny(&world, &a, &b, &mut engine, Transport::TwoSided)
+                    .unwrap();
                 world.stats().bytes_sent
             });
             out.iter().sum::<u64>()

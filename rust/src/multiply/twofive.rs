@@ -12,7 +12,8 @@
 //! `c`-fold operand memory and one |C|-sized reduction.
 //!
 //! Two operand layouts are accepted, detected per matrix:
-//! * **native** (built by [`twofive_operands`], or any matrix whose
+//! * **native** (built by [`twofive_operands`] or a
+//!   [`super::session::PipelineSession`] admit, or any matrix whose
 //!   blocks already sit at this layer's tick-`s0` skewed positions):
 //!   panels extract locally, no skew traffic — the steady-state layout a
 //!   repeated-multiply workload (CP2K SCF) keeps between calls;
@@ -31,7 +32,7 @@ use std::collections::{BTreeMap, BTreeSet};
 use crate::backend::gpu_sim::DeviceOom;
 use crate::dist::{sum_payloads, Grid3D, Payload, RmaWindow, Transport};
 use crate::matrix::matrix::block_rng;
-use crate::matrix::{BlockLayout, BlockStore, DistMatrix, Distribution, LocalCsr, Mode};
+use crate::matrix::{BlockLayout, DistMatrix, Distribution, LocalCsr, Mode};
 use crate::util::even_chunk;
 
 use super::cannon::{
@@ -41,13 +42,15 @@ use super::cannon::{
 use super::engine::LocalEngine;
 use super::vgrid::{lcm, VGrid};
 
-/// Message tags of this driver (cannon uses 10–13).
+/// Message tags of this driver (cannon uses 10–13, the resident-session
+/// pre-skew 18–19).
 const TAG_SKEW_A: u64 = 14;
 const TAG_SKEW_B: u64 = 15;
 const TAG_SHIFT_A: u64 = 16;
 const TAG_SHIFT_B: u64 = 17;
 
-/// RMA window ids of this driver (cannon uses 1–4).
+/// RMA window ids of this driver (cannon uses 1–4, the resident-session
+/// pre-skew 11–12, tall-skinny's reduction 13).
 const WIN_SKEW_A: u64 = 5;
 const WIN_SKEW_B: u64 = 6;
 const WIN_SHIFT_A: u64 = 7;
@@ -65,6 +68,69 @@ pub fn sweep_period(rows: usize, cols: usize, layers: usize) -> usize {
 /// Tick range `[s0, s0 + len)` owned by `layer`.
 pub fn layer_ticks(period: usize, layers: usize, layer: usize) -> (usize, usize) {
     even_chunk(period, layers, layer)
+}
+
+/// One operand's canonical→native skew routing: the held initial panels
+/// (extracted from the canonical share), where each is sent, and which
+/// panels this rank expects — consumed by `exchange` /
+/// `rma_exchange_start`.
+pub(super) type SkewPlan = (BTreeMap<Key, LocalCsr>, Vec<(usize, Key)>, Vec<(usize, Key)>);
+
+/// A-panel keys a rank holds in the native layout of a sweep starting
+/// at tick `s0` (one per slot, deduped). Shared by the driver and the
+/// resident-session pre-skew (`multiply::session`) so the two can never
+/// disagree on where native panels live.
+pub(super) fn a_start_keys(vg: &VGrid, slots: &[(usize, usize)], s0: usize) -> Vec<Key> {
+    let mut keys: Vec<Key> = slots
+        .iter()
+        .map(|&(i, j)| (i, vg.group_at(i, j, s0)))
+        .collect();
+    keys.sort_unstable();
+    keys.dedup();
+    keys
+}
+
+/// B-panel mirror of [`a_start_keys`].
+pub(super) fn b_start_keys(vg: &VGrid, slots: &[(usize, usize)], s0: usize) -> Vec<Key> {
+    let mut keys: Vec<Key> = slots
+        .iter()
+        .map(|&(i, j)| (vg.group_at(i, j, s0), j))
+        .collect();
+    keys.sort_unstable();
+    keys.dedup();
+    keys
+}
+
+/// Build the A-operand skew routing from the canonical layout to the
+/// tick-`s0` native positions given the target `keys` (from
+/// [`a_start_keys`]).
+pub(super) fn a_skew_plan(m: &DistMatrix, vg: &VGrid, s0: usize, keys: &[Key]) -> SkewPlan {
+    let held: BTreeMap<Key, LocalCsr> = vg
+        .a_initial()
+        .into_iter()
+        .map(|(i, g)| ((i, g), extract_panel(m, vg, i, g)))
+        .collect();
+    let sends: Vec<(usize, Key)> = held
+        .keys()
+        .map(|&(i, g)| (vg.a_skew_col_at(i, g, s0), (i, g)))
+        .collect();
+    let recvs: Vec<(usize, Key)> = keys.iter().map(|&(i, g)| (g % vg.pc, (i, g))).collect();
+    (held, sends, recvs)
+}
+
+/// B-operand mirror of [`a_skew_plan`] (skew runs along grid columns).
+pub(super) fn b_skew_plan(m: &DistMatrix, vg: &VGrid, s0: usize, keys: &[Key]) -> SkewPlan {
+    let held: BTreeMap<Key, LocalCsr> = vg
+        .b_initial()
+        .into_iter()
+        .map(|(g, j)| ((g, j), extract_panel(m, vg, g, j)))
+        .collect();
+    let sends: Vec<(usize, Key)> = held
+        .keys()
+        .map(|&(g, j)| (vg.b_skew_row_at(g, j, s0), (g, j)))
+        .collect();
+    let recvs: Vec<(usize, Key)> = keys.iter().map(|&(g, j)| (g % vg.pr, (g, j))).collect();
+    (held, sends, recvs)
 }
 
 /// Multiply `C = A · B` with the 2.5D algorithm. Collective over the 3-D
@@ -95,18 +161,8 @@ pub fn multiply_twofive(
 
     let slots = vg.slots();
     // one A and one B panel per slot at the layer's start tick
-    let mut a_keys: Vec<Key> = slots
-        .iter()
-        .map(|&(i, j)| (i, vg.group_at(i, j, s0)))
-        .collect();
-    a_keys.sort_unstable();
-    a_keys.dedup();
-    let mut b_keys: Vec<Key> = slots
-        .iter()
-        .map(|&(i, j)| (vg.group_at(i, j, s0), j))
-        .collect();
-    b_keys.sort_unstable();
-    b_keys.dedup();
+    let a_keys = a_start_keys(&vg, &slots, s0);
+    let b_keys = b_start_keys(&vg, &slots, s0);
 
     // ---- acquire start-position panels (local or skew exchange) ----------
     // layout agreement: the exchange is pairwise within a row/column
@@ -130,38 +186,10 @@ pub fn multiply_twofive(
             check_layer_replicas(g3, b, "B");
         }
     }
-    // exchange plans for canonical operands (held panels + routing)
-    type Plan = (BTreeMap<Key, LocalCsr>, Vec<(usize, Key)>, Vec<(usize, Key)>);
-    let a_plan: Option<Plan> = if a_native {
-        None
-    } else {
-        let held: BTreeMap<Key, LocalCsr> = vg
-            .a_initial()
-            .into_iter()
-            .map(|(i, g)| ((i, g), extract_panel(a, &vg, i, g)))
-            .collect();
-        let sends: Vec<(usize, Key)> = held
-            .keys()
-            .map(|&(i, g)| (vg.a_skew_col_at(i, g, s0), (i, g)))
-            .collect();
-        let recvs: Vec<(usize, Key)> = a_keys.iter().map(|&(i, g)| (g % vg.pc, (i, g))).collect();
-        Some((held, sends, recvs))
-    };
-    let b_plan: Option<Plan> = if b_native {
-        None
-    } else {
-        let held: BTreeMap<Key, LocalCsr> = vg
-            .b_initial()
-            .into_iter()
-            .map(|(g, j)| ((g, j), extract_panel(b, &vg, g, j)))
-            .collect();
-        let sends: Vec<(usize, Key)> = held
-            .keys()
-            .map(|&(g, j)| (vg.b_skew_row_at(g, j, s0), (g, j)))
-            .collect();
-        let recvs: Vec<(usize, Key)> = b_keys.iter().map(|&(g, j)| (g % vg.pr, (g, j))).collect();
-        Some((held, sends, recvs))
-    };
+    // exchange plans for canonical operands (held panels + routing),
+    // built by the same helpers the resident-session pre-skew uses
+    let a_plan: Option<SkewPlan> = (!a_native).then(|| a_skew_plan(a, &vg, s0, &a_keys));
+    let b_plan: Option<SkewPlan> = (!b_native).then(|| b_skew_plan(b, &vg, s0, &b_keys));
     let extract_a = || {
         a_keys
             .iter()
@@ -411,14 +439,8 @@ pub fn twofive_operands(
     let vg = VGrid::with_period(g3.rows, g3.cols, lv, r, c);
     let (s0, _) = layer_ticks(lv, g3.layers, g3.layer);
     let slots = vg.slots();
-    let a_keys: BTreeSet<Key> = slots
-        .iter()
-        .map(|&(i, j)| (i, vg.group_at(i, j, s0)))
-        .collect();
-    let b_keys: BTreeSet<Key> = slots
-        .iter()
-        .map(|&(i, j)| (vg.group_at(i, j, s0), j))
-        .collect();
+    let a_keys: BTreeSet<Key> = a_start_keys(&vg, &slots, s0).into_iter().collect();
+    let b_keys: BTreeSet<Key> = b_start_keys(&vg, &slots, s0).into_iter().collect();
     let a = native_matrix(
         g3,
         &vg,
@@ -474,39 +496,16 @@ fn native_matrix(
         }
     }
     let pattern: Vec<(usize, usize)> = pat.into_iter().collect();
-    // build the CSR index directly: phantom storage must never allocate
-    // elements, and paper-scale model runs hold c·|A|/P of them per rank
-    let nr = row_ids.len();
-    let mut row_ptr = vec![0usize; nr + 1];
-    for &(lr, _) in &pattern {
-        row_ptr[lr + 1] += 1;
-    }
-    for lr in 0..nr {
-        row_ptr[lr + 1] += row_ptr[lr];
-    }
-    let col_idx: Vec<usize> = pattern.iter().map(|&(_, lc)| lc).collect();
-    let store = match mode {
-        Mode::Model => BlockStore::phantom(
-            pattern
-                .iter()
-                .map(|&(lr, lc)| (row_sizes[lr] * col_sizes[lc]) as u64)
-                .sum(),
-        ),
-        Mode::Real => BlockStore::zeros(
-            pattern
-                .iter()
-                .map(|&(lr, lc)| row_sizes[lr] * col_sizes[lc]),
-        ),
-    };
-    let mut local = LocalCsr {
+    // shared index construction (phantom storage never allocates
+    // elements — paper-scale model runs hold c·|A|/P of them per rank)
+    let mut local = LocalCsr::from_pattern_store(
         row_ids,
         col_ids,
         row_sizes,
         col_sizes,
-        row_ptr,
-        col_idx,
-        store,
-    };
+        &pattern,
+        mode == Mode::Model,
+    );
     debug_assert!(local.check_invariants().is_ok());
     match mode {
         Mode::Model => {}

@@ -59,8 +59,20 @@ pub struct PlanSummary {
     pub cols: usize,
     pub layers: usize,
     /// Who decided: "model" (planner argmin), "layout" (operand-layout
-    /// resolution of `Algorithm::Auto`), or "explicit" (caller-fixed).
+    /// resolution of `Algorithm::Auto`), "resident" (a
+    /// `PipelineSession` steady-state call), or "explicit"
+    /// (caller-fixed).
     pub source: &'static str,
+    /// Whether the one-time A/B layer replication was charged to this
+    /// plan's objective. `true` for cold one-shot plans; `false` for
+    /// steady-state candidates (operands layer-resident, replication
+    /// amortized) — without this field `--plan-verbose` and
+    /// `MultiplyStats::plan` would mislabel steady-state plans as
+    /// one-shot.
+    pub charged_replication: bool,
+    /// The multiply count the plan was priced for (1 = one-shot; > 1 =
+    /// a steady-state horizon amortizing the replication).
+    pub horizon: usize,
     /// Planner prediction for the executed plan (0 when no cost model
     /// covers the algorithm, e.g. tall-skinny).
     pub predicted_seconds: f64,
@@ -85,6 +97,16 @@ pub struct MultiplyStats {
     /// communication (receives / RMA epoch closes) — the transport
     /// comparison metric of `bench_fig_2p5d`.
     pub comm_wait_s: f64,
+    /// Bytes of operand-residency setup (2.5D layer replication +
+    /// pre-skew into the native layout) — the `repl_` bucket, charged
+    /// once per admitted operand by whoever makes it resident
+    /// (`PipelineSession::admit`, the harness's in-run replication, a
+    /// Newton step re-admitting its product). Always 0 on the per-call
+    /// counters of a steady-state `multiply_resident`, which is the
+    /// amortization the bucket makes observable.
+    pub repl_bytes: u64,
+    /// Virtual seconds of the same residency setup.
+    pub repl_s: f64,
     /// Bytes staged host→device.
     pub h2d_bytes: u64,
     /// Bytes staged device→host.
@@ -109,6 +131,8 @@ impl MultiplyStats {
         self.comm_bytes += o.comm_bytes;
         self.comm_msgs += o.comm_msgs;
         self.comm_wait_s += o.comm_wait_s;
+        self.repl_bytes += o.repl_bytes;
+        self.repl_s += o.repl_s;
         self.h2d_bytes += o.h2d_bytes;
         self.d2h_bytes += o.d2h_bytes;
         self.densify_bytes += o.densify_bytes;
@@ -153,18 +177,24 @@ mod tests {
             stacks: 1,
             flops: 100,
             dev_mem_peak: 50,
+            repl_bytes: 10,
+            repl_s: 0.25,
             ..Default::default()
         };
         let b = MultiplyStats {
             stacks: 2,
             flops: 200,
             dev_mem_peak: 30,
+            repl_bytes: 5,
+            repl_s: 0.5,
             ..Default::default()
         };
         a.merge(&b);
         assert_eq!(a.stacks, 3);
         assert_eq!(a.flops, 300);
         assert_eq!(a.dev_mem_peak, 50);
+        assert_eq!(a.repl_bytes, 15);
+        assert_eq!(a.repl_s, 0.75);
     }
 
     #[test]
@@ -175,6 +205,8 @@ mod tests {
             cols: 4,
             layers,
             source: "model",
+            charged_replication: true,
+            horizon: 1,
             predicted_seconds: 1.0,
             predicted_comm_s: 0.5,
         };

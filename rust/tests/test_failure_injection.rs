@@ -95,6 +95,7 @@ fn fig2_oom_annotation_reproduced() {
             transport: Transport::TwoSided,
             algo: AlgoSpec::Layout,
             plan_verbose: false,
+            iterations: 1,
         })
     };
     let oom = point(1, 12);

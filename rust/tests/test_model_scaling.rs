@@ -23,6 +23,7 @@ fn model_point(nodes: usize, rpn: usize, threads: usize, block: usize, sq: bool,
         transport: Transport::TwoSided,
         algo: AlgoSpec::Layout,
         plan_verbose: false,
+        iterations: 1,
     });
     assert!(!r.oom, "unexpected OOM");
     r.seconds
@@ -75,6 +76,7 @@ fn dbcsr_beats_pdgemm_and_gap_grows_for_small_blocks() {
             transport: Transport::TwoSided,
             algo: AlgoSpec::Layout,
             plan_verbose: false,
+            iterations: 1,
         });
         assert!(!r.oom);
         r.seconds

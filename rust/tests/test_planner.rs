@@ -51,6 +51,7 @@ fn spec16(shape: Shape, transport: Transport, algo: AlgoSpec) -> RunSpec {
         transport,
         algo,
         plan_verbose: false,
+        iterations: 1,
     }
 }
 
@@ -108,6 +109,116 @@ fn auto_never_regresses_vs_cannon() {
             );
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// steady-state planner vs measurement, 16 ranks
+// ---------------------------------------------------------------------------
+
+fn steady16(shape: Shape, transport: Transport, algo: AlgoSpec, iterations: usize) -> RunSpec {
+    RunSpec {
+        iterations,
+        ..spec16(shape, transport, algo)
+    }
+}
+
+/// Measured steady objective: one residency setup + N resident
+/// multiplies, per rank, max over ranks.
+fn measured_steady(shape: Shape, transport: Transport, c: usize, iterations: usize) -> f64 {
+    let r = run_spec(steady16(
+        shape,
+        transport,
+        AlgoSpec::TwoFiveD { layers: c },
+        iterations,
+    ));
+    assert!(!r.oom, "{shape:?} {transport} c={c} x{iterations} must not OOM");
+    r.total_seconds
+}
+
+#[test]
+fn steady_auto_within_ten_percent_of_measured_best_c_at_horizon() {
+    let shape = Shape::Square { n: 1408 };
+    for transport in [Transport::TwoSided, Transport::OneSided] {
+        for iterations in [4usize, 12] {
+            let fixed: Vec<(usize, f64)> = [1usize, 2, 4]
+                .iter()
+                .map(|&c| (c, measured_steady(shape, transport, c, iterations)))
+                .collect();
+            let &(best_c, best) = fixed
+                .iter()
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            let auto = run_spec(steady16(shape, transport, AlgoSpec::Auto, iterations));
+            assert!(!auto.oom);
+            let plan = auto.plan.clone().expect("steady auto must surface its plan");
+            assert_eq!(plan.source, "model");
+            assert_eq!(plan.horizon, iterations);
+            assert!(plan.charged_replication, "cold horizon charges the setup");
+            assert!(
+                auto.total_seconds <= best * 1.10,
+                "{shape:?} {transport} x{iterations}: steady auto chose c={} \
+                 ({:.4}ms) — more than 10% over the measured best c={best_c} \
+                 ({:.4}ms); fixed sweep: {fixed:?}",
+                plan.layers,
+                auto.total_seconds * 1e3,
+                best * 1e3,
+            );
+        }
+    }
+}
+
+#[test]
+fn steady_horizon_makes_layers_win_end_to_end() {
+    // the acceptance contract: at a long enough two-sided horizon the
+    // measured-best fixed c is > 1 (replication amortized), the steady
+    // planner selects it (within the 10% bound above), and the resident
+    // run beats the unamortized Cannon loop
+    let shape = Shape::Square { n: 1408 };
+    let iterations = 12usize;
+    let fixed: Vec<(usize, f64)> = [1usize, 2, 4]
+        .iter()
+        .map(|&c| {
+            (
+                c,
+                measured_steady(shape, Transport::TwoSided, c, iterations),
+            )
+        })
+        .collect();
+    let &(best_c, best) = fixed
+        .iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    assert!(
+        best_c > 1,
+        "a 12-multiply horizon must amortize replication into a c > 1 win: {fixed:?}"
+    );
+    let auto = run_spec(steady16(
+        shape,
+        Transport::TwoSided,
+        AlgoSpec::Auto,
+        iterations,
+    ));
+    let plan = auto.plan.clone().unwrap();
+    assert!(
+        auto.total_seconds <= best * 1.10,
+        "steady auto (c={}) must track the c={best_c} win: {} vs {}",
+        plan.layers,
+        auto.total_seconds,
+        best
+    );
+    let cannon = run_spec(steady16(
+        shape,
+        Transport::TwoSided,
+        AlgoSpec::Cannon,
+        iterations,
+    ));
+    assert!(
+        auto.total_seconds < cannon.total_seconds,
+        "the steady pipeline must beat the per-call Cannon loop \
+         ({} vs {})",
+        auto.total_seconds,
+        cannon.total_seconds
+    );
 }
 
 // ---------------------------------------------------------------------------
@@ -198,6 +309,7 @@ fn plan_input(p: usize, m: usize, n: usize, k: usize, transport: Transport) -> P
         gpu_share: 4,
         threads: 3,
         charge_replication: true,
+        horizon: 1,
     }
 }
 

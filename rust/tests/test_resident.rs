@@ -1,0 +1,224 @@
+//! Integration: steady-state accounting of the resident-operand
+//! pipeline (`multiply::session`). The contract pinned here, on 16
+//! ranks for c ∈ {1, 2, 4} under both transports:
+//!
+//! * the per-iteration wire bytes of `multiply_resident` equal the
+//!   non-replication bytes of a bare `multiply_twofive` on native
+//!   operands **exactly** (same driver, same skew-free panel flow);
+//! * every iteration costs the same bytes (no hidden per-call setup);
+//! * the N-iteration session total equals exactly one residency setup
+//!   (replication broadcast + pre-skew, the `repl_` bucket) plus
+//!   N per-iteration multiplies — the amortization identity;
+//! * per-call `repl_bytes` is 0 on every resident multiply.
+
+use dbcsr::dist::{run_ranks, Grid2D, Grid3D, NetModel, Transport};
+use dbcsr::matrix::matrix::Fill;
+use dbcsr::matrix::{DistMatrix, Mode};
+use dbcsr::multiply::planner::grid_shape;
+use dbcsr::multiply::session::{PipelineSession, Sides};
+use dbcsr::multiply::twofive::twofive_operands;
+use dbcsr::multiply::{multiply, Algorithm, EngineOpts, MultiplyConfig};
+
+const DIM: usize = 704;
+const BLOCK: usize = 22;
+const P: usize = 16;
+const ITERS: usize = 3;
+
+fn cfg(algorithm: Algorithm, transport: Transport) -> MultiplyConfig {
+    MultiplyConfig {
+        engine: EngineOpts {
+            threads: 3,
+            densify: true,
+            ..Default::default()
+        },
+        algorithm,
+        transport,
+        ..Default::default()
+    }
+}
+
+/// Per-rank comm bytes of one bare `multiply_twofive` on native
+/// (`twofive_operands`) matrices — the fixed-c non-replication cost.
+fn bare_native_bytes(layers: usize, transport: Transport) -> Vec<u64> {
+    let (rows, cols) = grid_shape(P / layers);
+    run_ranks(P, NetModel::aries(4), move |world| {
+        let g3 = Grid3D::new(world, rows, cols, layers);
+        let (a, b) = twofive_operands(&g3, DIM, DIM, DIM, BLOCK, Mode::Model, 1, 2);
+        let grid = Grid2D::new(g3.world.clone(), 4, 4);
+        let out = multiply(
+            &grid,
+            &a,
+            &b,
+            &cfg(Algorithm::TwoFiveD { layers }, transport),
+        )
+        .unwrap();
+        assert_eq!(out.stats.repl_bytes, 0, "bare multiply never replicates");
+        out.stats.comm_bytes
+    })
+}
+
+/// Per-rank (setup bytes, per-iteration bytes × ITERS, total world
+/// bytes) of a session serving ITERS resident multiplies.
+fn session_bytes(layers: usize, transport: Transport) -> Vec<(u64, Vec<u64>, u64)> {
+    let (rows, cols) = grid_shape(P / layers);
+    run_ranks(P, NetModel::aries(4), move |world| {
+        let g3 = Grid3D::new(world, rows, cols, layers);
+        let coords = g3.grid.coords();
+        let a = DistMatrix::dense_cyclic(
+            DIM,
+            DIM,
+            BLOCK,
+            (rows, cols),
+            coords,
+            Mode::Model,
+            Fill::Zero,
+        );
+        let b = a.clone();
+        let total0 = g3.world.stats().bytes_sent;
+        let world_view = g3.world.clone();
+        let mut sess =
+            PipelineSession::new(g3, cfg(Algorithm::TwoFiveD { layers }, transport));
+        let (ra, rb) = sess.admit_pair(a, b);
+        let setup = sess.repl_bytes();
+        let mut per_iter = Vec::with_capacity(ITERS);
+        for _ in 0..ITERS {
+            let out = sess.multiply_resident(&ra, &rb).unwrap();
+            assert_eq!(out.stats.repl_bytes, 0, "resident calls never replicate");
+            per_iter.push(out.stats.comm_bytes);
+        }
+        let total = world_view.stats().bytes_sent - total0;
+        (setup, per_iter, total)
+    })
+}
+
+#[test]
+fn per_iteration_bytes_equal_bare_native_multiply_exactly() {
+    for transport in [Transport::TwoSided, Transport::OneSided] {
+        for layers in [1usize, 2, 4] {
+            let bare = bare_native_bytes(layers, transport);
+            let sess = session_bytes(layers, transport);
+            for (rank, ((setup, per_iter, _), bare_rank)) in
+                sess.iter().zip(bare.iter()).enumerate()
+            {
+                // every iteration identical — no hidden per-call setup
+                for (i, &bytes) in per_iter.iter().enumerate() {
+                    assert_eq!(
+                        bytes, per_iter[0],
+                        "c={layers} {transport} rank {rank}: iteration {i} bytes drifted"
+                    );
+                }
+                // and exactly the bare fixed-c non-replication bytes
+                assert_eq!(
+                    per_iter[0], *bare_rank,
+                    "c={layers} {transport} rank {rank}: resident per-iteration bytes \
+                     must equal the bare native multiply"
+                );
+                let _ = setup; // per-rank setup may be 0 (identity skew)
+            }
+            // setup traffic is sender-charged, so assert it in aggregate:
+            // replication (c > 1) and/or the pre-skew must be booked
+            let setup_total: u64 = sess.iter().map(|(s, _, _)| *s).sum();
+            assert!(
+                setup_total > 0,
+                "c={layers} {transport}: residency setup must be booked"
+            );
+        }
+    }
+}
+
+#[test]
+fn n_iteration_total_is_one_setup_plus_n_multiplies() {
+    for transport in [Transport::TwoSided, Transport::OneSided] {
+        for layers in [1usize, 2, 4] {
+            let sess = session_bytes(layers, transport);
+            for (rank, (setup, per_iter, total)) in sess.iter().enumerate() {
+                let sum: u64 = setup + per_iter.iter().sum::<u64>();
+                assert_eq!(
+                    *total, sum,
+                    "c={layers} {transport} rank {rank}: session bytes must decompose \
+                     into one setup + {ITERS} multiplies exactly"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn session_cuts_cumulative_bytes_vs_per_call_twofive() {
+    // the amortization in volume terms: N resident iterations move less
+    // than N cold canonical calls (which re-replicate and re-skew)
+    let per_call = |layers: usize, transport: Transport| -> u64 {
+        use dbcsr::multiply::twofive::replicate_to_layers;
+        let (rows, cols) = grid_shape(P / layers);
+        run_ranks(P, NetModel::aries(4), move |world| {
+            let g3 = Grid3D::new(world, rows, cols, layers);
+            let coords = g3.grid.coords();
+            let b0 = g3.world.stats().bytes_sent;
+            for _ in 0..ITERS {
+                let mut a = DistMatrix::dense_cyclic(
+                    DIM,
+                    DIM,
+                    BLOCK,
+                    (rows, cols),
+                    coords,
+                    Mode::Model,
+                    Fill::Zero,
+                );
+                let mut b = a.clone();
+                replicate_to_layers(&g3, &mut a, transport);
+                replicate_to_layers(&g3, &mut b, transport);
+                let grid = Grid2D::new(g3.world.clone(), 4, 4);
+                multiply(
+                    &grid,
+                    &a,
+                    &b,
+                    &cfg(Algorithm::TwoFiveD { layers }, transport),
+                )
+                .unwrap();
+            }
+            g3.world.stats().bytes_sent - b0
+        })
+        .iter()
+        .sum()
+    };
+    for transport in [Transport::TwoSided, Transport::OneSided] {
+        for layers in [2usize, 4] {
+            let resident: u64 = session_bytes(layers, transport)
+                .iter()
+                .map(|(_, _, total)| *total)
+                .sum();
+            let cold = per_call(layers, transport);
+            assert!(
+                resident < cold,
+                "c={layers} {transport}: resident {resident} must undercut per-call {cold}"
+            );
+        }
+    }
+}
+
+#[test]
+fn resident_respects_sides() {
+    // admitting only the needed side works and A/B shares differ (the
+    // native layout is side-specific)
+    let out = run_ranks(8, NetModel::ideal(), |world| {
+        let g3 = Grid3D::new(world, 2, 2, 2);
+        let coords = g3.grid.coords();
+        let a = DistMatrix::dense_cyclic(64, 64, 8, (2, 2), coords, Mode::Model, Fill::Zero);
+        let mut sess = PipelineSession::new(g3, cfg(Algorithm::Auto, Transport::TwoSided));
+        let both = sess.admit(a, Sides::Both);
+        let sa = both.a_share().unwrap();
+        let sb = both.b_share().unwrap();
+        // same logical matrix, same local volume, side-specific layout
+        (
+            sa.local.elems() == sb.local.elems(),
+            sa.local.row_ids == sb.local.row_ids && sa.local.col_ids == sb.local.col_ids,
+        )
+    });
+    assert!(out.iter().all(|(same_volume, _)| *same_volume));
+    // the A skew follows columns, the B skew rows — on some rank the
+    // two native shares must land on different block sets
+    assert!(
+        out.iter().any(|(_, same_layout)| !*same_layout),
+        "A/B native shares should differ somewhere on a skewed grid"
+    );
+}

@@ -8,7 +8,7 @@ use dbcsr::dist::{run_ranks, Grid2D, Grid3D, NetModel, Transport};
 use dbcsr::matrix::matrix::Fill;
 use dbcsr::matrix::{DistMatrix, Mode};
 use dbcsr::multiply::twofive::{replicate_to_layers, twofive_operands};
-use dbcsr::multiply::{multiply, Algorithm, EngineOpts, MultiplyConfig};
+use dbcsr::multiply::{multiply, tall_skinny, Algorithm, EngineOpts, MultiplyConfig};
 
 fn cfg(
     algorithm: Algorithm,
@@ -168,6 +168,55 @@ fn one_sided_cuts_comm_wait_at_c2_and_c4() {
         assert!(
             secs_one <= secs_two * 1.001,
             "c={layers}: one-sided must not slow the multiply ({secs_one} vs {secs_two})"
+        );
+    }
+}
+
+fn ts_c_bits(transport: Transport) -> Vec<Vec<u32>> {
+    let (p, m, k, block) = (4usize, 12usize, 48usize, 4usize);
+    run_ranks(p, NetModel::aries(2), move |world| {
+        let (a, b) = tall_skinny::ts_operands(m, m, k, block, &world, Mode::Real, 51, 52);
+        let grid = Grid2D::new(world, 1, p);
+        let out = multiply(&grid, &a, &b, &cfg(Algorithm::TallSkinny, transport, 2, true))
+            .unwrap();
+        bits(out.c.local.store.data().to_vec())
+    })
+}
+
+#[test]
+fn tall_skinny_transports_bit_identical() {
+    // the RMA reduction (gather puts + spread puts, epoch-synced) sums
+    // in the same root-first ascending order as the two-sided star
+    assert_eq!(ts_c_bits(Transport::TwoSided), ts_c_bits(Transport::OneSided));
+}
+
+#[test]
+fn tall_skinny_one_sided_gap_is_exactly_the_epoch_syncs() {
+    // the TS reduction is a single dependency chain — no A/B transfer
+    // pair to overlap — so the RMA path's modeled difference is exactly
+    // its epoch-sync latencies: one α at the root (the gather close)
+    // and 2α at each peer (the root's spread puts issue after its sync,
+    // and the peer's own close adds another). Per-rank wire volume is
+    // identical across transports.
+    let net = NetModel::aries(2);
+    let point = |transport: Transport| {
+        run_ranks(8, net, move |world| {
+            let (a, b) = tall_skinny::ts_operands(64, 64, 1024, 16, &world, Mode::Model, 1, 2);
+            let grid = Grid2D::new(world, 1, 8);
+            let out = multiply(&grid, &a, &b, &cfg(Algorithm::TallSkinny, transport, 2, true))
+                .unwrap();
+            (out.stats.comm_bytes, out.stats.comm_wait_s)
+        })
+    };
+    let two = point(Transport::TwoSided);
+    let one = point(Transport::OneSided);
+    for r in 0..8 {
+        assert_eq!(one[r].0, two[r].0, "rank {r}: per-rank volume must match");
+        let gap = one[r].1 - two[r].1;
+        let want = if r == 0 { net.latency } else { 2.0 * net.latency };
+        assert!(
+            (gap - want).abs() < 1e-15,
+            "rank {r}: wait gap {gap} vs expected {want}"
         );
     }
 }
