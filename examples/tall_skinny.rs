@@ -59,6 +59,7 @@ fn main() {
             transport: Transport::TwoSided,
             algo: AlgoSpec::Layout,
             plan_verbose: false,
+            occupancy: 1.0,
             iterations: 1,
         });
         t.row(vec![name.to_string(), fmt_secs(r.seconds)]);

@@ -47,6 +47,7 @@ fn main() {
             transport: Transport::TwoSided,
             algo: AlgoSpec::Layout,
             plan_verbose: false,
+            occupancy: 1.0,
             iterations: 1,
         });
         t.row(vec![

@@ -156,6 +156,8 @@ fn auto_point(dim: usize, transport: Transport, fixed: &[Point]) -> (Point, usiz
         threads: 3,
         charge_replication: true,
         horizon: 1,
+        occ_a: 1.0,
+        occ_b: 1.0,
     };
     let plan = planner::choose_plan(&input);
     let chosen = plan.layers;

@@ -50,6 +50,7 @@ fn spec(dim: usize, transport: Transport, algo: AlgoSpec, iterations: usize) -> 
         transport,
         algo,
         plan_verbose: false,
+        occupancy: 1.0,
         iterations,
     }
 }
@@ -177,6 +178,8 @@ fn main() {
                 threads: 3,
                 charge_replication: true,
                 horizon: 1,
+                occ_a: 1.0,
+                occ_b: 1.0,
             };
             let plan = planner::choose_plan_steady(&input, n);
             let measured = points

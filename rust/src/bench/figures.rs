@@ -54,6 +54,7 @@ pub fn fig2(scale: usize, mode: Mode) -> Vec<Table> {
                     transport: Transport::TwoSided,
                     algo: AlgoSpec::Layout,
                     plan_verbose: false,
+                    occupancy: 1.0,
                     iterations: 1,
                 });
                 cells.push(fmt_secs(r.seconds));
@@ -98,6 +99,7 @@ pub fn fig3(scale: usize, mode: Mode) -> Vec<Table> {
                         transport: Transport::TwoSided,
                         algo: AlgoSpec::Layout,
                         plan_verbose: false,
+                        occupancy: 1.0,
                         iterations: 1,
                     });
                     pair.push(r.seconds);
@@ -150,6 +152,7 @@ pub fn fig4(scale: usize, mode: Mode, blocks: &[usize], square_only: bool) -> Ve
                         transport: Transport::TwoSided,
                         algo: AlgoSpec::Layout,
                         plan_verbose: false,
+                        occupancy: 1.0,
                         iterations: 1,
                     });
                     pair.push(r.seconds);

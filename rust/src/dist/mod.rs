@@ -43,6 +43,11 @@ pub mod rma;
 
 pub use rma::{RmaWindow, Transport};
 
+/// Bytes per phantom element (the paper's f64) — mirrors
+/// `matrix::MODEL_ELEM_BYTES`, duplicated here because the substrate
+/// must not depend on the matrix layer.
+const MODEL_PAYLOAD_ELEM_BYTES: u64 = 8;
+
 /// What travels in a message: real data, or phantom byte counts (model
 /// mode — same control flow, no element storage).
 #[derive(Clone, Debug, PartialEq)]
@@ -53,8 +58,16 @@ pub enum Payload {
     /// A flat f32 buffer (dense panels, reduction operands).
     F32(Vec<f32>),
     /// Block-structured data: an i64 index stream plus the element data
-    /// (the CSR-panel wire format used by the Cannon exchanges).
+    /// (the sparse-panel wire format of `multiply::sparse_exchange` —
+    /// per-panel block-count header and per-block (row, col, area)
+    /// records, block payloads concatenated in CSR order).
     Blocks { index: Vec<i64>, data: Vec<f32> },
+    /// Model-mode counterpart of [`Payload::Blocks`]: the metadata
+    /// stream travels for real (it defines the receiver's sparse
+    /// pattern), the element payload is phantom — `elems` elements at
+    /// the paper's f64 accounting. This is what makes model-mode panel
+    /// traffic occupancy-proportional instead of dense-sized.
+    SparseBlocks { index: Vec<i64>, elems: u64 },
 }
 
 impl Payload {
@@ -66,6 +79,23 @@ impl Payload {
             Payload::Phantom { bytes } => *bytes,
             Payload::F32(v) => 4 * v.len() as u64,
             Payload::Blocks { index, data } => 8 * index.len() as u64 + 4 * data.len() as u64,
+            Payload::SparseBlocks { index, elems } => {
+                8 * index.len() as u64 + MODEL_PAYLOAD_ELEM_BYTES * elems
+            }
+        }
+    }
+
+    /// The metadata share of [`Payload::wire_bytes`]: the block-index
+    /// stream of the sparse wire format (zero for flat payloads). Booked
+    /// into [`CommStats::meta_bytes`] by every send, so the overhead of
+    /// shipping sparsity patterns is observable next to the element
+    /// traffic.
+    pub fn meta_bytes(&self) -> u64 {
+        match self {
+            Payload::Blocks { index, .. } | Payload::SparseBlocks { index, .. } => {
+                8 * index.len() as u64
+            }
+            _ => 0,
         }
     }
 
@@ -130,6 +160,10 @@ impl NetModel {
 pub struct CommStats {
     pub bytes_sent: u64,
     pub msgs_sent: u64,
+    /// The metadata share of `bytes_sent`: block-index streams of the
+    /// sparse-panel wire format ([`Payload::meta_bytes`]). Always
+    /// ≤ `bytes_sent`; the difference is element payload.
+    pub meta_bytes: u64,
     /// Virtual seconds this rank's clock advanced *while blocked on
     /// communication* (two-sided receives and RMA epoch closes) — the
     /// modeled receiver-side stall the one-sided transport exists to
@@ -215,6 +249,8 @@ struct RankState {
     now: Cell<f64>,
     bytes_sent: Cell<u64>,
     msgs_sent: Cell<u64>,
+    /// Metadata share of `bytes_sent` (sparse-panel index streams).
+    meta_sent: Cell<u64>,
     /// Accumulated comm-attributed clock advances (see
     /// [`CommStats::wait_seconds`]).
     wait_s: Cell<f64>,
@@ -304,6 +340,7 @@ impl CommView {
         CommStats {
             bytes_sent: self.state.bytes_sent.get(),
             msgs_sent: self.state.msgs_sent.get(),
+            meta_bytes: self.state.meta_sent.get(),
             wait_seconds: self.state.wait_s.get(),
         }
     }
@@ -326,6 +363,9 @@ impl CommView {
             .bytes_sent
             .set(self.state.bytes_sent.get() + bytes);
         self.state.msgs_sent.set(self.state.msgs_sent.get() + 1);
+        self.state
+            .meta_sent
+            .set(self.state.meta_sent.get() + payload.meta_bytes());
         let ready = self.now() + self.shared.net.transit_seconds(bytes);
         self.shared
             .push((self.my_world(), self.members[dst], tag), Msg { payload, ready });
@@ -659,6 +699,41 @@ mod tests {
         assert_eq!(out[0].bytes_sent, 4096 + 16);
         assert_eq!(out[0].msgs_sent, 2);
         assert_eq!(out[1].bytes_sent, 0);
+    }
+
+    #[test]
+    fn meta_bytes_track_sparse_index_streams() {
+        let out = run_ranks(2, NetModel::ideal(), |c| {
+            if c.rank() == 0 {
+                c.send(
+                    1,
+                    1,
+                    Payload::Blocks {
+                        index: vec![1, 0, 0, 4],
+                        data: vec![0.0; 4],
+                    },
+                );
+                c.send(
+                    1,
+                    1,
+                    Payload::SparseBlocks {
+                        index: vec![1, 0, 0, 9],
+                        elems: 9,
+                    },
+                );
+                c.send(1, 1, Payload::F32(vec![0.0; 4]));
+            } else {
+                for _ in 0..3 {
+                    let _ = c.recv(0, 1);
+                }
+            }
+            c.stats()
+        });
+        // Blocks: 4*8 index + 4*4 data; SparseBlocks: 4*8 index + 9*8
+        // phantom elems; F32 carries no metadata
+        assert_eq!(out[0].bytes_sent, (32 + 16) + (32 + 72) + 16);
+        assert_eq!(out[0].meta_bytes, 32 + 32);
+        assert_eq!(out[1].meta_bytes, 0);
     }
 
     #[test]

@@ -193,6 +193,7 @@ impl RmaWindow {
         let st = &self.comm.state;
         st.bytes_sent.set(st.bytes_sent.get() + bytes);
         st.msgs_sent.set(st.msgs_sent.get() + 1);
+        st.meta_sent.set(st.meta_sent.get() + payload.meta_bytes());
         let start = self.comm.now().max(at);
         self.comm
             .wait_to(start + self.comm.shared.net.transit_seconds(bytes));

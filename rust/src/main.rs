@@ -10,15 +10,18 @@
 //!   run --nodes N --rpn R --threads T --block B --shape square|rect
 //!       --engine dbcsr|dbcsr-blocked|pdgemm [--scale N] [--real]
 //!       [--algorithm layout|auto|cannon|2.5d] [--layers C]
-//!       [--iterations N] [--plan-verbose]
+//!       [--occupancy X] [--iterations N] [--plan-verbose]
 //!                             one experiment point (`auto` picks the
 //!                             2.5D replication factor through the
-//!                             planner; --iterations > 1 runs the
+//!                             planner; --occupancy < 1 runs the
+//!                             Cannon/2.5D family block-sparse with the
+//!                             occupancy-aware planner and the sparse
+//!                             wire format; --iterations > 1 runs the
 //!                             steady-state pipeline — operands go
 //!                             layer-resident once and every iteration
 //!                             skips replication and skew;
 //!                             --plan-verbose prints the candidate
-//!                             table)
+//!                             table and the achieved occupancies)
 
 use dbcsr::bench::figures;
 use dbcsr::bench::harness::{run_spec, AlgoSpec, Engine, RunSpec, Shape};
@@ -200,11 +203,25 @@ fn run_file(args: &Args) {
                 other => panic!("algorithm = layout|auto|cannon|2.5d, got {other:?}"),
             },
             plan_verbose: false,
+            occupancy: cf
+                .get(&format!("{section}.occupancy"))
+                .or_else(|| cf.get("defaults.occupancy"))
+                .map(|v| {
+                    let occ = v
+                        .parse::<f64>()
+                        .expect("occupancy must be a float in (0, 1]");
+                    assert!(
+                        occ > 0.0 && occ <= 1.0,
+                        "occupancy must be in (0, 1], got {occ}"
+                    );
+                    occ
+                })
+                .unwrap_or(1.0),
             iterations: get(section, "iterations", 1),
         };
         let r = run_spec(spec);
         println!(
-            "[{section}] {}{} (stacks {}, comm {:.1} MiB{})",
+            "[{section}] {}{} (stacks {}, comm {:.1} MiB{}{})",
             fmt_secs(r.seconds),
             if r.iterations > 1 {
                 format!(" / {} iters + setup {}", r.iterations, fmt_secs(r.repl_seconds))
@@ -213,6 +230,14 @@ fn run_file(args: &Args) {
             },
             r.stats.stacks,
             r.stats.comm_bytes as f64 / (1 << 20) as f64,
+            if r.stats.a_total_blocks > 0 && (r.occupancy_a < 1.0 || r.occupancy_b < 1.0) {
+                format!(
+                    ", occ A {:.4} B {:.4} C {:.4}",
+                    r.occupancy_a, r.occupancy_b, r.occupancy_c
+                )
+            } else {
+                String::new()
+            },
             if r.oom { ", OOM" } else { "" }
         );
     }
@@ -253,6 +278,14 @@ fn run_one(args: &Args, scale: usize, mode: Mode) {
         },
         other => panic!("--algorithm auto|layout|cannon|2.5d, got {other:?}"),
     };
+    let occupancy = args
+        .flag("occupancy")
+        .map(|v| v.parse::<f64>().expect("--occupancy must be a float in (0, 1]"))
+        .unwrap_or(1.0);
+    assert!(
+        occupancy > 0.0 && occupancy <= 1.0,
+        "--occupancy must be in (0, 1], got {occupancy}"
+    );
     let spec = RunSpec {
         nodes: args.usize_flag("nodes", 1),
         rpn,
@@ -265,6 +298,7 @@ fn run_one(args: &Args, scale: usize, mode: Mode) {
         transport,
         algo,
         plan_verbose: args.switch("plan-verbose"),
+        occupancy,
         iterations: args.usize_flag("iterations", 1),
     };
     println!("spec: {spec:?}");
@@ -316,15 +350,24 @@ fn run_one(args: &Args, scale: usize, mode: Mode) {
         r.wall,
     );
     println!(
-        "stacks {}  block_mults {}  flops {:.3e}  comm {:.1} MiB in {} msgs (wait {:.3}s)  densify {:.1} MiB  dev peak {:.2} GiB{}",
+        "stacks {}  block_mults {}  flops {:.3e}  comm {:.1} MiB in {} msgs (wait {:.3}s, meta {:.2} MiB)  densify {:.1} MiB  dev peak {:.2} GiB{}",
         r.stats.stacks,
         r.stats.block_mults,
         r.stats.flops as f64,
         r.stats.comm_bytes as f64 / (1 << 20) as f64,
         r.stats.comm_msgs,
         r.stats.comm_wait_s,
+        r.stats.meta_bytes as f64 / (1 << 20) as f64,
         r.stats.densify_bytes as f64 / (1 << 20) as f64,
         r.stats.dev_mem_peak as f64 / (1 << 30) as f64,
         if r.oom { "  ** OOM **" } else { "" }
     );
+    if r.stats.a_total_blocks > 0
+        && (r.occupancy_a < 1.0 || r.occupancy_b < 1.0 || r.stats.filtered_blocks > 0)
+    {
+        println!(
+            "occupancy A {:.4} B {:.4} -> C {:.4}  ({} result blocks filtered)",
+            r.occupancy_a, r.occupancy_b, r.occupancy_c, r.stats.filtered_blocks
+        );
+    }
 }

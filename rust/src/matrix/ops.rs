@@ -77,6 +77,53 @@ impl DistMatrix {
             .into_f32()[0]
     }
 
+    /// On-the-fly filtering (DBCSR §II): drop every present block whose
+    /// Frobenius norm falls below `eps`, rebuilding the local CSR index
+    /// over the survivors. Returns the number of dropped blocks. Local
+    /// and deterministic (no communication, no data-dependent order), so
+    /// filtered results stay bit-identical across transports. A no-op
+    /// for `eps <= 0` and for model mode (phantom blocks carry no norms).
+    pub fn filter_blocks(&mut self, eps: f32) -> u64 {
+        if eps <= 0.0 || self.mode == Mode::Model {
+            return 0;
+        }
+        let mut kept: Vec<(usize, usize)> = Vec::new();
+        let mut dropped = 0u64;
+        for (b, r, c) in self.local.iter_nnz() {
+            let area = self.local.area_of(r, c);
+            let norm_sq: f64 = self
+                .local
+                .store
+                .block(b, area)
+                .iter()
+                .map(|&x| (x as f64) * (x as f64))
+                .sum();
+            if norm_sq.sqrt() >= eps as f64 {
+                kept.push((r, c));
+            } else {
+                dropped += 1;
+            }
+        }
+        if dropped == 0 {
+            return 0;
+        }
+        let mut filtered = super::csr::LocalCsr::from_pattern(
+            self.local.row_ids.clone(),
+            self.local.col_ids.clone(),
+            self.local.row_sizes.clone(),
+            self.local.col_sizes.clone(),
+            &kept,
+        );
+        for (b, r, c) in filtered.iter_nnz().collect::<Vec<_>>() {
+            let area = filtered.area_of(r, c);
+            let src_b = self.local.find(r, c).expect("kept block");
+            let src = self.local.store.block(src_b, area).to_vec();
+            filtered.store.block_mut(b, area).copy_from_slice(&src);
+        }
+        self.local = filtered;
+        dropped
+    }
+
     /// Distributed elementwise dot product ⟨self, other⟩. Collective.
     pub fn dot(&self, other: &DistMatrix, world: &CommView) -> f32 {
         assert_eq!(self.local.nnz(), other.local.nnz(), "pattern mismatch");
@@ -414,5 +461,51 @@ mod tests {
         for t in out {
             assert!((t - 30.0).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn filter_drops_small_blocks_and_rebuilds_index() {
+        let mut m = DistMatrix::dense_cyclic(
+            12,
+            12,
+            4,
+            (1, 1),
+            (0, 0),
+            Mode::Real,
+            Fill::Value(0.0),
+        );
+        // block (0,0) large, (1,1) tiny, (2,2) exactly at eps
+        let set = |m: &mut DistMatrix, r: usize, c: usize, v: f32| {
+            let b = m.local.find(r, c).unwrap();
+            m.local.store.block_mut(b, 16).fill(v);
+        };
+        set(&mut m, 0, 0, 1.0);
+        set(&mut m, 1, 1, 1e-8);
+        set(&mut m, 2, 2, 0.25); // norm = sqrt(16·0.0625) = 1.0
+        let dropped = m.filter_blocks(1.0);
+        // 9 blocks: (0,0) kept (norm 4), (2,2) kept (norm exactly eps),
+        // the 7 others (zero or tiny) dropped
+        assert_eq!(dropped, 7);
+        assert_eq!(m.local.nnz(), 2);
+        assert!(m.local.find(0, 0).is_some());
+        assert!(m.local.find(2, 2).is_some());
+        assert!(m.local.find(1, 1).is_none());
+        m.local.check_invariants().unwrap();
+        let b = m.local.find(0, 0).unwrap();
+        assert!(m.local.store.block(b, 16).iter().all(|&x| x == 1.0));
+        // idempotent
+        assert_eq!(m.filter_blocks(1.0), 0);
+    }
+
+    #[test]
+    fn filter_is_a_noop_for_zero_eps_and_model_mode() {
+        let mut m =
+            DistMatrix::dense_cyclic(8, 8, 4, (1, 1), (0, 0), Mode::Real, Fill::Zero);
+        assert_eq!(m.filter_blocks(0.0), 0);
+        assert_eq!(m.local.nnz(), 4);
+        let mut pm =
+            DistMatrix::dense_cyclic(8, 8, 4, (1, 1), (0, 0), Mode::Model, Fill::Zero);
+        assert_eq!(pm.filter_blocks(1.0), 0);
+        assert_eq!(pm.local.nnz(), 4);
     }
 }

@@ -34,6 +34,28 @@ pub fn sparse_random(
     occupancy: f64,
     seed: u64,
 ) -> DistMatrix {
+    sparse_pattern(
+        rows, cols, row_dist, col_dist, coords, occupancy, seed, Mode::Real,
+    )
+}
+
+/// Mode-aware [`sparse_random`]: real mode fills present blocks with the
+/// deterministic per-block stream; model mode builds the same pattern
+/// over phantom storage, so paper-scale sparse simulations carry
+/// occupancy-proportional element accounting without the memory. An
+/// `occupancy` of 1.0 produces the dense pattern without consulting the
+/// predicate (bit-identical to the dense constructors' pattern).
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_pattern(
+    rows: BlockLayout,
+    cols: BlockLayout,
+    row_dist: Distribution,
+    col_dist: Distribution,
+    coords: (usize, usize),
+    occupancy: f64,
+    seed: u64,
+    mode: Mode,
+) -> DistMatrix {
     let row_ids = row_dist.owned_blocks(coords.0, rows.nblocks);
     let col_ids = col_dist.owned_blocks(coords.1, cols.nblocks);
     let row_sizes: Vec<usize> = row_ids.iter().map(|&i| rows.block_size(i)).collect();
@@ -43,29 +65,38 @@ pub fn sparse_random(
     let mut nonzeros = Vec::new();
     for (lr, &gi) in row_ids.iter().enumerate() {
         for (lc, &gj) in col_ids.iter().enumerate() {
-            if block_present(seed, gi, gj, occupancy) {
+            if occupancy >= 1.0 || block_present(seed, gi, gj, occupancy) {
                 nonzeros.push((lr, lc));
             }
         }
     }
-    let mut local = LocalCsr::from_pattern(row_ids, col_ids, row_sizes, col_sizes, &nonzeros);
+    let mut local = LocalCsr::from_pattern_store(
+        row_ids,
+        col_ids,
+        row_sizes,
+        col_sizes,
+        &nonzeros,
+        mode == Mode::Model,
+    );
 
-    // fill present blocks deterministically (same stream as dense fill)
-    let blocks: Vec<(usize, usize, usize, usize)> = local
-        .iter_nnz()
-        .map(|(b, r, c)| {
-            (
-                b,
-                local.row_ids[r],
-                local.col_ids[c],
-                local.area_of(r, c),
-            )
-        })
-        .collect();
-    for (b, gi, gj, area) in blocks {
-        let mut rng: Rng = block_rng(seed, gi, gj);
-        for x in local.store.block_mut(b, area) {
-            *x = rng.next_f32_sym();
+    if mode == Mode::Real {
+        // fill present blocks deterministically (same stream as dense fill)
+        let blocks: Vec<(usize, usize, usize, usize)> = local
+            .iter_nnz()
+            .map(|(b, r, c)| {
+                (
+                    b,
+                    local.row_ids[r],
+                    local.col_ids[c],
+                    local.area_of(r, c),
+                )
+            })
+            .collect();
+        for (b, gi, gj, area) in blocks {
+            let mut rng: Rng = block_rng(seed, gi, gj);
+            for x in local.store.block_mut(b, area) {
+                *x = rng.next_f32_sym();
+            }
         }
     }
 
@@ -76,7 +107,7 @@ pub fn sparse_random(
         col_dist,
         coords,
         local,
-        mode: Mode::Real,
+        mode,
     }
 }
 
@@ -178,6 +209,30 @@ mod tests {
         fn check_sparse_invariants(&self) {
             self.local.check_invariants().unwrap();
         }
+    }
+
+    #[test]
+    fn model_pattern_matches_real_and_counts_nnz_only() {
+        let mk = |mode| {
+            sparse_pattern(
+                BlockLayout::new(80, 10),
+                BlockLayout::new(80, 10),
+                Distribution::cyclic(2),
+                Distribution::cyclic(2),
+                (1, 0),
+                0.3,
+                13,
+                mode,
+            )
+        };
+        let r = mk(Mode::Real);
+        let m = mk(Mode::Model);
+        assert!(m.local.store.is_phantom());
+        assert_eq!(r.local.nnz(), m.local.nnz());
+        assert_eq!(r.local.col_idx, m.local.col_idx);
+        assert_eq!(r.local.elems(), m.local.elems());
+        // phantom elements are nnz-proportional, not dense-sized
+        assert_eq!(m.local.elems(), m.local.nnz() as u64 * 100);
     }
 
     #[test]

@@ -25,17 +25,20 @@
 use std::collections::BTreeMap;
 
 use crate::backend::gpu_sim::DeviceOom;
-use crate::dist::{CommView, Grid2D, Payload, RmaWindow, Transport};
+use crate::dist::{CommView, Grid2D, RmaWindow, Transport};
 use crate::matrix::{DistMatrix, Distribution, LocalCsr, Mode};
 
 use super::engine::LocalEngine;
+use super::sparse_exchange::{
+    accumulate_pattern, assemble_c_sparse, pack_panels as pack, unpack_panels as unpack, CPattern,
+};
 use super::vgrid::VGrid;
 
 /// Panel key: (virtual row, group) for A; (group, virtual col) for B.
-pub(super) type Key = (usize, usize);
+pub(super) type Key = super::sparse_exchange::Key;
 
 /// Panel block metadata: (row ids, col ids, row sizes, col sizes).
-pub(super) type PanelMeta = (Vec<usize>, Vec<usize>, Vec<usize>, Vec<usize>);
+pub(super) type PanelMeta = super::sparse_exchange::PanelMeta;
 
 /// RMA window ids of this driver (twofive uses 5–10, the
 /// resident-session pre-skew 11–12, tall-skinny's reduction 13; message
@@ -149,12 +152,14 @@ pub fn multiply_cannon(
     };
 
     // ---- ticks -------------------------------------------------------------
+    let mut c_pats: Vec<CPattern> = vec![CPattern::new(); slots.len()];
     for s in 0..vg.l {
         for (idx, &(i, j)) in slots.iter().enumerate() {
             let g = vg.group_at(i, j, s);
             let ap = &a_panels[&(i, g)];
             let bp = &b_panels[&(g, j)];
             engine.tick(&grid.world, idx, ap, bp)?;
+            accumulate_pattern(&mut c_pats[idx], ap, bp);
         }
         if s + 1 < vg.l {
             // shift all A panels one column left, B panels one row up
@@ -190,15 +195,16 @@ pub fn multiply_cannon(
         }
     }
 
-    // ---- assemble C ---------------------------------------------------------
+    // ---- assemble C (sparse: only symbolic-pattern blocks) -----------------
     let out_panels = engine.finish(&grid.world);
-    Ok(assemble_c(
+    Ok(assemble_c_sparse(
         a,
         b,
         (grid.rows, grid.cols),
         (r, c),
         mode,
         &out_panels,
+        &c_pats,
         true,
     ))
 }
@@ -224,46 +230,6 @@ pub(super) fn build_c_slots(
             }
         })
         .collect()
-}
-
-/// Assemble the output C matrix (cyclic over `grid_dims`) from finished
-/// slot panels; `copy_data` selects whether this rank's panels hold the
-/// result (real mode) or the share stays zero (model mode, or non-root
-/// 2.5D layers whose partial C was reduced away).
-pub(super) fn assemble_c(
-    a: &DistMatrix,
-    b: &DistMatrix,
-    grid_dims: (usize, usize),
-    coords: (usize, usize),
-    mode: Mode,
-    out_panels: &[LocalCsr],
-    copy_data: bool,
-) -> DistMatrix {
-    let mut cmat = DistMatrix::dense(
-        a.rows.clone(),
-        b.cols.clone(),
-        Distribution::cyclic(grid_dims.0),
-        Distribution::cyclic(grid_dims.1),
-        coords,
-        mode,
-        crate::matrix::matrix::Fill::Zero,
-    );
-    if mode == Mode::Real && copy_data {
-        for panel in out_panels {
-            for (pb, pr_, pc_) in panel.iter_nnz() {
-                let (gi, gj) = (panel.row_ids[pr_], panel.col_ids[pc_]);
-                let area = panel.area_of(pr_, pc_);
-                let lr = cmat.local.row_ids.binary_search(&gi).expect("C row");
-                let lc = cmat.local.col_ids.binary_search(&gj).expect("C col");
-                let bi = cmat.local.find(lr, lc).expect("dense C");
-                cmat.local
-                    .store
-                    .block_mut(bi, area)
-                    .copy_from_slice(panel.store.block(pb, area));
-            }
-        }
-    }
-    cmat
 }
 
 fn check_cyclic(m: &DistMatrix, grid: &Grid2D) {
@@ -295,39 +261,44 @@ pub(super) fn panel_meta(
 
 /// Extract panel (x, y) from the matrix's local blocks (they are local by
 /// construction of the initial panel sets). The panel inherits the
-/// matrix's sparsity pattern — absent blocks stay absent, so the blocked
-/// engine skips them and the densified copies zero-fill them.
+/// matrix's sparsity pattern **in both modes** — absent blocks stay
+/// absent, so the blocked engine skips them, the densified copies
+/// zero-fill them, and model-mode phantom panels account only their
+/// present blocks' elements (occupancy-proportional traffic).
 pub(super) fn extract_panel(m: &DistMatrix, vg: &VGrid, x: usize, y: usize) -> LocalCsr {
     let (rows, cols, rs, cs) = panel_meta(m, vg, x, y);
-    match m.mode {
-        Mode::Model => LocalCsr::dense_phantom(rows, cols, rs, cs),
-        Mode::Real => {
-            // restrict the matrix's local pattern to this panel
-            let mut nonzeros = Vec::new();
-            for (pr_, &gi) in rows.iter().enumerate() {
-                let lr = m.local.row_ids.binary_search(&gi).expect("panel row local");
-                for (pc_, &gj) in cols.iter().enumerate() {
-                    let lc = m.local.col_ids.binary_search(&gj).expect("panel col local");
-                    if m.local.find(lr, lc).is_some() {
-                        nonzeros.push((pr_, pc_));
-                    }
-                }
+    // fully dense model shares keep the O(1) fast path (paper-scale
+    // dense model runs must not enumerate block pairs per panel)
+    if m.mode == Mode::Model && m.local.nnz() == m.local.nrows() * m.local.ncols() {
+        return LocalCsr::dense_phantom(rows, cols, rs, cs);
+    }
+    // restrict the matrix's local pattern to this panel
+    let mut nonzeros = Vec::new();
+    for (pr_, &gi) in rows.iter().enumerate() {
+        let lr = m.local.row_ids.binary_search(&gi).expect("panel row local");
+        for (pc_, &gj) in cols.iter().enumerate() {
+            let lc = m.local.col_ids.binary_search(&gj).expect("panel col local");
+            if m.local.find(lr, lc).is_some() {
+                nonzeros.push((pr_, pc_));
             }
-            let mut p = LocalCsr::from_pattern(rows, cols, rs, cs, &nonzeros);
-            // copy blocks directly (no intermediate allocation — this is
-            // a per-tick hot path at large panel counts)
-            for (pb, pr_, pc_) in p.iter_nnz().collect::<Vec<_>>() {
-                let (gi, gj) = (p.row_ids[pr_], p.col_ids[pc_]);
-                let lr = m.local.row_ids.binary_search(&gi).unwrap();
-                let lc = m.local.col_ids.binary_search(&gj).unwrap();
-                let mb = m.local.find(lr, lc).unwrap();
-                let area = p.area_of(pr_, pc_);
-                let src = m.local.store.block(mb, area);
-                p.store.block_mut(pb, area).copy_from_slice(src);
-            }
-            p
         }
     }
+    let mut p =
+        LocalCsr::from_pattern_store(rows, cols, rs, cs, &nonzeros, m.mode == Mode::Model);
+    if m.mode == Mode::Real {
+        // copy blocks directly (no intermediate allocation — this is
+        // a per-tick hot path at large panel counts)
+        for (pb, pr_, pc_) in p.iter_nnz().collect::<Vec<_>>() {
+            let (gi, gj) = (p.row_ids[pr_], p.col_ids[pc_]);
+            let lr = m.local.row_ids.binary_search(&gi).unwrap();
+            let lc = m.local.col_ids.binary_search(&gj).unwrap();
+            let mb = m.local.find(lr, lc).unwrap();
+            let area = p.area_of(pr_, pc_);
+            let src = m.local.store.block(mb, area);
+            p.store.block_mut(pb, area).copy_from_slice(src);
+        }
+    }
+    p
 }
 
 /// Shared routing step of the skew exchanges (both transports): group
@@ -582,82 +553,6 @@ where
     let mut out = BTreeMap::new();
     unpack(received, next_keys, &meta, mode, &mut out);
     out
-}
-
-pub(super) fn pack(held: &mut BTreeMap<Key, LocalCsr>, keys: &[Key], mode: Mode) -> Payload {
-    match mode {
-        Mode::Model => {
-            let bytes: u64 = keys
-                .iter()
-                .map(|k| held.remove(k).expect("held panel").store.wire_bytes())
-                .sum();
-            Payload::Phantom { bytes }
-        }
-        Mode::Real => {
-            // wire format per panel: [nnz, (local row, local col)*nnz] in
-            // the index stream, block data concatenated in CSR order —
-            // sparse panels travel with their pattern
-            let mut index = Vec::new();
-            let mut data = Vec::new();
-            for k in keys {
-                let p = held.remove(k).expect("held panel");
-                index.push(p.nnz() as i64);
-                for (_, r, c) in p.iter_nnz() {
-                    index.push(r as i64);
-                    index.push(c as i64);
-                }
-                data.extend_from_slice(p.store.data());
-            }
-            Payload::Blocks { index, data }
-        }
-    }
-}
-
-pub(super) fn unpack<F>(
-    payload: Payload,
-    keys: &[Key],
-    meta: &F,
-    mode: Mode,
-    out: &mut BTreeMap<Key, LocalCsr>,
-) where
-    F: Fn(&Key) -> PanelMeta,
-{
-    match mode {
-        Mode::Model => {
-            debug_assert!(payload.is_phantom() || payload == Payload::Empty);
-            for k in keys {
-                let (rows, cols, rs, cs) = meta(k);
-                out.insert(*k, LocalCsr::dense_phantom(rows, cols, rs, cs));
-            }
-        }
-        Mode::Real => {
-            let (index, data) = payload.into_blocks();
-            let mut ix = 0usize;
-            let mut off = 0usize;
-            for k in keys {
-                let (rows, cols, rs, cs) = meta(k);
-                let nnz = index[ix] as usize;
-                ix += 1;
-                let mut nonzeros = Vec::with_capacity(nnz);
-                for _ in 0..nnz {
-                    nonzeros.push((index[ix] as usize, index[ix + 1] as usize));
-                    ix += 2;
-                }
-                let mut p = LocalCsr::from_pattern(rows, cols, rs, cs, &nonzeros);
-                let elems: usize = p
-                    .iter_nnz()
-                    .map(|(_, r, c)| p.area_of(r, c))
-                    .sum();
-                p.store
-                    .data_mut()
-                    .copy_from_slice(&data[off..off + elems]);
-                off += elems;
-                out.insert(*k, p);
-            }
-            debug_assert_eq!(off, data.len(), "panel split must consume message");
-            debug_assert_eq!(ix, index.len(), "index split must consume message");
-        }
-    }
 }
 
 /// Serialize helper for tests: total elements a panel set holds.

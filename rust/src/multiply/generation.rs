@@ -92,11 +92,49 @@ fn offsets(p: &LocalCsr) -> Vec<usize> {
     }
 }
 
-/// Model-mode generation: identical stack structure, computed from the
-/// panel dimension classes only.
+/// Model-mode generation: identical stack structure to [`generate_real`]
+/// without touching any data. Dense panels take the analytic path
+/// (dimension-class counting — paper-scale panels in microseconds);
+/// sparse panels count block triples by walking the symbolic product
+/// pattern, O(triples), so modeled compute scales with `occ_a · occ_b`
+/// exactly like the real generator's work.
 pub fn generate_model(a: &LocalCsr, b: &LocalCsr, threads: usize, cap: usize) -> Vec<Stack> {
     assert_eq!(a.col_ids, b.row_ids, "A cols must align with B rows");
     let threads = threads.max(1);
+    if a.nnz() < a.nrows() * a.ncols() || b.nnz() < b.nrows() * b.ncols() {
+        // sparse: triples exist iff both their A and B blocks do;
+        // per-class counts split by `cap` exactly as the real generator
+        // accumulates them, so the stack multiset matches
+        let mut counts: HashMap<(usize, usize, usize, usize), usize> = HashMap::new();
+        for (_, r, kk) in a.iter_nnz() {
+            let t = r % threads;
+            let m = a.row_sizes[r];
+            let k = a.col_sizes[kk];
+            for bi in b.row_ptr[kk]..b.row_ptr[kk + 1] {
+                let n = b.col_sizes[b.col_idx[bi]];
+                *counts.entry((t, m, n, k)).or_insert(0) += 1;
+            }
+        }
+        let mut keys: Vec<_> = counts.keys().copied().collect();
+        keys.sort_unstable();
+        let mut out = Vec::new();
+        for key in keys {
+            let (t, m, n, k) = key;
+            let mut left = counts[&key];
+            while left > 0 {
+                let take = left.min(cap);
+                out.push(Stack {
+                    m,
+                    n,
+                    k,
+                    thread: t,
+                    entries: StackEntries::Model { count: take },
+                });
+                left -= take;
+            }
+        }
+        return out;
+    }
     // rows per (thread, m) class
     let mut rows_t: HashMap<(usize, usize), usize> = HashMap::new();
     for (r, &m) in a.row_sizes.iter().enumerate() {
@@ -241,6 +279,66 @@ mod tests {
                     "threads={threads} cap={cap}"
                 );
                 // same multiset of (dims, thread, len)
+                let mut r: Vec<_> = real
+                    .iter()
+                    .map(|s| (s.m, s.n, s.k, s.thread, s.entries.len()))
+                    .collect();
+                let mut m: Vec<_> = model
+                    .iter()
+                    .map(|s| (s.m, s.n, s.k, s.thread, s.entries.len()))
+                    .collect();
+                r.sort_unstable();
+                m.sort_unstable();
+                assert_eq!(r, m, "threads={threads} cap={cap}");
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_model_matches_sparse_real_structure() {
+        // pattern-restricted panels: the model stacks must mirror the
+        // real generator's (dims, thread, len) multiset, which is what
+        // makes modeled compute occupancy-proportional
+        let rows = [22usize, 22, 6];
+        let ks = [22usize, 22];
+        let njs = [22usize, 4];
+        let a = LocalCsr::from_pattern(
+            (0..3).collect(),
+            (0..2).collect(),
+            rows.to_vec(),
+            ks.to_vec(),
+            &[(0, 0), (1, 1), (2, 0), (2, 1)],
+        );
+        let b = LocalCsr::from_pattern(
+            (0..2).collect(),
+            (0..2).collect(),
+            ks.to_vec(),
+            njs.to_vec(),
+            &[(0, 1), (1, 0)],
+        );
+        let c = dense_panel(&rows, &njs);
+        for threads in [1usize, 2, 3] {
+            for cap in [1usize, 3, STACK_CAP] {
+                let real = generate_real(&a, &b, &c, threads, cap);
+                let am = LocalCsr::from_pattern_store(
+                    (0..3).collect(),
+                    (0..2).collect(),
+                    rows.to_vec(),
+                    ks.to_vec(),
+                    &[(0, 0), (1, 1), (2, 0), (2, 1)],
+                    true,
+                );
+                let bm = LocalCsr::from_pattern_store(
+                    (0..2).collect(),
+                    (0..2).collect(),
+                    ks.to_vec(),
+                    njs.to_vec(),
+                    &[(0, 1), (1, 0)],
+                    true,
+                );
+                let model = generate_model(&am, &bm, threads, cap);
+                // 4 triples total: (0,0)(0,1); (1,1)(1,0); (2,0)(0,1); (2,1)(1,0)
+                assert_eq!(total_entries(&model), 4, "threads={threads}");
                 let mut r: Vec<_> = real
                     .iter()
                     .map(|s| (s.m, s.n, s.k, s.thread, s.entries.len()))

@@ -20,6 +20,7 @@ pub mod engine;
 pub mod generation;
 pub mod planner;
 pub mod session;
+pub mod sparse_exchange;
 pub mod tall_skinny;
 pub mod traversal;
 pub mod twofive;
@@ -70,6 +71,14 @@ pub struct MultiplyConfig {
     pub transport: Transport,
     /// Ranks sharing each node's GPU (the grid config's rank factor).
     pub gpu_share: usize,
+    /// On-the-fly filtering threshold (DBCSR §II): after the
+    /// accumulation, result blocks whose Frobenius norm falls below this
+    /// drop from C's pattern (`0.0` = keep everything). Real mode only —
+    /// phantom blocks carry no norms. Applied after the cross-layer
+    /// reduce, so partial sums are never dropped prematurely and results
+    /// stay bit-identical across transports; the dropped count and the
+    /// post-filter result occupancy land in `MultiplyStats`.
+    pub filter_eps: f32,
     /// Print the resolved plan (algorithm, layer grid, planner cost
     /// prediction) from rank 0 — the CLI's `--plan-verbose`. The same
     /// record is always attached to [`MultiplyStats::plan`] regardless.
@@ -86,6 +95,7 @@ impl Default for MultiplyConfig {
             algorithm: Algorithm::Auto,
             transport: Transport::TwoSided,
             gpu_share: 1,
+            filter_eps: 0.0,
             plan_verbose: false,
             runtime: None,
         }
@@ -219,6 +229,11 @@ fn plan_summary_for(
         // replication (if any) was charged by whoever built them
         charge_replication: false,
         horizon: 1,
+        // the executed plan is priced at the operands' achieved local
+        // occupancy (patterns are distribution-uniform, so the local
+        // fraction estimates the global one)
+        occ_a: a.local_occupancy(),
+        occ_b: b.local_occupancy(),
     };
     let cand = planner::predict_grid(&input, rows, cols, layers);
     PlanSummary {
@@ -274,7 +289,10 @@ pub fn multiply(
     );
     let t0 = world.now();
     let comm0 = world.stats();
-    let c = match alg {
+    // which ranks hold actual result data (2.5D non-root layers return a
+    // zero shell — filtering it would inflate the filtered-block stats)
+    let mut holds_result = true;
+    let mut c = match alg {
         Algorithm::TallSkinny => {
             tall_skinny::multiply_tall_skinny(world, a, b, &mut engine, cfg.transport)?
         }
@@ -285,21 +303,68 @@ pub fn multiply(
                 a.col_dist.nproc(),
                 layers,
             );
+            holds_result = g3.layer == 0;
             twofive::multiply_twofive(&g3, a, b, &mut engine, cfg.transport)?
         }
         _ => cannon::multiply_cannon(grid, a, b, &mut engine, cfg.transport)?,
+    };
+    // on-the-fly filtering: drop sub-eps result blocks after the full
+    // accumulation (and, for 2.5D, after the cross-layer reduce) — only
+    // where the reduced result actually lives
+    let filtered = if holds_result {
+        c.filter_blocks(cfg.filter_eps)
+    } else {
+        0
     };
     let comm1 = world.stats();
     let mut stats = engine.stats.clone();
     stats.comm_bytes = comm1.bytes_sent - comm0.bytes_sent;
     stats.comm_msgs = comm1.msgs_sent - comm0.msgs_sent;
     stats.comm_wait_s = comm1.wait_seconds - comm0.wait_seconds;
+    stats.meta_bytes = comm1.meta_bytes - comm0.meta_bytes;
     stats.plan = Some(plan);
+    book_sparse_stats(&mut stats, a, b, &c, filtered, holds_result);
+    if cfg.plan_verbose && world.rank() == 0 {
+        println!(
+            "[occupancy] A {:.4} B {:.4} -> C {:.4} ({} blocks filtered, meta {} B)",
+            stats.occupancy_a(),
+            stats.occupancy_b(),
+            stats.occupancy_c(),
+            stats.filtered_blocks,
+            stats.meta_bytes,
+        );
+    }
     Ok(MultiplyOutcome {
         c,
         stats,
         virtual_seconds: world.now() - t0,
     })
+}
+
+/// Record one multiply's sparse observability: operand occupancies, the
+/// (post-filter) result occupancy, and the filtered-block count. Shared
+/// by [`multiply`] and the session's resident path so `--plan-verbose`
+/// and the bench records report fill-in control identically everywhere.
+/// `holds_result` gates the C counters: 2.5D non-root layers return an
+/// unfiltered zero shell over their partial pattern, which must not
+/// dilute the reported (post-filter) result occupancy.
+pub(crate) fn book_sparse_stats(
+    stats: &mut MultiplyStats,
+    a: &DistMatrix,
+    b: &DistMatrix,
+    c: &DistMatrix,
+    filtered: u64,
+    holds_result: bool,
+) {
+    stats.filtered_blocks += filtered;
+    stats.a_nnz_blocks += a.local.nnz() as u64;
+    stats.a_total_blocks += (a.local.nrows() * a.local.ncols()) as u64;
+    stats.b_nnz_blocks += b.local.nnz() as u64;
+    stats.b_total_blocks += (b.local.nrows() * b.local.ncols()) as u64;
+    if holds_result {
+        stats.c_nnz_blocks += c.local.nnz() as u64;
+        stats.c_total_blocks += (c.local.nrows() * c.local.ncols()) as u64;
+    }
 }
 
 #[cfg(test)]

@@ -96,6 +96,18 @@ pub struct PlanInput {
     /// compute) repeat `horizon` times. This is what flips the argmin
     /// to `c > 1` once the horizon amortizes the setup.
     pub horizon: usize,
+    /// Block occupancy of the operands (fraction of present blocks,
+    /// 1.0 = dense). Every operand-proportional term — skew, shift,
+    /// replication bytes, staging, memory — scales linearly; the
+    /// compute estimate scales by `occ_a · occ_b` (the Generation
+    /// block-triple model: a triple exists iff both blocks do); and the
+    /// C reduce scales by the symbolic result fill
+    /// `1 − (1 − occ_a·occ_b)^(k/block)`. Sparsity therefore shrinks
+    /// 2.5D's per-call tax (the reduce) much faster than its savings
+    /// (the shift chain), which is what lets `Algorithm::Auto` flip to
+    /// `c > 1` earlier for sparse inputs (arXiv:1705.10218).
+    pub occ_a: f64,
+    pub occ_b: f64,
 }
 
 /// Wire bytes per element for a storage mode (phantom storage accounts
@@ -296,11 +308,18 @@ pub fn predict_grid(input: &PlanInput, rows: usize, cols: usize, layers: usize) 
     let net = input.net;
     let eb = input.elem_bytes as f64;
     let q = (rows * cols) as f64;
+    let occ_a = input.occ_a.clamp(0.0, 1.0);
+    let occ_b = input.occ_b.clamp(0.0, 1.0);
+    // symbolic result fill: a C block is present iff any of the k/block
+    // inner block pairs exists (the independent-pattern estimate)
+    let kb = (input.k / input.block.max(1)).max(1) as i32;
+    let occ_c = 1.0 - (1.0 - occ_a * occ_b).powi(kb);
     // per-rank operand/result shares: each layer replicates the whole
-    // matrix over its rows × cols grid
-    let bytes_a = eb * input.m as f64 * input.k as f64 / q;
-    let bytes_b = eb * input.k as f64 * input.n as f64 / q;
-    let bytes_c = eb * input.m as f64 * input.n as f64 / q;
+    // matrix over its rows × cols grid; occupancies scale the present
+    // fraction (wire metadata is ~0.3% of block payload and not modeled)
+    let bytes_a = eb * input.m as f64 * input.k as f64 / q * occ_a;
+    let bytes_b = eb * input.k as f64 * input.n as f64 / q * occ_b;
+    let bytes_c = eb * input.m as f64 * input.n as f64 / q * occ_c;
     let l = sweep_period(rows, cols, layers);
     let nticks = l / layers;
     debug_assert!(nticks > 0);
@@ -389,13 +408,19 @@ pub fn predict_grid(input: &PlanInput, rows: usize, cols: usize, layers: usize) 
     let pn = (input.n / l).max(1);
     let pk = (input.k / l).max(1);
     let slot_ticks = (l / rows) * (l / cols) * nticks;
-    let panel_bytes = (eb * (pm * pk + pk * pn) as f64).round() as u64;
+    let panel_bytes =
+        (eb * ((pm * pk) as f64 * occ_a + (pk * pn) as f64 * occ_b)).round() as u64;
     let nb = |d: usize| d.div_ceil(input.block.max(1)).max(1);
-    let gen_s = input.perf.entry_gen_cost * (nb(pm) * nb(pn) * nb(pk)) as f64
+    // block triples exist iff both their A and B blocks do — the
+    // Generation model's occupancy factor on both the enumeration and
+    // the executed flops
+    let sparse = occ_a * occ_b;
+    let gen_s = input.perf.entry_gen_cost * (nb(pm) * nb(pn) * nb(pk)) as f64 * sparse
         / input.threads.max(1) as f64;
     let per_tick = (input
         .perf
         .gpu_gemm_seconds(pm, pn, pk, input.gpu_share.max(1))
+        * sparse
         + gen_s)
         .max(input.perf.transfer_seconds(panel_bytes));
     let compute_s = h as f64
@@ -536,6 +561,8 @@ mod tests {
             threads: 3,
             charge_replication: true,
             horizon: 1,
+            occ_a: 1.0,
+            occ_b: 1.0,
         }
     }
 
@@ -727,6 +754,78 @@ mod tests {
         assert_eq!(cand.cost.skew_s, 0.0);
         assert_eq!(cand.cost.repl_bytes_per_rank, 0);
         assert!(cand.cost.reduce_s > 0.0);
+    }
+
+    #[test]
+    fn occupancy_scales_comm_and_collapses_the_reduce() {
+        let dense = input(16, 1408, 1408, 1408, Transport::TwoSided);
+        let mut sparse = dense.clone();
+        sparse.occ_a = 0.01;
+        sparse.occ_b = 0.01;
+        for c in [1usize, 2, 4] {
+            let (rows, cols) = grid_shape(16 / c);
+            let d = predict_grid(&dense, rows, cols, c).cost;
+            let s = predict_grid(&sparse, rows, cols, c).cost;
+            // operand traffic scales ~linearly with occupancy (per-hop
+            // latency α stays, so allow slack above the 1% byte ratio)
+            if c < 4 {
+                assert!(
+                    s.shift_s > 0.0 && s.shift_s <= 0.05 * d.shift_s,
+                    "c={c}: {s:?} vs {d:?}"
+                );
+            }
+            if c == 1 {
+                // no reduce at c = 1: the byte ratio is the occupancy
+                let ratio = s.comm_bytes_per_rank as f64 / d.comm_bytes_per_rank as f64;
+                assert!((ratio - 0.01).abs() < 1e-4, "ratio {ratio}");
+            }
+            // the reduce (2.5D's per-call tax) collapses ~quadratically:
+            // occ_c ≈ kb·occ² « occ at these sizes
+            if c > 1 {
+                assert!(s.reduce_s < 0.02 * d.reduce_s, "c={c}: {s:?} vs {d:?}");
+            }
+            assert!(s.mem_bytes_per_rank < d.mem_bytes_per_rank);
+        }
+    }
+
+    #[test]
+    fn occupancy_one_is_the_dense_model_exactly() {
+        let dense = input(16, 1408, 1408, 1408, Transport::OneSided);
+        let mut occ1 = dense.clone();
+        occ1.occ_a = 1.0;
+        occ1.occ_b = 1.0;
+        for c in [1usize, 2, 4, 8] {
+            let (rows, cols) = grid_shape(16 / c);
+            assert_eq!(
+                predict_grid(&dense, rows, cols, c).cost,
+                predict_grid(&occ1, rows, cols, c).cost
+            );
+        }
+    }
+
+    #[test]
+    fn sparse_inputs_flip_to_layers_at_a_shorter_horizon() {
+        // the 1705.10218 sparse-regime claim: with the C reduce
+        // collapsed by sparsity, the steady argmin reaches c > 1 at a
+        // smaller iteration count than the dense problem needs
+        let crossover = |occ: f64| -> usize {
+            for h in 1..=64 {
+                let mut inp = input(16, 1408, 1408, 1408, Transport::TwoSided);
+                inp.occ_a = occ;
+                inp.occ_b = occ;
+                if choose_plan_steady(&inp, h).layers > 1 {
+                    return h;
+                }
+            }
+            usize::MAX
+        };
+        let dense_h = crossover(1.0);
+        let sparse_h = crossover(0.01);
+        assert!(dense_h < usize::MAX, "dense must flip eventually");
+        assert!(
+            sparse_h <= dense_h,
+            "sparse crossover {sparse_h} must not come later than dense {dense_h}"
+        );
     }
 
     #[test]

@@ -323,13 +323,23 @@ impl PipelineSession {
         );
         let t0 = world.now();
         let comm0 = world.stats();
-        let c = multiply_twofive(&self.g3, am, bm, &mut engine, self.cfg.transport)?;
+        let mut c = multiply_twofive(&self.g3, am, bm, &mut engine, self.cfg.transport)?;
+        // on-the-fly filtering, after the cross-layer reduce — identical
+        // semantics to the one-shot `multiply()` path (layer 0 holds the
+        // reduced result; other layers' zero shells must not be counted)
+        let filtered = if self.g3.layer == 0 {
+            c.filter_blocks(self.cfg.filter_eps)
+        } else {
+            0
+        };
         let comm1 = world.stats();
         let mut stats = engine.stats.clone();
         stats.comm_bytes = comm1.bytes_sent - comm0.bytes_sent;
         stats.comm_msgs = comm1.msgs_sent - comm0.msgs_sent;
         stats.comm_wait_s = comm1.wait_seconds - comm0.wait_seconds;
+        stats.meta_bytes = comm1.meta_bytes - comm0.meta_bytes;
         stats.plan = Some(plan);
+        super::book_sparse_stats(&mut stats, am, bm, &c, filtered, self.g3.layer == 0);
         self.multiplies += 1;
         self.stats.merge(&stats);
         Ok(MultiplyOutcome {
@@ -356,6 +366,8 @@ impl PipelineSession {
             threads: self.cfg.engine.threads.max(1),
             charge_replication: false,
             horizon: 1,
+            occ_a: am.local_occupancy(),
+            occ_b: bm.local_occupancy(),
         };
         let cand =
             planner::predict_grid(&input, self.g3.rows, self.g3.cols, self.g3.layers);

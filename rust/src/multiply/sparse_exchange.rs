@@ -1,0 +1,701 @@
+//! Block-sparse exchange: the wire format that makes every panel
+//! transfer occupancy-proportional (DBCSR §I targets occupancies from
+//! 0.01% up to dense; the 2.5D lineage paper arXiv:1705.10218 shows the
+//! algorithm pays off fastest exactly in the sparse regime, where the
+//! cross-layer C reduce — 2.5D's tax — shrinks with the result fill).
+//!
+//! ## Wire format
+//!
+//! A message carries one or more panels, each serialized as
+//!
+//! ```text
+//! index stream (i64): nblocks, then per block (local row, local col, area)
+//!                     (a fully dense panel elides its records: one -1
+//!                      sentinel — dense transfers stay O(1) metadata)
+//! payload:            block elements concatenated in CSR order
+//! ```
+//!
+//! Real mode ships the payload as f32 data ([`Payload::Blocks`]); model
+//! mode ships the **index stream for real** (it defines the receiver's
+//! pattern) with a phantom element count ([`Payload::SparseBlocks`]) —
+//! so modeled traffic scales with nnz instead of the dense panel size.
+//! The index stream is booked separately as [`CommStats::meta_bytes`]
+//! (charged inside `CommView::send` / `RmaWindow::get`), so the price of
+//! shipping sparsity metadata is observable next to the element bytes.
+//!
+//! ## Result patterns and the C layer-reduce
+//!
+//! The engine accumulates into dense per-slot C panels (absent products
+//! simply never write), while the drivers track the **symbolic result
+//! pattern** per slot — one cheap pattern product per tick
+//! ([`accumulate_pattern`]). At the end of a 2.5D sweep
+//! [`reduce_c_layers`] ships only the blocks present in each layer's
+//! pattern and union-merges them on layer 0 **root-first, layers
+//! ascending** — the same summation order as the dense reduce, per
+//! block, on both transports, so C stays bit-identical across
+//! transports (and bit-identical to the old dense reduce for dense
+//! operands). [`assemble_c_sparse`] then builds the output C with the
+//! union pattern, so sparse multiplies return genuinely sparse results.
+//!
+//! [`CommStats::meta_bytes`]: crate::dist::CommStats
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::dist::{Grid3D, Payload, RmaWindow, Transport};
+use crate::matrix::{DistMatrix, Distribution, LocalCsr, Mode};
+
+/// Panel key: (virtual row, group) for A; (group, virtual col) for B.
+/// Structurally identical to `cannon::Key` — public so the wire-format
+/// tests can build panel maps.
+pub type Key = (usize, usize);
+
+/// Panel frame metadata: (row ids, col ids, row sizes, col sizes).
+pub type PanelMeta = (Vec<usize>, Vec<usize>, Vec<usize>, Vec<usize>);
+
+/// Message tag of the sparse C layer-reduce (cannon uses 10–13, twofive
+/// 14–17, the resident-session pre-skew 18–19).
+const TAG_REDUCE_C: u64 = 20;
+
+/// RMA window id of the sparse C layer-reduce (cannon uses 1–4, twofive
+/// 5–8 and 10, the resident-session pre-skew 11–12, tall-skinny 13).
+const WIN_REDUCE_C: u64 = 9;
+
+/// Header sentinel for a panel whose pattern is fully dense: the block
+/// records are elided (the receiver reconstructs the dense pattern from
+/// the frame). Keeps dense transfers at O(1) metadata — paper-scale
+/// dense model runs must not enumerate millions of block records per
+/// shift just to say "everything".
+const DENSE_PANEL: i64 = -1;
+
+/// Append one panel to the wire streams (shared by [`pack_panels`] and
+/// [`encode_share`]).
+fn pack_one(p: &LocalCsr, index: &mut Vec<i64>, data: &mut Vec<f32>, elems: &mut u64, mode: Mode) {
+    if p.nnz() == p.nrows() * p.ncols() && p.nnz() > 0 {
+        index.push(DENSE_PANEL);
+    } else {
+        index.push(p.nnz() as i64);
+        for (_, r, c) in p.iter_nnz() {
+            index.push(r as i64);
+            index.push(c as i64);
+            index.push(p.area_of(r, c) as i64);
+        }
+    }
+    match mode {
+        // the store's flat buffer is already in CSR nonzero order
+        Mode::Real => data.extend_from_slice(p.store.data()),
+        Mode::Model => *elems += p.store.elems(),
+    }
+}
+
+/// Serialize the panels of `keys` (removed from `held`, in key order)
+/// into one sparse-format message. Each panel contributes its block
+/// count, per-block (row, col, area) records (elided for fully dense
+/// panels), and — in real mode — its element data in CSR order; model
+/// mode ships the same index stream with a phantom element count, so
+/// transferred bytes scale with nnz in both modes.
+pub fn pack_panels(held: &mut BTreeMap<Key, LocalCsr>, keys: &[Key], mode: Mode) -> Payload {
+    let mut index: Vec<i64> = Vec::new();
+    let mut data: Vec<f32> = Vec::new();
+    let mut elems: u64 = 0;
+    for k in keys {
+        let p = held.remove(k).expect("held panel");
+        pack_one(&p, &mut index, &mut data, &mut elems, mode);
+    }
+    match mode {
+        Mode::Real => Payload::Blocks { index, data },
+        Mode::Model => Payload::SparseBlocks { index, elems },
+    }
+}
+
+/// Deserialize a [`pack_panels`] message back into `LocalCsr` panels,
+/// one per key (in key order). The pattern comes from the wire; `meta`
+/// supplies each panel's frame (block ids and sizes), against which the
+/// wire areas are validated. Model mode rebuilds pattern-accurate
+/// phantom panels, so subsequent sends of the received panels stay
+/// occupancy-proportional.
+pub fn unpack_panels<F>(
+    payload: Payload,
+    keys: &[Key],
+    meta: &F,
+    mode: Mode,
+    out: &mut BTreeMap<Key, LocalCsr>,
+) where
+    F: Fn(&Key) -> PanelMeta,
+{
+    let (index, data) = match (payload, mode) {
+        (Payload::Blocks { index, data }, Mode::Real) => (index, data),
+        (Payload::SparseBlocks { index, .. }, Mode::Model) => (index, Vec::new()),
+        (Payload::Empty, _) => (Vec::new(), Vec::new()),
+        (other, mode) => panic!("sparse unpack: unexpected payload {other:?} in {mode:?} mode"),
+    };
+    let mut ix = 0usize;
+    let mut off = 0usize;
+    for k in keys {
+        let (rows, cols, rs, cs) = meta(k);
+        let header = index[ix];
+        ix += 1;
+        let mut p = if header == DENSE_PANEL {
+            match mode {
+                Mode::Real => LocalCsr::dense(rows, cols, rs, cs),
+                Mode::Model => LocalCsr::dense_phantom(rows, cols, rs, cs),
+            }
+        } else {
+            let nblk = header as usize;
+            let mut nonzeros = Vec::with_capacity(nblk);
+            for _ in 0..nblk {
+                let (r, c, area) = (
+                    index[ix] as usize,
+                    index[ix + 1] as usize,
+                    index[ix + 2] as usize,
+                );
+                ix += 3;
+                debug_assert_eq!(area, rs[r] * cs[c], "wire area must match the panel frame");
+                nonzeros.push((r, c));
+            }
+            LocalCsr::from_pattern_store(rows, cols, rs, cs, &nonzeros, mode == Mode::Model)
+        };
+        if mode == Mode::Real {
+            let panel_elems = p.elems() as usize;
+            p.store
+                .data_mut()
+                .copy_from_slice(&data[off..off + panel_elems]);
+            off += panel_elems;
+        }
+        out.insert(*k, p);
+    }
+    debug_assert_eq!(ix, index.len(), "index split must consume the message");
+    debug_assert_eq!(off, data.len(), "panel split must consume the message");
+}
+
+/// Serialize one matrix's whole local share as a single-panel sparse
+/// message (pattern + data) — the replication payload of
+/// `twofive::replicate_to_layers`, which lets non-root layers **adopt**
+/// the root's pattern (required when a filtered result is re-admitted:
+/// only layer 0 knows which blocks survived).
+pub fn encode_share(m: &DistMatrix) -> Payload {
+    let mut index: Vec<i64> = Vec::new();
+    let mut data: Vec<f32> = Vec::new();
+    let mut elems: u64 = 0;
+    pack_one(&m.local, &mut index, &mut data, &mut elems, m.mode);
+    match m.mode {
+        Mode::Real => Payload::Blocks { index, data },
+        Mode::Model => Payload::SparseBlocks { index, elems },
+    }
+}
+
+/// Rebuild `m.local` from an [`encode_share`] message: same frame (block
+/// ids and sizes), the wire's pattern and data.
+pub fn decode_share_into(m: &mut DistMatrix, payload: Payload) {
+    let frame = (
+        m.local.row_ids.clone(),
+        m.local.col_ids.clone(),
+        m.local.row_sizes.clone(),
+        m.local.col_sizes.clone(),
+    );
+    let mut out = BTreeMap::new();
+    unpack_panels(payload, &[(0, 0)], &|_: &Key| frame.clone(), m.mode, &mut out);
+    m.local = out.remove(&(0, 0)).expect("decoded share");
+}
+
+/// The symbolic result pattern of one C slot, in slot-panel-local
+/// (row, col) coordinates. Dense products short-circuit to a `full`
+/// marker so paper-scale dense model runs never enumerate block pairs;
+/// sparse products accumulate an explicit set (O(symbolic triples) per
+/// tick — the same order as Generation's own walk).
+#[derive(Clone, Debug, Default)]
+pub struct CPattern {
+    /// `Some((rows, cols))` once the whole `rows × cols` slot is known
+    /// present (a dense·dense tick); the set is cleared then.
+    full: Option<(usize, usize)>,
+    set: BTreeSet<(usize, usize)>,
+}
+
+impl CPattern {
+    pub fn new() -> CPattern {
+        CPattern::default()
+    }
+
+    /// Number of present blocks.
+    pub fn len(&self) -> usize {
+        match self.full {
+            Some((r, c)) => r * c,
+            None => self.set.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Record one present block (slot-panel-local coordinates).
+    pub fn insert(&mut self, r: usize, c: usize) {
+        if let Some((nr, nc)) = self.full {
+            debug_assert!(r < nr && c < nc, "block outside the full slot");
+        } else {
+            self.set.insert((r, c));
+        }
+    }
+
+    /// Mark the whole `rows × cols` slot present.
+    pub fn set_full(&mut self, rows: usize, cols: usize) {
+        self.full = Some((rows, cols));
+        self.set.clear();
+    }
+
+    /// Whether the whole slot is present.
+    pub fn is_full(&self) -> bool {
+        self.full.is_some()
+    }
+
+    /// Visit every present block in row-major order.
+    pub fn for_each(&self, mut f: impl FnMut(usize, usize)) {
+        match self.full {
+            Some((nr, nc)) => {
+                for r in 0..nr {
+                    for c in 0..nc {
+                        f(r, c);
+                    }
+                }
+            }
+            None => {
+                for &(r, c) in &self.set {
+                    f(r, c);
+                }
+            }
+        }
+    }
+
+    /// The pattern as a sorted row-major list (tests / assembly).
+    pub fn to_vec(&self) -> Vec<(usize, usize)> {
+        let mut v = Vec::with_capacity(self.len());
+        self.for_each(|r, c| v.push((r, c)));
+        v
+    }
+}
+
+/// Fold one tick's A(i,g)·B(g,j) pattern product into the slot's result
+/// pattern: C(r, c) is present iff some k-block exists in both A row r
+/// and B column c. The panels' k spaces align by construction
+/// (`a.col_ids == b.row_ids`).
+pub fn accumulate_pattern(pat: &mut CPattern, a: &LocalCsr, b: &LocalCsr) {
+    debug_assert_eq!(a.col_ids, b.row_ids, "A cols must align with B rows");
+    if pat.full.is_some() {
+        return; // already everything — nothing can be added
+    }
+    let a_dense = a.nnz() == a.nrows() * a.ncols();
+    let b_dense = b.nnz() == b.nrows() * b.ncols();
+    if a_dense && b_dense && a.ncols() > 0 {
+        // dense·dense with a nonempty k dimension: the product pattern
+        // is the full slot — O(1), no enumeration (paper-scale dense
+        // model runs stay analytic)
+        pat.full = Some((a.nrows(), b.ncols()));
+        pat.set.clear();
+        return;
+    }
+    for (_, ar, ak) in a.iter_nnz() {
+        for bi in b.row_ptr[ak]..b.row_ptr[ak + 1] {
+            pat.set.insert((ar, b.col_idx[bi]));
+        }
+    }
+}
+
+/// Encode this rank's C slots, restricted to their symbolic patterns,
+/// as one reduce message (slots in order, each a panel of the wire
+/// format).
+fn encode_c(out_panels: &[LocalCsr], pats: &[CPattern], mode: Mode) -> Payload {
+    let mut index: Vec<i64> = Vec::new();
+    let mut data: Vec<f32> = Vec::new();
+    let mut elems: u64 = 0;
+    for (panel, pat) in out_panels.iter().zip(pats) {
+        if pat.is_full() && pat.len() == panel.nnz() {
+            // full slot: elide the block records; the slot panel's flat
+            // store is exactly the payload (both layers hold the same
+            // dense slot frame)
+            index.push(DENSE_PANEL);
+            match mode {
+                Mode::Real => data.extend_from_slice(panel.store.data()),
+                Mode::Model => elems += panel.store.elems(),
+            }
+            continue;
+        }
+        index.push(pat.len() as i64);
+        pat.for_each(|r, c| {
+            let area = panel.area_of(r, c);
+            index.push(r as i64);
+            index.push(c as i64);
+            index.push(area as i64);
+            match mode {
+                Mode::Real => {
+                    let b = panel.find(r, c).expect("dense C slot");
+                    data.extend_from_slice(panel.store.block(b, area));
+                }
+                Mode::Model => elems += area as u64,
+            }
+        });
+    }
+    match mode {
+        Mode::Real => Payload::Blocks { index, data },
+        Mode::Model => Payload::SparseBlocks { index, elems },
+    }
+}
+
+/// Merge one layer's reduce message into the root's slots: insert every
+/// wire block into the union pattern and (real mode) add its data into
+/// the root's dense accumulation panel. Called in ascending layer
+/// order, after the root's own contribution — the deterministic
+/// root-first sum order both transports share.
+fn merge_c(out_panels: &mut [LocalCsr], pats: &mut [CPattern], payload: Payload, mode: Mode) {
+    let (index, data) = match (payload, mode) {
+        (Payload::Blocks { index, data }, Mode::Real) => (index, data),
+        (Payload::SparseBlocks { index, .. }, Mode::Model) => (index, Vec::new()),
+        (other, mode) => panic!("C reduce: unexpected payload {other:?} in {mode:?} mode"),
+    };
+    let mut ix = 0usize;
+    let mut off = 0usize;
+    for (panel, pat) in out_panels.iter_mut().zip(pats.iter_mut()) {
+        let header = index[ix];
+        ix += 1;
+        if header == DENSE_PANEL {
+            // full-slot contribution: elementwise add over the shared
+            // dense slot frame (same layout on every layer)
+            pat.set_full(panel.nrows(), panel.ncols());
+            if mode == Mode::Real {
+                let n = panel.store.data().len();
+                let dst = panel.store.data_mut();
+                for (d, s) in dst.iter_mut().zip(&data[off..off + n]) {
+                    *d += s;
+                }
+                off += n;
+            }
+            continue;
+        }
+        for _ in 0..header as usize {
+            let (r, c, area) = (
+                index[ix] as usize,
+                index[ix + 1] as usize,
+                index[ix + 2] as usize,
+            );
+            ix += 3;
+            pat.insert(r, c);
+            if mode == Mode::Real {
+                let b = panel.find(r, c).expect("dense C slot");
+                let dst = panel.store.block_mut(b, area);
+                for (d, s) in dst.iter_mut().zip(&data[off..off + area]) {
+                    *d += s;
+                }
+                off += area;
+            }
+        }
+    }
+    debug_assert_eq!(ix, index.len(), "C merge must consume the message");
+    debug_assert_eq!(off, data.len(), "C merge must consume the data");
+}
+
+/// Sum-reduce the partial C panels across the layer communicator,
+/// shipping only the blocks present in each layer's symbolic result
+/// pattern. Layer 0 accumulates root-first in ascending layer order
+/// (identical on both transports → bit-identical sums) and ends up with
+/// the union pattern in `pats`; other layers send their share away and
+/// keep their own partial pattern (their returned C share is zero, as
+/// in the dense reduce).
+pub fn reduce_c_layers(
+    g3: &Grid3D,
+    transport: Transport,
+    out_panels: &mut [LocalCsr],
+    pats: &mut [CPattern],
+    mode: Mode,
+) {
+    if g3.layers == 1 {
+        return;
+    }
+    let incoming: Vec<Payload> = match transport {
+        Transport::TwoSided => {
+            if g3.layer == 0 {
+                (1..g3.layers)
+                    .map(|l| g3.layer_comm.recv(l, TAG_REDUCE_C))
+                    .collect()
+            } else {
+                let payload = encode_c(out_panels, pats, mode);
+                g3.layer_comm.send(0, TAG_REDUCE_C, payload);
+                Vec::new()
+            }
+        }
+        Transport::OneSided => {
+            let mut win = RmaWindow::new(&g3.layer_comm, WIN_REDUCE_C);
+            if g3.layer == 0 {
+                let sources: Vec<usize> = (1..g3.layers).collect();
+                win.close_epoch(&sources)
+            } else {
+                win.put(0, encode_c(out_panels, pats, mode));
+                Vec::new()
+            }
+        }
+    };
+    for payload in incoming {
+        merge_c(out_panels, pats, payload, mode);
+    }
+}
+
+/// Assemble the output C matrix (cyclic over `grid_dims`) from the
+/// engine's finished slot panels, restricted to the symbolic result
+/// patterns: the local share carries exactly the union-pattern blocks
+/// (dense operands yield the dense pattern, so dense behavior is
+/// unchanged). `copy_data` selects whether this rank's panels hold the
+/// result (real mode at the reduce root) or the share stays a zero
+/// pattern shell (model mode, or non-root 2.5D layers).
+#[allow(clippy::too_many_arguments)]
+pub fn assemble_c_sparse(
+    a: &DistMatrix,
+    b: &DistMatrix,
+    grid_dims: (usize, usize),
+    coords: (usize, usize),
+    mode: Mode,
+    out_panels: &[LocalCsr],
+    pats: &[CPattern],
+    copy_data: bool,
+) -> DistMatrix {
+    let row_dist = Distribution::cyclic(grid_dims.0);
+    let col_dist = Distribution::cyclic(grid_dims.1);
+    let row_ids = row_dist.owned_blocks(coords.0, a.rows.nblocks);
+    let col_ids = col_dist.owned_blocks(coords.1, b.cols.nblocks);
+    let row_sizes: Vec<usize> = row_ids.iter().map(|&i| a.rows.block_size(i)).collect();
+    let col_sizes: Vec<usize> = col_ids.iter().map(|&j| b.cols.block_size(j)).collect();
+
+    // union pattern in share-local coordinates (distinct slots cover
+    // disjoint block classes, so collisions cannot occur; sort + dedup
+    // beats a tree at paper-scale block counts)
+    let mut pattern: Vec<(usize, usize)> = Vec::new();
+    for (panel, pat) in out_panels.iter().zip(pats) {
+        pat.for_each(|pr, pc| {
+            let lr = row_ids
+                .binary_search(&panel.row_ids[pr])
+                .expect("C row local");
+            let lc = col_ids
+                .binary_search(&panel.col_ids[pc])
+                .expect("C col local");
+            pattern.push((lr, lc));
+        });
+    }
+    pattern.sort_unstable();
+    pattern.dedup();
+    let mut local = LocalCsr::from_pattern_store(
+        row_ids,
+        col_ids,
+        row_sizes,
+        col_sizes,
+        &pattern,
+        mode == Mode::Model,
+    );
+    if mode == Mode::Real && copy_data {
+        for (panel, pat) in out_panels.iter().zip(pats) {
+            pat.for_each(|pr, pc| {
+                let lr = local
+                    .row_ids
+                    .binary_search(&panel.row_ids[pr])
+                    .expect("C row");
+                let lc = local
+                    .col_ids
+                    .binary_search(&panel.col_ids[pc])
+                    .expect("C col");
+                let bi = local.find(lr, lc).expect("union pattern");
+                let area = local.area_of(lr, lc);
+                let src = panel
+                    .store
+                    .block(panel.find(pr, pc).expect("dense C slot"), area);
+                local.store.block_mut(bi, area).copy_from_slice(src);
+            });
+        }
+    }
+    DistMatrix {
+        rows: a.rows.clone(),
+        cols: b.cols.clone(),
+        row_dist,
+        col_dist,
+        coords,
+        local,
+        mode,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sparse_panel(nr: usize, nc: usize, nonzeros: &[(usize, usize)], seed: u64) -> LocalCsr {
+        let mut p = LocalCsr::from_pattern(
+            (0..nr).collect(),
+            (10..10 + nc).collect(),
+            vec![3; nr],
+            vec![2; nc],
+            nonzeros,
+        );
+        let mut rng = Rng::new(seed);
+        for x in p.store.data_mut() {
+            *x = rng.next_f32_sym();
+        }
+        p
+    }
+
+    fn frame(nr: usize, nc: usize) -> PanelMeta {
+        (
+            (0..nr).collect(),
+            (10..10 + nc).collect(),
+            vec![3; nr],
+            vec![2; nc],
+        )
+    }
+
+    #[test]
+    fn pack_unpack_round_trip_real() {
+        let p0 = sparse_panel(3, 4, &[(0, 1), (1, 0), (1, 3), (2, 2)], 7);
+        let p1 = sparse_panel(3, 4, &[(0, 0)], 8);
+        let mut held = BTreeMap::new();
+        held.insert((0, 0), p0.clone());
+        held.insert((0, 1), p1.clone());
+        let keys = [(0, 0), (0, 1)];
+        let payload = pack_panels(&mut held, &keys, Mode::Real);
+        assert_eq!(payload.meta_bytes(), 8 * (2 + 3 * 5) as u64);
+        let mut out = BTreeMap::new();
+        unpack_panels(payload, &keys, &|_| frame(3, 4), Mode::Real, &mut out);
+        for (k, orig) in [((0, 0), &p0), ((0, 1), &p1)] {
+            let got = &out[&k];
+            assert_eq!(got.row_ptr, orig.row_ptr);
+            assert_eq!(got.col_idx, orig.col_idx);
+            assert_eq!(got.store.data(), orig.store.data());
+        }
+    }
+
+    #[test]
+    fn pack_unpack_round_trip_model() {
+        let mut held = BTreeMap::new();
+        held.insert(
+            (1, 2),
+            LocalCsr::from_pattern_store(
+                vec![0, 1],
+                vec![0, 1],
+                vec![3, 3],
+                vec![2, 2],
+                &[(0, 0), (1, 1)],
+                true,
+            ),
+        );
+        let payload = pack_panels(&mut held, &[(1, 2)], Mode::Model);
+        // 12 phantom elements + index (1 + 2*3 entries)
+        assert_eq!(payload.wire_bytes(), 12 * 8 + 7 * 8);
+        let mut out = BTreeMap::new();
+        unpack_panels(
+            payload,
+            &[(1, 2)],
+            &|_| (vec![0, 1], vec![0, 1], vec![3, 3], vec![2, 2]),
+            Mode::Model,
+            &mut out,
+        );
+        let got = &out[&(1, 2)];
+        assert!(got.store.is_phantom());
+        assert_eq!(got.nnz(), 2);
+        assert_eq!(got.elems(), 12);
+        got.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn dense_panels_ship_one_sentinel_not_block_records() {
+        // real
+        let mut p = LocalCsr::dense(vec![0, 1], vec![0, 1, 2], vec![2, 2], vec![3, 3, 3]);
+        let mut rng = Rng::new(3);
+        for x in p.store.data_mut() {
+            *x = rng.next_f32_sym();
+        }
+        let orig = p.clone();
+        let mut held = BTreeMap::new();
+        held.insert((0, 0), p);
+        let payload = pack_panels(&mut held, &[(0, 0)], Mode::Real);
+        assert_eq!(payload.meta_bytes(), 8, "dense panel = one header entry");
+        let mut out = BTreeMap::new();
+        let f = |_: &Key| (vec![0, 1], vec![0, 1, 2], vec![2, 2], vec![3, 3, 3]);
+        unpack_panels(payload, &[(0, 0)], &f, Mode::Real, &mut out);
+        let got = &out[&(0, 0)];
+        assert_eq!(got.nnz(), 6);
+        assert_eq!(got.store.data(), orig.store.data());
+        // model
+        let mut held = BTreeMap::new();
+        held.insert(
+            (0, 0),
+            LocalCsr::dense_phantom(vec![0, 1], vec![0, 1, 2], vec![2, 2], vec![3, 3, 3]),
+        );
+        let payload = pack_panels(&mut held, &[(0, 0)], Mode::Model);
+        assert_eq!(payload.wire_bytes(), 8 + 36 * 8);
+        let mut out = BTreeMap::new();
+        unpack_panels(payload, &[(0, 0)], &f, Mode::Model, &mut out);
+        assert_eq!(out[&(0, 0)].nnz(), 6);
+        assert_eq!(out[&(0, 0)].elems(), 36);
+    }
+
+    #[test]
+    fn share_encode_decode_adopts_pattern() {
+        use crate::matrix::sparse::sparse_pattern;
+        use crate::matrix::BlockLayout;
+        let src = sparse_pattern(
+            BlockLayout::new(24, 4),
+            BlockLayout::new(24, 4),
+            Distribution::cyclic(1),
+            Distribution::cyclic(1),
+            (0, 0),
+            0.4,
+            5,
+            Mode::Real,
+        );
+        // destination starts dense-zero; decode must adopt src's pattern
+        let mut dst = DistMatrix::dense(
+            BlockLayout::new(24, 4),
+            BlockLayout::new(24, 4),
+            Distribution::cyclic(1),
+            Distribution::cyclic(1),
+            (0, 0),
+            Mode::Real,
+            crate::matrix::matrix::Fill::Zero,
+        );
+        decode_share_into(&mut dst, encode_share(&src));
+        assert_eq!(dst.local.nnz(), src.local.nnz());
+        assert_eq!(dst.local.col_idx, src.local.col_idx);
+        assert_eq!(dst.local.store.data(), src.local.store.data());
+    }
+
+    #[test]
+    fn pattern_product_accumulates() {
+        let a = LocalCsr::from_pattern(
+            vec![0, 1],
+            vec![0, 1, 2],
+            vec![2, 2],
+            vec![2, 2, 2],
+            &[(0, 0), (1, 2)],
+        );
+        let b = LocalCsr::from_pattern(
+            vec![0, 1, 2],
+            vec![0, 1],
+            vec![2, 2, 2],
+            vec![2, 2],
+            &[(0, 1), (2, 0), (2, 1)],
+        );
+        let mut pat = CPattern::new();
+        accumulate_pattern(&mut pat, &a, &b);
+        // A(0,0)·B(0,1) → C(0,1); A(1,2)·B(2,0) → C(1,0); A(1,2)·B(2,1)
+        assert_eq!(pat.to_vec(), vec![(0, 1), (1, 0), (1, 1)]);
+    }
+
+    #[test]
+    fn dense_product_short_circuits_to_full() {
+        let a = LocalCsr::dense(vec![0, 1], vec![0], vec![2, 2], vec![2]);
+        let b = LocalCsr::dense(vec![0], vec![0, 1, 2], vec![2], vec![2, 2, 2]);
+        let mut pat = CPattern::new();
+        accumulate_pattern(&mut pat, &a, &b);
+        assert_eq!(pat.len(), 2 * 3);
+        assert_eq!(
+            pat.to_vec(),
+            vec![(0, 0), (0, 1), (0, 2), (1, 0), (1, 1), (1, 2)]
+        );
+        // further sparse ticks cannot add past full (and don't walk)
+        accumulate_pattern(&mut pat, &a, &b);
+        assert_eq!(pat.len(), 6);
+    }
+}

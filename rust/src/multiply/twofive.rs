@@ -30,16 +30,21 @@
 use std::collections::{BTreeMap, BTreeSet};
 
 use crate::backend::gpu_sim::DeviceOom;
-use crate::dist::{sum_payloads, Grid3D, Payload, RmaWindow, Transport};
+use crate::dist::{Grid3D, Payload, RmaWindow, Transport};
 use crate::matrix::matrix::block_rng;
+use crate::matrix::sparse::block_present;
 use crate::matrix::{BlockLayout, DistMatrix, Distribution, LocalCsr, Mode};
 use crate::util::even_chunk;
 
 use super::cannon::{
-    assemble_c, build_c_slots, exchange, extract_panel, panel_meta, rma_exchange_finish,
-    rma_exchange_start, shift_pair, Key,
+    build_c_slots, exchange, extract_panel, panel_meta, rma_exchange_finish, rma_exchange_start,
+    shift_pair, Key,
 };
 use super::engine::LocalEngine;
+use super::sparse_exchange::{
+    accumulate_pattern, assemble_c_sparse, decode_share_into, encode_share, reduce_c_layers,
+    CPattern,
+};
 use super::vgrid::{lcm, VGrid};
 
 /// Message tags of this driver (cannon uses 10–13, the resident-session
@@ -55,7 +60,7 @@ const WIN_SKEW_A: u64 = 5;
 const WIN_SKEW_B: u64 = 6;
 const WIN_SHIFT_A: u64 = 7;
 const WIN_SHIFT_B: u64 = 8;
-const WIN_REDUCE: u64 = 9;
+// window 9 is the sparse C layer-reduce (multiply::sparse_exchange)
 const WIN_REPL: u64 = 10;
 
 /// Sweep period for a (rows × cols × layers) topology: a multiple of
@@ -264,6 +269,7 @@ pub fn multiply_twofive(
     };
 
     // ---- the shortened sweep: ticks s0 .. s0 + L/c ------------------------
+    let mut c_pats: Vec<CPattern> = vec![CPattern::new(); slots.len()];
     for t in 0..nticks {
         let s = s0 + t;
         for (idx, &(i, j)) in slots.iter().enumerate() {
@@ -271,6 +277,7 @@ pub fn multiply_twofive(
             let ap = &a_panels[&(i, g)];
             let bp = &b_panels[&(g, j)];
             engine.tick(&grid.world, idx, ap, bp)?;
+            accumulate_pattern(&mut c_pats[idx], ap, bp);
         }
         if t + 1 < nticks {
             let next_a: Option<Vec<Key>> = (vg.pc > 1).then(|| {
@@ -308,59 +315,22 @@ pub fn multiply_twofive(
     }
 
     // ---- sum-reduce the partial C panels across layers --------------------
+    // only blocks present in each layer's symbolic result pattern travel;
+    // layer 0 union-merges root-first in ascending layer order on both
+    // transports, so the reduced C is bit-identical across transports
     let mut out_panels = engine.finish(&grid.world);
-    if g3.layers > 1 {
-        let payload = match mode {
-            Mode::Real => {
-                let mut all: Vec<f32> = Vec::new();
-                for p in &out_panels {
-                    all.extend_from_slice(p.store.data());
-                }
-                Payload::F32(all)
-            }
-            Mode::Model => Payload::Phantom {
-                bytes: out_panels.iter().map(|p| p.store.wire_bytes()).sum(),
-            },
-        };
-        // both transports sum in the same order (own share first, then
-        // layers ascending) so the reduced C is bit-identical
-        let reduced = match transport {
-            Transport::TwoSided => g3.layer_comm.reduce_sum_f32(0, payload),
-            Transport::OneSided => {
-                let mut win = RmaWindow::new(&g3.layer_comm, WIN_REDUCE);
-                if g3.layer == 0 {
-                    let sources: Vec<usize> = (1..g3.layers).collect();
-                    let mut acc = payload;
-                    for p in win.close_epoch(&sources) {
-                        acc = sum_payloads(acc, p);
-                    }
-                    acc
-                } else {
-                    win.put(0, payload);
-                    Payload::Empty
-                }
-            }
-        };
-        if g3.layer == 0 && mode == Mode::Real {
-            let data = reduced.into_f32();
-            let mut off = 0usize;
-            for p in &mut out_panels {
-                let n = p.store.data().len();
-                p.store.data_mut().copy_from_slice(&data[off..off + n]);
-                off += n;
-            }
-            debug_assert_eq!(off, data.len());
-        }
-    }
+    reduce_c_layers(g3, transport, &mut out_panels, &mut c_pats, mode);
 
-    // ---- assemble C (layer 0 owns the result; other layers zero) ----------
-    Ok(assemble_c(
+    // ---- assemble C (layer 0 owns the result; other layers return a
+    // zero share over their own partial pattern) ----------------------------
+    Ok(assemble_c_sparse(
         a,
         b,
         (grid.rows, grid.cols),
         (r, c),
         mode,
         &out_panels,
+        &c_pats,
         g3.layer == 0,
     ))
 }
@@ -434,6 +404,31 @@ pub fn twofive_operands(
     seed_a: u64,
     seed_b: u64,
 ) -> (DistMatrix, DistMatrix) {
+    twofive_operands_sparse(g3, m, n, k, block, mode, seed_a, seed_b, 1.0, 1.0)
+}
+
+/// [`twofive_operands`] for block-sparse operands: the native layout's
+/// panel frames stay identical, but only blocks passing the
+/// [`block_present`] predicate at the given occupancy exist (the same
+/// deterministic global pattern as [`sparse_random`] — every layer and
+/// rank agrees, so the shares are replicas by construction and the
+/// reference product is [`sparse_reference`]).
+///
+/// [`sparse_random`]: crate::matrix::sparse::sparse_random
+/// [`sparse_reference`]: crate::matrix::sparse::sparse_reference
+#[allow(clippy::too_many_arguments)]
+pub fn twofive_operands_sparse(
+    g3: &Grid3D,
+    m: usize,
+    n: usize,
+    k: usize,
+    block: usize,
+    mode: Mode,
+    seed_a: u64,
+    seed_b: u64,
+    occ_a: f64,
+    occ_b: f64,
+) -> (DistMatrix, DistMatrix) {
     let (r, c) = g3.grid.coords();
     let lv = sweep_period(g3.rows, g3.cols, g3.layers);
     let vg = VGrid::with_period(g3.rows, g3.cols, lv, r, c);
@@ -449,6 +444,7 @@ pub fn twofive_operands(
         &a_keys,
         mode,
         seed_a,
+        occ_a,
     );
     let b = native_matrix(
         g3,
@@ -458,12 +454,16 @@ pub fn twofive_operands(
         &b_keys,
         mode,
         seed_b,
+        occ_b,
     );
     (a, b)
 }
 
-/// One dense operand in the native layout: the union of the given panels'
-/// blocks, filled deterministically per global block id.
+/// One operand in the native layout: the union of the given panels'
+/// block frames, with the blocks passing the occupancy predicate
+/// present, filled deterministically per global block id (`occupancy =
+/// 1.0` keeps every block — the dense case).
+#[allow(clippy::too_many_arguments)]
 fn native_matrix(
     g3: &Grid3D,
     vg: &VGrid,
@@ -472,6 +472,7 @@ fn native_matrix(
     keys: &BTreeSet<Key>,
     mode: Mode,
     seed: u64,
+    occupancy: f64,
 ) -> DistMatrix {
     let mut row_set: BTreeSet<usize> = BTreeSet::new();
     let mut col_set: BTreeSet<usize> = BTreeSet::new();
@@ -484,12 +485,17 @@ fn native_matrix(
     let row_sizes: Vec<usize> = row_ids.iter().map(|&i| rows.block_size(i)).collect();
     let col_sizes: Vec<usize> = col_ids.iter().map(|&j| cols.block_size(j)).collect();
 
-    // pattern = the blocks of each panel, in local row-major order
+    // pattern = the present blocks of each panel, in local row-major
+    // order (the frame keeps every panel row/col regardless, so panel
+    // extraction and skew routing never depend on the pattern)
     let mut pat: BTreeSet<(usize, usize)> = BTreeSet::new();
     for &(x, y) in keys {
         for gi in vg.blocks_of(x, rows.nblocks) {
             let lr = row_ids.binary_search(&gi).unwrap();
             for gj in vg.blocks_of(y, cols.nblocks) {
+                if occupancy < 1.0 && !block_present(seed, gi, gj, occupancy) {
+                    continue;
+                }
                 let lc = col_ids.binary_search(&gj).unwrap();
                 pat.insert((lr, lc));
             }
@@ -543,10 +549,13 @@ fn native_matrix(
 
 /// Broadcast a *canonical* layer-cyclic operand from layer 0 to every
 /// layer (the 2.5D setup replication, charged to the virtual clocks and
-/// traffic counters). Every rank must hold a matrix with the same local
-/// pattern as its layer-0 peer (e.g. built with the same constructor
-/// arguments); layers > 0 receive the element data. Returns the wire
-/// bytes of the local share (what layer 0 pushed per peer).
+/// traffic counters). The payload is the sparse wire format — pattern
+/// metadata plus the present blocks' elements — so replication traffic
+/// is occupancy-proportional, and layers > 0 **adopt** layer 0's
+/// pattern along with the data (every rank must hold the same block-id
+/// frame as its layer-0 peer; the pattern may differ, e.g. a dense-zero
+/// placeholder or a stale pre-filtering pattern). Returns the wire
+/// bytes of the replication payload.
 ///
 /// Under [`Transport::OneSided`] the root puts into each layer peer's
 /// exposure window and the peers sync once at the epoch close; bytes
@@ -555,20 +564,14 @@ pub fn replicate_to_layers(g3: &Grid3D, m: &mut DistMatrix, transport: Transport
     if g3.layers == 1 {
         return 0;
     }
-    let bytes = m.local.store.wire_bytes();
-    let outbound = || match m.mode {
-        Mode::Real => Payload::F32(m.local.store.data().to_vec()),
-        Mode::Model => Payload::Phantom { bytes },
-    };
+    let payload = (g3.layer == 0).then(|| encode_share(m));
+    let bytes = payload.as_ref().map(Payload::wire_bytes);
     let inbound = match transport {
-        Transport::TwoSided => {
-            let payload = if g3.layer == 0 { Some(outbound()) } else { None };
-            Some(g3.layer_comm.bcast(0, payload))
-        }
+        Transport::TwoSided => Some(g3.layer_comm.bcast(0, payload)),
         Transport::OneSided => {
             let mut win = RmaWindow::new(&g3.layer_comm, WIN_REPL);
             if g3.layer == 0 {
-                let payload = outbound();
+                let payload = payload.expect("root encodes its share");
                 for l in 1..g3.layers {
                     win.put(l, payload.clone());
                 }
@@ -578,16 +581,19 @@ pub fn replicate_to_layers(g3: &Grid3D, m: &mut DistMatrix, transport: Transport
             }
         }
     };
-    if g3.layer != 0 && m.mode == Mode::Real {
-        let data = inbound.expect("non-root layers receive the replica").into_f32();
-        assert_eq!(
-            data.len(),
-            m.local.store.data().len(),
-            "layer replicas must share the local pattern"
-        );
-        m.local.store.data_mut().copy_from_slice(&data);
+    match inbound {
+        Some(payload) if g3.layer != 0 => {
+            let bytes = payload.wire_bytes();
+            decode_share_into(m, payload);
+            bytes
+        }
+        Some(payload) => {
+            // two-sided root: bcast returned its own payload
+            debug_assert!(bytes.is_none() || bytes == Some(payload.wire_bytes()));
+            payload.wire_bytes()
+        }
+        None => bytes.expect("one-sided root encoded its share"),
     }
-    bytes
 }
 
 #[cfg(test)]
@@ -797,6 +803,62 @@ mod tests {
 
     fn world_stats_bytes(g3: &Grid3D) -> u64 {
         g3.world.stats().bytes_sent
+    }
+
+    #[test]
+    fn sparse_native_operands_match_sparse_reference() {
+        use crate::matrix::sparse::sparse_reference;
+        let (rows, cols, layers, dim, block) = (2usize, 2usize, 2usize, 32usize, 4usize);
+        let (occ_a, occ_b) = (0.4f64, 0.6f64);
+        let p = rows * cols * layers;
+        let out = run_ranks(p, NetModel::aries(2), move |world| {
+            let g3 = Grid3D::new(world, rows, cols, layers);
+            let (a, b) =
+                twofive_operands_sparse(&g3, dim, dim, dim, block, Mode::Real, 83, 84, occ_a, occ_b);
+            let mut eng = engine(2, false, Mode::Real);
+            let cm = multiply_twofive(&g3, &a, &b, &mut eng, Transport::TwoSided).unwrap();
+            let mut dense = vec![0.0f32; dim * dim];
+            cm.add_into_dense(&mut dense);
+            dense
+        });
+        let mut got = vec![0.0f32; dim * dim];
+        for part in out {
+            for (g, x) in got.iter_mut().zip(part.iter()) {
+                *g += x;
+            }
+        }
+        let l = BlockLayout::new(dim, block);
+        let ar = sparse_reference(&l, &l, occ_a, 83);
+        let br = sparse_reference(&l, &l, occ_b, 84);
+        let mut want = vec![0.0f32; dim * dim];
+        crate::backend::smm_cpu::gemm_blocked(dim, dim, dim, &ar, &br, &mut want);
+        assert_allclose(&got, &want, 3e-3, 3e-3).unwrap();
+    }
+
+    #[test]
+    fn sparse_native_model_counters_are_occupancy_proportional() {
+        // model mode: block_mults counts the symbolic triples (far below
+        // the dense cube) and panel traffic carries nnz-sized phantoms
+        let (rows, cols, layers) = (2usize, 2usize, 2usize);
+        let (dim, block, occ) = (128usize, 4usize, 0.2f64);
+        let out = run_ranks(rows * cols * layers, NetModel::aries(2), move |world| {
+            let g3 = Grid3D::new(world, rows, cols, layers);
+            let (a, b) =
+                twofive_operands_sparse(&g3, dim, dim, dim, block, Mode::Model, 5, 6, occ, occ);
+            assert!(a.local.store.is_phantom());
+            let mut eng = engine(2, false, Mode::Model);
+            let _ = multiply_twofive(&g3, &a, &b, &mut eng, Transport::TwoSided).unwrap();
+            (eng.stats.block_mults, g3.world.stats().bytes_sent)
+        });
+        let nb = (dim / block) as u64;
+        let dense_cube = nb * nb * nb;
+        let total: u64 = out.iter().map(|(m, _)| *m).sum();
+        assert!(total > 0, "some triples must exist at occ {occ}");
+        // E[triples] = occ² · nb³ = 0.04 · dense; allow wide slack
+        assert!(
+            total < dense_cube / 8,
+            "sparse model compute must be occupancy-proportional: {total} vs {dense_cube}"
+        );
     }
 
     #[test]

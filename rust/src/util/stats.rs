@@ -91,6 +91,11 @@ pub struct MultiplyStats {
     pub flops: u64,
     /// Bytes moved rank-to-rank (Cannon shifts / TS reductions).
     pub comm_bytes: u64,
+    /// The metadata share of `comm_bytes`: the block-index streams of
+    /// the sparse-panel wire format (`multiply::sparse_exchange`). The
+    /// price of shipping sparsity patterns, separated from the element
+    /// payload so occupancy-proportionality is checkable.
+    pub meta_bytes: u64,
     /// Number of point-to-point messages.
     pub comm_msgs: u64,
     /// Virtual seconds the rank's clock advanced while blocked on
@@ -118,19 +123,55 @@ pub struct MultiplyStats {
     pub cpu_stacks: u64,
     /// Peak simulated device-memory occupancy, bytes.
     pub dev_mem_peak: u64,
+    /// Result blocks dropped by on-the-fly filtering
+    /// (`MultiplyConfig::filter_eps`) after the accumulation.
+    pub filtered_blocks: u64,
+    /// Occupancy accounting: present and total block slots of this
+    /// rank's operand and result shares (result counted *after*
+    /// filtering). Kept as counter pairs so `merge` aggregates exactly;
+    /// read through [`MultiplyStats::occupancy_a`] and friends.
+    pub a_nnz_blocks: u64,
+    pub a_total_blocks: u64,
+    pub b_nnz_blocks: u64,
+    pub b_total_blocks: u64,
+    pub c_nnz_blocks: u64,
+    pub c_total_blocks: u64,
     /// The plan this multiplication ran with (identical on every rank of
     /// one collective call; `merge` keeps the first).
     pub plan: Option<PlanSummary>,
 }
 
 impl MultiplyStats {
+    /// Fraction of present A blocks over the counted block slots
+    /// (0 when nothing was counted — e.g. stats that never saw a
+    /// multiply).
+    pub fn occupancy_a(&self) -> f64 {
+        occ(self.a_nnz_blocks, self.a_total_blocks)
+    }
+    pub fn occupancy_b(&self) -> f64 {
+        occ(self.b_nnz_blocks, self.b_total_blocks)
+    }
+    /// Result occupancy after filtering — the observable fill-in
+    /// control of `MultiplyConfig::filter_eps`.
+    pub fn occupancy_c(&self) -> f64 {
+        occ(self.c_nnz_blocks, self.c_total_blocks)
+    }
+
     pub fn merge(&mut self, o: &MultiplyStats) {
         self.stacks += o.stacks;
         self.block_mults += o.block_mults;
         self.flops += o.flops;
         self.comm_bytes += o.comm_bytes;
+        self.meta_bytes += o.meta_bytes;
         self.comm_msgs += o.comm_msgs;
         self.comm_wait_s += o.comm_wait_s;
+        self.filtered_blocks += o.filtered_blocks;
+        self.a_nnz_blocks += o.a_nnz_blocks;
+        self.a_total_blocks += o.a_total_blocks;
+        self.b_nnz_blocks += o.b_nnz_blocks;
+        self.b_total_blocks += o.b_total_blocks;
+        self.c_nnz_blocks += o.c_nnz_blocks;
+        self.c_total_blocks += o.c_total_blocks;
         self.repl_bytes += o.repl_bytes;
         self.repl_s += o.repl_s;
         self.h2d_bytes += o.h2d_bytes;
@@ -142,6 +183,14 @@ impl MultiplyStats {
         if self.plan.is_none() {
             self.plan = o.plan.clone();
         }
+    }
+}
+
+fn occ(nnz: u64, total: u64) -> f64 {
+    if total == 0 {
+        0.0
+    } else {
+        nnz as f64 / total as f64
     }
 }
 
@@ -195,6 +244,34 @@ mod tests {
         assert_eq!(a.dev_mem_peak, 50);
         assert_eq!(a.repl_bytes, 15);
         assert_eq!(a.repl_s, 0.75);
+    }
+
+    #[test]
+    fn occupancies_aggregate_as_weighted_means() {
+        let mut a = MultiplyStats {
+            a_nnz_blocks: 2,
+            a_total_blocks: 10,
+            c_nnz_blocks: 1,
+            c_total_blocks: 4,
+            meta_bytes: 8,
+            filtered_blocks: 3,
+            ..Default::default()
+        };
+        let b = MultiplyStats {
+            a_nnz_blocks: 8,
+            a_total_blocks: 10,
+            c_nnz_blocks: 3,
+            c_total_blocks: 4,
+            meta_bytes: 16,
+            filtered_blocks: 1,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.occupancy_a(), 0.5);
+        assert_eq!(a.occupancy_c(), 0.5);
+        assert_eq!(a.occupancy_b(), 0.0, "uncounted defaults to zero");
+        assert_eq!(a.meta_bytes, 24);
+        assert_eq!(a.filtered_blocks, 4);
     }
 
     #[test]

@@ -95,6 +95,7 @@ fn fig2_oom_annotation_reproduced() {
             transport: Transport::TwoSided,
             algo: AlgoSpec::Layout,
             plan_verbose: false,
+            occupancy: 1.0,
             iterations: 1,
         })
     };

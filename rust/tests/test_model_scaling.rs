@@ -23,6 +23,7 @@ fn model_point(nodes: usize, rpn: usize, threads: usize, block: usize, sq: bool,
         transport: Transport::TwoSided,
         algo: AlgoSpec::Layout,
         plan_verbose: false,
+        occupancy: 1.0,
         iterations: 1,
     });
     assert!(!r.oom, "unexpected OOM");
@@ -76,6 +77,7 @@ fn dbcsr_beats_pdgemm_and_gap_grows_for_small_blocks() {
             transport: Transport::TwoSided,
             algo: AlgoSpec::Layout,
             plan_verbose: false,
+            occupancy: 1.0,
             iterations: 1,
         });
         assert!(!r.oom);

@@ -51,6 +51,7 @@ fn spec16(shape: Shape, transport: Transport, algo: AlgoSpec) -> RunSpec {
         transport,
         algo,
         plan_verbose: false,
+        occupancy: 1.0,
         iterations: 1,
     }
 }
@@ -310,6 +311,8 @@ fn plan_input(p: usize, m: usize, n: usize, k: usize, transport: Transport) -> P
         threads: 3,
         charge_replication: true,
         horizon: 1,
+        occ_a: 1.0,
+        occ_b: 1.0,
     }
 }
 

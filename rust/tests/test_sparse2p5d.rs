@@ -1,0 +1,418 @@
+//! Integration: the block-sparse exchange subsystem — wire-format
+//! round trips, occupancy-proportional comm volume, sparse 2.5D
+//! end-to-end numerics across transports and replication factors, and
+//! on-the-fly filtering (ISSUE 5 / DBCSR §I–II, arXiv:1705.10218).
+
+use std::collections::BTreeMap;
+
+use dbcsr::backend::smm_cpu;
+use dbcsr::dist::{run_ranks, Grid2D, Grid3D, NetModel, Transport};
+use dbcsr::matrix::sparse::{sparse_pattern, sparse_reference};
+use dbcsr::matrix::{BlockLayout, Distribution, LocalCsr, Mode};
+use dbcsr::multiply::sparse_exchange::{pack_panels, unpack_panels, Key, PanelMeta};
+use dbcsr::multiply::twofive::replicate_to_layers;
+use dbcsr::multiply::{multiply, Algorithm, EngineOpts, MultiplyConfig};
+use dbcsr::prop_assert;
+use dbcsr::util::prop::{assert_allclose, check};
+
+// ---------------------------------------------------------------------------
+// wire format
+// ---------------------------------------------------------------------------
+
+/// Pack → unpack over a random multi-panel set must reproduce every
+/// panel's pattern (both modes) and data (real mode) exactly.
+#[test]
+fn prop_pack_unpack_round_trip() {
+    check("sparse wire format round trip", 24, |rng, size| {
+        let nr = 1 + rng.range(1, size.0.max(2));
+        let nc = 1 + rng.range(1, size.0.max(2));
+        let npanels = 1 + rng.range(0, 3);
+        let occ = rng.next_f64();
+        let real = rng.next_u64() % 2 == 0;
+        let mode = if real { Mode::Real } else { Mode::Model };
+
+        let frame: PanelMeta = (
+            (0..nr).collect(),
+            (0..nc).collect(),
+            (0..nr).map(|i| 2 + i % 3).collect(),
+            (0..nc).map(|j| 1 + j % 4).collect(),
+        );
+        let mut held: BTreeMap<Key, LocalCsr> = BTreeMap::new();
+        let mut keys: Vec<Key> = Vec::new();
+        for p in 0..npanels {
+            let mut nonzeros = Vec::new();
+            for r in 0..nr {
+                for c in 0..nc {
+                    if rng.next_f64() < occ {
+                        nonzeros.push((r, c));
+                    }
+                }
+            }
+            let mut panel = LocalCsr::from_pattern_store(
+                frame.0.clone(),
+                frame.1.clone(),
+                frame.2.clone(),
+                frame.3.clone(),
+                &nonzeros,
+                mode == Mode::Model,
+            );
+            if mode == Mode::Real {
+                for x in panel.store.data_mut() {
+                    *x = rng.next_f32_sym();
+                }
+            }
+            keys.push((p, p + 1));
+            held.insert((p, p + 1), panel);
+        }
+        let originals = held.clone();
+        let payload = pack_panels(&mut held, &keys, mode);
+        prop_assert!(
+            payload.meta_bytes() <= payload.wire_bytes(),
+            "meta {} must be within wire {}",
+            payload.meta_bytes(),
+            payload.wire_bytes()
+        );
+        let mut out = BTreeMap::new();
+        let f = frame.clone();
+        unpack_panels(payload, &keys, &move |_: &Key| f.clone(), mode, &mut out);
+        for k in &keys {
+            let (orig, got) = (&originals[k], &out[k]);
+            prop_assert!(got.check_invariants().is_ok(), "invariants");
+            prop_assert!(got.row_ptr == orig.row_ptr, "row_ptr mismatch");
+            prop_assert!(got.col_idx == orig.col_idx, "col_idx mismatch");
+            prop_assert!(got.elems() == orig.elems(), "elems mismatch");
+            if mode == Mode::Real {
+                prop_assert!(
+                    got.store.data() == orig.store.data(),
+                    "data mismatch"
+                );
+            } else {
+                prop_assert!(got.store.is_phantom(), "model panels stay phantom");
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// shared drivers
+// ---------------------------------------------------------------------------
+
+fn cfg(algorithm: Algorithm, transport: Transport, filter_eps: f32) -> MultiplyConfig {
+    MultiplyConfig {
+        engine: EngineOpts {
+            threads: 2,
+            densify: false,
+            stack_cap: 48,
+            cpu_coexec: true,
+        },
+        algorithm,
+        transport,
+        filter_eps,
+        ..Default::default()
+    }
+}
+
+/// Run a sparse multiply on `rows × cols × layers` = 16 ranks through
+/// the canonical 2.5D entry (sparse canonical shares + replication) or
+/// Cannon at `layers == 1`; returns (per-rank dense views, per-rank
+/// comm/meta bytes, filtered count, result occupancy).
+#[allow(clippy::type_complexity)]
+fn sparse_run(
+    layers: usize,
+    dim: usize,
+    block: usize,
+    occ_a: f64,
+    occ_b: f64,
+    transport: Transport,
+    filter_eps: f32,
+) -> Vec<RankOut> {
+    let p = 16usize;
+    assert_eq!(p % layers, 0);
+    let (rows, cols) = dbcsr::multiply::planner::grid_shape(p / layers);
+    run_ranks(p, NetModel::aries(4), move |world| {
+        let mk = |grid: (usize, usize), coords: (usize, usize), occ: f64, seed: u64| {
+            sparse_pattern(
+                BlockLayout::new(dim, block),
+                BlockLayout::new(dim, block),
+                Distribution::cyclic(grid.0),
+                Distribution::cyclic(grid.1),
+                coords,
+                occ,
+                seed,
+                Mode::Real,
+            )
+        };
+        let out = if layers == 1 {
+            let grid = Grid2D::new(world, 4, 4);
+            let coords = grid.coords();
+            let a = mk((4, 4), coords, occ_a, 211);
+            let b = mk((4, 4), coords, occ_b, 212);
+            multiply(&grid, &a, &b, &cfg(Algorithm::Cannon, transport, filter_eps)).unwrap()
+        } else {
+            let g3 = Grid3D::new(world, rows, cols, layers);
+            let coords = g3.grid.coords();
+            let mut a = mk((rows, cols), coords, occ_a, 211);
+            let mut b = mk((rows, cols), coords, occ_b, 212);
+            replicate_to_layers(&g3, &mut a, transport);
+            replicate_to_layers(&g3, &mut b, transport);
+            let grid = Grid2D::new(g3.world.clone(), 4, 4);
+            multiply(
+                &grid,
+                &a,
+                &b,
+                &cfg(Algorithm::TwoFiveD { layers }, transport, filter_eps),
+            )
+            .unwrap()
+        };
+        let mut dense = vec![0.0f32; dim * dim];
+        out.c.add_into_dense(&mut dense);
+        (
+            dense,
+            out.stats.comm_bytes,
+            out.stats.meta_bytes,
+            out.stats.filtered_blocks,
+            (out.stats.c_nnz_blocks, out.stats.c_total_blocks),
+        )
+    })
+}
+
+type RankOut = (Vec<f32>, u64, u64, u64, (u64, u64));
+
+fn sum_views(parts: &[RankOut], dim: usize) -> Vec<f32> {
+    let mut got = vec![0.0f32; dim * dim];
+    for (part, ..) in parts {
+        for (g, x) in got.iter_mut().zip(part.iter()) {
+            *g += x;
+        }
+    }
+    got
+}
+
+// ---------------------------------------------------------------------------
+// numerics: both transports, c ∈ {1, 2, 4}, 16 ranks
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sparse_2p5d_matches_reference_and_is_bit_identical_across_transports() {
+    let (dim, block, occ_a, occ_b) = (48usize, 4usize, 0.35f64, 0.5f64);
+    let l = BlockLayout::new(dim, block);
+    let ar = sparse_reference(&l, &l, occ_a, 211);
+    let br = sparse_reference(&l, &l, occ_b, 212);
+    let mut want = vec![0.0f32; dim * dim];
+    smm_cpu::gemm_blocked(dim, dim, dim, &ar, &br, &mut want);
+
+    for layers in [1usize, 2, 4] {
+        let two = sparse_run(layers, dim, block, occ_a, occ_b, Transport::TwoSided, 0.0);
+        let one = sparse_run(layers, dim, block, occ_a, occ_b, Transport::OneSided, 0.0);
+        let got = sum_views(&two, dim);
+        assert_allclose(&got, &want, 3e-3, 3e-3)
+            .unwrap_or_else(|e| panic!("c={layers}: {e}"));
+        // bit-identical across transports, rank by rank
+        for (r, (t, o)) in two.iter().zip(one.iter()).enumerate() {
+            assert!(t.0 == o.0, "c={layers} rank {r}: transports disagree bitwise");
+            assert_eq!(t.1, o.1, "c={layers} rank {r}: comm bytes differ");
+            assert_eq!(t.2, o.2, "c={layers} rank {r}: meta bytes differ");
+        }
+    }
+}
+
+/// Occupancy 1.0 through the sparse constructors and packed exchange is
+/// bit-identical to the dense path (same pattern, same fill stream,
+/// same wire format) — pinning that the sparse subsystem costs dense
+/// runs nothing.
+#[test]
+fn occupancy_one_is_bit_identical_to_the_dense_path() {
+    let (dim, block) = (32usize, 4usize);
+    let run = |sparse_ctor: bool| {
+        run_ranks(4, NetModel::aries(2), move |world| {
+            let grid = Grid2D::new(world, 2, 2);
+            let coords = grid.coords();
+            let mk = |seed: u64| {
+                if sparse_ctor {
+                    sparse_pattern(
+                        BlockLayout::new(dim, block),
+                        BlockLayout::new(dim, block),
+                        Distribution::cyclic(2),
+                        Distribution::cyclic(2),
+                        coords,
+                        1.0,
+                        seed,
+                        Mode::Real,
+                    )
+                } else {
+                    dbcsr::matrix::DistMatrix::dense(
+                        BlockLayout::new(dim, block),
+                        BlockLayout::new(dim, block),
+                        Distribution::cyclic(2),
+                        Distribution::cyclic(2),
+                        coords,
+                        Mode::Real,
+                        dbcsr::matrix::matrix::Fill::Random { seed },
+                    )
+                }
+            };
+            let (a, b) = (mk(91), mk(92));
+            let out = multiply(&grid, &a, &b, &cfg(Algorithm::Cannon, Transport::TwoSided, 0.0))
+                .unwrap();
+            let mut dense = vec![0.0f32; dim * dim];
+            out.c.add_into_dense(&mut dense);
+            (dense, out.stats.comm_bytes, out.stats.meta_bytes, out.virtual_seconds)
+        })
+    };
+    let s = run(true);
+    let d = run(false);
+    for (rank, (sv, dv)) in s.iter().zip(d.iter()).enumerate() {
+        assert!(sv.0 == dv.0, "rank {rank}: results must be bitwise equal");
+        assert_eq!(sv.1, dv.1, "rank {rank}: comm bytes");
+        assert_eq!(sv.2, dv.2, "rank {rank}: meta bytes");
+        assert_eq!(sv.3, dv.3, "rank {rank}: virtual time");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// occupancy-proportional comm volume (the pinned acceptance ratio)
+// ---------------------------------------------------------------------------
+
+/// Model-mode Cannon on 16 ranks: packed bytes ≤ dense bytes, and the
+/// element-byte ratio to dense tracks the *measured* occupancy at
+/// 0.1% / 1% / 10%. Panels ship a topology-fixed number of times
+/// (pattern-independent), so the data ratio equals a ship-weighted mean
+/// of panel occupancies — tolerances widen as the block population
+/// shrinks.
+#[test]
+fn packed_bytes_track_occupancy() {
+    let (dim, block) = (2816usize, 22usize);
+    let point = |occ: f64| {
+        let parts = run_ranks(16, NetModel::aries(4), move |world| {
+            let grid = Grid2D::new(world, 4, 4);
+            let coords = grid.coords();
+            let a = sparse_pattern(
+                BlockLayout::new(dim, block),
+                BlockLayout::new(dim, block),
+                Distribution::cyclic(4),
+                Distribution::cyclic(4),
+                coords,
+                occ,
+                311,
+                Mode::Model,
+            );
+            let b = sparse_pattern(
+                BlockLayout::new(dim, block),
+                BlockLayout::new(dim, block),
+                Distribution::cyclic(4),
+                Distribution::cyclic(4),
+                coords,
+                occ,
+                312,
+                Mode::Model,
+            );
+            let out = multiply(
+                &grid,
+                &a,
+                &b,
+                &cfg(Algorithm::Cannon, Transport::TwoSided, 0.0),
+            )
+            .unwrap();
+            let s = out.stats;
+            (
+                s.comm_bytes,
+                s.meta_bytes,
+                s.a_nnz_blocks + s.b_nnz_blocks,
+                s.a_total_blocks + s.b_total_blocks,
+            )
+        });
+        let comm: u64 = parts.iter().map(|p| p.0).sum();
+        let meta: u64 = parts.iter().map(|p| p.1).sum();
+        let nnz: u64 = parts.iter().map(|p| p.2).sum();
+        let total: u64 = parts.iter().map(|p| p.3).sum();
+        (comm, meta, nnz as f64 / total as f64)
+    };
+
+    let (dense_comm, dense_meta, dense_occ) = point(1.0);
+    assert_eq!(dense_occ, 1.0);
+    let dense_data = (dense_comm - dense_meta) as f64;
+
+    let mut last_comm = dense_comm;
+    for (occ, tol) in [(0.1, 0.10), (0.01, 0.20), (0.001, 0.40)] {
+        let (comm, meta, measured) = point(occ);
+        assert!(
+            comm < last_comm,
+            "occ {occ}: packed bytes {comm} must shrink (prev {last_comm})"
+        );
+        assert!(meta > 0 && meta <= comm);
+        let ratio = (comm - meta) as f64 / dense_data;
+        assert!(
+            (ratio / measured - 1.0).abs() <= tol,
+            "occ {occ}: element-byte ratio {ratio:.5} vs measured occupancy \
+             {measured:.5} (tol {tol})"
+        );
+        last_comm = comm;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// on-the-fly filtering
+// ---------------------------------------------------------------------------
+
+#[test]
+fn filtering_drops_blocks_and_stays_bit_identical_across_transports() {
+    let (dim, block, occ) = (48usize, 4usize, 0.3f64);
+    // pick eps at the median nonzero block norm of the true product, so
+    // a strict subset of the result blocks drops and a strict subset
+    // survives (norms are continuous — no block sits at the threshold)
+    let l = BlockLayout::new(dim, block);
+    let ar = sparse_reference(&l, &l, occ, 211);
+    let br = sparse_reference(&l, &l, occ, 212);
+    let mut prod = vec![0.0f32; dim * dim];
+    smm_cpu::gemm_blocked(dim, dim, dim, &ar, &br, &mut prod);
+    let nb = dim / block;
+    let mut norms: Vec<f64> = Vec::new();
+    for bi in 0..nb {
+        for bj in 0..nb {
+            let mut sq = 0.0f64;
+            for i in 0..block {
+                for j in 0..block {
+                    let v = prod[(bi * block + i) * dim + bj * block + j] as f64;
+                    sq += v * v;
+                }
+            }
+            if sq > 0.0 {
+                norms.push(sq.sqrt());
+            }
+        }
+    }
+    norms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    assert!(norms.len() >= 4, "need a populated product to filter");
+    let eps = norms[norms.len() / 2] as f32;
+
+    for layers in [1usize, 2] {
+        let plain = sparse_run(layers, dim, block, occ, occ, Transport::TwoSided, 0.0);
+        let two = sparse_run(layers, dim, block, occ, occ, Transport::TwoSided, eps);
+        let one = sparse_run(layers, dim, block, occ, occ, Transport::OneSided, eps);
+        let filtered: u64 = two.iter().map(|p| p.3).sum();
+        assert!(filtered > 0, "c={layers}: eps {eps} must drop some blocks");
+        // result occupancy shrinks under filtering (fill-in control),
+        // but the above-median half of the blocks survives
+        let occ_c = |parts: &[RankOut]| {
+            let nnz: u64 = parts.iter().map(|p| p.4 .0).sum();
+            let total: u64 = parts.iter().map(|p| p.4 .1).sum();
+            nnz as f64 / total.max(1) as f64
+        };
+        assert!(occ_c(&two) < occ_c(&plain), "c={layers}: occupancy must drop");
+        assert!(occ_c(&two) > 0.0, "c={layers}: some blocks must survive");
+        for (r, (t, o)) in two.iter().zip(one.iter()).enumerate() {
+            assert!(t.0 == o.0, "c={layers} rank {r}: filtered results differ");
+            assert_eq!(t.3, o.3, "c={layers} rank {r}: filtered counts differ");
+        }
+        // surviving entries agree with the unfiltered product
+        let full = sum_views(&plain, dim);
+        let kept = sum_views(&two, dim);
+        for (i, (&k, &f)) in kept.iter().zip(full.iter()).enumerate() {
+            assert!(
+                k == 0.0 || k == f,
+                "entry {i}: kept value {k} must equal unfiltered {f}"
+            );
+        }
+    }
+}
