@@ -1,0 +1,54 @@
+#!/usr/bin/env bash
+# Tag-space lint: `dist/tags.rs` is the single registry for message tags
+# and RMA window ids (with compile-time non-collision proofs). This
+# script fails when library code outside the registry
+#   * declares a shadow `const TAG_*` / `const WIN_*`,
+#   * passes a raw integer literal as a message tag to
+#     `.send(..)` / `.recv(..)` / `.sendrecv(..)`,
+#   * passes a raw integer literal window id to `RmaWindow::new(..)`, or
+#   * hand-rolls the reserved blocks (`1 << 59`, `1 << 60`).
+# Test modules (`#[cfg(test)]`, bottom-of-file by repo convention) and
+# `rust/tests/` are exempt: synthetic protocol tests legitimately use
+# throwaway tags. Run from anywhere; CI runs it on every push.
+set -u
+
+cd "$(dirname "$0")/../src" || exit 2
+
+fail=0
+
+# Everything above the file's `#[cfg(test)]` module, comments removed —
+# doc examples and test fixtures must not trip the lint.
+strip_tests_and_comments() {
+    awk '/^#\[cfg\(test\)\]/ { exit } { print }' "$1" | sed -e 's://.*$::'
+}
+
+report() { # file, rule, matches
+    echo "tag-lint: $1: $2" >&2
+    echo "$3" | sed 's/^/    /' >&2
+    fail=1
+}
+
+while IFS= read -r f; do
+    src=$(strip_tests_and_comments "$f")
+
+    m=$(echo "$src" | grep -nE 'const (TAG|WIN)_[A-Z0-9_]+ *:')
+    [ -n "$m" ] && report "$f" "tag/window const outside the dist/tags.rs registry" "$m"
+
+    m=$(echo "$src" | grep -nE '\.(send|recv)\([^,()]*, *[0-9]')
+    [ -n "$m" ] && report "$f" "raw integer literal used as a message tag" "$m"
+
+    m=$(echo "$src" | grep -nE '\.sendrecv\([^,()]*,[^,()]*, *[0-9]')
+    [ -n "$m" ] && report "$f" "raw integer literal used as a sendrecv tag" "$m"
+
+    m=$(echo "$src" | grep -nE 'RmaWindow::new\([^,()]*, *[0-9]')
+    [ -n "$m" ] && report "$f" "raw integer literal used as an RMA window id" "$m"
+
+    m=$(echo "$src" | grep -nE '1(u64)? *<< *(59|60)')
+    [ -n "$m" ] && report "$f" "reserved tag block hand-rolled instead of imported from dist/tags.rs" "$m"
+done < <(find . -name '*.rs' ! -path './dist/tags.rs')
+
+if [ "$fail" -ne 0 ]; then
+    echo "tag-lint: FAILED — import tags and window ids from dist/tags.rs" >&2
+    exit 1
+fi
+echo "tag-lint: OK — all tags and window ids come from dist/tags.rs"

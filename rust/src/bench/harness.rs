@@ -12,7 +12,8 @@
 //! [`RunResult::plan`].
 
 use crate::backend::gpu_sim::DeviceOom;
-use crate::dist::{run_ranks, Grid2D, Grid3D, NetModel, Transport};
+use crate::dist::verify::{self, TraceLog, VerifyReport};
+use crate::dist::{run_ranks_opts, Grid2D, Grid3D, NetModel, RunOpts, Transport};
 use crate::matrix::matrix::Fill;
 use crate::matrix::{DistMatrix, Mode};
 use crate::multiply::planner::{self, PlanInput, PlannedAlgorithm};
@@ -220,6 +221,29 @@ enum Exec {
 
 /// Execute one experiment point.
 pub fn run_spec(spec: RunSpec) -> RunResult {
+    run_spec_opts(spec, RunOpts::default()).0
+}
+
+/// Execute one experiment point under the protocol verifier: the run is
+/// traced (`dist::RunOpts::trace`), every multiply stamps a quiescence
+/// boundary, and the recorded trace goes through
+/// [`verify::check`]. The `RunResult` is computed exactly as in
+/// [`run_spec`] — tracing never touches virtual clocks or counters.
+pub fn run_spec_verified(spec: RunSpec) -> (RunResult, VerifyReport) {
+    let (result, trace) = run_spec_opts(
+        spec,
+        RunOpts {
+            trace: true,
+            perturb: None,
+        },
+    );
+    let report = verify::check(&trace.expect("traced run must return a trace"));
+    (result, report)
+}
+
+/// [`run_spec`] with explicit substrate options (tracing / schedule
+/// perturbation); returns the trace when tracing was on.
+pub fn run_spec_opts(spec: RunSpec, opts: RunOpts) -> (RunResult, Option<TraceLog>) {
     let p = spec.nodes * spec.rpn;
     let (pr, pc) = grid_shape(p);
     let (m, n, k) = spec.shape.dims();
@@ -277,7 +301,7 @@ pub fn run_spec(spec: RunSpec) -> RunResult {
         }
     };
 
-    let per_rank = run_ranks(p, net, move |world| {
+    let (per_rank, trace) = run_ranks_opts(p, net, opts, move |world| {
         let cfg = |algorithm: Algorithm| MultiplyConfig {
             engine: EngineOpts {
                 threads: spec.threads,
@@ -291,6 +315,7 @@ pub fn run_spec(spec: RunSpec) -> RunResult {
             filter_eps: 0.0,
             plan_verbose: spec.plan_verbose,
             runtime: None,
+            verify: opts.trace,
         };
         // cyclic A (m × k) / B (k × n) shares over `grid_dims` — shared
         // by every grid-based branch so seeding and fill can never
@@ -458,19 +483,22 @@ pub fn run_spec(spec: RunSpec) -> RunResult {
         oom |= rank_oom;
     }
     let plan = chosen_plan.or_else(|| stats.plan.clone());
-    RunResult {
-        seconds: if oom { -1.0 } else { seconds },
-        repl_seconds,
-        total_seconds: if oom { -1.0 } else { total_seconds },
-        iterations: iters,
-        wall: wall0.elapsed().as_secs_f64(),
-        occupancy_a: stats.occupancy_a(),
-        occupancy_b: stats.occupancy_b(),
-        occupancy_c: stats.occupancy_c(),
-        stats,
-        plan,
-        oom,
-    }
+    (
+        RunResult {
+            seconds: if oom { -1.0 } else { seconds },
+            repl_seconds,
+            total_seconds: if oom { -1.0 } else { total_seconds },
+            iterations: iters,
+            wall: wall0.elapsed().as_secs_f64(),
+            occupancy_a: stats.occupancy_a(),
+            occupancy_b: stats.occupancy_b(),
+            occupancy_c: stats.occupancy_c(),
+            stats,
+            plan,
+            oom,
+        },
+        trace,
+    )
 }
 
 fn fill_for(mode: Mode, seed: u64) -> Fill {

@@ -32,16 +32,20 @@
 //! clock-advances-while-blocked to communication, so the two transports'
 //! modeled receiver stalls can be compared directly.
 
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 use std::collections::{HashMap, VecDeque};
 use std::panic::AssertUnwindSafe;
 use std::rc::Rc;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 pub mod rma;
+pub mod tags;
+pub mod verify;
 
 pub use rma::{RmaWindow, Transport};
+
+use verify::{CommEvent, EventKind, Provenance, TraceLog};
 
 /// Bytes per phantom element (the paper's f64) — mirrors
 /// `matrix::MODEL_ELEM_BYTES`, duplicated here because the substrate
@@ -188,6 +192,21 @@ type QueueKey = (usize, usize, u64); // (src world rank, dst world rank, tag)
 struct Exposed {
     payload: Payload,
     at: f64,
+    /// Globally unique exposure serial plus the exposing window's
+    /// per-rank instance number — protocol-verifier provenance (both
+    /// zero when tracing is off).
+    serial: u64,
+    instance: u64,
+}
+
+/// What a blocked rank is waiting on (protocol-verifier wait-for graph;
+/// only populated when tracing is on).
+#[derive(Clone, Copy, Debug)]
+enum WaitFor {
+    /// Blocked in a receive / epoch close on `(src, me, tag)`.
+    Msg { src: usize, tag: u64 },
+    /// Blocked in an RMA `get` on `src`'s exposure slot for `tag`.
+    Exposure { src: usize, tag: u64 },
 }
 
 /// Process-shared substrate state (one per [`run_ranks`] call).
@@ -205,6 +224,22 @@ struct Shared {
     /// Set when any rank thread panics, so blocked receivers abort
     /// instead of deadlocking.
     dead: AtomicBool,
+    /// Protocol-verifier event log (`None` = tracing off: the default
+    /// path records nothing and pays one branch per operation).
+    trace: Option<Mutex<Vec<CommEvent>>>,
+    /// Wait-for graph of currently blocked ranks (world rank → what it
+    /// awaits). Only maintained when tracing is on; drives runtime
+    /// deadlock detection and the blocked-at-shutdown report.
+    waiting: Mutex<HashMap<usize, WaitFor>>,
+    /// First panic cause observed (deadlock reports pre-register here so
+    /// they win the race against the secondary "peer rank died" panics).
+    first_panic: Mutex<Option<String>>,
+    /// Monotone id handed to each RMA exposure (verifier provenance).
+    expose_serial: AtomicU64,
+    /// Schedule-perturbation seed (`None` = off): per-rank RNGs derive
+    /// from it and inject OS-level yields, shaking thread interleavings
+    /// without touching any virtual clock.
+    perturb: Option<u64>,
 }
 
 impl Shared {
@@ -218,12 +253,19 @@ impl Shared {
     }
 
     fn pop_blocking(&self, key: QueueKey) -> Msg {
+        let verify = self.trace.is_some();
         let mut q = self
             .queues
             .lock()
             .unwrap_or_else(|e| e.into_inner());
         loop {
             if let Some(m) = q.get_mut(&key).and_then(|d| d.pop_front()) {
+                if verify {
+                    self.waiting
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .remove(&key.1);
+                }
                 return m;
             }
             if self.dead.load(Ordering::SeqCst) {
@@ -232,7 +274,108 @@ impl Shared {
                     key.0, key.1, key.2
                 );
             }
+            if verify {
+                self.waiting
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .insert(key.1, WaitFor::Msg { src: key.0, tag: key.2 });
+                if let Some(report) = self.find_deadlock(key.1, Some(&q), None) {
+                    self.panic_with_report(report);
+                }
+            }
             q = self.cv.wait(q).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Record `report` as the primary panic cause (so the join-side
+    /// panic surfaces it instead of a secondary "peer died"), wake every
+    /// blocked rank, and panic.
+    fn panic_with_report(&self, report: String) -> ! {
+        let mut first = self
+            .first_panic
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        if first.is_none() {
+            *first = Some(report.clone());
+        }
+        drop(first);
+        self.mark_dead();
+        panic!("{report}");
+    }
+
+    /// Walk the wait-for graph from `start`, verifying each edge is a
+    /// genuinely blocked wait (awaited queue empty / exposure absent);
+    /// returns a cycle report if `start` can never be woken. Exactly one
+    /// of `queues_held` / `exposed_held` is the map the caller already
+    /// locked; the other is `try_lock`ed — failure to acquire means some
+    /// rank is mid-operation (hence live), so detection safely defers.
+    fn find_deadlock(
+        &self,
+        start: usize,
+        queues_held: Option<&HashMap<QueueKey, VecDeque<Msg>>>,
+        exposed_held: Option<&HashMap<(usize, u64), Option<Exposed>>>,
+    ) -> Option<String> {
+        let waiting = match self.waiting.try_lock() {
+            Ok(g) => g,
+            Err(_) => return None,
+        };
+        let q_storage;
+        let queues = match queues_held {
+            Some(q) => q,
+            None => {
+                q_storage = self.queues.try_lock().ok()?;
+                &*q_storage
+            }
+        };
+        let e_storage;
+        let exposed = match exposed_held {
+            Some(e) => e,
+            None => {
+                e_storage = self.exposed.try_lock().ok()?;
+                &*e_storage
+            }
+        };
+        let mut path: Vec<(usize, WaitFor)> = Vec::new();
+        let mut cur = start;
+        loop {
+            let wf = match waiting.get(&cur) {
+                Some(w) => *w,
+                None => return None, // cur is active → no deadlock (yet)
+            };
+            let blocked = match wf {
+                WaitFor::Msg { src, tag } => queues
+                    .get(&(src, cur, tag))
+                    .map_or(true, |d| d.is_empty()),
+                // a tombstoned slot wakes the getter with a panic, so
+                // only a fully absent exposure is a real block
+                WaitFor::Exposure { src, tag } => !exposed.contains_key(&(src, tag)),
+            };
+            if !blocked {
+                return None;
+            }
+            path.push((cur, wf));
+            let next = match wf {
+                WaitFor::Msg { src, .. } | WaitFor::Exposure { src, .. } => src,
+            };
+            if let Some(pos) = path.iter().position(|&(r, _)| r == next) {
+                let mut s = String::from("protocol verifier: wait-for deadlock: ");
+                for (i, (r, wf)) in path[pos..].iter().enumerate() {
+                    if i > 0 {
+                        s.push_str(" -> ");
+                    }
+                    match wf {
+                        WaitFor::Msg { src, tag } => s.push_str(&format!(
+                            "rank {r} waits for message (src {src}, tag {tag:#x})"
+                        )),
+                        WaitFor::Exposure { src, tag } => s.push_str(&format!(
+                            "rank {r} waits for exposure (src {src}, tag {tag:#x})"
+                        )),
+                    }
+                }
+                s.push_str(&format!(" -> rank {next}"));
+                return Some(s);
+            }
+            cur = next;
         }
     }
 
@@ -254,13 +397,27 @@ struct RankState {
     /// Accumulated comm-attributed clock advances (see
     /// [`CommStats::wait_seconds`]).
     wait_s: Cell<f64>,
+    /// Protocol-verifier per-rank logical clock (program order of this
+    /// rank's traced events).
+    seq: Cell<u64>,
+    /// Provenance of the operation in flight: 0 = user, 1 = collective,
+    /// 2 = RMA (see [`Provenance`]). A cell, not a parameter, so the
+    /// collectives' inner sends/recvs inherit it without plumbing.
+    prov: Cell<u8>,
+    /// Multiply index ([`CommView::phase_mark`]): the quiescence
+    /// boundary counter of the verifier.
+    phase: Cell<u64>,
+    /// Schedule-perturbation RNG state (0 = perturbation off).
+    rng: Cell<u64>,
+    /// Per-rank creation counts per RMA `win_id` — distinguishes
+    /// instance N of a recreated window from instance N−1 (the verifier's
+    /// stale-exposure check).
+    win_instances: RefCell<HashMap<u64, u64>>,
 }
 
-// Reserved tag space for collectives (user code uses small tags).
-const TAG_GATHER: u64 = 1 << 60;
-const TAG_SPREAD: u64 = (1 << 60) + 1;
-const TAG_BCAST: u64 = (1 << 60) + 2;
-const TAG_REDUCE: u64 = (1 << 60) + 3;
+// Reserved tag space for collectives (user code uses small tags); the
+// registry in [`tags`] proves no user/RMA tag can reach this block.
+use tags::{TAG_BCAST, TAG_GATHER, TAG_REDUCE, TAG_SPREAD};
 
 /// One rank's handle on a communicator (the world or a sub-group).
 ///
@@ -278,9 +435,16 @@ pub struct CommView {
 
 impl CommView {
     fn world(shared: Arc<Shared>, size: usize, rank: usize) -> CommView {
+        let state = Rc::new(RankState::default());
+        if let Some(seed) = shared.perturb {
+            // distinct nonzero stream per rank (0 would disable the RNG)
+            state
+                .rng
+                .set((seed ^ (rank as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)).max(1));
+        }
         CommView {
             shared,
-            state: Rc::new(RankState::default()),
+            state,
             members: Rc::new((0..size).collect()),
             me: rank,
         }
@@ -355,9 +519,119 @@ impl CommView {
         }
     }
 
+    /// Inject an OS-level yield with probability 1/8 when schedule
+    /// perturbation is on ([`RunOpts::perturb`]) — shakes the thread
+    /// interleaving without touching any virtual clock, so a correct
+    /// protocol produces bit-identical results under every seed.
+    fn maybe_yield(&self) {
+        let r = self.state.rng.get();
+        if r == 0 {
+            return;
+        }
+        let mut x = r;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.state.rng.set(x.max(1));
+        if x % 8 == 0 {
+            std::thread::yield_now();
+        }
+    }
+
+    /// Append a traced event (no-op when tracing is off); provenance
+    /// comes from the in-flight-operation cell.
+    fn record(&self, peer: Option<usize>, tag: u64, bytes: u64, kind: EventKind) {
+        let provenance = match self.state.prov.get() {
+            1 => Provenance::Collective,
+            2 => Provenance::Rma,
+            _ => Provenance::User,
+        };
+        self.record_event(provenance, peer, tag, bytes, kind);
+    }
+
+    fn record_event(
+        &self,
+        provenance: Provenance,
+        peer: Option<usize>,
+        tag: u64,
+        bytes: u64,
+        kind: EventKind,
+    ) {
+        if let Some(tr) = &self.shared.trace {
+            let clock = self.state.seq.get();
+            self.state.seq.set(clock + 1);
+            tr.lock().unwrap_or_else(|e| e.into_inner()).push(CommEvent {
+                rank: self.my_world(),
+                peer,
+                tag,
+                bytes,
+                clock,
+                vtime: self.now(),
+                provenance,
+                kind,
+            });
+        }
+    }
+
+    /// Run `f` with the provenance cell set (collectives / RMA), so the
+    /// traced events of inner sends/recvs carry the right issuer.
+    fn with_prov<R>(&self, prov: u8, f: impl FnOnce() -> R) -> R {
+        let old = self.state.prov.get();
+        self.state.prov.set(prov);
+        let out = f();
+        self.state.prov.set(old);
+        out
+    }
+
+    /// Mark a multiply (quiescence) boundary in the trace: the checker
+    /// requires every channel to drain before the mark — a message sent
+    /// before and received after one is flagged as an orphan. No-op when
+    /// tracing is off.
+    pub fn phase_mark(&self) {
+        if self.shared.trace.is_some() {
+            let ph = self.state.phase.get();
+            self.record(None, 0, 0, EventKind::Mark { phase: ph });
+            self.state.phase.set(ph + 1);
+        }
+    }
+
+    /// Snapshot of currently blocked ranks as (world rank, awaited src
+    /// world rank, tag) — populated only when tracing is on. Lets tests
+    /// observe who is parked before injecting a failure.
+    pub fn blocked_ranks(&self) -> Vec<(usize, usize, u64)> {
+        let w = self
+            .shared
+            .waiting
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let mut out: Vec<(usize, usize, u64)> = w
+            .iter()
+            .map(|(&r, wf)| match *wf {
+                WaitFor::Msg { src, tag } | WaitFor::Exposure { src, tag } => (r, src, tag),
+            })
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
     /// Asynchronous send (never blocks; cost materializes at the
     /// receiver as the message's arrival time).
     pub fn send(&self, dst: usize, tag: u64, payload: Payload) {
+        self.maybe_yield();
+        if self.shared.trace.is_some() {
+            self.record(
+                Some(self.members[dst]),
+                tag,
+                payload.wire_bytes(),
+                EventKind::Send,
+            );
+        }
+        self.send_raw(dst, tag, payload);
+    }
+
+    /// The wire half of [`CommView::send`]: counters + queue push, no
+    /// trace event ([`RmaWindow::put`] records its own `Put` instead).
+    fn send_raw(&self, dst: usize, tag: u64, payload: Payload) {
         let bytes = payload.wire_bytes();
         self.state
             .bytes_sent
@@ -374,10 +648,19 @@ impl CommView {
     /// Blocking receive of the next message from `src` with `tag`;
     /// advances the virtual clock to the arrival time.
     pub fn recv(&self, src: usize, tag: u64) -> Payload {
+        self.maybe_yield();
         let msg = self
             .shared
             .pop_blocking((self.members[src], self.my_world(), tag));
         self.wait_to(msg.ready);
+        if self.shared.trace.is_some() {
+            self.record(
+                Some(self.members[src]),
+                tag,
+                msg.payload.wire_bytes(),
+                EventKind::Recv,
+            );
+        }
         msg.payload
     }
 
@@ -395,19 +678,21 @@ impl CommView {
         if p == 1 {
             return payload;
         }
-        if self.me == 0 {
-            let mut acc = payload;
-            for src in 1..p {
-                acc = sum_payloads(acc, self.recv(src, TAG_GATHER));
+        self.with_prov(1, || {
+            if self.me == 0 {
+                let mut acc = payload;
+                for src in 1..p {
+                    acc = sum_payloads(acc, self.recv(src, TAG_GATHER));
+                }
+                for dst in 1..p {
+                    self.send(dst, TAG_SPREAD, acc.clone());
+                }
+                acc
+            } else {
+                self.send(0, TAG_GATHER, payload);
+                self.recv(0, TAG_SPREAD)
             }
-            for dst in 1..p {
-                self.send(dst, TAG_SPREAD, acc.clone());
-            }
-            acc
-        } else {
-            self.send(0, TAG_GATHER, payload);
-            self.recv(0, TAG_SPREAD)
-        }
+        })
     }
 
     /// Broadcast from `root` (local rank). The root passes
@@ -416,18 +701,20 @@ impl CommView {
         if self.size() == 1 {
             return payload.expect("bcast root must provide a payload");
         }
-        if self.me == root {
-            let pl = payload.expect("bcast root must provide a payload");
-            for dst in 0..self.size() {
-                if dst != root {
-                    self.send(dst, TAG_BCAST, pl.clone());
+        self.with_prov(1, || {
+            if self.me == root {
+                let pl = payload.expect("bcast root must provide a payload");
+                for dst in 0..self.size() {
+                    if dst != root {
+                        self.send(dst, TAG_BCAST, pl.clone());
+                    }
                 }
+                pl
+            } else {
+                assert!(payload.is_none(), "non-root rank passed a bcast payload");
+                self.recv(root, TAG_BCAST)
             }
-            pl
-        } else {
-            assert!(payload.is_none(), "non-root rank passed a bcast payload");
-            self.recv(root, TAG_BCAST)
-        }
+        })
     }
 
     /// Sum-reduce to `root` (local rank): the root returns the sum (in
@@ -437,18 +724,20 @@ impl CommView {
         if self.size() == 1 {
             return payload;
         }
-        if self.me == root {
-            let mut acc = payload;
-            for src in 0..self.size() {
-                if src != root {
-                    acc = sum_payloads(acc, self.recv(src, TAG_REDUCE));
+        self.with_prov(1, || {
+            if self.me == root {
+                let mut acc = payload;
+                for src in 0..self.size() {
+                    if src != root {
+                        acc = sum_payloads(acc, self.recv(src, TAG_REDUCE));
+                    }
                 }
+                acc
+            } else {
+                self.send(root, TAG_REDUCE, payload);
+                Payload::Empty
             }
-            acc
-        } else {
-            self.send(root, TAG_REDUCE, payload);
-            Payload::Empty
-        }
+        })
     }
 }
 
@@ -588,11 +877,46 @@ impl Grid3D {
     }
 }
 
+/// Substrate options beyond the network model: protocol-verifier
+/// tracing and schedule perturbation (both off by default — the default
+/// path is bit-identical to a build without the verifier).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RunOpts {
+    /// Record a [`TraceLog`] of every substrate operation for
+    /// [`verify::check`], and enable the runtime wait-for deadlock
+    /// detector plus the `RmaWindow` reuse guards.
+    pub trace: bool,
+    /// Seed for schedule perturbation: per-rank RNGs inject OS yields
+    /// around comm operations, permuting the thread interleaving
+    /// (loom-style, but sampled). Virtual clocks are untouched, so every
+    /// seed must produce bit-identical results — the schedule-explorer
+    /// tests assert exactly that.
+    pub perturb: Option<u64>,
+}
+
 /// Run `f` on `p` rank threads over a fresh substrate; returns the
 /// per-rank results in rank order. Panics with "rank thread panicked" if
 /// any rank fails (blocked peers are woken and aborted instead of
 /// deadlocking).
 pub fn run_ranks<T, F>(p: usize, net: NetModel, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(CommView) -> T + Send + Sync,
+{
+    run_ranks_opts(p, net, RunOpts::default(), f).0
+}
+
+/// [`run_ranks`] with explicit [`RunOpts`]; additionally returns the
+/// recorded trace when `opts.trace` is set. On a rank panic, the join
+/// panic carries the first rank's cause plus a blocked-at-shutdown
+/// report of who was still parked on which (src, tag) — the diagnosable
+/// version of the generic peer-died abort.
+pub fn run_ranks_opts<T, F>(
+    p: usize,
+    net: NetModel,
+    opts: RunOpts,
+    f: F,
+) -> (Vec<T>, Option<TraceLog>)
 where
     T: Send,
     F: Fn(CommView) -> T + Send + Sync,
@@ -605,6 +929,11 @@ where
         exposed: Mutex::new(HashMap::new()),
         exposed_cv: Condvar::new(),
         dead: AtomicBool::new(false),
+        trace: opts.trace.then(|| Mutex::new(Vec::new())),
+        waiting: Mutex::new(HashMap::new()),
+        first_panic: Mutex::new(None),
+        expose_serial: AtomicU64::new(0),
+        perturb: opts.perturb,
     });
     let mut out: Vec<Option<T>> = (0..p).map(|_| None).collect();
     let mut failed = false;
@@ -620,6 +949,19 @@ where
                     match std::panic::catch_unwind(AssertUnwindSafe(|| f(view))) {
                         Ok(v) => *slot = Some(v),
                         Err(e) => {
+                            let cause = e
+                                .downcast_ref::<String>()
+                                .cloned()
+                                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()));
+                            if let Some(c) = cause {
+                                let mut first = shared
+                                    .first_panic
+                                    .lock()
+                                    .unwrap_or_else(|e| e.into_inner());
+                                if first.is_none() {
+                                    *first = Some(c);
+                                }
+                            }
                             shared.mark_dead();
                             std::panic::resume_unwind(e);
                         }
@@ -634,11 +976,45 @@ where
         }
     });
     if failed {
-        panic!("rank thread panicked");
+        let cause = shared
+            .first_panic
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take();
+        let mut msg = match cause {
+            Some(c) => format!("rank thread panicked: {c}"),
+            None => "rank thread panicked".to_string(),
+        };
+        let waiting = shared
+            .waiting
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        if !waiting.is_empty() {
+            let mut blocked: Vec<String> = waiting
+                .iter()
+                .map(|(&r, wf)| match *wf {
+                    WaitFor::Msg { src, tag } => {
+                        format!("rank {r} waiting for message (src {src}, tag {tag:#x})")
+                    }
+                    WaitFor::Exposure { src, tag } => {
+                        format!("rank {r} waiting for exposure (src {src}, tag {tag:#x})")
+                    }
+                })
+                .collect();
+            blocked.sort();
+            msg.push_str(&format!("; blocked at shutdown: {}", blocked.join(", ")));
+        }
+        panic!("{msg}");
     }
-    out.into_iter()
-        .map(|o| o.expect("rank result missing"))
-        .collect()
+    let trace = shared.trace.as_ref().map(|m| TraceLog {
+        events: std::mem::take(&mut *m.lock().unwrap_or_else(|e| e.into_inner())),
+    });
+    (
+        out.into_iter()
+            .map(|o| o.expect("rank result missing"))
+            .collect(),
+        trace,
+    )
 }
 
 #[cfg(test)]

@@ -55,7 +55,11 @@
 //! virtual timings stay deterministic regardless of OS scheduling,
 //! exactly like the two-sided queues.
 
-use super::{CommView, Exposed, Payload};
+use std::sync::atomic::Ordering;
+
+use super::tags::{EPOCH_SPAN, MAX_WIN_ID, TAG_RMA_BASE};
+use super::verify::{EventKind, Provenance};
+use super::{CommView, Exposed, Payload, WaitFor};
 
 /// Which point-to-point transport the multiplication's panel traffic
 /// uses (threaded through `MultiplyConfig`).
@@ -87,29 +91,76 @@ impl std::fmt::Display for Transport {
     }
 }
 
-// Reserved tag space: below the collectives' 1 << 60 block, above user
-// tags. Each window owns EPOCH_SPAN consecutive tags, one per epoch.
-const TAG_RMA_BASE: u64 = 1 << 59;
-const EPOCH_SPAN: u64 = 1 << 32;
-
 /// One rank's handle on a collectively-created RMA window over a
 /// communicator view. Local ranks address peers exactly as in the
-/// underlying [`CommView`].
+/// underlying [`CommView`]. Tag layout (base + per-epoch offset) comes
+/// from the [`super::tags`] registry.
 pub struct RmaWindow {
     comm: CommView,
     base_tag: u64,
     epoch: u64,
+    win_id: u64,
+    /// This rank's creation count for `win_id` (1-based under verify
+    /// mode, 0 when tracing is off) — lets the verifier tell a stale
+    /// previous-instance exposure from a live same-instance one.
+    instance: u64,
 }
 
 impl RmaWindow {
     /// Create a window over `comm` (collective: every member must create
     /// the same `win_id` at the same logical point, like `MPI_Win_create`).
+    ///
+    /// Under verify mode (tracing on), recreating a `win_id` while this
+    /// rank still has a **live exposure** on the previous instance
+    /// panics immediately — that exposure would alias the new instance's
+    /// epoch-0 slot (the get-after-epoch-restart hazard). Queue residue
+    /// and tombstoned slots are checked offline by [`super::verify::check`]
+    /// (a racing peer may legitimately still be draining them).
     pub fn new(comm: &CommView, win_id: u64) -> RmaWindow {
-        assert!(win_id < (1 << 26), "window id outside the RMA tag space");
+        assert!(win_id < MAX_WIN_ID, "window id outside the RMA tag space");
+        let base_tag = TAG_RMA_BASE + win_id * EPOCH_SPAN;
+        let mut instance = 0;
+        if comm.shared.trace.is_some() {
+            instance = {
+                let mut insts = comm.state.win_instances.borrow_mut();
+                let e = insts.entry(win_id).or_insert(0);
+                *e += 1;
+                *e
+            };
+            let me = comm.my_world();
+            let w = comm
+                .shared
+                .exposed
+                .lock()
+                .unwrap_or_else(|e| e.into_inner());
+            for (&(rank, tag), slot) in w.iter() {
+                if rank == me
+                    && (base_tag..base_tag + EPOCH_SPAN).contains(&tag)
+                    && slot.is_some()
+                {
+                    panic!(
+                        "protocol verifier: rank {me} recreated window id {win_id} while its \
+                         own exposure for epoch {} is still live — close the epoch first or \
+                         use a fresh win_id",
+                        tag - base_tag
+                    );
+                }
+            }
+            drop(w);
+            comm.record_event(
+                Provenance::Rma,
+                None,
+                base_tag,
+                0,
+                EventKind::WinCreate { win: win_id, instance },
+            );
+        }
         RmaWindow {
             comm: comm.clone(),
-            base_tag: TAG_RMA_BASE + win_id * EPOCH_SPAN,
+            base_tag,
             epoch: 0,
+            win_id,
+            instance,
         }
     }
 
@@ -129,7 +180,21 @@ impl RmaWindow {
     /// until it closes the epoch. At most one put per (origin, target)
     /// pair per epoch.
     pub fn put(&self, dst: usize, payload: Payload) {
-        self.comm.send(dst, self.tag(), payload);
+        self.comm.maybe_yield();
+        if self.comm.shared.trace.is_some() {
+            self.comm.record_event(
+                Provenance::Rma,
+                Some(self.comm.members[dst]),
+                self.tag(),
+                payload.wire_bytes(),
+                EventKind::Put {
+                    win: self.win_id,
+                    instance: self.instance,
+                    epoch: self.epoch,
+                },
+            );
+        }
+        self.comm.send_raw(dst, self.tag(), payload);
     }
 
     /// Expose a buffer in this rank's window for the current epoch, so
@@ -141,13 +206,50 @@ impl RmaWindow {
     pub fn expose(&self, payload: Payload) {
         let key = (self.comm.my_world(), self.tag());
         let at = self.comm.now();
+        let verify = self.comm.shared.trace.is_some();
+        let serial = if verify {
+            self.comm.shared.expose_serial.fetch_add(1, Ordering::Relaxed)
+        } else {
+            0
+        };
+        if verify {
+            self.comm.record_event(
+                Provenance::Rma,
+                None,
+                self.tag(),
+                payload.wire_bytes(),
+                EventKind::Expose {
+                    win: self.win_id,
+                    instance: self.instance,
+                    epoch: self.epoch,
+                    serial,
+                },
+            );
+        }
         let mut w = self
             .comm
             .shared
             .exposed
             .lock()
             .unwrap_or_else(|e| e.into_inner());
-        w.insert(key, Some(Exposed { payload, at }));
+        if verify {
+            if let Some(Some(_)) = w.get(&key) {
+                panic!(
+                    "protocol verifier: rank {} exposed twice on window {} epoch {} without \
+                     closing the epoch in between",
+                    key.0, self.win_id, self.epoch
+                );
+            }
+        }
+        w.insert(
+            key,
+            Some(Exposed {
+                payload,
+                at,
+                serial,
+                instance: self.instance,
+            }),
+        );
         self.comm.shared.exposed_cv.notify_all();
     }
 
@@ -158,8 +260,11 @@ impl RmaWindow {
     /// Panics if `src` already closed the epoch (erroneous access
     /// outside the exposure epoch — loud instead of a silent hang).
     pub fn get(&self, src: usize) -> Payload {
+        self.comm.maybe_yield();
+        let verify = self.comm.shared.trace.is_some();
         let key = (self.comm.members[src], self.tag());
-        let (payload, at) = {
+        let me = self.comm.my_world();
+        let (payload, at, serial, exposer_instance) = {
             let mut w = self
                 .comm
                 .shared
@@ -168,18 +273,45 @@ impl RmaWindow {
                 .unwrap_or_else(|e| e.into_inner());
             loop {
                 match w.get(&key) {
-                    Some(Some(e)) => break (e.payload.clone(), e.at),
+                    Some(Some(e)) => {
+                        if verify {
+                            self.comm
+                                .shared
+                                .waiting
+                                .lock()
+                                .unwrap_or_else(|e| e.into_inner())
+                                .remove(&me);
+                        }
+                        break (e.payload.clone(), e.at, e.serial, e.instance);
+                    }
                     Some(None) => panic!(
                         "RMA get from rank {} after it closed exposure epoch {}",
                         key.0, self.epoch
                     ),
                     None => {}
                 }
-                if self.comm.shared.dead.load(std::sync::atomic::Ordering::SeqCst) {
+                if self.comm.shared.dead.load(Ordering::SeqCst) {
                     panic!(
                         "peer rank died while waiting for exposure (src {}, epoch {})",
                         key.0, self.epoch
                     );
+                }
+                if verify {
+                    self.comm
+                        .shared
+                        .waiting
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .insert(
+                            me,
+                            WaitFor::Exposure {
+                                src: key.0,
+                                tag: key.1,
+                            },
+                        );
+                    if let Some(report) = self.comm.shared.find_deadlock(me, None, Some(&w)) {
+                        self.comm.shared.panic_with_report(report);
+                    }
                 }
                 w = self
                     .comm
@@ -189,6 +321,21 @@ impl RmaWindow {
                     .unwrap_or_else(|e| e.into_inner());
             }
         };
+        if verify {
+            self.comm.record_event(
+                Provenance::Rma,
+                Some(key.0),
+                key.1,
+                payload.wire_bytes(),
+                EventKind::Get {
+                    win: self.win_id,
+                    instance: self.instance,
+                    epoch: self.epoch,
+                    exposure: serial,
+                    exposer_instance,
+                },
+            );
+        }
         let bytes = payload.wire_bytes();
         let st = &self.comm.state;
         st.bytes_sent.set(st.bytes_sent.get() + bytes);
@@ -225,22 +372,57 @@ impl RmaWindow {
                 self.comm.shared.exposed_cv.notify_all();
             }
         }
+        let closed_epoch = self.epoch;
         self.epoch += 1;
+        let verify = self.comm.shared.trace.is_some();
         if sources.is_empty() {
+            if verify {
+                self.comm.record_event(
+                    Provenance::Rma,
+                    None,
+                    tag,
+                    0,
+                    EventKind::CloseEpoch {
+                        win: self.win_id,
+                        instance: self.instance,
+                        epoch: closed_epoch,
+                        drained: Vec::new(),
+                    },
+                );
+            }
             return Vec::new();
         }
+        self.comm.maybe_yield();
         let mut payloads = Vec::with_capacity(sources.len());
         let mut latest = f64::NEG_INFINITY;
+        let mut drained = Vec::with_capacity(sources.len());
         for &src in sources {
             let msg = self
                 .comm
                 .shared
                 .pop_blocking((self.comm.members[src], self.comm.my_world(), tag));
             latest = latest.max(msg.ready);
+            if verify {
+                drained.push((self.comm.members[src], msg.payload.wire_bytes()));
+            }
             payloads.push(msg.payload);
         }
         let sync = self.comm.now().max(latest) + self.comm.shared.net.latency;
         self.comm.wait_to(sync);
+        if verify {
+            self.comm.record_event(
+                Provenance::Rma,
+                None,
+                tag,
+                0,
+                EventKind::CloseEpoch {
+                    win: self.win_id,
+                    instance: self.instance,
+                    epoch: closed_epoch,
+                    drained,
+                },
+            );
+        }
         payloads
     }
 }

@@ -1,0 +1,250 @@
+//! The tag-space registry: every message tag and RMA window id the
+//! library uses, in one place, with compile-time non-collision checks.
+//!
+//! The virtual MPI substrate multiplexes all point-to-point traffic over
+//! `(src, dst, tag)` FIFO queues, so two call sites that pick the same
+//! tag silently cross-match messages. Before this registry each driver
+//! declared its own literals and documented its neighbors in prose
+//! ("cannon uses 10–13, twofive 14–17, …"); now the layout is enforced:
+//!
+//! * **User message tags** (`TAG_*`, small integers `< TAG_RMA_BASE`):
+//!   the two-sided skew/shift/reduce traffic of each driver.
+//! * **RMA window ids** (`WIN_*`, `< MAX_WIN_ID`): each window owns the
+//!   tag range `TAG_RMA_BASE + id·EPOCH_SPAN ..+ EPOCH_SPAN`, one tag
+//!   per epoch.
+//! * **Reserved blocks**: RMA epoch tags live at [`TAG_RMA_BASE`]
+//!   (`1 << 59`), collectives at [`TAG_COLLECTIVE_BASE`] (`1 << 60`).
+//!   The const assertions below prove the RMA block can never reach the
+//!   collective block and that no two registered values collide.
+//!
+//! `scripts/tag_lint.sh` (run in CI) rejects raw integer tag/win-id
+//! literals outside this file, so the registry stays the single source
+//! of truth. The protocol verifier ([`super::verify`]) additionally
+//! checks at runtime that no user-provenance message enters a reserved
+//! block.
+
+// ---- user message tags (two-sided point-to-point) -----------------------
+
+/// Cannon skew: A panels along grid rows.
+pub const TAG_CANNON_SKEW_A: u64 = 10;
+/// Cannon skew: B panels along grid columns.
+pub const TAG_CANNON_SKEW_B: u64 = 11;
+/// Cannon per-tick shift of A (one column left).
+pub const TAG_CANNON_SHIFT_A: u64 = 12;
+/// Cannon per-tick shift of B (one row up).
+pub const TAG_CANNON_SHIFT_B: u64 = 13;
+/// 2.5D skew of A into the native layout.
+pub const TAG_TWOFIVE_SKEW_A: u64 = 14;
+/// 2.5D skew of B into the native layout.
+pub const TAG_TWOFIVE_SKEW_B: u64 = 15;
+/// 2.5D per-tick shift of A.
+pub const TAG_TWOFIVE_SHIFT_A: u64 = 16;
+/// 2.5D per-tick shift of B.
+pub const TAG_TWOFIVE_SHIFT_B: u64 = 17;
+/// Resident-session pre-skew of A (`multiply::session`).
+pub const TAG_RES_SKEW_A: u64 = 18;
+/// Resident-session pre-skew of B.
+pub const TAG_RES_SKEW_B: u64 = 19;
+/// Sparse C layer-reduce (`multiply::sparse_exchange`): partial C
+/// shares to layer 0, drained root-first in ascending layer order.
+pub const TAG_REDUCE_C: u64 = 20;
+
+// ---- RMA window ids -----------------------------------------------------
+
+/// Cannon one-sided skew of A.
+pub const WIN_CANNON_SKEW_A: u64 = 1;
+/// Cannon one-sided skew of B.
+pub const WIN_CANNON_SKEW_B: u64 = 2;
+/// Cannon one-sided per-tick shift of A (one epoch per tick).
+pub const WIN_CANNON_SHIFT_A: u64 = 3;
+/// Cannon one-sided per-tick shift of B.
+pub const WIN_CANNON_SHIFT_B: u64 = 4;
+/// 2.5D one-sided skew of A.
+pub const WIN_TWOFIVE_SKEW_A: u64 = 5;
+/// 2.5D one-sided skew of B.
+pub const WIN_TWOFIVE_SKEW_B: u64 = 6;
+/// 2.5D one-sided per-tick shift of A.
+pub const WIN_TWOFIVE_SHIFT_A: u64 = 7;
+/// 2.5D one-sided per-tick shift of B.
+pub const WIN_TWOFIVE_SHIFT_B: u64 = 8;
+/// Sparse C layer-reduce window (`multiply::sparse_exchange`).
+pub const WIN_REDUCE_C: u64 = 9;
+/// 2.5D layer replication bcast window (`multiply::twofive`).
+pub const WIN_REPL: u64 = 10;
+/// Resident-session one-sided pre-skew of A.
+pub const WIN_RES_SKEW_A: u64 = 11;
+/// Resident-session one-sided pre-skew of B.
+pub const WIN_RES_SKEW_B: u64 = 12;
+/// Tall-skinny C allreduce window (`multiply::tall_skinny`).
+pub const WIN_TS_REDUCE: u64 = 13;
+
+// ---- reserved blocks ----------------------------------------------------
+
+/// Base of the RMA epoch-tag block: window `w`, epoch `e` maps to
+/// `TAG_RMA_BASE + w·EPOCH_SPAN + e`.
+pub const TAG_RMA_BASE: u64 = 1 << 59;
+/// Tags per window — one epoch per tag.
+pub const EPOCH_SPAN: u64 = 1 << 32;
+/// Window ids must stay below this so the whole RMA block fits under
+/// the collective block (asserted below).
+pub const MAX_WIN_ID: u64 = 1 << 26;
+
+/// Base of the collective block (user code must never reach it).
+pub const TAG_COLLECTIVE_BASE: u64 = 1 << 60;
+/// Allreduce gather leg (to local rank 0).
+pub const TAG_GATHER: u64 = TAG_COLLECTIVE_BASE;
+/// Allreduce spread leg (result back out).
+pub const TAG_SPREAD: u64 = TAG_COLLECTIVE_BASE + 1;
+/// Broadcast payload.
+pub const TAG_BCAST: u64 = TAG_COLLECTIVE_BASE + 2;
+/// Reduce-to-root contributions.
+pub const TAG_REDUCE: u64 = TAG_COLLECTIVE_BASE + 3;
+
+// ---- compile-time non-collision assertions ------------------------------
+
+const ALL_MSG_TAGS: [u64; 15] = [
+    TAG_CANNON_SKEW_A,
+    TAG_CANNON_SKEW_B,
+    TAG_CANNON_SHIFT_A,
+    TAG_CANNON_SHIFT_B,
+    TAG_TWOFIVE_SKEW_A,
+    TAG_TWOFIVE_SKEW_B,
+    TAG_TWOFIVE_SHIFT_A,
+    TAG_TWOFIVE_SHIFT_B,
+    TAG_RES_SKEW_A,
+    TAG_RES_SKEW_B,
+    TAG_REDUCE_C,
+    TAG_GATHER,
+    TAG_SPREAD,
+    TAG_BCAST,
+    TAG_REDUCE,
+];
+
+const ALL_WIN_IDS: [u64; 13] = [
+    WIN_CANNON_SKEW_A,
+    WIN_CANNON_SKEW_B,
+    WIN_CANNON_SHIFT_A,
+    WIN_CANNON_SHIFT_B,
+    WIN_TWOFIVE_SKEW_A,
+    WIN_TWOFIVE_SKEW_B,
+    WIN_TWOFIVE_SHIFT_A,
+    WIN_TWOFIVE_SHIFT_B,
+    WIN_REDUCE_C,
+    WIN_REPL,
+    WIN_RES_SKEW_A,
+    WIN_RES_SKEW_B,
+    WIN_TS_REDUCE,
+];
+
+const fn all_distinct(xs: &[u64]) -> bool {
+    let mut i = 0;
+    while i < xs.len() {
+        let mut j = i + 1;
+        while j < xs.len() {
+            if xs[i] == xs[j] {
+                return false;
+            }
+            j += 1;
+        }
+        i += 1;
+    }
+    true
+}
+
+const fn all_below(xs: &[u64], limit: u64) -> bool {
+    let mut i = 0;
+    while i < xs.len() {
+        if xs[i] >= limit {
+            return false;
+        }
+        i += 1;
+    }
+    true
+}
+
+const _: () = assert!(all_distinct(&ALL_MSG_TAGS), "message tags collide");
+const _: () = assert!(all_distinct(&ALL_WIN_IDS), "window ids collide");
+const _: () = assert!(
+    all_below(&ALL_WIN_IDS, MAX_WIN_ID),
+    "window id outside the RMA tag space"
+);
+// user tags must sit below the RMA block, and the RMA block must end
+// below the collective block: w < 2^26 epochs of 2^32 tags from 2^59
+// reaches at most 2^59 + 2^58 < 2^60
+const _: () = assert!(
+    TAG_REDUCE_C < TAG_RMA_BASE,
+    "user tags must stay below the RMA block"
+);
+const _: () = assert!(
+    TAG_RMA_BASE + MAX_WIN_ID * EPOCH_SPAN <= TAG_COLLECTIVE_BASE,
+    "the RMA block must end below the collective block"
+);
+
+/// Which reserved block (if any) a raw tag falls into — the runtime
+/// counterpart of the const assertions, used by the protocol verifier's
+/// tag-space lint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TagSpace {
+    /// Plain user tag (`< TAG_RMA_BASE`).
+    User,
+    /// RMA epoch tag (`TAG_RMA_BASE ..< TAG_COLLECTIVE_BASE`).
+    Rma,
+    /// Collective tag (`>= TAG_COLLECTIVE_BASE`).
+    Collective,
+}
+
+/// Classify a raw tag into its reserved block.
+pub fn space_of(tag: u64) -> TagSpace {
+    if tag >= TAG_COLLECTIVE_BASE {
+        TagSpace::Collective
+    } else if tag >= TAG_RMA_BASE {
+        TagSpace::Rma
+    } else {
+        TagSpace::User
+    }
+}
+
+/// The window id an RMA epoch tag belongs to (`None` outside the RMA
+/// block).
+pub fn win_of(tag: u64) -> Option<u64> {
+    if space_of(tag) == TagSpace::Rma {
+        Some((tag - TAG_RMA_BASE) / EPOCH_SPAN)
+    } else {
+        None
+    }
+}
+
+/// The epoch index within its window of an RMA epoch tag.
+pub fn epoch_of(tag: u64) -> Option<u64> {
+    if space_of(tag) == TagSpace::Rma {
+        Some((tag - TAG_RMA_BASE) % EPOCH_SPAN)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spaces_classify() {
+        assert_eq!(space_of(TAG_REDUCE_C), TagSpace::User);
+        assert_eq!(space_of(TAG_RMA_BASE), TagSpace::Rma);
+        assert_eq!(
+            space_of(TAG_RMA_BASE + WIN_TS_REDUCE * EPOCH_SPAN + 7),
+            TagSpace::Rma
+        );
+        assert_eq!(space_of(TAG_GATHER), TagSpace::Collective);
+        assert_eq!(space_of(TAG_REDUCE), TagSpace::Collective);
+    }
+
+    #[test]
+    fn win_and_epoch_roundtrip() {
+        let tag = TAG_RMA_BASE + WIN_REDUCE_C * EPOCH_SPAN + 3;
+        assert_eq!(win_of(tag), Some(WIN_REDUCE_C));
+        assert_eq!(epoch_of(tag), Some(3));
+        assert_eq!(win_of(TAG_CANNON_SKEW_A), None);
+        assert_eq!(epoch_of(TAG_BCAST), None);
+    }
+}

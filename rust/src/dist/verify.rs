@@ -1,0 +1,680 @@
+//! The comm-protocol verifier: a structured event trace of everything
+//! the substrate did, plus an offline checker that proves the protocol
+//! invariants every driver relies on.
+//!
+//! When tracing is on ([`super::RunOpts::trace`], surfaced as
+//! `MultiplyConfig::verify` and the harness's `run_spec_verified`),
+//! every `send`/`recv`/`put`/`get`/`expose`/`close_epoch` — and, via
+//! provenance tagging, every collective — appends a [`CommEvent`] to a
+//! process-shared log. [`check`] then replays the log and reports every
+//! violation of:
+//!
+//! * **FIFO matching & byte conservation** — per `(src, dst, tag)`
+//!   channel, the i-th receive pairs with the i-th send and carries the
+//!   same byte count ([`Invariant::FifoByteConservation`]).
+//! * **Quiescence** — at run end no sent message is unreceived and no
+//!   matched message crosses a multiply boundary
+//!   ([`Invariant::OrphanMessage`]).
+//! * **Tag spaces** — user traffic stays below the reserved RMA
+//!   (`1 << 59`) and collective (`1 << 60`) blocks of
+//!   [`super::tags`] ([`Invariant::TagSpace`]).
+//! * **Epoch discipline** — no `get` reads an exposure of a different
+//!   window *instance* (the get-after-epoch-restart hazard PR 4 caught
+//!   by inspection), and no `win_id` is recreated while an expose/get
+//!   round of the previous instance can still alias it
+//!   ([`Invariant::EpochDiscipline`], [`Invariant::WinReuse`]).
+//! * **Exposure hygiene** — every `expose` is closed by its own rank
+//!   before the run ends ([`Invariant::LeakedExposure`]).
+//! * **Deterministic reduction order** — C-reduce drains root-first in
+//!   ascending layer order, on both transports
+//!   ([`Invariant::ReduceOrder`]).
+//!
+//! Deadlock detection is *runtime*, not offline: a trace of a deadlocked
+//! run never completes. Under tracing, blocked receives register in a
+//! wait-for map and walk it for cycles; see `Shared::waiting` in
+//! [`super`]. The offline checker covers everything that can be judged
+//! after the fact.
+//!
+//! With tracing off, the substrate takes one `Option` branch per
+//! operation and records nothing — virtual times, counters, and results
+//! are bit-identical to a build without this module.
+
+use std::collections::HashMap;
+use std::fmt;
+
+use super::tags;
+
+/// Who issued a traced operation — drives the tag-space check
+/// (collectives and RMA may use their reserved blocks; user code may
+/// not).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Provenance {
+    /// Driver / application code calling `send`/`recv`/`sendrecv`.
+    User,
+    /// Inside a substrate collective (allreduce / bcast / reduce).
+    Collective,
+    /// Inside an `RmaWindow` operation.
+    Rma,
+}
+
+/// What a traced operation was. `win`/`instance`/`epoch` identify RMA
+/// operations: `instance` counts same-`win` window creations per rank,
+/// which is what distinguishes a legal next-epoch access from the
+/// get-after-restart hazard.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventKind {
+    Send,
+    Recv,
+    /// `RmaWindow::put` (the wire send it issues is folded into this
+    /// event — no separate `Send` is recorded).
+    Put { win: u64, instance: u64, epoch: u64 },
+    /// `RmaWindow::get`: `exposure` is the global serial of the exposure
+    /// read; `exposer_instance` is the window instance that exposed it.
+    Get {
+        win: u64,
+        instance: u64,
+        epoch: u64,
+        exposure: u64,
+        exposer_instance: u64,
+    },
+    /// `RmaWindow::expose`: `serial` is a globally unique exposure id.
+    Expose {
+        win: u64,
+        instance: u64,
+        epoch: u64,
+        serial: u64,
+    },
+    /// `RmaWindow::close_epoch`: `drained` lists the puts popped, in
+    /// drain order, as (src world rank, bytes).
+    CloseEpoch {
+        win: u64,
+        instance: u64,
+        epoch: u64,
+        drained: Vec<(usize, u64)>,
+    },
+    /// `RmaWindow::new` (collective window creation on this rank).
+    WinCreate { win: u64, instance: u64 },
+    /// A multiply-boundary marker (`CommView::phase_mark`): quiescence
+    /// is checked at every mark, not only at run end.
+    Mark { phase: u64 },
+}
+
+/// One traced substrate operation.
+#[derive(Clone, Debug)]
+pub struct CommEvent {
+    /// World rank that issued the operation.
+    pub rank: usize,
+    /// World-rank peer: destination for `Send`/`Put`, source for
+    /// `Recv`/`Get`; `None` for rank-local events.
+    pub peer: Option<usize>,
+    /// Raw wire tag (RMA events carry their epoch tag).
+    pub tag: u64,
+    pub bytes: u64,
+    /// Per-rank logical clock: program order of this rank's events.
+    pub clock: u64,
+    /// The rank's virtual time when the event was recorded.
+    pub vtime: f64,
+    pub provenance: Provenance,
+    pub kind: EventKind,
+}
+
+/// The full event log of one traced `run_ranks` call, in recording
+/// order (interleaved across ranks; per-rank order is recovered from
+/// [`CommEvent::clock`]).
+#[derive(Clone, Debug, Default)]
+pub struct TraceLog {
+    pub events: Vec<CommEvent>,
+}
+
+/// The invariant a [`Violation`] breaks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Invariant {
+    /// Per-(src, dst, tag) FIFO pairing with matching byte counts.
+    FifoByteConservation,
+    /// User-provenance traffic inside a reserved tag block.
+    TagSpace,
+    /// Cross-instance exposure read or out-of-order epoch drain.
+    EpochDiscipline,
+    /// A `win_id` recreated while expose/get traffic can alias the
+    /// previous instance (the PR 4 hazard).
+    WinReuse,
+    /// A sent message never received, or received across a multiply
+    /// boundary (quiescence).
+    OrphanMessage,
+    /// An exposure never closed by its owner.
+    LeakedExposure,
+    /// Nondeterministic C-reduction drain order.
+    ReduceOrder,
+}
+
+impl fmt::Display for Invariant {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Invariant::FifoByteConservation => "fifo-byte-conservation",
+            Invariant::TagSpace => "tag-space",
+            Invariant::EpochDiscipline => "epoch-discipline",
+            Invariant::WinReuse => "win-reuse",
+            Invariant::OrphanMessage => "orphan-message",
+            Invariant::LeakedExposure => "leaked-exposure",
+            Invariant::ReduceOrder => "reduce-order",
+        })
+    }
+}
+
+/// One invariant violation found by [`check`].
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub invariant: Invariant,
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}", self.invariant, self.message)
+    }
+}
+
+/// The checker's verdict over one trace.
+#[derive(Clone, Debug, Default)]
+pub struct VerifyReport {
+    pub violations: Vec<Violation>,
+    /// Events checked (for the report header).
+    pub events: usize,
+}
+
+impl VerifyReport {
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// True if any violation breaks `inv` (mutation self-tests key on
+    /// the invariant *name*, not message text).
+    pub fn flags(&self, inv: Invariant) -> bool {
+        self.violations.iter().any(|v| v.invariant == inv)
+    }
+
+    /// Human-readable report (the `--verify` CLI output).
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "protocol verifier: {} events checked, {} violation(s)\n",
+            self.events,
+            self.violations.len()
+        );
+        for v in &self.violations {
+            s.push_str(&format!("  {v}\n"));
+        }
+        if self.is_clean() {
+            s.push_str("  all invariants hold\n");
+        }
+        s
+    }
+
+    /// Panic with the rendered report unless clean (test helper).
+    pub fn assert_clean(&self) {
+        assert!(self.is_clean(), "{}", self.render());
+    }
+}
+
+/// A send-side channel entry: (sender clock, bytes, sender phase).
+struct SendRec {
+    clock: u64,
+    bytes: u64,
+    phase: u64,
+    rank: usize,
+}
+
+/// A recv-side channel entry.
+struct RecvRec {
+    bytes: u64,
+    phase: u64,
+    rank: usize,
+}
+
+/// Replay `trace` and report every invariant violation. Pure function
+/// of the log — callable on synthetic traces in tests.
+pub fn check(trace: &TraceLog) -> VerifyReport {
+    let mut report = VerifyReport {
+        violations: Vec::new(),
+        events: trace.events.len(),
+    };
+
+    // Recover per-rank program order, then assign each event the phase
+    // (multiply index) it happened in: the count of Mark events earlier
+    // on its own rank.
+    let mut by_rank: HashMap<usize, Vec<&CommEvent>> = HashMap::new();
+    for ev in &trace.events {
+        by_rank.entry(ev.rank).or_default().push(ev);
+    }
+    let mut ranks: Vec<usize> = by_rank.keys().copied().collect();
+    ranks.sort_unstable();
+    for evs in by_rank.values_mut() {
+        evs.sort_by_key(|e| e.clock);
+    }
+    let mut phase_of: HashMap<(usize, u64), u64> = HashMap::new();
+    for (&rank, evs) in &by_rank {
+        let mut phase = 0u64;
+        for ev in evs {
+            phase_of.insert((rank, ev.clock), phase);
+            if matches!(ev.kind, EventKind::Mark { .. }) {
+                phase += 1;
+            }
+        }
+    }
+    let phase = |ev: &CommEvent| phase_of[&(ev.rank, ev.clock)];
+
+    check_tag_spaces(trace, &mut report);
+    check_channels(&by_rank, &ranks, phase, &mut report);
+    check_epochs(&by_rank, &ranks, &mut report);
+    check_reduce_order(&by_rank, &ranks, phase, &mut report);
+    report
+}
+
+/// Tag-space discipline: user traffic below the RMA block, RMA traffic
+/// inside its block, collectives inside theirs.
+fn check_tag_spaces(trace: &TraceLog, report: &mut VerifyReport) {
+    for ev in &trace.events {
+        let space = tags::space_of(ev.tag);
+        let ok = match ev.provenance {
+            Provenance::User => space == tags::TagSpace::User,
+            Provenance::Rma => space == tags::TagSpace::Rma,
+            Provenance::Collective => space == tags::TagSpace::Collective,
+        };
+        if !ok {
+            report.violations.push(Violation {
+                invariant: Invariant::TagSpace,
+                message: format!(
+                    "rank {} issued a {:?}-provenance {:?} with tag {:#x} in the {:?} block",
+                    ev.rank,
+                    ev.provenance,
+                    kind_name(&ev.kind),
+                    ev.tag,
+                    space
+                ),
+            });
+        }
+    }
+}
+
+fn kind_name(kind: &EventKind) -> &'static str {
+    match kind {
+        EventKind::Send => "send",
+        EventKind::Recv => "recv",
+        EventKind::Put { .. } => "put",
+        EventKind::Get { .. } => "get",
+        EventKind::Expose { .. } => "expose",
+        EventKind::CloseEpoch { .. } => "close_epoch",
+        EventKind::WinCreate { .. } => "win_create",
+        EventKind::Mark { .. } => "mark",
+    }
+}
+
+/// FIFO pairing, byte conservation, and quiescence per
+/// `(src, dst, tag)` channel. Sends are `Send` + `Put` events in the
+/// sender's program order; receives are `Recv` events plus the drained
+/// entries of `CloseEpoch`, in the receiver's program order.
+fn check_channels<'a, F>(
+    by_rank: &HashMap<usize, Vec<&'a CommEvent>>,
+    ranks: &[usize],
+    phase: F,
+    report: &mut VerifyReport,
+) where
+    F: Fn(&CommEvent) -> u64,
+{
+    type Channel = (usize, usize, u64); // (src, dst, tag)
+    let mut sends: HashMap<Channel, Vec<SendRec>> = HashMap::new();
+    let mut recvs: HashMap<Channel, Vec<RecvRec>> = HashMap::new();
+    for &rank in ranks {
+        for ev in &by_rank[&rank] {
+            match &ev.kind {
+                EventKind::Send | EventKind::Put { .. } => {
+                    let dst = ev.peer.expect("send/put events carry a destination");
+                    sends.entry((rank, dst, ev.tag)).or_default().push(SendRec {
+                        clock: ev.clock,
+                        bytes: ev.bytes,
+                        phase: phase(ev),
+                        rank,
+                    });
+                }
+                EventKind::Recv => {
+                    let src = ev.peer.expect("recv events carry a source");
+                    recvs.entry((src, rank, ev.tag)).or_default().push(RecvRec {
+                        bytes: ev.bytes,
+                        phase: phase(ev),
+                        rank,
+                    });
+                }
+                EventKind::CloseEpoch { drained, .. } => {
+                    for &(src, bytes) in drained {
+                        recvs.entry((src, rank, ev.tag)).or_default().push(RecvRec {
+                            bytes,
+                            phase: phase(ev),
+                            rank,
+                        });
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    let mut channels: Vec<Channel> = sends.keys().chain(recvs.keys()).copied().collect();
+    channels.sort_unstable();
+    channels.dedup();
+    for ch in channels {
+        let (src, dst, tag) = ch;
+        let empty_s: Vec<SendRec> = Vec::new();
+        let empty_r: Vec<RecvRec> = Vec::new();
+        let ss = sends.get(&ch).unwrap_or(&empty_s);
+        let rs = recvs.get(&ch).unwrap_or(&empty_r);
+        for (i, (s, r)) in ss.iter().zip(rs.iter()).enumerate() {
+            if s.bytes != r.bytes {
+                report.violations.push(Violation {
+                    invariant: Invariant::FifoByteConservation,
+                    message: format!(
+                        "channel ({src} -> {dst}, tag {tag:#x}) pair {i}: sent {} bytes \
+                         but received {} (send clock {})",
+                        s.bytes, r.bytes, s.clock
+                    ),
+                });
+            }
+            if s.phase != r.phase {
+                report.violations.push(Violation {
+                    invariant: Invariant::OrphanMessage,
+                    message: format!(
+                        "channel ({src} -> {dst}, tag {tag:#x}) pair {i}: message sent in \
+                         multiply {} but received in multiply {} — traffic crosses a \
+                         quiescence boundary",
+                        s.phase, r.phase
+                    ),
+                });
+            }
+            debug_assert_eq!(s.rank, src);
+            debug_assert_eq!(r.rank, dst);
+        }
+        if ss.len() > rs.len() {
+            report.violations.push(Violation {
+                invariant: Invariant::OrphanMessage,
+                message: format!(
+                    "channel ({src} -> {dst}, tag {tag:#x}): {} message(s) sent by rank {src} \
+                     were never received by rank {dst}",
+                    ss.len() - rs.len()
+                ),
+            });
+        } else if rs.len() > ss.len() {
+            report.violations.push(Violation {
+                invariant: Invariant::FifoByteConservation,
+                message: format!(
+                    "channel ({src} -> {dst}, tag {tag:#x}): rank {dst} received {} more \
+                     message(s) than rank {src} ever sent",
+                    rs.len() - ss.len()
+                ),
+            });
+        }
+    }
+}
+
+/// Epoch discipline: cross-instance exposure reads, win-id reuse with
+/// exposure traffic, leaked exposures, and ascending close drains.
+fn check_epochs(
+    by_rank: &HashMap<usize, Vec<&CommEvent>>,
+    ranks: &[usize],
+    report: &mut VerifyReport,
+) {
+    // exposures by (rank, win, instance, epoch) → closed?
+    let mut exposures: Vec<(usize, u64, u64, u64, u64)> = Vec::new(); // rank, win, inst, epoch, serial
+    let mut closed: HashMap<(usize, u64, u64, u64), bool> = HashMap::new();
+    let mut creations: HashMap<(usize, u64), u64> = HashMap::new(); // (rank, win) → max instance
+    let mut wins_with_exposure: Vec<u64> = Vec::new();
+    for &rank in ranks {
+        for ev in &by_rank[&rank] {
+            match &ev.kind {
+                EventKind::WinCreate { win, instance } => {
+                    let e = creations.entry((rank, *win)).or_insert(0);
+                    *e = (*e).max(*instance);
+                }
+                EventKind::Expose {
+                    win,
+                    instance,
+                    epoch,
+                    serial,
+                } => {
+                    exposures.push((rank, *win, *instance, *epoch, *serial));
+                    closed.entry((rank, *win, *instance, *epoch)).or_insert(false);
+                    wins_with_exposure.push(*win);
+                }
+                EventKind::CloseEpoch {
+                    win,
+                    instance,
+                    epoch,
+                    drained,
+                } => {
+                    if let Some(c) = closed.get_mut(&(rank, *win, *instance, *epoch)) {
+                        *c = true;
+                    }
+                    let srcs: Vec<usize> = drained.iter().map(|&(s, _)| s).collect();
+                    if !srcs.windows(2).all(|w| w[0] < w[1]) {
+                        let inv = if *win == tags::WIN_REDUCE_C || *win == tags::WIN_TS_REDUCE {
+                            Invariant::ReduceOrder
+                        } else {
+                            Invariant::EpochDiscipline
+                        };
+                        report.violations.push(Violation {
+                            invariant: inv,
+                            message: format!(
+                                "rank {rank} drained window {win} epoch {epoch} from sources \
+                                 {srcs:?} — not in ascending rank order"
+                            ),
+                        });
+                    }
+                }
+                EventKind::Get {
+                    win,
+                    instance,
+                    epoch,
+                    exposer_instance,
+                    ..
+                } => {
+                    if exposer_instance != instance {
+                        report.violations.push(Violation {
+                            invariant: Invariant::EpochDiscipline,
+                            message: format!(
+                                "rank {rank} get on window {win} epoch {epoch} (instance \
+                                 {instance}) read an exposure of instance {exposer_instance} \
+                                 — a stale exposure from a recreated win_id"
+                            ),
+                        });
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    for (rank, win, instance, epoch, _) in &exposures {
+        if !closed[&(*rank, *win, *instance, *epoch)] {
+            report.violations.push(Violation {
+                invariant: Invariant::LeakedExposure,
+                message: format!(
+                    "rank {rank} exposed a buffer on window {win} epoch {epoch} and never \
+                     closed the epoch — the exposure leaks past the end of the run"
+                ),
+            });
+        }
+    }
+    wins_with_exposure.sort_unstable();
+    wins_with_exposure.dedup();
+    for win in wins_with_exposure {
+        let mut reusers: Vec<usize> = creations
+            .iter()
+            .filter(|((_, w), &inst)| *w == win && inst >= 2)
+            .map(|((r, _), _)| *r)
+            .collect();
+        reusers.sort_unstable();
+        if !reusers.is_empty() {
+            report.violations.push(Violation {
+                invariant: Invariant::WinReuse,
+                message: format!(
+                    "window id {win} carries expose/get traffic but was recreated by rank(s) \
+                     {reusers:?} — exposure slots of the previous instance can alias the new \
+                     one (use a fresh win_id per expose/get round)"
+                ),
+            });
+        }
+    }
+}
+
+/// Deterministic C-reduce order on the two-sided path: per (root rank,
+/// multiply), receives on `TAG_REDUCE_C` must drain strictly ascending
+/// sources. (The one-sided path is covered by the CloseEpoch drain-order
+/// check in [`check_epochs`].)
+fn check_reduce_order<'a, F>(
+    by_rank: &HashMap<usize, Vec<&'a CommEvent>>,
+    ranks: &[usize],
+    phase: F,
+    report: &mut VerifyReport,
+) where
+    F: Fn(&CommEvent) -> u64,
+{
+    for &rank in ranks {
+        let mut per_phase: HashMap<u64, Vec<usize>> = HashMap::new();
+        for ev in &by_rank[&rank] {
+            if matches!(ev.kind, EventKind::Recv) && ev.tag == tags::TAG_REDUCE_C {
+                per_phase
+                    .entry(phase(ev))
+                    .or_default()
+                    .push(ev.peer.expect("recv events carry a source"));
+            }
+        }
+        let mut phases: Vec<u64> = per_phase.keys().copied().collect();
+        phases.sort_unstable();
+        for ph in phases {
+            let srcs = &per_phase[&ph];
+            if !srcs.windows(2).all(|w| w[0] < w[1]) {
+                report.violations.push(Violation {
+                    invariant: Invariant::ReduceOrder,
+                    message: format!(
+                        "rank {rank} drained C-reduce contributions from sources {srcs:?} — \
+                         not root-first ascending, reduction order is nondeterministic"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(rank: usize, clock: u64, kind: EventKind, peer: Option<usize>, tag: u64, bytes: u64) -> CommEvent {
+        CommEvent {
+            rank,
+            peer,
+            tag,
+            bytes,
+            clock,
+            vtime: 0.0,
+            provenance: Provenance::User,
+            kind,
+        }
+    }
+
+    #[test]
+    fn empty_trace_is_clean() {
+        let r = check(&TraceLog::default());
+        assert!(r.is_clean());
+        assert_eq!(r.events, 0);
+    }
+
+    #[test]
+    fn matched_send_recv_is_clean() {
+        let trace = TraceLog {
+            events: vec![
+                ev(0, 0, EventKind::Send, Some(1), 5, 100),
+                ev(1, 0, EventKind::Recv, Some(0), 5, 100),
+            ],
+        };
+        check(&trace).assert_clean();
+    }
+
+    #[test]
+    fn byte_mismatch_is_flagged() {
+        let trace = TraceLog {
+            events: vec![
+                ev(0, 0, EventKind::Send, Some(1), 5, 100),
+                ev(1, 0, EventKind::Recv, Some(0), 5, 64),
+            ],
+        };
+        let r = check(&trace);
+        assert!(r.flags(Invariant::FifoByteConservation), "{}", r.render());
+    }
+
+    #[test]
+    fn unreceived_send_is_an_orphan() {
+        let trace = TraceLog {
+            events: vec![ev(0, 0, EventKind::Send, Some(1), 5, 100)],
+        };
+        let r = check(&trace);
+        assert!(r.flags(Invariant::OrphanMessage), "{}", r.render());
+    }
+
+    #[test]
+    fn cross_phase_message_is_an_orphan() {
+        let trace = TraceLog {
+            events: vec![
+                ev(0, 0, EventKind::Send, Some(1), 5, 100),
+                ev(0, 1, EventKind::Mark { phase: 0 }, None, 0, 0),
+                ev(1, 0, EventKind::Mark { phase: 0 }, None, 0, 0),
+                ev(1, 1, EventKind::Recv, Some(0), 5, 100),
+            ],
+        };
+        let r = check(&trace);
+        assert!(r.flags(Invariant::OrphanMessage), "{}", r.render());
+    }
+
+    #[test]
+    fn user_tag_in_collective_space_is_flagged() {
+        let trace = TraceLog {
+            events: vec![
+                ev(0, 0, EventKind::Send, Some(1), tags::TAG_GATHER, 8),
+                ev(1, 0, EventKind::Recv, Some(0), tags::TAG_GATHER, 8),
+            ],
+        };
+        let r = check(&trace);
+        assert!(r.flags(Invariant::TagSpace), "{}", r.render());
+    }
+
+    #[test]
+    fn descending_reduce_drain_is_flagged() {
+        let trace = TraceLog {
+            events: vec![
+                ev(1, 0, EventKind::Send, Some(0), tags::TAG_REDUCE_C, 8),
+                ev(2, 0, EventKind::Send, Some(0), tags::TAG_REDUCE_C, 8),
+                ev(0, 0, EventKind::Recv, Some(2), tags::TAG_REDUCE_C, 8),
+                ev(0, 1, EventKind::Recv, Some(1), tags::TAG_REDUCE_C, 8),
+            ],
+        };
+        let r = check(&trace);
+        assert!(r.flags(Invariant::ReduceOrder), "{}", r.render());
+    }
+
+    #[test]
+    fn leaked_exposure_is_flagged() {
+        let tag = tags::TAG_RMA_BASE + 3 * tags::EPOCH_SPAN;
+        let mut e = ev(
+            0,
+            0,
+            EventKind::Expose {
+                win: 3,
+                instance: 1,
+                epoch: 0,
+                serial: 0,
+            },
+            None,
+            tag,
+            8,
+        );
+        e.provenance = Provenance::Rma;
+        let r = check(&TraceLog { events: vec![e] });
+        assert!(r.flags(Invariant::LeakedExposure), "{}", r.render());
+    }
+}

@@ -10,7 +10,7 @@
 //!   run --nodes N --rpn R --threads T --block B --shape square|rect
 //!       --engine dbcsr|dbcsr-blocked|pdgemm [--scale N] [--real]
 //!       [--algorithm layout|auto|cannon|2.5d] [--layers C]
-//!       [--occupancy X] [--iterations N] [--plan-verbose]
+//!       [--occupancy X] [--iterations N] [--plan-verbose] [--verify]
 //!                             one experiment point (`auto` picks the
 //!                             2.5D replication factor through the
 //!                             planner; --occupancy < 1 runs the
@@ -21,10 +21,13 @@
 //!                             layer-resident once and every iteration
 //!                             skips replication and skew;
 //!                             --plan-verbose prints the candidate
-//!                             table and the achieved occupancies)
+//!                             table and the achieved occupancies;
+//!                             --verify traces the run through the
+//!                             comm-protocol checker and exits nonzero
+//!                             on any invariant violation)
 
 use dbcsr::bench::figures;
-use dbcsr::bench::harness::{run_spec, AlgoSpec, Engine, RunSpec, Shape};
+use dbcsr::bench::harness::{run_spec, run_spec_verified, AlgoSpec, Engine, RunSpec, Shape};
 use dbcsr::multiply::planner;
 use dbcsr::bench::table::fmt_secs;
 use dbcsr::dist::{NetModel, Transport};
@@ -316,7 +319,16 @@ fn run_one(args: &Args, scale: usize, mode: Mode) {
             println!("(informational — --algorithm {algo:?} overrides the planner)");
         }
     }
-    let r = run_spec(spec);
+    let r = if args.switch("verify") {
+        let (r, report) = run_spec_verified(spec);
+        print!("{}", report.render());
+        if !report.is_clean() {
+            std::process::exit(1);
+        }
+        r
+    } else {
+        run_spec(spec)
+    };
     if let Some(plan) = &r.plan {
         println!(
             "plan: {} {}x{}x{} (source {}, replication {}, horizon {}, predicted {})",

@@ -40,13 +40,14 @@ pub(super) type Key = super::sparse_exchange::Key;
 /// Panel block metadata: (row ids, col ids, row sizes, col sizes).
 pub(super) type PanelMeta = super::sparse_exchange::PanelMeta;
 
-/// RMA window ids of this driver (twofive uses 5–10, the
-/// resident-session pre-skew 11–12, tall-skinny's reduction 13; message
-/// tags: this driver 10–13, twofive 14–17, the session pre-skew 18–19).
-const WIN_SKEW_A: u64 = 1;
-const WIN_SKEW_B: u64 = 2;
-const WIN_SHIFT_A: u64 = 3;
-const WIN_SHIFT_B: u64 = 4;
+// This driver's message tags and RMA window ids, from the central
+// registry (`dist::tags` holds the non-collision assertions).
+use crate::dist::tags::{
+    TAG_CANNON_SHIFT_A as TAG_SHIFT_A, TAG_CANNON_SHIFT_B as TAG_SHIFT_B,
+    TAG_CANNON_SKEW_A as TAG_SKEW_A, TAG_CANNON_SKEW_B as TAG_SKEW_B,
+    WIN_CANNON_SHIFT_A as WIN_SHIFT_A, WIN_CANNON_SHIFT_B as WIN_SHIFT_B,
+    WIN_CANNON_SKEW_A as WIN_SKEW_A, WIN_CANNON_SKEW_B as WIN_SKEW_B,
+};
 
 /// Multiply `C = A · B` with generalized Cannon. Collective over the
 /// grid; returns this rank's C.
@@ -113,7 +114,7 @@ pub fn multiply_cannon(
                 &a_sends,
                 &a_recvs,
                 |key| panel_meta(a, &vg, key.0, key.1),
-                10,
+                TAG_SKEW_A,
                 mode,
             );
             b_panels = exchange(
@@ -122,7 +123,7 @@ pub fn multiply_cannon(
                 &b_sends,
                 &b_recvs,
                 |key| panel_meta(b, &vg, key.0, key.1),
-                11,
+                TAG_SKEW_B,
                 mode,
             );
         }
@@ -189,7 +190,7 @@ pub fn multiply_cannon(
                 next_b.as_deref(),
                 |key| panel_meta(a, &vg, key.0, key.1),
                 |key| panel_meta(b, &vg, key.0, key.1),
-                (12, 13),
+                (TAG_SHIFT_A, TAG_SHIFT_B),
                 mode,
             );
         }

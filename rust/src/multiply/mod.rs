@@ -85,6 +85,13 @@ pub struct MultiplyConfig {
     pub plan_verbose: bool,
     /// PJRT runtime for real numerics (None → CPU microkernels).
     pub runtime: Option<Rc<Runtime>>,
+    /// Protocol-verifier mode: when the substrate is tracing
+    /// (`dist::RunOpts::trace`), each multiply stamps a quiescence
+    /// boundary (`CommView::phase_mark`) so the offline checker can
+    /// prove no message crosses a multiply and the RMA reuse guards are
+    /// armed. Off by default — the default path records nothing and
+    /// stays bit-identical.
+    pub verify: bool,
 }
 
 impl Default for MultiplyConfig {
@@ -98,6 +105,7 @@ impl Default for MultiplyConfig {
             filter_eps: 0.0,
             plan_verbose: false,
             runtime: None,
+            verify: false,
         }
     }
 }
@@ -333,6 +341,11 @@ pub fn multiply(
             stats.filtered_blocks,
             stats.meta_bytes,
         );
+    }
+    if cfg.verify {
+        // quiescence boundary: the protocol checker proves no message
+        // crosses this mark
+        world.phase_mark();
     }
     Ok(MultiplyOutcome {
         c,

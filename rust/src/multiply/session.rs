@@ -45,15 +45,9 @@ use super::twofive::{
 use super::vgrid::VGrid;
 use super::{planner, MultiplyConfig, MultiplyOutcome};
 
-/// Message tags of the residency pre-skew (cannon uses 10–13, twofive
-/// 14–17).
-const TAG_RES_SKEW_A: u64 = 18;
-const TAG_RES_SKEW_B: u64 = 19;
-
-/// RMA window ids of the residency pre-skew (cannon uses 1–4, twofive
-/// 5–10, tall-skinny's reduction 13).
-const WIN_RES_SKEW_A: u64 = 11;
-const WIN_RES_SKEW_B: u64 = 12;
+// Residency pre-skew tags and RMA window ids, from the central
+// registry (`dist::tags` holds the non-collision assertions).
+use crate::dist::tags::{TAG_RES_SKEW_A, TAG_RES_SKEW_B, WIN_RES_SKEW_A, WIN_RES_SKEW_B};
 
 /// Which native shares an admitted operand carries. The A and B layouts
 /// differ (module docs), so admit only what the workload multiplies on:
@@ -233,6 +227,9 @@ impl PipelineSession {
             sides.wants_b().then_some(&m),
         );
         self.book_setup(t0, b0);
+        if self.cfg.verify {
+            self.g3.world.phase_mark();
+        }
         ResidentOperand::from_shares(a_share, b_share)
     }
 
@@ -253,6 +250,9 @@ impl PipelineSession {
         replicate_to_layers(&self.g3, &mut b, self.cfg.transport);
         let (a_share, b_share) = self.build_shares(Some(&a), Some(&b));
         self.book_setup(t0, b0);
+        if self.cfg.verify {
+            self.g3.world.phase_mark();
+        }
         (
             ResidentOperand::from_shares(a_share, None),
             ResidentOperand::from_shares(None, b_share),
@@ -275,6 +275,9 @@ impl PipelineSession {
             sides.wants_b().then_some(m),
         );
         self.book_setup(t0, b0);
+        if self.cfg.verify {
+            self.g3.world.phase_mark();
+        }
         ResidentOperand::from_shares(a_share, b_share)
     }
 
@@ -342,6 +345,9 @@ impl PipelineSession {
         super::book_sparse_stats(&mut stats, am, bm, &c, filtered, self.g3.layer == 0);
         self.multiplies += 1;
         self.stats.merge(&stats);
+        if self.cfg.verify {
+            world.phase_mark();
+        }
         Ok(MultiplyOutcome {
             c,
             stats,

@@ -52,13 +52,9 @@ pub type Key = (usize, usize);
 /// Panel frame metadata: (row ids, col ids, row sizes, col sizes).
 pub type PanelMeta = (Vec<usize>, Vec<usize>, Vec<usize>, Vec<usize>);
 
-/// Message tag of the sparse C layer-reduce (cannon uses 10–13, twofive
-/// 14–17, the resident-session pre-skew 18–19).
-const TAG_REDUCE_C: u64 = 20;
-
-/// RMA window id of the sparse C layer-reduce (cannon uses 1–4, twofive
-/// 5–8 and 10, the resident-session pre-skew 11–12, tall-skinny 13).
-const WIN_REDUCE_C: u64 = 9;
+// The sparse C layer-reduce tag and RMA window id, from the central
+// registry (`dist::tags` holds the non-collision assertions).
+use crate::dist::tags::{TAG_REDUCE_C, WIN_REDUCE_C};
 
 /// Header sentinel for a panel whose pattern is fully dense: the block
 /// records are elided (the receiver reconstructs the dense pattern from

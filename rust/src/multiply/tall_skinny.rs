@@ -35,9 +35,9 @@ use crate::matrix::{DistMatrix, Distribution, LocalCsr, Mode};
 
 use super::engine::LocalEngine;
 
-/// RMA window id of the C reduction (cannon uses 1–4, twofive 5–10, the
-/// resident-session pre-skew 11–12).
-const WIN_TS_REDUCE: u64 = 13;
+// The C-reduction RMA window id, from the central registry
+// (`dist::tags` holds the non-collision assertions).
+use crate::dist::tags::WIN_TS_REDUCE;
 
 /// Transport-dispatched sum-allreduce of the C candidate. Both paths
 /// reduce in identical order (local rank 0's share first, then ranks

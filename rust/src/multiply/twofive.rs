@@ -47,21 +47,14 @@ use super::sparse_exchange::{
 };
 use super::vgrid::{lcm, VGrid};
 
-/// Message tags of this driver (cannon uses 10–13, the resident-session
-/// pre-skew 18–19).
-const TAG_SKEW_A: u64 = 14;
-const TAG_SKEW_B: u64 = 15;
-const TAG_SHIFT_A: u64 = 16;
-const TAG_SHIFT_B: u64 = 17;
-
-/// RMA window ids of this driver (cannon uses 1–4, the resident-session
-/// pre-skew 11–12, tall-skinny's reduction 13).
-const WIN_SKEW_A: u64 = 5;
-const WIN_SKEW_B: u64 = 6;
-const WIN_SHIFT_A: u64 = 7;
-const WIN_SHIFT_B: u64 = 8;
-// window 9 is the sparse C layer-reduce (multiply::sparse_exchange)
-const WIN_REPL: u64 = 10;
+// This driver's message tags and RMA window ids, from the central
+// registry (`dist::tags` holds the non-collision assertions).
+use crate::dist::tags::{
+    TAG_TWOFIVE_SHIFT_A as TAG_SHIFT_A, TAG_TWOFIVE_SHIFT_B as TAG_SHIFT_B,
+    TAG_TWOFIVE_SKEW_A as TAG_SKEW_A, TAG_TWOFIVE_SKEW_B as TAG_SKEW_B, WIN_REPL,
+    WIN_TWOFIVE_SHIFT_A as WIN_SHIFT_A, WIN_TWOFIVE_SHIFT_B as WIN_SHIFT_B,
+    WIN_TWOFIVE_SKEW_A as WIN_SKEW_A, WIN_TWOFIVE_SKEW_B as WIN_SKEW_B,
+};
 
 /// Sweep period for a (rows × cols × layers) topology: a multiple of
 /// lcm(rows, cols) divisible by `layers`, so each layer owns exactly

@@ -1,7 +1,7 @@
 //! Integration: failure paths — device OOM propagation (the Fig. 2
 //! annotation), rank-death detection, and misconfiguration guards.
 
-use dbcsr::dist::{run_ranks, Grid2D, NetModel, Transport};
+use dbcsr::dist::{run_ranks, run_ranks_opts, Grid2D, NetModel, RunOpts, Transport};
 use dbcsr::matrix::matrix::Fill;
 use dbcsr::matrix::{DistMatrix, Mode};
 use dbcsr::multiply::{multiply, Algorithm, EngineOpts, MultiplyConfig};
@@ -62,6 +62,45 @@ fn rank_death_surfaces_as_panic() {
         }
         // rank 0 would deadlock waiting; the join on rank 1 panics first
     });
+}
+
+#[test]
+fn dead_rank_report_names_blocked_peers() {
+    // under verify mode a rank death is diagnosable, not just fatal: the
+    // join panic names the injected cause plus every rank still parked
+    // on a receive from the dead rank, with source and tag
+    let result = std::panic::catch_unwind(|| {
+        run_ranks_opts(
+            4,
+            NetModel::ideal(),
+            RunOpts {
+                trace: true,
+                perturb: None,
+            },
+            |c| {
+                if c.rank() == 1 {
+                    // die only once every survivor is provably parked,
+                    // so the shutdown report must name all three
+                    while c.blocked_ranks().len() < 3 {
+                        std::thread::yield_now();
+                    }
+                    panic!("injected failure on rank 1");
+                }
+                let _ = c.recv(1, 42);
+            },
+        )
+    });
+    let err = result.expect_err("the run must fail");
+    let msg = err
+        .downcast_ref::<String>()
+        .cloned()
+        .expect("run_ranks panics with a formatted report");
+    assert!(msg.contains("injected failure on rank 1"), "got: {msg}");
+    assert!(msg.contains("blocked at shutdown"), "got: {msg}");
+    for r in [0, 2, 3] {
+        let entry = format!("rank {r} waiting for message (src 1, tag 0x2a)");
+        assert!(msg.contains(&entry), "missing {entry:?} in: {msg}");
+    }
 }
 
 #[test]
