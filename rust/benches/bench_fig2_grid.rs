@@ -49,6 +49,7 @@ fn main() {
             plan_verbose: false,
             occupancy: 1.0,
             iterations: 1,
+            fault: None,
         });
         t.row(vec![
             format!("{rpn}x{threads}"),

@@ -158,6 +158,8 @@ fn auto_point(dim: usize, transport: Transport, fixed: &[Point]) -> (Point, usiz
         horizon: 1,
         occ_a: 1.0,
         occ_b: 1.0,
+        failure_rate: 0.0,
+        recovery: planner::RecoveryModel::default(),
     };
     let plan = planner::choose_plan(&input);
     let chosen = plan.layers;

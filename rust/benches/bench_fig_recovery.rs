@@ -1,0 +1,248 @@
+//! Bench — replica-based recovery vs a full restart: kill k ∈ {1, 2}
+//! of 16 ranks mid-multiply at c ∈ {2, 4}, on both transports.
+//!
+//! Two sections:
+//! * **identity** (real mode, small): the healed C must be
+//!   bit-identical to the failure-free product — recovery re-fetches
+//!   replica panels and replays the lost ticks deterministically, so
+//!   not one element may drift;
+//! * **timing** (model mode, paper-shaped): the recovery overhead
+//!   (faulted total − failure-free total: detection silence, replica
+//!   fetches, the recompute, the survivor fence) must stay **strictly
+//!   below a full restart** — the alternative to in-run healing is
+//!   throwing the run away and paying the failure-free total again,
+//!   so recovery earns its keep iff `overhead < free_total`.
+//!
+//! Emits `BENCH_fig_recovery.json`. `--smoke` shrinks the timing
+//! problem for CI.
+
+use std::fs;
+
+use dbcsr::bench::table::{fmt_secs, Table};
+use dbcsr::dist::{run_ranks, Grid3D, NetModel, Transport};
+use dbcsr::matrix::Mode;
+use dbcsr::multiply::twofive::{multiply_twofive_ft, twofive_operands};
+use dbcsr::multiply::{EngineOpts, FaultSpec, LocalEngine, RecoveryPlan};
+use dbcsr::perfmodel::PerfModel;
+use dbcsr::util::json::{obj, Json};
+
+const P: usize = 16;
+
+/// The kill matrix: (c, topology, kills) on 16 ranks. One death at the
+/// head of the sweep (ring healing + a full replay) and a second after
+/// its sweep (the worst case for the reduce — the whole partial lost).
+fn kill_matrix() -> Vec<(usize, (usize, usize, usize), Vec<FaultSpec>)> {
+    vec![
+        (2, (2, 4, 2), vec![FaultSpec { rank: 5, at_tick: 0 }]),
+        (
+            2,
+            (2, 4, 2),
+            vec![
+                FaultSpec { rank: 5, at_tick: 0 },
+                FaultSpec { rank: 14, at_tick: 2 },
+            ],
+        ),
+        (4, (2, 2, 4), vec![FaultSpec { rank: 6, at_tick: 0 }]),
+        (
+            4,
+            (2, 2, 4),
+            vec![
+                FaultSpec { rank: 6, at_tick: 0 },
+                FaultSpec { rank: 9, at_tick: 1 },
+            ],
+        ),
+    ]
+}
+
+fn engine(mode: Mode) -> LocalEngine {
+    LocalEngine::new(
+        EngineOpts {
+            threads: 3,
+            densify: false,
+            ..Default::default()
+        },
+        mode,
+        PerfModel::default(),
+        None,
+        1,
+    )
+}
+
+struct RunOut {
+    /// Per-rank dense views of C summed — the full product exactly once
+    /// (real mode only; empty in model mode).
+    dense: Vec<f32>,
+    /// Max over ranks of the multiply's virtual span.
+    total_s: f64,
+    recovery_bytes: u64,
+    recovery_s: f64,
+}
+
+/// One 16-rank 2.5D multiply under a fault plan, native operands.
+fn run(
+    topo: (usize, usize, usize),
+    dim: usize,
+    block: usize,
+    mode: Mode,
+    transport: Transport,
+    kills: Vec<FaultSpec>,
+) -> RunOut {
+    let (rows, cols, layers) = topo;
+    let out = run_ranks(rows * cols * layers, NetModel::aries(4), move |world| {
+        let g3 = Grid3D::new(world, rows, cols, layers);
+        let (a, b) = twofive_operands(&g3, dim, dim, dim, block, mode, 91, 92);
+        let mut eng = engine(mode);
+        let plan = RecoveryPlan {
+            kill_now: kills.clone(),
+            already_dead: Vec::new(),
+        };
+        let t0 = g3.world.now();
+        let (cm, _) = multiply_twofive_ft(&g3, &a, &b, &mut eng, transport, &plan).unwrap();
+        let span = g3.world.now() - t0;
+        let dense = if mode == Mode::Real {
+            let mut d = vec![0.0f32; dim * dim];
+            cm.add_into_dense(&mut d);
+            d
+        } else {
+            Vec::new()
+        };
+        (dense, span, eng.stats.recovery_bytes, eng.stats.recovery_s)
+    });
+    let mut acc = RunOut {
+        dense: vec![0.0f32; if mode == Mode::Real { dim * dim } else { 0 }],
+        total_s: 0.0,
+        recovery_bytes: 0,
+        recovery_s: 0.0,
+    };
+    for (part, span, bytes, secs) in out {
+        for (g, x) in acc.dense.iter_mut().zip(part.iter()) {
+            *g += x;
+        }
+        acc.total_s = acc.total_s.max(span);
+        acc.recovery_bytes += bytes;
+        acc.recovery_s += secs;
+    }
+    acc
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    // timing section: paper-shaped model-mode problem (phantom storage;
+    // the virtual clocks still price compute, panel traffic, detection
+    // silence, replica fetches and the replay at full volume)
+    let (dim_t, block_t): (usize, usize) = if smoke { (704, 22) } else { (1408, 22) };
+    // identity section: small real-mode product, element-exact
+    let (dim_r, block_r): (usize, usize) = (32, 4);
+
+    println!("=== bench_fig_recovery ===\n");
+    println!(
+        "survive rank loss mid-multiply: k in {{1,2}} kills on {P} ranks at c in {{2,4}},\n\
+         both transports. identity: {dim_r}² real; timing: {dim_t}² model (Aries, 4 ranks/node){}\n",
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    let mut records: Vec<Json> = Vec::new();
+    let mut t = Table::new(
+        "recovery vs full restart (timing: model mode; identity: real mode)",
+        &[
+            "c", "transport", "kills", "free", "faulted", "overhead", "restart",
+            "rec bytes", "identical",
+        ],
+    );
+
+    for transport in [Transport::TwoSided, Transport::OneSided] {
+        for (c, topo, kills) in kill_matrix() {
+            // --- identity: healed C vs the failure-free product -------
+            let free_r = run(topo, dim_r, block_r, Mode::Real, transport, Vec::new());
+            let healed_r = run(topo, dim_r, block_r, Mode::Real, transport, kills.clone());
+            let identical = free_r.dense == healed_r.dense;
+            assert!(
+                identical,
+                "c={c} {transport:?} kills={kills:?}: healed C diverged from the \
+                 failure-free product"
+            );
+
+            // --- timing: overhead vs a full restart -------------------
+            let free = run(topo, dim_t, block_t, Mode::Model, transport, Vec::new());
+            let faulted = run(topo, dim_t, block_t, Mode::Model, transport, kills.clone());
+            assert_eq!(free.recovery_bytes, 0);
+            assert!(faulted.recovery_bytes > 0);
+            let overhead = faulted.total_s - free.total_s;
+            // the restart alternative: throw the run away, pay the
+            // failure-free total again (a lower bound — the wasted
+            // partial run is free under this accounting)
+            let restart = free.total_s;
+            assert!(
+                overhead < restart,
+                "c={c} {transport:?} k={}: recovery overhead {} must beat a full \
+                 restart {}",
+                kills.len(),
+                fmt_secs(overhead),
+                fmt_secs(restart),
+            );
+            assert!(
+                overhead > 0.0,
+                "a death cannot be free: detection alone costs a horizon"
+            );
+
+            t.row(vec![
+                c.to_string(),
+                transport.name().into(),
+                format!(
+                    "{}",
+                    kills
+                        .iter()
+                        .map(|f| format!("{}@{}", f.rank, f.at_tick))
+                        .collect::<Vec<_>>()
+                        .join("+")
+                ),
+                fmt_secs(free.total_s),
+                fmt_secs(faulted.total_s),
+                fmt_secs(overhead),
+                fmt_secs(restart),
+                format!("{:.2} MiB", faulted.recovery_bytes as f64 / (1 << 20) as f64),
+                if identical { "yes".into() } else { "NO".into() },
+            ]);
+            records.push(obj([
+                ("c", c.into()),
+                ("transport", transport.name().into()),
+                ("ranks", P.into()),
+                ("kills", kills.len().into()),
+                (
+                    "killed",
+                    Json::Arr(kills.iter().map(|f| f.rank.into()).collect()),
+                ),
+                ("free_seconds", free.total_s.into()),
+                ("faulted_seconds", faulted.total_s.into()),
+                ("overhead_seconds", overhead.into()),
+                ("restart_seconds", restart.into()),
+                ("recovery_bytes", faulted.recovery_bytes.into()),
+                ("recovery_seconds", faulted.recovery_s.into()),
+                ("bit_identical", identical.into()),
+            ]));
+        }
+    }
+    t.print();
+
+    println!(
+        "\nexpected: healing a death costs one detection horizon plus replica fetches\n\
+         and a 1/c-sized replay — strictly below re-running the whole multiply, which\n\
+         is the only alternative at c = 1 (no replica layer to heal from). The healed\n\
+         C is bit-identical on both transports: panels are pure functions of the\n\
+         read-only operands and the replay follows the dead layer's own tick order."
+    );
+
+    let doc = obj([
+        ("bench", "fig_recovery".into()),
+        ("dim_timing", dim_t.into()),
+        ("dim_identity", dim_r.into()),
+        ("block", block_t.into()),
+        ("ranks", P.into()),
+        ("net", "aries-rpn4".into()),
+        ("smoke", smoke.into()),
+        ("series", Json::Arr(records)),
+    ]);
+    let path = "BENCH_fig_recovery.json";
+    fs::write(path, doc.to_string() + "\n").expect("write bench record");
+    println!("\nwrote {path}");
+}

@@ -65,6 +65,7 @@ fn spec(dim: usize, occupancy: f64, algo: AlgoSpec) -> RunSpec {
         plan_verbose: false,
         occupancy,
         iterations: 1,
+        fault: None,
     }
 }
 

@@ -52,6 +52,7 @@ fn spec(dim: usize, transport: Transport, algo: AlgoSpec, iterations: usize) -> 
         plan_verbose: false,
         occupancy: 1.0,
         iterations,
+        fault: None,
     }
 }
 
@@ -180,6 +181,8 @@ fn main() {
                 horizon: 1,
                 occ_a: 1.0,
                 occ_b: 1.0,
+                failure_rate: 0.0,
+                recovery: planner::RecoveryModel::default(),
             };
             let plan = planner::choose_plan_steady(&input, n);
             let measured = points

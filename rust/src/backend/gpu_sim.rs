@@ -71,6 +71,12 @@ pub struct GpuSim {
 }
 
 impl GpuSim {
+    /// A pristine device sim with this one's configuration (perf model,
+    /// MPS share, runtime) but zeroed clocks, pools and counters.
+    pub fn fresh(&self) -> GpuSim {
+        GpuSim::new(self.perf.clone(), self.share, self.runtime.clone())
+    }
+
     pub fn new(perf: PerfModel, share: usize, runtime: Option<Rc<Runtime>>) -> GpuSim {
         GpuSim {
             perf,

@@ -56,6 +56,7 @@ pub fn fig2(scale: usize, mode: Mode) -> Vec<Table> {
                     plan_verbose: false,
                     occupancy: 1.0,
                     iterations: 1,
+                    fault: None,
                 });
                 cells.push(fmt_secs(r.seconds));
                 if !r.oom {
@@ -101,6 +102,7 @@ pub fn fig3(scale: usize, mode: Mode) -> Vec<Table> {
                         plan_verbose: false,
                         occupancy: 1.0,
                         iterations: 1,
+                        fault: None,
                     });
                     pair.push(r.seconds);
                 }
@@ -154,6 +156,7 @@ pub fn fig4(scale: usize, mode: Mode, blocks: &[usize], square_only: bool) -> Ve
                         plan_verbose: false,
                         occupancy: 1.0,
                         iterations: 1,
+                        fault: None,
                     });
                     pair.push(r.seconds);
                 }

@@ -19,7 +19,7 @@ use crate::matrix::{DistMatrix, Mode};
 use crate::multiply::planner::{self, PlanInput, PlannedAlgorithm};
 use crate::multiply::session::PipelineSession;
 use crate::multiply::twofive::replicate_to_layers;
-use crate::multiply::{multiply, tall_skinny, Algorithm, EngineOpts, MultiplyConfig};
+use crate::multiply::{multiply, tall_skinny, Algorithm, EngineOpts, FaultSpec, MultiplyConfig};
 use crate::perfmodel::PerfModel;
 use crate::scalapack::pdgemm;
 use crate::util::stats::{MultiplyStats, PlanSummary};
@@ -136,6 +136,15 @@ pub struct RunSpec {
     /// the unamortized baseline. `RunResult::seconds` sums the
     /// iterations.
     pub iterations: usize,
+    /// Chaos knob: kill one rank mid-multiply (the CLI's
+    /// `--kill-rank R --kill-at T`). Requires a plan with replica
+    /// layers — a fault on a Cannon / tall-skinny / `c = 1` point
+    /// returns [`RunResult::unrecoverable`] without running (there is
+    /// no replica to heal from). At a steady horizon the fault fires on
+    /// the first resident multiply and the rank stays dead for the
+    /// rest. Under [`AlgoSpec::Auto`] the planner prices the fault as
+    /// one expected death, which shifts the choice toward layers.
+    pub fault: Option<FaultSpec>,
 }
 
 impl RunSpec {
@@ -162,6 +171,10 @@ impl RunSpec {
             horizon: self.iterations.max(1),
             occ_a: self.occupancy,
             occ_b: self.occupancy,
+            // an injected fault is one certain death over the horizon —
+            // priced so Auto prefers plans that can actually recover
+            failure_rate: if self.fault.is_some() { 1.0 } else { 0.0 },
+            recovery: planner::RecoveryModel::default(),
         }
     }
 }
@@ -194,6 +207,17 @@ pub struct RunResult {
     pub occupancy_b: f64,
     pub occupancy_c: f64,
     pub oom: bool,
+    /// Virtual seconds the survivors spent healing an injected rank
+    /// death (replica-share fetches, lost-tick recompute, the recovery
+    /// fence), summed over ranks. 0 on fault-free runs.
+    pub recovery_seconds: f64,
+    /// Wire bytes of the same recovery traffic, summed over ranks.
+    pub recovery_bytes: u64,
+    /// The spec asked for a fault but resolved to a plan with no
+    /// replica layer (Cannon, tall-skinny, PDGEMM, or `c = 1`): the
+    /// run was not executed — a death there loses data irrecoverably,
+    /// and the honest report is "restart from scratch".
+    pub unrecoverable: bool,
 }
 
 /// Most-square factorization pr × pc = p with pr ≤ pc (shared with the
@@ -234,7 +258,7 @@ pub fn run_spec_verified(spec: RunSpec) -> (RunResult, VerifyReport) {
         spec,
         RunOpts {
             trace: true,
-            perturb: None,
+            ..RunOpts::default()
         },
     );
     let report = verify::check(&trace.expect("traced run must return a trace"));
@@ -301,6 +325,32 @@ pub fn run_spec_opts(spec: RunSpec, opts: RunOpts) -> (RunResult, Option<TraceLo
         }
     };
 
+    // a fault needs a replica layer to heal from; every other plan shape
+    // is honestly unrecoverable — report that instead of running
+    if spec.fault.is_some()
+        && !matches!(exec, Exec::TwoFive { layers, .. } if layers > 1)
+    {
+        return (
+            RunResult {
+                seconds: 0.0,
+                repl_seconds: 0.0,
+                total_seconds: 0.0,
+                iterations: iters,
+                wall: wall0.elapsed().as_secs_f64(),
+                stats: MultiplyStats::default(),
+                plan: chosen_plan,
+                occupancy_a: 0.0,
+                occupancy_b: 0.0,
+                occupancy_c: 0.0,
+                oom: false,
+                recovery_seconds: 0.0,
+                recovery_bytes: 0,
+                unrecoverable: true,
+            },
+            None,
+        );
+    }
+
     let (per_rank, trace) = run_ranks_opts(p, net, opts, move |world| {
         let cfg = |algorithm: Algorithm| MultiplyConfig {
             engine: EngineOpts {
@@ -316,6 +366,7 @@ pub fn run_spec_opts(spec: RunSpec, opts: RunOpts) -> (RunResult, Option<TraceLo
             plan_verbose: spec.plan_verbose,
             runtime: None,
             verify: opts.trace,
+            faults: spec.fault.map(|f| vec![f]).unwrap_or_default(),
         };
         // cyclic A (m × k) / B (k × n) shares over `grid_dims` — shared
         // by every grid-based branch so seeding and fill can never
@@ -493,9 +544,12 @@ pub fn run_spec_opts(spec: RunSpec, opts: RunOpts) -> (RunResult, Option<TraceLo
             occupancy_a: stats.occupancy_a(),
             occupancy_b: stats.occupancy_b(),
             occupancy_c: stats.occupancy_c(),
+            recovery_seconds: stats.recovery_s,
+            recovery_bytes: stats.recovery_bytes,
             stats,
             plan,
             oom,
+            unrecoverable: false,
         },
         trace,
     )
@@ -545,6 +599,7 @@ mod tests {
             plan_verbose: false,
             occupancy: 1.0,
             iterations: 1,
+            fault: None,
         }
     }
 

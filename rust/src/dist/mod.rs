@@ -209,6 +209,103 @@ enum WaitFor {
     Exposure { src: usize, tag: u64 },
 }
 
+/// Error of the fault-tolerant communication entry points
+/// ([`CommView::try_recv`], [`CommView::try_send`],
+/// [`rma::RmaWindow::try_get`], [`rma::RmaWindow::try_close_epoch`]):
+/// the peer on this edge was declared dead and nothing it sent (or
+/// exposed) remains to satisfy the operation. Messages a rank sent
+/// *before* dying still deliver — `PeerDied` means the edge is truly
+/// exhausted, so the outcome is deterministic regardless of how OS
+/// scheduling interleaves the death with the waiters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PeerDied {
+    /// World rank of the dead peer.
+    pub rank: usize,
+    /// Virtual time of the peer's death (its last clock advance). The
+    /// observer's clock lands one detection horizon past this.
+    pub at: f64,
+}
+
+impl std::fmt::Display for PeerDied {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "peer rank {} died at t = {:.3e} s", self.rank, self.at)
+    }
+}
+
+impl std::error::Error for PeerDied {}
+
+/// A registered rank death: who, when (virtual time) and why — the
+/// typed event [`FailureDetector`] delivers to waiting peers in place
+/// of the old join-panic race.
+#[derive(Clone, Debug)]
+pub struct RankDeath {
+    /// World rank that died.
+    pub rank: usize,
+    /// Virtual time of the last clock advance before death.
+    pub at: f64,
+    /// Human-readable cause (surfaced by reports and `RunResult`).
+    pub cause: String,
+}
+
+/// The substrate's failure detector (one per [`run_ranks`] call, on the
+/// process-shared state). A rank whose virtual clock stops advancing —
+/// it called [`CommView::kill`], the modeled analog of a missed
+/// heartbeat — is declared dead here; peers blocked on its edges (the
+/// same parked set [`CommView::blocked_ranks`] reports) observe a typed
+/// [`RankDeath`] instead of racing the shutdown panic, with their
+/// clocks advanced one heartbeat `horizon` past the death time: the
+/// priced detection latency of the paper's recovery model. The first
+/// declaration for a rank wins (mirroring the `first_panic`
+/// pre-registration of the deadlock reporter).
+pub struct FailureDetector {
+    /// Heartbeat horizon, virtual seconds: how long a silent clock may
+    /// lag before peers declare the rank dead ([`RunOpts::horizon`]).
+    horizon: f64,
+    /// Registered deaths, world rank → death record.
+    deaths: Mutex<HashMap<usize, RankDeath>>,
+}
+
+impl FailureDetector {
+    fn new(horizon: f64) -> FailureDetector {
+        FailureDetector {
+            horizon,
+            deaths: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Register a death (first declaration per rank wins).
+    fn declare(&self, rank: usize, at: f64, cause: &str) {
+        let mut d = self.deaths.lock().unwrap_or_else(|e| e.into_inner());
+        d.entry(rank).or_insert(RankDeath {
+            rank,
+            at,
+            cause: cause.to_string(),
+        });
+    }
+
+    /// The death record of `rank`, if one was declared.
+    fn death_of(&self, rank: usize) -> Option<RankDeath> {
+        self.deaths
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(&rank)
+            .cloned()
+    }
+
+    /// World ranks declared dead so far, ascending.
+    fn dead_ranks(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .deaths
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .keys()
+            .copied()
+            .collect();
+        out.sort_unstable();
+        out
+    }
+}
+
 /// Process-shared substrate state (one per [`run_ranks`] call).
 struct Shared {
     net: NetModel,
@@ -234,6 +331,9 @@ struct Shared {
     /// First panic cause observed (deadlock reports pre-register here so
     /// they win the race against the secondary "peer rank died" panics).
     first_panic: Mutex<Option<String>>,
+    /// Failure detector: registered graceful rank deaths plus the
+    /// heartbeat horizon that prices their detection latency.
+    failure: FailureDetector,
     /// Monotone id handed to each RMA exposure (verifier provenance).
     expose_serial: AtomicU64,
     /// Schedule-perturbation seed (`None` = off): per-rank RNGs derive
@@ -253,6 +353,25 @@ impl Shared {
     }
 
     fn pop_blocking(&self, key: QueueKey) -> Msg {
+        match self.pop_blocking_result(key) {
+            Ok(m) => m,
+            // a registered graceful death escalates with the same
+            // message the hard-panic path uses, so non-fault-tolerant
+            // callers keep their diagnostics
+            Err(_) => panic!(
+                "peer rank died while waiting for message (src {}, dst {}, tag {})",
+                key.0, key.1, key.2
+            ),
+        }
+    }
+
+    /// [`Shared::pop_blocking`] for fault-tolerant callers: a message
+    /// already in the queue always delivers (even from a dead sender);
+    /// only an *exhausted* edge whose source has a registered
+    /// [`RankDeath`] returns `Err`. Hard panics elsewhere in the world
+    /// (the `dead` flag) still panic — those are bugs, not modeled
+    /// faults.
+    fn pop_blocking_result(&self, key: QueueKey) -> Result<Msg, PeerDied> {
         let verify = self.trace.is_some();
         let mut q = self
             .queues
@@ -266,7 +385,19 @@ impl Shared {
                         .unwrap_or_else(|e| e.into_inner())
                         .remove(&key.1);
                 }
-                return m;
+                return Ok(m);
+            }
+            if let Some(death) = self.failure.death_of(key.0) {
+                if verify {
+                    self.waiting
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .remove(&key.1);
+                }
+                return Err(PeerDied {
+                    rank: key.0,
+                    at: death.at,
+                });
             }
             if self.dead.load(Ordering::SeqCst) {
                 panic!(
@@ -614,6 +745,93 @@ impl CommView {
         out
     }
 
+    /// Declare this rank dead at its current virtual time: the modeled
+    /// analog of a crashed process whose heartbeat stops. The death is
+    /// registered with the [`FailureDetector`] as a typed [`RankDeath`]
+    /// and every parked peer is woken so blocked fault-tolerant waits
+    /// ([`CommView::try_recv`], [`RmaWindow::try_get`]) return
+    /// [`PeerDied`] instead of hanging. The calling thread should stop
+    /// communicating and return; messages and exposures it published
+    /// before dying stay valid (crash, not retract).
+    pub fn kill(&self, cause: &str) {
+        let w = self.my_world();
+        self.shared.failure.declare(w, self.now(), cause);
+        if self.shared.trace.is_some() {
+            self.record(None, 0, 0, EventKind::Death);
+        }
+        // wake everything parked on this rank's edges
+        self.shared.cv.notify_all();
+        self.shared.exposed_cv.notify_all();
+    }
+
+    /// Whether *this* rank has been declared dead (a killed rank inside
+    /// a resident session uses this to sit out later multiplies).
+    pub fn killed(&self) -> bool {
+        self.shared.failure.death_of(self.my_world()).is_some()
+    }
+
+    /// The death record of world rank `w`, if one was declared.
+    pub fn death_of(&self, w: usize) -> Option<RankDeath> {
+        self.shared.failure.death_of(w)
+    }
+
+    /// World ranks declared dead so far, ascending.
+    pub fn dead_ranks(&self) -> Vec<usize> {
+        self.shared.failure.dead_ranks()
+    }
+
+    /// The failure detector's heartbeat horizon ([`RunOpts::horizon`]).
+    pub fn horizon(&self) -> f64 {
+        self.shared.failure.horizon
+    }
+
+    /// Fault-tolerant send: refuses (with [`PeerDied`]) to address a
+    /// peer already declared dead, so recovery drivers do not grow
+    /// orphan queues toward ranks that will never drain them. A death
+    /// declared *after* the send is harmless — the message just sits
+    /// undelivered, which the protocol verifier excuses for dead
+    /// receivers.
+    pub fn try_send(&self, dst: usize, tag: u64, payload: Payload) -> Result<(), PeerDied> {
+        if let Some(death) = self.shared.failure.death_of(self.members[dst]) {
+            return Err(PeerDied {
+                rank: self.members[dst],
+                at: death.at,
+            });
+        }
+        self.send(dst, tag, payload);
+        Ok(())
+    }
+
+    /// Fault-tolerant receive: like [`CommView::recv`], but an edge
+    /// whose source died with nothing left to deliver returns
+    /// [`PeerDied`] instead of panicking. The caller's clock advances
+    /// one heartbeat horizon past the death time — the modeled latency
+    /// of *detecting* the silence (booked as communication wait).
+    pub fn try_recv(&self, src: usize, tag: u64) -> Result<Payload, PeerDied> {
+        self.maybe_yield();
+        match self
+            .shared
+            .pop_blocking_result((self.members[src], self.my_world(), tag))
+        {
+            Ok(msg) => {
+                self.wait_to(msg.ready);
+                if self.shared.trace.is_some() {
+                    self.record(
+                        Some(self.members[src]),
+                        tag,
+                        msg.payload.wire_bytes(),
+                        EventKind::Recv,
+                    );
+                }
+                Ok(msg.payload)
+            }
+            Err(death) => {
+                self.wait_to(death.at + self.shared.failure.horizon);
+                Err(death)
+            }
+        }
+    }
+
     /// Asynchronous send (never blocks; cost materializes at the
     /// receiver as the message's arrival time).
     pub fn send(&self, dst: usize, tag: u64, payload: Payload) {
@@ -880,7 +1098,7 @@ impl Grid3D {
 /// Substrate options beyond the network model: protocol-verifier
 /// tracing and schedule perturbation (both off by default — the default
 /// path is bit-identical to a build without the verifier).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug)]
 pub struct RunOpts {
     /// Record a [`TraceLog`] of every substrate operation for
     /// [`verify::check`], and enable the runtime wait-for deadlock
@@ -892,6 +1110,23 @@ pub struct RunOpts {
     /// seed must produce bit-identical results — the schedule-explorer
     /// tests assert exactly that.
     pub perturb: Option<u64>,
+    /// Failure-detector heartbeat horizon, virtual seconds: how far a
+    /// rank's clock may trail its peers' before they declare it dead.
+    /// Every [`PeerDied`] observation advances the observer's clock to
+    /// `death time + horizon` — the priced detection latency. The
+    /// default is ~17 Aries message latencies: long enough that jittery
+    /// compute never false-positives, short next to any panel transfer.
+    pub horizon: f64,
+}
+
+impl Default for RunOpts {
+    fn default() -> RunOpts {
+        RunOpts {
+            trace: false,
+            perturb: None,
+            horizon: 25e-6,
+        }
+    }
 }
 
 /// Run `f` on `p` rank threads over a fresh substrate; returns the
@@ -932,6 +1167,7 @@ where
         trace: opts.trace.then(|| Mutex::new(Vec::new())),
         waiting: Mutex::new(HashMap::new()),
         first_panic: Mutex::new(None),
+        failure: FailureDetector::new(opts.horizon),
         expose_serial: AtomicU64::new(0),
         perturb: opts.perturb,
     });
@@ -953,13 +1189,19 @@ where
                                 .downcast_ref::<String>()
                                 .cloned()
                                 .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()));
+                            // secondary "peer rank died" aborts never
+                            // claim the first-panic slot: only the root
+                            // cause may win the shutdown report, no
+                            // matter which thread the join sees first
                             if let Some(c) = cause {
-                                let mut first = shared
-                                    .first_panic
-                                    .lock()
-                                    .unwrap_or_else(|e| e.into_inner());
-                                if first.is_none() {
-                                    *first = Some(c);
+                                if !c.starts_with("peer rank died") {
+                                    let mut first = shared
+                                        .first_panic
+                                        .lock()
+                                        .unwrap_or_else(|e| e.into_inner());
+                                    if first.is_none() {
+                                        *first = Some(c);
+                                    }
                                 }
                             }
                             shared.mark_dead();
@@ -1310,6 +1552,69 @@ mod tests {
             c.recv(0, 8).into_f32()[0]
         });
         assert_eq!(out[0], 7.0);
+    }
+
+    #[test]
+    fn graceful_death_delivers_typed_peer_died() {
+        let (out, _) = run_ranks_opts(
+            2,
+            NetModel::ideal(),
+            RunOpts {
+                horizon: 1e-3,
+                ..RunOpts::default()
+            },
+            |c| {
+                if c.rank() == 1 {
+                    c.send(0, 1, Payload::F32(vec![5.0]));
+                    c.advance_to(2.0);
+                    c.kill("injected");
+                    (0.0, c.killed())
+                } else {
+                    // the pre-death message still delivers...
+                    assert_eq!(c.recv(1, 1).into_f32(), vec![5.0]);
+                    // ...then the exhausted edge reports the typed death,
+                    // with the clock one horizon past the death time
+                    let err = c.try_recv(1, 1).expect_err("edge is exhausted");
+                    assert_eq!(err.rank, 1);
+                    assert_eq!(err.at, 2.0);
+                    assert_eq!(c.dead_ranks(), vec![1]);
+                    (c.now(), c.killed())
+                }
+            },
+        );
+        assert!((out[0].0 - (2.0 + 1e-3)).abs() < 1e-12, "{}", out[0].0);
+        assert!(!out[0].1, "survivor is not dead");
+        assert!(out[1].1, "killed rank observes its own death");
+    }
+
+    #[test]
+    fn try_send_refuses_dead_destination() {
+        let out = run_ranks(2, NetModel::ideal(), |c| {
+            if c.rank() == 1 {
+                c.kill("down");
+                true
+            } else {
+                // spin until the death registers (wall-clock only; the
+                // virtual outcome is the same either way)
+                while c.death_of(1).is_none() {
+                    std::thread::yield_now();
+                }
+                c.try_send(1, 1, Payload::Empty).is_err()
+            }
+        });
+        assert!(out[0] && out[1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "rank thread panicked")]
+    fn plain_recv_escalates_graceful_death() {
+        let _ = run_ranks(2, NetModel::ideal(), |c| {
+            if c.rank() == 1 {
+                c.kill("down");
+            } else {
+                let _ = c.recv(1, 1); // non-fault-tolerant edge: fatal
+            }
+        });
     }
 
     #[test]

@@ -59,7 +59,7 @@ use std::sync::atomic::Ordering;
 
 use super::tags::{EPOCH_SPAN, MAX_WIN_ID, TAG_RMA_BASE};
 use super::verify::{EventKind, Provenance};
-use super::{CommView, Exposed, Payload, WaitFor};
+use super::{CommView, Exposed, Payload, PeerDied, WaitFor};
 
 /// Which point-to-point transport the multiplication's panel traffic
 /// uses (threaded through `MultiplyConfig`).
@@ -258,13 +258,29 @@ impl RmaWindow {
     /// the origin's clock and the exposure time) and the traffic
     /// counters land on this calling rank; the exposer stays passive.
     /// Panics if `src` already closed the epoch (erroneous access
-    /// outside the exposure epoch — loud instead of a silent hang).
+    /// outside the exposure epoch — loud instead of a silent hang) or
+    /// if `src` died before exposing.
     pub fn get(&self, src: usize) -> Payload {
+        match self.try_get(src) {
+            Ok(p) => p,
+            Err(death) => panic!(
+                "peer rank died while waiting for exposure (src {}, epoch {})",
+                death.rank, self.epoch
+            ),
+        }
+    }
+
+    /// Fault-tolerant [`RmaWindow::get`]. Passive-target semantics make
+    /// this the recovery workhorse: a buffer the exposer published
+    /// *before dying* is still served (`Ok`) — only a missing exposure
+    /// from a registered-dead rank returns [`PeerDied`], with the
+    /// origin's clock advanced one heartbeat horizon past the death.
+    pub fn try_get(&self, src: usize) -> Result<Payload, PeerDied> {
         self.comm.maybe_yield();
         let verify = self.comm.shared.trace.is_some();
         let key = (self.comm.members[src], self.tag());
         let me = self.comm.my_world();
-        let (payload, at, serial, exposer_instance) = {
+        let found = {
             let mut w = self
                 .comm
                 .shared
@@ -282,13 +298,27 @@ impl RmaWindow {
                                 .unwrap_or_else(|e| e.into_inner())
                                 .remove(&me);
                         }
-                        break (e.payload.clone(), e.at, e.serial, e.instance);
+                        break Ok((e.payload.clone(), e.at, e.serial, e.instance));
                     }
                     Some(None) => panic!(
                         "RMA get from rank {} after it closed exposure epoch {}",
                         key.0, self.epoch
                     ),
                     None => {}
+                }
+                if let Some(death) = self.comm.shared.failure.death_of(key.0) {
+                    if verify {
+                        self.comm
+                            .shared
+                            .waiting
+                            .lock()
+                            .unwrap_or_else(|e| e.into_inner())
+                            .remove(&me);
+                    }
+                    break Err(PeerDied {
+                        rank: key.0,
+                        at: death.at,
+                    });
                 }
                 if self.comm.shared.dead.load(Ordering::SeqCst) {
                     panic!(
@@ -321,6 +351,14 @@ impl RmaWindow {
                     .unwrap_or_else(|e| e.into_inner());
             }
         };
+        let (payload, at, serial, exposer_instance) = match found {
+            Ok(tuple) => tuple,
+            Err(death) => {
+                self.comm
+                    .wait_to(death.at + self.comm.shared.failure.horizon);
+                return Err(death);
+            }
+        };
         if verify {
             self.comm.record_event(
                 Provenance::Rma,
@@ -344,7 +382,7 @@ impl RmaWindow {
         let start = self.comm.now().max(at);
         self.comm
             .wait_to(start + self.comm.shared.net.transit_seconds(bytes));
-        payload
+        Ok(payload)
     }
 
     /// Close the exposure epoch (passive-target `flush` + `unlock`, or
@@ -424,6 +462,90 @@ impl RmaWindow {
             );
         }
         payloads
+    }
+
+    /// Fault-tolerant [`RmaWindow::close_epoch`]: each source's slot in
+    /// the result is `Ok(payload)` if its put was (or becomes) pending,
+    /// or [`PeerDied`] if the source died without putting this epoch.
+    /// The clock still advances once — to the latest among successful
+    /// arrivals and the detection horizons of the dead edges, plus one
+    /// sync latency — and the traced `CloseEpoch` drain lists only the
+    /// successful sources.
+    pub fn try_close_epoch(&mut self, sources: &[usize]) -> Vec<Result<Payload, PeerDied>> {
+        let tag = self.tag();
+        {
+            let mut w = self
+                .comm
+                .shared
+                .exposed
+                .lock()
+                .unwrap_or_else(|e| e.into_inner());
+            if let Some(slot) = w.get_mut(&(self.comm.my_world(), tag)) {
+                *slot = None;
+                self.comm.shared.exposed_cv.notify_all();
+            }
+        }
+        let closed_epoch = self.epoch;
+        self.epoch += 1;
+        let verify = self.comm.shared.trace.is_some();
+        if sources.is_empty() {
+            if verify {
+                self.comm.record_event(
+                    Provenance::Rma,
+                    None,
+                    tag,
+                    0,
+                    EventKind::CloseEpoch {
+                        win: self.win_id,
+                        instance: self.instance,
+                        epoch: closed_epoch,
+                        drained: Vec::new(),
+                    },
+                );
+            }
+            return Vec::new();
+        }
+        self.comm.maybe_yield();
+        let horizon = self.comm.shared.failure.horizon;
+        let mut out = Vec::with_capacity(sources.len());
+        let mut latest = f64::NEG_INFINITY;
+        let mut drained = Vec::with_capacity(sources.len());
+        for &src in sources {
+            match self.comm.shared.pop_blocking_result((
+                self.comm.members[src],
+                self.comm.my_world(),
+                tag,
+            )) {
+                Ok(msg) => {
+                    latest = latest.max(msg.ready);
+                    if verify {
+                        drained.push((self.comm.members[src], msg.payload.wire_bytes()));
+                    }
+                    out.push(Ok(msg.payload));
+                }
+                Err(death) => {
+                    latest = latest.max(death.at + horizon);
+                    out.push(Err(death));
+                }
+            }
+        }
+        let sync = self.comm.now().max(latest) + self.comm.shared.net.latency;
+        self.comm.wait_to(sync);
+        if verify {
+            self.comm.record_event(
+                Provenance::Rma,
+                None,
+                tag,
+                0,
+                EventKind::CloseEpoch {
+                    win: self.win_id,
+                    instance: self.instance,
+                    epoch: closed_epoch,
+                    drained,
+                },
+            );
+        }
+        out
     }
 }
 
@@ -549,6 +671,37 @@ mod tests {
                 let _ = win.get(0); // access outside the exposure epoch
             }
         });
+    }
+
+    #[test]
+    fn exposure_survives_the_exposers_death() {
+        let out = run_ranks(2, NetModel::ideal(), |c| {
+            let win = RmaWindow::new(&c, 7);
+            if c.rank() == 0 {
+                win.expose(Payload::F32(vec![9.0]));
+                c.kill("down");
+                0.0
+            } else {
+                // passive target: a buffer published before the death
+                // still serves — the replica-recovery workhorse
+                f64::from(win.try_get(0).expect("exposure predates death").into_f32()[0])
+            }
+        });
+        assert_eq!(out[1], 9.0);
+    }
+
+    #[test]
+    fn try_get_reports_death_when_nothing_was_exposed() {
+        let out = run_ranks(2, NetModel::ideal(), |c| {
+            let win = RmaWindow::new(&c, 8);
+            if c.rank() == 0 {
+                c.kill("down");
+                true
+            } else {
+                win.try_get(0).is_err()
+            }
+        });
+        assert!(out[1]);
     }
 
     #[test]

@@ -48,6 +48,10 @@ pub const TAG_RES_SKEW_B: u64 = 19;
 /// Sparse C layer-reduce (`multiply::sparse_exchange`): partial C
 /// shares to layer 0, drained root-first in ascending layer order.
 pub const TAG_REDUCE_C: u64 = 20;
+/// Recovery fence (`multiply::recovery`): survivors rendezvous after the
+/// death-aware reduce so nobody tombstones its recovery-share exposure
+/// while a recovery root may still be fetching from it.
+pub const TAG_RECOVER_FENCE: u64 = 21;
 
 // ---- RMA window ids -----------------------------------------------------
 
@@ -77,6 +81,15 @@ pub const WIN_RES_SKEW_A: u64 = 11;
 pub const WIN_RES_SKEW_B: u64 = 12;
 /// Tall-skinny C allreduce window (`multiply::tall_skinny`).
 pub const WIN_TS_REDUCE: u64 = 13;
+/// Fault-tolerance recovery window for A shares (`multiply::recovery`):
+/// every rank exposes its local A share for the whole multiply so
+/// survivors can re-fetch a dead rank's panels from a replica layer.
+/// Get-only by protocol — the verifier's `RecoveryDiscipline` invariant
+/// rejects any put on this window.
+pub const WIN_RECOVER_A: u64 = 14;
+/// Fault-tolerance recovery window for B shares (`multiply::recovery`).
+/// Get-only, like [`WIN_RECOVER_A`].
+pub const WIN_RECOVER_B: u64 = 15;
 
 // ---- reserved blocks ----------------------------------------------------
 
@@ -102,7 +115,7 @@ pub const TAG_REDUCE: u64 = TAG_COLLECTIVE_BASE + 3;
 
 // ---- compile-time non-collision assertions ------------------------------
 
-const ALL_MSG_TAGS: [u64; 15] = [
+const ALL_MSG_TAGS: [u64; 16] = [
     TAG_CANNON_SKEW_A,
     TAG_CANNON_SKEW_B,
     TAG_CANNON_SHIFT_A,
@@ -114,13 +127,14 @@ const ALL_MSG_TAGS: [u64; 15] = [
     TAG_RES_SKEW_A,
     TAG_RES_SKEW_B,
     TAG_REDUCE_C,
+    TAG_RECOVER_FENCE,
     TAG_GATHER,
     TAG_SPREAD,
     TAG_BCAST,
     TAG_REDUCE,
 ];
 
-const ALL_WIN_IDS: [u64; 13] = [
+const ALL_WIN_IDS: [u64; 15] = [
     WIN_CANNON_SKEW_A,
     WIN_CANNON_SKEW_B,
     WIN_CANNON_SHIFT_A,
@@ -134,6 +148,8 @@ const ALL_WIN_IDS: [u64; 13] = [
     WIN_RES_SKEW_A,
     WIN_RES_SKEW_B,
     WIN_TS_REDUCE,
+    WIN_RECOVER_A,
+    WIN_RECOVER_B,
 ];
 
 const fn all_distinct(xs: &[u64]) -> bool {
@@ -172,7 +188,7 @@ const _: () = assert!(
 // below the collective block: w < 2^26 epochs of 2^32 tags from 2^59
 // reaches at most 2^59 + 2^58 < 2^60
 const _: () = assert!(
-    TAG_REDUCE_C < TAG_RMA_BASE,
+    TAG_RECOVER_FENCE < TAG_RMA_BASE,
     "user tags must stay below the RMA block"
 );
 const _: () = assert!(

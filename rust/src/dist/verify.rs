@@ -97,6 +97,11 @@ pub enum EventKind {
     /// A multiply-boundary marker (`CommView::phase_mark`): quiescence
     /// is checked at every mark, not only at run end.
     Mark { phase: u64 },
+    /// `CommView::kill`: this rank declared itself dead (modeled crash).
+    /// Orphans parked at the rank and exposures it leaked are excused;
+    /// any further traffic *from* it violates
+    /// [`Invariant::RecoveryDiscipline`] — dead ranks stay silent.
+    Death,
 }
 
 /// One traced substrate operation.
@@ -145,6 +150,10 @@ pub enum Invariant {
     LeakedExposure,
     /// Nondeterministic C-reduction drain order.
     ReduceOrder,
+    /// Fault-recovery discipline: the replica-recovery windows
+    /// (`WIN_RECOVER_A`/`WIN_RECOVER_B`) are get-only, and a rank that
+    /// declared death issues no further traffic.
+    RecoveryDiscipline,
 }
 
 impl fmt::Display for Invariant {
@@ -157,6 +166,7 @@ impl fmt::Display for Invariant {
             Invariant::OrphanMessage => "orphan-message",
             Invariant::LeakedExposure => "leaked-exposure",
             Invariant::ReduceOrder => "reduce-order",
+            Invariant::RecoveryDiscipline => "recovery-discipline",
         })
     }
 }
@@ -262,10 +272,23 @@ pub fn check(trace: &TraceLog) -> VerifyReport {
     }
     let phase = |ev: &CommEvent| phase_of[&(ev.rank, ev.clock)];
 
+    // Declared deaths (rank → clock of its Death event): death-aware
+    // checks excuse what a crash legitimately leaves behind — orphans
+    // parked at the dead rank, exposures it never closed — while the
+    // recovery-discipline check forbids anything *after* the death.
+    let mut dead: HashMap<usize, u64> = HashMap::new();
+    for ev in &trace.events {
+        if matches!(ev.kind, EventKind::Death) {
+            let e = dead.entry(ev.rank).or_insert(ev.clock);
+            *e = (*e).min(ev.clock);
+        }
+    }
+
     check_tag_spaces(trace, &mut report);
-    check_channels(&by_rank, &ranks, phase, &mut report);
-    check_epochs(&by_rank, &ranks, &mut report);
+    check_channels(&by_rank, &ranks, phase, &dead, &mut report);
+    check_epochs(&by_rank, &ranks, &dead, &mut report);
     check_reduce_order(&by_rank, &ranks, phase, &mut report);
+    check_recovery(&by_rank, &ranks, &dead, &mut report);
     report
 }
 
@@ -305,6 +328,7 @@ fn kind_name(kind: &EventKind) -> &'static str {
         EventKind::CloseEpoch { .. } => "close_epoch",
         EventKind::WinCreate { .. } => "win_create",
         EventKind::Mark { .. } => "mark",
+        EventKind::Death => "death",
     }
 }
 
@@ -316,6 +340,7 @@ fn check_channels<'a, F>(
     by_rank: &HashMap<usize, Vec<&'a CommEvent>>,
     ranks: &[usize],
     phase: F,
+    dead: &HashMap<usize, u64>,
     report: &mut VerifyReport,
 ) where
     F: Fn(&CommEvent) -> u64,
@@ -392,14 +417,18 @@ fn check_channels<'a, F>(
             debug_assert_eq!(r.rank, dst);
         }
         if ss.len() > rs.len() {
-            report.violations.push(Violation {
-                invariant: Invariant::OrphanMessage,
-                message: format!(
-                    "channel ({src} -> {dst}, tag {tag:#x}): {} message(s) sent by rank {src} \
-                     were never received by rank {dst}",
-                    ss.len() - rs.len()
-                ),
-            });
+            // a message parked at a declared-dead destination is the
+            // expected residue of a crash, not a protocol orphan
+            if !dead.contains_key(&dst) {
+                report.violations.push(Violation {
+                    invariant: Invariant::OrphanMessage,
+                    message: format!(
+                        "channel ({src} -> {dst}, tag {tag:#x}): {} message(s) sent by rank \
+                         {src} were never received by rank {dst}",
+                        ss.len() - rs.len()
+                    ),
+                });
+            }
         } else if rs.len() > ss.len() {
             report.violations.push(Violation {
                 invariant: Invariant::FifoByteConservation,
@@ -418,6 +447,7 @@ fn check_channels<'a, F>(
 fn check_epochs(
     by_rank: &HashMap<usize, Vec<&CommEvent>>,
     ranks: &[usize],
+    dead: &HashMap<usize, u64>,
     report: &mut VerifyReport,
 ) {
     // exposures by (rank, win, instance, epoch) → closed?
@@ -490,7 +520,9 @@ fn check_epochs(
         }
     }
     for (rank, win, instance, epoch, _) in &exposures {
-        if !closed[&(*rank, *win, *instance, *epoch)] {
+        // a dead rank cannot close its epochs; its leaked exposures are
+        // exactly what replica recovery reads (passive target)
+        if !closed[&(*rank, *win, *instance, *epoch)] && !dead.contains_key(rank) {
             report.violations.push(Violation {
                 invariant: Invariant::LeakedExposure,
                 message: format!(
@@ -503,6 +535,13 @@ fn check_epochs(
     wins_with_exposure.sort_unstable();
     wins_with_exposure.dedup();
     for win in wins_with_exposure {
+        // the recovery windows are recreated once per fault-tolerant
+        // multiply by design (one exposure epoch each); stale-read
+        // safety comes from the cross-instance Get check above plus the
+        // get-only RecoveryDiscipline rule
+        if win == tags::WIN_RECOVER_A || win == tags::WIN_RECOVER_B {
+            continue;
+        }
         let mut reusers: Vec<usize> = creations
             .iter()
             .filter(|((_, w), &inst)| *w == win && inst >= 2)
@@ -556,6 +595,47 @@ fn check_reduce_order<'a, F>(
                          not root-first ascending, reduction order is nondeterministic"
                     ),
                 });
+            }
+        }
+    }
+}
+
+/// Recovery discipline: the replica-recovery windows are get-only (a
+/// put into one would let an origin overwrite the very share a survivor
+/// is about to re-fetch), and a rank that declared death goes silent —
+/// its own `Death` marker and multiply-boundary `Mark`s aside, nothing
+/// may follow the death in its program order.
+fn check_recovery(
+    by_rank: &HashMap<usize, Vec<&CommEvent>>,
+    ranks: &[usize],
+    dead: &HashMap<usize, u64>,
+    report: &mut VerifyReport,
+) {
+    for &rank in ranks {
+        for ev in &by_rank[&rank] {
+            if let EventKind::Put { win, .. } = ev.kind {
+                if win == tags::WIN_RECOVER_A || win == tags::WIN_RECOVER_B {
+                    report.violations.push(Violation {
+                        invariant: Invariant::RecoveryDiscipline,
+                        message: format!(
+                            "rank {rank} put into get-only recovery window {win} — replica \
+                             shares move by origin-side get exclusively"
+                        ),
+                    });
+                }
+            }
+            if let Some(&death_clock) = dead.get(&rank) {
+                let silent_kind = matches!(ev.kind, EventKind::Death | EventKind::Mark { .. });
+                if ev.clock > death_clock && !silent_kind {
+                    report.violations.push(Violation {
+                        invariant: Invariant::RecoveryDiscipline,
+                        message: format!(
+                            "rank {rank} issued a {} after declaring death — dead ranks must \
+                             stay silent",
+                            kind_name(&ev.kind)
+                        ),
+                    });
+                }
             }
         }
     }
@@ -655,6 +735,85 @@ mod tests {
         };
         let r = check(&trace);
         assert!(r.flags(Invariant::ReduceOrder), "{}", r.render());
+    }
+
+    #[test]
+    fn put_into_recovery_window_is_flagged() {
+        let tag = tags::TAG_RMA_BASE + tags::WIN_RECOVER_A * tags::EPOCH_SPAN;
+        let mut p = ev(
+            0,
+            0,
+            EventKind::Put {
+                win: tags::WIN_RECOVER_A,
+                instance: 1,
+                epoch: 0,
+            },
+            Some(1),
+            tag,
+            8,
+        );
+        p.provenance = Provenance::Rma;
+        // drain the put so the violation comes from RecoveryDiscipline
+        // alone, not from an orphan
+        let mut c = ev(
+            1,
+            0,
+            EventKind::CloseEpoch {
+                win: tags::WIN_RECOVER_A,
+                instance: 1,
+                epoch: 0,
+                drained: vec![(0, 8)],
+            },
+            None,
+            tag,
+            0,
+        );
+        c.provenance = Provenance::Rma;
+        let r = check(&TraceLog { events: vec![p, c] });
+        assert!(r.flags(Invariant::RecoveryDiscipline), "{}", r.render());
+    }
+
+    #[test]
+    fn traffic_after_death_is_flagged() {
+        let trace = TraceLog {
+            events: vec![
+                ev(0, 0, EventKind::Death, None, 0, 0),
+                ev(0, 1, EventKind::Send, Some(1), 5, 8),
+                ev(1, 0, EventKind::Recv, Some(0), 5, 8),
+            ],
+        };
+        let r = check(&trace);
+        assert!(r.flags(Invariant::RecoveryDiscipline), "{}", r.render());
+    }
+
+    #[test]
+    fn dead_rank_residue_is_excused() {
+        // a message parked at the dead rank and the recovery exposure it
+        // never closed are crash residue, not violations
+        let tag = tags::TAG_RMA_BASE + tags::WIN_RECOVER_B * tags::EPOCH_SPAN;
+        let mut x = ev(
+            1,
+            0,
+            EventKind::Expose {
+                win: tags::WIN_RECOVER_B,
+                instance: 1,
+                epoch: 0,
+                serial: 0,
+            },
+            None,
+            tag,
+            8,
+        );
+        x.provenance = Provenance::Rma;
+        let trace = TraceLog {
+            events: vec![
+                ev(0, 0, EventKind::Send, Some(1), 5, 8),
+                x,
+                ev(1, 1, EventKind::Death, None, 0, 0),
+            ],
+        };
+        let r = check(&trace);
+        assert!(r.is_clean(), "{}", r.render());
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //!       --engine dbcsr|dbcsr-blocked|pdgemm [--scale N] [--real]
 //!       [--algorithm layout|auto|cannon|2.5d] [--layers C]
 //!       [--occupancy X] [--iterations N] [--plan-verbose] [--verify]
+//!       [--kill-rank R --kill-at T]
 //!                             one experiment point (`auto` picks the
 //!                             2.5D replication factor through the
 //!                             planner; --occupancy < 1 runs the
@@ -24,7 +25,12 @@
 //!                             table and the achieved occupancies;
 //!                             --verify traces the run through the
 //!                             comm-protocol checker and exits nonzero
-//!                             on any invariant violation)
+//!                             on any invariant violation;
+//!                             --kill-rank/--kill-at inject a rank
+//!                             death at slot-tick T — plans with
+//!                             replica layers heal it in-run and report
+//!                             a `recovery:` line, everything else
+//!                             reports Unrecoverable)
 
 use dbcsr::bench::figures;
 use dbcsr::bench::harness::{run_spec, run_spec_verified, AlgoSpec, Engine, RunSpec, Shape};
@@ -34,6 +40,7 @@ use dbcsr::dist::{NetModel, Transport};
 use dbcsr::backend::autotune::{tuned_to_json, Autotuner};
 use dbcsr::config::Args;
 use dbcsr::matrix::Mode;
+use dbcsr::multiply::FaultSpec;
 use dbcsr::perfmodel::PerfModel;
 use dbcsr::runtime::{artifacts_dir, Manifest};
 
@@ -221,10 +228,22 @@ fn run_file(args: &Args) {
                 })
                 .unwrap_or(1.0),
             iterations: get(section, "iterations", 1),
+            // fault = <rank>@<tick> injects a rank death mid-multiply
+            fault: cf
+                .get(&format!("{section}.fault"))
+                .or_else(|| cf.get("defaults.fault"))
+                .map(parse_fault),
         };
         let r = run_spec(spec);
+        if r.unrecoverable {
+            println!(
+                "[{section}] recovery: Unrecoverable — fault injected but the \
+                 resolved plan has no replica layer; a death there means restart"
+            );
+            continue;
+        }
         println!(
-            "[{section}] {}{} (stacks {}, comm {:.1} MiB{}{})",
+            "[{section}] {}{} (stacks {}, comm {:.1} MiB{}{}{})",
             fmt_secs(r.seconds),
             if r.iterations > 1 {
                 format!(" / {} iters + setup {}", r.iterations, fmt_secs(r.repl_seconds))
@@ -241,8 +260,27 @@ fn run_file(args: &Args) {
             } else {
                 String::new()
             },
+            if r.recovery_bytes > 0 {
+                format!(
+                    ", recovery {:.1} MiB / {:.3}s",
+                    r.recovery_bytes as f64 / (1 << 20) as f64,
+                    r.recovery_seconds
+                )
+            } else {
+                String::new()
+            },
             if r.oom { ", OOM" } else { "" }
         );
+    }
+}
+
+/// `<rank>@<tick>` — the runfile `fault` key and the CLI's
+/// `--kill-rank R --kill-at T` in one compact form.
+fn parse_fault(v: &str) -> FaultSpec {
+    let (r, t) = v.split_once('@').expect("fault = <rank>@<slot-tick>");
+    FaultSpec {
+        rank: r.trim().parse().expect("fault rank must be an integer"),
+        at_tick: t.trim().parse().expect("fault slot-tick must be an integer"),
     }
 }
 
@@ -289,6 +327,10 @@ fn run_one(args: &Args, scale: usize, mode: Mode) {
         occupancy > 0.0 && occupancy <= 1.0,
         "--occupancy must be in (0, 1], got {occupancy}"
     );
+    let fault = args.flag("kill-rank").map(|r| FaultSpec {
+        rank: r.parse().expect("--kill-rank must be a rank index"),
+        at_tick: args.usize_flag("kill-at", 0),
+    });
     let spec = RunSpec {
         nodes: args.usize_flag("nodes", 1),
         rpn,
@@ -303,6 +345,7 @@ fn run_one(args: &Args, scale: usize, mode: Mode) {
         plan_verbose: args.switch("plan-verbose"),
         occupancy,
         iterations: args.usize_flag("iterations", 1),
+        fault,
     };
     println!("spec: {spec:?}");
     if spec.plan_verbose && engine != Engine::Pdgemm {
@@ -329,6 +372,25 @@ fn run_one(args: &Args, scale: usize, mode: Mode) {
     } else {
         run_spec(spec)
     };
+    if r.unrecoverable {
+        println!(
+            "recovery: Unrecoverable — rank {} would die with no replica layer \
+             to heal from (the resolved plan has c = 1); run with --algorithm \
+             2.5d --layers 2 (or auto) or restart from scratch",
+            spec.fault.map(|f| f.rank).unwrap_or(0),
+        );
+        std::process::exit(3);
+    }
+    if let Some(f) = spec.fault {
+        println!(
+            "recovery: healed the death of rank {} (slot-tick {}) in-run — \
+             {:.1} MiB replica fetches, {:.3}s recovery time",
+            f.rank,
+            f.at_tick,
+            r.recovery_bytes as f64 / (1 << 20) as f64,
+            r.recovery_seconds,
+        );
+    }
     if let Some(plan) = &r.plan {
         println!(
             "plan: {} {}x{}x{} (source {}, replication {}, horizon {}, predicted {})",

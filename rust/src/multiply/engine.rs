@@ -107,6 +107,23 @@ impl LocalEngine {
         }
     }
 
+    /// A new engine with this one's configuration but pristine state.
+    /// The recovery path uses this to re-run a dead layer's slot-ticks
+    /// with exactly the numerics the lost rank would have produced.
+    pub fn fresh_like(&self) -> LocalEngine {
+        let threads = self.opts.threads.max(1);
+        LocalEngine {
+            opts: self.opts.clone(),
+            mode: self.mode,
+            gpu: self.gpu.fresh(),
+            lane_free: vec![0.0; threads],
+            stats: MultiplyStats::default(),
+            slots: Vec::new(),
+            dense_a: Vec::new(),
+            dense_b: Vec::new(),
+        }
+    }
+
     fn elem_bytes(&self) -> u64 {
         match self.mode {
             Mode::Real => REAL_ELEM_BYTES,

@@ -19,6 +19,7 @@ pub mod densify;
 pub mod engine;
 pub mod generation;
 pub mod planner;
+pub mod recovery;
 pub mod session;
 pub mod sparse_exchange;
 pub mod tall_skinny;
@@ -37,6 +38,7 @@ use crate::util::stats::{MultiplyStats, PlanSummary};
 
 pub use crate::dist::Transport;
 pub use engine::{EngineOpts, LocalEngine};
+pub use recovery::{FaultSpec, RecoveryPlan};
 pub use session::{PipelineSession, ResidentOperand, Sides};
 
 /// Which data-exchange algorithm to run.
@@ -92,6 +94,15 @@ pub struct MultiplyConfig {
     /// armed. Off by default — the default path records nothing and
     /// stays bit-identical.
     pub verify: bool,
+    /// Fault-injection plan: ranks killed mid-multiply at given
+    /// slot-ticks. Requires the 2.5D algorithm with `layers > 1` —
+    /// replica-based recovery (see [`recovery`]) re-fetches the lost
+    /// panels and recomputes the lost partial so C stays bit-identical
+    /// to the failure-free run; with no replica layer a fault is
+    /// Unrecoverable. Empty (the default) arms nothing and adds zero
+    /// traffic. In a resident session the faults fire on the first
+    /// multiply; later multiplies treat those ranks as already dead.
+    pub faults: Vec<FaultSpec>,
 }
 
 impl Default for MultiplyConfig {
@@ -106,6 +117,7 @@ impl Default for MultiplyConfig {
             plan_verbose: false,
             runtime: None,
             verify: false,
+            faults: Vec::new(),
         }
     }
 }
@@ -242,6 +254,8 @@ fn plan_summary_for(
         // fraction estimates the global one)
         occ_a: a.local_occupancy(),
         occ_b: b.local_occupancy(),
+        failure_rate: 0.0,
+        recovery: planner::RecoveryModel::default(),
     };
     let cand = planner::predict_grid(&input, rows, cols, layers);
     PlanSummary {
@@ -300,6 +314,13 @@ pub fn multiply(
     // which ranks hold actual result data (2.5D non-root layers return a
     // zero shell — filtering it would inflate the filtered-block stats)
     let mut holds_result = true;
+    if !cfg.faults.is_empty() {
+        assert!(
+            matches!(alg, Algorithm::TwoFiveD { layers } if layers > 1),
+            "Unrecoverable: fault injection requires the 2.5D algorithm with \
+             layers > 1 — no replica layer to recover from (resolved {alg:?})"
+        );
+    }
     let mut c = match alg {
         Algorithm::TallSkinny => {
             tall_skinny::multiply_tall_skinny(world, a, b, &mut engine, cfg.transport)?
@@ -311,8 +332,14 @@ pub fn multiply(
                 a.col_dist.nproc(),
                 layers,
             );
-            holds_result = g3.layer == 0;
-            twofive::multiply_twofive(&g3, a, b, &mut engine, cfg.transport)?
+            let recover = RecoveryPlan {
+                kill_now: cfg.faults.clone(),
+                already_dead: Vec::new(),
+            };
+            let (c, holds) =
+                twofive::multiply_twofive_ft(&g3, a, b, &mut engine, cfg.transport, &recover)?;
+            holds_result = holds;
+            c
         }
         _ => cannon::multiply_cannon(grid, a, b, &mut engine, cfg.transport)?,
     };

@@ -108,6 +108,36 @@ pub struct PlanInput {
     /// `c > 1` earlier for sparse inputs (arXiv:1705.10218).
     pub occ_a: f64,
     pub occ_b: f64,
+    /// Expected number of rank deaths over the plan's whole horizon
+    /// (0 = price failure-free, the historical behavior). Each expected
+    /// failure charges the plan its recovery cost — and here the
+    /// replication factor earns a second dividend: `c = 1` has no
+    /// replica to heal from, so a death loses *everything* and the only
+    /// recovery is a full restart of the priced objective, while
+    /// `c > 1` pays one replica-share fetch plus a re-run of the lost
+    /// rank's slot-ticks (`multiply::recovery`). Nonzero rates therefore
+    /// shift `Algorithm::Auto` toward layered plans.
+    pub failure_rate: f64,
+    /// Price parameters of the recovery protocol itself.
+    pub recovery: RecoveryModel,
+}
+
+/// Cost parameters of the replica-based recovery path
+/// (`multiply::recovery`), separated from [`PlanInput`] so callers that
+/// only tune the failure *rate* inherit calibrated defaults.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RecoveryModel {
+    /// Seconds from a rank's death to the survivors observing it — the
+    /// failure detector's heartbeat horizon (`CommView::horizon`).
+    pub detect_s: f64,
+}
+
+impl Default for RecoveryModel {
+    fn default() -> RecoveryModel {
+        // the substrate's default heartbeat horizon: a handful of
+        // network latencies, far below any panel transfer at real sizes
+        RecoveryModel { detect_s: 25e-6 }
+    }
 }
 
 /// Wire bytes per element for a storage mode (phantom storage accounts
@@ -160,6 +190,11 @@ pub struct CostBreakdown {
     /// Engine estimate: densified GEMM + staging + C undensify, summed
     /// over the horizon.
     pub compute_s: f64,
+    /// Expected recovery cost: `failure_rate ×` (detection + healing).
+    /// Healing is a full restart of the objective at `c = 1` (nothing
+    /// survives a death without replicas) and a replica-share fetch plus
+    /// a one-call recompute at `c > 1`. Zero at `failure_rate = 0`.
+    pub recovery_s: f64,
     /// Sum of all phases — the planner's objective.
     pub total_s: f64,
     /// Mean per-rank wire bytes over the whole horizon (skew + shifts +
@@ -255,7 +290,7 @@ impl Plan {
             },
         );
         out.push_str(
-            "  c  grid    repl      skew      shift     reduce    compute   total     mem/rank  pick\n",
+            "  c  grid    repl      skew      shift     reduce    compute   recover   total     mem/rank  pick\n",
         );
         for cand in &self.candidates {
             let ms = |s: f64| {
@@ -279,7 +314,7 @@ impl Plan {
                 ""
             };
             out.push_str(&format!(
-                "{:>3}  {:<6} {:<9} {:<9} {:<9} {:<9} {:<9} {:<9} {:<9} {}\n",
+                "{:>3}  {:<6} {:<9} {:<9} {:<9} {:<9} {:<9} {:<9} {:<9} {:<9} {}\n",
                 cand.layers,
                 format!("{}x{}", cand.rows, cand.cols),
                 ms(cand.cost.repl_s),
@@ -287,6 +322,7 @@ impl Plan {
                 ms(cand.cost.shift_s),
                 ms(cand.cost.reduce_s),
                 ms(cand.cost.compute_s),
+                ms(cand.cost.recovery_s),
                 ms(cand.cost.total_s),
                 format!("{:.1}MiB", cand.cost.mem_bytes_per_rank as f64 / (1 << 20) as f64),
                 mark,
@@ -455,7 +491,26 @@ pub fn predict_grid(input: &PlanInput, rows: usize, cols: usize, layers: usize) 
     let mem = bytes_a + bytes_b + bytes_c + 2.0 * panel_bytes as f64;
     let feasible = mem * input.perf.pool_slack <= input.perf.gpu_mem_bytes as f64;
 
-    let total_s = repl_s + skew_s + shift_s + reduce_s + compute_s;
+    // expected recovery: each anticipated death costs its detection plus
+    // the healing work. Without replicas (c = 1) a death is
+    // unrecoverable in-run — the whole priced objective restarts. With
+    // replicas the survivors fetch the lost rank's A/B share from a
+    // sibling layer (one hop) and a designated survivor re-runs the lost
+    // slot-ticks (≈ one call's per-rank compute) — the
+    // `multiply::recovery` protocol's cost structure.
+    let failure_free = repl_s + skew_s + shift_s + reduce_s + compute_s;
+    let recovery_s = if input.failure_rate > 0.0 {
+        let heal = if layers > 1 {
+            hop(bytes_a + bytes_b) + compute_s / h as f64
+        } else {
+            failure_free
+        };
+        input.failure_rate * (input.recovery.detect_s + heal)
+    } else {
+        0.0
+    };
+
+    let total_s = failure_free + recovery_s;
     Candidate {
         layers,
         rows,
@@ -466,6 +521,7 @@ pub fn predict_grid(input: &PlanInput, rows: usize, cols: usize, layers: usize) 
             shift_s,
             reduce_s,
             compute_s,
+            recovery_s,
             total_s,
             comm_bytes_per_rank: comm_bytes.round() as u64,
             repl_bytes_per_rank: repl_bytes.round() as u64,
@@ -563,6 +619,8 @@ mod tests {
             horizon: 1,
             occ_a: 1.0,
             occ_b: 1.0,
+            failure_rate: 0.0,
+            recovery: RecoveryModel::default(),
         }
     }
 
@@ -826,6 +884,42 @@ mod tests {
             sparse_h <= dense_h,
             "sparse crossover {sparse_h} must not come later than dense {dense_h}"
         );
+    }
+
+    #[test]
+    fn failure_rate_prices_c1_as_full_restart() {
+        let mut inp = input(16, 1408, 1408, 1408, Transport::TwoSided);
+        let free = predict_grid(&inp, 4, 4, 1).cost;
+        assert_eq!(free.recovery_s, 0.0, "failure-free pricing is unchanged");
+        inp.failure_rate = 2.0;
+        let c1 = predict_grid(&inp, 4, 4, 1).cost;
+        // c = 1 has no replica layer: every expected death restarts the
+        // whole objective (detection + everything priced so far)
+        let want = 2.0 * (inp.recovery.detect_s + free.total_s);
+        assert!((c1.recovery_s - want).abs() < 1e-12, "{c1:?}");
+        assert!((c1.total_s - (free.total_s + want)).abs() < 1e-12);
+        // c > 1 heals: a one-hop replica fetch + a one-call recompute is
+        // far below restarting from scratch
+        let c4 = predict_grid(&inp, 2, 2, 4).cost;
+        assert!(c4.recovery_s > 0.0);
+        assert!(c4.recovery_s < c1.recovery_s, "{c4:?} vs {c1:?}");
+    }
+
+    #[test]
+    fn failure_rate_shifts_the_argmin_to_layers() {
+        // the ISSUE acceptance: a problem where the cold one-shot argmin
+        // is c = 1 must flip to c > 1 once deaths are anticipated —
+        // replication buys recoverability, and the planner prices it
+        let base = input(16, 1408, 1408, 1408, Transport::TwoSided);
+        assert_eq!(choose_plan(&base).layers, 1, "failure-free baseline");
+        let mut faulty = base.clone();
+        faulty.failure_rate = 4.0;
+        let plan = choose_plan(&faulty);
+        assert!(
+            plan.layers > 1,
+            "nonzero failure rate must shift Auto toward layers: {plan:?}"
+        );
+        assert!(plan.render().contains("recover"));
     }
 
     #[test]

@@ -1,0 +1,512 @@
+//! Replica-based recovery for the 2.5D engine: survive rank loss
+//! mid-multiply (ROADMAP item 4; the resilience dividend of the 2.5D
+//! replication that arXiv:1705.10218 buys for bandwidth).
+//!
+//! ## The protocol
+//!
+//! The 2.5D layout is naturally redundant — every layer holds a replica
+//! of A and B — so a lost rank costs no irreplaceable operand data,
+//! only (a) the panels it would have forwarded around its layer's
+//! shift rings and (b) the partial C of its own slot-ticks. Recovery
+//! restores both from surviving replicas:
+//!
+//! 1. **Share exposure.** When a fault plan is active, every
+//!    participating rank opens two get-only RMA windows over the
+//!    *global* communicator ([`WIN_RECOVER_A`] / [`WIN_RECOVER_B`])
+//!    and exposes its full local A/B share in the framed wire format
+//!    ([`encode_framed_share`]), frame included so a fetcher needs no
+//!    knowledge of the exposer's skew. Exposure is passive-target:
+//!    a share published before its owner dies stays fetchable.
+//! 2. **Ring healing.** A dead rank's receive-side ring neighbors see
+//!    `PeerDied` from the try-variant shift (clock advanced one
+//!    detection horizon past the death — the modeled detection
+//!    latency) and substitute each expected panel by re-extracting it
+//!    from a replica share ([`RecoveryCtx::fetch`]). Panels are pure
+//!    functions of the read-only operands, so healed panels are
+//!    bit-identical to the ones the dead rank would have forwarded.
+//! 3. **Recompute + death-aware reduce.** The lost partial C is
+//!    recomputed by the *recovery root* — the lowest alive layer at
+//!    the dead rank's grid position — on a fresh engine
+//!    ([`LocalEngine::fresh_like`]; deterministic numerics make the
+//!    replay bit-identical), and merged into the layer reduce in the
+//!    exact failure-free summation order
+//!    (`sparse_exchange::reduce_c_layers_ft`).
+//! 4. **Fence + teardown.** Survivors rendezvous on
+//!    [`TAG_RECOVER_FENCE`] before tombstoning their share exposures,
+//!    so no rank closes a window a recovery root may still fetch from.
+//!
+//! Roles are derived purely from the globally shared fault plan
+//! ([`RecoveryPlan`]) — no agreement protocol runs after a death, so
+//! the recovery path stays deterministic under the virtual clock.
+//! Recovery traffic and time are booked in
+//! `MultiplyStats::{recovery_bytes, recovery_s}`.
+
+use std::collections::BTreeMap;
+
+use crate::backend::gpu_sim::DeviceOom;
+use crate::dist::tags::{TAG_RECOVER_FENCE, WIN_RECOVER_A, WIN_RECOVER_B};
+use crate::dist::{CommView, Grid2D, Grid3D, Payload, RmaWindow, Transport};
+use crate::matrix::{DistMatrix, LocalCsr, Mode};
+
+use super::cannon::{build_c_slots, extract_panel, rma_shift_put, Key};
+use super::engine::LocalEngine;
+use super::sparse_exchange::{
+    accumulate_pattern, decode_framed_share, encode_framed_share, pack_panels, unpack_panels,
+    CPattern, PanelMeta,
+};
+use super::twofive::layer_ticks;
+use super::vgrid::VGrid;
+
+/// Kill directive for fault injection: world rank `rank` dies at the
+/// head of its `at_tick`-th owned slot-tick (it completes earlier
+/// ticks, including the trailing shift, then stops cold). An `at_tick`
+/// past the layer's tick count means "after the sweep, before the
+/// reduce" — the worst case for the reduce, which loses the whole
+/// partial.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// World rank to kill.
+    pub rank: usize,
+    /// Owned slot-tick index at whose head the rank dies.
+    pub at_tick: usize,
+}
+
+/// The fault plan one multiply runs under. Every rank receives the
+/// same plan (it comes from the shared `MultiplyConfig`), so recovery
+/// roles — who heals, who recomputes, who roots the reduce — are
+/// computed identically everywhere without any agreement traffic.
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryPlan {
+    /// Ranks killed *during* this multiply. They participate in setup
+    /// (and expose their shares) before dying, so their exposures
+    /// remain fetchable.
+    pub kill_now: Vec<FaultSpec>,
+    /// Ranks that died in an earlier multiply of a resident session:
+    /// silent from tick 0, no exposures this multiply.
+    pub already_dead: Vec<usize>,
+}
+
+impl RecoveryPlan {
+    /// Whether any fault machinery must be armed.
+    pub fn active(&self) -> bool {
+        !self.kill_now.is_empty() || !self.already_dead.is_empty()
+    }
+
+    /// The tick at whose head `world_rank` dies this multiply, if any.
+    pub fn kill_at(&self, world_rank: usize) -> Option<usize> {
+        self.kill_now
+            .iter()
+            .find(|f| f.rank == world_rank)
+            .map(|f| f.at_tick)
+    }
+
+    /// Every rank dead at some point during this multiply (sorted).
+    pub fn all_dead(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.kill_now.iter().map(|f| f.rank).collect();
+        v.extend_from_slice(&self.already_dead);
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Layers dead at in-layer position `pos` of a topology with `per`
+    /// ranks per layer (ascending).
+    pub fn dead_layers_at(&self, pos: usize, per: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .all_dead()
+            .into_iter()
+            .filter(|&w| w % per == pos)
+            .map(|w| w / per)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// Per-rank recovery state for one faulted multiply: the two share
+/// windows, a cache of decoded replica shares, and the traffic/time
+/// bookkeeping that lands in `MultiplyStats`.
+pub(super) struct RecoveryCtx<'m> {
+    world: CommView,
+    a: &'m DistMatrix,
+    b: &'m DistMatrix,
+    vg: &'m VGrid,
+    rows: usize,
+    cols: usize,
+    layers: usize,
+    layer: usize,
+    me: usize,
+    a_native: bool,
+    b_native: bool,
+    already_dead: Vec<usize>,
+    win_a: RmaWindow,
+    win_b: RmaWindow,
+    /// Decoded replica shares, keyed by (is_a, owner world rank). One
+    /// fetch per distinct owner, however many panels it supplies.
+    shares: BTreeMap<(bool, usize), DistMatrix>,
+    /// Recovery traffic (element + metadata bytes fetched).
+    pub bytes: u64,
+    /// Virtual seconds spent detecting, fetching and recomputing.
+    pub seconds: f64,
+}
+
+impl<'m> RecoveryCtx<'m> {
+    /// Open the share windows over the global communicator and expose
+    /// this rank's A/B shares (framed, so any peer can decode them
+    /// without knowing this rank's layout). Purely local — no traffic
+    /// until somebody actually fetches.
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn new(
+        g3: &Grid3D,
+        a: &'m DistMatrix,
+        b: &'m DistMatrix,
+        vg: &'m VGrid,
+        a_native: bool,
+        b_native: bool,
+        plan: &RecoveryPlan,
+    ) -> RecoveryCtx<'m> {
+        let win_a = RmaWindow::new(&g3.world, WIN_RECOVER_A);
+        let win_b = RmaWindow::new(&g3.world, WIN_RECOVER_B);
+        win_a.expose(encode_framed_share(a));
+        win_b.expose(encode_framed_share(b));
+        RecoveryCtx {
+            world: g3.world.clone(),
+            a,
+            b,
+            vg,
+            rows: g3.rows,
+            cols: g3.cols,
+            layers: g3.layers,
+            layer: g3.layer,
+            me: g3.world.rank(),
+            a_native,
+            b_native,
+            already_dead: plan.already_dead.clone(),
+            win_a,
+            win_b,
+            shares: BTreeMap::new(),
+            bytes: 0,
+            seconds: 0.0,
+        }
+    }
+
+    /// World rank owning panel `key` in its start-layout on `layer`:
+    /// the skewed native position when the operand is native, the
+    /// plain cyclic position when canonical. Either way the owner's
+    /// share contains every block of the panel.
+    fn owner_world(&self, is_a: bool, key: Key, layer: usize) -> usize {
+        let per = self.rows * self.cols;
+        let (s0, _) = layer_ticks(self.vg.l, self.layers, layer);
+        let (row, col) = if is_a {
+            let (i, g) = key;
+            let col = if self.a_native {
+                self.vg.a_skew_col_at(i, g, s0)
+            } else {
+                g % self.cols
+            };
+            (i % self.rows, col)
+        } else {
+            let (g, j) = key;
+            let row = if self.b_native {
+                self.vg.b_skew_row_at(g, j, s0)
+            } else {
+                g % self.rows
+            };
+            (row, j % self.cols)
+        };
+        layer * per + row * self.cols + col
+    }
+
+    /// Reconstruct panel `key` of A (`is_a`) or B from a replica
+    /// share: locally when this rank owns it, otherwise by a one-time
+    /// RMA get of the owner's exposed share (cached per owner).
+    /// Prefers the own-layer owner; falls back across layers past
+    /// ranks that were already dead at entry (ranks dying *this*
+    /// multiply exposed before dying, so their shares are still
+    /// served). Bit-identical to the panel the ring would have
+    /// delivered: extraction from a losslessly decoded share equals
+    /// extraction at the source.
+    pub(super) fn fetch(&mut self, is_a: bool, key: Key) -> LocalCsr {
+        let owner = std::iter::once(self.layer)
+            .chain((0..self.layers).filter(|l| *l != self.layer))
+            .map(|l| self.owner_world(is_a, key, l))
+            .find(|w| !self.already_dead.contains(w))
+            .expect("Unrecoverable: every replica owner of the panel is dead");
+        let m = if is_a { self.a } else { self.b };
+        if owner == self.me {
+            return extract_panel(m, self.vg, key.0, key.1);
+        }
+        if !self.shares.contains_key(&(is_a, owner)) {
+            let t0 = self.world.now();
+            let s0 = self.world.stats();
+            let win = if is_a { &self.win_a } else { &self.win_b };
+            let payload = win.try_get(owner).unwrap_or_else(|d| {
+                panic!("recovery share of rank {owner} unavailable ({d})")
+            });
+            let local = decode_framed_share(payload, &m.rows, &m.cols, m.mode);
+            let s1 = self.world.stats();
+            self.bytes += (s1.bytes_sent - s0.bytes_sent) + (s1.meta_bytes - s0.meta_bytes);
+            self.seconds += self.world.now() - t0;
+            let dm = DistMatrix {
+                rows: m.rows.clone(),
+                cols: m.cols.clone(),
+                row_dist: m.row_dist.clone(),
+                col_dist: m.col_dist.clone(),
+                coords: m.coords,
+                local,
+                mode: m.mode,
+            };
+            self.shares.insert((is_a, owner), dm);
+        }
+        extract_panel(&self.shares[&(is_a, owner)], self.vg, key.0, key.1)
+    }
+
+    /// Tombstone this rank's share exposures (must run *after* the
+    /// survivor fence — no peer may still be fetching).
+    pub(super) fn close(&mut self) {
+        self.win_a.close_epoch(&[]);
+        self.win_b.close_epoch(&[]);
+    }
+}
+
+/// Two-sided one-ring shift with healing: send unconditionally (a
+/// message to a dead peer is an orphan the verifier excuses — keeping
+/// the send keeps traffic deterministic), then try to receive; on
+/// `PeerDied`, reconstruct every expected panel from replica shares.
+#[allow(clippy::too_many_arguments)]
+fn ft_shift<F>(
+    world: &CommView,
+    dst: usize,
+    src: usize,
+    held: BTreeMap<Key, LocalCsr>,
+    next_keys: &[Key],
+    meta: F,
+    tag: u64,
+    mode: Mode,
+    ctx: &mut RecoveryCtx,
+    is_a: bool,
+) -> BTreeMap<Key, LocalCsr>
+where
+    F: Fn(&Key) -> PanelMeta,
+{
+    let keys: Vec<Key> = held.keys().copied().collect();
+    let mut held = held;
+    let payload = pack_panels(&mut held, &keys, mode);
+    world.send(dst, tag, payload);
+    let mut out = BTreeMap::new();
+    let t0 = world.now();
+    match world.try_recv(src, tag) {
+        Ok(received) => unpack_panels(received, next_keys, &meta, mode, &mut out),
+        Err(_) => {
+            // detection latency (one horizon past the death) is part
+            // of the recovery bill
+            ctx.seconds += world.now() - t0;
+            for k in next_keys {
+                out.insert(*k, ctx.fetch(is_a, *k));
+            }
+        }
+    }
+    out
+}
+
+/// One-sided half-shift completion with healing: close the epoch with
+/// the try-variant; a dead source's missing put is healed from
+/// replica shares.
+fn ft_rma_shift_close<F>(
+    win: &mut RmaWindow,
+    src: usize,
+    next_keys: &[Key],
+    meta: F,
+    mode: Mode,
+    ctx: &mut RecoveryCtx,
+    is_a: bool,
+) -> BTreeMap<Key, LocalCsr>
+where
+    F: Fn(&Key) -> PanelMeta,
+{
+    let t0 = ctx.world.now();
+    let mut results = win.try_close_epoch(&[src]);
+    debug_assert_eq!(results.len(), 1);
+    let mut out = BTreeMap::new();
+    match results.remove(0) {
+        Ok(payload) => unpack_panels(payload, next_keys, &meta, mode, &mut out),
+        Err(_) => {
+            ctx.seconds += ctx.world.now() - t0;
+            for k in next_keys {
+                out.insert(*k, ctx.fetch(is_a, *k));
+            }
+        }
+    }
+    out
+}
+
+/// Fault-tolerant drop-in for `cannon::shift_pair` on the 2.5D tick
+/// rings: same transports, same ordering (two-sided A completes before
+/// B issues; one-sided puts both before closing either), but every
+/// receive edge can heal a dead peer.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn ft_shift_pair<FA, FB>(
+    grid: &Grid2D,
+    transport: Transport,
+    wins: (&mut Option<RmaWindow>, &mut Option<RmaWindow>),
+    ctx: &mut RecoveryCtx,
+    a_panels: &mut BTreeMap<Key, LocalCsr>,
+    b_panels: &mut BTreeMap<Key, LocalCsr>,
+    next_a: Option<&[Key]>,
+    next_b: Option<&[Key]>,
+    meta_a: FA,
+    meta_b: FB,
+    tags: (u64, u64),
+    mode: Mode,
+) where
+    FA: Fn(&Key) -> PanelMeta,
+    FB: Fn(&Key) -> PanelMeta,
+{
+    match transport {
+        Transport::TwoSided => {
+            if let Some(next) = next_a {
+                let held = std::mem::take(a_panels);
+                *a_panels = ft_shift(
+                    &grid.world,
+                    grid.left(),
+                    grid.right(),
+                    held,
+                    next,
+                    meta_a,
+                    tags.0,
+                    mode,
+                    ctx,
+                    true,
+                );
+            }
+            if let Some(next) = next_b {
+                let held = std::mem::take(b_panels);
+                *b_panels = ft_shift(
+                    &grid.world,
+                    grid.up(),
+                    grid.down(),
+                    held,
+                    next,
+                    meta_b,
+                    tags.1,
+                    mode,
+                    ctx,
+                    false,
+                );
+            }
+        }
+        Transport::OneSided => {
+            let win_a = wins.0.as_mut().expect("one-sided shift window");
+            let win_b = wins.1.as_mut().expect("one-sided shift window");
+            if next_a.is_some() {
+                let held = std::mem::take(a_panels);
+                rma_shift_put(win_a, grid.left(), held, mode);
+            }
+            if next_b.is_some() {
+                let held = std::mem::take(b_panels);
+                rma_shift_put(win_b, grid.up(), held, mode);
+            }
+            if let Some(next) = next_a {
+                *a_panels =
+                    ft_rma_shift_close(win_a, grid.right(), next, meta_a, mode, ctx, true);
+            }
+            if let Some(next) = next_b {
+                *b_panels =
+                    ft_rma_shift_close(win_b, grid.down(), next, meta_b, mode, ctx, false);
+            }
+        }
+    }
+}
+
+/// Re-run a dead layer's slot-ticks on a fresh engine, feeding every
+/// tick's A/B panels from replica shares. Engine numerics are
+/// deterministic, the C slot frames are identical at a fixed grid
+/// position across layers, and the tick order is the dead layer's own
+/// — so the returned partial is bit-identical to what the lost rank
+/// would have contributed.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn recompute_layer(
+    ctx: &mut RecoveryCtx,
+    proto: &LocalEngine,
+    comm: &CommView,
+    vg: &VGrid,
+    layers: usize,
+    dead_layer: usize,
+    a: &DistMatrix,
+    b: &DistMatrix,
+    slots: &[(usize, usize)],
+) -> Result<(Vec<LocalCsr>, Vec<CPattern>), DeviceOom> {
+    let t0 = comm.now();
+    let sec0 = ctx.seconds;
+    let (s0, nticks) = layer_ticks(vg.l, layers, dead_layer);
+    let mut eng = proto.fresh_like();
+    eng.begin(comm, build_c_slots(vg, slots, a, b))?;
+    let mut pats = vec![CPattern::new(); slots.len()];
+    for t in 0..nticks {
+        let s = s0 + t;
+        for (idx, &(i, j)) in slots.iter().enumerate() {
+            let g = vg.group_at(i, j, s);
+            let ap = ctx.fetch(true, (i, g));
+            let bp = ctx.fetch(false, (g, j));
+            eng.tick(comm, idx, &ap, &bp)?;
+            accumulate_pattern(&mut pats[idx], &ap, &bp);
+        }
+    }
+    let panels = eng.finish(comm);
+    // total recompute wall time, without double-booking the fetch
+    // seconds `ctx.fetch` already recorded inside the loop
+    let fetched = ctx.seconds - sec0;
+    ctx.seconds = sec0 + (comm.now() - t0).max(fetched);
+    Ok((panels, pats))
+}
+
+/// Post-reduce rendezvous of the survivors: a gather/release pair
+/// through the lowest alive world rank. Nobody tombstones its share
+/// exposure until every survivor — recovery roots included — is past
+/// its last fetch.
+pub(super) fn survivor_fence(world: &CommView, plan: &RecoveryPlan) {
+    let dead = plan.all_dead();
+    let survivors: Vec<usize> = (0..world.size()).filter(|r| !dead.contains(r)).collect();
+    let coord = survivors[0];
+    let me = world.rank();
+    if me == coord {
+        for &s in &survivors {
+            if s != coord {
+                let _ = world.recv(s, TAG_RECOVER_FENCE);
+            }
+        }
+        for &s in &survivors {
+            if s != coord {
+                world.send(s, TAG_RECOVER_FENCE, Payload::Empty);
+            }
+        }
+    } else {
+        world.send(coord, TAG_RECOVER_FENCE, Payload::Empty);
+        let _ = world.recv(coord, TAG_RECOVER_FENCE);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_roles_are_deterministic() {
+        let plan = RecoveryPlan {
+            kill_now: vec![
+                FaultSpec { rank: 5, at_tick: 1 },
+                FaultSpec { rank: 1, at_tick: 0 },
+            ],
+            already_dead: vec![9],
+        };
+        assert!(plan.active());
+        assert_eq!(plan.kill_at(5), Some(1));
+        assert_eq!(plan.kill_at(2), None);
+        assert_eq!(plan.all_dead(), vec![1, 5, 9]);
+        // 2x2 layer grids: position = w % 4, layer = w / 4
+        assert_eq!(plan.dead_layers_at(1, 4), vec![0, 2]);
+        assert_eq!(plan.dead_layers_at(5 % 4, 4), vec![1]);
+        assert_eq!(plan.dead_layers_at(0, 4), Vec::<usize>::new());
+        assert!(!RecoveryPlan::default().active());
+    }
+}

@@ -38,8 +38,9 @@ use crate::util::stats::{MultiplyStats, PlanSummary};
 
 use super::cannon::{exchange, panel_meta, rma_exchange_finish, rma_exchange_start, Key};
 use super::engine::LocalEngine;
+use super::recovery::RecoveryPlan;
 use super::twofive::{
-    a_skew_plan, a_start_keys, b_skew_plan, b_start_keys, layer_ticks, multiply_twofive,
+    a_skew_plan, a_start_keys, b_skew_plan, b_start_keys, layer_ticks, multiply_twofive_ft,
     replicate_to_layers, sweep_period,
 };
 use super::vgrid::VGrid;
@@ -326,11 +327,37 @@ impl PipelineSession {
         );
         let t0 = world.now();
         let comm0 = world.stats();
-        let mut c = multiply_twofive(&self.g3, am, bm, &mut engine, self.cfg.transport)?;
+        // Faults fire once, on the session's first resident multiply;
+        // later calls carry the same ranks as already-dead so survivors
+        // keep routing around them (native shares are exactly what the
+        // resident recovery path requires).
+        let fault_plan = if self.cfg.faults.is_empty() {
+            RecoveryPlan::default()
+        } else {
+            assert!(
+                self.g3.layers > 1,
+                "Unrecoverable: fault injection on a session with layers = 1 — \
+                 no replica layer to recover from (run with c > 1)"
+            );
+            if self.multiplies == 0 {
+                RecoveryPlan {
+                    kill_now: self.cfg.faults.clone(),
+                    already_dead: Vec::new(),
+                }
+            } else {
+                RecoveryPlan {
+                    kill_now: Vec::new(),
+                    already_dead: self.cfg.faults.iter().map(|f| f.rank).collect(),
+                }
+            }
+        };
+        let (mut c, holds) =
+            multiply_twofive_ft(&self.g3, am, bm, &mut engine, self.cfg.transport, &fault_plan)?;
         // on-the-fly filtering, after the cross-layer reduce — identical
-        // semantics to the one-shot `multiply()` path (layer 0 holds the
-        // reduced result; other layers' zero shells must not be counted)
-        let filtered = if self.g3.layer == 0 {
+        // semantics to the one-shot `multiply()` path (the holding layer
+        // has the reduced result; other layers' zero shells must not be
+        // counted)
+        let filtered = if holds {
             c.filter_blocks(self.cfg.filter_eps)
         } else {
             0
@@ -342,7 +369,7 @@ impl PipelineSession {
         stats.comm_wait_s = comm1.wait_seconds - comm0.wait_seconds;
         stats.meta_bytes = comm1.meta_bytes - comm0.meta_bytes;
         stats.plan = Some(plan);
-        super::book_sparse_stats(&mut stats, am, bm, &c, filtered, self.g3.layer == 0);
+        super::book_sparse_stats(&mut stats, am, bm, &c, filtered, holds);
         self.multiplies += 1;
         self.stats.merge(&stats);
         if self.cfg.verify {
@@ -374,6 +401,8 @@ impl PipelineSession {
             horizon: 1,
             occ_a: am.local_occupancy(),
             occ_b: bm.local_occupancy(),
+            failure_rate: 0.0,
+            recovery: planner::RecoveryModel::default(),
         };
         let cand =
             planner::predict_grid(&input, self.g3.rows, self.g3.cols, self.g3.layers);

@@ -41,8 +41,9 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 
+use crate::backend::gpu_sim::DeviceOom;
 use crate::dist::{Grid3D, Payload, RmaWindow, Transport};
-use crate::matrix::{DistMatrix, Distribution, LocalCsr, Mode};
+use crate::matrix::{BlockLayout, DistMatrix, Distribution, LocalCsr, Mode};
 
 /// Panel key: (virtual row, group) for A; (group, virtual col) for B.
 /// Structurally identical to `cannon::Key` — public so the wire-format
@@ -191,6 +192,64 @@ pub fn decode_share_into(m: &mut DistMatrix, payload: Payload) {
     let mut out = BTreeMap::new();
     unpack_panels(payload, &[(0, 0)], &|_: &Key| frame.clone(), m.mode, &mut out);
     m.local = out.remove(&(0, 0)).expect("decoded share");
+}
+
+/// Serialize one matrix's whole local share **with its frame** (global
+/// block ids) prepended to the index stream. Unlike [`encode_share`],
+/// the receiver needs no prior knowledge of the sender's layout — the
+/// recovery path uses this so a survivor can decode any peer's share
+/// without reconstructing that peer's skew. Sizes are not shipped: both
+/// ends know the global [`BlockLayout`]s.
+pub fn encode_framed_share(m: &DistMatrix) -> Payload {
+    let mut index: Vec<i64> = Vec::new();
+    index.push(m.local.row_ids.len() as i64);
+    index.push(m.local.col_ids.len() as i64);
+    index.extend(m.local.row_ids.iter().map(|&i| i as i64));
+    index.extend(m.local.col_ids.iter().map(|&j| j as i64));
+    let mut data: Vec<f32> = Vec::new();
+    let mut elems: u64 = 0;
+    pack_one(&m.local, &mut index, &mut data, &mut elems, m.mode);
+    match m.mode {
+        Mode::Real => Payload::Blocks { index, data },
+        Mode::Model => Payload::SparseBlocks { index, elems },
+    }
+}
+
+/// Rebuild a peer's local share from an [`encode_framed_share`]
+/// message: the frame comes off the wire, the sizes from the global
+/// layouts.
+pub fn decode_framed_share(
+    payload: Payload,
+    rows: &BlockLayout,
+    cols: &BlockLayout,
+    mode: Mode,
+) -> LocalCsr {
+    let (index, data) = match (payload, mode) {
+        (Payload::Blocks { index, data }, Mode::Real) => (index, data),
+        (Payload::SparseBlocks { index, .. }, Mode::Model) => (index, Vec::new()),
+        (other, mode) => panic!("framed share: unexpected payload {other:?} in {mode:?} mode"),
+    };
+    let nr = index[0] as usize;
+    let nc = index[1] as usize;
+    let row_ids: Vec<usize> = index[2..2 + nr].iter().map(|&x| x as usize).collect();
+    let col_ids: Vec<usize> = index[2 + nr..2 + nr + nc]
+        .iter()
+        .map(|&x| x as usize)
+        .collect();
+    let row_sizes: Vec<usize> = row_ids.iter().map(|&i| rows.block_size(i)).collect();
+    let col_sizes: Vec<usize> = col_ids.iter().map(|&j| cols.block_size(j)).collect();
+    let rest = index[2 + nr + nc..].to_vec();
+    let inner = match mode {
+        Mode::Real => Payload::Blocks { index: rest, data },
+        Mode::Model => Payload::SparseBlocks {
+            index: rest,
+            elems: 0,
+        },
+    };
+    let frame = (row_ids, col_ids, row_sizes, col_sizes);
+    let mut out = BTreeMap::new();
+    unpack_panels(inner, &[(0, 0)], &|_: &Key| frame.clone(), mode, &mut out);
+    out.remove(&(0, 0)).expect("decoded framed share")
 }
 
 /// The symbolic result pattern of one C slot, in slot-panel-local
@@ -432,6 +491,93 @@ pub fn reduce_c_layers(
     }
 }
 
+/// Death-aware variant of [`reduce_c_layers`]: the reduce root is the
+/// **lowest alive layer** at this grid position, dead layers' partials
+/// are recomputed (via `recompute`, which replays the lost slot-ticks
+/// from replica shares), and the accumulation still walks layers 0, 1,
+/// 2, … in ascending order with layer 0's partial as the base — the
+/// exact summation order of the failure-free reduce, so C stays
+/// bit-identical. Returns whether this rank ended up holding the
+/// result.
+///
+/// Every caller must pass the same `dead_layers` (derived from the
+/// shared fault plan), so the role reassignment needs no agreement
+/// protocol.
+pub(super) fn reduce_c_layers_ft<F>(
+    g3: &Grid3D,
+    transport: Transport,
+    out_panels: &mut [LocalCsr],
+    pats: &mut [CPattern],
+    mode: Mode,
+    dead_layers: &[usize],
+    mut recompute: F,
+) -> Result<bool, DeviceOom>
+where
+    F: FnMut(usize) -> Result<(Vec<LocalCsr>, Vec<CPattern>), DeviceOom>,
+{
+    let root = (0..g3.layers)
+        .find(|l| !dead_layers.contains(l))
+        .expect("Unrecoverable: every replica layer at this grid position is dead");
+    if g3.layers == 1 {
+        return Ok(true);
+    }
+    debug_assert!(
+        !dead_layers.contains(&g3.layer),
+        "dead ranks return before the reduce"
+    );
+    let alive_nonroot: Vec<usize> = (0..g3.layers)
+        .filter(|l| *l != root && !dead_layers.contains(l))
+        .collect();
+    if g3.layer != root {
+        let payload = encode_c(out_panels, pats, mode);
+        match transport {
+            Transport::TwoSided => g3.layer_comm.send(root, TAG_REDUCE_C, payload),
+            Transport::OneSided => {
+                let mut win = RmaWindow::new(&g3.layer_comm, WIN_REDUCE_C);
+                win.put(root, payload);
+            }
+        }
+        return Ok(false);
+    }
+    // recovery root: drain the alive contributions (ascending layer
+    // order, as in the failure-free reduce)
+    let mut incoming: BTreeMap<usize, Payload> = match transport {
+        Transport::TwoSided => alive_nonroot
+            .iter()
+            .map(|&l| (l, g3.layer_comm.recv(l, TAG_REDUCE_C)))
+            .collect(),
+        Transport::OneSided => {
+            let mut win = RmaWindow::new(&g3.layer_comm, WIN_REDUCE_C);
+            let payloads = win.close_epoch(&alive_nonroot);
+            alive_nonroot.iter().copied().zip(payloads).collect()
+        }
+    };
+    // accumulate in the failure-free order: layer 0's partial is the
+    // base, then layers 1, 2, … merge in ascending order. The root's
+    // own partial and recomputed dead partials route through
+    // encode_c/merge_c exactly as the wire contributions would, so
+    // every per-element f32 addition happens in the same order.
+    let (mut acc_panels, mut acc_pats) = if root == 0 {
+        (out_panels.to_vec(), pats.to_vec())
+    } else {
+        recompute(0)?
+    };
+    for l in 1..g3.layers {
+        let contrib = if l == root {
+            encode_c(out_panels, pats, mode)
+        } else if dead_layers.contains(&l) {
+            let (p, q) = recompute(l)?;
+            encode_c(&p, &q, mode)
+        } else {
+            incoming.remove(&l).expect("alive layer contribution")
+        };
+        merge_c(&mut acc_panels, &mut acc_pats, contrib, mode);
+    }
+    out_panels.clone_from_slice(&acc_panels);
+    pats.clone_from_slice(&acc_pats);
+    Ok(true)
+}
+
 /// Assemble the output C matrix (cyclic over `grid_dims`) from the
 /// engine's finished slot panels, restricted to the symbolic result
 /// patterns: the local share carries exactly the union-pattern blocks
@@ -655,6 +801,32 @@ mod tests {
         assert_eq!(dst.local.nnz(), src.local.nnz());
         assert_eq!(dst.local.col_idx, src.local.col_idx);
         assert_eq!(dst.local.store.data(), src.local.store.data());
+    }
+
+    #[test]
+    fn framed_share_round_trip() {
+        use crate::matrix::sparse::sparse_pattern;
+        let src = sparse_pattern(
+            BlockLayout::new(24, 4),
+            BlockLayout::new(24, 4),
+            Distribution::cyclic(2),
+            Distribution::cyclic(2),
+            (1, 0),
+            0.4,
+            5,
+            Mode::Real,
+        );
+        // the receiver knows only the global layouts, not src's frame
+        let got = decode_framed_share(
+            encode_framed_share(&src),
+            &BlockLayout::new(24, 4),
+            &BlockLayout::new(24, 4),
+            Mode::Real,
+        );
+        assert_eq!(got.row_ids, src.local.row_ids);
+        assert_eq!(got.col_ids, src.local.col_ids);
+        assert_eq!(got.col_idx, src.local.col_idx);
+        assert_eq!(got.store.data(), src.local.store.data());
     }
 
     #[test]

@@ -41,9 +41,10 @@ use super::cannon::{
     shift_pair, Key,
 };
 use super::engine::LocalEngine;
+use super::recovery::{ft_shift_pair, recompute_layer, survivor_fence, RecoveryCtx, RecoveryPlan};
 use super::sparse_exchange::{
     accumulate_pattern, assemble_c_sparse, decode_share_into, encode_share, reduce_c_layers,
-    CPattern,
+    reduce_c_layers_ft, CPattern,
 };
 use super::vgrid::{lcm, VGrid};
 
@@ -144,6 +145,27 @@ pub fn multiply_twofive(
     engine: &mut LocalEngine,
     transport: Transport,
 ) -> Result<DistMatrix, DeviceOom> {
+    multiply_twofive_ft(g3, a, b, engine, transport, &RecoveryPlan::default()).map(|(c, _)| c)
+}
+
+/// Fault-tolerant entry point: [`multiply_twofive`] with a fault plan.
+/// With an empty plan the call sequence is byte-for-byte the
+/// failure-free driver (no recovery windows, no extra traffic). With
+/// an active plan, every rank arms the replica-recovery machinery of
+/// [`super::recovery`]: shares are exposed up front, dead peers' ring
+/// edges heal from replicas, lost partials are recomputed at the
+/// reduce, and the result C is **bit-identical** to the failure-free
+/// run on both transports. Also returns whether this rank holds the
+/// reduced result (normally layer 0; under recovery, the lowest alive
+/// layer at each grid position).
+pub fn multiply_twofive_ft(
+    g3: &Grid3D,
+    a: &DistMatrix,
+    b: &DistMatrix,
+    engine: &mut LocalEngine,
+    transport: Transport,
+    plan: &RecoveryPlan,
+) -> Result<(DistMatrix, bool), DeviceOom> {
     assert_eq!(
         a.cols.nblocks, b.rows.nblocks,
         "inner block dimensions must match"
@@ -157,6 +179,23 @@ pub fn multiply_twofive(
     let (s0, nticks) = layer_ticks(lv, g3.layers, g3.layer);
     debug_assert!(nticks > 0, "period is divisible by layers");
 
+    let ft = plan.active();
+    let me_world = g3.world.rank();
+    // a rank that died in an earlier multiply of a resident session
+    // contributes nothing: it returns its zero share immediately and
+    // the survivors (who run the same plan) route around it
+    if ft && (plan.already_dead.contains(&me_world) || g3.world.killed()) {
+        let shell = assemble_c_sparse(a, b, (grid.rows, grid.cols), (r, c), mode, &[], &[], false);
+        return Ok((shell, false));
+    }
+    // the head-of-tick index at which this rank dies (clamped so
+    // "past the sweep" means after the last tick, before the reduce)
+    let my_kill: Option<usize> = if ft {
+        plan.kill_at(me_world).map(|t| t.min(nticks))
+    } else {
+        None
+    };
+
     let slots = vg.slots();
     // one A and one B panel per slot at the layer's start tick
     let a_keys = a_start_keys(&vg, &slots, s0);
@@ -166,17 +205,30 @@ pub fn multiply_twofive(
     // layout agreement: the exchange is pairwise within a row/column
     // communicator, so all of its members must take the same branch. A
     // few bytes of agreement traffic per multiply — noise next to the
-    // panel volume.
-    let a_native = all_agree(&grid.row, panels_located_here(a, &vg, &a_keys));
-    let b_native = all_agree(&grid.col, panels_located_here(b, &vg, &b_keys));
+    // panel volume. Under an active fault plan the collectives would
+    // hang on already-dead members, so each rank decides locally —
+    // consistent because the standard layouts (native by construction,
+    // canonical cyclic) classify identically on every rank.
+    let (a_native, b_native) = if ft {
+        (
+            panels_located_here(a, &vg, &a_keys),
+            panels_located_here(b, &vg, &b_keys),
+        )
+    } else {
+        (
+            all_agree(&grid.row, panels_located_here(a, &vg, &a_keys)),
+            all_agree(&grid.col, panels_located_here(b, &vg, &b_keys)),
+        )
+    };
     // canonical shares must be *replicas* across layers — a silently
     // unreplicated operand would reduce to a wrong C, so fail loudly.
     // Native shares differ per layer by design and are not checkable;
     // whether to check must itself be agreed across the layer comm
     // (a canonical matrix can look "native" to layers whose offset skew
     // happens to be the identity, and the fingerprint broadcast is a
-    // collective every layer peer must join).
-    if g3.layers > 1 {
+    // collective every layer peer must join). Skipped under a fault
+    // plan — the broadcast is a collective too.
+    if !ft && g3.layers > 1 {
         if !all_agree(&g3.layer_comm, a_native) {
             check_layer_replicas(g3, a, "A");
         }
@@ -184,6 +236,14 @@ pub fn multiply_twofive(
             check_layer_replicas(g3, b, "B");
         }
     }
+    // a canonical skew exchange is pairwise and cannot route around a
+    // rank that was dead before the multiply began; ranks dying *this*
+    // multiply are still alive here, so one-shot injection is fine
+    assert!(
+        plan.already_dead.is_empty() || (a_native && b_native),
+        "resident recovery requires native-layout operands \
+         (the canonical skew cannot route around dead ranks)"
+    );
     // exchange plans for canonical operands (held panels + routing),
     // built by the same helpers the resident-session pre-skew uses
     let a_plan: Option<SkewPlan> = (!a_native).then(|| a_skew_plan(a, &vg, s0, &a_keys));
@@ -249,6 +309,13 @@ pub fn multiply_twofive(
         }
     };
 
+    // ---- recovery data plane (faulted multiplies only) --------------------
+    // every participant exposes its A/B shares before the sweep, so a
+    // rank dying at any tick has already published its replica data;
+    // failure-free multiplies skip all of this (zero extra traffic)
+    let mut ctx: Option<RecoveryCtx> =
+        ft.then(|| RecoveryCtx::new(g3, a, b, &vg, a_native, b_native, plan));
+
     // ---- C slots ----------------------------------------------------------
     engine.begin(&grid.world, build_c_slots(&vg, &slots, a, b))?;
 
@@ -264,6 +331,16 @@ pub fn multiply_twofive(
     // ---- the shortened sweep: ticks s0 .. s0 + L/c ------------------------
     let mut c_pats: Vec<CPattern> = vec![CPattern::new(); slots.len()];
     for t in 0..nticks {
+        if my_kill == Some(t) {
+            // die at the head of the tick: earlier ticks (and their
+            // trailing shifts) completed, this tick never runs, and
+            // nothing is sent again — survivors detect the silence
+            g3.world
+                .kill(&format!("injected fault: rank {me_world} killed at slot-tick {t}"));
+            let shell =
+                assemble_c_sparse(a, b, (grid.rows, grid.cols), (r, c), mode, &[], &[], false);
+            return Ok((shell, false));
+        }
         let s = s0 + t;
         for (idx, &(i, j)) in slots.iter().enumerate() {
             let g = vg.group_at(i, j, s);
@@ -291,32 +368,90 @@ pub fn multiply_twofive(
                 v.dedup();
                 v
             });
-            shift_pair(
-                grid,
-                transport,
-                (&mut win_a, &mut win_b),
-                &mut a_panels,
-                &mut b_panels,
-                next_a.as_deref(),
-                next_b.as_deref(),
-                |key| panel_meta(a, &vg, key.0, key.1),
-                |key| panel_meta(b, &vg, key.0, key.1),
-                (TAG_SHIFT_A, TAG_SHIFT_B),
-                mode,
-            );
+            if let Some(cx) = ctx.as_mut() {
+                ft_shift_pair(
+                    grid,
+                    transport,
+                    (&mut win_a, &mut win_b),
+                    cx,
+                    &mut a_panels,
+                    &mut b_panels,
+                    next_a.as_deref(),
+                    next_b.as_deref(),
+                    |key| panel_meta(a, &vg, key.0, key.1),
+                    |key| panel_meta(b, &vg, key.0, key.1),
+                    (TAG_SHIFT_A, TAG_SHIFT_B),
+                    mode,
+                );
+            } else {
+                shift_pair(
+                    grid,
+                    transport,
+                    (&mut win_a, &mut win_b),
+                    &mut a_panels,
+                    &mut b_panels,
+                    next_a.as_deref(),
+                    next_b.as_deref(),
+                    |key| panel_meta(a, &vg, key.0, key.1),
+                    |key| panel_meta(b, &vg, key.0, key.1),
+                    (TAG_SHIFT_A, TAG_SHIFT_B),
+                    mode,
+                );
+            }
         }
+    }
+    if my_kill == Some(nticks) {
+        // "past the sweep": the whole partial is computed but dies
+        // with the rank before the reduce — the worst case for the
+        // recovery root, which must replay the full tick range
+        g3.world.kill(&format!(
+            "injected fault: rank {me_world} killed after its sweep, before the reduce"
+        ));
+        let shell = assemble_c_sparse(a, b, (grid.rows, grid.cols), (r, c), mode, &[], &[], false);
+        return Ok((shell, false));
     }
 
     // ---- sum-reduce the partial C panels across layers --------------------
     // only blocks present in each layer's symbolic result pattern travel;
-    // layer 0 union-merges root-first in ascending layer order on both
+    // the root union-merges layer-0-first in ascending layer order on both
     // transports, so the reduced C is bit-identical across transports
     let mut out_panels = engine.finish(&grid.world);
-    reduce_c_layers(g3, transport, &mut out_panels, &mut c_pats, mode);
+    let holds_result = match ctx.as_mut() {
+        None => {
+            reduce_c_layers(g3, transport, &mut out_panels, &mut c_pats, mode);
+            g3.layer == 0
+        }
+        Some(cx) => {
+            // death-aware reduce: root = lowest alive layer at this
+            // grid position, dead layers' partials recomputed from
+            // replica shares in the failure-free summation order
+            let dead_layers = plan.dead_layers_at(r * g3.cols + c, g3.rows * g3.cols);
+            let proto: &LocalEngine = engine;
+            reduce_c_layers_ft(
+                g3,
+                transport,
+                &mut out_panels,
+                &mut c_pats,
+                mode,
+                &dead_layers,
+                |l| recompute_layer(cx, proto, &grid.world, &vg, g3.layers, l, a, b, &slots),
+            )?
+        }
+    };
 
-    // ---- assemble C (layer 0 owns the result; other layers return a
-    // zero share over their own partial pattern) ----------------------------
-    Ok(assemble_c_sparse(
+    // ---- recovery teardown: fence, then tombstone the share windows ------
+    if let Some(mut cx) = ctx.take() {
+        let t0 = g3.world.now();
+        survivor_fence(&g3.world, plan);
+        cx.seconds += g3.world.now() - t0;
+        cx.close();
+        engine.stats.recovery_bytes += cx.bytes;
+        engine.stats.recovery_s += cx.seconds;
+    }
+
+    // ---- assemble C (the result holder owns the data; other ranks
+    // return a zero share over their own partial pattern) -------------------
+    let out = assemble_c_sparse(
         a,
         b,
         (grid.rows, grid.cols),
@@ -324,8 +459,9 @@ pub fn multiply_twofive(
         mode,
         &out_panels,
         &c_pats,
-        g3.layer == 0,
-    ))
+        holds_result,
+    );
+    Ok((out, holds_result))
 }
 
 /// Panic unless this rank's canonical share is bit-identical to its

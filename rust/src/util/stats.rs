@@ -126,6 +126,14 @@ pub struct MultiplyStats {
     /// Result blocks dropped by on-the-fly filtering
     /// (`MultiplyConfig::filter_eps`) after the accumulation.
     pub filtered_blocks: u64,
+    /// Bytes fetched from replica layers to heal a detected rank death
+    /// mid-multiply (`multiply::recovery`): framed operand shares pulled
+    /// over `WIN_RECOVER_A`/`B`. Always 0 on a failure-free run.
+    pub recovery_bytes: u64,
+    /// Virtual seconds this rank spent on recovery — blocked on a dead
+    /// peer's silence, fetching replica shares, re-running the lost
+    /// rank's slot-ticks, and the survivor fence before window teardown.
+    pub recovery_s: f64,
     /// Occupancy accounting: present and total block slots of this
     /// rank's operand and result shares (result counted *after*
     /// filtering). Kept as counter pairs so `merge` aggregates exactly;
@@ -166,6 +174,8 @@ impl MultiplyStats {
         self.comm_msgs += o.comm_msgs;
         self.comm_wait_s += o.comm_wait_s;
         self.filtered_blocks += o.filtered_blocks;
+        self.recovery_bytes += o.recovery_bytes;
+        self.recovery_s += o.recovery_s;
         self.a_nnz_blocks += o.a_nnz_blocks;
         self.a_total_blocks += o.a_total_blocks;
         self.b_nnz_blocks += o.b_nnz_blocks;

@@ -54,14 +54,34 @@ fn oom_error_reports_sizes() {
 }
 
 #[test]
-#[should_panic(expected = "rank thread panicked")]
 fn rank_death_surfaces_as_panic() {
-    let _ = run_ranks(2, NetModel::aries(1), |world| {
-        if world.rank() == 1 {
-            panic!("injected rank failure");
-        }
-        // rank 0 would deadlock waiting; the join on rank 1 panics first
+    // rank 0 parks on a receive from the dying rank, so its own thread
+    // aborts with the secondary "peer rank died ..." panic. The joined
+    // report must still lead with the injected root cause — never the
+    // secondary abort, regardless of which thread's panic lands first
+    // (the shutdown race: first_panic must reject follow-on deaths).
+    let result = std::panic::catch_unwind(|| {
+        run_ranks(2, NetModel::aries(1), |world| {
+            if world.rank() == 1 {
+                panic!("injected rank failure");
+            }
+            let _ = world.recv(1, 7);
+        })
     });
+    let err = result.expect_err("the run must fail");
+    let msg = err
+        .downcast_ref::<String>()
+        .cloned()
+        .expect("run_ranks panics with a formatted report");
+    assert!(msg.contains("rank thread panicked"), "got: {msg}");
+    assert!(
+        msg.contains("injected rank failure"),
+        "root cause must win the report, got: {msg}"
+    );
+    assert!(
+        !msg.contains("peer rank died"),
+        "secondary abort must never mask the injected cause, got: {msg}"
+    );
 }
 
 #[test]
@@ -75,7 +95,7 @@ fn dead_rank_report_names_blocked_peers() {
             NetModel::ideal(),
             RunOpts {
                 trace: true,
-                perturb: None,
+                ..RunOpts::default()
             },
             |c| {
                 if c.rank() == 1 {
@@ -96,6 +116,11 @@ fn dead_rank_report_names_blocked_peers() {
         .cloned()
         .expect("run_ranks panics with a formatted report");
     assert!(msg.contains("injected failure on rank 1"), "got: {msg}");
+    assert!(
+        !msg.contains("peer rank died"),
+        "the report's cause line must be the injected panic, not a \
+         survivor's secondary abort, got: {msg}"
+    );
     assert!(msg.contains("blocked at shutdown"), "got: {msg}");
     for r in [0, 2, 3] {
         let entry = format!("rank {r} waiting for message (src 1, tag 0x2a)");
@@ -136,6 +161,7 @@ fn fig2_oom_annotation_reproduced() {
             plan_verbose: false,
             occupancy: 1.0,
             iterations: 1,
+            fault: None,
         })
     };
     let oom = point(1, 12);

@@ -25,6 +25,7 @@ fn model_point(nodes: usize, rpn: usize, threads: usize, block: usize, sq: bool,
         plan_verbose: false,
         occupancy: 1.0,
         iterations: 1,
+        fault: None,
     });
     assert!(!r.oom, "unexpected OOM");
     r.seconds
@@ -79,6 +80,7 @@ fn dbcsr_beats_pdgemm_and_gap_grows_for_small_blocks() {
             plan_verbose: false,
             occupancy: 1.0,
             iterations: 1,
+            fault: None,
         });
         assert!(!r.oom);
         r.seconds

@@ -13,7 +13,7 @@ use dbcsr::matrix::matrix::Fill;
 use dbcsr::matrix::{DistMatrix, Mode, MODEL_ELEM_BYTES};
 use dbcsr::multiply::planner::{
     choose_plan, feasible_layer_counts, grid_shape, predict, predict_grid, PlanInput,
-    PlannedAlgorithm,
+    PlannedAlgorithm, RecoveryModel,
 };
 use dbcsr::multiply::twofive::{sweep_period, twofive_operands};
 use dbcsr::multiply::{
@@ -53,6 +53,7 @@ fn spec16(shape: Shape, transport: Transport, algo: AlgoSpec) -> RunSpec {
         plan_verbose: false,
         occupancy: 1.0,
         iterations: 1,
+        fault: None,
     }
 }
 
@@ -313,6 +314,8 @@ fn plan_input(p: usize, m: usize, n: usize, k: usize, transport: Transport) -> P
         horizon: 1,
         occ_a: 1.0,
         occ_b: 1.0,
+        failure_rate: 0.0,
+        recovery: RecoveryModel::default(),
     }
 }
 

@@ -1,0 +1,378 @@
+//! Integration: replica-based recovery for the 2.5D engine — kill one
+//! or two of 16 ranks mid-multiply at c ∈ {2, 4}, on both transports,
+//! through the one-shot driver, the `multiply()` front door, the
+//! bench harness and a resident session. The healed C must be
+//! **bit-identical** to the failure-free run (recovery re-fetches
+//! replica panels and replays the lost ticks deterministically), the
+//! recovery bill must be visible and bounded in
+//! `MultiplyStats::{recovery_bytes, recovery_s}`, a fault with no
+//! replica layer (c = 1) must be loudly Unrecoverable, and a traced
+//! faulted run must satisfy every protocol invariant — including
+//! `RecoveryDiscipline` (get-only recovery windows, dead ranks silent).
+
+use dbcsr::bench::harness::{run_spec, AlgoSpec, Engine, RunSpec, Shape};
+use dbcsr::dist::verify::{check, Invariant};
+use dbcsr::dist::{run_ranks, run_ranks_opts, Grid2D, Grid3D, NetModel, RunOpts, Transport};
+use dbcsr::matrix::matrix::Fill;
+use dbcsr::matrix::{DistMatrix, Mode};
+use dbcsr::multiply::twofive::{multiply_twofive_ft, twofive_operands};
+use dbcsr::multiply::{
+    multiply, Algorithm, EngineOpts, FaultSpec, LocalEngine, MultiplyConfig, PipelineSession,
+    RecoveryPlan,
+};
+use dbcsr::perfmodel::PerfModel;
+
+const DIM: usize = 32;
+const BLOCK: usize = 4;
+
+fn engine(mode: Mode) -> LocalEngine {
+    LocalEngine::new(
+        EngineOpts {
+            threads: 2,
+            densify: false,
+            ..Default::default()
+        },
+        mode,
+        PerfModel::default(),
+        None,
+        1,
+    )
+}
+
+/// One 16-rank 2.5D run under a fault plan: every rank's dense view of
+/// its C share summed into the full product, plus the recovery bill
+/// (bytes, seconds) aggregated over ranks.
+fn run_case(
+    rows: usize,
+    cols: usize,
+    layers: usize,
+    transport: Transport,
+    kills: Vec<FaultSpec>,
+) -> (Vec<f32>, u64, f64) {
+    let p = rows * cols * layers;
+    let out = run_ranks(p, NetModel::aries(2), move |world| {
+        let g3 = Grid3D::new(world, rows, cols, layers);
+        let (a, b) = twofive_operands(&g3, DIM, DIM, DIM, BLOCK, Mode::Real, 91, 92);
+        let mut eng = engine(Mode::Real);
+        let plan = RecoveryPlan {
+            kill_now: kills.clone(),
+            already_dead: Vec::new(),
+        };
+        let (cm, _holds) = multiply_twofive_ft(&g3, &a, &b, &mut eng, transport, &plan).unwrap();
+        let mut dense = vec![0.0f32; DIM * DIM];
+        cm.add_into_dense(&mut dense);
+        (dense, eng.stats.recovery_bytes, eng.stats.recovery_s)
+    });
+    let mut got = vec![0.0f32; DIM * DIM];
+    let (mut bytes, mut seconds) = (0u64, 0f64);
+    for (part, b, s) in out {
+        for (g, x) in got.iter_mut().zip(part.iter()) {
+            *g += x;
+        }
+        bytes += b;
+        seconds += s;
+    }
+    (got, bytes, seconds)
+}
+
+/// Kill `kills` on a 16-rank topology, on both transports, and demand
+/// the healed C be bit-identical to the failure-free run — plus a
+/// nonzero, bounded recovery bill, and a zero bill when nothing dies.
+fn assert_heals(rows: usize, cols: usize, layers: usize, kills: &[FaultSpec]) {
+    assert_eq!(rows * cols * layers, 16, "the ISSUE's 16-rank matrix");
+    for transport in [Transport::TwoSided, Transport::OneSided] {
+        let (want, b0, s0) = run_case(rows, cols, layers, transport, Vec::new());
+        assert_eq!(b0, 0, "failure-free runs must book zero recovery bytes");
+        assert_eq!(s0, 0.0, "failure-free runs must book zero recovery time");
+        let (got, bytes, seconds) = run_case(rows, cols, layers, transport, kills.to_vec());
+        let diffs = got.iter().zip(want.iter()).filter(|(g, w)| g != w).count();
+        assert_eq!(
+            diffs, 0,
+            "healed C must be bit-identical to the failure-free run \
+             ({rows}x{cols}x{layers}, {kills:?}, {transport:?}): {diffs} of {} elements differ",
+            want.len()
+        );
+        assert!(
+            bytes > 0,
+            "healing {kills:?} must fetch replica data ({transport:?})"
+        );
+        assert!(
+            seconds > 0.0 && seconds < 0.05,
+            "recovery time must be visible and bounded, got {seconds} ({transport:?})"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// The kill matrix: k ∈ {1, 2} × c ∈ {2, 4} × both transports, 16 ranks.
+// ---------------------------------------------------------------------
+
+#[test]
+fn kill_one_rank_c2_heals_bit_identical() {
+    // c = 2: 2x4 layer grids, 2 slot-ticks per layer. Rank 5 (layer 0)
+    // dies at the head of tick 0 — its ring neighbors heal the missing
+    // shift panels and layer 1 replays its whole tick range.
+    assert_heals(2, 4, 2, &[FaultSpec { rank: 5, at_tick: 0 }]);
+}
+
+#[test]
+fn kill_two_ranks_c2_heals_bit_identical() {
+    // two deaths in different layers at different grid positions: one
+    // at tick 0 (ring healing + full replay), one after its sweep
+    // (the worst case for the reduce — the whole partial is lost)
+    assert_heals(
+        2,
+        4,
+        2,
+        &[
+            FaultSpec { rank: 5, at_tick: 0 },
+            FaultSpec { rank: 14, at_tick: 2 },
+        ],
+    );
+}
+
+#[test]
+fn kill_one_rank_c4_heals_bit_identical() {
+    // c = 4: 2x2 layer grids, a single slot-tick per layer — recovery
+    // is recompute-only (no surviving shift edge touches the dead rank)
+    assert_heals(2, 2, 4, &[FaultSpec { rank: 6, at_tick: 0 }]);
+}
+
+#[test]
+fn kill_two_ranks_c4_heals_bit_identical() {
+    assert_heals(
+        2,
+        2,
+        4,
+        &[
+            FaultSpec { rank: 6, at_tick: 0 },
+            FaultSpec { rank: 9, at_tick: 1 },
+        ],
+    );
+}
+
+// ---------------------------------------------------------------------
+// The front doors: multiply(), the bench harness, a resident session.
+// ---------------------------------------------------------------------
+
+#[test]
+fn one_shot_multiply_api_heals() {
+    // cfg.faults through the public multiply() entry point; C and the
+    // recovery stats must round-trip the MultiplyOutcome unchanged
+    let run = |faults: Vec<FaultSpec>| {
+        run_ranks(16, NetModel::aries(2), move |world| {
+            let g3 = Grid3D::new(world, 2, 4, 2);
+            let (a, b) = twofive_operands(&g3, DIM, DIM, DIM, BLOCK, Mode::Real, 91, 92);
+            let grid = Grid2D::new(g3.world.clone(), 4, 4);
+            let cfg = MultiplyConfig {
+                engine: EngineOpts {
+                    threads: 2,
+                    densify: false,
+                    ..Default::default()
+                },
+                algorithm: Algorithm::TwoFiveD { layers: 2 },
+                faults: faults.clone(),
+                ..Default::default()
+            };
+            let out = multiply(&grid, &a, &b, &cfg).unwrap();
+            let mut dense = vec![0.0f32; DIM * DIM];
+            out.c.add_into_dense(&mut dense);
+            (dense, out.stats.recovery_bytes, out.stats.recovery_s)
+        })
+    };
+    let free = run(Vec::new());
+    let healed = run(vec![FaultSpec { rank: 5, at_tick: 1 }]);
+    let sum = |rs: &[(Vec<f32>, u64, f64)]| {
+        let mut d = vec![0.0f32; DIM * DIM];
+        for (part, _, _) in rs {
+            for (g, x) in d.iter_mut().zip(part.iter()) {
+                *g += x;
+            }
+        }
+        d
+    };
+    assert!(sum(&healed) == sum(&free), "multiply() C must heal bit-identically");
+    assert!(healed.iter().map(|(_, b, _)| b).sum::<u64>() > 0);
+    assert!(healed.iter().map(|(_, _, s)| s).sum::<f64>() > 0.0);
+    assert!(free.iter().all(|(_, b, s)| *b == 0 && *s == 0.0));
+}
+
+#[test]
+fn resident_session_heals_and_stays_degraded() {
+    // a session fault fires on the first resident multiply; the second
+    // runs degraded (the dead rank silent from tick 0) — both C's must
+    // match the failure-free session bit for bit
+    let run = |faults: Vec<FaultSpec>| {
+        run_ranks(16, NetModel::aries(2), move |world| {
+            let g3 = Grid3D::new(world, 2, 4, 2);
+            let coords = g3.grid.coords();
+            let mk = |seed| {
+                DistMatrix::dense_cyclic(
+                    DIM,
+                    DIM,
+                    BLOCK,
+                    (2, 4),
+                    coords,
+                    Mode::Real,
+                    Fill::Random { seed },
+                )
+            };
+            let cfg = MultiplyConfig {
+                engine: EngineOpts {
+                    threads: 2,
+                    densify: false,
+                    ..Default::default()
+                },
+                faults: faults.clone(),
+                ..Default::default()
+            };
+            let mut sess = PipelineSession::new(g3, cfg);
+            let (a, b) = sess.admit_pair(mk(91), mk(92));
+            let o1 = sess.multiply_resident(&a, &b).unwrap();
+            let o2 = sess.multiply_resident(&a, &b).unwrap();
+            let mut d1 = vec![0.0f32; DIM * DIM];
+            o1.c.add_into_dense(&mut d1);
+            let mut d2 = vec![0.0f32; DIM * DIM];
+            o2.c.add_into_dense(&mut d2);
+            (d1, d2, o1.stats.recovery_bytes + o2.stats.recovery_bytes)
+        })
+    };
+    let free = run(Vec::new());
+    let healed = run(vec![FaultSpec { rank: 5, at_tick: 1 }]);
+    for pick in [0usize, 1usize] {
+        let sum = |rs: &[(Vec<f32>, Vec<f32>, u64)]| {
+            let mut d = vec![0.0f32; DIM * DIM];
+            for r in rs {
+                let part = if pick == 0 { &r.0 } else { &r.1 };
+                for (g, x) in d.iter_mut().zip(part.iter()) {
+                    *g += x;
+                }
+            }
+            d
+        };
+        assert!(
+            sum(&healed) == sum(&free),
+            "resident multiply #{pick} must stay bit-identical under the fault"
+        );
+    }
+    assert!(healed.iter().map(|(_, _, b)| b).sum::<u64>() > 0);
+    assert!(free.iter().all(|(_, _, b)| *b == 0));
+}
+
+#[test]
+fn harness_fault_heals_and_reports_the_bill() {
+    let spec = |algo, fault| RunSpec {
+        nodes: 4,
+        rpn: 4,
+        threads: 2,
+        block: 22,
+        shape: Shape::Square { n: 352 },
+        engine: Engine::DbcsrBlocked,
+        mode: Mode::Model,
+        net: NetModel::aries(4),
+        transport: Transport::TwoSided,
+        algo,
+        plan_verbose: false,
+        occupancy: 1.0,
+        iterations: 1,
+        fault,
+    };
+    let fault = Some(FaultSpec { rank: 5, at_tick: 1 });
+    let healed = run_spec(spec(AlgoSpec::TwoFiveD { layers: 2 }, fault));
+    assert!(!healed.unrecoverable);
+    assert!(healed.recovery_bytes > 0, "the harness must surface the bill");
+    assert!(healed.recovery_seconds > 0.0);
+    let free = run_spec(spec(AlgoSpec::TwoFiveD { layers: 2 }, None));
+    assert_eq!(free.recovery_bytes, 0);
+    assert_eq!(free.recovery_seconds, 0.0);
+}
+
+// ---------------------------------------------------------------------
+// No replica layer → Unrecoverable, loudly and without running.
+// ---------------------------------------------------------------------
+
+#[test]
+#[should_panic(expected = "Unrecoverable")]
+fn c1_fault_through_multiply_is_unrecoverable() {
+    let _ = run_ranks(4, NetModel::aries(2), |world| {
+        let grid = Grid2D::new(world, 2, 2);
+        let coords = grid.coords();
+        let a = DistMatrix::dense_cyclic(
+            16,
+            16,
+            4,
+            (2, 2),
+            coords,
+            Mode::Real,
+            Fill::Random { seed: 1 },
+        );
+        let b = a.clone();
+        let cfg = MultiplyConfig {
+            algorithm: Algorithm::Cannon,
+            faults: vec![FaultSpec { rank: 1, at_tick: 0 }],
+            ..Default::default()
+        };
+        let _ = multiply(&grid, &a, &b, &cfg);
+    });
+}
+
+#[test]
+fn harness_reports_unrecoverable_for_plans_without_replicas() {
+    let spec = |algo| RunSpec {
+        nodes: 4,
+        rpn: 4,
+        threads: 2,
+        block: 22,
+        shape: Shape::Square { n: 352 },
+        engine: Engine::DbcsrBlocked,
+        mode: Mode::Model,
+        net: NetModel::aries(4),
+        transport: Transport::TwoSided,
+        algo,
+        plan_verbose: false,
+        occupancy: 1.0,
+        iterations: 1,
+        fault: Some(FaultSpec { rank: 3, at_tick: 0 }),
+    };
+    for algo in [AlgoSpec::Cannon, AlgoSpec::TwoFiveD { layers: 1 }] {
+        let r = run_spec(spec(algo));
+        assert!(r.unrecoverable, "{algo:?} has no replica layer");
+        assert_eq!(r.recovery_bytes, 0);
+        assert!(r.seconds == 0.0, "an unrecoverable point must not run");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Protocol discipline: a traced faulted run satisfies every invariant.
+// ---------------------------------------------------------------------
+
+#[test]
+fn traced_fault_run_passes_the_protocol_verifier() {
+    for transport in [Transport::TwoSided, Transport::OneSided] {
+        let (_, trace) = run_ranks_opts(
+            16,
+            NetModel::ideal(),
+            RunOpts {
+                trace: true,
+                ..RunOpts::default()
+            },
+            move |world| {
+                let g3 = Grid3D::new(world, 2, 4, 2);
+                let (a, b) = twofive_operands(&g3, DIM, DIM, DIM, BLOCK, Mode::Real, 91, 92);
+                let mut eng = engine(Mode::Real);
+                let plan = RecoveryPlan {
+                    kill_now: vec![FaultSpec { rank: 5, at_tick: 0 }],
+                    already_dead: Vec::new(),
+                };
+                let _ = multiply_twofive_ft(&g3, &a, &b, &mut eng, transport, &plan).unwrap();
+            },
+        );
+        let r = check(&trace.expect("traced run returns a trace"));
+        assert!(
+            !r.flags(Invariant::RecoveryDiscipline),
+            "recovery must keep its own discipline ({transport:?}): {}",
+            r.render()
+        );
+        assert!(r.is_clean(), "({transport:?}) {}", r.render());
+    }
+}

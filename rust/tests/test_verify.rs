@@ -18,7 +18,7 @@ use dbcsr::multiply::{multiply, MultiplyConfig};
 fn traced() -> RunOpts {
     RunOpts {
         trace: true,
-        perturb: None,
+        ..RunOpts::default()
     }
 }
 
@@ -160,6 +160,7 @@ fn model_spec(algo: AlgoSpec, transport: Transport) -> RunSpec {
         plan_verbose: false,
         occupancy: 1.0,
         iterations: 1,
+        fault: None,
     }
 }
 
@@ -171,6 +172,7 @@ fn fingerprint(spec: RunSpec, seed: Option<u64>) -> (u64, u64, u64, u64, u64, u6
         RunOpts {
             trace: true,
             perturb: seed,
+            ..RunOpts::default()
         },
     );
     check(&trace.expect("traced run returns a trace")).assert_clean();
@@ -280,12 +282,13 @@ fn real_cannon_c(opts: RunOpts) -> Vec<f32> {
 fn real_mode_c_is_bit_identical_across_perturbation_seeds() {
     let base = real_cannon_c(RunOpts {
         trace: true,
-        perturb: None,
+        ..RunOpts::default()
     });
     for seed in [1, 2] {
         let got = real_cannon_c(RunOpts {
             trace: true,
             perturb: Some(seed),
+            ..RunOpts::default()
         });
         assert_eq!(base, got, "real-mode C diverged under perturbation seed {seed}");
     }
