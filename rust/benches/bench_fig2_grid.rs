@@ -45,6 +45,7 @@ fn main() {
             mode: Mode::Real,
             net: NetModel::aries(rpn),
             transport: Transport::TwoSided,
+            overlap: false,
             algo: AlgoSpec::Layout,
             plan_verbose: false,
             occupancy: 1.0,

@@ -38,6 +38,7 @@ fn main() {
                 mode: Mode::Real,
                 net: NetModel::aries(4),
                 transport: Transport::TwoSided,
+                overlap: false,
                 algo: AlgoSpec::Layout,
                 plan_verbose: false,
                 occupancy: 1.0,

@@ -156,6 +156,7 @@ fn auto_point(dim: usize, transport: Transport, fixed: &[Point]) -> (Point, usiz
         threads: 3,
         charge_replication: true,
         horizon: 1,
+        overlap: false,
         occ_a: 1.0,
         occ_b: 1.0,
         failure_rate: 0.0,

@@ -97,7 +97,8 @@ fn run(
             already_dead: Vec::new(),
         };
         let t0 = g3.world.now();
-        let (cm, _) = multiply_twofive_ft(&g3, &a, &b, &mut eng, transport, &plan).unwrap();
+        let (cm, _) =
+            multiply_twofive_ft(&g3, &a, &b, &mut eng, transport, false, &plan).unwrap();
         let span = g3.world.now() - t0;
         let dense = if mode == Mode::Real {
             let mut d = vec![0.0f32; dim * dim];

@@ -61,6 +61,7 @@ fn spec(dim: usize, occupancy: f64, algo: AlgoSpec) -> RunSpec {
         mode: Mode::Model,
         net: NetModel::aries(4),
         transport: Transport::TwoSided,
+        overlap: false,
         algo,
         plan_verbose: false,
         occupancy,

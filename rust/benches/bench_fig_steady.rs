@@ -48,6 +48,7 @@ fn spec(dim: usize, transport: Transport, algo: AlgoSpec, iterations: usize) -> 
         mode: Mode::Model,
         net: NetModel::aries(4),
         transport,
+        overlap: false,
         algo,
         plan_verbose: false,
         occupancy: 1.0,
@@ -179,6 +180,7 @@ fn main() {
                 threads: 3,
                 charge_replication: true,
                 horizon: 1,
+                overlap: false,
                 occ_a: 1.0,
                 occ_b: 1.0,
                 failure_rate: 0.0,

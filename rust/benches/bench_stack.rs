@@ -78,6 +78,7 @@ fn main() {
                     mode: Mode::Model,
                     net: NetModel::aries(4),
                     transport: Transport::TwoSided,
+                    overlap: false,
                     algo: AlgoSpec::Layout,
                     plan_verbose: false,
                     occupancy: 1.0,

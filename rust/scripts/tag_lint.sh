@@ -47,6 +47,27 @@ while IFS= read -r f; do
     [ -n "$m" ] && report "$f" "reserved tag block hand-rolled instead of imported from dist/tags.rs" "$m"
 done < <(find . -name '*.rs' ! -path './dist/tags.rs')
 
+# Registry completeness: every `pub const TAG_*` / `pub const WIN_*` in
+# dist/tags.rs must be listed in ALL_MSG_TAGS / ALL_WIN_IDS — the const
+# assertions only prove non-collision over those arrays, so a tag that
+# skips them (e.g. a new getshift fence or window id) gets no proof at
+# all. Block-base constants (TAG_RMA_BASE, TAG_COLLECTIVE_BASE) are the
+# arrays' bounds, not members.
+reg=./dist/tags.rs
+msg_arr=$(awk '/^const ALL_MSG_TAGS/,/^\];/' "$reg")
+win_arr=$(awk '/^const ALL_WIN_IDS/,/^\];/' "$reg")
+while IFS= read -r name; do
+    case "$name" in TAG_RMA_BASE|TAG_COLLECTIVE_BASE) continue ;; esac
+    if ! echo "$msg_arr" | grep -q "^ *$name,$"; then
+        report "$reg" "tag missing from ALL_MSG_TAGS (no collision proof)" "$name"
+    fi
+done < <(grep -oE '^pub const TAG_[A-Z0-9_]+' "$reg" | sed 's/^pub const //')
+while IFS= read -r name; do
+    if ! echo "$win_arr" | grep -q "^ *$name,$"; then
+        report "$reg" "window id missing from ALL_WIN_IDS (no collision proof)" "$name"
+    fi
+done < <(grep -oE '^pub const WIN_[A-Z0-9_]+' "$reg" | sed 's/^pub const //')
+
 if [ "$fail" -ne 0 ]; then
     echo "tag-lint: FAILED — import tags and window ids from dist/tags.rs" >&2
     exit 1

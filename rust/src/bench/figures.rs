@@ -52,6 +52,7 @@ pub fn fig2(scale: usize, mode: Mode) -> Vec<Table> {
                     mode,
                     net: NetModel::aries(rpn),
                     transport: Transport::TwoSided,
+                    overlap: false,
                     algo: AlgoSpec::Layout,
                     plan_verbose: false,
                     occupancy: 1.0,
@@ -98,6 +99,7 @@ pub fn fig3(scale: usize, mode: Mode) -> Vec<Table> {
                         mode,
                         net: NetModel::aries(4),
                         transport: Transport::TwoSided,
+                        overlap: false,
                         algo: AlgoSpec::Layout,
                         plan_verbose: false,
                         occupancy: 1.0,
@@ -152,6 +154,7 @@ pub fn fig4(scale: usize, mode: Mode, blocks: &[usize], square_only: bool) -> Ve
                         mode,
                         net: NetModel::aries(4),
                         transport: Transport::TwoSided,
+                        overlap: false,
                         algo: AlgoSpec::Layout,
                         plan_verbose: false,
                         occupancy: 1.0,

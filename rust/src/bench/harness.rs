@@ -108,8 +108,16 @@ pub struct RunSpec {
     /// Fabric model driving the virtual clocks (sweeps can compare
     /// `NetModel::ideal()` against `NetModel::aries(rpn)`).
     pub net: NetModel,
-    /// Point-to-point transport (two-sided sendrecv vs one-sided RMA).
+    /// Point-to-point transport (two-sided sendrecv vs one-sided RMA
+    /// put vs one-sided RMA get).
     pub transport: Transport,
+    /// Double-buffer the per-tick panel shifts
+    /// (`MultiplyConfig::overlap`): tick `t + 1`'s transfer rides the
+    /// wire while tick `t` computes; hidden transfer time lands in
+    /// `MultiplyStats::overlap_hidden_s` instead of `comm_wait_s`.
+    /// Results are bit-identical either way. Ignored (forced off) by
+    /// fault injection and the PDGEMM / tall-skinny paths.
+    pub overlap: bool,
     /// Algorithm selection policy (see [`AlgoSpec`]).
     pub algo: AlgoSpec,
     /// Thread the CLI's `--plan-verbose` into `MultiplyConfig`: rank 0
@@ -169,6 +177,7 @@ impl RunSpec {
             // objective, amortized over the spec's iteration horizon
             charge_replication: true,
             horizon: self.iterations.max(1),
+            overlap: self.overlap,
             occ_a: self.occupancy,
             occ_b: self.occupancy,
             // an injected fault is one certain death over the horizon —
@@ -361,6 +370,7 @@ pub fn run_spec_opts(spec: RunSpec, opts: RunOpts) -> (RunResult, Option<TraceLo
             perf: PerfModel::default(),
             algorithm,
             transport: spec.transport,
+            overlap: spec.overlap,
             gpu_share: spec.rpn,
             filter_eps: 0.0,
             plan_verbose: spec.plan_verbose,
@@ -595,6 +605,7 @@ mod tests {
             mode: Mode::Model,
             net: NetModel::aries(4),
             transport: Transport::TwoSided,
+            overlap: false,
             algo: AlgoSpec::Layout,
             plan_verbose: false,
             occupancy: 1.0,

@@ -43,7 +43,7 @@ pub mod rma;
 pub mod tags;
 pub mod verify;
 
-pub use rma::{RmaWindow, Transport};
+pub use rma::{PendingGet, RmaWindow, Transport};
 
 use verify::{CommEvent, EventKind, Provenance, TraceLog};
 
@@ -611,6 +611,12 @@ impl CommView {
         self.members[self.me]
     }
 
+    /// The world rank behind `local` in this view (what fault plans and
+    /// death records are keyed by).
+    pub fn world_rank(&self, local: usize) -> usize {
+        self.members[local]
+    }
+
     /// This rank's virtual clock, seconds.
     pub fn now(&self) -> f64 {
         self.state.now.get()
@@ -780,9 +786,18 @@ impl CommView {
         self.shared.failure.dead_ranks()
     }
 
-    /// The failure detector's heartbeat horizon ([`RunOpts::horizon`]).
-    pub fn horizon(&self) -> f64 {
+    /// The failure detector's heartbeat horizon
+    /// ([`RunOpts::detect_horizon`]).
+    pub fn detect_horizon(&self) -> f64 {
         self.shared.failure.horizon
+    }
+
+    /// Deprecated alias for [`CommView::detect_horizon`] — the old name
+    /// collided with the planner's amortization horizon
+    /// (`PlanInput::horizon`), which measures multiplies, not seconds.
+    #[deprecated(note = "renamed to detect_horizon")]
+    pub fn horizon(&self) -> f64 {
+        self.detect_horizon()
     }
 
     /// Fault-tolerant send: refuses (with [`PeerDied`]) to address a
@@ -1116,7 +1131,12 @@ pub struct RunOpts {
     /// `death time + horizon` — the priced detection latency. The
     /// default is ~17 Aries message latencies: long enough that jittery
     /// compute never false-positives, short next to any panel transfer.
-    pub horizon: f64,
+    ///
+    /// Formerly `horizon`; renamed so it cannot be confused with the
+    /// planner's amortization horizon (`PlanInput::horizon`, a multiply
+    /// count). The CLI keeps `--horizon` as a deprecated alias of
+    /// `--detect-horizon`, and runfiles accept both keys.
+    pub detect_horizon: f64,
 }
 
 impl Default for RunOpts {
@@ -1124,7 +1144,7 @@ impl Default for RunOpts {
         RunOpts {
             trace: false,
             perturb: None,
-            horizon: 25e-6,
+            detect_horizon: 25e-6,
         }
     }
 }
@@ -1167,7 +1187,7 @@ where
         trace: opts.trace.then(|| Mutex::new(Vec::new())),
         waiting: Mutex::new(HashMap::new()),
         first_panic: Mutex::new(None),
-        failure: FailureDetector::new(opts.horizon),
+        failure: FailureDetector::new(opts.detect_horizon),
         expose_serial: AtomicU64::new(0),
         perturb: opts.perturb,
     });
@@ -1560,7 +1580,7 @@ mod tests {
             2,
             NetModel::ideal(),
             RunOpts {
-                horizon: 1e-3,
+                detect_horizon: 1e-3,
                 ..RunOpts::default()
             },
             |c| {

@@ -73,6 +73,16 @@ pub enum Transport {
     /// windows, synchronized per epoch (passive target) — shifts issued
     /// back-to-back overlap on the wire.
     OneSided,
+    /// One-sided RMA in *get* (pull) mode — the `MPI_Rget` variant of
+    /// arXiv:1705.10218 §3: every rank exposes its tick panels on
+    /// long-lived per-multiply windows (one epoch per tick, deferred
+    /// closes) and pulls its next panels from the ring neighbor with
+    /// origin-charged gets ([`RmaWindow::get_begin`] /
+    /// [`RmaWindow::get_complete`]). Only the per-tick ring shifts use
+    /// get semantics; skew / replication / reduce phases reuse the
+    /// put-based protocol, so payload bytes and numerics stay identical
+    /// across all three transports.
+    OneSidedGet,
 }
 
 impl Transport {
@@ -81,13 +91,50 @@ impl Transport {
         match self {
             Transport::TwoSided => "two-sided",
             Transport::OneSided => "one-sided",
+            Transport::OneSidedGet => "one-sided-get",
         }
+    }
+
+    /// Whether the per-tick shift path drives RMA windows (put or get
+    /// mode) rather than two-sided sendrecv.
+    pub fn is_rma(&self) -> bool {
+        !matches!(self, Transport::TwoSided)
     }
 }
 
 impl std::fmt::Display for Transport {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.write_str(self.name())
+    }
+}
+
+/// An in-flight one-sided get ([`RmaWindow::get_begin`]): the payload
+/// is already resolved (the substrate's exposure map served it), the
+/// counters are charged, and the virtual completion time is fixed from
+/// the issue-time clock — only the clock advance is deferred to
+/// [`RmaWindow::get_complete`]. The `MPI_Rget` request handle of the
+/// cost model.
+#[derive(Debug)]
+pub struct PendingGet {
+    payload: Payload,
+    issued_at: f64,
+    done_at: f64,
+}
+
+impl PendingGet {
+    /// The clock at which the get was issued.
+    pub fn issued_at(&self) -> f64 {
+        self.issued_at
+    }
+
+    /// The virtual time at which the transfer lands at the origin.
+    pub fn done_at(&self) -> f64 {
+        self.done_at
+    }
+
+    /// Wire bytes of the in-flight payload.
+    pub fn wire_bytes(&self) -> u64 {
+        self.payload.wire_bytes()
     }
 }
 
@@ -253,6 +300,60 @@ impl RmaWindow {
         self.comm.shared.exposed_cv.notify_all();
     }
 
+    /// Expose a buffer for the **current** epoch and advance the epoch
+    /// counter without tombstoning anything — the deferred-close
+    /// publication step of the get-shift protocol: tick `t`'s panels go
+    /// out on epoch `t`, stay readable while later ticks are already
+    /// exposing epochs `t+1, t+2, …`, and are only tombstoned by the
+    /// end-of-sweep [`RmaWindow::retire_all`] (after a ring fence
+    /// proves every reader is done). The put/close pairing invariants
+    /// are untouched: a window driven this way must be get-only.
+    pub fn expose_advance(&mut self, payload: Payload) {
+        self.expose(payload);
+        self.epoch += 1;
+    }
+
+    /// Tombstone every exposure this rank published on this window
+    /// (epochs `0 .. epoch()`), recording one epoch close per exposure
+    /// so the verifier's leaked-exposure invariant sees a clean
+    /// teardown. Free on the clock (nothing is drained). Callers must
+    /// ensure no peer can still be reading — the get-shift drivers run
+    /// a ring fence first.
+    pub fn retire_all(&mut self) {
+        let verify = self.comm.shared.trace.is_some();
+        let me = self.comm.my_world();
+        {
+            let mut w = self
+                .comm
+                .shared
+                .exposed
+                .lock()
+                .unwrap_or_else(|e| e.into_inner());
+            for e in 0..self.epoch {
+                if let Some(slot) = w.get_mut(&(me, self.base_tag + e)) {
+                    *slot = None;
+                }
+            }
+            self.comm.shared.exposed_cv.notify_all();
+        }
+        if verify {
+            for e in 0..self.epoch {
+                self.comm.record_event(
+                    Provenance::Rma,
+                    None,
+                    self.base_tag + e,
+                    0,
+                    EventKind::CloseEpoch {
+                        win: self.win_id,
+                        instance: self.instance,
+                        epoch: e,
+                        drained: Vec::new(),
+                    },
+                );
+            }
+        }
+    }
+
     /// One-sided get of the buffer `src` exposed this epoch.
     /// Origin-charged: the full transfer (α + bytes/β, from the later of
     /// the origin's clock and the exposure time) and the traffic
@@ -276,9 +377,40 @@ impl RmaWindow {
     /// from a registered-dead rank returns [`PeerDied`], with the
     /// origin's clock advanced one heartbeat horizon past the death.
     pub fn try_get(&self, src: usize) -> Result<Payload, PeerDied> {
+        let pending = self.get_issue(src, self.epoch)?;
+        Ok(self.get_complete(pending))
+    }
+
+    /// Nonblocking get of the buffer `src` exposed for `epoch` (which
+    /// may trail this rank's own epoch counter — the deferred-close
+    /// read of the get-shift protocol). The transfer is **in flight
+    /// from the issue-time clock**: counters are charged now, the
+    /// virtual completion time is fixed now, but the caller's clock
+    /// does not move until [`RmaWindow::get_complete`] — so a get
+    /// issued before a compute phase and completed after it overlaps
+    /// the transfer with the compute, exactly like an `MPI_Rget`
+    /// + late `MPI_Wait`. Returns [`PeerDied`] when `src` died without
+    /// exposing that epoch (clock advanced one detection horizon past
+    /// the death, as in [`RmaWindow::try_get`]).
+    pub fn get_begin(&self, src: usize, epoch: u64) -> Result<PendingGet, PeerDied> {
+        self.get_issue(src, epoch)
+    }
+
+    /// Complete a [`RmaWindow::get_begin`]: advance the clock to the
+    /// transfer's completion time (a no-op if compute already carried
+    /// the clock past it — the hidden-transfer case) and hand over the
+    /// payload.
+    pub fn get_complete(&self, pending: PendingGet) -> Payload {
+        if pending.done_at > self.comm.now() {
+            self.comm.wait_to(pending.done_at);
+        }
+        pending.payload
+    }
+
+    fn get_issue(&self, src: usize, epoch: u64) -> Result<PendingGet, PeerDied> {
         self.comm.maybe_yield();
         let verify = self.comm.shared.trace.is_some();
-        let key = (self.comm.members[src], self.tag());
+        let key = (self.comm.members[src], self.base_tag + epoch);
         let me = self.comm.my_world();
         let found = {
             let mut w = self
@@ -301,8 +433,8 @@ impl RmaWindow {
                         break Ok((e.payload.clone(), e.at, e.serial, e.instance));
                     }
                     Some(None) => panic!(
-                        "RMA get from rank {} after it closed exposure epoch {}",
-                        key.0, self.epoch
+                        "RMA get from rank {} after it closed exposure epoch {epoch}",
+                        key.0
                     ),
                     None => {}
                 }
@@ -322,8 +454,8 @@ impl RmaWindow {
                 }
                 if self.comm.shared.dead.load(Ordering::SeqCst) {
                     panic!(
-                        "peer rank died while waiting for exposure (src {}, epoch {})",
-                        key.0, self.epoch
+                        "peer rank died while waiting for exposure (src {}, epoch {epoch})",
+                        key.0
                     );
                 }
                 if verify {
@@ -368,7 +500,7 @@ impl RmaWindow {
                 EventKind::Get {
                     win: self.win_id,
                     instance: self.instance,
-                    epoch: self.epoch,
+                    epoch,
                     exposure: serial,
                     exposer_instance,
                 },
@@ -379,10 +511,13 @@ impl RmaWindow {
         st.bytes_sent.set(st.bytes_sent.get() + bytes);
         st.msgs_sent.set(st.msgs_sent.get() + 1);
         st.meta_sent.set(st.meta_sent.get() + payload.meta_bytes());
-        let start = self.comm.now().max(at);
-        self.comm
-            .wait_to(start + self.comm.shared.net.transit_seconds(bytes));
-        Ok(payload)
+        let issued_at = self.comm.now();
+        let start = issued_at.max(at);
+        Ok(PendingGet {
+            payload,
+            issued_at,
+            done_at: start + self.comm.shared.net.transit_seconds(bytes),
+        })
     }
 
     /// Close the exposure epoch (passive-target `flush` + `unlock`, or
@@ -558,6 +693,88 @@ mod tests {
     fn transport_names() {
         assert_eq!(Transport::TwoSided.name(), "two-sided");
         assert_eq!(format!("{}", Transport::OneSided), "one-sided");
+        assert_eq!(Transport::OneSidedGet.name(), "one-sided-get");
+        assert!(!Transport::TwoSided.is_rma());
+        assert!(Transport::OneSided.is_rma() && Transport::OneSidedGet.is_rma());
+    }
+
+    #[test]
+    fn pending_get_overlaps_compute() {
+        // MPI_Rget semantics: the transfer is in flight from the issue
+        // clock, so compute between get_begin and get_complete hides it
+        let net = NetModel {
+            latency: 0.0,
+            bw: 1e6,
+        };
+        let out = run_ranks(2, net, move |c| {
+            let win = RmaWindow::new(&c, 20);
+            if c.rank() == 0 {
+                win.expose(Payload::Phantom { bytes: 1000 }); // 1 ms transfer
+                (0.0, 0.0)
+            } else {
+                let pending = win.get_begin(0, 0).unwrap();
+                assert_eq!(pending.wire_bytes(), 1000);
+                assert_eq!(pending.issued_at(), 0.0);
+                c.advance_to(2e-3); // 2 ms of compute
+                let _ = win.get_complete(pending);
+                (c.now(), c.stats().wait_seconds)
+            }
+        });
+        // transfer fully hidden: clock stays at compute end, no wait
+        assert_eq!(out[1], (2e-3, 0.0));
+    }
+
+    #[test]
+    fn pending_get_books_only_the_unhidden_remainder() {
+        let net = NetModel {
+            latency: 0.0,
+            bw: 1e6,
+        };
+        let out = run_ranks(2, net, move |c| {
+            let win = RmaWindow::new(&c, 21);
+            if c.rank() == 0 {
+                win.expose(Payload::Phantom { bytes: 1000 }); // 1 ms transfer
+                0.0
+            } else {
+                let pending = win.get_begin(0, 0).unwrap();
+                c.advance_to(0.4e-3); // hides 0.4 of the 1 ms
+                let _ = win.get_complete(pending);
+                c.stats().wait_seconds
+            }
+        });
+        assert!((out[1] - 0.6e-3).abs() < 1e-12, "{}", out[1]);
+    }
+
+    #[test]
+    fn deferred_close_ring_shift_without_barrier() {
+        // the get-shift protocol: expose_advance keeps every epoch's
+        // exposure live, gets read trailing epochs, a ring fence
+        // precedes retire_all — no allreduce barrier per tick
+        let p = 4usize;
+        let out = run_ranks(p, NetModel::aries(1), move |c| {
+            let mut win = RmaWindow::new(&c, 22);
+            let right = (c.rank() + 1) % p;
+            let left = (c.rank() + p - 1) % p;
+            let mut held = c.rank() as f32;
+            let mut seen = Vec::new();
+            for tick in 0..3u64 {
+                win.expose_advance(Payload::F32(vec![held]));
+                let pending = win.get_begin(right, tick).unwrap();
+                held = win.get_complete(pending).into_f32()[0];
+                seen.push(held as usize);
+            }
+            // ring fence: tell the reader (left) we are done reading its
+            // exposures; retire only after our own reader said the same
+            c.send(right, 1, Payload::Empty);
+            let _ = c.recv(left, 1);
+            win.retire_all();
+            (seen, win.epoch())
+        });
+        for (rank, (seen, epoch)) in out.iter().enumerate() {
+            let want: Vec<usize> = (1..=3).map(|d| (rank + d) % p).collect();
+            assert_eq!(seen, &want, "rank {rank} walks the ring");
+            assert_eq!(*epoch, 3);
+        }
     }
 
     #[test]

@@ -141,7 +141,10 @@ pub enum Invariant {
     /// Cross-instance exposure read or out-of-order epoch drain.
     EpochDiscipline,
     /// A `win_id` recreated while expose/get traffic can alias the
-    /// previous instance (the PR 4 hazard).
+    /// previous instance (the PR 4 hazard). The replica-recovery and
+    /// get-shift ring windows are exempt: both are recreated once per
+    /// multiply by design, and their stale reads are caught by the
+    /// cross-instance `Get` check instead.
     WinReuse,
     /// A sent message never received, or received across a multiply
     /// boundary (quiescence).
@@ -542,6 +545,18 @@ fn check_epochs(
         if win == tags::WIN_RECOVER_A || win == tags::WIN_RECOVER_B {
             continue;
         }
+        // likewise the get-shift ring windows: one instance per multiply,
+        // epochs advanced per tick with deferred closes retired behind a
+        // ring fence (`ShiftRing::retire*`), so a recreated instance can
+        // never race a live getter — and the cross-instance Get check
+        // above still catches any stale read
+        if win == tags::WIN_CANNON_GETSHIFT_A
+            || win == tags::WIN_CANNON_GETSHIFT_B
+            || win == tags::WIN_TWOFIVE_GETSHIFT_A
+            || win == tags::WIN_TWOFIVE_GETSHIFT_B
+        {
+            continue;
+        }
         let mut reusers: Vec<usize> = creations
             .iter()
             .filter(|((_, w), &inst)| *w == win && inst >= 2)
@@ -620,6 +635,22 @@ fn check_recovery(
                         message: format!(
                             "rank {rank} put into get-only recovery window {win} — replica \
                              shares move by origin-side get exclusively"
+                        ),
+                    });
+                }
+                // the get-shift ring windows are get-only too: a put
+                // into one would overwrite the panel a neighbor's
+                // in-flight get is about to read
+                if win == tags::WIN_CANNON_GETSHIFT_A
+                    || win == tags::WIN_CANNON_GETSHIFT_B
+                    || win == tags::WIN_TWOFIVE_GETSHIFT_A
+                    || win == tags::WIN_TWOFIVE_GETSHIFT_B
+                {
+                    report.violations.push(Violation {
+                        invariant: Invariant::EpochDiscipline,
+                        message: format!(
+                            "rank {rank} put into get-only shift window {win} — ring-shift \
+                             panels move by origin-side get exclusively"
                         ),
                     });
                 }

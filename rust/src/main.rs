@@ -10,8 +10,9 @@
 //!   run --nodes N --rpn R --threads T --block B --shape square|rect
 //!       --engine dbcsr|dbcsr-blocked|pdgemm [--scale N] [--real]
 //!       [--algorithm layout|auto|cannon|2.5d] [--layers C]
+//!       [--transport two-sided|one-sided|one-sided-get] [--overlap]
 //!       [--occupancy X] [--iterations N] [--plan-verbose] [--verify]
-//!       [--kill-rank R --kill-at T]
+//!       [--detect-horizon S] [--kill-rank R --kill-at T]
 //!                             one experiment point (`auto` picks the
 //!                             2.5D replication factor through the
 //!                             planner; --occupancy < 1 runs the
@@ -26,6 +27,13 @@
 //!                             --verify traces the run through the
 //!                             comm-protocol checker and exits nonzero
 //!                             on any invariant violation;
+//!                             --overlap double-buffers the per-tick
+//!                             panel shifts (bit-identical results;
+//!                             hidden transfer time is reported as
+//!                             `overlap hidden`); --detect-horizon sets
+//!                             the failure detector's heartbeat horizon
+//!                             in virtual seconds (--horizon is the
+//!                             deprecated alias);
 //!                             --kill-rank/--kill-at inject a rank
 //!                             death at slot-tick T — plans with
 //!                             replica layers heal it in-run and report
@@ -33,10 +41,10 @@
 //!                             reports Unrecoverable)
 
 use dbcsr::bench::figures;
-use dbcsr::bench::harness::{run_spec, run_spec_verified, AlgoSpec, Engine, RunSpec, Shape};
+use dbcsr::bench::harness::{run_spec_opts, AlgoSpec, Engine, RunSpec, Shape};
 use dbcsr::multiply::planner;
 use dbcsr::bench::table::fmt_secs;
-use dbcsr::dist::{NetModel, Transport};
+use dbcsr::dist::{verify, NetModel, RunOpts, Transport};
 use dbcsr::backend::autotune::{tuned_to_json, Autotuner};
 use dbcsr::config::Args;
 use dbcsr::matrix::Mode;
@@ -201,8 +209,12 @@ fn run_file(args: &Args) {
             transport: match get_s(section, "transport", "two-sided").as_str() {
                 "two-sided" => Transport::TwoSided,
                 "one-sided" => Transport::OneSided,
-                other => panic!("transport = two-sided|one-sided, got {other:?}"),
+                "one-sided-get" => Transport::OneSidedGet,
+                other => {
+                    panic!("transport = two-sided|one-sided|one-sided-get, got {other:?}")
+                }
             },
+            overlap: get_s(section, "overlap", "false") == "true",
             algo: match get_s(section, "algorithm", "layout").as_str() {
                 "layout" => AlgoSpec::Layout,
                 "auto" => AlgoSpec::Auto,
@@ -234,7 +246,22 @@ fn run_file(args: &Args) {
                 .or_else(|| cf.get("defaults.fault"))
                 .map(parse_fault),
         };
-        let r = run_spec(spec);
+        // `detect-horizon` (seconds) tunes the failure detector; the
+        // pre-rename `horizon` key is kept as a deprecated alias
+        let detect_horizon = cf
+            .get(&format!("{section}.detect-horizon"))
+            .or_else(|| cf.get(&format!("{section}.horizon")))
+            .or_else(|| cf.get("defaults.detect-horizon"))
+            .or_else(|| cf.get("defaults.horizon"))
+            .map(|v| v.parse::<f64>().expect("detect-horizon must be seconds (float)"))
+            .unwrap_or_else(|| RunOpts::default().detect_horizon);
+        let (r, _) = run_spec_opts(
+            spec,
+            RunOpts {
+                detect_horizon,
+                ..RunOpts::default()
+            },
+        );
         if r.unrecoverable {
             println!(
                 "[{section}] recovery: Unrecoverable — fault injected but the \
@@ -305,7 +332,8 @@ fn run_one(args: &Args, scale: usize, mode: Mode) {
     let transport = match args.str_flag("transport", "two-sided") {
         "two-sided" => Transport::TwoSided,
         "one-sided" => Transport::OneSided,
-        other => panic!("--transport two-sided|one-sided, got {other:?}"),
+        "one-sided-get" => Transport::OneSidedGet,
+        other => panic!("--transport two-sided|one-sided|one-sided-get, got {other:?}"),
     };
     // default preserves the pre-planner behavior (rect → tall-skinny,
     // square → Cannon); `--algorithm auto` opts into the planner, which
@@ -341,6 +369,7 @@ fn run_one(args: &Args, scale: usize, mode: Mode) {
         mode,
         net,
         transport,
+        overlap: args.switch("overlap"),
         algo,
         plan_verbose: args.switch("plan-verbose"),
         occupancy,
@@ -362,16 +391,35 @@ fn run_one(args: &Args, scale: usize, mode: Mode) {
             println!("(informational — --algorithm {algo:?} overrides the planner)");
         }
     }
-    let r = if args.switch("verify") {
-        let (r, report) = run_spec_verified(spec);
+    // --detect-horizon (seconds) tunes the failure detector; --horizon
+    // is the pre-rename deprecated alias
+    let detect_horizon = args
+        .flag("detect-horizon")
+        .or_else(|| {
+            let old = args.flag("horizon");
+            if old.is_some() {
+                eprintln!("note: --horizon is deprecated, use --detect-horizon");
+            }
+            old
+        })
+        .map(|v| v.parse::<f64>().expect("--detect-horizon must be seconds (float)"))
+        .unwrap_or_else(|| RunOpts::default().detect_horizon);
+    let verifying = args.switch("verify");
+    let (r, trace) = run_spec_opts(
+        spec,
+        RunOpts {
+            trace: verifying,
+            detect_horizon,
+            ..RunOpts::default()
+        },
+    );
+    if verifying {
+        let report = verify::check(&trace.expect("traced run must return a trace"));
         print!("{}", report.render());
         if !report.is_clean() {
             std::process::exit(1);
         }
-        r
-    } else {
-        run_spec(spec)
-    };
+    }
     if r.unrecoverable {
         println!(
             "recovery: Unrecoverable — rank {} would die with no replica layer \
@@ -424,13 +472,18 @@ fn run_one(args: &Args, scale: usize, mode: Mode) {
         r.wall,
     );
     println!(
-        "stacks {}  block_mults {}  flops {:.3e}  comm {:.1} MiB in {} msgs (wait {:.3}s, meta {:.2} MiB)  densify {:.1} MiB  dev peak {:.2} GiB{}",
+        "stacks {}  block_mults {}  flops {:.3e}  comm {:.1} MiB in {} msgs (wait {:.3}s{}, meta {:.2} MiB)  densify {:.1} MiB  dev peak {:.2} GiB{}",
         r.stats.stacks,
         r.stats.block_mults,
         r.stats.flops as f64,
         r.stats.comm_bytes as f64 / (1 << 20) as f64,
         r.stats.comm_msgs,
         r.stats.comm_wait_s,
+        if r.stats.overlap_hidden_s > 0.0 {
+            format!(", overlap hidden {:.3}s", r.stats.overlap_hidden_s)
+        } else {
+            String::new()
+        },
         r.stats.meta_bytes as f64 / (1 << 20) as f64,
         r.stats.densify_bytes as f64 / (1 << 20) as f64,
         r.stats.dev_mem_peak as f64 / (1 << 30) as f64,

@@ -19,18 +19,31 @@
 //! the blocking sendrecv exchanges above (the A shift completes before
 //! the B shift is issued), one-sided issues RMA puts for A *and* B into
 //! exposure windows before closing either epoch, so the two transfers
-//! overlap on the virtual wire (see [`crate::dist::rma`]). Both paths
-//! move the same payloads in the same order — C is bit-identical.
+//! overlap on the virtual wire (see [`crate::dist::rma`]); one-sided-get
+//! (the `MPI_Rget` mode of arXiv:1705.10218) exposes the held panels on
+//! long-lived per-multiply windows — one epoch per tick, deferred
+//! tombstoning — and each rank *gets* its next panels from its ring
+//! neighbor. All paths move the same payloads in the same order — C is
+//! bit-identical.
+//!
+//! With `overlap` on, the shift double-buffers: tick `t+1`'s transfer is
+//! issued (from a non-consuming pack of the current panels) *before*
+//! tick `t`'s compute and completed after it, so the virtual clock
+//! charges `max(compute_t, transfer_{t+1})` per tick instead of their
+//! sum. The time the overlap hid is booked into
+//! [`MultiplyStats::overlap_hidden_s`](crate::util::stats::MultiplyStats),
+//! so `comm_wait_s` reports only the unhidden remainder.
 
 use std::collections::BTreeMap;
 
 use crate::backend::gpu_sim::DeviceOom;
-use crate::dist::{CommView, Grid2D, RmaWindow, Transport};
+use crate::dist::{CommView, Grid2D, Payload, PendingGet, RmaWindow, Transport};
 use crate::matrix::{DistMatrix, Distribution, LocalCsr, Mode};
 
 use super::engine::LocalEngine;
 use super::sparse_exchange::{
-    accumulate_pattern, assemble_c_sparse, pack_panels as pack, unpack_panels as unpack, CPattern,
+    accumulate_pattern, assemble_c_sparse, pack_panels as pack,
+    pack_panels_copy as pack_copy, unpack_panels as unpack, CPattern,
 };
 use super::vgrid::VGrid;
 
@@ -45,18 +58,22 @@ pub(super) type PanelMeta = super::sparse_exchange::PanelMeta;
 use crate::dist::tags::{
     TAG_CANNON_SHIFT_A as TAG_SHIFT_A, TAG_CANNON_SHIFT_B as TAG_SHIFT_B,
     TAG_CANNON_SKEW_A as TAG_SKEW_A, TAG_CANNON_SKEW_B as TAG_SKEW_B,
-    WIN_CANNON_SHIFT_A as WIN_SHIFT_A, WIN_CANNON_SHIFT_B as WIN_SHIFT_B,
-    WIN_CANNON_SKEW_A as WIN_SKEW_A, WIN_CANNON_SKEW_B as WIN_SKEW_B,
+    TAG_GETSHIFT_FENCE_A, TAG_GETSHIFT_FENCE_B, WIN_CANNON_GETSHIFT_A as WIN_GETSHIFT_A,
+    WIN_CANNON_GETSHIFT_B as WIN_GETSHIFT_B, WIN_CANNON_SHIFT_A as WIN_SHIFT_A,
+    WIN_CANNON_SHIFT_B as WIN_SHIFT_B, WIN_CANNON_SKEW_A as WIN_SKEW_A,
+    WIN_CANNON_SKEW_B as WIN_SKEW_B,
 };
 
 /// Multiply `C = A · B` with generalized Cannon. Collective over the
-/// grid; returns this rank's C.
+/// grid; returns this rank's C. With `overlap` on, panel shifts are
+/// double-buffered across ticks (see module docs).
 pub fn multiply_cannon(
     grid: &Grid2D,
     a: &DistMatrix,
     b: &DistMatrix,
     engine: &mut LocalEngine,
     transport: Transport,
+    overlap: bool,
 ) -> Result<DistMatrix, DeviceOom> {
     assert_eq!(
         a.cols.nblocks, b.rows.nblocks,
@@ -127,7 +144,10 @@ pub fn multiply_cannon(
                 mode,
             );
         }
-        Transport::OneSided => {
+        // the get transport reuses the put path for the one-shot skew:
+        // get semantics only pay off on the per-tick ring, and sharing
+        // the skew keeps C trivially identical across transports
+        Transport::OneSided | Transport::OneSidedGet => {
             // both skews' puts issue before either epoch closes, so the
             // A and B transfers overlap on the wire
             let ex_a =
@@ -143,18 +163,55 @@ pub fn multiply_cannon(
     let slots = vg.slots();
     engine.begin(&grid.world, build_c_slots(&vg, &slots, a, b))?;
 
-    // per-tick shift windows (one epoch per tick) — one-sided only
-    let (mut win_a, mut win_b) = match transport {
-        Transport::OneSided => (
-            Some(RmaWindow::new(&grid.world, WIN_SHIFT_A)),
-            Some(RmaWindow::new(&grid.world, WIN_SHIFT_B)),
-        ),
-        Transport::TwoSided => (None, None),
-    };
+    // per-tick shift state: put windows (one epoch per tick) under
+    // one-sided, long-lived get windows under one-sided-get
+    let mut ring = ShiftRing::new(
+        &grid.world,
+        transport,
+        (WIN_SHIFT_A, WIN_SHIFT_B),
+        (WIN_GETSHIFT_A, WIN_GETSHIFT_B),
+    );
 
     // ---- ticks -------------------------------------------------------------
     let mut c_pats: Vec<CPattern> = vec![CPattern::new(); slots.len()];
+    let mut hidden_s = 0.0f64;
     for s in 0..vg.l {
+        // shift all A panels one column left, B panels one row up
+        let (next_a, next_b): (Option<Vec<Key>>, Option<Vec<Key>>) = if s + 1 < vg.l {
+            (
+                (vg.pc > 1).then(|| {
+                    let mut v: Vec<Key> = slots
+                        .iter()
+                        .map(|&(i, j)| (i, vg.group_at(i, j, s + 1)))
+                        .collect();
+                    v.sort_unstable();
+                    v
+                }),
+                (vg.pr > 1).then(|| {
+                    let mut v: Vec<Key> = slots
+                        .iter()
+                        .map(|&(i, j)| (vg.group_at(i, j, s + 1), j))
+                        .collect();
+                    v.sort_unstable();
+                    v
+                }),
+            )
+        } else {
+            (None, None)
+        };
+        // double-buffer: issue tick s+1's transfer before tick s computes
+        let inflight = (overlap && s + 1 < vg.l).then(|| {
+            shift_start(
+                grid,
+                &mut ring,
+                &a_panels,
+                &b_panels,
+                next_a.as_deref(),
+                next_b.as_deref(),
+                (TAG_SHIFT_A, TAG_SHIFT_B),
+                mode,
+            )
+        });
         for (idx, &(i, j)) in slots.iter().enumerate() {
             let g = vg.group_at(i, j, s);
             let ap = &a_panels[&(i, g)];
@@ -163,38 +220,39 @@ pub fn multiply_cannon(
             accumulate_pattern(&mut c_pats[idx], ap, bp);
         }
         if s + 1 < vg.l {
-            // shift all A panels one column left, B panels one row up
-            let next_a: Option<Vec<Key>> = (vg.pc > 1).then(|| {
-                let mut v: Vec<Key> = slots
-                    .iter()
-                    .map(|&(i, j)| (i, vg.group_at(i, j, s + 1)))
-                    .collect();
-                v.sort_unstable();
-                v
-            });
-            let next_b: Option<Vec<Key>> = (vg.pr > 1).then(|| {
-                let mut v: Vec<Key> = slots
-                    .iter()
-                    .map(|&(i, j)| (vg.group_at(i, j, s + 1), j))
-                    .collect();
-                v.sort_unstable();
-                v
-            });
-            shift_pair(
-                grid,
-                transport,
-                (&mut win_a, &mut win_b),
-                &mut a_panels,
-                &mut b_panels,
-                next_a.as_deref(),
-                next_b.as_deref(),
-                |key| panel_meta(a, &vg, key.0, key.1),
-                |key| panel_meta(b, &vg, key.0, key.1),
-                (TAG_SHIFT_A, TAG_SHIFT_B),
-                mode,
-            );
+            if let Some(pending) = inflight {
+                // credit the tick's host work to the clock before the
+                // completion blocks, so the prefetched transfer charges
+                // max(compute, transfer) instead of their sum
+                engine.join_host(&grid.world);
+                hidden_s += shift_finish(
+                    grid,
+                    &mut ring,
+                    pending,
+                    &mut a_panels,
+                    &mut b_panels,
+                    |key| panel_meta(a, &vg, key.0, key.1),
+                    |key| panel_meta(b, &vg, key.0, key.1),
+                    mode,
+                );
+            } else {
+                shift_pair(
+                    grid,
+                    &mut ring,
+                    &mut a_panels,
+                    &mut b_panels,
+                    next_a.as_deref(),
+                    next_b.as_deref(),
+                    |key| panel_meta(a, &vg, key.0, key.1),
+                    |key| panel_meta(b, &vg, key.0, key.1),
+                    (TAG_SHIFT_A, TAG_SHIFT_B),
+                    mode,
+                );
+            }
         }
     }
+    ring.retire(grid);
+    engine.stats.overlap_hidden_s += hidden_s;
 
     // ---- assemble C (sparse: only symbolic-pattern blocks) -----------------
     let out_panels = engine.finish(&grid.world);
@@ -308,7 +366,7 @@ pub(super) fn extract_panel(m: &DistMatrix, vg: &VGrid, x: usize, y: usize) -> L
 /// address to ourselves must be exactly what we expect from ourselves; a
 /// mismatch would silently drop panels (the kept set would shadow the
 /// expected one).
-fn route_exchange(
+pub(super) fn route_exchange(
     me: usize,
     held: &mut BTreeMap<Key, LocalCsr>,
     sends: &[(usize, Key)],
@@ -374,20 +432,128 @@ where
     out
 }
 
-/// One tick's A+B shift pair under either transport — the single place
+/// Per-multiply shift-ring state shared by both drivers (Cannon and
+/// 2.5D): the transport, the per-tick RMA windows, and the tick counter
+/// that names get epochs. Under [`Transport::OneSided`] the windows are
+/// put targets (one epoch per tick, closed every shift); under
+/// [`Transport::OneSidedGet`] they are long-lived exposure windows —
+/// every tick [`RmaWindow::expose_advance`]s the held panels and the
+/// ring neighbor *gets* them, with tombstoning deferred to
+/// [`ShiftRing::retire`] at sweep end. Two-sided holds no windows.
+pub(super) struct ShiftRing {
+    pub(super) transport: Transport,
+    pub(super) win_a: Option<RmaWindow>,
+    pub(super) win_b: Option<RmaWindow>,
+    /// Ticks shifted so far — the get epoch the next shift reads.
+    pub(super) tick: u64,
+    pub(super) shifted_a: bool,
+    pub(super) shifted_b: bool,
+}
+
+impl ShiftRing {
+    pub(super) fn new(
+        world: &CommView,
+        transport: Transport,
+        put_ids: (u64, u64),
+        get_ids: (u64, u64),
+    ) -> ShiftRing {
+        let (win_a, win_b) = match transport {
+            Transport::TwoSided => (None, None),
+            Transport::OneSided => (
+                Some(RmaWindow::new(world, put_ids.0)),
+                Some(RmaWindow::new(world, put_ids.1)),
+            ),
+            Transport::OneSidedGet => (
+                Some(RmaWindow::new(world, get_ids.0)),
+                Some(RmaWindow::new(world, get_ids.1)),
+            ),
+        };
+        ShiftRing {
+            transport,
+            win_a,
+            win_b,
+            tick: 0,
+            shifted_a: false,
+            shifted_b: false,
+        }
+    }
+
+    /// End-of-sweep fence for the get transport (`MPI_Win_unlock_all`
+    /// analog): tell the neighbor this rank read from that its
+    /// exposures are no longer needed, wait for this rank's own reader
+    /// to say the same, then tombstone every epoch at once. Without the
+    /// fence a fast rank could retire (or recreate the window next
+    /// multiply) while its wall-clock-slower reader still has a get in
+    /// flight. No-op under the other transports.
+    pub(super) fn retire(&mut self, grid: &Grid2D) {
+        self.retire_ft(grid, &[]);
+    }
+
+    /// [`ShiftRing::retire`] under a fault plan: `dead` holds every
+    /// world rank that dies at some point during this multiply. The
+    /// fence send stays unconditional (a message to a dead peer is an
+    /// orphan the verifier excuses), but the fence receive becomes the
+    /// try-variant: a dead reader never sends its fence — its death
+    /// registration is the release instead, and it is a safe one
+    /// because a killed rank completes its last shift's gets before it
+    /// stops.
+    pub(super) fn retire_ft(&mut self, grid: &Grid2D, dead: &[usize]) {
+        if !matches!(self.transport, Transport::OneSidedGet) {
+            return;
+        }
+        let world = &grid.world;
+        if self.shifted_a {
+            world.send(grid.right(), TAG_GETSHIFT_FENCE_A, Payload::Empty);
+            if dead.is_empty() {
+                let _ = world.recv(grid.left(), TAG_GETSHIFT_FENCE_A);
+            } else {
+                let _ = world.try_recv(grid.left(), TAG_GETSHIFT_FENCE_A);
+            }
+            self.win_a.as_mut().unwrap().retire_all();
+        }
+        if self.shifted_b {
+            world.send(grid.down(), TAG_GETSHIFT_FENCE_B, Payload::Empty);
+            if dead.is_empty() {
+                let _ = world.recv(grid.up(), TAG_GETSHIFT_FENCE_B);
+            } else {
+                let _ = world.try_recv(grid.up(), TAG_GETSHIFT_FENCE_B);
+            }
+            self.win_b.as_mut().unwrap().retire_all();
+        }
+    }
+}
+
+/// One half of an in-flight double-buffered shift (one operand's ring).
+pub(super) enum PendingHalf {
+    /// A send is on the wire; complete by receiving from `src`.
+    TwoSided { src: usize, tag: u64 },
+    /// A put is in the window; complete by closing the epoch on `src`.
+    Put { src: usize },
+    /// A get was issued; complete via [`RmaWindow::get_complete`].
+    Get(PendingGet),
+}
+
+/// An issued-but-incomplete shift pair, returned by [`shift_start`] and
+/// consumed by [`shift_finish`] after the tick's compute.
+pub(super) struct PendingShift {
+    a: Option<(PendingHalf, Vec<Key>)>,
+    b: Option<(PendingHalf, Vec<Key>)>,
+}
+
+/// One tick's A+B shift pair under any transport — the single place
 /// both drivers (Cannon and 2.5D) dispatch through, so the transport
 /// semantics cannot diverge. Two-sided runs the blocking
 /// sendrecv_replace sequence (the A shift completes before the B shift
 /// is issued, so the comm chain grows `t_A + t_B` per tick); one-sided
 /// issues **both** puts before closing either epoch, so the transfers
-/// overlap on the wire (`max(t_A, t_B)`). `next_a`/`next_b` are `None`
-/// when that operand does not shift (single-column/row grids); `wins`
-/// are the per-multiply shift windows, `Some` only under one-sided.
+/// overlap on the wire (`max(t_A, t_B)`); one-sided-get exposes both
+/// panel sets, then gets from both ring neighbors. `next_a`/`next_b`
+/// are `None` when that operand does not shift (single-column/row
+/// grids).
 #[allow(clippy::too_many_arguments)]
 pub(super) fn shift_pair<FA, FB>(
     grid: &Grid2D,
-    transport: Transport,
-    wins: (&mut Option<RmaWindow>, &mut Option<RmaWindow>),
+    ring: &mut ShiftRing,
     a_panels: &mut BTreeMap<Key, LocalCsr>,
     b_panels: &mut BTreeMap<Key, LocalCsr>,
     next_a: Option<&[Key]>,
@@ -400,7 +566,9 @@ pub(super) fn shift_pair<FA, FB>(
     FA: Fn(&Key) -> PanelMeta,
     FB: Fn(&Key) -> PanelMeta,
 {
-    match transport {
+    let epoch = ring.tick;
+    ring.tick += 1;
+    match ring.transport {
         Transport::TwoSided => {
             if let Some(next_keys) = next_a {
                 let held = std::mem::take(a_panels);
@@ -432,22 +600,245 @@ pub(super) fn shift_pair<FA, FB>(
         Transport::OneSided => {
             if next_a.is_some() {
                 let held = std::mem::take(a_panels);
-                rma_shift_put(wins.0.as_ref().unwrap(), grid.left(), held, mode);
+                rma_shift_put(ring.win_a.as_ref().unwrap(), grid.left(), held, mode);
             }
             if next_b.is_some() {
                 let held = std::mem::take(b_panels);
-                rma_shift_put(wins.1.as_ref().unwrap(), grid.up(), held, mode);
+                rma_shift_put(ring.win_b.as_ref().unwrap(), grid.up(), held, mode);
             }
             if let Some(next_keys) = next_a {
-                let win = wins.0.as_mut().unwrap();
+                let win = ring.win_a.as_mut().unwrap();
                 *a_panels = rma_shift_close(win, grid.right(), next_keys, meta_a, mode);
             }
             if let Some(next_keys) = next_b {
-                let win = wins.1.as_mut().unwrap();
+                let win = ring.win_b.as_mut().unwrap();
                 *b_panels = rma_shift_close(win, grid.down(), next_keys, meta_b, mode);
             }
         }
+        Transport::OneSidedGet => {
+            // expose both panel sets before getting either, mirroring
+            // the one-sided puts-before-closes wire overlap
+            if next_a.is_some() {
+                let mut held = std::mem::take(a_panels);
+                let keys: Vec<Key> = held.keys().copied().collect();
+                let win = ring.win_a.as_mut().unwrap();
+                win.expose_advance(pack(&mut held, &keys, mode));
+                ring.shifted_a = true;
+            }
+            if next_b.is_some() {
+                let mut held = std::mem::take(b_panels);
+                let keys: Vec<Key> = held.keys().copied().collect();
+                let win = ring.win_b.as_mut().unwrap();
+                win.expose_advance(pack(&mut held, &keys, mode));
+                ring.shifted_b = true;
+            }
+            if let Some(next_keys) = next_a {
+                let win = ring.win_a.as_ref().unwrap();
+                let pending = win
+                    .get_begin(grid.right(), epoch)
+                    .expect("shift source died without a fault plan");
+                let payload = win.get_complete(pending);
+                let mut out = BTreeMap::new();
+                unpack(payload, next_keys, &meta_a, mode, &mut out);
+                *a_panels = out;
+            }
+            if let Some(next_keys) = next_b {
+                let win = ring.win_b.as_ref().unwrap();
+                let pending = win
+                    .get_begin(grid.down(), epoch)
+                    .expect("shift source died without a fault plan");
+                let payload = win.get_complete(pending);
+                let mut out = BTreeMap::new();
+                unpack(payload, next_keys, &meta_b, mode, &mut out);
+                *b_panels = out;
+            }
+        }
     }
+}
+
+/// Issue one tick's A+B shift **without consuming the current panels**
+/// (double-buffered mode, called before the tick's compute): packs
+/// copies, puts sends/puts/gets on the virtual wire, and returns the
+/// in-flight state for [`shift_finish`]. The current panels stay valid
+/// for the tick that is about to compute.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn shift_start(
+    grid: &Grid2D,
+    ring: &mut ShiftRing,
+    a_panels: &BTreeMap<Key, LocalCsr>,
+    b_panels: &BTreeMap<Key, LocalCsr>,
+    next_a: Option<&[Key]>,
+    next_b: Option<&[Key]>,
+    tags: (u64, u64),
+    mode: Mode,
+) -> PendingShift {
+    let epoch = ring.tick;
+    ring.tick += 1;
+    let held_keys = |m: &BTreeMap<Key, LocalCsr>| m.keys().copied().collect::<Vec<Key>>();
+    let mut pa: Option<(PendingHalf, Vec<Key>)> = None;
+    let mut pb: Option<(PendingHalf, Vec<Key>)> = None;
+    match ring.transport {
+        Transport::TwoSided => {
+            if let Some(next) = next_a {
+                let keys = held_keys(a_panels);
+                grid.world
+                    .send(grid.left(), tags.0, pack_copy(a_panels, &keys, mode));
+                pa = Some((
+                    PendingHalf::TwoSided {
+                        src: grid.right(),
+                        tag: tags.0,
+                    },
+                    next.to_vec(),
+                ));
+            }
+            if let Some(next) = next_b {
+                let keys = held_keys(b_panels);
+                grid.world
+                    .send(grid.up(), tags.1, pack_copy(b_panels, &keys, mode));
+                pb = Some((
+                    PendingHalf::TwoSided {
+                        src: grid.down(),
+                        tag: tags.1,
+                    },
+                    next.to_vec(),
+                ));
+            }
+        }
+        Transport::OneSided => {
+            if let Some(next) = next_a {
+                let keys = held_keys(a_panels);
+                ring.win_a
+                    .as_ref()
+                    .unwrap()
+                    .put(grid.left(), pack_copy(a_panels, &keys, mode));
+                pa = Some((PendingHalf::Put { src: grid.right() }, next.to_vec()));
+            }
+            if let Some(next) = next_b {
+                let keys = held_keys(b_panels);
+                ring.win_b
+                    .as_ref()
+                    .unwrap()
+                    .put(grid.up(), pack_copy(b_panels, &keys, mode));
+                pb = Some((PendingHalf::Put { src: grid.down() }, next.to_vec()));
+            }
+        }
+        Transport::OneSidedGet => {
+            if next_a.is_some() {
+                let keys = held_keys(a_panels);
+                let win = ring.win_a.as_mut().unwrap();
+                win.expose_advance(pack_copy(a_panels, &keys, mode));
+                ring.shifted_a = true;
+            }
+            if next_b.is_some() {
+                let keys = held_keys(b_panels);
+                let win = ring.win_b.as_mut().unwrap();
+                win.expose_advance(pack_copy(b_panels, &keys, mode));
+                ring.shifted_b = true;
+            }
+            if let Some(next) = next_a {
+                let pending = ring
+                    .win_a
+                    .as_ref()
+                    .unwrap()
+                    .get_begin(grid.right(), epoch)
+                    .expect("shift source died without a fault plan");
+                pa = Some((PendingHalf::Get(pending), next.to_vec()));
+            }
+            if let Some(next) = next_b {
+                let pending = ring
+                    .win_b
+                    .as_ref()
+                    .unwrap()
+                    .get_begin(grid.down(), epoch)
+                    .expect("shift source died without a fault plan");
+                pb = Some((PendingHalf::Get(pending), next.to_vec()));
+            }
+        }
+    }
+    PendingShift { a: pa, b: pb }
+}
+
+/// Complete a [`shift_start`]ed pair after the tick's compute, replacing
+/// both panel sets. Returns the transfer seconds the overlap hid: the
+/// synchronous cost this pair *would* have charged the comm chain,
+/// minus whatever wait the completion still booked (clamped at zero, so
+/// `wait + hidden ≤ sync transfer cost` holds per shift and therefore
+/// per multiply).
+#[allow(clippy::too_many_arguments)]
+pub(super) fn shift_finish<FA, FB>(
+    grid: &Grid2D,
+    ring: &mut ShiftRing,
+    pending: PendingShift,
+    a_panels: &mut BTreeMap<Key, LocalCsr>,
+    b_panels: &mut BTreeMap<Key, LocalCsr>,
+    meta_a: FA,
+    meta_b: FB,
+    mode: Mode,
+) -> f64
+where
+    FA: Fn(&Key) -> PanelMeta,
+    FB: Fn(&Key) -> PanelMeta,
+{
+    let net = grid.world.net();
+    let wait0 = grid.world.stats().wait_seconds;
+    // sync-equivalent cost: two-sided chains the halves (t_A + t_B with
+    // a latency each); one-sided overlaps them (max + one latency);
+    // gets carry their exact modeled duration in the pending handle
+    let mut sum = 0.0f64;
+    let mut max = 0.0f64;
+    let mut rma_pair = false;
+    {
+        let PendingShift { a, b } = pending;
+        if let Some((half, keys)) = a {
+            let payload = match half {
+                PendingHalf::TwoSided { src, tag } => {
+                    let p = grid.world.recv(src, tag);
+                    sum += net.latency + net.transit_seconds(p.wire_bytes());
+                    p
+                }
+                PendingHalf::Put { src } => {
+                    rma_pair = true;
+                    let mut ps = ring.win_a.as_mut().unwrap().close_epoch(&[src]);
+                    let p = ps.remove(0);
+                    max = max.max(net.transit_seconds(p.wire_bytes()));
+                    p
+                }
+                PendingHalf::Get(pg) => {
+                    max = max.max(pg.done_at() - pg.issued_at());
+                    ring.win_a.as_ref().unwrap().get_complete(pg)
+                }
+            };
+            let mut out = BTreeMap::new();
+            unpack(payload, &keys, &meta_a, mode, &mut out);
+            *a_panels = out;
+        }
+        if let Some((half, keys)) = b {
+            let payload = match half {
+                PendingHalf::TwoSided { src, tag } => {
+                    let p = grid.world.recv(src, tag);
+                    sum += net.latency + net.transit_seconds(p.wire_bytes());
+                    p
+                }
+                PendingHalf::Put { src } => {
+                    rma_pair = true;
+                    let mut ps = ring.win_b.as_mut().unwrap().close_epoch(&[src]);
+                    let p = ps.remove(0);
+                    max = max.max(net.transit_seconds(p.wire_bytes()));
+                    p
+                }
+                PendingHalf::Get(pg) => {
+                    max = max.max(pg.done_at() - pg.issued_at());
+                    ring.win_b.as_ref().unwrap().get_complete(pg)
+                }
+            };
+            let mut out = BTreeMap::new();
+            unpack(payload, &keys, &meta_b, mode, &mut out);
+            *b_panels = out;
+        }
+    }
+    let modeled = sum + max + if rma_pair { net.latency } else { 0.0 };
+    let waited = grid.world.stats().wait_seconds - wait0;
+    (modeled - waited).max(0.0)
 }
 
 /// One-sided variant of [`exchange`], split in two so a driver can issue
@@ -584,6 +975,7 @@ mod tests {
         threads: usize,
         densify: bool,
         transport: Transport,
+        overlap: bool,
     ) {
         let p = pr * pc;
         let out = run_ranks(p, NetModel::aries(2), move |world| {
@@ -619,7 +1011,7 @@ mod tests {
                 None,
                 1,
             );
-            let c = multiply_cannon(&grid, &a, &b, &mut engine, transport).unwrap();
+            let c = multiply_cannon(&grid, &a, &b, &mut engine, transport, overlap).unwrap();
             let mut dense = vec![0.0f32; m * n];
             c.add_into_dense(&mut dense);
             dense
@@ -651,7 +1043,18 @@ mod tests {
         threads: usize,
         densify: bool,
     ) {
-        cannon_case_t(pr, pc, m, n, k, block, threads, densify, Transport::TwoSided);
+        cannon_case_t(
+            pr,
+            pc,
+            m,
+            n,
+            k,
+            block,
+            threads,
+            densify,
+            Transport::TwoSided,
+            false,
+        );
     }
 
     #[test]
@@ -700,10 +1103,30 @@ mod tests {
     #[test]
     fn one_sided_transport_matches_reference() {
         // the RMA path across square/rect grids and both engine paths
-        cannon_case_t(2, 2, 24, 24, 24, 4, 2, true, Transport::OneSided);
-        cannon_case_t(2, 3, 36, 24, 30, 5, 1, false, Transport::OneSided);
-        cannon_case_t(1, 3, 18, 18, 18, 3, 1, false, Transport::OneSided);
-        cannon_case_t(1, 1, 16, 16, 16, 4, 2, true, Transport::OneSided);
+        cannon_case_t(2, 2, 24, 24, 24, 4, 2, true, Transport::OneSided, false);
+        cannon_case_t(2, 3, 36, 24, 30, 5, 1, false, Transport::OneSided, false);
+        cannon_case_t(1, 3, 18, 18, 18, 3, 1, false, Transport::OneSided, false);
+        cannon_case_t(1, 1, 16, 16, 16, 4, 2, true, Transport::OneSided, false);
+    }
+
+    #[test]
+    fn one_sided_get_transport_matches_reference() {
+        // the get path: square/rect grids, single-row (B ring idle),
+        // single rank (no shifts, windows retire unused)
+        cannon_case_t(2, 2, 24, 24, 24, 4, 2, true, Transport::OneSidedGet, false);
+        cannon_case_t(2, 3, 36, 24, 30, 5, 1, false, Transport::OneSidedGet, false);
+        cannon_case_t(1, 3, 18, 18, 18, 3, 1, false, Transport::OneSidedGet, false);
+        cannon_case_t(1, 1, 16, 16, 16, 4, 2, true, Transport::OneSidedGet, false);
+    }
+
+    #[test]
+    fn double_buffered_shifts_match_reference() {
+        // overlap on across all three transports — same C
+        cannon_case_t(2, 2, 24, 24, 24, 4, 2, true, Transport::TwoSided, true);
+        cannon_case_t(2, 3, 36, 24, 30, 5, 1, false, Transport::TwoSided, true);
+        cannon_case_t(2, 2, 24, 24, 24, 4, 2, true, Transport::OneSided, true);
+        cannon_case_t(2, 2, 24, 24, 24, 4, 2, true, Transport::OneSidedGet, true);
+        cannon_case_t(1, 3, 18, 18, 18, 3, 1, false, Transport::OneSidedGet, true);
     }
 
     #[test]
@@ -736,7 +1159,8 @@ mod tests {
                 None,
                 4,
             );
-            let _c = multiply_cannon(&grid, &a, &b, &mut engine, Transport::TwoSided).unwrap();
+            let _c =
+                multiply_cannon(&grid, &a, &b, &mut engine, Transport::TwoSided, false).unwrap();
             (engine.stats.clone(), grid.world.now())
         });
         let nb = 2816usize / 22; // 128 blocks per dim

@@ -356,6 +356,22 @@ impl LocalEngine {
         &self.gpu.perf
     }
 
+    /// Advance this rank's virtual clock to its host-lane frontier —
+    /// the earliest instant the host could issue its next blocking comm
+    /// call after the tick it just processed (densify copies, stack
+    /// generation, co-executed CPU stacks; the GPU queue stays async and
+    /// drains at [`Engine::finish`]). The double-buffered drivers call
+    /// this between a tick's compute and the completion of the
+    /// prefetched shift, so transfer time the host work covered books
+    /// as hidden overlap instead of comm wait. The synchronous drivers
+    /// never call it: their receivers block at the pre-tick clock,
+    /// which is exactly the serialized baseline the overlap is measured
+    /// against.
+    pub fn join_host(&self, comm: &CommView) {
+        let lanes = self.lane_free.iter().copied().fold(0.0f64, f64::max);
+        comm.advance_to(lanes);
+    }
+
     /// Finish the multiplication: fetch + undensify C, sync all clocks
     /// (comm clock advances to the device/lane completion), and return
     /// the C panels in slot order.

@@ -71,6 +71,17 @@ pub struct MultiplyConfig {
     /// tall-skinny C reduction dispatch on it; only the PDGEMM baseline
     /// ignores it.
     pub transport: Transport,
+    /// Double-buffer the per-tick panel shifts: tick `t+1`'s transfer is
+    /// issued *before* tick `t`'s compute, so the virtual clock charges
+    /// `max(compute, transfer)` per tick instead of their sum. Works on
+    /// every transport; numerics are bit-identical either way (the
+    /// prefetch reads a private copy of the outgoing panels). The hidden
+    /// transfer time lands in [`MultiplyStats::overlap_hidden_s`] and
+    /// `comm_wait_s` keeps only the unhidden remainder. Off by default —
+    /// synchronous shifts, unchanged timings. Fault-injected multiplies
+    /// force synchronous shifts regardless (a prefetched panel from a
+    /// rank dying mid-flight must be healed, never consumed stale).
+    pub overlap: bool,
     /// Ranks sharing each node's GPU (the grid config's rank factor).
     pub gpu_share: usize,
     /// On-the-fly filtering threshold (DBCSR §II): after the
@@ -112,6 +123,7 @@ impl Default for MultiplyConfig {
             perf: PerfModel::default(),
             algorithm: Algorithm::Auto,
             transport: Transport::TwoSided,
+            overlap: false,
             gpu_share: 1,
             filter_eps: 0.0,
             plan_verbose: false,
@@ -249,6 +261,7 @@ fn plan_summary_for(
         // replication (if any) was charged by whoever built them
         charge_replication: false,
         horizon: 1,
+        overlap: cfg.overlap,
         // the executed plan is priced at the operands' achieved local
         // occupancy (patterns are distribution-uniform, so the local
         // fraction estimates the global one)
@@ -336,12 +349,19 @@ pub fn multiply(
                 kill_now: cfg.faults.clone(),
                 already_dead: Vec::new(),
             };
-            let (c, holds) =
-                twofive::multiply_twofive_ft(&g3, a, b, &mut engine, cfg.transport, &recover)?;
+            let (c, holds) = twofive::multiply_twofive_ft(
+                &g3,
+                a,
+                b,
+                &mut engine,
+                cfg.transport,
+                cfg.overlap,
+                &recover,
+            )?;
             holds_result = holds;
             c
         }
-        _ => cannon::multiply_cannon(grid, a, b, &mut engine, cfg.transport)?,
+        _ => cannon::multiply_cannon(grid, a, b, &mut engine, cfg.transport, cfg.overlap)?,
     };
     // on-the-fly filtering: drop sub-eps result blocks after the full
     // accumulation (and, for 2.5D, after the cross-layer reduce) — only
@@ -355,7 +375,10 @@ pub fn multiply(
     let mut stats = engine.stats.clone();
     stats.comm_bytes = comm1.bytes_sent - comm0.bytes_sent;
     stats.comm_msgs = comm1.msgs_sent - comm0.msgs_sent;
-    stats.comm_wait_s = comm1.wait_seconds - comm0.wait_seconds;
+    // wait_seconds is monotone, but clamp anyway: a negative delta here
+    // would silently poison every downstream sum (see the overlap
+    // accounting property test)
+    stats.comm_wait_s = (comm1.wait_seconds - comm0.wait_seconds).max(0.0);
     stats.meta_bytes = comm1.meta_bytes - comm0.meta_bytes;
     stats.plan = Some(plan);
     book_sparse_stats(&mut stats, a, b, &c, filtered, holds_result);

@@ -19,8 +19,13 @@
 //!
 //! * **shift chain** — `L/c − 1` ticks, each moving the rank's whole A
 //!   and/or B panel set. Two-sided pays `t_A + t_B` per tick (blocking
-//!   sendrecv); one-sided pays `max(t_A, t_B)` plus one epoch-sync α —
-//!   exactly the [`Transport`] semantics of `cannon::shift_pair`.
+//!   sendrecv); one-sided pays `max(t_A, t_B)` plus one epoch-sync α;
+//!   one-sided-get pays `t_A + t_B` with *no* α (pure-transit pulls
+//!   against pre-exposed epochs) — exactly the [`Transport`] semantics
+//!   of `cannon::shift_pair`. When [`PlanInput::overlap`] is set the
+//!   per-tick charge drops to `max(0, transfer − tick compute)`: the
+//!   double-buffered drivers prefetch round `t + 1` behind round `t`'s
+//!   GEMMs, so compute-bound candidates price their shift chain at ~0.
 //! * **skew** — one exchange per operand from the canonical layout to the
 //!   layer's offset positions; on average `(cols − 1)/cols` of the A
 //!   share moves along the grid row (B mirrored along the column).
@@ -108,6 +113,16 @@ pub struct PlanInput {
     /// `c > 1` earlier for sparse inputs (arXiv:1705.10218).
     pub occ_a: f64,
     pub occ_b: f64,
+    /// Price the double-buffered shift overlap
+    /// (`MultiplyConfig::overlap`): tick `t + 1`'s A/B transfer is in
+    /// flight while tick `t` computes, so each shift round charges only
+    /// the transfer time that *exceeds* the round's compute —
+    /// `max(0, transfer − compute)` instead of `transfer`. Compute-bound
+    /// problems then price their whole shift chain at ~0 and
+    /// `Algorithm::Auto` shifts toward longer-sweep (smaller `c`)
+    /// candidates; transfer-bound problems keep the unhidden remainder.
+    /// Bytes are unaffected — the data still moves.
+    pub overlap: bool,
     /// Expected number of rank deaths over the plan's whole horizon
     /// (0 = price failure-free, the historical behavior). Each expected
     /// failure charges the plan its recovery cost — and here the
@@ -367,9 +382,12 @@ pub fn predict_grid(input: &PlanInput, rows: usize, cols: usize, layers: usize) 
             0.0
         }
     };
-    // an A and a B transfer issued back to back: blocking two-sided
-    // serializes them; one-sided overlaps them on the wire and pays one
-    // epoch-sync α (the `cannon::shift_pair` semantics)
+    // an A and a B transfer issued back to back over the *put* path —
+    // the skew exchanges, which `Transport::OneSidedGet` also routes
+    // through puts (its pull semantics cover only the per-tick ring
+    // shifts): blocking two-sided serializes the halves; one-sided
+    // overlaps them on the wire and pays one epoch-sync α (the
+    // `cannon::shift_pair` / `rma_exchange` semantics)
     let pair = |ba: f64, bb: f64| -> f64 {
         let (ta, tb) = (hop(ba), hop(bb));
         if ta == 0.0 && tb == 0.0 {
@@ -377,12 +395,28 @@ pub fn predict_grid(input: &PlanInput, rows: usize, cols: usize, layers: usize) 
         }
         match input.transport {
             Transport::TwoSided => ta + tb,
+            Transport::OneSided | Transport::OneSidedGet => ta.max(tb) + net.latency,
+        }
+    };
+    // the per-tick ring shift is where the three transports diverge:
+    // the get path serializes its two pulls (B's get issues only after
+    // A's completes in the synchronous driver) but pays no α at all —
+    // `RmaWindow::get_begin` models pure transit against an
+    // already-exposed epoch (the MPI_Rget mode of arXiv:1705.10218)
+    let shift_pair = |ba: f64, bb: f64| -> f64 {
+        let (ta, tb) = (hop(ba), hop(bb));
+        if ta == 0.0 && tb == 0.0 {
+            return 0.0;
+        }
+        match input.transport {
+            Transport::TwoSided => ta + tb,
             Transport::OneSided => ta.max(tb) + net.latency,
+            Transport::OneSidedGet => ta + tb,
         }
     };
     let sync = match input.transport {
         Transport::TwoSided => 0.0,
-        Transport::OneSided => net.latency,
+        Transport::OneSided | Transport::OneSidedGet => net.latency,
     };
 
     // skew: on average 1 − 1/cols of the A share relocates along the grid
@@ -410,36 +444,13 @@ pub fn predict_grid(input: &PlanInput, rows: usize, cols: usize, layers: usize) 
         skew_once
     };
 
-    // shifts: every remaining tick moves the whole held panel set —
-    // paid by each of the horizon's multiplies
-    let shift_a = if cols > 1 { bytes_a } else { 0.0 };
-    let shift_b = if rows > 1 { bytes_b } else { 0.0 };
-    let shift_rounds = nticks - 1;
-    let shift_s = h as f64 * shift_rounds as f64 * pair(shift_a, shift_b);
-
-    // cross-layer C reduce: all sends issue from one end-of-sweep clock,
-    // so the root-side chain is one hop (+ epoch sync under RMA); paid
-    // per multiply
-    let reduce_s = if layers > 1 {
-        h as f64 * (hop(bytes_c) + sync)
-    } else {
-        0.0
-    };
-
-    // layer replication: A and B broadcast back to back from layer 0's
-    // clock — receivers wait for the larger arrival (one window close
-    // per matrix under RMA)
-    let repl_s = if layers > 1 && input.charge_replication {
-        hop(bytes_a).max(hop(bytes_b)) + 2.0 * sync
-    } else {
-        0.0
-    };
-
-    // engine estimate: per slot-tick densified GEMM on 1/L-sized panels,
-    // overlapped with PCIe staging (double-buffered), plus the host-side
-    // Generation pass over the panel's block triples (how the block size
-    // enters the model: smaller blocks → more triples to enumerate) and
-    // the final C undensify memcpy split across threads
+    // engine estimate (priced before the shift chain so the overlap
+    // discount can weigh per-round compute against per-round transfer):
+    // per slot-tick densified GEMM on 1/L-sized panels, overlapped with
+    // PCIe staging (double-buffered), plus the host-side Generation
+    // pass over the panel's block triples (how the block size enters
+    // the model: smaller blocks → more triples to enumerate) and the
+    // final C undensify memcpy split across threads
     let pm = (input.m / l).max(1);
     let pn = (input.n / l).max(1);
     let pk = (input.k / l).max(1);
@@ -462,6 +473,44 @@ pub fn predict_grid(input: &PlanInput, rows: usize, cols: usize, layers: usize) 
     let compute_s = h as f64
         * (slot_ticks as f64 * per_tick
             + input.perf.memcpy_seconds(bytes_c.round() as u64) / input.threads.max(1) as f64);
+    // compute one sweep tick spans: every (row-slot × col-slot) pair of
+    // the tick's panel runs before the next shift round is consumed
+    let tick_compute = ((l / rows) * (l / cols)) as f64 * per_tick;
+
+    // shifts: every remaining tick moves the whole held panel set —
+    // paid by each of the horizon's multiplies. Double-buffered mode
+    // prefetches round t + 1 while round t computes, so each round
+    // charges `max(0, transfer − compute)` — the unhidden remainder the
+    // drivers book as `comm_wait_s` (the hidden part lands in
+    // `overlap_hidden_s`, which the planner does not price)
+    let shift_a = if cols > 1 { bytes_a } else { 0.0 };
+    let shift_b = if rows > 1 { bytes_b } else { 0.0 };
+    let shift_rounds = nticks - 1;
+    let round_cost = shift_pair(shift_a, shift_b);
+    let round_cost = if input.overlap {
+        (round_cost - tick_compute).max(0.0)
+    } else {
+        round_cost
+    };
+    let shift_s = h as f64 * shift_rounds as f64 * round_cost;
+
+    // cross-layer C reduce: all sends issue from one end-of-sweep clock,
+    // so the root-side chain is one hop (+ epoch sync under RMA); paid
+    // per multiply
+    let reduce_s = if layers > 1 {
+        h as f64 * (hop(bytes_c) + sync)
+    } else {
+        0.0
+    };
+
+    // layer replication: A and B broadcast back to back from layer 0's
+    // clock — receivers wait for the larger arrival (one window close
+    // per matrix under RMA)
+    let repl_s = if layers > 1 && input.charge_replication {
+        hop(bytes_a).max(hop(bytes_b)) + 2.0 * sync
+    } else {
+        0.0
+    };
 
     // mean per-rank wire bytes (reduce: c−1 of c layers send their share;
     // replication: layer 0 sends c−1 copies, averaged over all layers)
@@ -617,6 +666,7 @@ mod tests {
             threads: 3,
             charge_replication: true,
             horizon: 1,
+            overlap: false,
             occ_a: 1.0,
             occ_b: 1.0,
             failure_rate: 0.0,
@@ -920,6 +970,81 @@ mod tests {
             "nonzero failure rate must shift Auto toward layers: {plan:?}"
         );
         assert!(plan.render().contains("recover"));
+    }
+
+    #[test]
+    fn get_transport_prices_shifts_as_pure_transit() {
+        // the get path serializes its pulls (t_A + t_B, like two-sided)
+        // but pays no α — and everything outside the ring shifts (skew,
+        // reduce, replication) rides the put path, pricing exactly like
+        // one-sided. Bytes are transport-invariant.
+        let two = input(16, 1408, 1408, 1408, Transport::TwoSided);
+        let one = input(16, 1408, 1408, 1408, Transport::OneSided);
+        let get = input(16, 1408, 1408, 1408, Transport::OneSidedGet);
+        for c in [1usize, 2, 4] {
+            let (rows, cols) = grid_shape(16 / c);
+            let t = predict_grid(&two, rows, cols, c).cost;
+            let o = predict_grid(&one, rows, cols, c).cost;
+            let g = predict_grid(&get, rows, cols, c).cost;
+            assert_eq!(g.shift_s, t.shift_s, "c={c}: serialized transit, no α");
+            if c < 4 {
+                assert!(g.shift_s > o.shift_s, "c={c}: pulls don't overlap on the wire");
+            }
+            assert_eq!(g.skew_s, o.skew_s, "c={c}: skew rides the put path");
+            assert_eq!(g.reduce_s, o.reduce_s, "c={c}: reduce rides the put path");
+            assert_eq!(g.repl_s, o.repl_s, "c={c}");
+            assert_eq!(g.comm_bytes_per_rank, t.comm_bytes_per_rank, "c={c}");
+            assert_eq!(g.comm_bytes_per_rank, o.comm_bytes_per_rank, "c={c}");
+        }
+    }
+
+    #[test]
+    fn overlap_discounts_shift_up_to_tick_compute() {
+        let off = input(16, 1408, 1408, 1408, Transport::TwoSided);
+        let mut on = off.clone();
+        on.overlap = true;
+        for c in [1usize, 2, 4] {
+            let (rows, cols) = grid_shape(16 / c);
+            let o = predict_grid(&off, rows, cols, c).cost;
+            let v = predict_grid(&on, rows, cols, c).cost;
+            // only the shift chain is discounted; the data still moves
+            assert!(v.shift_s <= o.shift_s, "c={c}");
+            assert!(v.total_s <= o.total_s, "c={c}");
+            assert_eq!(v.comm_bytes_per_rank, o.comm_bytes_per_rank, "c={c}");
+            assert_eq!(v.compute_s, o.compute_s, "c={c}");
+            assert_eq!(v.skew_s, o.skew_s, "c={c}");
+            assert_eq!(v.reduce_s, o.reduce_s, "c={c}");
+            assert_eq!(v.repl_s, o.repl_s, "c={c}");
+        }
+        // a compute-bound problem hides the whole chain → the overlap
+        // benefit shrinks with c (shorter chains have less to hide),
+        // which is what lets Auto lean toward smaller c under overlap
+        let mut heavy = on.clone();
+        heavy.perf.entry_gen_cost *= 1e4;
+        let cand = predict_grid(&heavy, 4, 4, 1).cost;
+        assert_eq!(cand.shift_s, 0.0, "compute-bound chain fully hidden: {cand:?}");
+        let gain = |c: usize| {
+            let (rows, cols) = grid_shape(16 / c);
+            let mut sync = heavy.clone();
+            sync.overlap = false;
+            predict_grid(&sync, rows, cols, c).cost.total_s
+                - predict_grid(&heavy, rows, cols, c).cost.total_s
+        };
+        assert!(gain(1) > gain(4), "longer chains gain more from overlap");
+        // a transfer-bound problem keeps a strictly positive remainder
+        let mut thin = on.clone();
+        thin.net = NetModel {
+            bw: thin.net.bw / 1e3,
+            ..thin.net
+        };
+        let mut thin_sync = thin.clone();
+        thin_sync.overlap = false;
+        let v = predict_grid(&thin, 4, 4, 1).cost;
+        let s = predict_grid(&thin_sync, 4, 4, 1).cost;
+        assert!(
+            v.shift_s > 0.0 && v.shift_s < s.shift_s,
+            "unhidden remainder only: {v:?} vs {s:?}"
+        );
     }
 
     #[test]

@@ -48,7 +48,9 @@ use crate::dist::tags::{TAG_RECOVER_FENCE, WIN_RECOVER_A, WIN_RECOVER_B};
 use crate::dist::{CommView, Grid2D, Grid3D, Payload, RmaWindow, Transport};
 use crate::matrix::{DistMatrix, LocalCsr, Mode};
 
-use super::cannon::{build_c_slots, extract_panel, rma_shift_put, Key};
+use super::cannon::{
+    build_c_slots, extract_panel, rma_shift_put, route_exchange, Key, ShiftRing,
+};
 use super::engine::LocalEngine;
 use super::sparse_exchange::{
     accumulate_pattern, decode_framed_share, encode_framed_share, pack_panels, unpack_panels,
@@ -130,7 +132,10 @@ pub(super) struct RecoveryCtx<'m> {
     world: CommView,
     a: &'m DistMatrix,
     b: &'m DistMatrix,
-    vg: &'m VGrid,
+    /// Owned copy (cheap: five usizes) so a sweep's context can outlive
+    /// the driver frame that built the virtual grid — the session's
+    /// pipelined path holds `SweepState` across calls.
+    vg: VGrid,
     rows: usize,
     cols: usize,
     layers: usize,
@@ -160,7 +165,7 @@ impl<'m> RecoveryCtx<'m> {
         g3: &Grid3D,
         a: &'m DistMatrix,
         b: &'m DistMatrix,
-        vg: &'m VGrid,
+        vg: &VGrid,
         a_native: bool,
         b_native: bool,
         plan: &RecoveryPlan,
@@ -173,7 +178,7 @@ impl<'m> RecoveryCtx<'m> {
             world: g3.world.clone(),
             a,
             b,
-            vg,
+            vg: vg.clone(),
             rows: g3.rows,
             cols: g3.cols,
             layers: g3.layers,
@@ -234,7 +239,7 @@ impl<'m> RecoveryCtx<'m> {
             .expect("Unrecoverable: every replica owner of the panel is dead");
         let m = if is_a { self.a } else { self.b };
         if owner == self.me {
-            return extract_panel(m, self.vg, key.0, key.1);
+            return extract_panel(m, &self.vg, key.0, key.1);
         }
         if !self.shares.contains_key(&(is_a, owner)) {
             let t0 = self.world.now();
@@ -258,7 +263,7 @@ impl<'m> RecoveryCtx<'m> {
             };
             self.shares.insert((is_a, owner), dm);
         }
-        extract_panel(&self.shares[&(is_a, owner)], self.vg, key.0, key.1)
+        extract_panel(&self.shares[&(is_a, owner)], &self.vg, key.0, key.1)
     }
 
     /// Tombstone this rank's share exposures (must run *after* the
@@ -340,15 +345,102 @@ where
     out
 }
 
+/// Get-transport half-shift with healing: read the ring neighbor's
+/// exposure for exactly this tick's epoch; if the source died first,
+/// reconstruct from replica shares. Epoch-exact addressing is what
+/// makes this safe — a pre-death exposure of an *older* epoch can
+/// never be misread as this tick's panels, so the only outcomes are
+/// this epoch's payload or a heal.
+fn ft_get_shift<F>(
+    win: &RmaWindow,
+    src: usize,
+    epoch: u64,
+    next_keys: &[Key],
+    meta: F,
+    mode: Mode,
+    ctx: &mut RecoveryCtx,
+    is_a: bool,
+) -> BTreeMap<Key, LocalCsr>
+where
+    F: Fn(&Key) -> PanelMeta,
+{
+    let t0 = ctx.world.now();
+    let mut out = BTreeMap::new();
+    match win.get_begin(src, epoch) {
+        Ok(pending) => {
+            let payload = win.get_complete(pending);
+            unpack_panels(payload, next_keys, &meta, mode, &mut out);
+        }
+        Err(_) => {
+            ctx.seconds += ctx.world.now() - t0;
+            for k in next_keys {
+                out.insert(*k, ctx.fetch(is_a, *k));
+            }
+        }
+    }
+    out
+}
+
+/// Skew exchange with healing: same routing as `cannon::exchange`, but
+/// edges touching dead grid positions are rewritten — a send to a dead
+/// position is dropped (nobody is there to receive it; the canonical
+/// panels it carried are replica-reconstructible by anyone who needs
+/// them), and every panel expected *from* a dead position is healed
+/// out of the recovery windows instead of received. This is what lets
+/// a canonical (re-admitted) operand skew through a degraded world.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn ft_exchange<F>(
+    comm: &CommView,
+    ctx: &mut RecoveryCtx,
+    is_a: bool,
+    mut held: BTreeMap<Key, LocalCsr>,
+    sends: &[(usize, Key)],
+    recvs: &[(usize, Key)],
+    meta: F,
+    tag: u64,
+    mode: Mode,
+) -> BTreeMap<Key, LocalCsr>
+where
+    F: Fn(&Key) -> PanelMeta,
+{
+    let mut out: BTreeMap<Key, LocalCsr> = BTreeMap::new();
+    let (by_dst, by_src) = route_exchange(comm.rank(), &mut held, sends, recvs, &mut out);
+    // sends first (non-blocking), then receives — dead destinations are
+    // dropped outright rather than orphaned: an already-dead rank never
+    // participated in this multiply, so a message at it would be
+    // undeliverable forever, not merely unreceived
+    for (&dst, keys) in &by_dst {
+        if ctx.already_dead.contains(&comm.world_rank(dst)) {
+            for k in keys {
+                held.remove(k);
+            }
+        } else {
+            comm.send(dst, tag, pack_panels(&mut held, keys, mode));
+        }
+    }
+    for (&src, keys) in &by_src {
+        if ctx.already_dead.contains(&comm.world_rank(src)) {
+            for k in keys {
+                let p = ctx.fetch(is_a, *k);
+                out.insert(*k, p);
+            }
+        } else {
+            let payload = comm.recv(src, tag);
+            unpack_panels(payload, keys, &meta, mode, &mut out);
+        }
+    }
+    out
+}
+
 /// Fault-tolerant drop-in for `cannon::shift_pair` on the 2.5D tick
 /// rings: same transports, same ordering (two-sided A completes before
-/// B issues; one-sided puts both before closing either), but every
-/// receive edge can heal a dead peer.
+/// B issues; one-sided puts both before closing either; get exposes
+/// both before getting either), but every receive edge can heal a
+/// dead peer.
 #[allow(clippy::too_many_arguments)]
 pub(super) fn ft_shift_pair<FA, FB>(
     grid: &Grid2D,
-    transport: Transport,
-    wins: (&mut Option<RmaWindow>, &mut Option<RmaWindow>),
+    ring: &mut ShiftRing,
     ctx: &mut RecoveryCtx,
     a_panels: &mut BTreeMap<Key, LocalCsr>,
     b_panels: &mut BTreeMap<Key, LocalCsr>,
@@ -362,7 +454,9 @@ pub(super) fn ft_shift_pair<FA, FB>(
     FA: Fn(&Key) -> PanelMeta,
     FB: Fn(&Key) -> PanelMeta,
 {
-    match transport {
+    let epoch = ring.tick;
+    ring.tick += 1;
+    match ring.transport {
         Transport::TwoSided => {
             if let Some(next) = next_a {
                 let held = std::mem::take(a_panels);
@@ -396,23 +490,52 @@ pub(super) fn ft_shift_pair<FA, FB>(
             }
         }
         Transport::OneSided => {
-            let win_a = wins.0.as_mut().expect("one-sided shift window");
-            let win_b = wins.1.as_mut().expect("one-sided shift window");
+            let win_a = ring.win_a.as_mut().expect("one-sided shift window");
             if next_a.is_some() {
                 let held = std::mem::take(a_panels);
                 rma_shift_put(win_a, grid.left(), held, mode);
             }
+            let win_b = ring.win_b.as_mut().expect("one-sided shift window");
             if next_b.is_some() {
                 let held = std::mem::take(b_panels);
                 rma_shift_put(win_b, grid.up(), held, mode);
             }
             if let Some(next) = next_a {
+                let win_a = ring.win_a.as_mut().expect("one-sided shift window");
                 *a_panels =
                     ft_rma_shift_close(win_a, grid.right(), next, meta_a, mode, ctx, true);
             }
             if let Some(next) = next_b {
+                let win_b = ring.win_b.as_mut().expect("one-sided shift window");
                 *b_panels =
                     ft_rma_shift_close(win_b, grid.down(), next, meta_b, mode, ctx, false);
+            }
+        }
+        Transport::OneSidedGet => {
+            // expose both before getting either, mirroring the
+            // failure-free driver's wire overlap; the shifted flags arm
+            // the end-of-sweep fence in `ShiftRing::retire_ft`
+            if next_a.is_some() {
+                let mut held = std::mem::take(a_panels);
+                let keys: Vec<Key> = held.keys().copied().collect();
+                let win = ring.win_a.as_mut().expect("get shift window");
+                win.expose_advance(pack_panels(&mut held, &keys, mode));
+                ring.shifted_a = true;
+            }
+            if next_b.is_some() {
+                let mut held = std::mem::take(b_panels);
+                let keys: Vec<Key> = held.keys().copied().collect();
+                let win = ring.win_b.as_mut().expect("get shift window");
+                win.expose_advance(pack_panels(&mut held, &keys, mode));
+                ring.shifted_b = true;
+            }
+            if let Some(next) = next_a {
+                let win = ring.win_a.as_ref().expect("get shift window");
+                *a_panels = ft_get_shift(win, grid.right(), epoch, next, meta_a, mode, ctx, true);
+            }
+            if let Some(next) = next_b {
+                let win = ring.win_b.as_ref().expect("get shift window");
+                *b_panels = ft_get_shift(win, grid.down(), epoch, next, meta_b, mode, ctx, false);
             }
         }
     }

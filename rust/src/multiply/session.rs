@@ -39,9 +39,12 @@ use crate::util::stats::{MultiplyStats, PlanSummary};
 use super::cannon::{exchange, panel_meta, rma_exchange_finish, rma_exchange_start, Key};
 use super::engine::LocalEngine;
 use super::recovery::RecoveryPlan;
+use super::sparse_exchange::{
+    assemble_c_from_layouts, reduce_c_finish, reduce_c_start, CPattern, PendingReduce,
+};
 use super::twofive::{
     a_skew_plan, a_start_keys, b_skew_plan, b_start_keys, layer_ticks, multiply_twofive_ft,
-    replicate_to_layers, sweep_period,
+    replicate_to_layers, sweep_period, twofive_sweep, SweepOutcome, SweepState,
 };
 use super::vgrid::VGrid;
 use super::{planner, MultiplyConfig, MultiplyOutcome};
@@ -166,6 +169,25 @@ pub struct PipelineSession {
     cfg: MultiplyConfig,
     stats: MultiplyStats,
     multiplies: u64,
+    /// A [`Self::multiply_resident_pipelined`] call whose cross-layer C
+    /// reduce is still in flight — drained (overlapped) behind the next
+    /// call's sweep, or at [`Self::flush_pipeline`].
+    pending: Option<PendingCall>,
+}
+
+/// Everything needed to finish a deferred resident multiply once its
+/// C reduce drains: the partial panels the drain merges into, the open
+/// reduce, the C frame layouts (the operand handles may be gone by
+/// then), and the call's stats-so-far.
+struct PendingCall {
+    out_panels: Vec<LocalCsr>,
+    c_pats: Vec<CPattern>,
+    reduce: PendingReduce,
+    c_rows: BlockLayout,
+    c_cols: BlockLayout,
+    mode: Mode,
+    stats: MultiplyStats,
+    sweep_seconds: f64,
 }
 
 impl PipelineSession {
@@ -179,6 +201,7 @@ impl PipelineSession {
             cfg,
             stats: MultiplyStats::default(),
             multiplies: 0,
+            pending: None,
         }
     }
 
@@ -295,6 +318,11 @@ impl PipelineSession {
         a: &ResidentOperand,
         b: &ResidentOperand,
     ) -> Result<MultiplyOutcome, DeviceOom> {
+        assert!(
+            self.pending.is_none(),
+            "a pipelined multiply's reduce is still in flight — call \
+             flush_pipeline() before switching to synchronous resident calls"
+        );
         let am = a
             .a_share
             .as_ref()
@@ -351,8 +379,15 @@ impl PipelineSession {
                 }
             }
         };
-        let (mut c, holds) =
-            multiply_twofive_ft(&self.g3, am, bm, &mut engine, self.cfg.transport, &fault_plan)?;
+        let (mut c, holds) = multiply_twofive_ft(
+            &self.g3,
+            am,
+            bm,
+            &mut engine,
+            self.cfg.transport,
+            self.cfg.overlap,
+            &fault_plan,
+        )?;
         // on-the-fly filtering, after the cross-layer reduce — identical
         // semantics to the one-shot `multiply()` path (the holding layer
         // has the reduced result; other layers' zero shells must not be
@@ -366,7 +401,9 @@ impl PipelineSession {
         let mut stats = engine.stats.clone();
         stats.comm_bytes = comm1.bytes_sent - comm0.bytes_sent;
         stats.comm_msgs = comm1.msgs_sent - comm0.msgs_sent;
-        stats.comm_wait_s = comm1.wait_seconds - comm0.wait_seconds;
+        // monotone counter, but clamp: a negative delta would poison the
+        // session's cumulative sums silently
+        stats.comm_wait_s = (comm1.wait_seconds - comm0.wait_seconds).max(0.0);
         stats.meta_bytes = comm1.meta_bytes - comm0.meta_bytes;
         stats.plan = Some(plan);
         super::book_sparse_stats(&mut stats, am, bm, &c, filtered, holds);
@@ -379,6 +416,181 @@ impl PipelineSession {
             c,
             stats,
             virtual_seconds: world.now() - t0,
+        })
+    }
+
+    /// [`Self::multiply_resident`] with the cross-layer C reduce
+    /// overlapped across calls: each invocation runs its own sweep
+    /// first, *then* drains the previous call's reduce — by which point
+    /// this rank's clock has advanced through a sweep's worth of
+    /// compute, so the contributions (issued before that sweep began)
+    /// are old arrivals and the drain books little or no wait. The
+    /// hidden transfer time is credited to the previous call's
+    /// [`MultiplyStats::overlap_hidden_s`].
+    ///
+    /// Returns the **previous** call's outcome (`None` on the first
+    /// call); [`Self::flush_pipeline`] returns the last one. C is
+    /// bit-identical to the synchronous path — deferral cannot reorder
+    /// the reduce's arrivals (FIFO per source/tag) and the merge order
+    /// is unchanged. Fault injection is not supported here (a deferred
+    /// reduce cannot heal layers that die between calls); under
+    /// `cfg.verify` the quiescence mark moves to the flush, since a
+    /// pipelined call is deliberately *not* quiescent.
+    pub fn multiply_resident_pipelined(
+        &mut self,
+        a: &ResidentOperand,
+        b: &ResidentOperand,
+    ) -> Result<Option<MultiplyOutcome>, DeviceOom> {
+        assert!(
+            self.cfg.faults.is_empty(),
+            "pipelined resident multiplies do not support fault injection; \
+             use multiply_resident"
+        );
+        let am = a
+            .a_share
+            .as_ref()
+            .expect("left operand needs an A-side share (admit with Sides::A or Both)");
+        let bm = b
+            .b_share
+            .as_ref()
+            .expect("right operand needs a B-side share (admit with Sides::B or Both)");
+        let world = self.g3.world.clone();
+        let plan = self.resident_plan(am, bm);
+        let mut engine = LocalEngine::new(
+            self.cfg.engine.clone(),
+            am.mode,
+            self.cfg.perf.clone(),
+            self.cfg.runtime.clone(),
+            self.cfg.gpu_share,
+        );
+        let t0 = world.now();
+        let comm0 = world.stats();
+        let state = match twofive_sweep(
+            &self.g3,
+            am,
+            bm,
+            &mut engine,
+            self.cfg.transport,
+            self.cfg.overlap,
+            &RecoveryPlan::default(),
+        )? {
+            SweepOutcome::Live(state) => state,
+            SweepOutcome::Dead(_) => unreachable!("no fault plan, nobody dies"),
+        };
+        // the sweep advanced this rank's clock through its compute; the
+        // previous call's reduce contributions were issued before that
+        // sweep began, so draining them *now* is the overlap. The drain's
+        // span and wait belong to the *previous* call (finish_pending
+        // books them there) — subtract both from this call's window so
+        // nothing is counted twice
+        let drain_t0 = world.now();
+        let drain_w0 = world.stats().wait_seconds;
+        let prev = self.finish_pending();
+        let drain_span = world.now() - drain_t0;
+        let drain_wait = world.stats().wait_seconds - drain_w0;
+        let SweepState {
+            mut out_panels,
+            mut c_pats,
+            ctx,
+        } = state;
+        debug_assert!(ctx.is_none(), "no fault plan arms no recovery");
+        let reduce = reduce_c_start(
+            &self.g3,
+            self.cfg.transport,
+            &mut out_panels,
+            &mut c_pats,
+            am.mode,
+        );
+        let comm1 = world.stats();
+        let mut stats = engine.stats.clone();
+        stats.comm_bytes = comm1.bytes_sent - comm0.bytes_sent;
+        stats.comm_msgs = comm1.msgs_sent - comm0.msgs_sent;
+        stats.comm_wait_s = (comm1.wait_seconds - comm0.wait_seconds - drain_wait).max(0.0);
+        stats.meta_bytes = comm1.meta_bytes - comm0.meta_bytes;
+        stats.plan = Some(plan);
+        self.pending = Some(PendingCall {
+            out_panels,
+            c_pats,
+            reduce,
+            c_rows: am.rows.clone(),
+            c_cols: bm.cols.clone(),
+            mode: am.mode,
+            stats,
+            sweep_seconds: world.now() - t0 - drain_span,
+        });
+        self.multiplies += 1;
+        Ok(prev)
+    }
+
+    /// Drain the in-flight reduce of the last pipelined call and return
+    /// its outcome (`None` if nothing is pending). Collective whenever
+    /// any rank has a pending call. Stamps the deferred quiescence mark
+    /// under `cfg.verify`.
+    pub fn flush_pipeline(&mut self) -> Option<MultiplyOutcome> {
+        let out = self.finish_pending();
+        if out.is_some() && self.cfg.verify {
+            self.g3.world.phase_mark();
+        }
+        out
+    }
+
+    /// Complete a deferred call: drain its reduce (booking unhidden
+    /// wait to the call and the hidden remainder to
+    /// `overlap_hidden_s`), filter, assemble its C, and fold the stats
+    /// into the session totals.
+    fn finish_pending(&mut self) -> Option<MultiplyOutcome> {
+        let PendingCall {
+            mut out_panels,
+            mut c_pats,
+            reduce,
+            c_rows,
+            c_cols,
+            mode,
+            mut stats,
+            sweep_seconds,
+        } = self.pending.take()?;
+        let world = &self.g3.world;
+        let t0 = world.now();
+        let wait0 = world.stats().wait_seconds;
+        let modeled = reduce_c_finish(
+            &self.g3.layer_comm,
+            reduce,
+            &mut out_panels,
+            &mut c_pats,
+            mode,
+        );
+        let wait_delta = (world.stats().wait_seconds - wait0).max(0.0);
+        stats.comm_wait_s += wait_delta;
+        stats.overlap_hidden_s += (modeled - wait_delta).max(0.0);
+        let holds = self.g3.layer == 0;
+        let mut c = assemble_c_from_layouts(
+            &c_rows,
+            &c_cols,
+            (self.g3.rows, self.g3.cols),
+            self.g3.grid.coords(),
+            mode,
+            &out_panels,
+            &c_pats,
+            holds,
+        );
+        let filtered = if holds {
+            c.filter_blocks(self.cfg.filter_eps)
+        } else {
+            0
+        };
+        stats.filtered_blocks += filtered;
+        // operand occupancies were not stashed (the handles may be
+        // gone); book the result side, which is what filtering reports
+        if holds {
+            stats.c_nnz_blocks += c.local.nnz() as u64;
+            stats.c_total_blocks += (c.local.nrows() * c.local.ncols()) as u64;
+        }
+        let virtual_seconds = sweep_seconds + (world.now() - t0);
+        self.stats.merge(&stats);
+        Some(MultiplyOutcome {
+            c,
+            stats,
+            virtual_seconds,
         })
     }
 
@@ -399,6 +611,7 @@ impl PipelineSession {
             threads: self.cfg.engine.threads.max(1),
             charge_replication: false,
             horizon: 1,
+            overlap: self.cfg.overlap,
             occ_a: am.local_occupancy(),
             occ_b: bm.local_occupancy(),
             failure_rate: 0.0,
@@ -490,7 +703,9 @@ impl PipelineSession {
                 });
                 (ap, bp)
             }
-            Transport::OneSided => {
+            // the get transport's pull semantics cover only the per-tick
+            // ring shifts; the pre-skew reuses the put path
+            Transport::OneSided | Transport::OneSidedGet => {
                 let ex_a = a_route.map(|(m, held, sends, recvs)| {
                     (
                         m,

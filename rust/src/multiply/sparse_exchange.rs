@@ -42,7 +42,7 @@
 use std::collections::{BTreeMap, BTreeSet};
 
 use crate::backend::gpu_sim::DeviceOom;
-use crate::dist::{Grid3D, Payload, RmaWindow, Transport};
+use crate::dist::{CommView, Grid3D, Payload, RmaWindow, Transport};
 use crate::matrix::{BlockLayout, DistMatrix, Distribution, LocalCsr, Mode};
 
 /// Panel key: (virtual row, group) for A; (group, virtual col) for B.
@@ -97,6 +97,26 @@ pub fn pack_panels(held: &mut BTreeMap<Key, LocalCsr>, keys: &[Key], mode: Mode)
     for k in keys {
         let p = held.remove(k).expect("held panel");
         pack_one(&p, &mut index, &mut data, &mut elems, mode);
+    }
+    match mode {
+        Mode::Real => Payload::Blocks { index, data },
+        Mode::Model => Payload::SparseBlocks { index, elems },
+    }
+}
+
+/// Non-consuming [`pack_panels`]: serialize the panels of `keys`
+/// without removing them from `held`. The double-buffered shift path
+/// needs this — tick `t+1`'s transfer is issued *before* tick `t`'s
+/// compute, which still reads the current panels. Wire bytes are
+/// identical to the consuming pack, so overlap cannot change traffic
+/// accounting or numerics.
+pub fn pack_panels_copy(held: &BTreeMap<Key, LocalCsr>, keys: &[Key], mode: Mode) -> Payload {
+    let mut index: Vec<i64> = Vec::new();
+    let mut data: Vec<f32> = Vec::new();
+    let mut elems: u64 = 0;
+    for k in keys {
+        let p = held.get(k).expect("held panel");
+        pack_one(p, &mut index, &mut data, &mut elems, mode);
     }
     match mode {
         Mode::Real => Payload::Blocks { index, data },
@@ -460,34 +480,123 @@ pub fn reduce_c_layers(
     pats: &mut [CPattern],
     mode: Mode,
 ) {
+    let pending = reduce_c_start(g3, transport, out_panels, pats, mode);
+    let _ = reduce_c_finish(&g3.layer_comm, pending, out_panels, pats, mode);
+}
+
+/// The issue half of a split [`reduce_c_layers`]: what a rank still has
+/// to drain once the contributions it owes are on the wire. Produced
+/// by [`reduce_c_start`], consumed by [`reduce_c_finish`]; the resident
+/// pipeline holds one of these across the *next* multiply's first
+/// ticks so the drain overlaps fresh compute.
+pub enum PendingReduce {
+    /// Root of a two-sided reduce: contributions from these layers are
+    /// in flight on [`TAG_REDUCE_C`].
+    TwoSided {
+        /// Contributing layers, ascending.
+        sources: Vec<usize>,
+    },
+    /// Root of a one-sided reduce: the window stays open (puts land in
+    /// it asynchronously) until the deferred `close_epoch`.
+    OneSided {
+        /// The open reduce window.
+        win: RmaWindow,
+        /// Contributing layers, ascending.
+        sources: Vec<usize>,
+    },
+    /// Non-root layer: its contribution is already sent/put; nothing
+    /// to drain.
+    NonRoot,
+    /// Single-layer topology: no reduce at all.
+    Single,
+}
+
+/// Issue this rank's side of the C layer-reduce without draining it:
+/// non-root layers send/put their encoded partial to layer 0, the root
+/// merely notes what it is owed. Completion — the only part that can
+/// block — is deferred to [`reduce_c_finish`].
+pub fn reduce_c_start(
+    g3: &Grid3D,
+    transport: Transport,
+    out_panels: &mut [LocalCsr],
+    pats: &mut [CPattern],
+    mode: Mode,
+) -> PendingReduce {
     if g3.layers == 1 {
-        return;
+        return PendingReduce::Single;
     }
-    let incoming: Vec<Payload> = match transport {
+    match transport {
         Transport::TwoSided => {
             if g3.layer == 0 {
-                (1..g3.layers)
-                    .map(|l| g3.layer_comm.recv(l, TAG_REDUCE_C))
-                    .collect()
+                PendingReduce::TwoSided {
+                    sources: (1..g3.layers).collect(),
+                }
             } else {
                 let payload = encode_c(out_panels, pats, mode);
                 g3.layer_comm.send(0, TAG_REDUCE_C, payload);
-                Vec::new()
+                PendingReduce::NonRoot
             }
         }
-        Transport::OneSided => {
+        // the get transport's get semantics cover only the per-tick
+        // ring shifts; the reduce reuses the put path, keeping the
+        // root-first ascending merge order (and therefore C) identical
+        Transport::OneSided | Transport::OneSidedGet => {
             let mut win = RmaWindow::new(&g3.layer_comm, WIN_REDUCE_C);
             if g3.layer == 0 {
-                let sources: Vec<usize> = (1..g3.layers).collect();
-                win.close_epoch(&sources)
+                PendingReduce::OneSided {
+                    win,
+                    sources: (1..g3.layers).collect(),
+                }
             } else {
                 win.put(0, encode_c(out_panels, pats, mode));
-                Vec::new()
+                PendingReduce::NonRoot
             }
         }
-    };
-    for payload in incoming {
-        merge_c(out_panels, pats, payload, mode);
+    }
+}
+
+/// Drain a [`reduce_c_start`]ed reduce: receive/close every owed
+/// contribution and merge in ascending layer order (the failure-free
+/// summation order — C stays bit-identical however late the drain
+/// runs, because FIFO per (source, tag) means deferral cannot reorder
+/// arrivals). Returns the *modeled synchronous* drain cost — what the
+/// transfers would charge back-to-back — which the resident pipeline
+/// compares against the wait it actually booked to credit
+/// `MultiplyStats::overlap_hidden_s`.
+pub fn reduce_c_finish(
+    comm: &CommView,
+    pending: PendingReduce,
+    out_panels: &mut [LocalCsr],
+    pats: &mut [CPattern],
+    mode: Mode,
+) -> f64 {
+    let net = comm.net();
+    match pending {
+        PendingReduce::Single | PendingReduce::NonRoot => 0.0,
+        PendingReduce::TwoSided { sources } => {
+            let mut modeled = 0.0;
+            for l in sources {
+                let payload = comm.recv(l, TAG_REDUCE_C);
+                modeled += net.latency + net.transit_seconds(payload.wire_bytes());
+                merge_c(out_panels, pats, payload, mode);
+            }
+            modeled
+        }
+        PendingReduce::OneSided { mut win, sources } => {
+            let payloads = win.close_epoch(&sources);
+            let mut slowest = 0.0f64;
+            for payload in payloads {
+                slowest = slowest.max(net.transit_seconds(payload.wire_bytes()));
+                merge_c(out_panels, pats, payload, mode);
+            }
+            if sources.is_empty() {
+                0.0
+            } else {
+                // puts overlap on the wire: one latency plus the
+                // slowest transit, as in the shift-pair model
+                net.latency + slowest
+            }
+        }
     }
 }
 
@@ -532,7 +641,7 @@ where
         let payload = encode_c(out_panels, pats, mode);
         match transport {
             Transport::TwoSided => g3.layer_comm.send(root, TAG_REDUCE_C, payload),
-            Transport::OneSided => {
+            Transport::OneSided | Transport::OneSidedGet => {
                 let mut win = RmaWindow::new(&g3.layer_comm, WIN_REDUCE_C);
                 win.put(root, payload);
             }
@@ -546,7 +655,7 @@ where
             .iter()
             .map(|&l| (l, g3.layer_comm.recv(l, TAG_REDUCE_C)))
             .collect(),
-        Transport::OneSided => {
+        Transport::OneSided | Transport::OneSidedGet => {
             let mut win = RmaWindow::new(&g3.layer_comm, WIN_REDUCE_C);
             let payloads = win.close_epoch(&alive_nonroot);
             alive_nonroot.iter().copied().zip(payloads).collect()
@@ -596,12 +705,31 @@ pub fn assemble_c_sparse(
     pats: &[CPattern],
     copy_data: bool,
 ) -> DistMatrix {
+    assemble_c_from_layouts(&a.rows, &b.cols, grid_dims, coords, mode, out_panels, pats, copy_data)
+}
+
+/// [`assemble_c_sparse`] from the two layouts that actually determine
+/// C's frame (A's row layout × B's column layout). The session's
+/// pipelined path assembles a deferred call's C after the operand
+/// handles may have been dropped, so it stashes these layouts instead
+/// of the matrices.
+#[allow(clippy::too_many_arguments)]
+pub fn assemble_c_from_layouts(
+    c_rows: &BlockLayout,
+    c_cols: &BlockLayout,
+    grid_dims: (usize, usize),
+    coords: (usize, usize),
+    mode: Mode,
+    out_panels: &[LocalCsr],
+    pats: &[CPattern],
+    copy_data: bool,
+) -> DistMatrix {
     let row_dist = Distribution::cyclic(grid_dims.0);
     let col_dist = Distribution::cyclic(grid_dims.1);
-    let row_ids = row_dist.owned_blocks(coords.0, a.rows.nblocks);
-    let col_ids = col_dist.owned_blocks(coords.1, b.cols.nblocks);
-    let row_sizes: Vec<usize> = row_ids.iter().map(|&i| a.rows.block_size(i)).collect();
-    let col_sizes: Vec<usize> = col_ids.iter().map(|&j| b.cols.block_size(j)).collect();
+    let row_ids = row_dist.owned_blocks(coords.0, c_rows.nblocks);
+    let col_ids = col_dist.owned_blocks(coords.1, c_cols.nblocks);
+    let row_sizes: Vec<usize> = row_ids.iter().map(|&i| c_rows.block_size(i)).collect();
+    let col_sizes: Vec<usize> = col_ids.iter().map(|&j| c_cols.block_size(j)).collect();
 
     // union pattern in share-local coordinates (distinct slots cover
     // disjoint block classes, so collisions cannot occur; sort + dedup
@@ -649,8 +777,8 @@ pub fn assemble_c_sparse(
         }
     }
     DistMatrix {
-        rows: a.rows.clone(),
-        cols: b.cols.clone(),
+        rows: c_rows.clone(),
+        cols: c_cols.clone(),
         row_dist,
         col_dist,
         coords,

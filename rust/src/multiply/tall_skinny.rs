@@ -57,7 +57,9 @@ fn allreduce_c(world: &CommView, payload: Payload, transport: Transport) -> Payl
     }
     match transport {
         Transport::TwoSided => world.allreduce_sum_f32(payload),
-        Transport::OneSided => {
+        // the get transport's pull semantics cover only the Cannon/2.5D
+        // ring shifts; the tall-skinny reduce keeps the put protocol
+        Transport::OneSided | Transport::OneSidedGet => {
             let mut win = RmaWindow::new(world, WIN_TS_REDUCE);
             if world.rank() == 0 {
                 // gather epoch: one close drains every peer's share

@@ -38,10 +38,12 @@ use crate::util::even_chunk;
 
 use super::cannon::{
     build_c_slots, exchange, extract_panel, panel_meta, rma_exchange_finish, rma_exchange_start,
-    shift_pair, Key,
+    shift_finish, shift_pair, shift_start, Key, ShiftRing,
 };
 use super::engine::LocalEngine;
-use super::recovery::{ft_shift_pair, recompute_layer, survivor_fence, RecoveryCtx, RecoveryPlan};
+use super::recovery::{
+    ft_exchange, ft_shift_pair, recompute_layer, survivor_fence, RecoveryCtx, RecoveryPlan,
+};
 use super::sparse_exchange::{
     accumulate_pattern, assemble_c_sparse, decode_share_into, encode_share, reduce_c_layers,
     reduce_c_layers_ft, CPattern,
@@ -53,6 +55,7 @@ use super::vgrid::{lcm, VGrid};
 use crate::dist::tags::{
     TAG_TWOFIVE_SHIFT_A as TAG_SHIFT_A, TAG_TWOFIVE_SHIFT_B as TAG_SHIFT_B,
     TAG_TWOFIVE_SKEW_A as TAG_SKEW_A, TAG_TWOFIVE_SKEW_B as TAG_SKEW_B, WIN_REPL,
+    WIN_TWOFIVE_GETSHIFT_A as WIN_GETSHIFT_A, WIN_TWOFIVE_GETSHIFT_B as WIN_GETSHIFT_B,
     WIN_TWOFIVE_SHIFT_A as WIN_SHIFT_A, WIN_TWOFIVE_SHIFT_B as WIN_SHIFT_B,
     WIN_TWOFIVE_SKEW_A as WIN_SKEW_A, WIN_TWOFIVE_SKEW_B as WIN_SKEW_B,
 };
@@ -144,8 +147,10 @@ pub fn multiply_twofive(
     b: &DistMatrix,
     engine: &mut LocalEngine,
     transport: Transport,
+    overlap: bool,
 ) -> Result<DistMatrix, DeviceOom> {
-    multiply_twofive_ft(g3, a, b, engine, transport, &RecoveryPlan::default()).map(|(c, _)| c)
+    multiply_twofive_ft(g3, a, b, engine, transport, overlap, &RecoveryPlan::default())
+        .map(|(c, _)| c)
 }
 
 /// Fault-tolerant entry point: [`multiply_twofive`] with a fault plan.
@@ -164,8 +169,45 @@ pub fn multiply_twofive_ft(
     b: &DistMatrix,
     engine: &mut LocalEngine,
     transport: Transport,
+    overlap: bool,
     plan: &RecoveryPlan,
 ) -> Result<(DistMatrix, bool), DeviceOom> {
+    match twofive_sweep(g3, a, b, engine, transport, overlap, plan)? {
+        SweepOutcome::Dead(shell) => Ok((shell, false)),
+        SweepOutcome::Live(state) => twofive_finish(g3, a, b, engine, transport, plan, state),
+    }
+}
+
+/// What [`twofive_sweep`] hands to [`twofive_finish`]: the engine's
+/// finalized partial-C panels, their symbolic patterns, and the armed
+/// recovery context (faulted multiplies only). A pipelining caller
+/// ([`super::session::PipelineSession`]) holds this across the next
+/// multiply's ticks to overlap the layer-reduce with them.
+pub(super) struct SweepState<'m> {
+    pub(super) out_panels: Vec<LocalCsr>,
+    pub(super) c_pats: Vec<CPattern>,
+    pub(super) ctx: Option<RecoveryCtx<'m>>,
+}
+
+/// A finished sweep, or the zero-share shell of a rank that died (by
+/// injection) during it.
+pub(super) enum SweepOutcome<'m> {
+    Dead(DistMatrix),
+    Live(SweepState<'m>),
+}
+
+/// The sweep half of the 2.5D driver: operand acquisition (skew),
+/// the shortened tick loop, and engine finalization — everything up to
+/// but not including the cross-layer C reduce.
+pub(super) fn twofive_sweep<'m>(
+    g3: &Grid3D,
+    a: &'m DistMatrix,
+    b: &'m DistMatrix,
+    engine: &mut LocalEngine,
+    transport: Transport,
+    overlap: bool,
+    plan: &RecoveryPlan,
+) -> Result<SweepOutcome<'m>, DeviceOom> {
     assert_eq!(
         a.cols.nblocks, b.rows.nblocks,
         "inner block dimensions must match"
@@ -186,7 +228,7 @@ pub fn multiply_twofive_ft(
     // the survivors (who run the same plan) route around it
     if ft && (plan.already_dead.contains(&me_world) || g3.world.killed()) {
         let shell = assemble_c_sparse(a, b, (grid.rows, grid.cols), (r, c), mode, &[], &[], false);
-        return Ok((shell, false));
+        return Ok(SweepOutcome::Dead(shell));
     }
     // the head-of-tick index at which this rank dies (clamped so
     // "past the sweep" means after the last tick, before the reduce)
@@ -236,14 +278,16 @@ pub fn multiply_twofive_ft(
             check_layer_replicas(g3, b, "B");
         }
     }
-    // a canonical skew exchange is pairwise and cannot route around a
-    // rank that was dead before the multiply began; ranks dying *this*
-    // multiply are still alive here, so one-shot injection is fine
-    assert!(
-        plan.already_dead.is_empty() || (a_native && b_native),
-        "resident recovery requires native-layout operands \
-         (the canonical skew cannot route around dead ranks)"
-    );
+    // ---- recovery data plane (faulted multiplies only) --------------------
+    // every participant exposes its A/B shares before the sweep, so a
+    // rank dying at any tick has already published its replica data.
+    // Armed *before* the skew: a canonical-layout admit into a degraded
+    // world (ranks tombstoned by an earlier multiply) heals its skew
+    // edges from these replicas. Failure-free multiplies skip all of
+    // this (zero extra traffic).
+    let mut ctx: Option<RecoveryCtx> =
+        ft.then(|| RecoveryCtx::new(g3, a, b, &vg, a_native, b_native, plan));
+
     // exchange plans for canonical operands (held panels + routing),
     // built by the same helpers the resident-session pre-skew uses
     let a_plan: Option<SkewPlan> = (!a_native).then(|| a_skew_plan(a, &vg, s0, &a_keys));
@@ -260,76 +304,119 @@ pub fn multiply_twofive_ft(
             .map(|&(x, y)| ((x, y), extract_panel(b, &vg, x, y)))
             .collect::<BTreeMap<Key, LocalCsr>>()
     };
-    let (mut a_panels, mut b_panels) = match transport {
-        Transport::TwoSided => {
-            // blocking: the A skew completes before the B skew is issued
-            let ap = match a_plan {
-                None => extract_a(),
-                Some((held, sends, recvs)) => exchange(
-                    &grid.row,
-                    held,
-                    &sends,
-                    &recvs,
-                    |key| panel_meta(a, &vg, key.0, key.1),
-                    TAG_SKEW_A,
-                    mode,
-                ),
-            };
-            let bp = match b_plan {
-                None => extract_b(),
-                Some((held, sends, recvs)) => exchange(
-                    &grid.col,
-                    held,
-                    &sends,
-                    &recvs,
-                    |key| panel_meta(b, &vg, key.0, key.1),
-                    TAG_SKEW_B,
-                    mode,
-                ),
-            };
-            (ap, bp)
-        }
-        Transport::OneSided => {
-            // both skews' puts issue before either epoch closes
-            let ex_a = a_plan.map(|(held, sends, recvs)| {
-                rma_exchange_start(&grid.row, WIN_SKEW_A, held, &sends, &recvs, mode)
-            });
-            let ex_b = b_plan.map(|(held, sends, recvs)| {
-                rma_exchange_start(&grid.col, WIN_SKEW_B, held, &sends, &recvs, mode)
-            });
-            let ap = match ex_a {
-                None => extract_a(),
-                Some(ex) => rma_exchange_finish(ex, |key| panel_meta(a, &vg, key.0, key.1), mode),
-            };
-            let bp = match ex_b {
-                None => extract_b(),
-                Some(ex) => rma_exchange_finish(ex, |key| panel_meta(b, &vg, key.0, key.1), mode),
-            };
-            (ap, bp)
+    // a pairwise skew exchange cannot address a rank that was dead
+    // before the multiply began: sends to a tombstoned position are
+    // dropped (its panels exist as replicas elsewhere) and panels
+    // expected *from* it are healed out of the recovery windows
+    let degraded = !plan.already_dead.is_empty() && !(a_native && b_native);
+    let (mut a_panels, mut b_panels) = if degraded {
+        let cx = ctx.as_mut().expect("degraded skew requires a fault plan");
+        let ap = match a_plan {
+            None => extract_a(),
+            Some((held, sends, recvs)) => ft_exchange(
+                &grid.row,
+                cx,
+                true,
+                held,
+                &sends,
+                &recvs,
+                |key| panel_meta(a, &vg, key.0, key.1),
+                TAG_SKEW_A,
+                mode,
+            ),
+        };
+        let bp = match b_plan {
+            None => extract_b(),
+            Some((held, sends, recvs)) => ft_exchange(
+                &grid.col,
+                cx,
+                false,
+                held,
+                &sends,
+                &recvs,
+                |key| panel_meta(b, &vg, key.0, key.1),
+                TAG_SKEW_B,
+                mode,
+            ),
+        };
+        (ap, bp)
+    } else {
+        match transport {
+            Transport::TwoSided => {
+                // blocking: the A skew completes before the B skew is issued
+                let ap = match a_plan {
+                    None => extract_a(),
+                    Some((held, sends, recvs)) => exchange(
+                        &grid.row,
+                        held,
+                        &sends,
+                        &recvs,
+                        |key| panel_meta(a, &vg, key.0, key.1),
+                        TAG_SKEW_A,
+                        mode,
+                    ),
+                };
+                let bp = match b_plan {
+                    None => extract_b(),
+                    Some((held, sends, recvs)) => exchange(
+                        &grid.col,
+                        held,
+                        &sends,
+                        &recvs,
+                        |key| panel_meta(b, &vg, key.0, key.1),
+                        TAG_SKEW_B,
+                        mode,
+                    ),
+                };
+                (ap, bp)
+            }
+            // the get transport shares the put skew: get semantics only
+            // pay off on the per-tick ring (see `cannon` module docs)
+            Transport::OneSided | Transport::OneSidedGet => {
+                // both skews' puts issue before either epoch closes
+                let ex_a = a_plan.map(|(held, sends, recvs)| {
+                    rma_exchange_start(&grid.row, WIN_SKEW_A, held, &sends, &recvs, mode)
+                });
+                let ex_b = b_plan.map(|(held, sends, recvs)| {
+                    rma_exchange_start(&grid.col, WIN_SKEW_B, held, &sends, &recvs, mode)
+                });
+                let ap = match ex_a {
+                    None => extract_a(),
+                    Some(ex) => {
+                        rma_exchange_finish(ex, |key| panel_meta(a, &vg, key.0, key.1), mode)
+                    }
+                };
+                let bp = match ex_b {
+                    None => extract_b(),
+                    Some(ex) => {
+                        rma_exchange_finish(ex, |key| panel_meta(b, &vg, key.0, key.1), mode)
+                    }
+                };
+                (ap, bp)
+            }
         }
     };
-
-    // ---- recovery data plane (faulted multiplies only) --------------------
-    // every participant exposes its A/B shares before the sweep, so a
-    // rank dying at any tick has already published its replica data;
-    // failure-free multiplies skip all of this (zero extra traffic)
-    let mut ctx: Option<RecoveryCtx> =
-        ft.then(|| RecoveryCtx::new(g3, a, b, &vg, a_native, b_native, plan));
 
     // ---- C slots ----------------------------------------------------------
     engine.begin(&grid.world, build_c_slots(&vg, &slots, a, b))?;
 
-    // per-tick shift windows (one epoch per tick) — one-sided only
-    let (mut win_a, mut win_b) = match transport {
-        Transport::OneSided => (
-            Some(RmaWindow::new(&grid.world, WIN_SHIFT_A)),
-            Some(RmaWindow::new(&grid.world, WIN_SHIFT_B)),
-        ),
-        Transport::TwoSided => (None, None),
-    };
+    // per-tick shift state: put windows (one epoch per tick) under
+    // one-sided, long-lived get windows under one-sided-get
+    let mut ring = ShiftRing::new(
+        &grid.world,
+        transport,
+        (WIN_SHIFT_A, WIN_SHIFT_B),
+        (WIN_GETSHIFT_A, WIN_GETSHIFT_B),
+    );
+    // a fault plan forces synchronous shifts: the healing protocol is
+    // defined on tick-aligned ring edges, and a panel whose source died
+    // before publishing must be healed from a replica, never consumed
+    // as a stale prefetch
+    let use_overlap = overlap && !ft;
 
     // ---- the shortened sweep: ticks s0 .. s0 + L/c ------------------------
     let mut c_pats: Vec<CPattern> = vec![CPattern::new(); slots.len()];
+    let mut hidden_s = 0.0f64;
     for t in 0..nticks {
         if my_kill == Some(t) {
             // die at the head of the tick: earlier ticks (and their
@@ -339,9 +426,46 @@ pub fn multiply_twofive_ft(
                 .kill(&format!("injected fault: rank {me_world} killed at slot-tick {t}"));
             let shell =
                 assemble_c_sparse(a, b, (grid.rows, grid.cols), (r, c), mode, &[], &[], false);
-            return Ok((shell, false));
+            return Ok(SweepOutcome::Dead(shell));
         }
         let s = s0 + t;
+        let (next_a, next_b): (Option<Vec<Key>>, Option<Vec<Key>>) = if t + 1 < nticks {
+            (
+                (vg.pc > 1).then(|| {
+                    let mut v: Vec<Key> = slots
+                        .iter()
+                        .map(|&(i, j)| (i, vg.group_at(i, j, s + 1)))
+                        .collect();
+                    v.sort_unstable();
+                    v.dedup();
+                    v
+                }),
+                (vg.pr > 1).then(|| {
+                    let mut v: Vec<Key> = slots
+                        .iter()
+                        .map(|&(i, j)| (vg.group_at(i, j, s + 1), j))
+                        .collect();
+                    v.sort_unstable();
+                    v.dedup();
+                    v
+                }),
+            )
+        } else {
+            (None, None)
+        };
+        // double-buffer: issue tick t+1's transfer before tick t computes
+        let inflight = (use_overlap && t + 1 < nticks).then(|| {
+            shift_start(
+                grid,
+                &mut ring,
+                &a_panels,
+                &b_panels,
+                next_a.as_deref(),
+                next_b.as_deref(),
+                (TAG_SHIFT_A, TAG_SHIFT_B),
+                mode,
+            )
+        });
         for (idx, &(i, j)) in slots.iter().enumerate() {
             let g = vg.group_at(i, j, s);
             let ap = &a_panels[&(i, g)];
@@ -350,29 +474,25 @@ pub fn multiply_twofive_ft(
             accumulate_pattern(&mut c_pats[idx], ap, bp);
         }
         if t + 1 < nticks {
-            let next_a: Option<Vec<Key>> = (vg.pc > 1).then(|| {
-                let mut v: Vec<Key> = slots
-                    .iter()
-                    .map(|&(i, j)| (i, vg.group_at(i, j, s + 1)))
-                    .collect();
-                v.sort_unstable();
-                v.dedup();
-                v
-            });
-            let next_b: Option<Vec<Key>> = (vg.pr > 1).then(|| {
-                let mut v: Vec<Key> = slots
-                    .iter()
-                    .map(|&(i, j)| (vg.group_at(i, j, s + 1), j))
-                    .collect();
-                v.sort_unstable();
-                v.dedup();
-                v
-            });
-            if let Some(cx) = ctx.as_mut() {
+            if let Some(pending) = inflight {
+                // credit the tick's host work to the clock before the
+                // completion blocks, so the prefetched transfer charges
+                // max(compute, transfer) instead of their sum
+                engine.join_host(&grid.world);
+                hidden_s += shift_finish(
+                    grid,
+                    &mut ring,
+                    pending,
+                    &mut a_panels,
+                    &mut b_panels,
+                    |key| panel_meta(a, &vg, key.0, key.1),
+                    |key| panel_meta(b, &vg, key.0, key.1),
+                    mode,
+                );
+            } else if let Some(cx) = ctx.as_mut() {
                 ft_shift_pair(
                     grid,
-                    transport,
-                    (&mut win_a, &mut win_b),
+                    &mut ring,
                     cx,
                     &mut a_panels,
                     &mut b_panels,
@@ -386,8 +506,7 @@ pub fn multiply_twofive_ft(
             } else {
                 shift_pair(
                     grid,
-                    transport,
-                    (&mut win_a, &mut win_b),
+                    &mut ring,
                     &mut a_panels,
                     &mut b_panels,
                     next_a.as_deref(),
@@ -400,6 +519,7 @@ pub fn multiply_twofive_ft(
             }
         }
     }
+    engine.stats.overlap_hidden_s += hidden_s;
     if my_kill == Some(nticks) {
         // "past the sweep": the whole partial is computed but dies
         // with the rank before the reduce — the worst case for the
@@ -408,14 +528,50 @@ pub fn multiply_twofive_ft(
             "injected fault: rank {me_world} killed after its sweep, before the reduce"
         ));
         let shell = assemble_c_sparse(a, b, (grid.rows, grid.cols), (r, c), mode, &[], &[], false);
-        return Ok((shell, false));
+        return Ok(SweepOutcome::Dead(shell));
     }
+
+    // the get-shift windows retire behind a ring fence; a rank dying
+    // at `nticks` died above, before fencing, so survivors route their
+    // fence edges around the dead set
+    ring.retire_ft(grid, &plan.all_dead());
+
+    let out_panels = engine.finish(&grid.world);
+    Ok(SweepOutcome::Live(SweepState {
+        out_panels,
+        c_pats,
+        ctx,
+    }))
+}
+
+/// The reduce half of the 2.5D driver: sum-reduce the sweep's partial C
+/// panels across layers, tear down the recovery data plane, and
+/// assemble this rank's share of C.
+pub(super) fn twofive_finish(
+    g3: &Grid3D,
+    a: &DistMatrix,
+    b: &DistMatrix,
+    engine: &mut LocalEngine,
+    transport: Transport,
+    plan: &RecoveryPlan,
+    state: SweepState<'_>,
+) -> Result<(DistMatrix, bool), DeviceOom> {
+    let mode = a.mode;
+    let grid = &g3.grid;
+    let (r, c) = grid.coords();
+    let lv = sweep_period(g3.rows, g3.cols, g3.layers);
+    let vg = VGrid::with_period(g3.rows, g3.cols, lv, r, c);
+    let slots = vg.slots();
+    let SweepState {
+        mut out_panels,
+        mut c_pats,
+        mut ctx,
+    } = state;
 
     // ---- sum-reduce the partial C panels across layers --------------------
     // only blocks present in each layer's symbolic result pattern travel;
     // the root union-merges layer-0-first in ascending layer order on both
     // transports, so the reduced C is bit-identical across transports
-    let mut out_panels = engine.finish(&grid.world);
     let holds_result = match ctx.as_mut() {
         None => {
             reduce_c_layers(g3, transport, &mut out_panels, &mut c_pats, mode);
@@ -697,7 +853,8 @@ pub fn replicate_to_layers(g3: &Grid3D, m: &mut DistMatrix, transport: Transport
     let bytes = payload.as_ref().map(Payload::wire_bytes);
     let inbound = match transport {
         Transport::TwoSided => Some(g3.layer_comm.bcast(0, payload)),
-        Transport::OneSided => {
+        // one-shot replication gains nothing from get semantics
+        Transport::OneSided | Transport::OneSidedGet => {
             let mut win = RmaWindow::new(&g3.layer_comm, WIN_REPL);
             if g3.layer == 0 {
                 let payload = payload.expect("root encodes its share");
@@ -767,7 +924,7 @@ mod tests {
             let g3 = Grid3D::new(world, rows, cols, layers);
             let (a, b) = twofive_operands(&g3, m, n, k, block, Mode::Real, 81, 82);
             let mut eng = engine(threads, densify, Mode::Real);
-            let cm = multiply_twofive(&g3, &a, &b, &mut eng, Transport::TwoSided).unwrap();
+            let cm = multiply_twofive(&g3, &a, &b, &mut eng, Transport::TwoSided, false).unwrap();
             let mut dense = vec![0.0f32; m * n];
             cm.add_into_dense(&mut dense);
             dense
@@ -837,7 +994,7 @@ mod tests {
             let g3 = Grid3D::new(world, rows, cols, layers);
             let (a, b) = twofive_operands(&g3, m, m, m, 4, Mode::Real, 81, 82);
             let mut eng = engine(2, true, Mode::Real);
-            let cm = multiply_twofive(&g3, &a, &b, &mut eng, Transport::OneSided).unwrap();
+            let cm = multiply_twofive(&g3, &a, &b, &mut eng, Transport::OneSided, false).unwrap();
             let mut dense = vec![0.0f32; m * m];
             cm.add_into_dense(&mut dense);
             dense
@@ -867,7 +1024,7 @@ mod tests {
             let a = DistMatrix::dense_cyclic(m, k, block, (rows, cols), coords, Mode::Real, Fill::Random { seed: 81 });
             let b = DistMatrix::dense_cyclic(k, n, block, (rows, cols), coords, Mode::Real, Fill::Random { seed: 82 });
             let mut eng = engine(2, true, Mode::Real);
-            let cm = multiply_twofive(&g3, &a, &b, &mut eng, Transport::TwoSided).unwrap();
+            let cm = multiply_twofive(&g3, &a, &b, &mut eng, Transport::TwoSided, false).unwrap();
             let mut dense = vec![0.0f32; m * n];
             cm.add_into_dense(&mut dense);
             dense
@@ -909,7 +1066,7 @@ mod tests {
             let sent_b = replicate_to_layers(&g3, &mut b, Transport::TwoSided);
             assert!(sent_a > 0 && sent_b > 0);
             let mut eng = engine(1, false, Mode::Real);
-            let cm = multiply_twofive(&g3, &a, &b, &mut eng, Transport::TwoSided).unwrap();
+            let cm = multiply_twofive(&g3, &a, &b, &mut eng, Transport::TwoSided, false).unwrap();
             let mut dense = vec![0.0f32; m * m];
             cm.add_into_dense(&mut dense);
             (dense, world_stats_bytes(&g3))
@@ -945,7 +1102,7 @@ mod tests {
             let (a, b) =
                 twofive_operands_sparse(&g3, dim, dim, dim, block, Mode::Real, 83, 84, occ_a, occ_b);
             let mut eng = engine(2, false, Mode::Real);
-            let cm = multiply_twofive(&g3, &a, &b, &mut eng, Transport::TwoSided).unwrap();
+            let cm = multiply_twofive(&g3, &a, &b, &mut eng, Transport::TwoSided, false).unwrap();
             let mut dense = vec![0.0f32; dim * dim];
             cm.add_into_dense(&mut dense);
             dense
@@ -976,7 +1133,7 @@ mod tests {
                 twofive_operands_sparse(&g3, dim, dim, dim, block, Mode::Model, 5, 6, occ, occ);
             assert!(a.local.store.is_phantom());
             let mut eng = engine(2, false, Mode::Model);
-            let _ = multiply_twofive(&g3, &a, &b, &mut eng, Transport::TwoSided).unwrap();
+            let _ = multiply_twofive(&g3, &a, &b, &mut eng, Transport::TwoSided, false).unwrap();
             (eng.stats.block_mults, g3.world.stats().bytes_sent)
         });
         let nb = (dim / block) as u64;
@@ -1000,7 +1157,7 @@ mod tests {
             let g3 = Grid3D::new(world, rows, cols, layers);
             let (a, b) = twofive_operands(&g3, dim, dim, dim, 4, Mode::Model, 1, 2);
             let mut eng = engine(2, false, Mode::Model);
-            let _ = multiply_twofive(&g3, &a, &b, &mut eng, Transport::TwoSided).unwrap();
+            let _ = multiply_twofive(&g3, &a, &b, &mut eng, Transport::TwoSided, false).unwrap();
             eng.stats.block_mults
         });
         let total: u64 = out.iter().sum();

@@ -145,7 +145,10 @@ pub fn pdgemm(
     let comm1 = world.stats();
     stats.comm_bytes = comm1.bytes_sent - comm0.bytes_sent;
     stats.comm_msgs = comm1.msgs_sent - comm0.msgs_sent;
-    stats.comm_wait_s = comm1.wait_seconds - comm0.wait_seconds;
+    // clamp: wait_seconds is cumulative and monotone per rank, but a
+    // caller that already booked part of this window (e.g. a session
+    // draining a pipelined reduce) must never see a negative delta
+    stats.comm_wait_s = (comm1.wait_seconds - comm0.wait_seconds).max(0.0);
     stats.h2d_bytes = engine.gpu.h2d_bytes;
     stats.d2h_bytes = engine.gpu.d2h_bytes;
     stats.dev_mem_peak = engine.gpu.mem_peak;

@@ -102,6 +102,14 @@ pub struct MultiplyStats {
     /// communication (receives / RMA epoch closes) — the transport
     /// comparison metric of `bench_fig_2p5d`.
     pub comm_wait_s: f64,
+    /// Virtual seconds of transfer time the double-buffered shift /
+    /// deferred-reduce overlap hid behind compute: the modeled
+    /// synchronous cost of the overlapped transfers minus the wait they
+    /// actually booked. `comm_wait_s` keeps only the unhidden
+    /// remainder, so `comm_wait_s + overlap_hidden_s` bounds what the
+    /// same schedule would have waited synchronously. Zero whenever
+    /// `MultiplyConfig::overlap` is off.
+    pub overlap_hidden_s: f64,
     /// Bytes of operand-residency setup (2.5D layer replication +
     /// pre-skew into the native layout) — the `repl_` bucket, charged
     /// once per admitted operand by whoever makes it resident
@@ -173,6 +181,7 @@ impl MultiplyStats {
         self.meta_bytes += o.meta_bytes;
         self.comm_msgs += o.comm_msgs;
         self.comm_wait_s += o.comm_wait_s;
+        self.overlap_hidden_s += o.overlap_hidden_s;
         self.filtered_blocks += o.filtered_blocks;
         self.recovery_bytes += o.recovery_bytes;
         self.recovery_s += o.recovery_s;

@@ -157,6 +157,7 @@ fn fig2_oom_annotation_reproduced() {
             mode: Mode::Model,
             net: NetModel::aries(rpn),
             transport: Transport::TwoSided,
+            overlap: false,
             algo: AlgoSpec::Layout,
             plan_verbose: false,
             occupancy: 1.0,

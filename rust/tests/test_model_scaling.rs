@@ -21,6 +21,7 @@ fn model_point(nodes: usize, rpn: usize, threads: usize, block: usize, sq: bool,
         mode: Mode::Model,
         net: NetModel::aries(rpn),
         transport: Transport::TwoSided,
+        overlap: false,
         algo: AlgoSpec::Layout,
         plan_verbose: false,
         occupancy: 1.0,
@@ -76,6 +77,7 @@ fn dbcsr_beats_pdgemm_and_gap_grows_for_small_blocks() {
             mode: Mode::Model,
             net: NetModel::aries(4),
             transport: Transport::TwoSided,
+            overlap: false,
             algo: AlgoSpec::Layout,
             plan_verbose: false,
             occupancy: 1.0,

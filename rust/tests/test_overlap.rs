@@ -1,0 +1,464 @@
+//! Integration: the async progress engine. Pinned here, on 16 ranks:
+//!
+//! * C is **bit-identical** across {two-sided, one-sided, one-sided-get}
+//!   × overlap {off, on} × {Cannon, 2.5D c ∈ {2, 4}} × {one-shot,
+//!   resident, pipelined-resident} — double-buffering and transport
+//!   selection touch clocks and wire schedules, never numerics;
+//! * on a compute-bound point the overlapped sweep's `comm_wait_s`
+//!   collapses to ≈ 0 (≤ 5% of the synchronous baseline) while the
+//!   synchronous baseline stays strictly positive;
+//! * on a transfer-bound point the overlapped wait stays strictly
+//!   positive (compute cannot cover the transfers) but still undercuts
+//!   the synchronous baseline;
+//! * the hidden-time ledger is conservative: per rank,
+//!   `comm_wait_s + overlap_hidden_s ≤` the synchronous run's
+//!   `comm_wait_s`, and `overlap_hidden_s == 0` whenever overlap is off;
+//! * traced overlapped runs verify clean under every transport.
+
+use dbcsr::bench::harness::{run_spec_verified, AlgoSpec, Engine, RunSpec, Shape};
+use dbcsr::dist::{run_ranks, Grid2D, Grid3D, NetModel, Transport};
+use dbcsr::matrix::matrix::Fill;
+use dbcsr::matrix::{DistMatrix, Mode};
+use dbcsr::multiply::session::PipelineSession;
+use dbcsr::multiply::twofive::replicate_to_layers;
+use dbcsr::multiply::{multiply, Algorithm, EngineOpts, MultiplyConfig};
+use dbcsr::perfmodel::PerfModel;
+use dbcsr::prop_assert;
+use dbcsr::util::prop::check;
+
+const ALL_TRANSPORTS: [Transport; 3] = [
+    Transport::TwoSided,
+    Transport::OneSided,
+    Transport::OneSidedGet,
+];
+
+fn cfg(algorithm: Algorithm, transport: Transport, overlap: bool) -> MultiplyConfig {
+    MultiplyConfig {
+        engine: EngineOpts {
+            threads: 3,
+            densify: true,
+            ..Default::default()
+        },
+        algorithm,
+        transport,
+        overlap,
+        ..Default::default()
+    }
+}
+
+fn bits(dense: Vec<f32>) -> Vec<u32> {
+    dense.into_iter().map(f32::to_bits).collect()
+}
+
+// ---------------------------------------------------------------------
+// Bit-identity: one-shot drivers.
+// ---------------------------------------------------------------------
+
+/// Canonical Cannon on a 4×4 grid, real mode; per-rank C bit patterns.
+fn cannon16_c_bits(transport: Transport, overlap: bool) -> Vec<Vec<u32>> {
+    let (m, block) = (48usize, 4usize);
+    run_ranks(16, NetModel::aries(4), move |world| {
+        let grid = Grid2D::new(world, 4, 4);
+        let coords = grid.coords();
+        let a =
+            DistMatrix::dense_cyclic(m, m, block, (4, 4), coords, Mode::Real, Fill::Random {
+                seed: 31,
+            });
+        let b =
+            DistMatrix::dense_cyclic(m, m, block, (4, 4), coords, Mode::Real, Fill::Random {
+                seed: 32,
+            });
+        let out = multiply(&grid, &a, &b, &cfg(Algorithm::Cannon, transport, overlap)).unwrap();
+        let mut dense = vec![0.0f32; m * m];
+        out.c.add_into_dense(&mut dense);
+        bits(dense)
+    })
+}
+
+/// Canonical 2.5D (replication + skew + sweep + reduce), real mode.
+fn twofive16_c_bits(layers: usize, transport: Transport, overlap: bool) -> Vec<Vec<u32>> {
+    let (rows, cols) = match layers {
+        2 => (2usize, 4usize),
+        4 => (2, 2),
+        _ => panic!("unexpected layer count"),
+    };
+    let (m, block) = (48usize, 4usize);
+    run_ranks(16, NetModel::aries(4), move |world| {
+        let g3 = Grid3D::new(world, rows, cols, layers);
+        let coords = g3.grid.coords();
+        let fill = |seed| {
+            if g3.layer == 0 {
+                Fill::Random { seed }
+            } else {
+                Fill::Zero
+            }
+        };
+        let mut a =
+            DistMatrix::dense_cyclic(m, m, block, (rows, cols), coords, Mode::Real, fill(91));
+        let mut b =
+            DistMatrix::dense_cyclic(m, m, block, (rows, cols), coords, Mode::Real, fill(92));
+        replicate_to_layers(&g3, &mut a, transport);
+        replicate_to_layers(&g3, &mut b, transport);
+        let grid = Grid2D::new(g3.world.clone(), 1, 16);
+        let out = multiply(
+            &grid,
+            &a,
+            &b,
+            &cfg(Algorithm::TwoFiveD { layers }, transport, overlap),
+        )
+        .unwrap();
+        let mut dense = vec![0.0f32; m * m];
+        out.c.add_into_dense(&mut dense);
+        bits(dense)
+    })
+}
+
+#[test]
+fn one_shot_c_bit_identical_across_transports_and_overlap() {
+    let base_cannon = cannon16_c_bits(Transport::TwoSided, false);
+    let base_c2 = twofive16_c_bits(2, Transport::TwoSided, false);
+    let base_c4 = twofive16_c_bits(4, Transport::TwoSided, false);
+    for transport in ALL_TRANSPORTS {
+        for overlap in [false, true] {
+            assert_eq!(
+                base_cannon,
+                cannon16_c_bits(transport, overlap),
+                "cannon {transport} overlap={overlap}"
+            );
+            assert_eq!(
+                base_c2,
+                twofive16_c_bits(2, transport, overlap),
+                "c=2 {transport} overlap={overlap}"
+            );
+            assert_eq!(
+                base_c4,
+                twofive16_c_bits(4, transport, overlap),
+                "c=4 {transport} overlap={overlap}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Bit-identity: resident and pipelined-resident sessions.
+// ---------------------------------------------------------------------
+
+const RESIDENT_CALLS: usize = 3;
+
+/// A c=2 session serving RESIDENT_CALLS multiplies; per-rank, per-call
+/// C bit patterns. `pipelined` routes through
+/// `multiply_resident_pipelined` + `flush_pipeline` (overlapped reduce),
+/// otherwise plain `multiply_resident`.
+fn resident_c_bits(
+    transport: Transport,
+    overlap: bool,
+    pipelined: bool,
+) -> Vec<Vec<Vec<u32>>> {
+    let (rows, cols, layers, m, block) = (2usize, 4usize, 2usize, 48usize, 4usize);
+    run_ranks(16, NetModel::aries(4), move |world| {
+        let g3 = Grid3D::new(world, rows, cols, layers);
+        let coords = g3.grid.coords();
+        let fill = |seed| {
+            if g3.layer == 0 {
+                Fill::Random { seed }
+            } else {
+                Fill::Zero
+            }
+        };
+        let a = DistMatrix::dense_cyclic(m, m, block, (rows, cols), coords, Mode::Real, fill(7));
+        let b = DistMatrix::dense_cyclic(m, m, block, (rows, cols), coords, Mode::Real, fill(8));
+        let mut sess = PipelineSession::new(
+            g3,
+            cfg(Algorithm::TwoFiveD { layers }, transport, overlap),
+        );
+        let (ra, rb) = sess.admit_pair(a, b);
+        let collect = |out: dbcsr::multiply::MultiplyOutcome| {
+            let mut dense = vec![0.0f32; m * m];
+            out.c.add_into_dense(&mut dense);
+            bits(dense)
+        };
+        let mut calls: Vec<Vec<u32>> = Vec::with_capacity(RESIDENT_CALLS);
+        if pipelined {
+            for _ in 0..RESIDENT_CALLS {
+                if let Some(prev) = sess.multiply_resident_pipelined(&ra, &rb).unwrap() {
+                    calls.push(collect(prev));
+                }
+            }
+            calls.push(collect(sess.flush_pipeline().expect("a call is pending")));
+        } else {
+            for _ in 0..RESIDENT_CALLS {
+                calls.push(collect(sess.multiply_resident(&ra, &rb).unwrap()));
+            }
+        }
+        calls
+    })
+}
+
+#[test]
+fn resident_c_bit_identical_across_transports_overlap_and_pipelining() {
+    let base = resident_c_bits(Transport::TwoSided, false, false);
+    assert_eq!(base.len(), 16);
+    assert!(base.iter().all(|calls| calls.len() == RESIDENT_CALLS));
+    for transport in ALL_TRANSPORTS {
+        for overlap in [false, true] {
+            for pipelined in [false, true] {
+                assert_eq!(
+                    base,
+                    resident_c_bits(transport, overlap, pipelined),
+                    "{transport} overlap={overlap} pipelined={pipelined}"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Wait accounting: compute-bound vs transfer-bound sweeps.
+// ---------------------------------------------------------------------
+
+/// Per-rank (comm_wait_s, overlap_hidden_s, comm_bytes) of one resident
+/// model-mode multiply at c=1 on 16 ranks — skew amortized away and no
+/// cross-layer reduce, so the per-tick ring shifts are the *only* comm
+/// in the measured window.
+fn sweep_stats(
+    transport: Transport,
+    overlap: bool,
+    perf: PerfModel,
+) -> Vec<(f64, f64, u64)> {
+    run_ranks(16, NetModel::aries(4), move |world| {
+        let g3 = Grid3D::new(world, 4, 4, 1);
+        let coords = g3.grid.coords();
+        let a =
+            DistMatrix::dense_cyclic(1408, 1408, 22, (4, 4), coords, Mode::Model, Fill::Zero);
+        let b = a.clone();
+        let mut config = cfg(Algorithm::TwoFiveD { layers: 1 }, transport, overlap);
+        config.perf = perf.clone();
+        let mut sess = PipelineSession::new(g3, config);
+        let (ra, rb) = sess.admit_pair(a, b);
+        let out = sess.multiply_resident(&ra, &rb).unwrap();
+        (
+            out.stats.comm_wait_s,
+            out.stats.overlap_hidden_s,
+            out.stats.comm_bytes,
+        )
+    })
+}
+
+/// Host-side work per tick dwarfs the panel transfers: densify copies
+/// at 1/100th of the calibrated memcpy bandwidth.
+fn compute_bound_perf() -> PerfModel {
+    PerfModel {
+        memcpy_bw: 2.5e7,
+        ..PerfModel::default()
+    }
+}
+
+#[test]
+fn overlap_collapses_wait_on_compute_bound_sweeps() {
+    for transport in ALL_TRANSPORTS {
+        let sync: Vec<_> = sweep_stats(transport, false, compute_bound_perf());
+        let over: Vec<_> = sweep_stats(transport, true, compute_bound_perf());
+        let wait_sync: f64 = sync.iter().map(|s| s.0).sum();
+        let wait_over: f64 = over.iter().map(|s| s.0).sum();
+        let hidden: f64 = over.iter().map(|s| s.1).sum();
+        assert!(
+            wait_sync > 0.0,
+            "{transport}: synchronous shifts must book wait"
+        );
+        assert!(
+            wait_over <= 0.05 * wait_sync,
+            "{transport}: compute-bound overlapped wait must collapse \
+             ({wait_over} vs sync {wait_sync})"
+        );
+        assert!(hidden > 0.0, "{transport}: the overlap must book hidden time");
+        // the wire schedule changes, the wire volume must not
+        for (rank, (s, o)) in sync.iter().zip(over.iter()).enumerate() {
+            assert_eq!(s.2, o.2, "{transport} rank {rank}: bytes drifted");
+            assert_eq!(s.1, 0.0, "{transport} rank {rank}: sync books no hidden time");
+        }
+    }
+}
+
+#[test]
+fn overlap_wait_stays_positive_on_transfer_bound_sweeps() {
+    // calibrated perf, Aries at 4 ranks/node: panel transfers outlast the
+    // per-tick host work, so double-buffering can only partially hide them
+    for transport in ALL_TRANSPORTS {
+        let sync: Vec<_> = sweep_stats(transport, false, PerfModel::default());
+        let over: Vec<_> = sweep_stats(transport, true, PerfModel::default());
+        let wait_sync: f64 = sync.iter().map(|s| s.0).sum();
+        let wait_over: f64 = over.iter().map(|s| s.0).sum();
+        assert!(
+            wait_over > 0.0,
+            "{transport}: transfer-bound waits cannot be fully hidden"
+        );
+        assert!(
+            wait_over < wait_sync,
+            "{transport}: overlap must still cut wait ({wait_over} vs {wait_sync})"
+        );
+    }
+}
+
+#[test]
+fn hidden_ledger_is_conservative() {
+    // per rank: overlapped wait + hidden never exceeds the synchronous
+    // wait (the hidden credit is clamped per shift), on both a compute-
+    // bound and a transfer-bound point, under every transport
+    for perf in [compute_bound_perf(), PerfModel::default()] {
+        for transport in ALL_TRANSPORTS {
+            let sync = sweep_stats(transport, false, perf.clone());
+            let over = sweep_stats(transport, true, perf.clone());
+            for (rank, (s, o)) in sync.iter().zip(over.iter()).enumerate() {
+                assert!(
+                    o.0 + o.1 <= s.0 + 1e-9,
+                    "{transport} rank {rank}: wait {} + hidden {} exceeds sync wait {}",
+                    o.0,
+                    o.1,
+                    s.0
+                );
+                assert!(o.0 >= 0.0 && o.1 >= 0.0, "{transport} rank {rank}: negative ledger");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Property: wait-delta audit over random call schedules.
+// ---------------------------------------------------------------------
+
+/// Random mixes of plain, pipelined and flushed resident calls in one
+/// c=2 session, random transport and overlap flag: every booked
+/// `comm_wait_s` / `overlap_hidden_s` is non-negative, the substrate's
+/// cumulative `wait_seconds` stays monotone through the schedule, and
+/// the per-call books never sum past the substrate's total wait delta —
+/// no delta site clamps a negative into existence and no wait is
+/// double-counted across the pipelined-reduce hand-off.
+#[test]
+fn wait_delta_audit_over_random_call_schedules() {
+    check("wait-delta audit", 10, |rng, size| {
+        let steps = 1 + (rng.next_u64() as usize) % size.0.clamp(1, 5);
+        let transport = ALL_TRANSPORTS[(rng.next_u64() % 3) as usize];
+        let overlap = rng.next_u64() % 2 == 0;
+        let sched: Vec<bool> = (0..steps).map(|_| rng.next_u64() % 2 == 0).collect();
+        let plan = sched.clone();
+        let out = run_ranks(16, NetModel::aries(4), move |world| {
+            let g3 = Grid3D::new(world, 2, 4, 2);
+            let wv = g3.world.clone();
+            let coords = g3.grid.coords();
+            let a = DistMatrix::dense_cyclic(
+                352,
+                352,
+                22,
+                (2, 4),
+                coords,
+                Mode::Model,
+                Fill::Zero,
+            );
+            let b = a.clone();
+            let mut sess = PipelineSession::new(
+                g3,
+                cfg(Algorithm::TwoFiveD { layers: 2 }, transport, overlap),
+            );
+            let (ra, rb) = sess.admit_pair(a, b);
+            let w0 = wv.stats().wait_seconds;
+            let mut books: Vec<(f64, f64)> = Vec::new();
+            let mut samples = vec![w0];
+            let mut pending = false;
+            for &pipelined in &plan {
+                if pipelined {
+                    if let Some(prev) = sess.multiply_resident_pipelined(&ra, &rb).unwrap() {
+                        books.push((prev.stats.comm_wait_s, prev.stats.overlap_hidden_s));
+                    }
+                    pending = true;
+                } else {
+                    if pending {
+                        let prev = sess.flush_pipeline().expect("a call is pending");
+                        books.push((prev.stats.comm_wait_s, prev.stats.overlap_hidden_s));
+                        pending = false;
+                    }
+                    let out = sess.multiply_resident(&ra, &rb).unwrap();
+                    books.push((out.stats.comm_wait_s, out.stats.overlap_hidden_s));
+                }
+                samples.push(wv.stats().wait_seconds);
+            }
+            if pending {
+                let prev = sess.flush_pipeline().expect("a call is pending");
+                books.push((prev.stats.comm_wait_s, prev.stats.overlap_hidden_s));
+            }
+            samples.push(wv.stats().wait_seconds);
+            (books, samples, w0)
+        });
+        for (rank, (books, samples, w0)) in out.into_iter().enumerate() {
+            prop_assert!(
+                books.len() == steps,
+                "rank {rank}: {} outcomes from {steps} calls \
+                 ({transport} overlap={overlap} sched={sched:?})",
+                books.len()
+            );
+            for (i, (wait, hidden)) in books.iter().enumerate() {
+                prop_assert!(
+                    *wait >= 0.0 && *hidden >= 0.0,
+                    "rank {rank} call {i}: negative book wait={wait} hidden={hidden} \
+                     ({transport} overlap={overlap} sched={sched:?})"
+                );
+            }
+            for w in samples.windows(2) {
+                prop_assert!(
+                    w[1] >= w[0],
+                    "rank {rank}: substrate wait_seconds regressed {} -> {} \
+                     ({transport} overlap={overlap} sched={sched:?})",
+                    w[0],
+                    w[1]
+                );
+            }
+            let booked: f64 = books.iter().map(|b| b.0).sum();
+            let substrate = samples.last().unwrap() - w0;
+            prop_assert!(
+                booked <= substrate + 1e-9,
+                "rank {rank}: per-call books {booked} exceed the substrate delta \
+                 {substrate} — a wait was double-counted \
+                 ({transport} overlap={overlap} sched={sched:?})"
+            );
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Verifier: traced overlapped runs stay protocol-clean.
+// ---------------------------------------------------------------------
+
+fn overlapped_spec(algo: AlgoSpec, transport: Transport) -> RunSpec {
+    RunSpec {
+        nodes: 4,
+        rpn: 4,
+        threads: 3,
+        block: 22,
+        shape: Shape::Square { n: 1408 },
+        engine: Engine::DbcsrDensified,
+        mode: Mode::Model,
+        net: NetModel::aries(4),
+        transport,
+        overlap: true,
+        algo,
+        plan_verbose: false,
+        occupancy: 1.0,
+        iterations: 1,
+        fault: None,
+    }
+}
+
+#[test]
+fn traced_overlapped_runs_verify_clean() {
+    for transport in ALL_TRANSPORTS {
+        for algo in [AlgoSpec::Cannon, AlgoSpec::TwoFiveD { layers: 2 }] {
+            let (_, report) = run_spec_verified(overlapped_spec(algo, transport));
+            report.assert_clean();
+        }
+        // steady-state: three pipelined iterations through the harness
+        let mut spec = overlapped_spec(AlgoSpec::TwoFiveD { layers: 2 }, transport);
+        spec.iterations = 3;
+        let (_, report) = run_spec_verified(spec);
+        report.assert_clean();
+    }
+}

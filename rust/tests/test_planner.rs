@@ -49,6 +49,7 @@ fn spec16(shape: Shape, transport: Transport, algo: AlgoSpec) -> RunSpec {
         mode: Mode::Model,
         net: NetModel::aries(4),
         transport,
+        overlap: false,
         algo,
         plan_verbose: false,
         occupancy: 1.0,
@@ -312,6 +313,7 @@ fn plan_input(p: usize, m: usize, n: usize, k: usize, transport: Transport) -> P
         threads: 3,
         charge_replication: true,
         horizon: 1,
+        overlap: false,
         occ_a: 1.0,
         occ_b: 1.0,
         failure_rate: 0.0,

@@ -58,7 +58,8 @@ fn run_case(
             kill_now: kills.clone(),
             already_dead: Vec::new(),
         };
-        let (cm, _holds) = multiply_twofive_ft(&g3, &a, &b, &mut eng, transport, &plan).unwrap();
+        let (cm, _holds) =
+            multiply_twofive_ft(&g3, &a, &b, &mut eng, transport, false, &plan).unwrap();
         let mut dense = vec![0.0f32; DIM * DIM];
         cm.add_into_dense(&mut dense);
         (dense, eng.stats.recovery_bytes, eng.stats.recovery_s)
@@ -271,6 +272,7 @@ fn harness_fault_heals_and_reports_the_bill() {
         mode: Mode::Model,
         net: NetModel::aries(4),
         transport: Transport::TwoSided,
+        overlap: false,
         algo,
         plan_verbose: false,
         occupancy: 1.0,
@@ -285,6 +287,72 @@ fn harness_fault_heals_and_reports_the_bill() {
     let free = run_spec(spec(AlgoSpec::TwoFiveD { layers: 2 }, None));
     assert_eq!(free.recovery_bytes, 0);
     assert_eq!(free.recovery_seconds, 0.0);
+}
+
+// ---------------------------------------------------------------------
+// Canonical re-admission into a degraded world: the pre-skew must route
+// around grid positions tombstoned by an earlier multiply.
+// ---------------------------------------------------------------------
+
+#[test]
+fn canonical_skew_routes_around_already_dead_ranks() {
+    // canonical cyclic operands, layer-replicated by construction (same
+    // deterministic fill on every layer), pushed through the sweep with
+    // rank 5 already dead: its skew sends are dropped, the panels it
+    // owed are healed out of the replica windows (ft_exchange), and the
+    // summed C stays bit-identical to the failure-free canonical run —
+    // on all three transports (the ring shifts that follow the degraded
+    // skew exercise each transport's fault-tolerant arm)
+    let run = |transport: Transport, already_dead: Vec<usize>| {
+        run_ranks(16, NetModel::aries(2), move |world| {
+            let g3 = Grid3D::new(world, 2, 4, 2);
+            let coords = g3.grid.coords();
+            let mk = |seed| {
+                DistMatrix::dense_cyclic(
+                    DIM,
+                    DIM,
+                    BLOCK,
+                    (2, 4),
+                    coords,
+                    Mode::Real,
+                    Fill::Random { seed },
+                )
+            };
+            let (a, b) = (mk(91), mk(92));
+            let mut eng = engine(Mode::Real);
+            let plan = RecoveryPlan {
+                kill_now: Vec::new(),
+                already_dead: already_dead.clone(),
+            };
+            let (cm, _) =
+                multiply_twofive_ft(&g3, &a, &b, &mut eng, transport, false, &plan).unwrap();
+            let mut dense = vec![0.0f32; DIM * DIM];
+            cm.add_into_dense(&mut dense);
+            (dense, eng.stats.recovery_bytes)
+        })
+    };
+    let sum = |rs: &[(Vec<f32>, u64)]| {
+        let mut d = vec![0.0f32; DIM * DIM];
+        for (part, _) in rs {
+            for (g, x) in d.iter_mut().zip(part.iter()) {
+                *g += x;
+            }
+        }
+        d
+    };
+    for transport in [Transport::TwoSided, Transport::OneSided, Transport::OneSidedGet] {
+        let free = run(transport, Vec::new());
+        let degraded = run(transport, vec![5]);
+        assert!(
+            sum(&degraded) == sum(&free),
+            "canonical skew into a degraded world must heal bit-identically ({transport:?})"
+        );
+        assert!(
+            degraded.iter().map(|(_, b)| b).sum::<u64>() > 0,
+            "the degraded skew must fetch replica panels ({transport:?})"
+        );
+        assert!(free.iter().all(|(_, b)| *b == 0));
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -328,6 +396,7 @@ fn harness_reports_unrecoverable_for_plans_without_replicas() {
         mode: Mode::Model,
         net: NetModel::aries(4),
         transport: Transport::TwoSided,
+        overlap: false,
         algo,
         plan_verbose: false,
         occupancy: 1.0,
@@ -364,7 +433,8 @@ fn traced_fault_run_passes_the_protocol_verifier() {
                     kill_now: vec![FaultSpec { rank: 5, at_tick: 0 }],
                     already_dead: Vec::new(),
                 };
-                let _ = multiply_twofive_ft(&g3, &a, &b, &mut eng, transport, &plan).unwrap();
+                let _ =
+                    multiply_twofive_ft(&g3, &a, &b, &mut eng, transport, false, &plan).unwrap();
             },
         );
         let r = check(&trace.expect("traced run returns a trace"));

@@ -156,6 +156,7 @@ fn model_spec(algo: AlgoSpec, transport: Transport) -> RunSpec {
         mode: Mode::Model,
         net: NetModel::aries(4),
         transport,
+        overlap: false,
         algo,
         plan_verbose: false,
         occupancy: 1.0,
