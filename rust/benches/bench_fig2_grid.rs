@@ -51,6 +51,9 @@ fn main() {
             occupancy: 1.0,
             iterations: 1,
             fault: None,
+            faultnet: None,
+            fault_policy: Default::default(),
+            spares: 0,
         });
         t.row(vec![
             format!("{rpn}x{threads}"),

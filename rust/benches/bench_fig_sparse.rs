@@ -67,6 +67,9 @@ fn spec(dim: usize, occupancy: f64, algo: AlgoSpec) -> RunSpec {
         occupancy,
         iterations: 1,
         fault: None,
+        faultnet: None,
+        fault_policy: Default::default(),
+        spares: 0,
     }
 }
 

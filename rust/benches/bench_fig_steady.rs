@@ -54,6 +54,9 @@ fn spec(dim: usize, transport: Transport, algo: AlgoSpec, iterations: usize) -> 
         occupancy: 1.0,
         iterations,
         fault: None,
+        faultnet: None,
+        fault_policy: Default::default(),
+        spares: 0,
     }
 }
 

@@ -84,6 +84,9 @@ fn main() {
                     occupancy: 1.0,
                     iterations: 1,
                     fault: None,
+                    faultnet: None,
+                    fault_policy: Default::default(),
+                    spares: 0,
                 });
                 t.row(vec![
                     label.to_string(),

@@ -68,6 +68,30 @@ while IFS= read -r name; do
     fi
 done < <(grep -oE '^pub const WIN_[A-Z0-9_]+' "$reg" | sed 's/^pub const //')
 
+# Reference resolution: every TAG_* / WIN_* identifier used in library
+# code must resolve to a const declared in the registry. A stale
+# reference (e.g. a renamed adoption tag) would otherwise surface only
+# as a compile error in whatever cfg happens to build it — here it fails
+# fast with the offending name.
+declared=$(grep -oE '^pub const (TAG|WIN)_[A-Z0-9_]+' "$reg" | sed 's/^pub const //' | sort -u)
+stripped=$(
+    while IFS= read -r f; do
+        strip_tests_and_comments "$f"
+    done < <(find . -name '*.rs' ! -path './dist/tags.rs')
+)
+# `use TAG_X as TAG_Y` renames are resolved through their source name
+# (which must itself be declared) — the alias is locally legitimate
+aliases=$(echo "$stripped" | grep -oE 'as +(TAG|WIN)_[A-Z0-9_]+' | awk '{print $2}' | sort -u)
+refs=$(echo "$stripped" | grep -oE '\b(TAG|WIN)_[A-Z0-9_]+\b' | sort -u)
+for name in $refs; do
+    if echo "$aliases" | grep -qx "$name"; then
+        continue
+    fi
+    if ! echo "$declared" | grep -qx "$name"; then
+        report "src" "referenced tag/window id not declared in dist/tags.rs" "$name"
+    fi
+done
+
 if [ "$fail" -ne 0 ]; then
     echo "tag-lint: FAILED — import tags and window ids from dist/tags.rs" >&2
     exit 1

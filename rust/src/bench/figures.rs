@@ -58,6 +58,9 @@ pub fn fig2(scale: usize, mode: Mode) -> Vec<Table> {
                     occupancy: 1.0,
                     iterations: 1,
                     fault: None,
+                    faultnet: None,
+                    fault_policy: Default::default(),
+                    spares: 0,
                 });
                 cells.push(fmt_secs(r.seconds));
                 if !r.oom {
@@ -105,6 +108,9 @@ pub fn fig3(scale: usize, mode: Mode) -> Vec<Table> {
                         occupancy: 1.0,
                         iterations: 1,
                         fault: None,
+                        faultnet: None,
+                        fault_policy: Default::default(),
+                        spares: 0,
                     });
                     pair.push(r.seconds);
                 }
@@ -160,6 +166,9 @@ pub fn fig4(scale: usize, mode: Mode, blocks: &[usize], square_only: bool) -> Ve
                         occupancy: 1.0,
                         iterations: 1,
                         fault: None,
+                        faultnet: None,
+                        fault_policy: Default::default(),
+                        spares: 0,
                     });
                     pair.push(r.seconds);
                 }

@@ -12,12 +12,13 @@
 //! [`RunResult::plan`].
 
 use crate::backend::gpu_sim::DeviceOom;
+use crate::dist::faultnet::{FaultPlan, FaultPolicy};
 use crate::dist::verify::{self, TraceLog, VerifyReport};
 use crate::dist::{run_ranks_opts, Grid2D, Grid3D, NetModel, RunOpts, Transport};
 use crate::matrix::matrix::Fill;
-use crate::matrix::{DistMatrix, Mode};
+use crate::matrix::{BlockLayout, DistMatrix, Mode};
 use crate::multiply::planner::{self, PlanInput, PlannedAlgorithm};
-use crate::multiply::session::PipelineSession;
+use crate::multiply::session::{spare_serve, PipelineSession, SpareOutcome};
 use crate::multiply::twofive::replicate_to_layers;
 use crate::multiply::{multiply, tall_skinny, Algorithm, EngineOpts, FaultSpec, MultiplyConfig};
 use crate::perfmodel::PerfModel;
@@ -153,6 +154,22 @@ pub struct RunSpec {
     /// rest. Under [`AlgoSpec::Auto`] the planner prices the fault as
     /// one expected death, which shifts the choice toward layers.
     pub fault: Option<FaultSpec>,
+    /// Adversarial-network plan (`None` = pristine fabric): every
+    /// cross-rank send/put/get is perturbed per the seeded plan and
+    /// healed by the reliability layer. C stays bit-identical; the
+    /// wasted wire traffic lands in [`RunResult::retrans_bytes`].
+    pub faultnet: Option<FaultPlan>,
+    /// Response to frame failures under an active `faultnet` plan:
+    /// retransmit with backoff (the default) or escalate straight to
+    /// the rank-death path.
+    pub fault_policy: FaultPolicy,
+    /// Hot-spare ranks parked beyond the compute world
+    /// (`dist::RunOpts::spares`). Requires a steady-state 2.5D point
+    /// (`iterations > 1`): after the faulted first multiply the session
+    /// splices the spares into the dead seats
+    /// (`PipelineSession::adopt_spares`) so every later iteration runs
+    /// full-width with a zero recovery bill.
+    pub spares: usize,
 }
 
 impl RunSpec {
@@ -184,6 +201,7 @@ impl RunSpec {
             // priced so Auto prefers plans that can actually recover
             failure_rate: if self.fault.is_some() { 1.0 } else { 0.0 },
             recovery: planner::RecoveryModel::default(),
+            spares: self.spares,
         }
     }
 }
@@ -222,6 +240,14 @@ pub struct RunResult {
     pub recovery_seconds: f64,
     /// Wire bytes of the same recovery traffic, summed over ranks.
     pub recovery_bytes: u64,
+    /// Wire bytes the reliability layer wasted on dropped, duplicated
+    /// and corrupt frames plus their retransmissions, summed over
+    /// ranks. 0 whenever no `faultnet` plan is active — goodput
+    /// counters (`MultiplyStats::comm_bytes`) never include this.
+    pub retrans_bytes: u64,
+    /// Virtual seconds of the same retransmission overhead (backoffs +
+    /// injected delay spikes), summed over ranks.
+    pub retrans_seconds: f64,
     /// The spec asked for a fault but resolved to a plan with no
     /// replica layer (Cannon, tall-skinny, PDGEMM, or `c = 1`): the
     /// run was not executed — a death there loses data irrecoverably,
@@ -283,6 +309,13 @@ pub fn run_spec_opts(spec: RunSpec, opts: RunOpts) -> (RunResult, Option<TraceLo
     let net = spec.net;
     let is_rect = matches!(spec.shape, Shape::Rect { .. });
     let wall0 = std::time::Instant::now();
+    // spec-level chaos knobs override the caller's substrate options
+    let mut opts = opts;
+    if spec.faultnet.is_some() {
+        opts.faultnet = spec.faultnet;
+        opts.fault_policy = spec.fault_policy;
+    }
+    opts.spares = opts.spares.max(spec.spares);
 
     // resolve the algorithm policy (PDGEMM ignores it — the baseline has
     // exactly one data path)
@@ -354,13 +387,23 @@ pub fn run_spec_opts(spec: RunSpec, opts: RunOpts) -> (RunResult, Option<TraceLo
                 oom: false,
                 recovery_seconds: 0.0,
                 recovery_bytes: 0,
+                retrans_bytes: 0,
+                retrans_seconds: 0.0,
                 unrecoverable: true,
             },
             None,
         );
     }
+    if spec.spares > 0 {
+        assert!(
+            matches!(exec, Exec::TwoFive { .. }) && iters > 1,
+            "hot spares require a steady-state 2.5D point (iterations > 1): \
+             only a resident session can splice a spare into a dead seat"
+        );
+    }
 
     let (per_rank, trace) = run_ranks_opts(p, net, opts, move |world| {
+        let wstats = world.clone();
         let cfg = |algorithm: Algorithm| MultiplyConfig {
             engine: EngineOpts {
                 threads: spec.threads,
@@ -445,9 +488,105 @@ pub fn run_spec_opts(spec: RunSpec, opts: RunOpts) -> (RunResult, Option<TraceLo
         let looped = |grid: &Grid2D, a: &DistMatrix, b: &DistMatrix, mcfg: &MultiplyConfig| {
             run_iters(&mut || multiply(grid, a, b, mcfg))
         };
-        match exec {
+        // hot spares park here: world ranks ≥ p never run the compute
+        // body — they wait for the session's adoption directive and, if
+        // adopted, finish the remaining iterations on the dead seat
+        if world.rank() >= p {
+            let (rows, cols, layers) = match exec {
+                Exec::TwoFive { rows, cols, layers } => (rows, cols, layers),
+                _ => unreachable!("spares are asserted onto the steady 2.5D path"),
+            };
+            let arows = BlockLayout::new(m, spec.block);
+            let acols = BlockLayout::new(k, spec.block);
+            let brows = BlockLayout::new(k, spec.block);
+            let bcols = BlockLayout::new(n, spec.block);
+            let mut out = match spare_serve(
+                &world,
+                (rows, cols, layers),
+                &cfg(Algorithm::TwoFiveD { layers }),
+                (&arows, &acols),
+                (&brows, &bcols),
+                spec.mode,
+            ) {
+                SpareOutcome::Idle => (0.0, MultiplyStats::default(), false, 0.0),
+                SpareOutcome::Adopted(seat) => {
+                    let mut sess = seat.session;
+                    let done = sess.multiplies() as usize;
+                    let mut secs = 0.0f64;
+                    let mut stats = MultiplyStats::default();
+                    let mut oom = false;
+                    for _ in done..iters {
+                        match sess.multiply_resident(&seat.a, &seat.b) {
+                            Ok(o) => {
+                                secs += o.virtual_seconds;
+                                stats.merge(&o.stats);
+                            }
+                            Err(_) => {
+                                oom = true;
+                                break;
+                            }
+                        }
+                    }
+                    // the seat's adoption bill is this rank's share of
+                    // the recovery ledger
+                    stats.recovery_bytes += seat.recovery_bytes;
+                    stats.recovery_s += seat.recovery_s;
+                    (secs, stats, oom, 0.0)
+                }
+            };
+            let cs = world.stats();
+            out.1.retrans_bytes = cs.retrans_bytes;
+            out.1.retrans_s = cs.retrans_s;
+            return out;
+        }
+        let (secs, mut stats, oom, repl_s) = match exec {
             // steady state: residency setup once, then `iters` resident
             // multiplies through the session
+            Exec::TwoFive { rows, cols, layers } if iters > 1 && spec.spares > 0 => {
+                // the compute grid is a strict subview: the trailing
+                // spare ranks join the session only through adoption
+                let members: Vec<usize> = (0..p).collect();
+                let g3 = Grid3D::new(world.subview(&members), rows, cols, layers);
+                let coords = g3.grid.coords();
+                let (a, b) = operands((rows, cols), coords);
+                let mut sess = PipelineSession::new(g3, cfg(Algorithm::TwoFiveD { layers }));
+                let (ra, rb) = sess.admit_pair(a, b);
+                let repl_s = sess.repl_seconds();
+                let mut secs = 0.0f64;
+                let mut stats = MultiplyStats::default();
+                let mut oom = false;
+                // first resident multiply: the injected fault (if any)
+                // fires here
+                match sess.multiply_resident(&ra, &rb) {
+                    Ok(o) => {
+                        secs += o.virtual_seconds;
+                        stats.merge(&o.stats);
+                    }
+                    Err(_) => oom = true,
+                }
+                // splice the spares into any dead seats (or release
+                // them); later iterations run full-width
+                let report = sess.adopt_spares(&world, &ra, &rb);
+                stats.recovery_bytes += report.bytes;
+                stats.recovery_s += report.seconds;
+                if !world.killed() && !oom {
+                    for _ in 1..iters {
+                        match sess.multiply_resident(&ra, &rb) {
+                            Ok(o) => {
+                                secs += o.virtual_seconds;
+                                stats.merge(&o.stats);
+                            }
+                            Err(_) => {
+                                oom = true;
+                                break;
+                            }
+                        }
+                    }
+                }
+                stats.repl_bytes = sess.stats().repl_bytes;
+                stats.repl_s = sess.stats().repl_s;
+                (secs, stats, oom, repl_s)
+            }
             Exec::TwoFive { rows, cols, layers } if iters > 1 => {
                 let g3 = Grid3D::new(world, rows, cols, layers);
                 let coords = g3.grid.coords();
@@ -528,7 +667,14 @@ pub fn run_spec_opts(spec: RunSpec, opts: RunOpts) -> (RunResult, Option<TraceLo
                     }
                 }
             }
-        }
+        };
+        // the run-level reliability ledger: cumulative rank counters, a
+        // superset of the per-call windows (replication and adoption
+        // phases retransmit too)
+        let cs = wstats.stats();
+        stats.retrans_bytes = cs.retrans_bytes;
+        stats.retrans_s = cs.retrans_s;
+        (secs, stats, oom, repl_s)
     });
 
     let mut stats = MultiplyStats::default();
@@ -556,6 +702,8 @@ pub fn run_spec_opts(spec: RunSpec, opts: RunOpts) -> (RunResult, Option<TraceLo
             occupancy_c: stats.occupancy_c(),
             recovery_seconds: stats.recovery_s,
             recovery_bytes: stats.recovery_bytes,
+            retrans_bytes: stats.retrans_bytes,
+            retrans_seconds: stats.retrans_s,
             stats,
             plan,
             oom,
@@ -611,6 +759,9 @@ mod tests {
             occupancy: 1.0,
             iterations: 1,
             fault: None,
+            faultnet: None,
+            fault_policy: FaultPolicy::Retry,
+            spares: 0,
         }
     }
 

@@ -54,6 +54,19 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Like [`Args::usize_flag`] but returns the parse failure instead of
+    /// panicking — the fault-injection surface owns an exit-code contract
+    /// (malformed fault specs exit 4, not via an opaque panic) and needs
+    /// the error as a value.
+    pub fn try_usize_flag(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
     pub fn str_flag<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.flag(name).unwrap_or(default)
     }
@@ -132,6 +145,15 @@ mod tests {
         assert_eq!(a.usize_flag("nodes", 7), 7);
         assert!(!a.switch("real"));
         assert_eq!(a.str_flag("engine", "dbcsr"), "dbcsr");
+    }
+
+    #[test]
+    fn try_usize_flag_is_typed() {
+        let a = Args::parse(argv("dbcsr run --kill-at twelve --kill-rank 3"));
+        assert_eq!(a.try_usize_flag("kill-rank", 0), Ok(3));
+        assert_eq!(a.try_usize_flag("missing", 7), Ok(7));
+        let e = a.try_usize_flag("kill-at", 0).unwrap_err();
+        assert!(e.contains("kill-at") && e.contains("twelve"), "{e}");
     }
 
     #[test]

@@ -1,0 +1,612 @@
+//! Deterministic adversarial-network layer: seeded per-link faults and
+//! the sender-side retransmission schedule that heals them.
+//!
+//! The substrate's only injectable failure used to be a clean rank death
+//! (`CommView::kill`). Real fabrics misbehave long before a node dies:
+//! they drop frames, deliver duplicates, flip payload bits, and straggle.
+//! [`FaultPlan`] models all four as *stateless* functions of
+//! `(seed, src, dst, tag, seq, attempt)` — no RNG state is carried, so a
+//! fault roll never depends on OS scheduling and every run under a given
+//! seed is bit-for-bit reproducible, faults included.
+//!
+//! ## How a faulty link stays correct
+//!
+//! Every logical message on a faulty link becomes a sequence of wire
+//! *frames*, each stamped with a per-`(src, dst, tag)` sequence number
+//! and a payload checksum ([`checksum`]). Because the fault rolls are
+//! stateless, the sender can compute the entire retransmission dialogue
+//! at send time ([`schedule`]): corrupted frames are enqueued for real
+//! (with a genuinely bit-flipped payload where the payload has bits to
+//! flip), duplicates are enqueued for real, dropped frames charge the
+//! wire but never arrive, and the final good frame departs after the
+//! accumulated NACK/retransmit backoff ([`rto`]) of every failed attempt
+//! — the virtual-clock cost of the receiver timing out, NACKing, and the
+//! sender resending. The receiver needs no oracle: it *detects*
+//! corruption by recomputing the checksum and *dedups* by sequence
+//! number, discarding bad frames until the good one arrives
+//! (`CommView`'s validating pop). Delivered payloads are always the
+//! original bits, so results stay bit-identical to the fault-free run.
+//!
+//! ## Escalation
+//!
+//! [`FaultPolicy::Retry`] retransmits up to [`MAX_ATTEMPTS`] times with
+//! exponential backoff; a link that exhausts the budget is as good as
+//! severed, so the sender escalates to the existing rank-death path
+//! (`FailureDetector`) and the replica-based recovery machinery takes
+//! over. [`FaultPolicy::Escalate`] skips the retries entirely: the first
+//! failed frame escalates — the "fail fast into recovery" posture.
+//!
+//! ## Ledger
+//!
+//! All retry traffic is booked separately from goodput:
+//! `CommStats::retrans_bytes` counts every wasted frame (drops, corrupt
+//! arrivals, duplicates) and `CommStats::retrans_s` the added virtual
+//! seconds (backoffs plus straggler spikes on delivered frames). The
+//! logical byte counters are untouched, so volume figures remain
+//! comparable across fault rates and the overhead is observable on its
+//! own axis.
+
+use super::{NetModel, Payload};
+
+/// Retransmission budget per logical message under
+/// [`FaultPolicy::Retry`]: at ≤ 5% combined drop+corrupt rates the
+/// probability of exhausting 8 attempts is ~1e-10 — escalation is the
+/// modeled response to a genuinely severed link, not to bad luck.
+pub const MAX_ATTEMPTS: u32 = 8;
+
+/// Straggler spikes delay a frame by up to this many link latencies.
+pub const MAX_DELAY_SPIKE_LATENCIES: f64 = 10.0;
+
+/// A seeded per-link fault plan (threaded through `RunOpts::faultnet`).
+/// Rates are per-frame probabilities in `[0, 1]`; `delay` is the
+/// probability of a straggler spike of up to
+/// [`MAX_DELAY_SPIKE_LATENCIES`] × link latency. All rolls derive from
+/// `seed` statelessly, so two runs with the same plan perturb the same
+/// frames the same way.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Probability a frame is dropped in transit (never arrives).
+    pub drop: f64,
+    /// Probability a delivered frame is duplicated on the wire.
+    pub dup: f64,
+    /// Probability a frame arrives with a flipped payload bit.
+    pub corrupt: f64,
+    /// Probability of a straggler delay spike on a frame.
+    pub delay: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan {
+            seed: 1,
+            drop: 0.0,
+            dup: 0.0,
+            corrupt: 0.0,
+            delay: 0.0,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// A plan with every fault class at the same `rate` — the chaos
+    /// tests' workhorse.
+    pub fn uniform(seed: u64, rate: f64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            drop: rate,
+            dup: rate,
+            corrupt: rate,
+            delay: rate,
+        }
+    }
+
+    /// Whether any fault class can actually fire. An inactive plan still
+    /// frames messages (sequence numbers + checksums travel), but the
+    /// schedule degenerates to one pristine frame per message.
+    pub fn is_active(&self) -> bool {
+        self.drop > 0.0 || self.dup > 0.0 || self.corrupt > 0.0 || self.delay > 0.0
+    }
+}
+
+/// What the reliability layer does when a frame fails.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FaultPolicy {
+    /// NACK/retransmit with exponential backoff, up to [`MAX_ATTEMPTS`];
+    /// an exhausted budget escalates to the rank-death/recovery path.
+    #[default]
+    Retry,
+    /// No retries: the first failed frame escalates immediately.
+    Escalate,
+}
+
+// Distinct salts keep the fault classes' rolls independent.
+const SALT_DROP: u64 = 0x1;
+const SALT_DUP: u64 = 0x2;
+const SALT_CORRUPT: u64 = 0x3;
+const SALT_DELAY: u64 = 0x4;
+const SALT_DELAY_MAG: u64 = 0x5;
+const SALT_FLIP: u64 = 0x6;
+
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Stateless fault roll: a hash of the full frame identity.
+fn mix(seed: u64, src: usize, dst: usize, tag: u64, seq: u64, attempt: u32, salt: u64) -> u64 {
+    let mut h = splitmix64(seed ^ salt.wrapping_mul(0xFF51_AFD7_ED55_8CCD));
+    h = splitmix64(h ^ (src as u64));
+    h = splitmix64(h ^ (dst as u64));
+    h = splitmix64(h ^ tag);
+    h = splitmix64(h ^ seq);
+    h = splitmix64(h ^ attempt as u64);
+    h
+}
+
+/// Map a hash to a uniform f64 in `[0, 1)`.
+fn unit(h: u64) -> f64 {
+    (h >> 11) as f64 * (1.0 / 9_007_199_254_740_992.0) // 2^-53
+}
+
+/// Payload checksum — the end-to-end integrity check the receiver
+/// recomputes. Covers every bit that defines the payload's meaning:
+/// element bits for real buffers, the index stream and element count for
+/// sparse panels, the byte count for phantoms.
+pub fn checksum(p: &Payload) -> u64 {
+    let mut h: u64;
+    match p {
+        Payload::Empty => h = splitmix64(0x45),
+        Payload::Phantom { bytes } => h = splitmix64(0x50 ^ *bytes),
+        Payload::F32(v) => {
+            h = splitmix64(0xF3 ^ v.len() as u64);
+            for x in v {
+                h = splitmix64(h ^ x.to_bits() as u64);
+            }
+        }
+        Payload::Blocks { index, data } => {
+            h = splitmix64(0xB1 ^ index.len() as u64);
+            for i in index {
+                h = splitmix64(h ^ *i as u64);
+            }
+            h = splitmix64(h ^ data.len() as u64);
+            for x in data {
+                h = splitmix64(h ^ x.to_bits() as u64);
+            }
+        }
+        Payload::SparseBlocks { index, elems } => {
+            h = splitmix64(0x5B ^ index.len() as u64);
+            for i in index {
+                h = splitmix64(h ^ *i as u64);
+            }
+            h = splitmix64(h ^ *elems);
+        }
+    }
+    h
+}
+
+/// Flip one payload bit (position chosen by `h`), the wire-corruption
+/// model. Returns `None` when the payload has no flippable bits without
+/// changing its wire size (`Empty`, `Phantom`, empty buffers) — the
+/// schedule then models a corrupted *checksum field* instead, which the
+/// receiver detects identically.
+fn corrupt_payload(p: &Payload, h: u64) -> Option<Payload> {
+    match p {
+        Payload::F32(v) if !v.is_empty() => {
+            let mut v2 = v.clone();
+            let i = (h as usize) % v2.len();
+            v2[i] = f32::from_bits(v2[i].to_bits() ^ (1 << (h >> 32) % 32));
+            Some(Payload::F32(v2))
+        }
+        Payload::Blocks { index, data } if !data.is_empty() => {
+            let mut d2 = data.clone();
+            let i = (h as usize) % d2.len();
+            d2[i] = f32::from_bits(d2[i].to_bits() ^ (1 << (h >> 32) % 32));
+            Some(Payload::Blocks {
+                index: index.clone(),
+                data: d2,
+            })
+        }
+        Payload::Blocks { index, data } if !index.is_empty() => {
+            let mut i2 = index.clone();
+            let i = (h as usize) % i2.len();
+            i2[i] ^= 1 << ((h >> 32) % 63);
+            Some(Payload::Blocks {
+                index: i2,
+                data: data.clone(),
+            })
+        }
+        Payload::SparseBlocks { index, elems } if !index.is_empty() => {
+            let mut i2 = index.clone();
+            let i = (h as usize) % i2.len();
+            i2[i] ^= 1 << ((h >> 32) % 63);
+            Some(Payload::SparseBlocks {
+                index: i2,
+                elems: *elems,
+            })
+        }
+        _ => None,
+    }
+}
+
+/// Retransmission timeout before attempt `attempt + 1` departs: the
+/// receiver times out waiting for a valid frame, NACKs, and the sender
+/// resends — modeled as one transfer time plus a dozen link latencies
+/// (timeout detection + NACK round trip), doubling per attempt. The
+/// base dominates the largest possible delay spike, which keeps every
+/// retransmitted frame's arrival strictly after its failed
+/// predecessors' — the FIFO validating pop relies on that order.
+pub(crate) fn rto(net: &NetModel, bytes: u64, attempt: u32) -> f64 {
+    let base = (net.transit_seconds(bytes) + 12.0 * net.latency).max(1e-9);
+    base * (1u64 << (attempt - 1).min(16)) as f64
+}
+
+/// One wire frame's reliability header.
+#[derive(Clone, Debug, PartialEq)]
+pub(crate) struct Frame {
+    /// Per-(src, dst, tag) sequence number of the logical message.
+    pub seq: u64,
+    /// Transmission attempt this frame belongs to (1-based).
+    pub attempt: u32,
+    /// Sender-computed payload checksum; a mismatch at the receiver
+    /// marks the frame corrupt.
+    pub checksum: u64,
+}
+
+/// The precomputed wire dialogue for one logical message on a faulty
+/// link (see module docs): every frame that actually arrives, the
+/// retransmission ledger, and whether the link escalated.
+pub(crate) struct WireSchedule {
+    /// Frames to enqueue, in wire order: `(payload, header, departure
+    /// offset)` — the offset is virtual seconds past the send clock
+    /// (accumulated backoff + any straggler spike), *excluding* the
+    /// per-frame transit time the substrate adds.
+    pub frames: Vec<(Payload, Frame, f64)>,
+    /// Attempt numbers booked as retransmissions (attempt ≥ 2), for the
+    /// verifier's retransmission-discipline trace events.
+    pub retrans_attempts: Vec<u32>,
+    /// Wasted wire bytes: dropped frames, corrupt arrivals, duplicates.
+    pub retrans_bytes: u64,
+    /// Added virtual seconds: backoffs of failed attempts plus straggler
+    /// spikes on delivered frames.
+    pub retrans_s: f64,
+    /// The retry budget was exhausted (or the policy forbids retries and
+    /// a frame failed): nothing more is enqueued and the sender must
+    /// escalate to the rank-death path.
+    pub escalate: bool,
+}
+
+/// Compute the full wire schedule for one logical message. Pure and
+/// deterministic: the same `(plan, policy, src, dst, tag, seq, payload)`
+/// always yields the same dialogue.
+pub(crate) fn schedule(
+    plan: &FaultPlan,
+    policy: FaultPolicy,
+    src: usize,
+    dst: usize,
+    tag: u64,
+    seq: u64,
+    payload: &Payload,
+    net: &NetModel,
+) -> WireSchedule {
+    let bytes = payload.wire_bytes();
+    let ck = checksum(payload);
+    let mut out = WireSchedule {
+        frames: Vec::with_capacity(1),
+        retrans_attempts: Vec::new(),
+        retrans_bytes: 0,
+        retrans_s: 0.0,
+        escalate: false,
+    };
+    let mut backoff = 0.0;
+    let mut attempt = 1u32;
+    loop {
+        let dropped = unit(mix(plan.seed, src, dst, tag, seq, attempt, SALT_DROP)) < plan.drop;
+        let corrupted = !dropped
+            && unit(mix(plan.seed, src, dst, tag, seq, attempt, SALT_CORRUPT)) < plan.corrupt;
+        if (dropped || corrupted) && policy == FaultPolicy::Escalate {
+            out.retrans_bytes += bytes;
+            out.escalate = true;
+            return out;
+        }
+        let spike = if unit(mix(plan.seed, src, dst, tag, seq, attempt, SALT_DELAY)) < plan.delay {
+            unit(mix(plan.seed, src, dst, tag, seq, attempt, SALT_DELAY_MAG))
+                * MAX_DELAY_SPIKE_LATENCIES
+                * net.latency
+        } else {
+            0.0
+        };
+        if attempt >= 2 {
+            out.retrans_attempts.push(attempt);
+        }
+        if dropped {
+            // consumed injection bandwidth, arrived nowhere; the backoff
+            // covers the receiver's timeout + NACK + resend turnaround
+            let r = rto(net, bytes, attempt);
+            out.retrans_bytes += bytes;
+            out.retrans_s += r;
+            backoff += r;
+        } else if corrupted {
+            // the frame arrives for real, bit-flipped: the receiver must
+            // genuinely detect the checksum mismatch and discard it
+            let flip = mix(plan.seed, src, dst, tag, seq, attempt, SALT_FLIP);
+            let (bad, frame_ck) = match corrupt_payload(payload, flip) {
+                Some(bad) => (bad, ck),
+                // nothing to flip without resizing: the wire corrupted
+                // the checksum field itself
+                None => (payload.clone(), ck ^ 1),
+            };
+            out.frames.push((
+                bad,
+                Frame {
+                    seq,
+                    attempt,
+                    checksum: frame_ck,
+                },
+                backoff + spike,
+            ));
+            let r = rto(net, bytes, attempt);
+            out.retrans_bytes += bytes;
+            out.retrans_s += r;
+            backoff += r;
+        } else {
+            // the good frame: original bits, valid checksum
+            out.retrans_s += spike;
+            out.frames.push((
+                payload.clone(),
+                Frame {
+                    seq,
+                    attempt,
+                    checksum: ck,
+                },
+                backoff + spike,
+            ));
+            if unit(mix(plan.seed, src, dst, tag, seq, attempt, SALT_DUP)) < plan.dup {
+                // wire duplicate, trailing the original by one latency:
+                // same seq, so the receiver's dedup discards it
+                out.retrans_bytes += bytes;
+                out.frames.push((
+                    payload.clone(),
+                    Frame {
+                        seq,
+                        attempt,
+                        checksum: ck,
+                    },
+                    backoff + spike + net.latency.max(1e-9),
+                ));
+            }
+            return out;
+        }
+        attempt += 1;
+        if attempt > MAX_ATTEMPTS {
+            out.escalate = true;
+            return out;
+        }
+    }
+}
+
+/// Origin-side retry model for one-sided *gets* (`RmaWindow`): the
+/// origin re-issues the read until a clean snapshot lands, so faults
+/// cost extra round trips and backoff but no receiver-side state —
+/// reads are idempotent, which is why duplicates are meaningless here.
+/// Returns `(extra seconds, wasted bytes, retransmitted attempts,
+/// escalate)`.
+pub(crate) fn get_retry_model(
+    plan: &FaultPlan,
+    policy: FaultPolicy,
+    src: usize,
+    dst: usize,
+    tag: u64,
+    bytes: u64,
+    net: &NetModel,
+) -> (f64, u64, Vec<u32>, bool) {
+    let mut extra_s = 0.0;
+    let mut extra_bytes = 0u64;
+    let mut attempts = Vec::new();
+    let mut attempt = 1u32;
+    loop {
+        let dropped = unit(mix(plan.seed, src, dst, tag, 0, attempt, SALT_DROP)) < plan.drop;
+        let corrupted = !dropped
+            && unit(mix(plan.seed, src, dst, tag, 0, attempt, SALT_CORRUPT)) < plan.corrupt;
+        if (dropped || corrupted) && policy == FaultPolicy::Escalate {
+            return (extra_s, extra_bytes + bytes, attempts, true);
+        }
+        let spike = if unit(mix(plan.seed, src, dst, tag, 0, attempt, SALT_DELAY)) < plan.delay {
+            unit(mix(plan.seed, src, dst, tag, 0, attempt, SALT_DELAY_MAG))
+                * MAX_DELAY_SPIKE_LATENCIES
+                * net.latency
+        } else {
+            0.0
+        };
+        if attempt >= 2 {
+            attempts.push(attempt);
+        }
+        if dropped || corrupted {
+            let r = rto(net, bytes, attempt);
+            extra_s += r;
+            extra_bytes += bytes;
+        } else {
+            extra_s += spike;
+            return (extra_s, extra_bytes, attempts, false);
+        }
+        attempt += 1;
+        if attempt > MAX_ATTEMPTS {
+            return (extra_s, extra_bytes, attempts, true);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net() -> NetModel {
+        NetModel {
+            latency: 1e-6,
+            bw: 1e9,
+        }
+    }
+
+    #[test]
+    fn inactive_plan_yields_one_pristine_frame() {
+        let plan = FaultPlan::default();
+        assert!(!plan.is_active());
+        let p = Payload::F32(vec![1.0, 2.0]);
+        let s = schedule(&plan, FaultPolicy::Retry, 0, 1, 7, 3, &p, &net());
+        assert_eq!(s.frames.len(), 1);
+        let (pl, fr, off) = &s.frames[0];
+        assert_eq!(*pl, p);
+        assert_eq!(fr.seq, 3);
+        assert_eq!(fr.attempt, 1);
+        assert_eq!(fr.checksum, checksum(&p));
+        assert_eq!(*off, 0.0);
+        assert_eq!(s.retrans_bytes, 0);
+        assert_eq!(s.retrans_s, 0.0);
+        assert!(!s.escalate);
+    }
+
+    #[test]
+    fn schedule_is_deterministic() {
+        let plan = FaultPlan::uniform(42, 0.3);
+        let p = Payload::Phantom { bytes: 4096 };
+        let a = schedule(&plan, FaultPolicy::Retry, 2, 5, 12, 9, &p, &net());
+        let b = schedule(&plan, FaultPolicy::Retry, 2, 5, 12, 9, &p, &net());
+        assert_eq!(a.frames.len(), b.frames.len());
+        assert_eq!(a.retrans_bytes, b.retrans_bytes);
+        assert_eq!(a.retrans_s, b.retrans_s);
+        for ((pa, fa, oa), (pb, fb, ob)) in a.frames.iter().zip(&b.frames) {
+            assert_eq!(pa, pb);
+            assert_eq!(fa, fb);
+            assert_eq!(oa, ob);
+        }
+    }
+
+    #[test]
+    fn corrupt_frames_fail_the_checksum_and_keep_the_size() {
+        let plan = FaultPlan {
+            seed: 7,
+            corrupt: 1.0,
+            ..FaultPlan::default()
+        };
+        let p = Payload::F32(vec![1.0; 16]);
+        // corrupt = 1.0 exhausts the budget; every enqueued frame must
+        // be detectably bad and the same wire size as the original
+        let s = schedule(&plan, FaultPolicy::Retry, 0, 1, 7, 0, &p, &net());
+        assert!(s.escalate);
+        assert_eq!(s.frames.len(), MAX_ATTEMPTS as usize);
+        for (pl, fr, _) in &s.frames {
+            assert_ne!(checksum(pl), fr.checksum, "corruption must be detectable");
+            assert_eq!(pl.wire_bytes(), p.wire_bytes());
+        }
+    }
+
+    #[test]
+    fn phantom_corruption_is_detectable_via_the_checksum_field() {
+        let plan = FaultPlan {
+            seed: 7,
+            corrupt: 1.0,
+            ..FaultPlan::default()
+        };
+        let p = Payload::Phantom { bytes: 1 << 20 };
+        let s = schedule(&plan, FaultPolicy::Retry, 0, 1, 7, 0, &p, &net());
+        for (pl, fr, _) in &s.frames {
+            assert_ne!(checksum(pl), fr.checksum);
+        }
+    }
+
+    #[test]
+    fn drop_rate_one_escalates_after_budget() {
+        let plan = FaultPlan {
+            seed: 3,
+            drop: 1.0,
+            ..FaultPlan::default()
+        };
+        let p = Payload::Phantom { bytes: 100 };
+        let s = schedule(&plan, FaultPolicy::Retry, 0, 1, 7, 0, &p, &net());
+        assert!(s.escalate);
+        assert!(s.frames.is_empty(), "every frame was dropped");
+        assert_eq!(s.retrans_bytes, MAX_ATTEMPTS as u64 * 100);
+        assert!(s.retrans_s > 0.0);
+    }
+
+    #[test]
+    fn escalate_policy_gives_up_on_the_first_fault() {
+        let plan = FaultPlan {
+            seed: 3,
+            drop: 1.0,
+            ..FaultPlan::default()
+        };
+        let p = Payload::Phantom { bytes: 100 };
+        let s = schedule(&plan, FaultPolicy::Escalate, 0, 1, 7, 0, &p, &net());
+        assert!(s.escalate);
+        assert!(s.frames.is_empty());
+        assert_eq!(s.retrans_bytes, 100);
+    }
+
+    #[test]
+    fn dup_frames_share_the_seq_and_trail_the_original() {
+        let plan = FaultPlan {
+            seed: 11,
+            dup: 1.0,
+            ..FaultPlan::default()
+        };
+        let p = Payload::F32(vec![5.0]);
+        let s = schedule(&plan, FaultPolicy::Retry, 0, 1, 7, 4, &p, &net());
+        assert_eq!(s.frames.len(), 2);
+        assert_eq!(s.frames[0].1, s.frames[1].1, "duplicate carries the same header");
+        assert!(s.frames[1].2 > s.frames[0].2, "duplicate trails on the wire");
+        assert_eq!(s.retrans_bytes, p.wire_bytes());
+    }
+
+    #[test]
+    fn frame_offsets_are_monotone_and_ledger_covers_the_backoff() {
+        // moderate rates: walk many (seq, channel) points and check the
+        // structural invariants the validating pop relies on
+        let plan = FaultPlan::uniform(1234, 0.25);
+        let p = Payload::F32(vec![1.0; 64]);
+        let n = net();
+        for seq in 0..200u64 {
+            let s = schedule(&plan, FaultPolicy::Retry, 1, 2, 13, seq, &p, &n);
+            if s.escalate {
+                continue;
+            }
+            let mut last = f64::NEG_INFINITY;
+            for (_, _, off) in &s.frames {
+                assert!(*off >= last, "frame departures must be monotone");
+                last = *off;
+            }
+            let (good_payload, good_frame, _) = s
+                .frames
+                .iter()
+                .rev()
+                .find(|(pl, fr, _)| checksum(pl) == fr.checksum)
+                .expect("a non-escalated schedule delivers a good frame");
+            assert_eq!(*good_payload, p, "delivered payload is the original bits");
+            assert_eq!(good_frame.seq, seq);
+            // the good frame's departure is covered by the booked ledger
+            let good_off = s.frames.iter().rev().find(|(pl, fr, _)| checksum(pl) == fr.checksum).unwrap().2;
+            assert!(good_off <= s.retrans_s + 1e-12, "{good_off} vs {}", s.retrans_s);
+        }
+    }
+
+    #[test]
+    fn rto_doubles_and_dominates_spikes() {
+        let n = net();
+        let r1 = rto(&n, 1000, 1);
+        let r2 = rto(&n, 1000, 2);
+        assert!((r2 - 2.0 * r1).abs() < 1e-18);
+        assert!(r1 > MAX_DELAY_SPIKE_LATENCIES * n.latency);
+    }
+
+    #[test]
+    fn checksums_separate_payload_variants() {
+        let a = checksum(&Payload::F32(vec![1.0]));
+        let b = checksum(&Payload::F32(vec![1.0, 0.0]));
+        let c = checksum(&Payload::Phantom { bytes: 8 });
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(b, c);
+    }
+}

@@ -39,10 +39,12 @@ use std::rc::Rc;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
+pub mod faultnet;
 pub mod rma;
 pub mod tags;
 pub mod verify;
 
+pub use faultnet::{FaultPlan, FaultPolicy};
 pub use rma::{PendingGet, RmaWindow, Transport};
 
 use verify::{CommEvent, EventKind, Provenance, TraceLog};
@@ -174,6 +176,15 @@ pub struct CommStats {
     /// shrink. Clock advances from compute sync ([`CommView::advance_to`])
     /// are not counted.
     pub wait_seconds: f64,
+    /// Wasted wire bytes under a [`FaultPlan`]: dropped frames, corrupt
+    /// arrivals and duplicates, booked at the sender. Goodput counters
+    /// (`bytes_sent`) are untouched by faults, so volume figures stay
+    /// comparable across fault rates and this field is the overhead axis.
+    pub retrans_bytes: u64,
+    /// Added virtual seconds of the retransmission dialogue: NACK
+    /// backoffs of failed attempts plus straggler spikes on delivered
+    /// frames (see [`faultnet`]).
+    pub retrans_s: f64,
 }
 
 /// One in-flight message.
@@ -182,6 +193,11 @@ struct Msg {
     payload: Payload,
     /// Virtual time at which the message is available at the receiver.
     ready: f64,
+    /// Reliability header, present only when a [`FaultPlan`] is active
+    /// on the run: sequence number + checksum for receiver-side dedup
+    /// and corruption detection. `None` is the fast path — bit-identical
+    /// timing and behavior to a build without the fault layer.
+    frame: Option<faultnet::Frame>,
 }
 
 type QueueKey = (usize, usize, u64); // (src world rank, dst world rank, tag)
@@ -340,6 +356,12 @@ struct Shared {
     /// from it and inject OS-level yields, shaking thread interleavings
     /// without touching any virtual clock.
     perturb: Option<u64>,
+    /// Adversarial-network fault plan (`None` = pristine fabric: every
+    /// message takes the unframed fast path).
+    faultnet: Option<FaultPlan>,
+    /// What the reliability layer does when a frame fails
+    /// ([`RunOpts::fault_policy`]).
+    fault_policy: FaultPolicy,
 }
 
 impl Shared {
@@ -352,25 +374,14 @@ impl Shared {
         self.cv.notify_all();
     }
 
-    fn pop_blocking(&self, key: QueueKey) -> Msg {
-        match self.pop_blocking_result(key) {
-            Ok(m) => m,
-            // a registered graceful death escalates with the same
-            // message the hard-panic path uses, so non-fault-tolerant
-            // callers keep their diagnostics
-            Err(_) => panic!(
-                "peer rank died while waiting for message (src {}, dst {}, tag {})",
-                key.0, key.1, key.2
-            ),
-        }
-    }
-
-    /// [`Shared::pop_blocking`] for fault-tolerant callers: a message
-    /// already in the queue always delivers (even from a dead sender);
-    /// only an *exhausted* edge whose source has a registered
-    /// [`RankDeath`] returns `Err`. Hard panics elsewhere in the world
-    /// (the `dead` flag) still panic — those are bugs, not modeled
-    /// faults.
+    /// Blocking pop for fault-tolerant callers: a message already in the
+    /// queue always delivers (even from a dead sender); only an
+    /// *exhausted* edge whose source has a registered [`RankDeath`]
+    /// returns `Err`. Hard panics elsewhere in the world (the `dead`
+    /// flag) still panic — those are bugs, not modeled faults.
+    /// Callers go through [`CommView::pop_validated`] /
+    /// [`CommView::pop_validated_blocking`], which add the reliability
+    /// layer's dedup and corruption filtering on framed channels.
     fn pop_blocking_result(&self, key: QueueKey) -> Result<Msg, PeerDied> {
         let verify = self.trace.is_some();
         let mut q = self
@@ -544,6 +555,15 @@ struct RankState {
     /// instance N of a recreated window from instance N−1 (the verifier's
     /// stale-exposure check).
     win_instances: RefCell<HashMap<u64, u64>>,
+    /// Retransmission ledger under a [`FaultPlan`] (see
+    /// [`CommStats::retrans_bytes`] / [`CommStats::retrans_s`]).
+    retrans_bytes: Cell<u64>,
+    retrans_s: Cell<f64>,
+    /// Reliability-layer sequence numbers, keyed by `(peer world rank,
+    /// tag)`: next seq to stamp on a send / next seq expected on this
+    /// receive channel. Only touched when a fault plan is active.
+    send_seq: RefCell<HashMap<(usize, u64), u64>>,
+    recv_seq: RefCell<HashMap<(usize, u64), u64>>,
 }
 
 // Reserved tag space for collectives (user code uses small tags); the
@@ -643,6 +663,8 @@ impl CommView {
             msgs_sent: self.state.msgs_sent.get(),
             meta_bytes: self.state.meta_sent.get(),
             wait_seconds: self.state.wait_s.get(),
+            retrans_bytes: self.state.retrans_bytes.get(),
+            retrans_s: self.state.retrans_s.get(),
         }
     }
 
@@ -730,6 +752,28 @@ impl CommView {
             self.record(None, 0, 0, EventKind::Mark { phase: ph });
             self.state.phase.set(ph + 1);
         }
+    }
+
+    /// How many quiescence marks this rank has recorded (0 when tracing
+    /// is off). A hot spare adopted mid-session replays this many marks
+    /// to align its phase counter with the survivors' — the channel
+    /// checker matches sends and receives by phase.
+    pub fn phases(&self) -> u64 {
+        self.state.phase.get()
+    }
+
+    /// Record a hot-spare adoption in the trace (no-op when tracing is
+    /// off): called by the recovery layer on the spare once it holds the
+    /// dead rank's native state, after the replica fetches — so the
+    /// event's vtime provably trails the death it answers.
+    pub(crate) fn record_adopt(&self, dead: usize, spare: usize) {
+        self.record_event(
+            Provenance::User,
+            Some(dead),
+            tags::TAG_SPARE_ADOPT,
+            0,
+            EventKind::Adopt { dead, spare },
+        );
     }
 
     /// Snapshot of currently blocked ranks as (world rank, awaited src
@@ -824,10 +868,7 @@ impl CommView {
     /// of *detecting* the silence (booked as communication wait).
     pub fn try_recv(&self, src: usize, tag: u64) -> Result<Payload, PeerDied> {
         self.maybe_yield();
-        match self
-            .shared
-            .pop_blocking_result((self.members[src], self.my_world(), tag))
-        {
+        match self.pop_validated((self.members[src], self.my_world(), tag)) {
             Ok(msg) => {
                 self.wait_to(msg.ready);
                 if self.shared.trace.is_some() {
@@ -864,6 +905,13 @@ impl CommView {
 
     /// The wire half of [`CommView::send`]: counters + queue push, no
     /// trace event ([`RmaWindow::put`] records its own `Put` instead).
+    ///
+    /// Under an active [`FaultPlan`] this is where the adversarial
+    /// network lives: the logical message becomes a precomputed wire
+    /// dialogue ([`faultnet::schedule`]) of dropped, duplicated,
+    /// bit-flipped and straggling frames plus the final good one, all
+    /// charged on the virtual clock. Self-sends never touch the wire and
+    /// are exempt.
     fn send_raw(&self, dst: usize, tag: u64, payload: Payload) {
         let bytes = payload.wire_bytes();
         self.state
@@ -873,18 +921,161 @@ impl CommView {
         self.state
             .meta_sent
             .set(self.state.meta_sent.get() + payload.meta_bytes());
-        let ready = self.now() + self.shared.net.transit_seconds(bytes);
-        self.shared
-            .push((self.my_world(), self.members[dst], tag), Msg { payload, ready });
+        let src_w = self.my_world();
+        let dst_w = self.members[dst];
+        let plan = match self.shared.faultnet {
+            Some(p) if src_w != dst_w => p,
+            _ => {
+                let ready = self.now() + self.shared.net.transit_seconds(bytes);
+                self.shared.push(
+                    (src_w, dst_w, tag),
+                    Msg {
+                        payload,
+                        ready,
+                        frame: None,
+                    },
+                );
+                return;
+            }
+        };
+        let seq = {
+            let mut m = self.state.send_seq.borrow_mut();
+            let e = m.entry((dst_w, tag)).or_insert(0);
+            let s = *e;
+            *e += 1;
+            s
+        };
+        let sched = faultnet::schedule(
+            &plan,
+            self.shared.fault_policy,
+            src_w,
+            dst_w,
+            tag,
+            seq,
+            &payload,
+            &self.shared.net,
+        );
+        self.state
+            .retrans_bytes
+            .set(self.state.retrans_bytes.get() + sched.retrans_bytes);
+        self.state
+            .retrans_s
+            .set(self.state.retrans_s.get() + sched.retrans_s);
+        if self.shared.trace.is_some() {
+            for &attempt in &sched.retrans_attempts {
+                self.record(
+                    Some(dst_w),
+                    tag,
+                    bytes,
+                    EventKind::Retrans { seq, attempt },
+                );
+            }
+        }
+        let now = self.now();
+        let transit = self.shared.net.transit_seconds(bytes);
+        for (pl, frame, offset) in sched.frames {
+            self.shared.push(
+                (src_w, dst_w, tag),
+                Msg {
+                    payload: pl,
+                    ready: now + offset + transit,
+                    frame: Some(frame),
+                },
+            );
+        }
+        if sched.escalate {
+            // the retry budget is exhausted (or the policy forbids
+            // retries): the link is as good as severed, and a rank that
+            // cannot deliver is as good as dead — escalate to the
+            // rank-death path so peers observe PeerDied and the replica
+            // recovery machinery takes over
+            self.kill("faultnet: retransmission budget exhausted");
+        }
+    }
+
+    /// Receiver half of the reliability layer: pop frames off a channel,
+    /// discarding duplicates (by sequence number) and corrupt arrivals
+    /// (by recomputed checksum) until a valid in-order frame lands.
+    /// Unframed messages (no fault plan) pass straight through — the
+    /// fast path is one `match` away from today's behavior.
+    fn pop_validated(&self, key: QueueKey) -> Result<Msg, PeerDied> {
+        loop {
+            let msg = self.shared.pop_blocking_result(key)?;
+            let frame = match &msg.frame {
+                None => return Ok(msg),
+                Some(f) => f.clone(),
+            };
+            let chan = (key.0, key.2);
+            let expected = self
+                .state
+                .recv_seq
+                .borrow()
+                .get(&chan)
+                .copied()
+                .unwrap_or(0);
+            if faultnet::checksum(&msg.payload) != frame.checksum {
+                if self.shared.trace.is_some() {
+                    self.record(
+                        Some(key.0),
+                        key.2,
+                        msg.payload.wire_bytes(),
+                        EventKind::Discard {
+                            seq: frame.seq,
+                            dup: false,
+                        },
+                    );
+                }
+                continue;
+            }
+            if frame.seq < expected {
+                // wire duplicate of an already-delivered message
+                if self.shared.trace.is_some() {
+                    self.record(
+                        Some(key.0),
+                        key.2,
+                        msg.payload.wire_bytes(),
+                        EventKind::Discard {
+                            seq: frame.seq,
+                            dup: true,
+                        },
+                    );
+                }
+                continue;
+            }
+            // per-link FIFO + sender-side sequencing: a valid frame is
+            // always the next expected one
+            debug_assert_eq!(frame.seq, expected, "framed channel skipped a seq");
+            self.state.recv_seq.borrow_mut().insert(chan, frame.seq + 1);
+            if self.shared.trace.is_some() {
+                self.record(
+                    Some(key.0),
+                    key.2,
+                    msg.payload.wire_bytes(),
+                    EventKind::Deliver { seq: frame.seq },
+                );
+            }
+            return Ok(msg);
+        }
+    }
+
+    /// [`CommView::pop_validated`] for non-fault-tolerant callers: a
+    /// registered death escalates with the same panic
+    /// [`Shared::pop_blocking`] uses.
+    fn pop_validated_blocking(&self, key: QueueKey) -> Msg {
+        match self.pop_validated(key) {
+            Ok(m) => m,
+            Err(_) => panic!(
+                "peer rank died while waiting for message (src {}, dst {}, tag {})",
+                key.0, key.1, key.2
+            ),
+        }
     }
 
     /// Blocking receive of the next message from `src` with `tag`;
     /// advances the virtual clock to the arrival time.
     pub fn recv(&self, src: usize, tag: u64) -> Payload {
         self.maybe_yield();
-        let msg = self
-            .shared
-            .pop_blocking((self.members[src], self.my_world(), tag));
+        let msg = self.pop_validated_blocking((self.members[src], self.my_world(), tag));
         self.wait_to(msg.ready);
         if self.shared.trace.is_some() {
             self.record(
@@ -1137,6 +1328,19 @@ pub struct RunOpts {
     /// count). The CLI keeps `--horizon` as a deprecated alias of
     /// `--detect-horizon`, and runfiles accept both keys.
     pub detect_horizon: f64,
+    /// Adversarial-network fault plan (`None` = pristine fabric). When
+    /// set, every cross-rank send/put/get is perturbed per the seeded
+    /// plan and healed by the reliability layer — see [`faultnet`].
+    pub faultnet: Option<FaultPlan>,
+    /// Response to frame failures under an active plan: retransmit with
+    /// backoff, or escalate straight to the rank-death path.
+    pub fault_policy: FaultPolicy,
+    /// Hot spares: this many extra rank threads are spawned *beyond*
+    /// `p`, as world ranks `p..p+spares`. The substrate gives them full
+    /// communicator views; what they do (park until adopted into a dead
+    /// rank's grid position — `multiply::recovery`) is the caller's
+    /// protocol. Results keep rank order, spares last.
+    pub spares: usize,
 }
 
 impl Default for RunOpts {
@@ -1145,6 +1349,9 @@ impl Default for RunOpts {
             trace: false,
             perturb: None,
             detect_horizon: 25e-6,
+            faultnet: None,
+            fault_policy: FaultPolicy::Retry,
+            spares: 0,
         }
     }
 }
@@ -1177,6 +1384,9 @@ where
     F: Fn(CommView) -> T + Send + Sync,
 {
     assert!(p > 0, "need at least one rank");
+    // hot spares join the world as trailing ranks: full communicator
+    // views, results in rank order after the compute ranks
+    let total = p + opts.spares;
     let shared = Arc::new(Shared {
         net,
         queues: Mutex::new(HashMap::new()),
@@ -1190,8 +1400,10 @@ where
         failure: FailureDetector::new(opts.detect_horizon),
         expose_serial: AtomicU64::new(0),
         perturb: opts.perturb,
+        faultnet: opts.faultnet,
+        fault_policy: opts.fault_policy,
     });
-    let mut out: Vec<Option<T>> = (0..p).map(|_| None).collect();
+    let mut out: Vec<Option<T>> = (0..total).map(|_| None).collect();
     let mut failed = false;
     std::thread::scope(|s| {
         let f = &f;
@@ -1201,7 +1413,7 @@ where
             .map(|(rank, slot)| {
                 let shared = shared.clone();
                 s.spawn(move || {
-                    let view = CommView::world(shared.clone(), p, rank);
+                    let view = CommView::world(shared.clone(), total, rank);
                     match std::panic::catch_unwind(AssertUnwindSafe(|| f(view))) {
                         Ok(v) => *slot = Some(v),
                         Err(e) => {
@@ -1648,5 +1860,152 @@ mod tests {
                 panic!("injected failure");
             }
         });
+    }
+
+    fn fault_opts(plan: FaultPlan) -> RunOpts {
+        RunOpts {
+            faultnet: Some(plan),
+            ..RunOpts::default()
+        }
+    }
+
+    #[test]
+    fn faulty_link_delivers_original_payloads_and_books_retrans() {
+        let (out, _) = run_ranks_opts(
+            2,
+            NetModel::aries(1),
+            fault_opts(FaultPlan::uniform(2024, 0.1)),
+            |c| {
+                if c.rank() == 0 {
+                    for i in 0..100 {
+                        c.send(1, 7, Payload::F32(vec![i as f32, -(i as f32)]));
+                    }
+                } else {
+                    for i in 0..100 {
+                        assert_eq!(
+                            c.recv(0, 7).into_f32(),
+                            vec![i as f32, -(i as f32)],
+                            "faults must never reach the delivered payload"
+                        );
+                    }
+                }
+                c.stats()
+            },
+        );
+        assert!(out[0].retrans_bytes > 0, "10% fault rates over 100 sends");
+        assert!(out[0].retrans_s > 0.0);
+        assert_eq!(out[0].bytes_sent, 100 * 8, "goodput counters ignore faults");
+        assert_eq!(out[1].retrans_bytes, 0, "receiver books nothing");
+    }
+
+    #[test]
+    fn fault_layer_is_deterministic() {
+        let run = || {
+            run_ranks_opts(
+                4,
+                NetModel::aries(2),
+                fault_opts(FaultPlan::uniform(7, 0.1)),
+                |c| {
+                    for _ in 0..20 {
+                        let _ = c.allreduce_sum_f32(Payload::Phantom { bytes: 12345 });
+                    }
+                    (c.now(), c.stats().retrans_bytes, c.stats().retrans_s)
+                },
+            )
+            .0
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn zero_rate_plan_keeps_pristine_timing() {
+        let body = |c: &CommView| {
+            for _ in 0..10 {
+                let _ = c.allreduce_sum_f32(Payload::Phantom { bytes: 4096 });
+            }
+            c.now()
+        };
+        let pristine = run_ranks(3, NetModel::aries(1), |c| body(&c));
+        let (framed, _) = run_ranks_opts(
+            3,
+            NetModel::aries(1),
+            fault_opts(FaultPlan::default()),
+            |c| body(&c),
+        );
+        // frames travel (seq + checksum) but no fault can fire: virtual
+        // time matches the unframed fast path exactly
+        assert_eq!(pristine, framed);
+    }
+
+    #[test]
+    fn duplicates_are_dedupped_by_sequence_number() {
+        let plan = FaultPlan {
+            seed: 5,
+            dup: 1.0,
+            ..FaultPlan::default()
+        };
+        let (out, _) = run_ranks_opts(2, NetModel::aries(1), fault_opts(plan), |c| {
+            if c.rank() == 0 {
+                for i in 0..5 {
+                    c.send(1, 3, Payload::F32(vec![i as f32]));
+                }
+            } else {
+                for i in 0..5 {
+                    assert_eq!(c.recv(0, 3).into_f32(), vec![i as f32]);
+                }
+            }
+            c.stats()
+        });
+        // every message was duplicated once on the wire
+        assert_eq!(out[0].retrans_bytes, 5 * 4);
+    }
+
+    #[test]
+    fn escalate_policy_feeds_the_peer_died_path() {
+        let plan = FaultPlan {
+            seed: 9,
+            drop: 1.0,
+            ..FaultPlan::default()
+        };
+        let (out, _) = run_ranks_opts(
+            2,
+            NetModel::ideal(),
+            RunOpts {
+                faultnet: Some(plan),
+                fault_policy: FaultPolicy::Escalate,
+                ..RunOpts::default()
+            },
+            |c| {
+                if c.rank() == 0 {
+                    c.send(1, 4, Payload::F32(vec![1.0]));
+                    // the failed link escalated to a self-death: sit out
+                    c.killed()
+                } else {
+                    let err = c.try_recv(0, 4).expect_err("link severed");
+                    assert_eq!(err.rank, 0);
+                    c.killed()
+                }
+            },
+        );
+        assert!(out[0], "sender observes its own escalation");
+        assert!(!out[1], "receiver survives");
+    }
+
+    #[test]
+    fn spare_ranks_join_the_world_as_trailing_ranks() {
+        let (out, _) = run_ranks_opts(
+            2,
+            NetModel::ideal(),
+            RunOpts {
+                spares: 2,
+                ..RunOpts::default()
+            },
+            |c| (c.rank(), c.size()),
+        );
+        assert_eq!(out.len(), 4, "2 compute ranks + 2 spares");
+        for (i, (rank, size)) in out.iter().enumerate() {
+            assert_eq!(*rank, i);
+            assert_eq!(*size, 4, "spares see the full world");
+        }
     }
 }

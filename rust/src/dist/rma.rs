@@ -513,10 +513,55 @@ impl RmaWindow {
         st.meta_sent.set(st.meta_sent.get() + payload.meta_bytes());
         let issued_at = self.comm.now();
         let start = issued_at.max(at);
+        let mut done_at = start + self.comm.shared.net.transit_seconds(bytes);
+        // Faulty fabric: gets are idempotent reads, so the origin simply
+        // re-issues until a clean snapshot lands — modeled as extra round
+        // trips and backoff folded into the completion time, with the
+        // wasted traffic booked on the retransmission ledger. Self-gets
+        // never touch the wire.
+        if let Some(plan) = self.comm.shared.faultnet {
+            if key.0 != me {
+                let (extra_s, extra_bytes, attempts, escalate) = super::faultnet::get_retry_model(
+                    &plan,
+                    self.comm.shared.fault_policy,
+                    key.0,
+                    me,
+                    key.1,
+                    bytes,
+                    &self.comm.shared.net,
+                );
+                st.retrans_bytes.set(st.retrans_bytes.get() + extra_bytes);
+                st.retrans_s.set(st.retrans_s.get() + extra_s);
+                if verify {
+                    for attempt in attempts {
+                        self.comm.record_event(
+                            Provenance::Rma,
+                            Some(key.0),
+                            key.1,
+                            bytes,
+                            EventKind::Retrans { seq: epoch, attempt },
+                        );
+                    }
+                }
+                done_at += extra_s;
+                if escalate {
+                    // the origin's read side of the link is severed:
+                    // escalate to the rank-death path (a rank that can no
+                    // longer fetch its operands is as good as dead) and
+                    // report the edge as failed to the local caller
+                    self.comm.kill("faultnet: get retry budget exhausted");
+                    self.comm.wait_to(done_at);
+                    return Err(PeerDied {
+                        rank: me,
+                        at: self.comm.now(),
+                    });
+                }
+            }
+        }
         Ok(PendingGet {
             payload,
             issued_at,
-            done_at: start + self.comm.shared.net.transit_seconds(bytes),
+            done_at,
         })
     }
 
@@ -570,10 +615,11 @@ impl RmaWindow {
         let mut latest = f64::NEG_INFINITY;
         let mut drained = Vec::with_capacity(sources.len());
         for &src in sources {
+            // the validating pop discards duplicate / corrupt frames on
+            // faulty fabrics before the epoch accounting sees them
             let msg = self
                 .comm
-                .shared
-                .pop_blocking((self.comm.members[src], self.comm.my_world(), tag));
+                .pop_validated_blocking((self.comm.members[src], self.comm.my_world(), tag));
             latest = latest.max(msg.ready);
             if verify {
                 drained.push((self.comm.members[src], msg.payload.wire_bytes()));
@@ -646,11 +692,10 @@ impl RmaWindow {
         let mut latest = f64::NEG_INFINITY;
         let mut drained = Vec::with_capacity(sources.len());
         for &src in sources {
-            match self.comm.shared.pop_blocking_result((
-                self.comm.members[src],
-                self.comm.my_world(),
-                tag,
-            )) {
+            match self
+                .comm
+                .pop_validated((self.comm.members[src], self.comm.my_world(), tag))
+            {
                 Ok(msg) => {
                     latest = latest.max(msg.ready);
                     if verify {
@@ -948,5 +993,49 @@ mod tests {
             (win.epoch(), c.now(), c.stats().wait_seconds)
         });
         assert_eq!(out[0], (1, 0.0, 0.0));
+    }
+
+    #[test]
+    fn faulty_fabric_heals_puts_and_gets() {
+        use crate::dist::{run_ranks_opts, FaultPlan, RunOpts};
+        let opts = RunOpts {
+            faultnet: Some(FaultPlan::uniform(321, 0.1)),
+            ..RunOpts::default()
+        };
+        let (out, _) = run_ranks_opts(2, NetModel::aries(1), opts, |c| {
+            // put path: one put per epoch, receiver drains through the
+            // validating pop (duplicates and corrupt frames discarded)
+            let mut win = RmaWindow::new(&c, 9);
+            if c.rank() == 0 {
+                for e in 0..20 {
+                    win.put(1, Payload::F32(vec![e as f32; 4]));
+                    win.close_epoch(&[]);
+                }
+            } else {
+                for e in 0..20 {
+                    let got = win.close_epoch(&[0]).remove(0).into_f32();
+                    assert_eq!(got, vec![e as f32; 4], "epoch {e} payload intact");
+                }
+            }
+            // get path: origin-side modeled retries fold into done_at
+            let mut win2 = RmaWindow::new(&c, 10);
+            if c.rank() == 0 {
+                for e in 0..20 {
+                    win2.expose_advance(Payload::F32(vec![-(e as f32); 4]));
+                }
+                let _ = c.recv(1, 2); // reader done
+                win2.retire_all();
+            } else {
+                for e in 0..20u64 {
+                    let p = win2.get_begin(0, e).unwrap();
+                    assert_eq!(win2.get_complete(p).into_f32(), vec![-(e as f32); 4]);
+                }
+                c.send(0, 2, Payload::Empty);
+            }
+            c.stats()
+        });
+        assert!(out[0].retrans_bytes > 0, "put retries booked at the origin");
+        assert!(out[1].retrans_bytes > 0, "get retries booked at the origin");
+        assert!(out[1].retrans_s > 0.0);
     }
 }

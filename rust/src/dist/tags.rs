@@ -52,6 +52,17 @@ pub const TAG_REDUCE_C: u64 = 20;
 /// death-aware reduce so nobody tombstones its recovery-share exposure
 /// while a recovery root may still be fetching from it.
 pub const TAG_RECOVER_FENCE: u64 = 21;
+/// Get-shift ring fence for A (`multiply::recovery::ft_shift_pair`, pull
+/// transport): the reader tells the exposer its epoch was consumed, so
+/// `expose_advance` never overwrites a panel still being fetched.
+pub const TAG_GETSHIFT_FENCE_A: u64 = 22;
+/// Get-shift ring fence for B, like [`TAG_GETSHIFT_FENCE_A`].
+pub const TAG_GETSHIFT_FENCE_B: u64 = 23;
+/// Hot-spare adoption channel (`multiply::recovery::spare`): parked
+/// spares block here; the adoption coordinator sends the directive
+/// header, replica holders push the dead position's native shares, and
+/// an `Empty` payload releases unadopted spares at shutdown.
+pub const TAG_SPARE_ADOPT: u64 = 24;
 
 // ---- RMA window ids -----------------------------------------------------
 
@@ -90,6 +101,24 @@ pub const WIN_RECOVER_A: u64 = 14;
 /// Fault-tolerance recovery window for B shares (`multiply::recovery`).
 /// Get-only, like [`WIN_RECOVER_A`].
 pub const WIN_RECOVER_B: u64 = 15;
+/// Cannon pull-transport per-tick shift exposure of A (one epoch per
+/// tick; the downstream neighbor gets instead of the owner putting).
+pub const WIN_CANNON_GETSHIFT_A: u64 = 16;
+/// Cannon pull-transport per-tick shift exposure of B.
+pub const WIN_CANNON_GETSHIFT_B: u64 = 17;
+/// 2.5D pull-transport per-tick shift exposure of A.
+pub const WIN_TWOFIVE_GETSHIFT_A: u64 = 18;
+/// 2.5D pull-transport per-tick shift exposure of B.
+pub const WIN_TWOFIVE_GETSHIFT_B: u64 = 19;
+/// Hot-spare adoption window for A shares (`multiply::session`):
+/// survivors expose their native A shares over the remapped full-width
+/// world so an adopted spare can reconstruct the dead rank's share from
+/// a replica layer. Fresh ids (instead of reusing [`WIN_RECOVER_A`])
+/// keep the verifier's cross-instance get check exact — every adoption
+/// participant is on instance 1 of this window.
+pub const WIN_ADOPT_A: u64 = 20;
+/// Hot-spare adoption window for B shares, like [`WIN_ADOPT_A`].
+pub const WIN_ADOPT_B: u64 = 21;
 
 // ---- reserved blocks ----------------------------------------------------
 
@@ -115,7 +144,7 @@ pub const TAG_REDUCE: u64 = TAG_COLLECTIVE_BASE + 3;
 
 // ---- compile-time non-collision assertions ------------------------------
 
-const ALL_MSG_TAGS: [u64; 16] = [
+const ALL_MSG_TAGS: [u64; 19] = [
     TAG_CANNON_SKEW_A,
     TAG_CANNON_SKEW_B,
     TAG_CANNON_SHIFT_A,
@@ -128,13 +157,16 @@ const ALL_MSG_TAGS: [u64; 16] = [
     TAG_RES_SKEW_B,
     TAG_REDUCE_C,
     TAG_RECOVER_FENCE,
+    TAG_GETSHIFT_FENCE_A,
+    TAG_GETSHIFT_FENCE_B,
+    TAG_SPARE_ADOPT,
     TAG_GATHER,
     TAG_SPREAD,
     TAG_BCAST,
     TAG_REDUCE,
 ];
 
-const ALL_WIN_IDS: [u64; 15] = [
+const ALL_WIN_IDS: [u64; 21] = [
     WIN_CANNON_SKEW_A,
     WIN_CANNON_SKEW_B,
     WIN_CANNON_SHIFT_A,
@@ -150,6 +182,12 @@ const ALL_WIN_IDS: [u64; 15] = [
     WIN_TS_REDUCE,
     WIN_RECOVER_A,
     WIN_RECOVER_B,
+    WIN_CANNON_GETSHIFT_A,
+    WIN_CANNON_GETSHIFT_B,
+    WIN_TWOFIVE_GETSHIFT_A,
+    WIN_TWOFIVE_GETSHIFT_B,
+    WIN_ADOPT_A,
+    WIN_ADOPT_B,
 ];
 
 const fn all_distinct(xs: &[u64]) -> bool {
@@ -188,7 +226,7 @@ const _: () = assert!(
 // below the collective block: w < 2^26 epochs of 2^32 tags from 2^59
 // reaches at most 2^59 + 2^58 < 2^60
 const _: () = assert!(
-    TAG_RECOVER_FENCE < TAG_RMA_BASE,
+    TAG_SPARE_ADOPT < TAG_RMA_BASE,
     "user tags must stay below the RMA block"
 );
 const _: () = assert!(

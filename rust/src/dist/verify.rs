@@ -28,6 +28,17 @@
 //! * **Deterministic reduction order** — C-reduce drains root-first in
 //!   ascending layer order, on both transports
 //!   ([`Invariant::ReduceOrder`]).
+//! * **At-most-once delivery** — on faulty fabrics ([`super::faultnet`])
+//!   the reliability layer delivers every `(src, dst, tag)` channel's
+//!   sequence numbers exactly once, in order, and discards a wire
+//!   duplicate only after its original delivered
+//!   ([`Invariant::AtMostOnceDelivery`]).
+//! * **Retransmission discipline** — retransmitted attempts per message
+//!   are strictly increasing from attempt 2
+//!   ([`Invariant::RetransDiscipline`]).
+//! * **Spare-adoption fence ordering** — a hot spare is adopted only
+//!   after the dead rank's `Death` (by virtual time), at most once per
+//!   dead rank and per spare ([`Invariant::AdoptionFence`]).
 //!
 //! Deadlock detection is *runtime*, not offline: a trace of a deadlocked
 //! run never completes. Under tracing, blocked receives register in a
@@ -102,6 +113,21 @@ pub enum EventKind {
     /// any further traffic *from* it violates
     /// [`Invariant::RecoveryDiscipline`] — dead ranks stay silent.
     Death,
+    /// Reliability layer, sender side: transmission attempt `attempt`
+    /// (≥ 2) of message `seq` on this channel — a retransmission after a
+    /// dropped or corrupted frame (`peer` = destination).
+    Retrans { seq: u64, attempt: u32 },
+    /// Reliability layer, receiver side: a frame was discarded —
+    /// `dup: true` for a wire duplicate of an already-delivered seq,
+    /// `dup: false` for a checksum mismatch (`peer` = source).
+    Discard { seq: u64, dup: bool },
+    /// Reliability layer, receiver side: message `seq` passed validation
+    /// and was delivered (`peer` = source).
+    Deliver { seq: u64 },
+    /// Hot-spare adoption (`multiply::recovery`): this rank (the spare)
+    /// took over world rank `dead`'s grid position (`peer` = the dead
+    /// rank).
+    Adopt { dead: usize, spare: usize },
 }
 
 /// One traced substrate operation.
@@ -157,6 +183,15 @@ pub enum Invariant {
     /// (`WIN_RECOVER_A`/`WIN_RECOVER_B`) are get-only, and a rank that
     /// declared death issues no further traffic.
     RecoveryDiscipline,
+    /// A sequence number delivered twice (or out of order) on one
+    /// channel after reliability-layer dedup.
+    AtMostOnceDelivery,
+    /// Retransmission attempts not strictly increasing from 2, or a
+    /// duplicate discarded before its original delivered.
+    RetransDiscipline,
+    /// A spare adopted before its dead rank's death, or a dead rank /
+    /// spare involved in more than one adoption.
+    AdoptionFence,
 }
 
 impl fmt::Display for Invariant {
@@ -170,6 +205,9 @@ impl fmt::Display for Invariant {
             Invariant::LeakedExposure => "leaked-exposure",
             Invariant::ReduceOrder => "reduce-order",
             Invariant::RecoveryDiscipline => "recovery-discipline",
+            Invariant::AtMostOnceDelivery => "at-most-once-delivery",
+            Invariant::RetransDiscipline => "retrans-discipline",
+            Invariant::AdoptionFence => "adoption-fence",
         })
     }
 }
@@ -292,6 +330,8 @@ pub fn check(trace: &TraceLog) -> VerifyReport {
     check_epochs(&by_rank, &ranks, &dead, &mut report);
     check_reduce_order(&by_rank, &ranks, phase, &mut report);
     check_recovery(&by_rank, &ranks, &dead, &mut report);
+    check_reliability(&by_rank, &ranks, &mut report);
+    check_adoption(&by_rank, &ranks, &mut report);
     report
 }
 
@@ -299,6 +339,19 @@ pub fn check(trace: &TraceLog) -> VerifyReport {
 /// inside its block, collectives inside theirs.
 fn check_tag_spaces(trace: &TraceLog, report: &mut VerifyReport) {
     for ev in &trace.events {
+        // Reliability-layer and adoption bookkeeping rides whatever
+        // channel the faulted message used — its tag legitimately lives
+        // in any space, and its provenance is the caller's, so the
+        // space/provenance pairing below does not apply.
+        if matches!(
+            ev.kind,
+            EventKind::Retrans { .. }
+                | EventKind::Discard { .. }
+                | EventKind::Deliver { .. }
+                | EventKind::Adopt { .. }
+        ) {
+            continue;
+        }
         let space = tags::space_of(ev.tag);
         let ok = match ev.provenance {
             Provenance::User => space == tags::TagSpace::User,
@@ -332,6 +385,10 @@ fn kind_name(kind: &EventKind) -> &'static str {
         EventKind::WinCreate { .. } => "win_create",
         EventKind::Mark { .. } => "mark",
         EventKind::Death => "death",
+        EventKind::Retrans { .. } => "retrans",
+        EventKind::Discard { .. } => "discard",
+        EventKind::Deliver { .. } => "deliver",
+        EventKind::Adopt { .. } => "adopt",
     }
 }
 
@@ -405,7 +462,11 @@ fn check_channels<'a, F>(
                     ),
                 });
             }
-            if s.phase != r.phase {
+            // the spare-adoption channel legitimately spans quiescence
+            // epochs: a spare parked since phase 0 receives its adoption
+            // (or release) directive at whatever phase the survivors
+            // reached — the one protocol allowed to cross the boundary
+            if s.phase != r.phase && tag != tags::TAG_SPARE_ADOPT {
                 report.violations.push(Violation {
                     invariant: Invariant::OrphanMessage,
                     message: format!(
@@ -421,8 +482,11 @@ fn check_channels<'a, F>(
         }
         if ss.len() > rs.len() {
             // a message parked at a declared-dead destination is the
-            // expected residue of a crash, not a protocol orphan
-            if !dead.contains_key(&dst) {
+            // expected residue of a crash, not a protocol orphan; nor is
+            // a send the wire lost while its *sender* was dying — a rank
+            // that escalates a retransmission budget records the send
+            // and then its own death, with no frame ever arriving
+            if !dead.contains_key(&dst) && !dead.contains_key(&src) {
                 report.violations.push(Violation {
                     invariant: Invariant::OrphanMessage,
                     message: format!(
@@ -672,6 +736,154 @@ fn check_recovery(
     }
 }
 
+/// Reliability-layer discipline on faulty fabrics: per channel, sequence
+/// numbers deliver exactly once in strictly increasing order, a wire
+/// duplicate is discarded only after its original delivered, and the
+/// sender's retransmission attempts per message climb strictly from 2.
+fn check_reliability(
+    by_rank: &HashMap<usize, Vec<&CommEvent>>,
+    ranks: &[usize],
+    report: &mut VerifyReport,
+) {
+    for &rank in ranks {
+        // Receiver side, in program order: (source, tag) → delivered seqs.
+        let mut delivered: HashMap<(usize, u64), Vec<u64>> = HashMap::new();
+        // Sender side: (destination, tag, seq) → last attempt recorded.
+        let mut attempts: HashMap<(usize, u64, u64), u32> = HashMap::new();
+        for ev in &by_rank[&rank] {
+            match ev.kind {
+                EventKind::Deliver { seq } => {
+                    let src = ev.peer.expect("deliver events carry a source");
+                    let seqs = delivered.entry((src, ev.tag)).or_default();
+                    if seqs.contains(&seq) {
+                        report.violations.push(Violation {
+                            invariant: Invariant::AtMostOnceDelivery,
+                            message: format!(
+                                "rank {rank} delivered seq {seq} twice on channel \
+                                 ({src} -> {rank}, tag {:#x}) — dedup failed",
+                                ev.tag
+                            ),
+                        });
+                    } else if seqs.last().is_some_and(|&last| seq < last) {
+                        report.violations.push(Violation {
+                            invariant: Invariant::AtMostOnceDelivery,
+                            message: format!(
+                                "rank {rank} delivered seq {seq} after seq {} on channel \
+                                 ({src} -> {rank}, tag {:#x}) — out-of-order delivery",
+                                seqs.last().unwrap(),
+                                ev.tag
+                            ),
+                        });
+                    }
+                    seqs.push(seq);
+                }
+                EventKind::Discard { seq, dup } if dup => {
+                    let src = ev.peer.expect("discard events carry a source");
+                    let seen = delivered
+                        .get(&(src, ev.tag))
+                        .is_some_and(|seqs| seqs.contains(&seq));
+                    if !seen {
+                        report.violations.push(Violation {
+                            invariant: Invariant::RetransDiscipline,
+                            message: format!(
+                                "rank {rank} discarded seq {seq} as a duplicate on channel \
+                                 ({src} -> {rank}, tag {:#x}) before its original delivered",
+                                ev.tag
+                            ),
+                        });
+                    }
+                }
+                EventKind::Retrans { seq, attempt } => {
+                    let dst = ev.peer.expect("retrans events carry a destination");
+                    let last = attempts.entry((dst, ev.tag, seq)).or_insert(1);
+                    if attempt <= *last {
+                        report.violations.push(Violation {
+                            invariant: Invariant::RetransDiscipline,
+                            message: format!(
+                                "rank {rank} recorded retransmission attempt {attempt} of seq \
+                                 {seq} on channel ({rank} -> {dst}, tag {:#x}) after attempt \
+                                 {} — attempts must climb strictly from 2",
+                                ev.tag, *last
+                            ),
+                        });
+                    }
+                    *last = attempt.max(*last);
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+/// Spare-adoption fence ordering: every `Adopt { dead, spare }` follows
+/// the dead rank's `Death` in virtual time, and a dead rank (or a spare)
+/// takes part in at most one adoption.
+fn check_adoption(
+    by_rank: &HashMap<usize, Vec<&CommEvent>>,
+    ranks: &[usize],
+    report: &mut VerifyReport,
+) {
+    // Death vtimes: clocks are per-rank Lamport counters, so ordering an
+    // adoption against a *different* rank's death needs the virtual
+    // clock, which all ranks share.
+    let mut death_at: HashMap<usize, f64> = HashMap::new();
+    for &rank in ranks {
+        for ev in &by_rank[&rank] {
+            if matches!(ev.kind, EventKind::Death) {
+                let e = death_at.entry(rank).or_insert(ev.vtime);
+                *e = e.min(ev.vtime);
+            }
+        }
+    }
+    let mut adopted_dead: HashMap<usize, usize> = HashMap::new(); // dead → spare
+    let mut adopting_spare: HashMap<usize, usize> = HashMap::new(); // spare → dead
+    for &rank in ranks {
+        for ev in &by_rank[&rank] {
+            let EventKind::Adopt { dead, spare } = ev.kind else {
+                continue;
+            };
+            match death_at.get(&dead) {
+                None => report.violations.push(Violation {
+                    invariant: Invariant::AdoptionFence,
+                    message: format!(
+                        "spare {spare} adopted rank {dead}'s grid position, but rank {dead} \
+                         never declared death"
+                    ),
+                }),
+                Some(&at) if ev.vtime < at => report.violations.push(Violation {
+                    invariant: Invariant::AdoptionFence,
+                    message: format!(
+                        "spare {spare} adopted rank {dead} at t={:.9} before its death at \
+                         t={at:.9} — adoption must follow the recovery fence",
+                        ev.vtime
+                    ),
+                }),
+                Some(_) => {}
+            }
+            if let Some(&prev) = adopted_dead.get(&dead) {
+                report.violations.push(Violation {
+                    invariant: Invariant::AdoptionFence,
+                    message: format!(
+                        "rank {dead} adopted twice (by spares {prev} and {spare}) — a dead \
+                         rank's position is filled at most once"
+                    ),
+                });
+            }
+            adopted_dead.insert(dead, spare);
+            if let Some(&prev) = adopting_spare.get(&spare) {
+                report.violations.push(Violation {
+                    invariant: Invariant::AdoptionFence,
+                    message: format!(
+                        "spare {spare} adopted both rank {prev} and rank {dead} — a spare \
+                         leaves the pool once"
+                    ),
+                });
+            }
+            adopting_spare.insert(spare, dead);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -866,5 +1078,131 @@ mod tests {
         e.provenance = Provenance::Rma;
         let r = check(&TraceLog { events: vec![e] });
         assert!(r.flags(Invariant::LeakedExposure), "{}", r.render());
+    }
+
+    #[test]
+    fn faulty_dialogue_with_dedup_is_clean() {
+        // seq 0 retransmitted once (corrupt frame discarded), seq 1 duplicated
+        // on the wire (dup discarded after delivery): the healthy shape
+        let trace = TraceLog {
+            events: vec![
+                ev(0, 0, EventKind::Send, Some(1), 5, 8),
+                ev(0, 1, EventKind::Retrans { seq: 0, attempt: 2 }, Some(1), 5, 8),
+                ev(0, 2, EventKind::Send, Some(1), 5, 8),
+                ev(1, 0, EventKind::Discard { seq: 0, dup: false }, Some(0), 5, 8),
+                ev(1, 1, EventKind::Deliver { seq: 0 }, Some(0), 5, 8),
+                ev(1, 2, EventKind::Recv, Some(0), 5, 8),
+                ev(1, 3, EventKind::Deliver { seq: 1 }, Some(0), 5, 8),
+                ev(1, 4, EventKind::Recv, Some(0), 5, 8),
+                ev(1, 5, EventKind::Discard { seq: 1, dup: true }, Some(0), 5, 8),
+            ],
+        };
+        check(&trace).assert_clean();
+    }
+
+    #[test]
+    fn double_delivery_is_flagged() {
+        let trace = TraceLog {
+            events: vec![
+                ev(1, 0, EventKind::Deliver { seq: 3 }, Some(0), 5, 8),
+                ev(1, 1, EventKind::Deliver { seq: 3 }, Some(0), 5, 8),
+            ],
+        };
+        let r = check(&trace);
+        assert!(r.flags(Invariant::AtMostOnceDelivery), "{}", r.render());
+    }
+
+    #[test]
+    fn regressing_delivery_order_is_flagged() {
+        let trace = TraceLog {
+            events: vec![
+                ev(1, 0, EventKind::Deliver { seq: 4 }, Some(0), 5, 8),
+                ev(1, 1, EventKind::Deliver { seq: 2 }, Some(0), 5, 8),
+            ],
+        };
+        let r = check(&trace);
+        assert!(r.flags(Invariant::AtMostOnceDelivery), "{}", r.render());
+    }
+
+    #[test]
+    fn dup_discard_before_delivery_is_flagged() {
+        let trace = TraceLog {
+            events: vec![
+                ev(1, 0, EventKind::Discard { seq: 0, dup: true }, Some(0), 5, 8),
+                ev(1, 1, EventKind::Deliver { seq: 0 }, Some(0), 5, 8),
+            ],
+        };
+        let r = check(&trace);
+        assert!(r.flags(Invariant::RetransDiscipline), "{}", r.render());
+    }
+
+    #[test]
+    fn stalled_retrans_attempts_are_flagged() {
+        let trace = TraceLog {
+            events: vec![
+                ev(0, 0, EventKind::Retrans { seq: 7, attempt: 2 }, Some(1), 5, 8),
+                ev(0, 1, EventKind::Retrans { seq: 7, attempt: 2 }, Some(1), 5, 8),
+            ],
+        };
+        let r = check(&trace);
+        assert!(r.flags(Invariant::RetransDiscipline), "{}", r.render());
+    }
+
+    #[test]
+    fn adoption_after_death_is_clean() {
+        let mut death = ev(2, 0, EventKind::Death, None, 0, 0);
+        death.vtime = 1.0;
+        let mut adopt = ev(4, 0, EventKind::Adopt { dead: 2, spare: 4 }, Some(2), 5, 0);
+        adopt.vtime = 2.0;
+        let r = check(&TraceLog { events: vec![death, adopt] });
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn adoption_of_a_living_rank_is_flagged() {
+        let adopt = ev(4, 0, EventKind::Adopt { dead: 2, spare: 4 }, Some(2), 5, 0);
+        let r = check(&TraceLog { events: vec![adopt] });
+        assert!(r.flags(Invariant::AdoptionFence), "{}", r.render());
+    }
+
+    #[test]
+    fn adoption_before_the_death_fence_is_flagged() {
+        let mut death = ev(2, 0, EventKind::Death, None, 0, 0);
+        death.vtime = 3.0;
+        let mut adopt = ev(4, 0, EventKind::Adopt { dead: 2, spare: 4 }, Some(2), 5, 0);
+        adopt.vtime = 2.0;
+        let r = check(&TraceLog { events: vec![death, adopt] });
+        assert!(r.flags(Invariant::AdoptionFence), "{}", r.render());
+    }
+
+    #[test]
+    fn double_adoption_is_flagged() {
+        let mut d2 = ev(2, 0, EventKind::Death, None, 0, 0);
+        d2.vtime = 1.0;
+        let mut d3 = ev(3, 0, EventKind::Death, None, 0, 0);
+        d3.vtime = 1.0;
+        // the same spare fills both holes: flagged on the spare axis
+        let mut a1 = ev(4, 0, EventKind::Adopt { dead: 2, spare: 4 }, Some(2), 5, 0);
+        a1.vtime = 2.0;
+        let mut a2 = ev(4, 1, EventKind::Adopt { dead: 3, spare: 4 }, Some(3), 5, 0);
+        a2.vtime = 3.0;
+        let r = check(&TraceLog {
+            events: vec![d2, d3, a1, a2],
+        });
+        assert!(r.flags(Invariant::AdoptionFence), "{}", r.render());
+    }
+
+    #[test]
+    fn dying_sender_orphan_is_excused() {
+        // escalation shape: the send is recorded, the wire never delivers,
+        // the sender declares death — residue, not an orphan
+        let trace = TraceLog {
+            events: vec![
+                ev(0, 0, EventKind::Send, Some(1), 5, 8),
+                ev(0, 1, EventKind::Death, None, 0, 0),
+            ],
+        };
+        let r = check(&trace);
+        assert!(r.is_clean(), "{}", r.render());
     }
 }

@@ -38,13 +38,27 @@
 //!                             death at slot-tick T — plans with
 //!                             replica layers heal it in-run and report
 //!                             a `recovery:` line, everything else
-//!                             reports Unrecoverable)
+//!                             reports Unrecoverable;
+//!                             --fault-drop/--fault-dup/--fault-corrupt/
+//!                             --fault-delay P (probabilities in [0, 1],
+//!                             seeded by --fault-seed S) run the whole
+//!                             multiply over an adversarial network —
+//!                             the reliability layer retransmits and the
+//!                             wasted traffic is reported as `retrans`;
+//!                             --fault-policy retry|escalate picks
+//!                             between healing and immediate rank death;
+//!                             --spares S parks S hot-spare ranks that
+//!                             adopt a dead seat between iterations.
+//!                             Malformed fault/chaos specs exit with
+//!                             code 4 — distinct from verify failures
+//!                             (1), usage errors (2) and Unrecoverable
+//!                             runs (3))
 
 use dbcsr::bench::figures;
 use dbcsr::bench::harness::{run_spec_opts, AlgoSpec, Engine, RunSpec, Shape};
 use dbcsr::multiply::planner;
 use dbcsr::bench::table::fmt_secs;
-use dbcsr::dist::{verify, NetModel, RunOpts, Transport};
+use dbcsr::dist::{verify, FaultPlan, FaultPolicy, NetModel, RunOpts, Transport};
 use dbcsr::backend::autotune::{tuned_to_json, Autotuner};
 use dbcsr::config::Args;
 use dbcsr::matrix::Mode;
@@ -189,6 +203,20 @@ fn run_file(args: &Args) {
             _ => Engine::DbcsrDensified,
         };
         let rpn = get(section, "rpn", 4);
+        // chaos keys mirror the CLI flags: fault-seed, fault-drop/dup/
+        // corrupt/delay, fault-policy, spares (section or defaults scope)
+        let (faultnet, fault_policy, spares) = parse_chaos(&|key| {
+            cf.get(&format!("{section}.{key}"))
+                .or_else(|| cf.get(&format!("defaults.{key}")))
+                .map(String::from)
+        });
+        let iterations = get(section, "iterations", 1);
+        if spares > 0 && iterations <= 1 {
+            fault_spec_error(format!(
+                "[{section}] spares = {spares} needs iterations > 1: only a \
+                 steady-state resident session can splice a spare into a dead seat"
+            ));
+        }
         let spec = RunSpec {
             nodes: get(section, "nodes", 1),
             rpn,
@@ -239,12 +267,15 @@ fn run_file(args: &Args) {
                     occ
                 })
                 .unwrap_or(1.0),
-            iterations: get(section, "iterations", 1),
+            iterations,
             // fault = <rank>@<tick> injects a rank death mid-multiply
             fault: cf
                 .get(&format!("{section}.fault"))
                 .or_else(|| cf.get("defaults.fault"))
-                .map(parse_fault),
+                .map(|v| parse_fault(v).unwrap_or_else(fault_spec_error)),
+            faultnet,
+            fault_policy,
+            spares,
         };
         // `detect-horizon` (seconds) tunes the failure detector; the
         // pre-rename `horizon` key is kept as a deprecated alias
@@ -270,7 +301,7 @@ fn run_file(args: &Args) {
             continue;
         }
         println!(
-            "[{section}] {}{} (stacks {}, comm {:.1} MiB{}{}{})",
+            "[{section}] {}{} (stacks {}, comm {:.1} MiB{}{}{}{})",
             fmt_secs(r.seconds),
             if r.iterations > 1 {
                 format!(" / {} iters + setup {}", r.iterations, fmt_secs(r.repl_seconds))
@@ -296,19 +327,80 @@ fn run_file(args: &Args) {
             } else {
                 String::new()
             },
+            if r.retrans_bytes > 0 {
+                format!(
+                    ", retrans {:.1} MiB / {:.3}s",
+                    r.retrans_bytes as f64 / (1 << 20) as f64,
+                    r.retrans_seconds
+                )
+            } else {
+                String::new()
+            },
             if r.oom { ", OOM" } else { "" }
         );
     }
 }
 
+/// Exit code 4: a malformed fault/chaos specification. These are user
+/// errors in the injection surface, not library bugs — report the exact
+/// token that failed and exit with a code harness scripts can branch on
+/// (distinct from verify failures, usage errors and Unrecoverable runs).
+fn fault_spec_error(msg: String) -> ! {
+    eprintln!("fault spec error: {msg}");
+    std::process::exit(4);
+}
+
 /// `<rank>@<tick>` — the runfile `fault` key and the CLI's
-/// `--kill-rank R --kill-at T` in one compact form.
-fn parse_fault(v: &str) -> FaultSpec {
-    let (r, t) = v.split_once('@').expect("fault = <rank>@<slot-tick>");
-    FaultSpec {
-        rank: r.trim().parse().expect("fault rank must be an integer"),
-        at_tick: t.trim().parse().expect("fault slot-tick must be an integer"),
-    }
+/// `--kill-rank R --kill-at T` in one compact form. Every malformed
+/// shape comes back as a typed error naming the offending token.
+fn parse_fault(v: &str) -> Result<FaultSpec, String> {
+    let (r, t) = v
+        .split_once('@')
+        .ok_or_else(|| format!("fault must be <rank>@<slot-tick>, got {v:?}"))?;
+    Ok(FaultSpec {
+        rank: r
+            .trim()
+            .parse()
+            .map_err(|_| format!("fault rank must be an integer, got {:?}", r.trim()))?,
+        at_tick: t
+            .trim()
+            .parse()
+            .map_err(|_| format!("fault slot-tick must be an integer, got {:?}", t.trim()))?,
+    })
+}
+
+/// The chaos knobs shared by `run` flags and runfile keys: a seeded
+/// wire-fault plan, the reliability policy and the hot-spare pool size.
+/// `get` abstracts over `--fault-drop 0.01` vs `fault-drop = 0.01`; any
+/// malformed value exits 4 through [`fault_spec_error`].
+fn parse_chaos(get: &dyn Fn(&str) -> Option<String>) -> (Option<FaultPlan>, FaultPolicy, usize) {
+    let rate = |key: &str| -> f64 {
+        get(key).map_or(0.0, |v| match v.parse::<f64>() {
+            Ok(p) if (0.0..=1.0).contains(&p) => p,
+            Ok(p) => fault_spec_error(format!("{key} must be a probability in [0, 1], got {p}")),
+            Err(_) => fault_spec_error(format!("{key} must be a float in [0, 1], got {v:?}")),
+        })
+    };
+    let plan = FaultPlan {
+        seed: get("fault-seed").map_or(FaultPlan::default().seed, |v| {
+            v.parse()
+                .unwrap_or_else(|_| fault_spec_error(format!("fault-seed must be an integer, got {v:?}")))
+        }),
+        drop: rate("fault-drop"),
+        dup: rate("fault-dup"),
+        corrupt: rate("fault-corrupt"),
+        delay: rate("fault-delay"),
+    };
+    let policy = get("fault-policy").map_or(FaultPolicy::Retry, |v| match v.as_str() {
+        "retry" => FaultPolicy::Retry,
+        "escalate" => FaultPolicy::Escalate,
+        other => fault_spec_error(format!("fault-policy must be retry|escalate, got {other:?}")),
+    });
+    let spares = get("spares").map_or(0, |v| {
+        v.parse()
+            .unwrap_or_else(|_| fault_spec_error(format!("spares must be an integer, got {v:?}")))
+    });
+    (plan.is_active().then_some(plan), policy, spares)
 }
 
 fn run_one(args: &Args, scale: usize, mode: Mode) {
@@ -356,9 +448,27 @@ fn run_one(args: &Args, scale: usize, mode: Mode) {
         "--occupancy must be in (0, 1], got {occupancy}"
     );
     let fault = args.flag("kill-rank").map(|r| FaultSpec {
-        rank: r.parse().expect("--kill-rank must be a rank index"),
-        at_tick: args.usize_flag("kill-at", 0),
+        rank: r.parse().unwrap_or_else(|_| {
+            fault_spec_error(format!("--kill-rank must be a rank index, got {r:?}"))
+        }),
+        at_tick: args
+            .try_usize_flag("kill-at", 0)
+            .unwrap_or_else(fault_spec_error),
     });
+    if args.flag("kill-at").is_some() && fault.is_none() {
+        fault_spec_error("--kill-at needs --kill-rank to name the victim".to_string());
+    }
+    // flag names match the runfile keys one for one: --fault-seed,
+    // --fault-drop/dup/corrupt/delay, --fault-policy, --spares
+    let (faultnet, fault_policy, spares) =
+        parse_chaos(&|key| args.flag(key).map(String::from));
+    let iterations = args.usize_flag("iterations", 1);
+    if spares > 0 && iterations <= 1 {
+        fault_spec_error(format!(
+            "--spares {spares} needs --iterations > 1: only a steady-state \
+             resident session can splice a spare into a dead seat"
+        ));
+    }
     let spec = RunSpec {
         nodes: args.usize_flag("nodes", 1),
         rpn,
@@ -373,8 +483,11 @@ fn run_one(args: &Args, scale: usize, mode: Mode) {
         algo,
         plan_verbose: args.switch("plan-verbose"),
         occupancy,
-        iterations: args.usize_flag("iterations", 1),
+        iterations,
         fault,
+        faultnet,
+        fault_policy,
+        spares,
     };
     println!("spec: {spec:?}");
     if spec.plan_verbose && engine != Engine::Pdgemm {
@@ -472,7 +585,7 @@ fn run_one(args: &Args, scale: usize, mode: Mode) {
         r.wall,
     );
     println!(
-        "stacks {}  block_mults {}  flops {:.3e}  comm {:.1} MiB in {} msgs (wait {:.3}s{}, meta {:.2} MiB)  densify {:.1} MiB  dev peak {:.2} GiB{}",
+        "stacks {}  block_mults {}  flops {:.3e}  comm {:.1} MiB in {} msgs (wait {:.3}s{}{}, meta {:.2} MiB)  densify {:.1} MiB  dev peak {:.2} GiB{}",
         r.stats.stacks,
         r.stats.block_mults,
         r.stats.flops as f64,
@@ -484,10 +597,26 @@ fn run_one(args: &Args, scale: usize, mode: Mode) {
         } else {
             String::new()
         },
+        if r.retrans_bytes > 0 {
+            // retransmitted traffic is wasted wire time, disjoint from
+            // the goodput counted in `comm`
+            format!(
+                ", retrans {:.1} MiB / {:.3}s",
+                r.retrans_bytes as f64 / (1 << 20) as f64,
+                r.retrans_seconds
+            )
+        } else {
+            String::new()
+        },
         r.stats.meta_bytes as f64 / (1 << 20) as f64,
         r.stats.densify_bytes as f64 / (1 << 20) as f64,
         r.stats.dev_mem_peak as f64 / (1 << 30) as f64,
-        if r.oom { "  ** OOM **" } else { "" }
+        match (r.stats.overlap_downgraded, r.oom) {
+            (true, true) => "  (overlap downgraded: faults force synchronous shifts)  ** OOM **",
+            (true, false) => "  (overlap downgraded: faults force synchronous shifts)",
+            (false, true) => "  ** OOM **",
+            (false, false) => "",
+        }
     );
     if r.stats.a_total_blocks > 0
         && (r.occupancy_a < 1.0 || r.occupancy_b < 1.0 || r.stats.filtered_blocks > 0)

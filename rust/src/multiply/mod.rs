@@ -38,8 +38,11 @@ use crate::util::stats::{MultiplyStats, PlanSummary};
 
 pub use crate::dist::Transport;
 pub use engine::{EngineOpts, LocalEngine};
-pub use recovery::{FaultSpec, RecoveryPlan};
-pub use session::{PipelineSession, ResidentOperand, Sides};
+pub use recovery::{adoption_coordinator, adoption_pairs, FaultSpec, RecoveryPlan};
+pub use session::{
+    spare_serve, AdoptedSeat, AdoptionReport, PipelineSession, ResidentOperand, Sides,
+    SpareOutcome,
+};
 
 /// Which data-exchange algorithm to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -269,6 +272,7 @@ fn plan_summary_for(
         occ_b: b.local_occupancy(),
         failure_rate: 0.0,
         recovery: planner::RecoveryModel::default(),
+        spares: 0,
     };
     let cand = planner::predict_grid(&input, rows, cols, layers);
     PlanSummary {
@@ -380,7 +384,22 @@ pub fn multiply(
     // accounting property test)
     stats.comm_wait_s = (comm1.wait_seconds - comm0.wait_seconds).max(0.0);
     stats.meta_bytes = comm1.meta_bytes - comm0.meta_bytes;
+    stats.retrans_bytes = comm1.retrans_bytes - comm0.retrans_bytes;
+    stats.retrans_s = (comm1.retrans_s - comm0.retrans_s).max(0.0);
     stats.plan = Some(plan);
+    // fault injection forces synchronous shifts (see MultiplyConfig::
+    // overlap) — record and announce the downgrade instead of silently
+    // ignoring the requested optimization
+    if cfg.overlap && !cfg.faults.is_empty() {
+        stats.overlap_downgraded = true;
+        if world.rank() == 0 {
+            println!(
+                "[notice] overlap requested but fault injection forces \
+                 synchronous shifts — comm/compute overlap disabled for \
+                 this multiply"
+            );
+        }
+    }
     book_sparse_stats(&mut stats, a, b, &c, filtered, holds_result);
     if cfg.plan_verbose && world.rank() == 0 {
         println!(

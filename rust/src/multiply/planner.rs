@@ -135,6 +135,17 @@ pub struct PlanInput {
     pub failure_rate: f64,
     /// Price parameters of the recovery protocol itself.
     pub recovery: RecoveryModel,
+    /// Hot-spare ranks parked for the run (`dist::RunOpts::spares`).
+    /// With a spare available, a death at `c > 1` is priced as the
+    /// faulted call's in-run heal plus one adoption fetch (the spare
+    /// pulls the dead rank's native A/B shares from a replica layer) —
+    /// after which the grid is full-width again, so the remaining
+    /// horizon runs failure-free. Without spares the survivors stay
+    /// degraded: every remaining call re-runs the lost rank's
+    /// slot-ticks. Spares therefore pay off only when the horizon
+    /// leaves enough calls after the expected death to amortize the
+    /// adoption fetch.
+    pub spares: usize,
 }
 
 /// Cost parameters of the replica-based recovery path
@@ -546,11 +557,25 @@ pub fn predict_grid(input: &PlanInput, rows: usize, cols: usize, layers: usize) 
     // replicas the survivors fetch the lost rank's A/B share from a
     // sibling layer (one hop) and a designated survivor re-runs the lost
     // slot-ticks (≈ one call's per-rank compute) — the
-    // `multiply::recovery` protocol's cost structure.
+    // `multiply::recovery` protocol's cost structure. What happens
+    // *after* the faulted call depends on the spare pool: without one
+    // the grid stays degraded and every remaining call of the horizon
+    // re-runs the lost slot-ticks (a death midway through the horizon
+    // leaves (h+1)/2 such calls in expectation, which reduces to the
+    // historical one-call charge at h = 1); with a hot spare parked,
+    // one adoption fetch (the spare pulls the dead rank's native A/B
+    // shares, same one-hop bytes) restores full width and the rest of
+    // the horizon is failure-free.
     let failure_free = repl_s + skew_s + shift_s + reduce_s + compute_s;
     let recovery_s = if input.failure_rate > 0.0 {
         let heal = if layers > 1 {
-            hop(bytes_a + bytes_b) + compute_s / h as f64
+            let fetch = hop(bytes_a + bytes_b);
+            let per_call = compute_s / h as f64;
+            if input.spares > 0 {
+                fetch + per_call + fetch
+            } else {
+                fetch + per_call * (h as f64 + 1.0) / 2.0
+            }
         } else {
             failure_free
         };
@@ -671,6 +696,7 @@ mod tests {
             occ_b: 1.0,
             failure_rate: 0.0,
             recovery: RecoveryModel::default(),
+            spares: 0,
         }
     }
 
@@ -953,6 +979,41 @@ mod tests {
         let c4 = predict_grid(&inp, 2, 2, 4).cost;
         assert!(c4.recovery_s > 0.0);
         assert!(c4.recovery_s < c1.recovery_s, "{c4:?} vs {c1:?}");
+    }
+
+    #[test]
+    fn spares_cap_the_degraded_horizon() {
+        // without a spare the lost rank's slot-ticks are re-run on every
+        // remaining call of the horizon; with one, a single adoption
+        // fetch restores full width. Long horizons must therefore price
+        // spares cheaper, h = 1 must not (nothing runs after the faulted
+        // call), and failure-free pricing must ignore the field.
+        let mut inp = input(16, 1408, 1408, 1408, Transport::TwoSided);
+        inp.horizon = 20;
+        inp.failure_rate = 1.0;
+        let degraded = predict_grid(&inp, 2, 2, 4).cost;
+        inp.spares = 2;
+        let adopted = predict_grid(&inp, 2, 2, 4).cost;
+        assert!(
+            adopted.recovery_s < degraded.recovery_s,
+            "a hot spare must beat degraded-width operation over a long \
+             horizon: {adopted:?} vs {degraded:?}"
+        );
+        inp.horizon = 1;
+        let one_spare = predict_grid(&inp, 2, 2, 4).cost;
+        inp.spares = 0;
+        let one_bare = predict_grid(&inp, 2, 2, 4).cost;
+        assert!(
+            one_spare.recovery_s >= one_bare.recovery_s,
+            "at h = 1 a spare has nothing left to accelerate"
+        );
+        inp.failure_rate = 0.0;
+        inp.spares = 2;
+        assert_eq!(
+            predict_grid(&inp, 2, 2, 4).cost.recovery_s,
+            0.0,
+            "failure-free pricing ignores the spare pool"
+        );
     }
 
     #[test]

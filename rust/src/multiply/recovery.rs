@@ -40,6 +40,26 @@
 //! the recovery path stays deterministic under the virtual clock.
 //! Recovery traffic and time are booked in
 //! `MultiplyStats::{recovery_bytes, recovery_s}`.
+//!
+//! ## Hot spares
+//!
+//! Healing keeps a degraded session *correct*, but every later multiply
+//! still pays replica fetches for the dead position. With
+//! `RunOpts::spares > 0` the run parks extra ranks past the compute
+//! world ([`super::session::spare_serve`]); after a faulted multiply,
+//! `PipelineSession::adopt_spares` splices one spare into each dead
+//! grid position: the spare rebuilds the dead rank's **native** A/B
+//! shares from a surviving replica layer over the get-only
+//! [`WIN_ADOPT_A`]/[`WIN_ADOPT_B`](crate::dist::tags::WIN_ADOPT_B)
+//! windows, catches up the verifier's phase marks, and joins a
+//! remapped [`Grid3D`] whose member list substitutes the spare's world
+//! rank at the dead position — so the *next* resident multiply runs
+//! full-width with `recovery_bytes == 0`. The pairing and the
+//! coordinator are derived from the shared fault plan
+//! ([`adoption_pairs`], [`adoption_coordinator`]), keeping adoption as
+//! agreement-free as the healing path; the verifier's `AdoptionFence`
+//! invariant pins the ordering (adopt strictly after the death, one
+//! adoption per dead rank and per spare).
 
 use std::collections::BTreeMap;
 
@@ -583,6 +603,62 @@ pub(super) fn recompute_layer(
     Ok((panels, pats))
 }
 
+/// The dead-rank → spare pairing every adoption participant derives
+/// from the shared fault plan: sorted distinct dead ranks take spare
+/// world ranks (`compute..compute + spares`) in slot order. Dead ranks
+/// beyond the pool stay dead — the session keeps routing around them at
+/// degraded width. Returns `(dead world rank, spare world rank)` pairs.
+pub fn adoption_pairs(
+    faults: &[FaultSpec],
+    compute: usize,
+    spares: usize,
+) -> Vec<(usize, usize)> {
+    let mut dead: Vec<usize> = faults.iter().map(|f| f.rank).collect();
+    dead.sort_unstable();
+    dead.dedup();
+    dead.into_iter()
+        .take(spares)
+        .enumerate()
+        .map(|(i, d)| (d, compute + i))
+        .collect()
+}
+
+/// Adoption coordinator: the lowest compute rank the fault plan leaves
+/// alive. Spares and survivors derive it identically from the shared
+/// plan, so the directive channel needs no discovery traffic.
+pub fn adoption_coordinator(faults: &[FaultSpec], compute: usize) -> usize {
+    (0..compute)
+        .find(|w| !faults.iter().any(|f| f.rank == *w))
+        .expect("Unrecoverable: the fault plan kills every compute rank")
+}
+
+/// Grid position (`layer · rows·cols + row · cols + col` — the compute
+/// world rank in the unremapped topology) owning panel `key` of the
+/// **native-layout** share on `layer`. Spare adoption uses this to find
+/// a surviving replica of each panel of a dead rank's share; resident
+/// operands are always native, so only the skewed branch of
+/// `RecoveryCtx::owner_world` applies here.
+pub(super) fn native_share_owner(
+    vg: &VGrid,
+    rows: usize,
+    cols: usize,
+    layers: usize,
+    is_a: bool,
+    key: Key,
+    layer: usize,
+) -> usize {
+    let per = rows * cols;
+    let (s0, _) = layer_ticks(vg.l, layers, layer);
+    let (row, col) = if is_a {
+        let (i, g) = key;
+        (i % rows, vg.a_skew_col_at(i, g, s0))
+    } else {
+        let (g, j) = key;
+        (vg.b_skew_row_at(g, j, s0), j % cols)
+    };
+    layer * per + row * cols + col
+}
+
 /// Post-reduce rendezvous of the survivors: a gather/release pair
 /// through the lowest alive world rank. Nobody tombstones its share
 /// exposure until every survivor — recovery roots included — is past
@@ -631,5 +707,23 @@ mod tests {
         assert_eq!(plan.dead_layers_at(5 % 4, 4), vec![1]);
         assert_eq!(plan.dead_layers_at(0, 4), Vec::<usize>::new());
         assert!(!RecoveryPlan::default().active());
+    }
+
+    #[test]
+    fn adoption_roles_are_deterministic() {
+        let faults = vec![
+            FaultSpec { rank: 5, at_tick: 1 },
+            FaultSpec { rank: 1, at_tick: 0 },
+        ];
+        // sorted dead ranks pair with spare slots in order
+        assert_eq!(adoption_pairs(&faults, 8, 2), vec![(1, 8), (5, 9)]);
+        // a short pool leaves the tail dead (degraded width)
+        assert_eq!(adoption_pairs(&faults, 8, 1), vec![(1, 8)]);
+        assert!(adoption_pairs(&[], 8, 2).is_empty());
+        assert_eq!(adoption_coordinator(&faults, 8), 0);
+        assert_eq!(
+            adoption_coordinator(&[FaultSpec { rank: 0, at_tick: 0 }], 8),
+            1
+        );
     }
 }

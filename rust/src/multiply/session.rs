@@ -32,15 +32,18 @@
 use std::collections::{BTreeMap, BTreeSet};
 
 use crate::backend::gpu_sim::DeviceOom;
-use crate::dist::{Grid3D, Transport};
+use crate::dist::{CommView, Grid3D, Payload, RmaWindow, Transport};
 use crate::matrix::{BlockLayout, DistMatrix, Distribution, LocalCsr, Mode};
 use crate::util::stats::{MultiplyStats, PlanSummary};
 
-use super::cannon::{exchange, panel_meta, rma_exchange_finish, rma_exchange_start, Key};
+use super::cannon::{
+    exchange, extract_panel, panel_meta, rma_exchange_finish, rma_exchange_start, Key,
+};
 use super::engine::LocalEngine;
-use super::recovery::RecoveryPlan;
+use super::recovery::{self, RecoveryPlan};
 use super::sparse_exchange::{
-    assemble_c_from_layouts, reduce_c_finish, reduce_c_start, CPattern, PendingReduce,
+    assemble_c_from_layouts, decode_framed_share, encode_framed_share, reduce_c_finish,
+    reduce_c_start, CPattern, PendingReduce,
 };
 use super::twofive::{
     a_skew_plan, a_start_keys, b_skew_plan, b_start_keys, layer_ticks, multiply_twofive_ft,
@@ -49,9 +52,12 @@ use super::twofive::{
 use super::vgrid::VGrid;
 use super::{planner, MultiplyConfig, MultiplyOutcome};
 
-// Residency pre-skew tags and RMA window ids, from the central
-// registry (`dist::tags` holds the non-collision assertions).
-use crate::dist::tags::{TAG_RES_SKEW_A, TAG_RES_SKEW_B, WIN_RES_SKEW_A, WIN_RES_SKEW_B};
+// Residency pre-skew and spare-adoption tags / RMA window ids, from the
+// central registry (`dist::tags` holds the non-collision assertions).
+use crate::dist::tags::{
+    TAG_RES_SKEW_A, TAG_RES_SKEW_B, TAG_SPARE_ADOPT, WIN_ADOPT_A, WIN_ADOPT_B, WIN_RES_SKEW_A,
+    WIN_RES_SKEW_B,
+};
 
 /// Which native shares an admitted operand carries. The A and B layouts
 /// differ (module docs), so admit only what the workload multiplies on:
@@ -405,7 +411,22 @@ impl PipelineSession {
         // session's cumulative sums silently
         stats.comm_wait_s = (comm1.wait_seconds - comm0.wait_seconds).max(0.0);
         stats.meta_bytes = comm1.meta_bytes - comm0.meta_bytes;
+        stats.retrans_bytes = comm1.retrans_bytes - comm0.retrans_bytes;
+        stats.retrans_s = (comm1.retrans_s - comm0.retrans_s).max(0.0);
         stats.plan = Some(plan);
+        // an active recovery plan forces every shift synchronous (the
+        // double-buffered rings cannot heal mid-flight) — surface the
+        // downgrade instead of letting `overlap` silently lie
+        if self.cfg.overlap && fault_plan.active() {
+            if world.rank() == 0 && !self.stats.overlap_downgraded {
+                println!(
+                    "[notice] overlap requested but fault injection forces \
+                     synchronous shifts — comm/compute overlap is disabled \
+                     while the session carries faults"
+                );
+            }
+            stats.overlap_downgraded = true;
+        }
         super::book_sparse_stats(&mut stats, am, bm, &c, filtered, holds);
         self.multiplies += 1;
         self.stats.merge(&stats);
@@ -507,6 +528,8 @@ impl PipelineSession {
         stats.comm_msgs = comm1.msgs_sent - comm0.msgs_sent;
         stats.comm_wait_s = (comm1.wait_seconds - comm0.wait_seconds - drain_wait).max(0.0);
         stats.meta_bytes = comm1.meta_bytes - comm0.meta_bytes;
+        stats.retrans_bytes = comm1.retrans_bytes - comm0.retrans_bytes;
+        stats.retrans_s = (comm1.retrans_s - comm0.retrans_s).max(0.0);
         stats.plan = Some(plan);
         self.pending = Some(PendingCall {
             out_panels,
@@ -616,6 +639,7 @@ impl PipelineSession {
             occ_b: bm.local_occupancy(),
             failure_rate: 0.0,
             recovery: planner::RecoveryModel::default(),
+            spares: 0,
         };
         let cand =
             planner::predict_grid(&input, self.g3.rows, self.g3.cols, self.g3.layers);
@@ -738,6 +762,354 @@ impl PipelineSession {
             b_panels.map(|(m, panels)| assemble_native(g3, &m.rows, &m.cols, &panels, m.mode)),
         )
     }
+
+    /// Splice parked hot spares into the grid seats of dead ranks, so
+    /// the *next* resident multiply runs at full width with a zero
+    /// recovery bill. Collective over the session's surviving compute
+    /// ranks, paired with [`spare_serve`] on every spare; `run_world`
+    /// must be the full world `run_ranks_opts` handed the rank closure
+    /// (compute ranks `0..P`, spares `P..P+S`).
+    ///
+    /// The protocol is agreement-free: every participant derives the
+    /// same (dead, spare) pairing and the same coordinator from the
+    /// shared fault plan ([`recovery::adoption_pairs`] /
+    /// [`recovery::adoption_coordinator`]). The coordinator sends each
+    /// adopted spare a directive on `TAG_SPARE_ADOPT` — the one channel
+    /// allowed to cross quiescence epochs — and releases the rest.
+    /// Survivors then expose their native shares of `a` and `b` on the
+    /// fresh `WIN_ADOPT_A`/`WIN_ADOPT_B` windows over the remapped
+    /// full-width world; the spares pull what the dead rank held
+    /// (get-only, origin-charged), and a recovery fence orders every
+    /// fetch before the exposures are retired. Dead ranks beyond the
+    /// spare pool stay in the fault list — later multiplies keep
+    /// routing around them.
+    ///
+    /// Must run after the faulted multiply (the spares derive roles
+    /// from the same plan, so adoption before anyone died would
+    /// desynchronize the two sides); with an empty fault list it only
+    /// releases the spares. Call it exactly once per session that was
+    /// started with `RunOpts::spares > 0` — a parked spare blocks until
+    /// its directive arrives.
+    pub fn adopt_spares(
+        &mut self,
+        run_world: &CommView,
+        a: &ResidentOperand,
+        b: &ResidentOperand,
+    ) -> AdoptionReport {
+        let compute = self.g3.rows * self.g3.cols * self.g3.layers;
+        let spares = run_world.size() - compute;
+        assert!(
+            self.cfg.faults.is_empty() || self.multiplies > 0,
+            "adopt_spares before the faulted multiply: nobody has died yet, and \
+             the spares derive their roles from the same fault plan"
+        );
+        let pairs = recovery::adoption_pairs(&self.cfg.faults, compute, spares);
+        let released: Vec<usize> = (compute + pairs.len()..compute + spares).collect();
+        let coord = recovery::adoption_coordinator(&self.cfg.faults, compute);
+        // a dead seat takes no part in its own replacement — the pairing
+        // is deterministic, so report it without touching the wire (the
+        // caller must not drive this session again; its seat now belongs
+        // to a spare)
+        if run_world.killed() {
+            return AdoptionReport {
+                adopted: pairs,
+                released,
+                bytes: 0,
+                seconds: 0.0,
+            };
+        }
+        let t0 = run_world.now();
+        if run_world.rank() == coord {
+            for &(dead, spare) in &pairs {
+                run_world.send(
+                    spare,
+                    TAG_SPARE_ADOPT,
+                    Payload::F32(vec![
+                        dead as f32,
+                        run_world.phases() as f32,
+                        self.multiplies as f32,
+                    ]),
+                );
+            }
+            for &spare in &released {
+                run_world.send(spare, TAG_SPARE_ADOPT, Payload::Empty);
+            }
+        }
+        if pairs.is_empty() {
+            return AdoptionReport {
+                adopted: pairs,
+                released,
+                bytes: 0,
+                seconds: run_world.now() - t0,
+            };
+        }
+        let b0 = run_world.stats();
+        let members = remap_members(compute, &pairs);
+        let g3 = Grid3D::new(
+            run_world.subview(&members),
+            self.g3.rows,
+            self.g3.cols,
+            self.g3.layers,
+        );
+        // serve the replica fetches: fresh window ids keep every
+        // participant on window instance 1, so the verifier's
+        // cross-instance get check stays exact
+        let mut win_a = RmaWindow::new(&g3.world, WIN_ADOPT_A);
+        let mut win_b = RmaWindow::new(&g3.world, WIN_ADOPT_B);
+        win_a.expose(encode_framed_share(a.a_share.as_ref().expect(
+            "adoption serves the A·B pipeline shape: left operand carries the A share",
+        )));
+        win_b.expose(encode_framed_share(b.b_share.as_ref().expect(
+            "adoption serves the A·B pipeline shape: right operand carries the B share",
+        )));
+        let leftover: Vec<usize> = self
+            .cfg
+            .faults
+            .iter()
+            .map(|f| f.rank)
+            .filter(|d| !pairs.iter().any(|(pd, _)| pd == d))
+            .collect();
+        recovery::survivor_fence(
+            &g3.world,
+            &RecoveryPlan {
+                kill_now: Vec::new(),
+                already_dead: leftover.clone(),
+            },
+        );
+        win_a.close_epoch(&[]);
+        win_b.close_epoch(&[]);
+        let b1 = run_world.stats();
+        let bytes = (b1.bytes_sent - b0.bytes_sent) + (b1.meta_bytes - b0.meta_bytes);
+        let seconds = run_world.now() - t0;
+        self.g3 = g3;
+        self.cfg
+            .faults
+            .retain(|f| leftover.contains(&f.rank));
+        self.stats.recovery_bytes += bytes;
+        self.stats.recovery_s += seconds;
+        AdoptionReport {
+            adopted: pairs,
+            released,
+            bytes,
+            seconds,
+        }
+    }
+}
+
+/// Everything one adoption round did, as seen from a surviving rank:
+/// the (dead, spare) pairs spliced in, the spare world ranks released
+/// unused, and this rank's share of the adoption bill (survivors serve
+/// the fetches passively — get traffic is origin-charged on the
+/// spares, so a survivor's `bytes` is just its fence traffic).
+#[derive(Clone, Debug, Default)]
+pub struct AdoptionReport {
+    pub adopted: Vec<(usize, usize)>,
+    pub released: Vec<usize>,
+    pub bytes: u64,
+    pub seconds: f64,
+}
+
+/// What a parked spare came back with: released unused, or adopted
+/// into a dead rank's grid seat.
+pub enum SpareOutcome {
+    /// Released without being needed — no deaths, or earlier spares in
+    /// the pool covered them all.
+    Idle,
+    /// Adopted: this rank now owns the dead rank's grid position.
+    Adopted(Box<AdoptedSeat>),
+}
+
+/// The seat an adopted spare takes over: a session on the remapped
+/// full-width grid, synchronized to the survivors' multiply count, plus
+/// the dead rank's native operands rebuilt from surviving replica
+/// layers. The next `multiply_resident` on this session is
+/// bit-identical to — and priced like — a failure-free full-width call.
+pub struct AdoptedSeat {
+    pub session: PipelineSession,
+    pub a: ResidentOperand,
+    pub b: ResidentOperand,
+    /// Replica-fetch traffic this spare paid to rebuild the shares
+    /// (also folded into the session's `recovery_bytes`).
+    pub recovery_bytes: u64,
+    /// Virtual seconds from the adoption directive to the fence.
+    pub recovery_s: f64,
+}
+
+/// Park a spare rank until the compute ranks either adopt it (a death
+/// left a grid seat to fill) or release it. Collective counterpart of
+/// [`PipelineSession::adopt_spares`]: every rank `run_ranks_opts`
+/// spawns past the compute world runs this instead of the compute
+/// body. `shape` is the compute grid `(rows, cols, layers)`; the
+/// layout arguments describe the operand pair the survivors expose
+/// (the `A·B` shape of `admit_pair`), and `cfg` must equal the compute
+/// ranks' config — the fault plan in it is what makes the adoption
+/// pairing agreement-free.
+pub fn spare_serve(
+    run_world: &CommView,
+    shape: (usize, usize, usize),
+    cfg: &MultiplyConfig,
+    a_layouts: (&BlockLayout, &BlockLayout),
+    b_layouts: (&BlockLayout, &BlockLayout),
+    mode: Mode,
+) -> SpareOutcome {
+    let (rows, cols, layers) = shape;
+    let compute = rows * cols * layers;
+    let spares = run_world.size() - compute;
+    let coord = recovery::adoption_coordinator(&cfg.faults, compute);
+    let hdr = match run_world.recv(coord, TAG_SPARE_ADOPT) {
+        Payload::Empty => return SpareOutcome::Idle,
+        Payload::F32(v) => v,
+        other => panic!("spare adoption directive must be F32 or Empty, got {other:?}"),
+    };
+    let t0 = run_world.now();
+    let dead = hdr[0] as usize;
+    let marks = hdr[1] as u64;
+    let multiplies = hdr[2] as u64;
+    // replay the survivors' quiescence marks before any paired traffic:
+    // the channel checker matches sends and receives by phase, and the
+    // directive is the one message allowed to cross epochs
+    for _ in 0..marks {
+        run_world.phase_mark();
+    }
+    let pairs = recovery::adoption_pairs(&cfg.faults, compute, spares);
+    let me = run_world.rank();
+    debug_assert_eq!(
+        pairs.iter().find(|(_, s)| *s == me).map(|(d, _)| *d),
+        Some(dead),
+        "adoption directive disagrees with the pairing derived from the fault plan"
+    );
+    let members = remap_members(compute, &pairs);
+    let g3 = Grid3D::new(run_world.subview(&members), rows, cols, layers);
+    // every dead grid position is skipped as a replica owner: positions
+    // beyond the spare pool hold a corpse, adopted ones hold a spare
+    // with nothing exposed
+    let mut dead_positions: Vec<usize> = cfg.faults.iter().map(|f| f.rank).collect();
+    dead_positions.sort_unstable();
+    dead_positions.dedup();
+    let win_a = RmaWindow::new(&g3.world, WIN_ADOPT_A);
+    let win_b = RmaWindow::new(&g3.world, WIN_ADOPT_B);
+    let (r, c) = g3.grid.coords();
+    let lv = sweep_period(rows, cols, layers);
+    let vg = VGrid::with_period(rows, cols, lv, r, c);
+    let (s0, _) = layer_ticks(lv, layers, g3.layer);
+    let slots = vg.slots();
+    let b0 = run_world.stats();
+    let a_native = fetch_native_share(
+        &g3,
+        &win_a,
+        true,
+        &a_start_keys(&vg, &slots, s0),
+        &vg,
+        &dead_positions,
+        a_layouts,
+        mode,
+    );
+    let b_native = fetch_native_share(
+        &g3,
+        &win_b,
+        false,
+        &b_start_keys(&vg, &slots, s0),
+        &vg,
+        &dead_positions,
+        b_layouts,
+        mode,
+    );
+    let b1 = run_world.stats();
+    g3.world.record_adopt(dead, me);
+    // the fence proves every spare is past its last fetch before the
+    // survivors retire their exposures; this spare never exposed, so it
+    // has no epoch of its own to close
+    let leftover: Vec<usize> = dead_positions
+        .iter()
+        .copied()
+        .filter(|d| !pairs.iter().any(|(pd, _)| pd == d))
+        .collect();
+    recovery::survivor_fence(
+        &g3.world,
+        &RecoveryPlan {
+            kill_now: Vec::new(),
+            already_dead: leftover.clone(),
+        },
+    );
+    let recovery_bytes = (b1.bytes_sent - b0.bytes_sent) + (b1.meta_bytes - b0.meta_bytes);
+    let recovery_s = run_world.now() - t0;
+    let mut cfg = cfg.clone();
+    cfg.faults.retain(|f| leftover.contains(&f.rank));
+    let mut session = PipelineSession::new(g3, cfg);
+    session.multiplies = multiplies;
+    session.stats.recovery_bytes += recovery_bytes;
+    session.stats.recovery_s += recovery_s;
+    SpareOutcome::Adopted(Box::new(AdoptedSeat {
+        session,
+        a: ResidentOperand::from_shares(Some(a_native), None),
+        b: ResidentOperand::from_shares(None, Some(b_native)),
+        recovery_bytes,
+        recovery_s,
+    }))
+}
+
+/// Member list of the remapped full-width world: grid seat `w` keeps
+/// world rank `w` unless a spare adopted it.
+fn remap_members(compute: usize, pairs: &[(usize, usize)]) -> Vec<usize> {
+    (0..compute)
+        .map(|w| {
+            pairs
+                .iter()
+                .find(|(d, _)| *d == w)
+                .map_or(w, |&(_, s)| s)
+        })
+        .collect()
+}
+
+/// Rebuild one native-layout share for an adopted spare: for every
+/// panel key the dead rank held at its tick-`s0` start layout, pick the
+/// lowest layer whose replica owner's position is alive, pull that
+/// owner's whole framed share once, and extract the panels locally.
+/// Bit-identical to what the dead rank held — framed decode is
+/// lossless and panel extraction is a pure function of the replicated
+/// operand.
+#[allow(clippy::too_many_arguments)]
+fn fetch_native_share(
+    g3: &Grid3D,
+    win: &RmaWindow,
+    is_a: bool,
+    keys: &[Key],
+    vg: &VGrid,
+    dead_positions: &[usize],
+    layouts: (&BlockLayout, &BlockLayout),
+    mode: Mode,
+) -> DistMatrix {
+    let (rows_l, cols_l) = layouts;
+    let mut shares: BTreeMap<usize, DistMatrix> = BTreeMap::new();
+    let mut panels: BTreeMap<Key, LocalCsr> = BTreeMap::new();
+    for &key in keys {
+        let owner = (0..g3.layers)
+            .map(|l| {
+                recovery::native_share_owner(vg, g3.rows, g3.cols, g3.layers, is_a, key, l)
+            })
+            .find(|pos| !dead_positions.contains(pos))
+            .expect("Unrecoverable: every replica owner of an adoption panel is dead");
+        if !shares.contains_key(&owner) {
+            let payload = win.try_get(owner).unwrap_or_else(|d| {
+                panic!("adoption share of position {owner} unavailable ({d})")
+            });
+            let local = decode_framed_share(payload, rows_l, cols_l, mode);
+            shares.insert(
+                owner,
+                DistMatrix {
+                    rows: rows_l.clone(),
+                    cols: cols_l.clone(),
+                    row_dist: Distribution::cyclic(g3.rows),
+                    col_dist: Distribution::cyclic(g3.cols),
+                    coords: g3.grid.coords(),
+                    local,
+                    mode,
+                },
+            );
+        }
+        panels.insert(key, extract_panel(&shares[&owner], vg, key.0, key.1));
+    }
+    assemble_native(g3, rows_l, cols_l, &panels, mode)
 }
 
 /// Assemble skewed panels into one native-layout matrix: the union of

@@ -135,6 +135,13 @@ impl From<usize> for Json {
         Json::Num(x as f64)
     }
 }
+// byte counters (`CommStats`/`MultiplyStats`) are u64; precision loss
+// above 2^53 is acceptable for bench records
+impl From<u64> for Json {
+    fn from(x: u64) -> Self {
+        Json::Num(x as f64)
+    }
+}
 impl From<&str> for Json {
     fn from(s: &str) -> Self {
         Json::Str(s.to_string())

@@ -142,6 +142,23 @@ pub struct MultiplyStats {
     /// peer's silence, fetching replica shares, re-running the lost
     /// rank's slot-ticks, and the survivor fence before window teardown.
     pub recovery_s: f64,
+    /// Wire bytes the reliability layer spent on frames that did not
+    /// deliver: dropped, duplicated, and corrupt transmissions plus
+    /// their retransmissions (`dist::faultnet`). Disjoint from
+    /// `comm_bytes`, which keeps counting goodput only — a fault-free
+    /// run has `retrans_bytes == 0` no matter the fault plan knobs.
+    pub retrans_bytes: u64,
+    /// Virtual seconds of retransmission overhead: backoff waits and
+    /// injected delay spikes charged by the fault plan. A conservative
+    /// (never under-counting) bound on the slowdown vs the same run on
+    /// a clean fabric.
+    pub retrans_s: f64,
+    /// True when `MultiplyConfig::overlap` was requested but an active
+    /// fault/recovery plan forced the shifts synchronous — the overlap
+    /// machinery cannot heal a dead ring mid-flight, and silently
+    /// dropping the optimization would make `--overlap` runs lie.
+    /// `merge` ORs, so one downgraded call marks the aggregate.
+    pub overlap_downgraded: bool,
     /// Occupancy accounting: present and total block slots of this
     /// rank's operand and result shares (result counted *after*
     /// filtering). Kept as counter pairs so `merge` aggregates exactly;
@@ -185,6 +202,9 @@ impl MultiplyStats {
         self.filtered_blocks += o.filtered_blocks;
         self.recovery_bytes += o.recovery_bytes;
         self.recovery_s += o.recovery_s;
+        self.retrans_bytes += o.retrans_bytes;
+        self.retrans_s += o.retrans_s;
+        self.overlap_downgraded |= o.overlap_downgraded;
         self.a_nnz_blocks += o.a_nnz_blocks;
         self.a_total_blocks += o.a_total_blocks;
         self.b_nnz_blocks += o.b_nnz_blocks;
@@ -291,6 +311,26 @@ mod tests {
         assert_eq!(a.occupancy_b(), 0.0, "uncounted defaults to zero");
         assert_eq!(a.meta_bytes, 24);
         assert_eq!(a.filtered_blocks, 4);
+    }
+
+    #[test]
+    fn merge_sums_retrans_and_ors_the_downgrade() {
+        let mut a = MultiplyStats {
+            retrans_bytes: 7,
+            retrans_s: 0.5,
+            ..Default::default()
+        };
+        a.merge(&MultiplyStats {
+            retrans_bytes: 3,
+            retrans_s: 0.25,
+            overlap_downgraded: true,
+            ..Default::default()
+        });
+        assert_eq!(a.retrans_bytes, 10);
+        assert!((a.retrans_s - 0.75).abs() < 1e-12);
+        assert!(a.overlap_downgraded, "one downgraded call marks the aggregate");
+        a.merge(&MultiplyStats::default());
+        assert!(a.overlap_downgraded, "the flag is sticky");
     }
 
     #[test]

@@ -1,0 +1,404 @@
+//! Integration: the adversarial network substrate. A seeded
+//! [`FaultPlan`] drops, duplicates, corrupts and delays frames on every
+//! link while a 16-rank multiply runs over it — the reliability layer
+//! must absorb all of it: C stays **bit-identical** to the fault-free
+//! run on all three transports and across the Cannon/2.5D family, the
+//! wasted traffic is visible in `retrans_bytes`/`retrans_s` (and only
+//! when faults were actually injected), and a traced chaos run satisfies
+//! every protocol invariant including `AtMostOnceDelivery` and
+//! `RetransDiscipline`. The hot-spare half: a rank death mid-session
+//! with a parked spare splices the spare into the dead grid seat — every
+//! later resident multiply runs full-width, books zero recovery bytes,
+//! and lands within 5% of the failure-free per-call time.
+
+use dbcsr::bench::harness::{run_spec, run_spec_verified, AlgoSpec, Engine, RunSpec, Shape};
+use dbcsr::dist::{
+    run_ranks_opts, FaultPlan, FaultPolicy, Grid2D, Grid3D, NetModel, RunOpts, Transport,
+};
+use dbcsr::matrix::matrix::Fill;
+use dbcsr::matrix::{BlockLayout, DistMatrix, Mode};
+use dbcsr::multiply::twofive::twofive_operands;
+use dbcsr::multiply::{
+    multiply, spare_serve, Algorithm, EngineOpts, FaultSpec, MultiplyConfig, PipelineSession,
+    SpareOutcome,
+};
+
+const DIM: usize = 32;
+const BLOCK: usize = 4;
+
+/// A plan with exactly one fault class armed — the per-class matrix
+/// isolates which wire behavior each class provokes.
+fn plan_for(class: &str) -> FaultPlan {
+    let mut p = FaultPlan {
+        seed: 0xC0FFEE,
+        ..FaultPlan::default()
+    };
+    match class {
+        "drop" => p.drop = 0.05,
+        "dup" => p.dup = 0.05,
+        "corrupt" => p.corrupt = 0.05,
+        "delay" => p.delay = 0.05,
+        other => panic!("unknown fault class {other:?}"),
+    }
+    p
+}
+
+/// One 16-rank multiply through the `multiply()` front door under a
+/// fault plan. `layers == 0` runs Cannon on a 4x4 grid; otherwise the
+/// 2.5D engine at that replication factor. Returns the summed dense C
+/// plus the retransmission ledger aggregated over ranks.
+fn run_chaos(layers: usize, transport: Transport, plan: Option<FaultPlan>) -> (Vec<f32>, u64, f64) {
+    let opts = RunOpts {
+        faultnet: plan,
+        ..RunOpts::default()
+    };
+    let (out, _) = run_ranks_opts(16, NetModel::aries(2), opts, move |world| {
+        let (algorithm, a, b, grid) = if layers == 0 {
+            let grid = Grid2D::new(world, 4, 4);
+            let coords = grid.coords();
+            let mk = |seed| {
+                DistMatrix::dense_cyclic(
+                    DIM,
+                    DIM,
+                    BLOCK,
+                    (4, 4),
+                    coords,
+                    Mode::Real,
+                    Fill::Random { seed },
+                )
+            };
+            (Algorithm::Cannon, mk(91), mk(92), grid)
+        } else {
+            let (rows, cols) = if layers == 2 { (2, 4) } else { (2, 2) };
+            let g3 = Grid3D::new(world, rows, cols, layers);
+            let (a, b) = twofive_operands(&g3, DIM, DIM, DIM, BLOCK, Mode::Real, 91, 92);
+            let grid = Grid2D::new(g3.world.clone(), 4, 4);
+            (Algorithm::TwoFiveD { layers }, a, b, grid)
+        };
+        let cfg = MultiplyConfig {
+            engine: EngineOpts {
+                threads: 2,
+                densify: false,
+                ..Default::default()
+            },
+            algorithm,
+            transport,
+            ..Default::default()
+        };
+        let out = multiply(&grid, &a, &b, &cfg).unwrap();
+        let mut dense = vec![0.0f32; DIM * DIM];
+        out.c.add_into_dense(&mut dense);
+        (dense, out.stats.retrans_bytes, out.stats.retrans_s)
+    });
+    let mut got = vec![0.0f32; DIM * DIM];
+    let (mut bytes, mut seconds) = (0u64, 0f64);
+    for (part, b, s) in out {
+        for (g, x) in got.iter_mut().zip(part.iter()) {
+            *g += x;
+        }
+        bytes += b;
+        seconds += s.max(0.0);
+    }
+    (got, bytes, seconds)
+}
+
+// ---------------------------------------------------------------------
+// The fault-class matrix: each class alone, each algorithm, C must not
+// move by a single bit and the ledger must name the damage.
+// ---------------------------------------------------------------------
+
+#[test]
+fn each_fault_class_leaves_c_bit_identical() {
+    for layers in [0usize, 2, 4] {
+        let (want, b0, s0) = run_chaos(layers, Transport::TwoSided, None);
+        assert_eq!(b0, 0, "fault-free runs must book zero retrans bytes");
+        assert_eq!(s0, 0.0, "fault-free runs must book zero retrans time");
+        for class in ["drop", "dup", "corrupt", "delay"] {
+            let (got, bytes, seconds) = run_chaos(layers, Transport::TwoSided, Some(plan_for(class)));
+            let diffs = got.iter().zip(want.iter()).filter(|(g, w)| g != w).count();
+            assert_eq!(
+                diffs, 0,
+                "C must survive {class} faults bit-identically (layers {layers}): \
+                 {diffs} of {} elements differ",
+                want.len()
+            );
+            match class {
+                // a straggler spike is delivered traffic — it wastes
+                // time, not bytes; every other class burns whole frames
+                "delay" => assert!(seconds > 0.0, "{class} must book retrans time"),
+                _ => assert!(bytes > 0, "{class} (layers {layers}) must book retrans bytes"),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// All three transports under a uniform plan: the reliability layer sits
+// below two-sided sends, one-sided puts and one-sided gets alike.
+// ---------------------------------------------------------------------
+
+#[test]
+fn uniform_chaos_is_transparent_on_every_transport() {
+    for transport in [Transport::TwoSided, Transport::OneSided, Transport::OneSidedGet] {
+        for layers in [0usize, 2, 4] {
+            let (want, b0, _) = run_chaos(layers, transport, None);
+            assert_eq!(b0, 0);
+            let plan = FaultPlan::uniform(0x5EED, 0.03);
+            let (got, bytes, _) = run_chaos(layers, transport, Some(plan));
+            let diffs = got.iter().zip(want.iter()).filter(|(g, w)| g != w).count();
+            assert_eq!(
+                diffs, 0,
+                "C must be bit-identical under uniform chaos ({transport:?}, layers {layers})"
+            );
+            assert!(
+                bytes > 0,
+                "uniform chaos must book retrans bytes ({transport:?}, layers {layers})"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Protocol discipline: a chaos run through the traced harness satisfies
+// every invariant — at-most-once delivery, retransmission discipline,
+// and the ledger stays a modest fraction of goodput (conservative).
+// ---------------------------------------------------------------------
+
+#[test]
+fn chaos_runs_are_verifier_clean() {
+    let spec = |algo, transport, faultnet| RunSpec {
+        nodes: 4,
+        rpn: 4,
+        threads: 2,
+        block: 22,
+        shape: Shape::Square { n: 352 },
+        engine: Engine::DbcsrBlocked,
+        mode: Mode::Model,
+        net: NetModel::aries(4),
+        transport,
+        overlap: false,
+        algo,
+        plan_verbose: false,
+        occupancy: 1.0,
+        iterations: 1,
+        fault: None,
+        faultnet,
+        fault_policy: FaultPolicy::Retry,
+        spares: 0,
+    };
+    for (algo, transport) in [
+        (AlgoSpec::Cannon, Transport::TwoSided),
+        (AlgoSpec::TwoFiveD { layers: 2 }, Transport::OneSided),
+        (AlgoSpec::TwoFiveD { layers: 2 }, Transport::OneSidedGet),
+    ] {
+        let plan = Some(FaultPlan::uniform(0xBEEF, 0.02));
+        let (r, report) = run_spec_verified(spec(algo, transport, plan));
+        assert!(
+            report.is_clean(),
+            "chaos must stay verifier-clean ({algo:?}, {transport:?}): {}",
+            report.render()
+        );
+        assert!(!r.unrecoverable);
+        assert!(
+            r.retrans_bytes > 0,
+            "the harness must surface the retrans ledger ({algo:?}, {transport:?})"
+        );
+        assert!(
+            r.retrans_bytes < r.stats.comm_bytes,
+            "2% fault rates cannot waste more than the goodput \
+             ({algo:?}, {transport:?}): retrans {} vs comm {}",
+            r.retrans_bytes,
+            r.stats.comm_bytes
+        );
+        let (r0, report0) = run_spec_verified(spec(algo, transport, None));
+        assert!(report0.is_clean());
+        assert_eq!(r0.retrans_bytes, 0, "no faults, no retrans");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Hot spares: a death mid-session splices the parked spare into the
+// dead seat. Every later call is full-width, recovery-free, and lands
+// within 5% of the failure-free per-call time.
+// ---------------------------------------------------------------------
+
+/// Drive a 3-call resident session on 16 compute ranks (+`spares`
+/// parked), killing per `kill` on the first call and adopting between
+/// calls. Returns, per rank, the post-first calls as
+/// `(virtual seconds, recovery_bytes, dense C part)`.
+fn spare_run(
+    kill: Option<FaultSpec>,
+    spares: usize,
+    iters: u64,
+) -> Vec<Vec<(f64, u64, Vec<f32>)>> {
+    let opts = RunOpts {
+        spares,
+        ..RunOpts::default()
+    };
+    let (out, _) = run_ranks_opts(16, NetModel::ideal(), opts, move |world| {
+        let cfg = MultiplyConfig {
+            engine: EngineOpts {
+                threads: 2,
+                densify: false,
+                ..Default::default()
+            },
+            faults: kill.into_iter().collect(),
+            ..Default::default()
+        };
+        if world.rank() >= 16 {
+            // a parked spare: serve the adoption protocol, then run the
+            // adopted seat to the end of the session
+            let l = BlockLayout::new(DIM, BLOCK);
+            return match spare_serve(&world, (2, 4, 2), &cfg, (&l, &l), (&l, &l), Mode::Real) {
+                SpareOutcome::Idle => Vec::new(),
+                SpareOutcome::Adopted(seat) => {
+                    let mut sess = seat.session;
+                    let mut calls = Vec::new();
+                    for _ in sess.multiplies()..iters {
+                        let t0 = world.now();
+                        let o = sess.multiply_resident(&seat.a, &seat.b).unwrap();
+                        let mut d = vec![0.0f32; DIM * DIM];
+                        o.c.add_into_dense(&mut d);
+                        calls.push((world.now() - t0, o.stats.recovery_bytes, d));
+                    }
+                    calls
+                }
+            };
+        }
+        let members: Vec<usize> = (0..16).collect();
+        let g3 = Grid3D::new(world.subview(&members), 2, 4, 2);
+        let coords = g3.grid.coords();
+        let mk = |seed| {
+            DistMatrix::dense_cyclic(
+                DIM,
+                DIM,
+                BLOCK,
+                (2, 4),
+                coords,
+                Mode::Real,
+                Fill::Random { seed },
+            )
+        };
+        let mut sess = PipelineSession::new(g3, cfg);
+        let (a, b) = sess.admit_pair(mk(91), mk(92));
+        // call 0: the fault (if any) fires here; not part of the
+        // steady-state comparison
+        let _ = sess.multiply_resident(&a, &b).unwrap();
+        if spares > 0 {
+            let _ = sess.adopt_spares(&world, &a, &b);
+        }
+        let mut calls = Vec::new();
+        if !world.killed() {
+            for _ in 1..iters {
+                let t0 = world.now();
+                let o = sess.multiply_resident(&a, &b).unwrap();
+                let mut d = vec![0.0f32; DIM * DIM];
+                o.c.add_into_dense(&mut d);
+                calls.push((world.now() - t0, o.stats.recovery_bytes, d));
+            }
+        }
+        calls
+    });
+    out
+}
+
+#[test]
+fn spare_adoption_restores_full_width_at_failure_free_speed() {
+    let free = spare_run(None, 0, 3);
+    let healed = spare_run(Some(FaultSpec { rank: 5, at_tick: 1 }), 1, 3);
+    // the spare must have been spliced in: 16 seats report post-adoption
+    // calls (15 survivors + the adopted spare; the dead rank is silent)
+    let active = healed.iter().filter(|c| !c.is_empty()).count();
+    assert_eq!(active, 16, "adoption must restore the full 16-seat width");
+    assert!(
+        !healed[16].is_empty(),
+        "the parked spare must adopt the dead seat, not idle"
+    );
+    for call in 0..2usize {
+        // bit-identity: the summed C of each post-adoption call matches
+        // the failure-free session exactly
+        let sum = |rs: &[Vec<(f64, u64, Vec<f32>)>]| {
+            let mut d = vec![0.0f32; DIM * DIM];
+            for r in rs.iter().filter(|c| !c.is_empty()) {
+                for (g, x) in d.iter_mut().zip(r[call].2.iter()) {
+                    *g += x;
+                }
+            }
+            d
+        };
+        assert!(
+            sum(&healed) == sum(&free),
+            "post-adoption call {call} must stay bit-identical"
+        );
+        // zero recovery bill: the spare holds native-layout state, so
+        // nothing degrades and nothing is re-fetched
+        for (rank, r) in healed.iter().enumerate() {
+            if !r.is_empty() {
+                assert_eq!(
+                    r[call].1, 0,
+                    "rank {rank} call {call} must book zero recovery bytes after adoption"
+                );
+            }
+        }
+        // timing: within 5% of the failure-free per-call time
+        let t = |rs: &[Vec<(f64, u64, Vec<f32>)>]| {
+            rs.iter()
+                .filter(|c| !c.is_empty())
+                .map(|c| c[call].0)
+                .fold(0.0f64, f64::max)
+        };
+        let (th, tf) = (t(&healed), t(&free));
+        assert!(
+            (th - tf).abs() <= 0.05 * tf,
+            "post-adoption call {call} must run at failure-free speed: {th} vs {tf}"
+        );
+    }
+}
+
+#[test]
+fn unused_spares_are_released_idle() {
+    // a fault-free session with a parked spare: the coordinator must
+    // release it (Idle), and the compute ranks pay nothing for it
+    let out = spare_run(None, 1, 3);
+    assert_eq!(out.len(), 17);
+    assert!(
+        out[16].is_empty(),
+        "a spare in a fault-free session must be released idle"
+    );
+    assert!(out[..16].iter().all(|c| c.len() == 2));
+}
+
+#[test]
+fn harness_spare_point_heals_and_reports_the_bill() {
+    let spec = |fault: Option<FaultSpec>, spares: usize| RunSpec {
+        nodes: 4,
+        rpn: 4,
+        threads: 2,
+        block: 22,
+        shape: Shape::Square { n: 352 },
+        engine: Engine::DbcsrBlocked,
+        mode: Mode::Model,
+        net: NetModel::aries(4),
+        transport: Transport::TwoSided,
+        overlap: false,
+        algo: AlgoSpec::TwoFiveD { layers: 2 },
+        plan_verbose: false,
+        occupancy: 1.0,
+        iterations: 4,
+        fault,
+        faultnet: None,
+        fault_policy: FaultPolicy::Retry,
+        spares,
+    };
+    let free = run_spec(spec(None, 0));
+    assert_eq!(free.recovery_bytes, 0);
+    let healed = run_spec(spec(Some(FaultSpec { rank: 5, at_tick: 1 }), 1));
+    assert!(!healed.unrecoverable);
+    assert!(
+        healed.recovery_bytes > 0,
+        "adoption must book the replica-fetch bill"
+    );
+    assert!(healed.recovery_seconds > 0.0);
+    assert!(!healed.oom);
+    assert_eq!(healed.iterations, free.iterations);
+}

@@ -163,6 +163,9 @@ fn fig2_oom_annotation_reproduced() {
             occupancy: 1.0,
             iterations: 1,
             fault: None,
+            faultnet: None,
+            fault_policy: Default::default(),
+            spares: 0,
         })
     };
     let oom = point(1, 12);

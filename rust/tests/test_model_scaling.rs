@@ -27,6 +27,9 @@ fn model_point(nodes: usize, rpn: usize, threads: usize, block: usize, sq: bool,
         occupancy: 1.0,
         iterations: 1,
         fault: None,
+        faultnet: None,
+        fault_policy: Default::default(),
+        spares: 0,
     });
     assert!(!r.oom, "unexpected OOM");
     r.seconds
@@ -83,6 +86,9 @@ fn dbcsr_beats_pdgemm_and_gap_grows_for_small_blocks() {
             occupancy: 1.0,
             iterations: 1,
             fault: None,
+            faultnet: None,
+            fault_policy: Default::default(),
+            spares: 0,
         });
         assert!(!r.oom);
         r.seconds

@@ -55,6 +55,9 @@ fn spec16(shape: Shape, transport: Transport, algo: AlgoSpec) -> RunSpec {
         occupancy: 1.0,
         iterations: 1,
         fault: None,
+        faultnet: None,
+        fault_policy: Default::default(),
+        spares: 0,
     }
 }
 

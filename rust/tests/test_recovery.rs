@@ -278,6 +278,9 @@ fn harness_fault_heals_and_reports_the_bill() {
         occupancy: 1.0,
         iterations: 1,
         fault,
+        faultnet: None,
+        fault_policy: Default::default(),
+        spares: 0,
     };
     let fault = Some(FaultSpec { rank: 5, at_tick: 1 });
     let healed = run_spec(spec(AlgoSpec::TwoFiveD { layers: 2 }, fault));
@@ -402,6 +405,9 @@ fn harness_reports_unrecoverable_for_plans_without_replicas() {
         occupancy: 1.0,
         iterations: 1,
         fault: Some(FaultSpec { rank: 3, at_tick: 0 }),
+        faultnet: None,
+        fault_policy: Default::default(),
+        spares: 0,
     };
     for algo in [AlgoSpec::Cannon, AlgoSpec::TwoFiveD { layers: 1 }] {
         let r = run_spec(spec(algo));

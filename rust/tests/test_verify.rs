@@ -162,6 +162,9 @@ fn model_spec(algo: AlgoSpec, transport: Transport) -> RunSpec {
         occupancy: 1.0,
         iterations: 1,
         fault: None,
+        faultnet: None,
+        fault_policy: Default::default(),
+        spares: 0,
     }
 }
 
