@@ -1,0 +1,128 @@
+#!/usr/bin/env python3
+"""Structural validator for the Chrome trace-event JSON the Rust CLI
+emits via ``--trace-out`` (see ``rust/src/obs/chrome.rs``).
+
+Checks the properties a Perfetto-loadable virtual-time trace must have:
+
+* the document parses and carries a ``traceEvents`` array;
+* there is at least one complete ("X") duration event and at least one
+  metadata ("M") event naming a process/thread;
+* every X event has a non-negative ``ts``, a positive ``dur`` and
+  integer ``pid``/``tid`` ids;
+* within each ``(pid, tid)`` timeline the X events are non-overlapping
+  (the span profiler's per-lane disjointness, surviving export);
+* counter ("C") tracks are monotone non-decreasing in both time and the
+  cumulative ``bytes`` / ``retrans`` values they sample.
+
+Exit code 0 when the trace is well-formed, 1 otherwise (messages on
+stderr). Usage: ``python python/check_trace.py TRACE.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from collections import defaultdict
+
+# slack for float µs timestamps emitted from f64 seconds
+EPS = 1e-6
+
+
+def fail(msg: str) -> None:
+    print(f"check_trace: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main(path: str) -> None:
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"cannot load {path}: {e}")
+
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        fail("document is not an object with a traceEvents array")
+    events = doc["traceEvents"]
+    if not isinstance(events, list) or not events:
+        fail("traceEvents is empty")
+
+    xs, metas, counters = [], [], []
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict) or "ph" not in ev:
+            fail(f"event {i} has no phase field: {ev!r}")
+        ph = ev["ph"]
+        if ph == "X":
+            xs.append((i, ev))
+        elif ph == "M":
+            metas.append(ev)
+        elif ph == "C":
+            counters.append((i, ev))
+        else:
+            fail(f"event {i}: unknown phase {ph!r}")
+
+    if not xs:
+        fail("no duration (X) events — an empty profile is not a trace")
+    if not metas:
+        fail("no metadata (M) events — ranks and lanes must be named")
+
+    # X events: sane fields, then per-(pid, tid) non-overlap
+    lanes = defaultdict(list)
+    for i, ev in xs:
+        for key in ("name", "ts", "dur", "pid", "tid"):
+            if key not in ev:
+                fail(f"X event {i} missing {key!r}: {ev!r}")
+        ts, dur = ev["ts"], ev["dur"]
+        if not isinstance(ts, (int, float)) or ts < -EPS:
+            fail(f"X event {i} ({ev['name']}): negative ts {ts}")
+        if not isinstance(dur, (int, float)) or dur <= 0:
+            fail(f"X event {i} ({ev['name']}): non-positive dur {dur}")
+        if not isinstance(ev["pid"], int) or not isinstance(ev["tid"], int):
+            fail(f"X event {i}: pid/tid must be integers: {ev!r}")
+        lanes[(ev["pid"], ev["tid"])].append((ts, dur, ev["name"], i))
+
+    for (pid, tid), spans in lanes.items():
+        spans.sort()
+        scale = max(sum(d for _, d, _, _ in spans), 1.0)
+        end = float("-inf")
+        for ts, dur, name, i in spans:
+            if ts < end - EPS * scale:
+                fail(
+                    f"pid {pid} tid {tid}: event {i} ({name}) starts at "
+                    f"{ts} before the previous span ended at {end}"
+                )
+            end = max(end, ts + dur)
+
+    # counter tracks: time- and value-monotone per pid
+    tracks = defaultdict(list)
+    for i, ev in counters:
+        args = ev.get("args")
+        if not isinstance(args, dict):
+            fail(f"C event {i} has no args: {ev!r}")
+        tracks[ev.get("pid")].append((ev.get("ts", -1), i, args))
+    for pid, points in tracks.items():
+        points.sort(key=lambda p: p[0])
+        prev = defaultdict(float)
+        for ts, i, args in points:
+            if not isinstance(ts, (int, float)) or ts < -EPS:
+                fail(f"C event {i} (pid {pid}): bad ts {ts}")
+            for key, val in args.items():
+                if not isinstance(val, (int, float)) or val < 0:
+                    fail(f"C event {i} (pid {pid}): bad counter {key}={val}")
+                if val < prev[key]:
+                    fail(
+                        f"C event {i} (pid {pid}): cumulative counter "
+                        f"{key} went backwards ({prev[key]} -> {val})"
+                    )
+                prev[key] = val
+
+    n_lanes = len(lanes)
+    print(
+        f"check_trace: OK — {len(xs)} spans on {n_lanes} lanes, "
+        f"{len(metas)} metadata events, {len(counters)} counter samples"
+    )
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 2:
+        fail("usage: check_trace.py TRACE.json")
+    main(sys.argv[1])

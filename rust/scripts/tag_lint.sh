@@ -92,6 +92,30 @@ for name in $refs; do
     fi
 done
 
+# Observability phase registry: every variant of `obs::Phase` must be
+# listed in `Phase::ALL` and labeled by `Phase::name()`, and the label
+# match must not hide behind a wildcard arm — otherwise a new phase
+# could ship spans that the exporter, the report and the per-phase
+# ledger all silently misfile.
+obs=./obs/mod.rs
+phase_variants=$(awk '/^pub enum Phase \{/,/^\}/' "$obs" \
+    | grep -oE '^    [A-Z][A-Za-z0-9]+,' | tr -d ' ,')
+if [ -z "$phase_variants" ]; then
+    report "$obs" "could not extract any Phase variants (enum moved?)" "pub enum Phase"
+fi
+phase_all=$(awk '/pub const ALL/,/\];/' "$obs")
+phase_name=$(awk '/pub fn name\(self\)/,/^    \}/' "$obs")
+for v in $phase_variants; do
+    if ! echo "$phase_all" | grep -q "Phase::$v,"; then
+        report "$obs" "Phase variant missing from Phase::ALL" "$v"
+    fi
+    if ! echo "$phase_name" | grep -q "Phase::$v =>"; then
+        report "$obs" "Phase variant not labeled by Phase::name()" "$v"
+    fi
+done
+m=$(echo "$phase_name" | grep -nE '^\s*_\s*=>')
+[ -n "$m" ] && report "$obs" "Phase::name() hides variants behind a wildcard arm" "$m"
+
 if [ "$fail" -ne 0 ]; then
     echo "tag-lint: FAILED — import tags and window ids from dist/tags.rs" >&2
     exit 1

@@ -14,7 +14,8 @@
 use crate::backend::gpu_sim::DeviceOom;
 use crate::dist::faultnet::{FaultPlan, FaultPolicy};
 use crate::dist::verify::{self, TraceLog, VerifyReport};
-use crate::dist::{run_ranks_opts, Grid2D, Grid3D, NetModel, RunOpts, Transport};
+use crate::dist::{run_ranks_full, Grid2D, Grid3D, NetModel, RunOpts, Transport};
+use crate::obs::{Lane, Phase, ProfLog};
 use crate::matrix::matrix::Fill;
 use crate::matrix::{BlockLayout, DistMatrix, Mode};
 use crate::multiply::planner::{self, PlanInput, PlannedAlgorithm};
@@ -248,6 +249,14 @@ pub struct RunResult {
     /// Virtual seconds of the same retransmission overhead (backoffs +
     /// injected delay spikes), summed over ranks.
     pub retrans_seconds: f64,
+    /// Transfer seconds the double-buffered shifts hid behind compute
+    /// (`MultiplyStats::overlap_hidden_s`), summed over ranks. 0 when
+    /// `overlap` is off or nothing was hidden.
+    pub overlap_hidden_seconds: f64,
+    /// Wire-format metadata bytes (frames, panel headers) shipped with
+    /// the payload traffic, summed over ranks — the sparse-format
+    /// overhead share of `comm_bytes`.
+    pub meta_bytes: u64,
     /// The spec asked for a fault but resolved to a plan with no
     /// replica layer (Cannon, tall-skinny, PDGEMM, or `c = 1`): the
     /// run was not executed — a death there loses data irrecoverably,
@@ -303,6 +312,18 @@ pub fn run_spec_verified(spec: RunSpec) -> (RunResult, VerifyReport) {
 /// [`run_spec`] with explicit substrate options (tracing / schedule
 /// perturbation); returns the trace when tracing was on.
 pub fn run_spec_opts(spec: RunSpec, opts: RunOpts) -> (RunResult, Option<TraceLog>) {
+    let (result, trace, _prof) = run_spec_full(spec, opts);
+    (result, trace)
+}
+
+/// [`run_spec_opts`] that also returns the span profile when
+/// `RunOpts::profile` was on — the observability entry the CLI's
+/// `--profile` / `--trace-out` flags go through. Profiling never
+/// touches virtual clocks or counters (same contract as tracing).
+pub fn run_spec_full(
+    spec: RunSpec,
+    opts: RunOpts,
+) -> (RunResult, Option<TraceLog>, Option<ProfLog>) {
     let p = spec.nodes * spec.rpn;
     let (pr, pc) = grid_shape(p);
     let (m, n, k) = spec.shape.dims();
@@ -389,8 +410,11 @@ pub fn run_spec_opts(spec: RunSpec, opts: RunOpts) -> (RunResult, Option<TraceLo
                 recovery_bytes: 0,
                 retrans_bytes: 0,
                 retrans_seconds: 0.0,
+                overlap_hidden_seconds: 0.0,
+                meta_bytes: 0,
                 unrecoverable: true,
             },
+            None,
             None,
         );
     }
@@ -402,7 +426,7 @@ pub fn run_spec_opts(spec: RunSpec, opts: RunOpts) -> (RunResult, Option<TraceLo
         );
     }
 
-    let (per_rank, trace) = run_ranks_opts(p, net, opts, move |world| {
+    let (per_rank, trace, prof) = run_ranks_full(p, net, opts, move |world| {
         let wstats = world.clone();
         let cfg = |algorithm: Algorithm| MultiplyConfig {
             engine: EngineOpts {
@@ -617,6 +641,17 @@ pub fn run_spec_opts(spec: RunSpec, opts: RunOpts) -> (RunResult, Option<TraceLo
                 replicate_to_layers(&g3, &mut b, spec.transport);
                 let repl_s = g3.world.now() - t0;
                 let repl_bytes = g3.world.stats().bytes_sent - b0;
+                // span bounds equal the booked delta exactly, so the
+                // driver lane reconciles with the `repl_` bucket
+                g3.world.prof_span(
+                    Lane::Driver,
+                    Phase::Replicate,
+                    None,
+                    t0,
+                    g3.world.now(),
+                    repl_bytes,
+                    None,
+                );
                 let (gr, gc) = grid_shape(rows * cols * layers);
                 let grid = Grid2D::new(g3.world.clone(), gr, gc);
                 match multiply(&grid, &a, &b, &cfg(Algorithm::TwoFiveD { layers })) {
@@ -704,12 +739,15 @@ pub fn run_spec_opts(spec: RunSpec, opts: RunOpts) -> (RunResult, Option<TraceLo
             recovery_bytes: stats.recovery_bytes,
             retrans_bytes: stats.retrans_bytes,
             retrans_seconds: stats.retrans_s,
+            overlap_hidden_seconds: stats.overlap_hidden_s,
+            meta_bytes: stats.meta_bytes,
             stats,
             plan,
             oom,
             unrecoverable: false,
         },
         trace,
+        prof,
     )
 }
 

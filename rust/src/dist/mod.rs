@@ -47,6 +47,7 @@ pub mod verify;
 pub use faultnet::{FaultPlan, FaultPolicy};
 pub use rma::{PendingGet, RmaWindow, Transport};
 
+use crate::obs::{Lane, Phase, ProfLog, ProfSpan};
 use verify::{CommEvent, EventKind, Provenance, TraceLog};
 
 /// Bytes per phantom element (the paper's f64) — mirrors
@@ -340,6 +341,10 @@ struct Shared {
     /// Protocol-verifier event log (`None` = tracing off: the default
     /// path records nothing and pays one branch per operation).
     trace: Option<Mutex<Vec<CommEvent>>>,
+    /// Span-profiler log (`None` = profiling off — same one-branch
+    /// contract as `trace`; see [`crate::obs`]). The profiler only ever
+    /// *reads* the virtual clocks, so arming it changes no outcome.
+    prof: Option<Mutex<ProfLog>>,
     /// Wait-for graph of currently blocked ranks (world rank → what it
     /// awaits). Only maintained when tracing is on; drives runtime
     /// deadlock detection and the blocked-at-shutdown report.
@@ -559,6 +564,12 @@ struct RankState {
     /// [`CommStats::retrans_bytes`] / [`CommStats::retrans_s`]).
     retrans_bytes: Cell<u64>,
     retrans_s: Cell<f64>,
+    /// End of the last profiled retransmit span: back-to-back
+    /// nonblocking sends book `retrans_s` without advancing `now`, so
+    /// their spans stack after each other on the retrans lane instead
+    /// of overlapping (profiler bookkeeping only — never read by any
+    /// clock or ledger path).
+    retrans_frontier: Cell<f64>,
     /// Reliability-layer sequence numbers, keyed by `(peer world rank,
     /// tag)`: next seq to stamp on a send / next seq expected on this
     /// receive channel. Only touched when a fault plan is active.
@@ -671,10 +682,78 @@ impl CommView {
     /// Advance the clock to at least `t` and book the advance as a
     /// communication wait (receives, RMA epoch closes).
     fn wait_to(&self, t: f64) {
+        self.wait_to_from(t, None);
+    }
+
+    /// [`CommView::wait_to`] with the peer whose message/exposure
+    /// bounded the wait — the happens-before edge the profiler's
+    /// critical-path walk follows. The emitted `Wait` span covers
+    /// exactly the booked `wait_seconds` delta, which is what makes the
+    /// span ledger reconcile with `comm_wait_s` exactly.
+    fn wait_to_from(&self, t: f64, peer: Option<usize>) {
         let now = self.state.now.get();
         if t > now {
             self.state.wait_s.set(self.state.wait_s.get() + (t - now));
             self.state.now.set(t);
+            self.prof_span(Lane::Wait, Phase::Wait, None, now, t, 0, peer);
+        }
+    }
+
+    /// Whether the span profiler is armed ([`RunOpts::profile`]).
+    pub fn prof_on(&self) -> bool {
+        self.shared.prof.is_some()
+    }
+
+    /// Record one profiled span (no-op when profiling is off or the
+    /// interval is empty). Reads the clock, never writes it.
+    #[allow(clippy::too_many_arguments)]
+    pub fn prof_span(
+        &self,
+        lane: Lane,
+        phase: Phase,
+        tick: Option<u64>,
+        t_start: f64,
+        t_end: f64,
+        bytes: u64,
+        peer: Option<usize>,
+    ) {
+        if let Some(prof) = &self.shared.prof {
+            if t_end > t_start {
+                prof.lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .push(ProfSpan {
+                        rank: self.my_world(),
+                        lane,
+                        phase,
+                        tick,
+                        t_start,
+                        t_end,
+                        bytes,
+                        peer,
+                    });
+            }
+        }
+    }
+
+    /// Record a per-message transit latency sample (delivery points of
+    /// both transports).
+    fn prof_transit(&self, bytes: u64) {
+        if let Some(prof) = &self.shared.prof {
+            prof.lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .transit
+                .record(self.shared.net.transit_seconds(bytes));
+        }
+    }
+
+    /// Record one end-to-end multiply latency sample
+    /// (`multiply::multiply` calls this per collective invocation).
+    pub fn prof_multiply_sample(&self, seconds: f64) {
+        if let Some(prof) = &self.shared.prof {
+            prof.lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .multiply
+                .record(seconds);
         }
     }
 
@@ -870,7 +949,7 @@ impl CommView {
         self.maybe_yield();
         match self.pop_validated((self.members[src], self.my_world(), tag)) {
             Ok(msg) => {
-                self.wait_to(msg.ready);
+                self.wait_to_from(msg.ready, Some(self.members[src]));
                 if self.shared.trace.is_some() {
                     self.record(
                         Some(self.members[src]),
@@ -882,7 +961,10 @@ impl CommView {
                 Ok(msg.payload)
             }
             Err(death) => {
-                self.wait_to(death.at + self.shared.failure.horizon);
+                self.wait_to_from(
+                    death.at + self.shared.failure.horizon,
+                    Some(self.members[src]),
+                );
                 Err(death)
             }
         }
@@ -961,6 +1043,23 @@ impl CommView {
         self.state
             .retrans_s
             .set(self.state.retrans_s.get() + sched.retrans_s);
+        if sched.retrans_s > 0.0 && self.shared.prof.is_some() {
+            // nonblocking sends book retrans_s without advancing `now`;
+            // stack the spans past the previous one so the retrans lane
+            // stays overlap-free while Σ spans still equals retrans_s
+            let start = self.now().max(self.state.retrans_frontier.get());
+            let end = start + sched.retrans_s;
+            self.state.retrans_frontier.set(end);
+            self.prof_span(
+                Lane::Retrans,
+                Phase::Retrans,
+                None,
+                start,
+                end,
+                sched.retrans_bytes,
+                Some(dst_w),
+            );
+        }
         if self.shared.trace.is_some() {
             for &attempt in &sched.retrans_attempts {
                 self.record(
@@ -1002,7 +1101,10 @@ impl CommView {
         loop {
             let msg = self.shared.pop_blocking_result(key)?;
             let frame = match &msg.frame {
-                None => return Ok(msg),
+                None => {
+                    self.prof_transit(msg.payload.wire_bytes());
+                    return Ok(msg);
+                }
                 Some(f) => f.clone(),
             };
             let chan = (key.0, key.2);
@@ -1054,6 +1156,7 @@ impl CommView {
                     EventKind::Deliver { seq: frame.seq },
                 );
             }
+            self.prof_transit(msg.payload.wire_bytes());
             return Ok(msg);
         }
     }
@@ -1076,7 +1179,7 @@ impl CommView {
     pub fn recv(&self, src: usize, tag: u64) -> Payload {
         self.maybe_yield();
         let msg = self.pop_validated_blocking((self.members[src], self.my_world(), tag));
-        self.wait_to(msg.ready);
+        self.wait_to_from(msg.ready, Some(self.members[src]));
         if self.shared.trace.is_some() {
             self.record(
                 Some(self.members[src]),
@@ -1341,6 +1444,11 @@ pub struct RunOpts {
     /// rank's grid position — `multiply::recovery`) is the caller's
     /// protocol. Results keep rank order, spares last.
     pub spares: usize,
+    /// Record a [`ProfLog`] of typed phase spans on the virtual clock
+    /// (`obs` module). Same contract as `trace`: one branch per
+    /// operation when off, and turning it on changes no virtual-clock
+    /// outcome — the profiler only reads clocks, never advances them.
+    pub profile: bool,
 }
 
 impl Default for RunOpts {
@@ -1352,6 +1460,7 @@ impl Default for RunOpts {
             faultnet: None,
             fault_policy: FaultPolicy::Retry,
             spares: 0,
+            profile: false,
         }
     }
 }
@@ -1383,6 +1492,24 @@ where
     T: Send,
     F: Fn(CommView) -> T + Send + Sync,
 {
+    let (out, trace, _prof) = run_ranks_full(p, net, opts, f);
+    (out, trace)
+}
+
+/// [`run_ranks_opts`] plus the recorded [`ProfLog`] when `opts.profile`
+/// is set. Each rank's final virtual clock is stamped into
+/// `ProfLog::final_clock` at thread teardown, so idle time (final clock
+/// minus span union) is computable per rank.
+pub fn run_ranks_full<T, F>(
+    p: usize,
+    net: NetModel,
+    opts: RunOpts,
+    f: F,
+) -> (Vec<T>, Option<TraceLog>, Option<ProfLog>)
+where
+    T: Send,
+    F: Fn(CommView) -> T + Send + Sync,
+{
     assert!(p > 0, "need at least one rank");
     // hot spares join the world as trailing ranks: full communicator
     // views, results in rank order after the compute ranks
@@ -1402,6 +1529,12 @@ where
         perturb: opts.perturb,
         faultnet: opts.faultnet,
         fault_policy: opts.fault_policy,
+        prof: opts.profile.then(|| {
+            Mutex::new(ProfLog {
+                final_clock: vec![0.0; total],
+                ..Default::default()
+            })
+        }),
     });
     let mut out: Vec<Option<T>> = (0..total).map(|_| None).collect();
     let mut failed = false;
@@ -1414,8 +1547,16 @@ where
                 let shared = shared.clone();
                 s.spawn(move || {
                     let view = CommView::world(shared.clone(), total, rank);
+                    let state = view.state.clone();
                     match std::panic::catch_unwind(AssertUnwindSafe(|| f(view))) {
-                        Ok(v) => *slot = Some(v),
+                        Ok(v) => {
+                            if let Some(prof) = &shared.prof {
+                                let mut log =
+                                    prof.lock().unwrap_or_else(|e| e.into_inner());
+                                log.final_clock[rank] = state.now.get();
+                            }
+                            *slot = Some(v);
+                        }
                         Err(e) => {
                             let cause = e
                                 .downcast_ref::<String>()
@@ -1483,11 +1624,16 @@ where
     let trace = shared.trace.as_ref().map(|m| TraceLog {
         events: std::mem::take(&mut *m.lock().unwrap_or_else(|e| e.into_inner())),
     });
+    let prof = shared
+        .prof
+        .as_ref()
+        .map(|m| std::mem::take(&mut *m.lock().unwrap_or_else(|e| e.into_inner())));
     (
         out.into_iter()
             .map(|o| o.expect("rank result missing"))
             .collect(),
         trace,
+        prof,
     )
 }
 

@@ -57,6 +57,8 @@
 
 use std::sync::atomic::Ordering;
 
+use crate::obs::{Lane, Phase};
+
 use super::tags::{EPOCH_SPAN, MAX_WIN_ID, TAG_RMA_BASE};
 use super::verify::{EventKind, Provenance};
 use super::{CommView, Exposed, Payload, PeerDied, WaitFor};
@@ -119,6 +121,8 @@ pub struct PendingGet {
     payload: Payload,
     issued_at: f64,
     done_at: f64,
+    /// World rank of the exposer — profiler peer attribution only.
+    src_world: usize,
 }
 
 impl PendingGet {
@@ -402,7 +406,8 @@ impl RmaWindow {
     /// payload.
     pub fn get_complete(&self, pending: PendingGet) -> Payload {
         if pending.done_at > self.comm.now() {
-            self.comm.wait_to(pending.done_at);
+            self.comm
+                .wait_to_from(pending.done_at, Some(pending.src_world));
         }
         pending.payload
     }
@@ -487,7 +492,7 @@ impl RmaWindow {
             Ok(tuple) => tuple,
             Err(death) => {
                 self.comm
-                    .wait_to(death.at + self.comm.shared.failure.horizon);
+                    .wait_to_from(death.at + self.comm.shared.failure.horizon, Some(key.0));
                 return Err(death);
             }
         };
@@ -514,6 +519,7 @@ impl RmaWindow {
         let issued_at = self.comm.now();
         let start = issued_at.max(at);
         let mut done_at = start + self.comm.shared.net.transit_seconds(bytes);
+        self.comm.prof_transit(bytes);
         // Faulty fabric: gets are idempotent reads, so the origin simply
         // re-issues until a clean snapshot lands — modeled as extra round
         // trips and backoff folded into the completion time, with the
@@ -532,6 +538,23 @@ impl RmaWindow {
                 );
                 st.retrans_bytes.set(st.retrans_bytes.get() + extra_bytes);
                 st.retrans_s.set(st.retrans_s.get() + extra_s);
+                if extra_s > 0.0 && self.comm.shared.prof.is_some() {
+                    // same frontier stacking as the send path: spans on
+                    // the retrans lane queue after each other so the lane
+                    // stays overlap-free while their sum equals retrans_s
+                    let span_start = self.comm.now().max(st.retrans_frontier.get());
+                    let span_end = span_start + extra_s;
+                    st.retrans_frontier.set(span_end);
+                    self.comm.prof_span(
+                        Lane::Retrans,
+                        Phase::Retrans,
+                        None,
+                        span_start,
+                        span_end,
+                        extra_bytes,
+                        Some(key.0),
+                    );
+                }
                 if verify {
                     for attempt in attempts {
                         self.comm.record_event(
@@ -550,7 +573,7 @@ impl RmaWindow {
                     // longer fetch its operands is as good as dead) and
                     // report the edge as failed to the local caller
                     self.comm.kill("faultnet: get retry budget exhausted");
-                    self.comm.wait_to(done_at);
+                    self.comm.wait_to_from(done_at, Some(key.0));
                     return Err(PeerDied {
                         rank: me,
                         at: self.comm.now(),
@@ -562,6 +585,7 @@ impl RmaWindow {
             payload,
             issued_at,
             done_at,
+            src_world: key.0,
         })
     }
 
@@ -613,6 +637,7 @@ impl RmaWindow {
         self.comm.maybe_yield();
         let mut payloads = Vec::with_capacity(sources.len());
         let mut latest = f64::NEG_INFINITY;
+        let mut latest_src = None;
         let mut drained = Vec::with_capacity(sources.len());
         for &src in sources {
             // the validating pop discards duplicate / corrupt frames on
@@ -620,14 +645,17 @@ impl RmaWindow {
             let msg = self
                 .comm
                 .pop_validated_blocking((self.comm.members[src], self.comm.my_world(), tag));
-            latest = latest.max(msg.ready);
+            if msg.ready > latest {
+                latest = msg.ready;
+                latest_src = Some(self.comm.members[src]);
+            }
             if verify {
                 drained.push((self.comm.members[src], msg.payload.wire_bytes()));
             }
             payloads.push(msg.payload);
         }
         let sync = self.comm.now().max(latest) + self.comm.shared.net.latency;
-        self.comm.wait_to(sync);
+        self.comm.wait_to_from(sync, latest_src);
         if verify {
             self.comm.record_event(
                 Provenance::Rma,
@@ -690,6 +718,7 @@ impl RmaWindow {
         let horizon = self.comm.shared.failure.horizon;
         let mut out = Vec::with_capacity(sources.len());
         let mut latest = f64::NEG_INFINITY;
+        let mut latest_src = None;
         let mut drained = Vec::with_capacity(sources.len());
         for &src in sources {
             match self
@@ -697,20 +726,26 @@ impl RmaWindow {
                 .pop_validated((self.comm.members[src], self.comm.my_world(), tag))
             {
                 Ok(msg) => {
-                    latest = latest.max(msg.ready);
+                    if msg.ready > latest {
+                        latest = msg.ready;
+                        latest_src = Some(self.comm.members[src]);
+                    }
                     if verify {
                         drained.push((self.comm.members[src], msg.payload.wire_bytes()));
                     }
                     out.push(Ok(msg.payload));
                 }
                 Err(death) => {
-                    latest = latest.max(death.at + horizon);
+                    if death.at + horizon > latest {
+                        latest = death.at + horizon;
+                        latest_src = Some(death.rank);
+                    }
                     out.push(Err(death));
                 }
             }
         }
         let sync = self.comm.now().max(latest) + self.comm.shared.net.latency;
-        self.comm.wait_to(sync);
+        self.comm.wait_to_from(sync, latest_src);
         if verify {
             self.comm.record_event(
                 Provenance::Rma,

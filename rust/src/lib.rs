@@ -22,6 +22,7 @@ pub mod dist;
 pub mod linalg;
 pub mod matrix;
 pub mod multiply;
+pub mod obs;
 pub mod perfmodel;
 pub mod runtime;
 pub mod scalapack;

@@ -39,6 +39,14 @@
 //!                             replica layers heal it in-run and report
 //!                             a `recovery:` line, everything else
 //!                             reports Unrecoverable;
+//!                             --profile records typed spans on the
+//!                             virtual clock and prints the phase
+//!                             table, latency percentiles and the
+//!                             critical path (runfile key `profile`);
+//!                             --trace-out FILE writes the same spans
+//!                             as Chrome trace-event JSON, loadable in
+//!                             Perfetto / chrome://tracing (profiling
+//!                             never changes clocks or results);
 //!                             --fault-drop/--fault-dup/--fault-corrupt/
 //!                             --fault-delay P (probabilities in [0, 1],
 //!                             seeded by --fault-seed S) run the whole
@@ -55,8 +63,9 @@
 //!                             runs (3))
 
 use dbcsr::bench::figures;
-use dbcsr::bench::harness::{run_spec_opts, AlgoSpec, Engine, RunSpec, Shape};
+use dbcsr::bench::harness::{run_spec_full, AlgoSpec, Engine, RunSpec, Shape};
 use dbcsr::multiply::planner;
+use dbcsr::obs::{chrome, ProfileReport};
 use dbcsr::bench::table::fmt_secs;
 use dbcsr::dist::{verify, FaultPlan, FaultPolicy, NetModel, RunOpts, Transport};
 use dbcsr::backend::autotune::{tuned_to_json, Autotuner};
@@ -286,13 +295,18 @@ fn run_file(args: &Args) {
             .or_else(|| cf.get("defaults.horizon"))
             .map(|v| v.parse::<f64>().expect("detect-horizon must be seconds (float)"))
             .unwrap_or_else(|| RunOpts::default().detect_horizon);
-        let (r, _) = run_spec_opts(
+        let profiling = get_s(section, "profile", "false") == "true";
+        let (r, _, prof) = run_spec_full(
             spec,
             RunOpts {
+                profile: profiling,
                 detect_horizon,
                 ..RunOpts::default()
             },
         );
+        if let Some(prof) = &prof {
+            print!("[{section}] profile:\n{}", ProfileReport::build(prof).render());
+        }
         if r.unrecoverable {
             println!(
                 "[{section}] recovery: Unrecoverable — fault injected but the \
@@ -301,7 +315,7 @@ fn run_file(args: &Args) {
             continue;
         }
         println!(
-            "[{section}] {}{} (stacks {}, comm {:.1} MiB{}{}{}{})",
+            "[{section}] {}{} (stacks {}, comm {:.1} MiB, meta {:.2} MiB{}{}{}{}{})",
             fmt_secs(r.seconds),
             if r.iterations > 1 {
                 format!(" / {} iters + setup {}", r.iterations, fmt_secs(r.repl_seconds))
@@ -310,6 +324,12 @@ fn run_file(args: &Args) {
             },
             r.stats.stacks,
             r.stats.comm_bytes as f64 / (1 << 20) as f64,
+            r.meta_bytes as f64 / (1 << 20) as f64,
+            if r.overlap_hidden_seconds > 0.0 {
+                format!(", overlap hidden {:.3}s", r.overlap_hidden_seconds)
+            } else {
+                String::new()
+            },
             if r.stats.a_total_blocks > 0 && (r.occupancy_a < 1.0 || r.occupancy_b < 1.0) {
                 format!(
                     ", occ A {:.4} B {:.4} C {:.4}",
@@ -518,10 +538,13 @@ fn run_one(args: &Args, scale: usize, mode: Mode) {
         .map(|v| v.parse::<f64>().expect("--detect-horizon must be seconds (float)"))
         .unwrap_or_else(|| RunOpts::default().detect_horizon);
     let verifying = args.switch("verify");
-    let (r, trace) = run_spec_opts(
+    let trace_out = args.flag("trace-out").map(String::from);
+    let profiling = args.switch("profile") || trace_out.is_some();
+    let (r, trace, prof) = run_spec_full(
         spec,
         RunOpts {
             trace: verifying,
+            profile: profiling,
             detect_horizon,
             ..RunOpts::default()
         },
@@ -625,5 +648,21 @@ fn run_one(args: &Args, scale: usize, mode: Mode) {
             "occupancy A {:.4} B {:.4} -> C {:.4}  ({} result blocks filtered)",
             r.occupancy_a, r.occupancy_b, r.occupancy_c, r.stats.filtered_blocks
         );
+    }
+    if let Some(prof) = &prof {
+        if let Some(path) = &trace_out {
+            let json = chrome::chrome_trace(prof);
+            std::fs::write(path, json.to_string()).unwrap_or_else(|e| {
+                eprintln!("cannot write {path}: {e}");
+                std::process::exit(2);
+            });
+            println!(
+                "trace: {} spans -> {path} (load in Perfetto / chrome://tracing)",
+                prof.spans.len()
+            );
+        }
+        if args.switch("profile") {
+            print!("{}", ProfileReport::build(prof).render());
+        }
     }
 }

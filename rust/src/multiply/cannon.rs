@@ -39,6 +39,7 @@ use std::collections::BTreeMap;
 use crate::backend::gpu_sim::DeviceOom;
 use crate::dist::{CommView, Grid2D, Payload, PendingGet, RmaWindow, Transport};
 use crate::matrix::{DistMatrix, Distribution, LocalCsr, Mode};
+use crate::obs::{Lane, Phase};
 
 use super::engine::LocalEngine;
 use super::sparse_exchange::{
@@ -123,6 +124,9 @@ pub fn multiply_cannon(
             }
         }
     }
+    let prof = grid.world.prof_on();
+    let skew_t0 = grid.world.now();
+    let skew_b0 = if prof { grid.world.stats().bytes_sent } else { 0 };
     match transport {
         Transport::TwoSided => {
             a_panels = exchange(
@@ -157,6 +161,17 @@ pub fn multiply_cannon(
             a_panels = rma_exchange_finish(ex_a, |key| panel_meta(a, &vg, key.0, key.1), mode);
             b_panels = rma_exchange_finish(ex_b, |key| panel_meta(b, &vg, key.0, key.1), mode);
         }
+    }
+    if prof {
+        grid.world.prof_span(
+            Lane::Driver,
+            Phase::Skew,
+            None,
+            skew_t0,
+            grid.world.now(),
+            grid.world.stats().bytes_sent - skew_b0,
+            None,
+        );
     }
 
     // ---- C slots ----------------------------------------------------------
@@ -200,8 +215,10 @@ pub fn multiply_cannon(
             (None, None)
         };
         // double-buffer: issue tick s+1's transfer before tick s computes
-        let inflight = (overlap && s + 1 < vg.l).then(|| {
-            shift_start(
+        let inflight = if overlap && s + 1 < vg.l {
+            let t0 = grid.world.now();
+            let b0 = if prof { grid.world.stats().bytes_sent } else { 0 };
+            let pending = shift_start(
                 grid,
                 &mut ring,
                 &a_panels,
@@ -210,8 +227,22 @@ pub fn multiply_cannon(
                 next_b.as_deref(),
                 (TAG_SHIFT_A, TAG_SHIFT_B),
                 mode,
-            )
-        });
+            );
+            if prof {
+                grid.world.prof_span(
+                    Lane::Driver,
+                    Phase::Shift,
+                    Some(s as u64),
+                    t0,
+                    grid.world.now(),
+                    grid.world.stats().bytes_sent - b0,
+                    None,
+                );
+            }
+            Some(pending)
+        } else {
+            None
+        };
         for (idx, &(i, j)) in slots.iter().enumerate() {
             let g = vg.group_at(i, j, s);
             let ap = &a_panels[&(i, g)];
@@ -225,6 +256,7 @@ pub fn multiply_cannon(
                 // completion blocks, so the prefetched transfer charges
                 // max(compute, transfer) instead of their sum
                 engine.join_host(&grid.world);
+                let t0 = grid.world.now();
                 hidden_s += shift_finish(
                     grid,
                     &mut ring,
@@ -235,7 +267,20 @@ pub fn multiply_cannon(
                     |key| panel_meta(b, &vg, key.0, key.1),
                     mode,
                 );
+                if prof {
+                    grid.world.prof_span(
+                        Lane::Driver,
+                        Phase::Shift,
+                        Some(s as u64),
+                        t0,
+                        grid.world.now(),
+                        0,
+                        None,
+                    );
+                }
             } else {
+                let t0 = grid.world.now();
+                let b0 = if prof { grid.world.stats().bytes_sent } else { 0 };
                 shift_pair(
                     grid,
                     &mut ring,
@@ -248,10 +293,33 @@ pub fn multiply_cannon(
                     (TAG_SHIFT_A, TAG_SHIFT_B),
                     mode,
                 );
+                if prof {
+                    grid.world.prof_span(
+                        Lane::Driver,
+                        Phase::Shift,
+                        Some(s as u64),
+                        t0,
+                        grid.world.now(),
+                        grid.world.stats().bytes_sent - b0,
+                        None,
+                    );
+                }
             }
         }
     }
+    let fence_t0 = grid.world.now();
     ring.retire(grid);
+    if prof {
+        grid.world.prof_span(
+            Lane::Driver,
+            Phase::Fence,
+            None,
+            fence_t0,
+            grid.world.now(),
+            0,
+            None,
+        );
+    }
     engine.stats.overlap_hidden_s += hidden_s;
 
     // ---- assemble C (sparse: only symbolic-pattern blocks) -----------------

@@ -22,6 +22,7 @@
 //! final sync takes the max. Real mode executes actual numerics through
 //! the same calls.
 
+use std::cell::RefCell;
 use std::rc::Rc;
 
 use crate::backend::gpu_sim::{DeviceOom, GpuSim};
@@ -29,6 +30,7 @@ use crate::backend::stack::StackEntries;
 use crate::backend::smm_cpu;
 use crate::dist::CommView;
 use crate::matrix::{BlockStore, LocalCsr, Mode, MODEL_ELEM_BYTES, REAL_ELEM_BYTES};
+use crate::obs::{Lane, Phase};
 use crate::perfmodel::PerfModel;
 use crate::runtime::Runtime;
 use crate::util::stats::MultiplyStats;
@@ -84,6 +86,13 @@ pub struct LocalEngine {
     // scratch (pinned-host analogs, reused across ticks)
     dense_a: Vec<f32>,
     dense_b: Vec<f32>,
+    /// Profiler state, captured from the comm view at [`LocalEngine::begin`]:
+    /// when on, every host-lane busy segment `(lane, start, end)` is
+    /// buffered here and flushed as a `Compute` span at the next
+    /// [`LocalEngine::join_host`] / [`LocalEngine::finish`]. Pure
+    /// bookkeeping — lane clocks are read, never written.
+    prof_on: bool,
+    prof_segs: RefCell<Vec<(usize, f64, f64)>>,
 }
 
 impl LocalEngine {
@@ -104,6 +113,8 @@ impl LocalEngine {
             slots: Vec::new(),
             dense_a: Vec::new(),
             dense_b: Vec::new(),
+            prof_on: false,
+            prof_segs: RefCell::new(Vec::new()),
         }
     }
 
@@ -121,6 +132,8 @@ impl LocalEngine {
             slots: Vec::new(),
             dense_a: Vec::new(),
             dense_b: Vec::new(),
+            prof_on: false,
+            prof_segs: RefCell::new(Vec::new()),
         }
     }
 
@@ -140,6 +153,8 @@ impl LocalEngine {
     pub fn begin(&mut self, comm: &CommView, c_panels: Vec<LocalCsr>) -> Result<(), DeviceOom> {
         let threads = self.opts.threads.max(1);
         self.lane_free = vec![comm.now(); threads];
+        self.prof_on = comm.prof_on();
+        self.prof_segs.borrow_mut().clear();
         self.slots.clear();
         for panel in c_panels {
             let ranges = densify::thread_row_ranges(panel.nrows(), threads);
@@ -239,6 +254,7 @@ impl LocalEngine {
             let densify_s = per_thread_b + self.perf().memcpy_seconds(a_bytes_t);
             let host_now = lane_start + densify_s;
             self.lane_free[t] = host_now;
+            self.prof_seg(t, lane_start, host_now);
 
             // h2d: this thread's A panel, plus B once (first active thread)
             let h2d = a_bytes_t + if Some(t) == first_active { b_bytes } else { 0 };
@@ -309,8 +325,10 @@ impl LocalEngine {
             // generation + issue cost on the owning lane
             let gen_s = self.perf().entry_gen_cost * entries as f64
                 + self.perf().stack_host_overhead;
-            let host_now = self.lane_free[t].max(t_base) + gen_s;
+            let lane_start = self.lane_free[t].max(t_base);
+            let host_now = lane_start + gen_s;
             self.lane_free[t] = host_now;
+            self.prof_seg(t, lane_start, host_now);
 
             self.stats.stacks += 1;
             self.stats.block_mults += entries as u64;
@@ -322,6 +340,7 @@ impl LocalEngine {
             if self.opts.cpu_coexec && host_now + cpu_s < gpu_finish {
                 // CPU lane executes
                 self.lane_free[t] = host_now + cpu_s;
+                self.prof_seg(t, host_now, host_now + cpu_s);
                 self.stats.cpu_stacks += 1;
                 if let StackEntries::Real(es) = &stack.entries {
                     let c_panel = &mut self.slots[slot].panel;
@@ -356,6 +375,25 @@ impl LocalEngine {
         &self.gpu.perf
     }
 
+    /// Buffer one host-lane busy segment for the profiler (no-op when
+    /// profiling is off or the segment is empty).
+    fn prof_seg(&self, lane: usize, start: f64, end: f64) {
+        if self.prof_on && end > start {
+            self.prof_segs.borrow_mut().push((lane, start, end));
+        }
+    }
+
+    /// Flush buffered lane segments as `Compute` spans on the per-thread
+    /// compute lanes.
+    fn flush_prof(&self, comm: &CommView) {
+        if !self.prof_on {
+            return;
+        }
+        for (t, s, e) in self.prof_segs.borrow_mut().drain(..) {
+            comm.prof_span(Lane::Compute(t), Phase::Compute, None, s, e, 0, None);
+        }
+    }
+
     /// Advance this rank's virtual clock to its host-lane frontier —
     /// the earliest instant the host could issue its next blocking comm
     /// call after the tick it just processed (densify copies, stack
@@ -368,6 +406,7 @@ impl LocalEngine {
     /// which is exactly the serialized baseline the overlap is measured
     /// against.
     pub fn join_host(&self, comm: &CommView) {
+        self.flush_prof(comm);
         let lanes = self.lane_free.iter().copied().fold(0.0f64, f64::max);
         comm.advance_to(lanes);
     }
@@ -399,8 +438,10 @@ impl LocalEngine {
                     let (rows, cols) = densify::dense_dims(&slot.panel, r0, len);
                     let bytes = (rows * cols) as u64 * eb;
                     charged += bytes;
-                    self.lane_free[t] = self.lane_free[t].max(comm.now())
-                        + self.perf().memcpy_seconds(bytes);
+                    let lane_start = self.lane_free[t].max(comm.now());
+                    let lane_end = lane_start + self.perf().memcpy_seconds(bytes);
+                    self.lane_free[t] = lane_end;
+                    self.prof_seg(t, lane_start, lane_end);
                 }
                 debug_assert_eq!(charged, slot.c_bytes, "undensify split must cover C");
                 self.stats.densify_bytes += slot.c_bytes;
@@ -417,6 +458,7 @@ impl LocalEngine {
             out.push(slot.panel);
         }
         // final sync: lanes and device drain
+        self.flush_prof(comm);
         let device_done = self.gpu.sync();
         let lanes_done = self.lane_free.iter().copied().fold(0.0f64, f64::max);
         comm.advance_to(device_done.max(lanes_done));

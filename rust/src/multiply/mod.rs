@@ -416,6 +416,7 @@ pub fn multiply(
         // crosses this mark
         world.phase_mark();
     }
+    world.prof_multiply_sample(world.now() - t0);
     Ok(MultiplyOutcome {
         c,
         stats,

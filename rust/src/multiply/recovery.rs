@@ -67,6 +67,7 @@ use crate::backend::gpu_sim::DeviceOom;
 use crate::dist::tags::{TAG_RECOVER_FENCE, WIN_RECOVER_A, WIN_RECOVER_B};
 use crate::dist::{CommView, Grid2D, Grid3D, Payload, RmaWindow, Transport};
 use crate::matrix::{DistMatrix, LocalCsr, Mode};
+use crate::obs::{Lane, Phase};
 
 use super::cannon::{
     build_c_slots, extract_panel, rma_shift_put, route_exchange, Key, ShiftRing,
@@ -270,8 +271,20 @@ impl<'m> RecoveryCtx<'m> {
             });
             let local = decode_framed_share(payload, &m.rows, &m.cols, m.mode);
             let s1 = self.world.stats();
-            self.bytes += (s1.bytes_sent - s0.bytes_sent) + (s1.meta_bytes - s0.meta_bytes);
+            let fetched = (s1.bytes_sent - s0.bytes_sent) + (s1.meta_bytes - s0.meta_bytes);
+            self.bytes += fetched;
             self.seconds += self.world.now() - t0;
+            // span bounds equal the booked delta exactly, so the
+            // recovery lane reconciles with `recovery_s`
+            self.world.prof_span(
+                Lane::Recovery,
+                Phase::Heal,
+                None,
+                t0,
+                self.world.now(),
+                fetched,
+                Some(owner),
+            );
             let dm = DistMatrix {
                 rows: m.rows.clone(),
                 cols: m.cols.clone(),
@@ -326,6 +339,7 @@ where
             // detection latency (one horizon past the death) is part
             // of the recovery bill
             ctx.seconds += world.now() - t0;
+            world.prof_span(Lane::Recovery, Phase::Heal, None, t0, world.now(), 0, None);
             for k in next_keys {
                 out.insert(*k, ctx.fetch(is_a, *k));
             }
@@ -357,6 +371,8 @@ where
         Ok(payload) => unpack_panels(payload, next_keys, &meta, mode, &mut out),
         Err(_) => {
             ctx.seconds += ctx.world.now() - t0;
+            ctx.world
+                .prof_span(Lane::Recovery, Phase::Heal, None, t0, ctx.world.now(), 0, None);
             for k in next_keys {
                 out.insert(*k, ctx.fetch(is_a, *k));
             }
@@ -393,6 +409,8 @@ where
         }
         Err(_) => {
             ctx.seconds += ctx.world.now() - t0;
+            ctx.world
+                .prof_span(Lane::Recovery, Phase::Heal, None, t0, ctx.world.now(), 0, None);
             for k in next_keys {
                 out.insert(*k, ctx.fetch(is_a, *k));
             }
@@ -599,7 +617,12 @@ pub(super) fn recompute_layer(
     // total recompute wall time, without double-booking the fetch
     // seconds `ctx.fetch` already recorded inside the loop
     let fetched = ctx.seconds - sec0;
-    ctx.seconds = sec0 + (comm.now() - t0).max(fetched);
+    let extra = ((comm.now() - t0) - fetched).max(0.0);
+    ctx.seconds = sec0 + fetched + extra;
+    // the replay lane carries exactly the non-fetch share of the bill
+    // (the fetch share is already on the recovery lane span-for-span)
+    let now = comm.now();
+    comm.prof_span(Lane::Replay, Phase::Replay, None, now - extra, now, 0, None);
     Ok((panels, pats))
 }
 

@@ -34,6 +34,7 @@ use std::collections::{BTreeMap, BTreeSet};
 use crate::backend::gpu_sim::DeviceOom;
 use crate::dist::{CommView, Grid3D, Payload, RmaWindow, Transport};
 use crate::matrix::{BlockLayout, DistMatrix, Distribution, LocalCsr, Mode};
+use crate::obs::{Lane, Phase};
 use crate::util::stats::{MultiplyStats, PlanSummary};
 
 use super::cannon::{
@@ -585,6 +586,7 @@ impl PipelineSession {
         let wait_delta = (world.stats().wait_seconds - wait0).max(0.0);
         stats.comm_wait_s += wait_delta;
         stats.overlap_hidden_s += (modeled - wait_delta).max(0.0);
+        world.prof_span(Lane::Driver, Phase::Drain, None, t0, world.now(), 0, None);
         let holds = self.g3.layer == 0;
         let mut c = assemble_c_from_layouts(
             &c_rows,
@@ -662,8 +664,13 @@ impl PipelineSession {
     }
 
     fn book_setup(&mut self, t0: f64, b0: u64) {
-        self.stats.repl_s += self.g3.world.now() - t0;
-        self.stats.repl_bytes += self.g3.world.stats().bytes_sent - b0;
+        let world = &self.g3.world;
+        let bytes = world.stats().bytes_sent - b0;
+        self.stats.repl_s += world.now() - t0;
+        self.stats.repl_bytes += bytes;
+        // span bounds equal the booked delta exactly, so the driver
+        // lane reconciles with the `repl_` bucket
+        world.prof_span(Lane::Driver, Phase::Replicate, None, t0, world.now(), bytes, None);
     }
 
     /// Run the A-side skew of `a_src` and the B-side skew of `b_src`
@@ -887,6 +894,7 @@ impl PipelineSession {
             .retain(|f| leftover.contains(&f.rank));
         self.stats.recovery_bytes += bytes;
         self.stats.recovery_s += seconds;
+        run_world.prof_span(Lane::Recovery, Phase::Adopt, None, t0, t0 + seconds, bytes, None);
         AdoptionReport {
             adopted: pairs,
             released,
@@ -1039,6 +1047,15 @@ pub fn spare_serve(
     session.multiplies = multiplies;
     session.stats.recovery_bytes += recovery_bytes;
     session.stats.recovery_s += recovery_s;
+    run_world.prof_span(
+        Lane::Recovery,
+        Phase::Adopt,
+        None,
+        t0,
+        t0 + recovery_s,
+        recovery_bytes,
+        None,
+    );
     SpareOutcome::Adopted(Box::new(AdoptedSeat {
         session,
         a: ResidentOperand::from_shares(Some(a_native), None),

@@ -32,6 +32,7 @@
 use crate::backend::gpu_sim::DeviceOom;
 use crate::dist::{sum_payloads, CommView, Payload, RmaWindow, Transport};
 use crate::matrix::{DistMatrix, Distribution, LocalCsr, Mode};
+use crate::obs::{Lane, Phase};
 
 use super::engine::LocalEngine;
 
@@ -169,6 +170,9 @@ pub fn multiply_tall_skinny(
     let mut c_local = out.remove(0);
 
     // the O(1) exchange: one allreduce of C, over the selected transport
+    let prof = world.prof_on();
+    let red_t0 = world.now();
+    let red_b0 = if prof { world.stats().bytes_sent } else { 0 };
     match mode {
         Mode::Real => {
             let data = c_local.store.data().to_vec();
@@ -179,6 +183,17 @@ pub fn multiply_tall_skinny(
             let bytes = c_local.store.wire_bytes();
             let _ = allreduce_c(world, Payload::Phantom { bytes }, transport);
         }
+    }
+    if prof {
+        world.prof_span(
+            Lane::Driver,
+            Phase::TsReduce,
+            None,
+            red_t0,
+            world.now(),
+            world.stats().bytes_sent - red_b0,
+            None,
+        );
     }
 
     // wrap as a replicated matrix (every rank holds all of C)

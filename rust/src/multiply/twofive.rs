@@ -34,6 +34,7 @@ use crate::dist::{Grid3D, Payload, RmaWindow, Transport};
 use crate::matrix::matrix::block_rng;
 use crate::matrix::sparse::block_present;
 use crate::matrix::{BlockLayout, DistMatrix, Distribution, LocalCsr, Mode};
+use crate::obs::{Lane, Phase};
 use crate::util::even_chunk;
 
 use super::cannon::{
@@ -309,6 +310,9 @@ pub(super) fn twofive_sweep<'m>(
     // dropped (its panels exist as replicas elsewhere) and panels
     // expected *from* it are healed out of the recovery windows
     let degraded = !plan.already_dead.is_empty() && !(a_native && b_native);
+    let prof = g3.world.prof_on();
+    let skew_t0 = g3.world.now();
+    let skew_b0 = if prof { g3.world.stats().bytes_sent } else { 0 };
     let (mut a_panels, mut b_panels) = if degraded {
         let cx = ctx.as_mut().expect("degraded skew requires a fault plan");
         let ap = match a_plan {
@@ -396,6 +400,17 @@ pub(super) fn twofive_sweep<'m>(
             }
         }
     };
+    if prof {
+        g3.world.prof_span(
+            Lane::Driver,
+            Phase::Skew,
+            None,
+            skew_t0,
+            g3.world.now(),
+            g3.world.stats().bytes_sent - skew_b0,
+            None,
+        );
+    }
 
     // ---- C slots ----------------------------------------------------------
     engine.begin(&grid.world, build_c_slots(&vg, &slots, a, b))?;
@@ -454,8 +469,10 @@ pub(super) fn twofive_sweep<'m>(
             (None, None)
         };
         // double-buffer: issue tick t+1's transfer before tick t computes
-        let inflight = (use_overlap && t + 1 < nticks).then(|| {
-            shift_start(
+        let inflight = if use_overlap && t + 1 < nticks {
+            let sh_t0 = grid.world.now();
+            let sh_b0 = if prof { grid.world.stats().bytes_sent } else { 0 };
+            let pending = shift_start(
                 grid,
                 &mut ring,
                 &a_panels,
@@ -464,8 +481,22 @@ pub(super) fn twofive_sweep<'m>(
                 next_b.as_deref(),
                 (TAG_SHIFT_A, TAG_SHIFT_B),
                 mode,
-            )
-        });
+            );
+            if prof {
+                grid.world.prof_span(
+                    Lane::Driver,
+                    Phase::Shift,
+                    Some(s as u64),
+                    sh_t0,
+                    grid.world.now(),
+                    grid.world.stats().bytes_sent - sh_b0,
+                    None,
+                );
+            }
+            Some(pending)
+        } else {
+            None
+        };
         for (idx, &(i, j)) in slots.iter().enumerate() {
             let g = vg.group_at(i, j, s);
             let ap = &a_panels[&(i, g)];
@@ -479,6 +510,7 @@ pub(super) fn twofive_sweep<'m>(
                 // completion blocks, so the prefetched transfer charges
                 // max(compute, transfer) instead of their sum
                 engine.join_host(&grid.world);
+                let fin_t0 = grid.world.now();
                 hidden_s += shift_finish(
                     grid,
                     &mut ring,
@@ -489,33 +521,59 @@ pub(super) fn twofive_sweep<'m>(
                     |key| panel_meta(b, &vg, key.0, key.1),
                     mode,
                 );
-            } else if let Some(cx) = ctx.as_mut() {
-                ft_shift_pair(
-                    grid,
-                    &mut ring,
-                    cx,
-                    &mut a_panels,
-                    &mut b_panels,
-                    next_a.as_deref(),
-                    next_b.as_deref(),
-                    |key| panel_meta(a, &vg, key.0, key.1),
-                    |key| panel_meta(b, &vg, key.0, key.1),
-                    (TAG_SHIFT_A, TAG_SHIFT_B),
-                    mode,
-                );
+                if prof {
+                    grid.world.prof_span(
+                        Lane::Driver,
+                        Phase::Shift,
+                        Some(s as u64),
+                        fin_t0,
+                        grid.world.now(),
+                        0,
+                        None,
+                    );
+                }
             } else {
-                shift_pair(
-                    grid,
-                    &mut ring,
-                    &mut a_panels,
-                    &mut b_panels,
-                    next_a.as_deref(),
-                    next_b.as_deref(),
-                    |key| panel_meta(a, &vg, key.0, key.1),
-                    |key| panel_meta(b, &vg, key.0, key.1),
-                    (TAG_SHIFT_A, TAG_SHIFT_B),
-                    mode,
-                );
+                let sh_t0 = grid.world.now();
+                let sh_b0 = if prof { grid.world.stats().bytes_sent } else { 0 };
+                if let Some(cx) = ctx.as_mut() {
+                    ft_shift_pair(
+                        grid,
+                        &mut ring,
+                        cx,
+                        &mut a_panels,
+                        &mut b_panels,
+                        next_a.as_deref(),
+                        next_b.as_deref(),
+                        |key| panel_meta(a, &vg, key.0, key.1),
+                        |key| panel_meta(b, &vg, key.0, key.1),
+                        (TAG_SHIFT_A, TAG_SHIFT_B),
+                        mode,
+                    );
+                } else {
+                    shift_pair(
+                        grid,
+                        &mut ring,
+                        &mut a_panels,
+                        &mut b_panels,
+                        next_a.as_deref(),
+                        next_b.as_deref(),
+                        |key| panel_meta(a, &vg, key.0, key.1),
+                        |key| panel_meta(b, &vg, key.0, key.1),
+                        (TAG_SHIFT_A, TAG_SHIFT_B),
+                        mode,
+                    );
+                }
+                if prof {
+                    grid.world.prof_span(
+                        Lane::Driver,
+                        Phase::Shift,
+                        Some(s as u64),
+                        sh_t0,
+                        grid.world.now(),
+                        grid.world.stats().bytes_sent - sh_b0,
+                        None,
+                    );
+                }
             }
         }
     }
@@ -534,7 +592,19 @@ pub(super) fn twofive_sweep<'m>(
     // the get-shift windows retire behind a ring fence; a rank dying
     // at `nticks` died above, before fencing, so survivors route their
     // fence edges around the dead set
+    let fence_t0 = grid.world.now();
     ring.retire_ft(grid, &plan.all_dead());
+    if prof {
+        grid.world.prof_span(
+            Lane::Driver,
+            Phase::Fence,
+            None,
+            fence_t0,
+            grid.world.now(),
+            0,
+            None,
+        );
+    }
 
     let out_panels = engine.finish(&grid.world);
     Ok(SweepOutcome::Live(SweepState {
@@ -572,6 +642,9 @@ pub(super) fn twofive_finish(
     // only blocks present in each layer's symbolic result pattern travel;
     // the root union-merges layer-0-first in ascending layer order on both
     // transports, so the reduced C is bit-identical across transports
+    let prof = g3.world.prof_on();
+    let red_t0 = g3.world.now();
+    let red_b0 = if prof { g3.world.stats().bytes_sent } else { 0 };
     let holds_result = match ctx.as_mut() {
         None => {
             reduce_c_layers(g3, transport, &mut out_panels, &mut c_pats, mode);
@@ -594,12 +667,27 @@ pub(super) fn twofive_finish(
             )?
         }
     };
+    if prof {
+        g3.world.prof_span(
+            Lane::Driver,
+            Phase::Reduce,
+            None,
+            red_t0,
+            g3.world.now(),
+            g3.world.stats().bytes_sent - red_b0,
+            None,
+        );
+    }
 
     // ---- recovery teardown: fence, then tombstone the share windows ------
     if let Some(mut cx) = ctx.take() {
         let t0 = g3.world.now();
         survivor_fence(&g3.world, plan);
         cx.seconds += g3.world.now() - t0;
+        // the fence interval is booked into recovery_s above, so its
+        // span lives on the recovery lane with the exact same bounds
+        g3.world
+            .prof_span(Lane::Recovery, Phase::Fence, None, t0, g3.world.now(), 0, None);
         cx.close();
         engine.stats.recovery_bytes += cx.bytes;
         engine.stats.recovery_s += cx.seconds;

@@ -1,0 +1,171 @@
+//! Chrome trace-event exporter (`--trace-out FILE`).
+//!
+//! Emits the JSON Object Format of the trace-event spec — loadable in
+//! Perfetto (ui.perfetto.dev) or `chrome://tracing`. Each rank becomes
+//! a process (`pid`), each [`Lane`] a named thread (`tid`), each
+//! [`ProfSpan`] a complete ("X") duration event, and cumulative
+//! byte/retransmit volume per rank a counter ("C") track. Timestamps
+//! are the virtual clock scaled to microseconds (the format's unit), so
+//! one trace is one deterministic virtual timeline — identical across
+//! re-runs of the same configuration.
+
+use std::collections::BTreeSet;
+
+use crate::util::json::{obj, Json};
+
+use super::{Lane, Phase, ProfLog};
+
+/// Virtual seconds → trace microseconds.
+fn us(t: f64) -> f64 {
+    t * 1e6
+}
+
+/// Build the full trace document for one profiled run.
+pub fn chrome_trace(log: &ProfLog) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+
+    // stable ordering: spans sorted by (rank, lane, start)
+    let mut spans: Vec<&super::ProfSpan> = log.spans.iter().collect();
+    spans.sort_by(|a, b| {
+        (a.rank, a.lane.tid())
+            .cmp(&(b.rank, b.lane.tid()))
+            .then(a.t_start.partial_cmp(&b.t_start).unwrap())
+    });
+
+    // metadata: name every process (rank) and thread (lane) that appears
+    let ranks: BTreeSet<usize> = spans.iter().map(|s| s.rank).collect();
+    for &r in &ranks {
+        events.push(obj([
+            ("name", "process_name".into()),
+            ("ph", "M".into()),
+            ("pid", r.into()),
+            ("args", obj([("name", format!("rank {r}").into())])),
+        ]));
+    }
+    let mut named: BTreeSet<(usize, u64)> = BTreeSet::new();
+    for s in &spans {
+        if named.insert((s.rank, s.lane.tid())) {
+            events.push(obj([
+                ("name", "thread_name".into()),
+                ("ph", "M".into()),
+                ("pid", s.rank.into()),
+                ("tid", s.lane.tid().into()),
+                ("args", obj([("name", s.lane.label().into())])),
+            ]));
+        }
+    }
+
+    // duration events
+    for s in &spans {
+        let mut args: Vec<(&'static str, Json)> = vec![("bytes", s.bytes.into())];
+        if let Some(t) = s.tick {
+            args.push(("tick", t.into()));
+        }
+        if let Some(p) = s.peer {
+            args.push(("peer", p.into()));
+        }
+        events.push(obj([
+            ("name", s.phase.name().into()),
+            ("cat", s.lane.label().into()),
+            ("ph", "X".into()),
+            ("ts", us(s.t_start).into()),
+            ("dur", us(s.t_end - s.t_start).into()),
+            ("pid", s.rank.into()),
+            ("tid", s.lane.tid().into()),
+            ("args", obj(args)),
+        ]));
+    }
+
+    // counter tracks: cumulative wire bytes and retransmit bytes per
+    // rank, sampled at span ends
+    for &r in &ranks {
+        let mut points: Vec<(f64, u64, bool)> = log
+            .spans
+            .iter()
+            .filter(|s| s.rank == r && s.bytes > 0)
+            .map(|s| (s.t_end, s.bytes, s.lane == Lane::Retrans || s.phase == Phase::Retrans))
+            .collect();
+        points.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut cum = 0u64;
+        let mut cum_re = 0u64;
+        for (t, b, retrans) in points {
+            if retrans {
+                cum_re += b;
+            } else {
+                cum += b;
+            }
+            events.push(obj([
+                ("name", "bytes".into()),
+                ("ph", "C".into()),
+                ("pid", r.into()),
+                ("ts", us(t).into()),
+                (
+                    "args",
+                    obj([("bytes", cum.into()), ("retrans", cum_re.into())]),
+                ),
+            ]));
+        }
+    }
+
+    obj([
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", "ms".into()),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{ProfSpan, ProfLog};
+    use super::*;
+
+    #[test]
+    fn trace_has_events_metadata_and_counters() {
+        let mut log = ProfLog::default();
+        log.push(ProfSpan {
+            rank: 0,
+            lane: Lane::Driver,
+            phase: Phase::Shift,
+            tick: Some(2),
+            t_start: 1e-3,
+            t_end: 2e-3,
+            bytes: 4096,
+            peer: Some(1),
+        });
+        log.push(ProfSpan {
+            rank: 0,
+            lane: Lane::Retrans,
+            phase: Phase::Retrans,
+            tick: None,
+            t_start: 2e-3,
+            t_end: 3e-3,
+            bytes: 128,
+            peer: None,
+        });
+        let doc = chrome_trace(&log);
+        assert_eq!(doc.get("displayTimeUnit").as_str(), Some("ms"));
+        let events = doc.get("traceEvents").as_arr().unwrap();
+        let xs: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("X"))
+            .collect();
+        assert_eq!(xs.len(), 2);
+        let shift = xs.iter().find(|e| e.get("name").as_str() == Some("shift")).unwrap();
+        assert_eq!(shift.get("ts").as_f64(), Some(1e3)); // 1 ms in µs
+        assert_eq!(shift.get("dur").as_f64(), Some(1e3));
+        assert_eq!(shift.get("args").get("tick").as_usize(), Some(2));
+        assert_eq!(shift.get("args").get("peer").as_usize(), Some(1));
+        assert!(events.iter().any(|e| e.get("ph").as_str() == Some("M")
+            && e.get("args").get("name").as_str() == Some("rank 0")));
+        let counters: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("C"))
+            .collect();
+        assert_eq!(counters.len(), 2);
+        let last = counters.last().unwrap();
+        assert_eq!(last.get("args").get("bytes").as_usize(), Some(4096));
+        assert_eq!(last.get("args").get("retrans").as_usize(), Some(128));
+        // round-trips through the parser (what check_trace.py reads)
+        let text = doc.to_string();
+        assert!(Json::parse(&text).is_ok());
+    }
+}

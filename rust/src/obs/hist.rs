@@ -1,0 +1,329 @@
+//! Log-bucketed latency histograms (HDR-style, mergeable).
+//!
+//! Buckets grow geometrically by `2^(1/8)` (~9% width), so quantile
+//! reads carry at most one bucket's relative error while the whole
+//! histogram stays a few hundred entries for any realistic latency
+//! range — the p50/p99 primitive ROADMAP item 3 reuses per tenant.
+//! Counts live in a `BTreeMap` keyed by bucket index, which makes
+//! [`Hist::merge`] a bucket-wise count addition: merging two histograms
+//! is *exactly* histogramming the concatenated samples (pinned by the
+//! property test below).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::{obj, Json};
+
+/// Natural log of the bucket growth factor `2^(1/8)`.
+const LN_GROWTH: f64 = std::f64::consts::LN_2 / 8.0;
+
+/// Maximum relative half-width of one bucket — the error bound on
+/// every quantile accessor (the geometric bucket midpoint is within a
+/// factor `GROWTH^(1/2)` of any sample in the bucket).
+pub const GROWTH: f64 = 1.090_507_732_665_257_7; // 2^(1/8)
+
+/// A mergeable log-bucketed histogram over non-negative samples
+/// (virtual seconds, bytes — anything positive; zero and negative
+/// samples are counted in a dedicated underflow bin).
+#[derive(Clone, Debug)]
+pub struct Hist {
+    buckets: BTreeMap<i32, u64>,
+    /// Samples `<= 0` (a blocked-for-zero-time wait is still a sample).
+    zeros: u64,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist {
+            buckets: BTreeMap::new(),
+            zeros: 0,
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist::default()
+    }
+
+    /// Bucket index of a positive sample.
+    fn bucket_of(v: f64) -> i32 {
+        (v.ln() / LN_GROWTH).floor() as i32
+    }
+
+    /// Geometric midpoint of bucket `k` — the value a quantile read
+    /// reports for samples landing in it.
+    fn midpoint(k: i32) -> f64 {
+        ((k as f64 + 0.5) * LN_GROWTH).exp()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v.max(0.0);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        if v > 0.0 {
+            *self.buckets.entry(Self::bucket_of(v)).or_insert(0) += 1;
+        } else {
+            self.zeros += 1;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Exact-rank quantile over the bucketed samples: the value
+    /// reported is the geometric midpoint of the bucket holding the
+    /// `ceil(q·n)`-th smallest sample, so it is within one bucket's
+    /// relative error ([`GROWTH`]) of the exact sorted-sample quantile.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        if target <= self.zeros {
+            return 0.0;
+        }
+        let mut cum = self.zeros;
+        for (&k, &n) in &self.buckets {
+            cum += n;
+            if cum >= target {
+                return Self::midpoint(k);
+            }
+        }
+        // unreachable when the counters are consistent; fall back to max
+        self.max()
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+    pub fn p90(&self) -> f64 {
+        self.quantile(0.90)
+    }
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    /// Bucket-wise merge: the result is exactly the histogram of the
+    /// concatenated sample streams (counts, buckets and quantiles are
+    /// identical; `sum` may differ in the last ulps from f64 addition
+    /// order).
+    pub fn merge(&mut self, o: &Hist) {
+        for (&k, &n) in &o.buckets {
+            *self.buckets.entry(k).or_insert(0) += n;
+        }
+        self.zeros += o.zeros;
+        self.count += o.count;
+        self.sum += o.sum;
+        self.min = self.min.min(o.min);
+        self.max = self.max.max(o.max);
+    }
+
+    /// Bucket table — exposed so tests can assert merge-vs-concat
+    /// equality structurally.
+    pub fn bucket_counts(&self) -> &BTreeMap<i32, u64> {
+        &self.buckets
+    }
+
+    pub fn zeros(&self) -> u64 {
+        self.zeros
+    }
+
+    /// Compact summary for reports.
+    pub fn summary_json(&self) -> Json {
+        obj([
+            ("n", self.count.into()),
+            ("mean", self.mean().into()),
+            ("p50", self.p50().into()),
+            ("p90", self.p90().into()),
+            ("p99", self.p99().into()),
+            ("max", self.max().into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn exact_quantile(sorted: &[f64], q: f64) -> f64 {
+        let n = sorted.len();
+        let target = ((q * n as f64).ceil() as usize).clamp(1, n);
+        sorted[target - 1]
+    }
+
+    fn samples(rng: &mut Rng, n: usize) -> Vec<f64> {
+        // mixed scales: microseconds to seconds, plus occasional zeros
+        (0..n)
+            .map(|_| {
+                if rng.next_below(16) == 0 {
+                    0.0
+                } else {
+                    let exp = rng.next_f64() * 12.0 - 7.0; // 1e-7 .. 1e5
+                    10f64.powf(exp) * (0.5 + rng.next_f64())
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn empty_is_zeroes() {
+        let h = Hist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p50(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn single_sample_round_trips_within_a_bucket() {
+        let mut h = Hist::new();
+        h.record(3.7e-4);
+        assert_eq!(h.count(), 1);
+        let q = h.p50();
+        assert!(q / 3.7e-4 < GROWTH && 3.7e-4 / q < GROWTH, "q={q}");
+        assert_eq!(h.max(), 3.7e-4);
+    }
+
+    /// Satellite: log-bucketed quantiles agree with exact sorted-sample
+    /// quantiles within one bucket's relative error, across random
+    /// sample sets spanning 12 decades.
+    #[test]
+    fn prop_quantiles_within_one_bucket_of_exact() {
+        check("hist quantiles vs exact", 60, |rng, size| {
+            let n = 1 + size.0 * 8;
+            let xs = samples(rng, n);
+            let mut h = Hist::new();
+            for &x in &xs {
+                h.record(x);
+            }
+            let mut sorted = xs.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for &q in &[0.5, 0.9, 0.99] {
+                let exact = exact_quantile(&sorted, q);
+                let got = h.quantile(q);
+                if exact <= 0.0 {
+                    crate::prop_assert!(got == 0.0, "q{q}: exact 0 but hist {got}");
+                } else {
+                    let ratio = got / exact;
+                    // one bucket of relative error, plus float slack on
+                    // samples landing exactly on a bucket boundary
+                    crate::prop_assert!(
+                        ratio < GROWTH * (1.0 + 1e-9) && ratio > (1.0 - 1e-9) / GROWTH,
+                        "q{q}: exact {exact} hist {got} ratio {ratio} (n={n})"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Satellite: `merge` equals histogramming the concatenation —
+    /// identical bucket tables, counts, extremes and quantiles.
+    #[test]
+    fn prop_merge_equals_concat() {
+        check("hist merge = concat", 60, |rng, size| {
+            let xs = samples(rng, 1 + size.0 * 3);
+            let ys = samples(rng, 1 + size.0 * 5);
+            let mut hx = Hist::new();
+            let mut hy = Hist::new();
+            let mut hcat = Hist::new();
+            for &x in &xs {
+                hx.record(x);
+                hcat.record(x);
+            }
+            for &y in &ys {
+                hy.record(y);
+                hcat.record(y);
+            }
+            hx.merge(&hy);
+            crate::prop_assert!(
+                hx.bucket_counts() == hcat.bucket_counts(),
+                "bucket tables differ"
+            );
+            crate::prop_assert!(hx.zeros() == hcat.zeros(), "zero bins differ");
+            crate::prop_assert!(hx.count() == hcat.count(), "counts differ");
+            crate::prop_assert!(hx.min() == hcat.min(), "min differs");
+            crate::prop_assert!(hx.max() == hcat.max(), "max differs");
+            for &q in &[0.5, 0.9, 0.99] {
+                crate::prop_assert!(
+                    hx.quantile(q) == hcat.quantile(q),
+                    "quantile {q} differs: {} vs {}",
+                    hx.quantile(q),
+                    hcat.quantile(q)
+                );
+            }
+            crate::prop_assert!(
+                (hx.sum() - hcat.sum()).abs() <= 1e-9 * hcat.sum().abs().max(1.0),
+                "sums differ beyond float slack"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn merge_is_commutative_on_buckets() {
+        let mut rng = Rng::new(99);
+        let xs = samples(&mut rng, 40);
+        let ys = samples(&mut rng, 60);
+        let fill = |vals: &[f64]| {
+            let mut h = Hist::new();
+            for &v in vals {
+                h.record(v);
+            }
+            h
+        };
+        let mut ab = fill(&xs);
+        ab.merge(&fill(&ys));
+        let mut ba = fill(&ys);
+        ba.merge(&fill(&xs));
+        assert_eq!(ab.bucket_counts(), ba.bucket_counts());
+        assert_eq!(ab.count(), ba.count());
+        assert_eq!(ab.min(), ba.min());
+        assert_eq!(ab.max(), ba.max());
+    }
+}

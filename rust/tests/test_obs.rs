@@ -1,0 +1,504 @@
+//! Integration: the virtual-time observability layer (`dbcsr::obs`).
+//!
+//! Pins the conservation contract of the span profiler — every profiled
+//! interval lives inside its rank's final clock, no `(rank, lane)`
+//! timeline overlaps itself, and the span ledger reconciles exactly
+//! with the counters the multiply engine books (`wait_seconds`,
+//! `repl_s`, the fault-free zeros) — plus the critical-path walk, the
+//! Chrome-trace export, and the zero-overhead guarantee: profiling
+//! never changes a virtual-clock outcome.
+
+use std::collections::BTreeMap;
+
+use dbcsr::bench::harness::{run_spec_full, AlgoSpec, Engine, RunSpec, Shape};
+use dbcsr::dist::{run_ranks_full, NetModel, Payload, RunOpts, Transport};
+use dbcsr::matrix::Mode;
+use dbcsr::obs::{chrome, union_seconds, Lane, Phase, ProfLog, ProfileReport};
+use dbcsr::prop_assert;
+use dbcsr::util::json::Json;
+use dbcsr::util::prop;
+use dbcsr::util::rng::Rng;
+use dbcsr::util::stats::MultiplyStats;
+
+const ALL_TRANSPORTS: [Transport; 3] = [
+    Transport::TwoSided,
+    Transport::OneSided,
+    Transport::OneSidedGet,
+];
+
+fn profiled() -> RunOpts {
+    RunOpts {
+        profile: true,
+        ..RunOpts::default()
+    }
+}
+
+fn spec16(algo: AlgoSpec, transport: Transport) -> RunSpec {
+    RunSpec {
+        nodes: 4,
+        rpn: 4,
+        threads: 1,
+        block: 22,
+        shape: Shape::Square { n: 1408 },
+        engine: Engine::DbcsrDensified,
+        mode: Mode::Model,
+        net: NetModel::aries(4),
+        transport,
+        overlap: false,
+        algo,
+        plan_verbose: false,
+        occupancy: 1.0,
+        iterations: 1,
+        fault: None,
+        faultnet: None,
+        fault_policy: Default::default(),
+        spares: 0,
+    }
+}
+
+/// Per-(rank, lane) sum of durations vs merged (union) time: equal iff
+/// no lane timeline overlaps itself.
+fn assert_lanes_disjoint(prof: &ProfLog, label: &str) {
+    let mut by_lane: BTreeMap<(usize, Lane), Vec<(f64, f64)>> = BTreeMap::new();
+    for s in &prof.spans {
+        by_lane
+            .entry((s.rank, s.lane))
+            .or_default()
+            .push((s.t_start, s.t_end));
+    }
+    for ((rank, lane), mut iv) in by_lane {
+        iv.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut prev_end = f64::NEG_INFINITY;
+        let scale: f64 = iv.iter().map(|(a, b)| b - a).sum::<f64>().max(1e-9);
+        for (a, b) in iv {
+            assert!(
+                a >= prev_end - 1e-9 * scale,
+                "{label}: rank {rank} lane {lane:?} overlaps: span starts at {a} \
+                 before previous end {prev_end}"
+            );
+            prev_end = prev_end.max(b);
+        }
+    }
+}
+
+/// The conservation invariant over a full harness run: all spans sit
+/// inside [0, final clock], no lane self-overlaps, merged busy time
+/// never exceeds the clock (idle ≥ 0), and the phase ledger reconciles
+/// with the `MultiplyStats` buckets — exactly for `repl_s`, as a bound
+/// for `comm_wait_s` (the multiply books a sub-interval of the
+/// substrate's waits), and as fault-free zeros for the recovery and
+/// retransmit lanes.
+fn check_conservation(algo: AlgoSpec, transport: Transport) {
+    let label = format!("{algo:?} {transport}");
+    let spec = spec16(algo, transport);
+    let p = spec.nodes * spec.rpn;
+    let (r, _, prof) = run_spec_full(spec, profiled());
+    assert!(!r.oom, "{label}: must not OOM");
+    let prof = prof.expect("profiled run must return a ProfLog");
+
+    assert_eq!(prof.final_clock.len(), p, "{label}: one clock per rank");
+    assert!(!prof.spans.is_empty(), "{label}: a real run produces spans");
+    let t_max = prof.final_clock.iter().cloned().fold(0.0f64, f64::max);
+    assert!(t_max > 0.0, "{label}: clocks advanced");
+
+    for s in &prof.spans {
+        assert!(s.rank < p, "{label}: span rank {} out of range", s.rank);
+        assert!(
+            s.t_end > s.t_start && s.t_start >= -1e-12,
+            "{label}: degenerate span {:?} [{}, {}]",
+            s.phase,
+            s.t_start,
+            s.t_end
+        );
+        assert!(
+            s.t_end <= prof.final_clock[s.rank] + 1e-9 * t_max,
+            "{label}: rank {} {:?} span ends at {} past its final clock {}",
+            s.rank,
+            s.phase,
+            s.t_end,
+            prof.final_clock[s.rank]
+        );
+    }
+    assert_lanes_disjoint(&prof, &label);
+
+    // Σ spans (merged) + idle == final clock, with idle ≥ 0 on every rank
+    for rank in 0..p {
+        let clock = prof.final_clock[rank];
+        let busy = union_seconds(&prof.spans, rank, clock);
+        assert!(
+            busy <= clock + 1e-9 * t_max.max(1e-9),
+            "{label}: rank {rank} merged busy {busy} exceeds clock {clock}"
+        );
+    }
+
+    // phase ledger vs the stats buckets (stats are summed over ranks,
+    // and so are the span totals)
+    let phase_total = |ph: Phase| -> f64 {
+        prof.spans
+            .iter()
+            .filter(|s| s.phase == ph)
+            .map(|s| s.t_end - s.t_start)
+            .sum()
+    };
+    let tol = 1e-9 * t_max.max(1e-9) * p as f64;
+    let repl_spans = phase_total(Phase::Replicate);
+    assert!(
+        (repl_spans - r.stats.repl_s).abs() <= tol,
+        "{label}: Replicate spans {repl_spans} != repl_s {}",
+        r.stats.repl_s
+    );
+    let wait_spans = phase_total(Phase::Wait);
+    assert!(
+        wait_spans + tol >= r.stats.comm_wait_s,
+        "{label}: Wait spans {wait_spans} cannot be below comm_wait_s {}",
+        r.stats.comm_wait_s
+    );
+    // fault-free run: the recovery/retransmit lanes must be silent,
+    // matching their zeroed ledgers
+    for ph in [Phase::Heal, Phase::Replay, Phase::Adopt, Phase::Retrans] {
+        assert_eq!(
+            phase_total(ph),
+            0.0,
+            "{label}: fault-free run has {ph:?} spans"
+        );
+    }
+    assert_eq!(r.stats.recovery_s, 0.0, "{label}");
+    assert_eq!(r.stats.retrans_s, 0.0, "{label}");
+
+    // latency histograms: one end-to-end multiply sample per rank, and
+    // every delivered message recorded a transit latency
+    assert_eq!(
+        prof.multiply.count(),
+        p as u64,
+        "{label}: one multiply sample per rank"
+    );
+    assert!(
+        prof.transit.count() > 0,
+        "{label}: transits were recorded"
+    );
+    assert!(prof.transit.min() >= 0.0 && prof.multiply.min() >= 0.0);
+}
+
+#[test]
+fn conservation_cannon_all_transports() {
+    for transport in ALL_TRANSPORTS {
+        check_conservation(AlgoSpec::Cannon, transport);
+    }
+}
+
+#[test]
+fn conservation_twofive_c2_all_transports() {
+    for transport in ALL_TRANSPORTS {
+        check_conservation(AlgoSpec::TwoFiveD { layers: 2 }, transport);
+    }
+}
+
+#[test]
+fn conservation_twofive_c4_all_transports() {
+    for transport in ALL_TRANSPORTS {
+        check_conservation(AlgoSpec::TwoFiveD { layers: 4 }, transport);
+    }
+}
+
+/// Substrate-level exactness: the `Wait` lane reconciles with the
+/// booked `wait_seconds` *bit-exactly* per rank — the spans are emitted
+/// at the same site with the same deltas.
+#[test]
+fn wait_spans_equal_booked_wait_seconds_exactly() {
+    let p = 4;
+    let net = NetModel::aries(1);
+    let (out, _, prof) = run_ranks_full(p, net, profiled(), |c| {
+        if c.rank() == 0 {
+            c.advance_to(1.0); // simulated compute: not a wait, no span
+            for dst in 1..4 {
+                c.send(dst, 7, Payload::Phantom { bytes: 1 << 20 });
+            }
+        } else {
+            let _ = c.recv(0, 7);
+        }
+        (c.stats().wait_seconds, c.now())
+    });
+    let prof = prof.expect("profiling was on");
+    for (rank, &(wait_s, now)) in out.iter().enumerate() {
+        let span_sum: f64 = prof
+            .spans
+            .iter()
+            .filter(|s| s.rank == rank && s.lane == Lane::Wait)
+            .map(|s| s.t_end - s.t_start)
+            .sum();
+        assert!(
+            (span_sum - wait_s).abs() < 1e-12,
+            "rank {rank}: Wait spans {span_sum} vs booked {wait_s}"
+        );
+        assert!(
+            (prof.final_clock[rank] - now).abs() < 1e-12,
+            "rank {rank}: final_clock {} vs now {now}",
+            prof.final_clock[rank]
+        );
+    }
+    // rank 0's advance_to is compute, not a wait: no Wait span at all
+    assert!(
+        !prof.spans.iter().any(|s| s.rank == 0 && s.lane == Lane::Wait),
+        "advance_to must not emit a Wait span"
+    );
+}
+
+/// Profiling is observation only: the same spec with `profile` on and
+/// off produces bit-identical virtual-clock outcomes and counters.
+#[test]
+fn profiling_off_is_bit_identical() {
+    for (algo, transport) in [
+        (AlgoSpec::Cannon, Transport::TwoSided),
+        (AlgoSpec::TwoFiveD { layers: 2 }, Transport::OneSidedGet),
+    ] {
+        let (off, trace_off, prof_off) = run_spec_full(spec16(algo, transport), RunOpts::default());
+        let (on, _, prof_on) = run_spec_full(spec16(algo, transport), profiled());
+        assert!(trace_off.is_none() && prof_off.is_none());
+        assert!(prof_on.is_some(), "profiled run returns the log");
+        let label = format!("{algo:?} {transport}");
+        assert_eq!(off.seconds, on.seconds, "{label}: seconds");
+        assert_eq!(off.total_seconds, on.total_seconds, "{label}: total");
+        assert_eq!(off.repl_seconds, on.repl_seconds, "{label}: repl");
+        assert_eq!(off.stats.comm_bytes, on.stats.comm_bytes, "{label}: bytes");
+        assert_eq!(off.stats.comm_msgs, on.stats.comm_msgs, "{label}: msgs");
+        assert_eq!(
+            off.stats.comm_wait_s, on.stats.comm_wait_s,
+            "{label}: wait"
+        );
+        assert_eq!(off.stats.flops, on.stats.flops, "{label}: flops");
+        assert_eq!(off.stats.stacks, on.stats.stacks, "{label}: stacks");
+    }
+}
+
+/// Critical-path analysis names the actual bottleneck: a compute-bound
+/// run (free fabric) is dominated by `Compute`; a transfer-bound run
+/// (millisecond latency, megabyte/s links) by `Wait`/`Shift`; and a
+/// uniform dense workload keeps the engine imbalance near 1.
+#[test]
+fn critical_path_names_the_bottleneck() {
+    // compute-bound: the ideal fabric makes every transfer free
+    let mut spec = spec16(AlgoSpec::Cannon, Transport::TwoSided);
+    spec.net = NetModel::ideal();
+    let (r, _, prof) = run_spec_full(spec, profiled());
+    assert!(!r.oom);
+    let report = ProfileReport::build(&prof.unwrap());
+    assert!(!report.critical_path.is_empty());
+    assert_eq!(
+        report.dominant_phase,
+        Phase::Compute,
+        "free fabric must be compute-bound, got {:?}",
+        report.critical_path
+    );
+    assert!(
+        (report.imbalance - 1.0).abs() < 0.25,
+        "uniform dense work must balance: imbalance {}",
+        report.imbalance
+    );
+
+    // transfer-bound: latency and bandwidth both ~1000x worse than Aries
+    let mut spec = spec16(AlgoSpec::Cannon, Transport::TwoSided);
+    spec.net = NetModel {
+        latency: 5e-3,
+        bw: 1e7,
+    };
+    let (r, _, prof) = run_spec_full(spec, profiled());
+    assert!(!r.oom);
+    let report = ProfileReport::build(&prof.unwrap());
+    assert!(
+        matches!(
+            report.dominant_phase,
+            Phase::Wait | Phase::Shift | Phase::Skew | Phase::Reduce
+        ),
+        "molasses fabric must be transfer-bound, got {:?} (path {:?})",
+        report.dominant_phase,
+        report.critical_path
+    );
+
+    // the walk's segments are sane: positive, chronological coverage
+    // that never exceeds the run's final clock
+    let total: f64 = report.critical_path.iter().map(|s| s.seconds).sum();
+    assert!(total > 0.0 && total <= report.final_clock_s + 1e-9);
+    // report renders (smoke; exact formatting is not contractual)
+    let text = report.render();
+    assert!(text.contains("critical path") && text.contains("p50"));
+}
+
+/// The Chrome-trace exporter emits parseable JSON with the
+/// `traceEvents` envelope, microsecond timestamps and per-rank process
+/// metadata — what `python/check_trace.py` validates structurally in CI.
+#[test]
+fn chrome_trace_round_trips_through_the_json_parser() {
+    let (r, _, prof) = run_spec_full(
+        spec16(AlgoSpec::TwoFiveD { layers: 2 }, Transport::OneSided),
+        profiled(),
+    );
+    assert!(!r.oom);
+    let prof = prof.unwrap();
+    let json = chrome::chrome_trace(&prof);
+    let text = json.to_string();
+    assert!(text.contains("traceEvents"));
+    assert!(text.contains("\"ph\""));
+    let parsed = Json::parse(&text).expect("exporter must emit valid JSON");
+    let events = parsed
+        .get("traceEvents")
+        .as_arr()
+        .expect("traceEvents must be an array");
+    assert!(
+        events.len() >= prof.spans.len(),
+        "{} events for {} spans",
+        events.len(),
+        prof.spans.len()
+    );
+}
+
+// ---------------------------------------------------------------------
+// Satellite: MultiplyStats::merge is a lawful monoid action.
+// ---------------------------------------------------------------------
+
+/// Random stats whose second-counters are dyadic rationals (k/16), so
+/// f64 addition is exact and associativity can be asserted bitwise.
+fn counter(rng: &mut Rng, n: u64) -> u64 {
+    rng.next_below(n.max(1))
+}
+
+/// Dyadic-rational seconds (k/16) so f64 sums are exact.
+fn dyadic_secs(rng: &mut Rng) -> f64 {
+    rng.next_below(64) as f64 * 0.0625
+}
+
+fn rand_stats(rng: &mut Rng, size: prop::Size) -> MultiplyStats {
+    let n = (size.0 as u64).max(1) * 1000;
+    MultiplyStats {
+        stacks: counter(rng, n),
+        block_mults: counter(rng, n * 8),
+        flops: counter(rng, n * 1000),
+        comm_bytes: counter(rng, n * 4096),
+        meta_bytes: counter(rng, n * 64),
+        comm_msgs: counter(rng, n * 2),
+        comm_wait_s: dyadic_secs(rng),
+        overlap_hidden_s: dyadic_secs(rng),
+        repl_bytes: counter(rng, n * 512),
+        repl_s: dyadic_secs(rng),
+        h2d_bytes: counter(rng, n * 256),
+        d2h_bytes: counter(rng, n * 256),
+        densify_bytes: counter(rng, n * 128),
+        gpu_stacks: counter(rng, n),
+        cpu_stacks: counter(rng, n),
+        dev_mem_peak: counter(rng, n * 4096),
+        filtered_blocks: counter(rng, n),
+        recovery_bytes: counter(rng, n * 64),
+        recovery_s: dyadic_secs(rng),
+        retrans_bytes: counter(rng, n * 64),
+        retrans_s: dyadic_secs(rng),
+        overlap_downgraded: rng.next_below(2) == 1,
+        a_nnz_blocks: counter(rng, n),
+        a_total_blocks: counter(rng, n * 2),
+        b_nnz_blocks: counter(rng, n),
+        b_total_blocks: counter(rng, n * 2),
+        c_nnz_blocks: counter(rng, n),
+        c_total_blocks: counter(rng, n * 2),
+        plan: None,
+    }
+}
+
+fn stats_eq(a: &MultiplyStats, b: &MultiplyStats) -> Result<(), String> {
+    macro_rules! same {
+        ($field:ident) => {
+            prop_assert!(
+                a.$field == b.$field,
+                "field {} differs: {:?} vs {:?}",
+                stringify!($field),
+                a.$field,
+                b.$field
+            );
+        };
+    }
+    same!(stacks);
+    same!(block_mults);
+    same!(flops);
+    same!(comm_bytes);
+    same!(meta_bytes);
+    same!(comm_msgs);
+    same!(comm_wait_s);
+    same!(overlap_hidden_s);
+    same!(repl_bytes);
+    same!(repl_s);
+    same!(h2d_bytes);
+    same!(d2h_bytes);
+    same!(densify_bytes);
+    same!(gpu_stacks);
+    same!(cpu_stacks);
+    same!(dev_mem_peak);
+    same!(filtered_blocks);
+    same!(recovery_bytes);
+    same!(recovery_s);
+    same!(retrans_bytes);
+    same!(retrans_s);
+    same!(overlap_downgraded);
+    same!(a_nnz_blocks);
+    same!(a_total_blocks);
+    same!(b_nnz_blocks);
+    same!(b_total_blocks);
+    same!(c_nnz_blocks);
+    same!(c_total_blocks);
+    Ok(())
+}
+
+fn merged(a: &MultiplyStats, b: &MultiplyStats) -> MultiplyStats {
+    let mut out = a.clone();
+    out.merge(b);
+    out
+}
+
+#[test]
+fn merge_is_associative_and_commutative() {
+    prop::check("merge associative + commutative", 200, |rng, size| {
+        let a = rand_stats(rng, size);
+        let b = rand_stats(rng, size);
+        let c = rand_stats(rng, size);
+        // commutative on every counter (plan resolution is
+        // order-dependent by contract — "keep the first" — and all
+        // plans here are None)
+        stats_eq(&merged(&a, &b), &merged(&b, &a))?;
+        // associative: dyadic-rational seconds make f64 sums exact
+        stats_eq(&merged(&merged(&a, &b), &c), &merged(&a, &merged(&b, &c)))?;
+        // identity: merging the zero stats changes nothing
+        stats_eq(&merged(&a, &MultiplyStats::default()), &a)?;
+        Ok(())
+    });
+}
+
+#[test]
+fn merge_never_goes_negative_and_flags_stick() {
+    prop::check("merge stays non-negative, flags sticky", 200, |rng, size| {
+        let a = rand_stats(rng, size);
+        let b = rand_stats(rng, size);
+        let m = merged(&a, &b);
+        prop_assert!(
+            m.comm_wait_s >= 0.0
+                && m.overlap_hidden_s >= 0.0
+                && m.repl_s >= 0.0
+                && m.recovery_s >= 0.0
+                && m.retrans_s >= 0.0,
+            "negative seconds after merge: {m:?}"
+        );
+        prop_assert!(
+            m.dev_mem_peak == a.dev_mem_peak.max(b.dev_mem_peak),
+            "dev_mem_peak must be the max"
+        );
+        prop_assert!(
+            m.overlap_downgraded == (a.overlap_downgraded || b.overlap_downgraded),
+            "downgrade flag must OR"
+        );
+        // sums dominate both inputs (no counter can shrink)
+        prop_assert!(
+            m.comm_bytes >= a.comm_bytes.max(b.comm_bytes),
+            "comm_bytes shrank"
+        );
+        prop_assert!(
+            m.recovery_s >= a.recovery_s.max(b.recovery_s),
+            "recovery_s shrank"
+        );
+        Ok(())
+    });
+}
